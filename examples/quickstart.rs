@@ -1,0 +1,99 @@
+//! Quickstart: pack variable-length sequences, run the model forward
+//! through the AOT artifact, unpack, and verify Packing-Unpacking
+//! Invariance (PUI) against per-sequence execution.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::path::Path;
+use std::rc::Rc;
+
+use packmamba::coordinator::TrainState;
+use packmamba::packing::{unpack_outputs, PackedBatch, PackedRow, Sequence};
+use packmamba::runtime::{HostValue, Runtime};
+use packmamba::tensor::Tensor;
+use packmamba::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    packmamba::util::logging::init();
+    let runtime = Runtime::load(Path::new("artifacts"))?;
+
+    // 1. initialize model parameters via the init artifact (XLA numerics)
+    let state = TrainState::init(&runtime, "tiny")?;
+    println!("tiny Mamba: {} parameters", state.param_count());
+
+    // 2. three variable-length "documents"
+    let mut rng = Pcg64::new(7, 0);
+    let seqs: Vec<Sequence> = [50usize, 38, 30]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| Sequence {
+            tokens: (0..n).map(|_| 1 + rng.next_below(511) as i32).collect(),
+            id: i as u64,
+        })
+        .collect();
+
+    // 3. pack them into one 128-slot row (+ empty rows: the artifact
+    //    geometry is fixed at compile time, rows=4)
+    let packed = PackedBatch::from_rows(
+        &[
+            PackedRow { sequences: seqs.clone() },
+            PackedRow::default(),
+            PackedRow::default(),
+            PackedRow::default(),
+        ],
+        128,
+    );
+    println!(
+        "packed {} sequences into {}x{} ({}% padding)",
+        seqs.len(),
+        packed.rows(),
+        packed.pack_len(),
+        (packed.padding_rate() * 100.0).round()
+    );
+
+    // 4. run the packed forward
+    let fwd = runtime.executable("forward_tiny_b4x128")?;
+    let mut args: Vec<HostValue> =
+        state.params.iter().map(|p| HostValue::F32(p.clone())).collect();
+    args.push(HostValue::I32(packed.tokens.clone()));
+    args.push(HostValue::I32(packed.position_indices.clone()));
+    let logits: Tensor = fwd.run(&args)?.remove(0).into_f32()?;
+    println!("packed logits: {:?}", logits.shape());
+
+    // 5. unpack per-sequence outputs
+    let per_seq = unpack_outputs(&packed, &logits);
+    for (id, vals) in &per_seq {
+        println!("  sequence {id}: {} logit values", vals.len());
+    }
+
+    // 6. PUI check: each sequence alone must give identical logits
+    let buckets = [32usize, 64, 128];
+    let mut worst = 0f32;
+    let mut off = 0usize;
+    for s in &seqs {
+        let bucket = buckets.iter().copied().find(|&b| b >= s.len()).unwrap();
+        let solo_batch = PackedBatch::from_rows(
+            &[PackedRow { sequences: vec![s.clone()] }],
+            bucket,
+        );
+        let exe = runtime.executable(&format!("forward_tiny_b1x{bucket}"))?;
+        let mut args: Vec<HostValue> =
+            state.params.iter().map(|p| HostValue::F32(p.clone())).collect();
+        args.push(HostValue::I32(solo_batch.tokens.clone()));
+        args.push(HostValue::I32(solo_batch.position_indices.clone()));
+        let solo = exe.run(&args)?.remove(0).into_f32()?;
+        for t in 0..s.len() {
+            for v in 0..512 {
+                let a = logits.at(&[0, off + t, v]);
+                let b = solo.at(&[0, t, v]);
+                worst = worst.max((a - b).abs());
+            }
+        }
+        off += s.len();
+    }
+    println!("PUI max |packed - solo| over all logits: {worst:.2e}");
+    anyhow::ensure!(worst < 1e-3, "PUI violated!");
+    println!("PUI holds: f(S) == unpack(f(pack(S)))  ✓");
+    let _ = Rc::strong_count(&runtime);
+    Ok(())
+}

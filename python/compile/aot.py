@@ -1,0 +1,455 @@
+"""AOT compiler: lower every entry point to HLO *text* + manifest.json.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every lowered function takes a *flat* argument list (no pytrees) so the HLO
+parameter order is exactly the order recorded in the manifest — this is the
+interchange contract with ``rust/src/runtime/``.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--only tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.selective_scan import ssm_packed
+from .kernels.conv1d import conv1d_packed
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_spec(specs) -> List[Dict]:
+    return [
+        {"shape": list(s.shape), "dtype": s.dtype.name}
+        for s in specs
+    ]
+
+
+class Builder:
+    """Collects artifact builds, writes .hlo.txt files and the manifest."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: Dict = {
+            "version": 1,
+            "configs": {},
+            "params": {},
+            "artifacts": [],
+        }
+
+    def add_config(self, cfg: M.MambaConfig):
+        self.manifest["configs"][cfg.name] = {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "d_state": cfg.d_state,
+            "d_conv": cfg.d_conv,
+            "expand": cfg.expand,
+            "dt_rank": cfg.dt_rank,
+            "d_inner": cfg.d_inner,
+            "param_count": cfg.param_count(),
+            "scan_mode": cfg.scan_mode,
+        }
+        shapes = M.param_shapes(cfg)
+        self.manifest["params"][cfg.name] = [
+            {"name": n, "shape": list(shapes[n])} for n in M.param_order(cfg)
+        ]
+
+    def build(
+        self,
+        name: str,
+        kind: str,
+        fn: Callable,
+        in_specs: Sequence[jax.ShapeDtypeStruct],
+        meta: Dict | None = None,
+    ):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        out_shapes = lowered.out_info
+        out_specs = [
+            spec(o.shape, o.dtype) for o in jax.tree_util.tree_leaves(out_shapes)
+        ]
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "inputs": _io_spec(in_specs),
+            "outputs": _io_spec(out_specs),
+        }
+        entry.update(meta or {})
+        self.manifest["artifacts"].append(entry)
+        print(
+            f"  [{time.time()-t0:6.1f}s] {name}: {len(text)/1e6:.2f} MB, "
+            f"{len(in_specs)} inputs, {len(out_specs)} outputs"
+        )
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        # merge with an existing manifest so partial builds (--only ...)
+        # never drop other artifacts' entries
+        if os.path.exists(path):
+            with open(path) as f:
+                old = json.load(f)
+            if old.get("version") == self.manifest["version"]:
+                fresh = {a["name"] for a in self.manifest["artifacts"]}
+                kept = [
+                    a
+                    for a in old.get("artifacts", [])
+                    if a["name"] not in fresh
+                    and os.path.exists(os.path.join(self.out_dir, a["file"]))
+                ]
+                self.manifest["artifacts"] = kept + self.manifest["artifacts"]
+                for key in ("configs", "params"):
+                    merged = dict(old.get(key, {}))
+                    merged.update(self.manifest[key])
+                    self.manifest[key] = merged
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {path} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers (the interchange contract).
+# ---------------------------------------------------------------------------
+
+
+def flat_train_step(cfg: M.MambaConfig, opt: M.AdamWConfig):
+    order = M.param_order(cfg)
+    np_ = len(order)
+    step_fn = M.make_train_step(cfg, opt)
+
+    def fn(*args):
+        params = dict(zip(order, args[:np_]))
+        m = dict(zip(order, args[np_ : 2 * np_]))
+        v = dict(zip(order, args[2 * np_ : 3 * np_]))
+        step, tokens, targets, pos, mask = args[3 * np_ :]
+        new_p, new_m, new_v, loss = step_fn(
+            params, m, v, step, tokens, targets, pos, mask
+        )
+        return (
+            tuple(new_p[k] for k in order)
+            + tuple(new_m[k] for k in order)
+            + tuple(new_v[k] for k in order)
+            + (loss,)
+        )
+
+    return fn
+
+
+def flat_grads(cfg: M.MambaConfig):
+    order = M.param_order(cfg)
+    np_ = len(order)
+    grads_fn = M.make_grads_fn(cfg)
+
+    def fn(*args):
+        params = dict(zip(order, args[:np_]))
+        tokens, targets, pos, mask = args[np_:]
+        loss, grads = grads_fn(params, tokens, targets, pos, mask)
+        return (loss,) + tuple(grads[k] for k in order)
+
+    return fn
+
+
+def flat_adam_apply(cfg: M.MambaConfig, opt: M.AdamWConfig):
+    order = M.param_order(cfg)
+    np_ = len(order)
+
+    def fn(*args):
+        params = dict(zip(order, args[:np_]))
+        m = dict(zip(order, args[np_ : 2 * np_]))
+        v = dict(zip(order, args[2 * np_ : 3 * np_]))
+        step = args[3 * np_]
+        grads = dict(zip(order, args[3 * np_ + 1 :]))
+        new_p, new_m, new_v = M.adamw_update(params, m, v, grads, step, opt)
+        return (
+            tuple(new_p[k] for k in order)
+            + tuple(new_m[k] for k in order)
+            + tuple(new_v[k] for k in order)
+        )
+
+    return fn
+
+
+def flat_forward(cfg: M.MambaConfig):
+    order = M.param_order(cfg)
+    np_ = len(order)
+
+    def fn(*args):
+        params = dict(zip(order, args[:np_]))
+        tokens, pos = args[np_:]
+        return (M.forward(params, tokens, pos, cfg),)
+
+    return fn
+
+
+def flat_init(cfg: M.MambaConfig, seed: int):
+    """Parameter initialization as an artifact: rust asks XLA to initialize
+    (no numerics duplicated on the rust side).  Zero-input function."""
+    order = M.param_order(cfg)
+
+    def fn():
+        params = M.init_params(cfg, seed)
+        return tuple(params[k] for k in order)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Standalone operators (Fig 2 / Fig 6 benches).
+# ---------------------------------------------------------------------------
+
+
+def ssm_op(D: int, N: int, mode: str):
+    def fn(x, dt, A, B, C, Dv, pos):
+        return (ssm_packed(x, dt, A, B, C, Dv, pos, mode=mode),)
+
+    return fn
+
+
+def conv_op():
+    def fn(x, w, b, pos):
+        return (conv1d_packed(x, w, b, pos),)
+
+    return fn
+
+
+def gemm_op(dtype):
+    def fn(x, w):
+        y = x.astype(dtype) @ w.astype(dtype)
+        return (y.astype(jnp.float32),)
+
+    return fn
+
+
+def norm_op(eps: float = 1e-5):
+    def fn(x, w):
+        return (M.rms_norm(x, w, eps),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# The artifact set.  Geometry notes:
+#   - CPU-scale corpus lengths are the paper's divided by 8 (paper: 57-2048
+#     mean 646 → here 8-256 mean ~81), so pack_len 512 plays the role the
+#     paper's 4096 does.  Fig 2/6 operator shapes are chosen so the a-plane
+#     (B·L·D·N floats) stays CPU-sized; see DESIGN.md §Hardware-Adaptation.
+# ---------------------------------------------------------------------------
+
+TRAIN_GEOM = {
+    # cfg: (pack_rows, pack_len, pad_rows, pad_len, single_buckets)
+    #
+    # CPU adaptation (§Perf): pack_len equals the corpus max length rather
+    # than 2× it.  Interpret-mode scans execute their ladder passes
+    # serially, so per-token cost grows ~log L with pack length; on a GPU
+    # the ladder is parallel across L and longer packs win (pack_len 4096
+    # = 2× max, as the paper uses) — that side lives in the perf model.
+    "tiny": (4, 128, 4, 128, [32, 64, 128]),
+    "small": (4, 256, 4, 256, [64, 128, 256]),
+}
+
+FIG2_LENS = [256, 320, 384, 448, 512, 640, 768, 896, 1024, 1536, 2048, 3072, 4096]
+FIG2_D, FIG2_N = 256, 16
+
+# Fig 6 operator geometry ("1.4B-scaled"): d_model 128 → d_inner 256.
+FIG6 = {
+    "d_model": 128,
+    "d_inner": 256,
+    "d_state": 16,
+    "d_conv": 4,
+    # padding scheme: 3 rows × max-len 1024 (one sequence per row);
+    # pack scheme: 1 row × 2048 densely packed.
+    "padding": (3, 1024),
+    "pack": (1, 2048),
+}
+
+
+def build_model_artifacts(b: Builder, cfg: M.MambaConfig, opt: M.AdamWConfig):
+    b.add_config(cfg)
+    order = M.param_order(cfg)
+    shapes = M.param_shapes(cfg)
+    pspecs = [spec(shapes[n]) for n in order]
+    rows, plen, prows, plen_pad, buckets = TRAIN_GEOM[cfg.name]
+
+    def batch_specs(bsz, L):
+        return [
+            spec((), jnp.float32),  # step
+            spec((bsz, L), jnp.int32),  # tokens
+            spec((bsz, L), jnp.int32),  # targets
+            spec((bsz, L), jnp.int32),  # position_indices
+            spec((bsz, L), jnp.float32),  # loss_mask
+        ]
+
+    geoms = [("pack", rows, plen), ("padding", prows, plen_pad)] + [
+        ("single", 1, l) for l in buckets
+    ]
+    for scheme, bsz, L in geoms:
+        b.build(
+            f"train_step_{cfg.name}_{scheme}_b{bsz}x{L}",
+            "train_step",
+            flat_train_step(cfg, opt),
+            pspecs * 3 + batch_specs(bsz, L),
+            {"config": cfg.name, "batch": bsz, "seq_len": L, "scheme": scheme,
+             "n_params": len(order)},
+        )
+
+    # forward: pack geometry + single-sequence buckets (PUI check from rust)
+    for bsz, L in [(rows, plen)] + [(1, l) for l in buckets]:
+        b.build(
+            f"forward_{cfg.name}_b{bsz}x{L}",
+            "forward",
+            flat_forward(cfg),
+            pspecs + [spec((bsz, L), jnp.int32), spec((bsz, L), jnp.int32)],
+            {"config": cfg.name, "batch": bsz, "seq_len": L,
+             "n_params": len(order)},
+        )
+
+    # data-parallel path: per-worker grads + leader-side optimizer apply
+    b.build(
+        f"grads_{cfg.name}_b{rows}x{plen}",
+        "grads",
+        flat_grads(cfg),
+        pspecs + batch_specs(rows, plen)[1:],
+        {"config": cfg.name, "batch": rows, "seq_len": plen,
+         "n_params": len(order)},
+    )
+    b.build(
+        f"adam_apply_{cfg.name}",
+        "adam_apply",
+        flat_adam_apply(cfg, opt),
+        pspecs * 3 + [spec((), jnp.float32)] + pspecs,
+        {"config": cfg.name, "n_params": len(order)},
+    )
+    b.build(
+        f"init_{cfg.name}",
+        "init",
+        flat_init(cfg, seed=42),
+        [],
+        {"config": cfg.name, "n_params": len(order), "seed": 42},
+    )
+
+
+def build_fig2_artifacts(b: Builder, lens=None):
+    D, N = FIG2_D, FIG2_N
+    for L in lens or FIG2_LENS:
+        for mode in ("blelloch", "hillis"):
+            b.build(
+                f"ssm_op_{mode}_L{L}",
+                "ssm_op",
+                ssm_op(D, N, mode),
+                [
+                    spec((1, L, D)),  # x
+                    spec((1, L, D)),  # dt
+                    spec((D, N)),  # A
+                    spec((1, L, N)),  # B
+                    spec((1, L, N)),  # C
+                    spec((D,)),  # D
+                    spec((1, L), jnp.int32),  # pos
+                ],
+                {"seq_len": L, "d_inner": D, "d_state": N, "mode": mode},
+            )
+
+
+def build_fig6_artifacts(b: Builder):
+    di, n, w = FIG6["d_inner"], FIG6["d_state"], FIG6["d_conv"]
+    dm = FIG6["d_model"]
+    for scheme in ("padding", "pack"):
+        bsz, L = FIG6[scheme]
+        T = bsz * L
+        meta = {"scheme": scheme, "batch": bsz, "seq_len": L, "tokens": T}
+        # GEMM (in_proj shape), f32 and bf16 — the paper's bf16/f32 split
+        for dt_name, dt in (("f32", jnp.float32), ("bf16", jnp.bfloat16)):
+            b.build(
+                f"op_gemm_{scheme}_{dt_name}",
+                "op_gemm",
+                gemm_op(dt),
+                [spec((T, dm)), spec((dm, 2 * di))],
+                {**meta, "dtype": dt_name, "m": T, "k": dm, "n": 2 * di},
+            )
+        b.build(
+            f"op_conv1d_{scheme}",
+            "op_conv1d",
+            conv_op(),
+            [spec((bsz, L, di)), spec((w, di)), spec((di,)),
+             spec((bsz, L), jnp.int32)],
+            meta,
+        )
+        b.build(
+            f"op_ssm_{scheme}",
+            "op_ssm",
+            ssm_op(di, n, "blelloch"),
+            [spec((bsz, L, di)), spec((bsz, L, di)), spec((di, n)),
+             spec((bsz, L, n)), spec((bsz, L, n)), spec((di,)),
+             spec((bsz, L), jnp.int32)],
+            meta,
+        )
+        b.build(
+            f"op_norm_{scheme}",
+            "op_norm",
+            norm_op(),
+            [spec((T, dm)), spec((dm,))],
+            meta,
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated subset: tiny,small,fig2,fig6",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(k):
+        return only is None or k in only
+
+    b = Builder(args.out)
+    opt = M.AdamWConfig()
+    t0 = time.time()
+    if want("tiny"):
+        build_model_artifacts(b, M.TINY, opt)
+    if want("small"):
+        build_model_artifacts(b, M.SMALL, opt)
+    if want("fig2"):
+        build_fig2_artifacts(b)
+    if want("fig6"):
+        build_fig6_artifacts(b)
+    b.finish()
+    print(f"total {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

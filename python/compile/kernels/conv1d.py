@@ -1,0 +1,204 @@
+"""Pallas packed causal depthwise conv1d (paper §3.3, Algorithm 1).
+
+A causal depthwise convolution of width W computes
+
+    y[t, d] = bias[d] + Σ_j  w[j, d] · x[t - (W-1) + j, d]
+
+When sequences are packed, the sliding window crosses sequence boundaries
+(the red line in the paper's Fig 3b): the first tokens of a sequence would
+read the tail of the *previous* sequence.  Algorithm 1 terminates the
+window early for boundary elements (``index < width``); equivalently, tap
+``j`` — which reaches back ``s = W-1-j`` steps — is only active where the
+output token is at least ``s`` tokens into its own sequence:
+
+    active(t, j)  ⇔  position_indices[t] ≥ W-1-j
+
+The backward pass needs the mirrored condition for ``dx`` (a token's
+gradient collects from outputs *later* in the same sequence); the mask
+there is ``position_indices[t + s] ≥ s``, which the kernel reads from a
+shifted view of the same index plane — this is the paper's §3.5 'reverse
+indices obtained from the position indices of the last conv_width
+elements', staged through the BlockSpec-managed block instead of CUDA
+shared memory.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_D_BLOCK = 128
+
+
+def _d_block(D: int, d_block: int) -> int:
+    blk = min(D, d_block)
+    while D % blk != 0:
+        blk -= 1
+    return blk
+
+
+def _conv_fwd_kernel(idx_ref, x_ref, w_ref, b_ref, y_ref, *, width: int):
+    pos = idx_ref[0, :]  # (L,) — staged once per grid cell
+    x = x_ref[0]  # (L, blk)
+    L = x.shape[0]
+    y = jnp.zeros_like(x) + b_ref[:][None, :]
+    for j in range(width):
+        s = (width - 1) - j  # tap j reaches back s steps
+        xs = jnp.pad(x, ((s, 0), (0, 0)))[:L]
+        ok = (pos >= s).astype(x.dtype)[:, None]
+        y = y + w_ref[j, :][None, :] * xs * ok
+    y_ref[0] = y
+
+
+def _conv_bwd_dx_kernel(idx_ref, g_ref, w_ref, dx_ref, *, width: int):
+    """dx[t] = Σ_j w[j] · g[t + s_j] · [pos[t + s_j] ≥ s_j]  (s_j = W-1-j).
+
+    The boundary test uses the *output* token's position index, read from a
+    forward-shifted view of the index plane (the 'reverse indices').
+    """
+    pos = idx_ref[0, :]
+    g = g_ref[0]  # (L, blk)
+    L = g.shape[0]
+    dx = jnp.zeros_like(g)
+    for j in range(width):
+        s = (width - 1) - j
+        gs = jnp.pad(g, ((0, s), (0, 0)))[s : s + L]  # g[t+s]
+        ps = jnp.pad(pos, (0, s), constant_values=0)[s : s + L]  # pos[t+s]
+        ok = (ps >= s).astype(g.dtype)[:, None]
+        dx = dx + w_ref[j, :][None, :] * gs * ok
+    dx_ref[0] = dx
+
+
+def conv1d_fwd_pallas(
+    x: jax.Array,  # (B, L, D)
+    w: jax.Array,  # (W, D)
+    bias: jax.Array,  # (D,)
+    position_indices: jax.Array,  # (B, L) int32
+    *,
+    d_block: int = DEFAULT_D_BLOCK,
+) -> jax.Array:
+    Bsz, L, D = x.shape
+    W = w.shape[0]
+    blk = _d_block(D, d_block)
+    grid = (Bsz, D // blk)
+    return pl.pallas_call(
+        functools.partial(_conv_fwd_kernel, width=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, L, blk), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((W, blk), lambda i, j: (0, j)),
+            pl.BlockSpec((blk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, L, blk), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(position_indices, x, w, bias)
+
+
+def _conv_dx_pallas(g, w, position_indices, *, d_block: int = DEFAULT_D_BLOCK):
+    Bsz, L, D = g.shape
+    W = w.shape[0]
+    blk = _d_block(D, d_block)
+    grid = (Bsz, D // blk)
+    return pl.pallas_call(
+        functools.partial(_conv_bwd_dx_kernel, width=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, L, blk), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((W, blk), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, L, blk), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=True,
+    )(position_indices, g, w)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def conv1d_packed(
+    x: jax.Array, w: jax.Array, bias: jax.Array, position_indices: jax.Array
+) -> jax.Array:
+    """Packed causal depthwise conv1d; differentiable in x, w, bias."""
+    return conv1d_fwd_pallas(x, w, bias, position_indices)
+
+
+def _conv_fwd(x, w, bias, position_indices):
+    y = conv1d_fwd_pallas(x, w, bias, position_indices)
+    return y, (x, w, position_indices)
+
+
+def _conv_bwd(res, g):
+    x, w, position_indices = res
+    W = w.shape[0]
+    L = x.shape[1]
+    dx = _conv_dx_pallas(g, w, position_indices)
+    # dw[j] = Σ_{b,t} g[t] · x[t - s_j] · [pos[t] ≥ s_j]   — small reduction,
+    # done in jnp (it is a (W, D) output; no kernel needed).
+    dws = []
+    pos = position_indices
+    for j in range(W):
+        s = (W - 1) - j
+        xs = jnp.pad(x, ((0, 0), (s, 0), (0, 0)))[:, :L]
+        ok = (pos >= s).astype(x.dtype)[..., None]
+        dws.append(jnp.sum(g * xs * ok, axis=(0, 1)))
+    dw = jnp.stack(dws, axis=0)
+    dbias = jnp.sum(g, axis=(0, 1))
+    return dx, dw, dbias, None
+
+
+conv1d_packed.defvjp(_conv_fwd, _conv_bwd)
+
+
+def conv1d_dense(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Unpacked causal conv baseline: every row is one sequence."""
+    Bsz, L, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (Bsz, L))
+    return conv1d_packed(x, w, bias, pos)
+
+
+# ---------------------------------------------------------------------------
+# Stateful conv: cross-chunk tail carry (paper §5 future-work: split
+# sequences continue across packed rows).
+# ---------------------------------------------------------------------------
+
+
+def conv1d_packed_with_state(
+    x: jax.Array,  # (B, L, D)
+    w: jax.Array,
+    bias: jax.Array,
+    position_indices: jax.Array,
+    x_tail: jax.Array,  # (B, W-1, D) — final inputs of the previous chunk
+):
+    """Packed causal conv whose window can reach into the previous chunk.
+
+    The previous chunk's last ``W-1`` inputs are prepended; position
+    indices for the prefix continue backwards (``pos_0 - (W-1) .. pos_0-1``)
+    so the same tap mask admits them exactly when the first tokens of this
+    chunk are deep enough into a *continued* sequence — a fresh sequence
+    (pos starting at 0) masks the prefix out entirely.  Returns
+    (y, new_x_tail).
+    """
+    W = w.shape[0]
+    Bsz, L, D = x.shape
+    pad = W - 1
+    x_ext = jnp.concatenate([x_tail, x], axis=1)  # (B, L+W-1, D)
+    pos0 = position_indices[:, :1]
+    prefix_pos = pos0 + jnp.arange(-pad, 0, dtype=jnp.int32)[None, :]
+    # fresh-start rows: prefix positions go negative → clamp to -1, which
+    # fails every `>= s` tap test (the tail is ignored, as it must be)
+    prefix_pos = jnp.maximum(prefix_pos, -1)
+    pos_ext = jnp.concatenate([prefix_pos, position_indices], axis=1)
+    y_ext = conv1d_packed(x_ext, w, bias, pos_ext)
+    y = y_ext[:, pad:]
+    return y, x_ext[:, L:][:, -pad:] if pad > 0 else x_ext[:, :0]

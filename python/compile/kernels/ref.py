@@ -1,0 +1,172 @@
+"""Pure-jnp correctness oracles for the PackMamba kernels.
+
+Everything here is written for clarity, not speed: serial ``lax.scan`` for
+the SSM recurrence, explicit tap loops for the causal conv.  The Pallas
+kernels in ``selective_scan.py`` / ``conv1d.py`` are tested against these
+in ``python/tests/`` (exact semantics, allclose numerics).
+
+Notation follows the paper (§3.4):
+
+    h_t = Ā_t h_{t-1} + B̄_t x_t          (1a)
+    y_t = C_t h_t (+ D x_t)               (1b)
+    Ā   = exp(Δ A)                        (2a)
+    B̄ x = Δ B x    (Euler/ZOH-B discretization used by Mamba)
+
+The packed variants take ``position_indices`` and must satisfy PUI:
+running the packed op on pack(S) and unpacking equals running the plain op
+on each sequence separately.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Core first-order recurrence h_t = a_t h_{t-1} + b_t  (the scan the paper
+# parallelizes with scanMul/scanAdd).
+# ---------------------------------------------------------------------------
+
+
+def linear_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Serial reference scan along axis 1.
+
+    a, b: (B, L, ...) — returns h with h[:, t] = a[:, t] * h[:, t-1] + b[:, t],
+    starting from h_{-1} = 0.
+    """
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    a_t = jnp.moveaxis(a, 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    h0 = jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def segmented_scan_ref(
+    a: jax.Array, b: jax.Array, position_indices: jax.Array
+) -> jax.Array:
+    """Packed scan: zero the multiplicative term at sequence starts.
+
+    This is the paper's §3.4 modification: Ā_{position_indices==0} → 0 kills
+    every prefix product crossing a boundary, so no state passes between
+    packed sequences.  position_indices: (B, L) int32.
+    """
+    mask = (position_indices != 0).astype(a.dtype)
+    mask = mask.reshape(mask.shape + (1,) * (a.ndim - mask.ndim))
+    return linear_scan_ref(a * mask, b)
+
+
+# ---------------------------------------------------------------------------
+# Selective-scan (SSM) operator: full Mamba S6 layer semantics.
+# ---------------------------------------------------------------------------
+
+
+def ssm_ref(
+    x: jax.Array,  # (B, L, D)     post-conv activations
+    dt: jax.Array,  # (B, L, D)    discretization step (post-softplus)
+    A: jax.Array,  # (D, N)        continuous state matrix (negative)
+    B: jax.Array,  # (B, L, N)     input projection (selective)
+    C: jax.Array,  # (B, L, N)     output projection (selective)
+    D: jax.Array,  # (D,)          skip connection
+) -> jax.Array:
+    """Reference selective scan, serial over L.  Returns y: (B, L, D)."""
+    a = jnp.exp(dt[..., None] * A[None, None])  # (B, L, D, N)
+    b = (dt * x)[..., None] * B[:, :, None, :]  # (B, L, D, N)
+    h = linear_scan_ref(a, b)  # (B, L, D, N)
+    y = jnp.einsum("bldn,bln->bld", h, C)
+    return y + x * D[None, None]
+
+
+def ssm_packed_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    D: jax.Array,
+    position_indices: jax.Array,
+) -> jax.Array:
+    """Packed selective scan oracle (paper Algorithm 2 semantics)."""
+    a = jnp.exp(dt[..., None] * A[None, None])
+    b = (dt * x)[..., None] * B[:, :, None, :]
+    h = segmented_scan_ref(a, b, position_indices)
+    y = jnp.einsum("bldn,bln->bld", h, C)
+    return y + x * D[None, None]
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d.
+# ---------------------------------------------------------------------------
+
+
+def conv1d_ref(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Causal depthwise conv. x: (B, L, D), w: (W, D), bias: (D,).
+
+    y[:, t, d] = bias[d] + sum_j w[j, d] * x[:, t - (W-1) + j, d]
+    with out-of-range x treated as zero (standard left zero-padding).
+    """
+    W = w.shape[0]
+    y = jnp.zeros_like(x) + bias[None, None]
+    for j in range(W):
+        shift = (W - 1) - j  # how far back tap j reaches
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + w[j][None, None] * xs
+    return y
+
+
+def conv1d_packed_ref(
+    x: jax.Array, w: jax.Array, bias: jax.Array, position_indices: jax.Array
+) -> jax.Array:
+    """Packed causal conv oracle (paper Algorithm 1 semantics).
+
+    Tap j (reaching back ``shift = W-1-j`` steps) only contributes where the
+    output token is at least ``shift`` deep into its own sequence, i.e.
+    position_indices >= shift.  This is exactly the early termination of the
+    convolution loop for boundary elements (index < width) in Algorithm 1.
+    """
+    W = w.shape[0]
+    y = jnp.zeros_like(x) + bias[None, None]
+    for j in range(W):
+        shift = (W - 1) - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        ok = (position_indices >= shift).astype(x.dtype)[..., None]
+        y = y + w[j][None, None] * xs * ok
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Per-sequence oracles: the "unpacked" side of the PUI equation.
+# ---------------------------------------------------------------------------
+
+
+def ssm_per_sequence(x, dt, A, B, C, D, lengths):
+    """Run ssm_ref on each original sequence of a single packed row.
+
+    x, dt: (L, D); B, C: (L, N).  Returns the concatenation along L, i.e.
+    pack(f(S)) for comparison against f(pack(S)).
+    """
+    outs = []
+    off = 0
+    for n in lengths:
+        sl = slice(off, off + n)
+        outs.append(
+            ssm_ref(x[None, sl], dt[None, sl], A, B[None, sl], C[None, sl], D)[0]
+        )
+        off += n
+    return jnp.concatenate(outs, axis=0) if outs else jnp.zeros_like(x[:0])
+
+
+def conv1d_per_sequence(x, w, bias, lengths):
+    """Per-sequence causal conv of one packed row.  x: (L, D)."""
+    outs = []
+    off = 0
+    for n in lengths:
+        outs.append(conv1d_ref(x[None, off : off + n], w, bias)[0])
+        off += n
+    return jnp.concatenate(outs, axis=0) if outs else jnp.zeros_like(x[:0])

@@ -1,0 +1,339 @@
+"""Pallas packed selective-scan kernel (paper §3.4, Algorithm 2).
+
+The SSM recurrence h_t = Ā_t h_{t-1} + B̄_t x_t is parallelized as an
+associative scan over pairs (Ā, B̄x) with the combine
+
+    (a2, b2) ∘ (a1, b1) = (a1·a2, a2·b1 + b2)        # c1 applied first
+
+PackMamba's modification is input-side: set Ā_t → 0 wherever
+``position_indices[t] == 0`` (a packed-sequence start).  Because the combine
+is associative and every prefix product crossing a boundary then contains a
+zero factor, no state crosses sequence boundaries — for *any* scan schedule.
+The kernel therefore stays a plain parallel scan; the boundary mask is one
+select against an index plane that is loaded once per grid cell (the paper's
+§3.5 shared-memory/coalescing co-optimization maps to the BlockSpec-staged
+index block here; see DESIGN.md §Hardware-Adaptation).
+
+Two schedules are provided (ablation: ``benches/fig2`` + DESIGN.md §8):
+
+* ``blelloch`` (default, paper-faithful): work-efficient up/down-sweep,
+  ``2·log2(L')`` ladder steps over an internally padded power-of-two L' —
+  this internal padding is exactly the plateau effect the paper measures in
+  Fig 2.
+* ``hillis``: depth-efficient inclusive scan, ``log2(L)`` steps, no internal
+  padding.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Channel block per grid cell.  128 aligns with TPU VPU/MXU lane width; the
+# VMEM-equivalent footprint per cell is L·128·N·4B per plane (see DESIGN §9).
+DEFAULT_D_BLOCK = 128
+
+
+def _combine(a1, b1, a2, b2):
+    """(a2,b2) ∘ (a1,b1): earlier element (1) is applied first."""
+    return a1 * a2, a2 * b1 + b2
+
+
+def _hillis_steele(a, b):
+    """Inclusive scan along axis 0 of (L, ...) arrays; log2(L) steps."""
+    L = a.shape[0]
+    d = 1
+    while d < L:
+        pad = [(d, 0)] + [(0, 0)] * (a.ndim - 1)
+        a_prev = jnp.pad(a, pad, constant_values=1.0)[:L]
+        b_prev = jnp.pad(b, pad, constant_values=0.0)[:L]
+        # identity for t < d is (1, 0): those rows combine with identity.
+        ident = (jnp.arange(L) < d).astype(a.dtype)
+        ident = ident.reshape((L,) + (1,) * (a.ndim - 1))
+        a_prev = a_prev * (1.0 - ident) + ident  # (1,0) where out of range
+        b_prev = b_prev * (1.0 - ident)
+        a, b = _combine(a_prev, b_prev, a, b)
+        d *= 2
+    return a, b
+
+
+def _blelloch(a, b):
+    """Inclusive scan along axis 0, Blelloch up/down-sweep (2·log2(L') steps).
+
+    Internally pads L to the next power of two with the identity (1, 0) —
+    the paper's Fig 2 'internal padding' effect.  The down-sweep produces the
+    exclusive scan; one final combine with the inputs yields the inclusive
+    result.
+    """
+    L = a.shape[0]
+    Lp = 1
+    while Lp < L:
+        Lp *= 2
+    pad = [(0, Lp - L)] + [(0, 0)] * (a.ndim - 1)
+    a0 = jnp.pad(a, pad, constant_values=1.0)
+    b0 = jnp.pad(b, pad, constant_values=0.0)
+    ar, br = a0, b0
+    idx = jnp.arange(Lp).reshape((Lp,) + (1,) * (a.ndim - 1))
+
+    # Up-sweep: at stride d, positions t ≡ 2d-1 (mod 2d) absorb t-d.
+    d = 1
+    while d < Lp:
+        sel = (idx % (2 * d)) == (2 * d - 1)
+        shift = [(d, 0)] + [(0, 0)] * (a.ndim - 1)
+        a_prev = jnp.pad(ar, shift, constant_values=1.0)[:Lp]
+        b_prev = jnp.pad(br, shift, constant_values=0.0)[:Lp]
+        na, nb = _combine(a_prev, b_prev, ar, br)
+        ar = jnp.where(sel, na, ar)
+        br = jnp.where(sel, nb, br)
+        d *= 2
+
+    # Down-sweep: clear the root to identity, then swap+combine downwards.
+    root = idx == (Lp - 1)
+    ar = jnp.where(root, 1.0, ar)
+    br = jnp.where(root, 0.0, br)
+    d = Lp // 2
+    while d >= 1:
+        sel_hi = (idx % (2 * d)) == (2 * d - 1)  # right child
+        sel_lo = (idx % (2 * d)) == (d - 1)  # left child
+        shift_dn = [(d, 0)] + [(0, 0)] * (a.ndim - 1)
+        shift_up = [(0, d)] + [(0, 0)] * (a.ndim - 1)
+        a_lo = jnp.pad(ar, shift_dn, constant_values=1.0)[:Lp]  # value at t-d
+        b_lo = jnp.pad(br, shift_dn, constant_values=0.0)[:Lp]
+        a_hi = jnp.pad(ar, shift_up, constant_values=1.0)[d:]  # value at t+d
+        b_hi = jnp.pad(br, shift_up, constant_values=0.0)[d:]
+        # left child receives the parent's (pre-update) prefix value
+        na_lo, nb_lo = a_hi, b_hi
+        # right child = parent-prefix then left-subtree sum: the parent
+        # prefix covers the earlier elements, so it is the first argument.
+        na_hi, nb_hi = _combine(ar, br, a_lo, b_lo)
+        ar = jnp.where(sel_lo, na_lo, jnp.where(sel_hi, na_hi, ar))
+        br = jnp.where(sel_lo, nb_lo, jnp.where(sel_hi, nb_hi, br))
+        d //= 2
+    # ar/br now hold the *exclusive* scan; combine once with inputs.
+    ai, bi = _combine(ar, br, a0, b0)
+    return ai[:L], bi[:L]
+
+
+_SCANS = {"hillis": _hillis_steele, "blelloch": _blelloch}
+
+
+def _scan_masked_kernel(idx_ref, a_ref, b_ref, h_ref, *, mode: str):
+    """Grid cell: one (batch row, channel block).  Applies the boundary mask
+    from the staged index plane, then runs the parallel scan ladder."""
+    pos = idx_ref[0, :]  # (L,) int32 — loaded once per cell
+    mask = (pos != 0).astype(a_ref.dtype)  # Ā → 0 at sequence starts
+    a = a_ref[0] * mask[:, None, None]
+    b = b_ref[0]
+    _, h = _SCANS[mode](a, b)
+    h_ref[0] = h
+
+
+def _scan_plain_kernel(a_ref, b_ref, h_ref, *, mode: str):
+    a = a_ref[0]
+    b = b_ref[0]
+    _, h = _SCANS[mode](a, b)
+    h_ref[0] = h
+
+
+def _d_block(D: int, d_block: int) -> int:
+    blk = min(D, d_block)
+    while D % blk != 0:  # shapes in this repo are powers of two, but be safe
+        blk -= 1
+    return blk
+
+
+def scan_masked_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    position_indices: jax.Array,
+    *,
+    mode: str = "blelloch",
+    d_block: int = DEFAULT_D_BLOCK,
+) -> jax.Array:
+    """Packed parallel scan.  a, b: (B, L, D, N); position_indices: (B, L)."""
+    Bsz, L, D, N = a.shape
+    blk = _d_block(D, d_block)
+    grid = (Bsz, D // blk)
+    return pl.pallas_call(
+        functools.partial(_scan_masked_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i, j: (i, 0)),  # index plane: once/cell
+            pl.BlockSpec((1, L, blk, N), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, L, blk, N), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, blk, N), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=True,
+    )(position_indices, a, b)
+
+
+def scan_plain_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mode: str = "blelloch",
+    d_block: int = DEFAULT_D_BLOCK,
+) -> jax.Array:
+    """Unmasked parallel scan (used by the backward pass on pre-masked
+    inputs, and as the non-packed baseline)."""
+    Bsz, L, D, N = a.shape
+    blk = _d_block(D, d_block)
+    grid = (Bsz, D // blk)
+    return pl.pallas_call(
+        functools.partial(_scan_plain_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, blk, N), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, L, blk, N), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, blk, N), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable segmented scan: custom VJP whose backward pass is *another*
+# pair of scans (the paper's §3.4 'backward process consists of another two
+# scan operators, with the same Ā → 0 modification').
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def segmented_scan(
+    a: jax.Array, b: jax.Array, boundary_mask: jax.Array, mode: str = "blelloch"
+) -> jax.Array:
+    """h_t = (a_t·m_t) h_{t-1} + b_t with m the boundary mask (0 at starts).
+
+    a, b: (B, L, D, N).  boundary_mask: (B, L) float (1.0 inside a sequence,
+    0.0 at each sequence start) — float so the VJP machinery can thread a
+    (zero) cotangent for it.
+    """
+    am = a * boundary_mask[:, :, None, None]
+    return scan_plain_pallas(am, b, mode=mode)
+
+
+def _segscan_fwd(a, b, boundary_mask, mode):
+    am = a * boundary_mask[:, :, None, None]
+    h = scan_plain_pallas(am, b, mode=mode)
+    return h, (am, h, boundary_mask)
+
+
+def _segscan_bwd(mode, res, dh):
+    am, h, boundary_mask = res
+    # g_t = dh_t + ā_{t+1} g_{t+1}: a reverse scan with the multiplier
+    # shifted one step left (ā at a start is already 0, which also stops
+    # gradients from flowing backwards across boundaries).
+    a_next = jnp.concatenate([am[:, 1:], jnp.zeros_like(am[:, :1])], axis=1)
+    g_rev = scan_plain_pallas(
+        jnp.flip(a_next, axis=1), jnp.flip(dh, axis=1), mode=mode
+    )
+    g = jnp.flip(g_rev, axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    da = g * h_prev * boundary_mask[:, :, None, None]
+    db = g
+    dmask = jnp.zeros_like(boundary_mask)
+    return da, db, dmask
+
+
+segmented_scan.defvjp(_segscan_fwd, _segscan_bwd)
+
+
+def ssm_packed(
+    x: jax.Array,  # (B, L, D)
+    dt: jax.Array,  # (B, L, D)
+    A: jax.Array,  # (D, N)
+    B: jax.Array,  # (B, L, N)
+    C: jax.Array,  # (B, L, N)
+    D: jax.Array,  # (D,)
+    position_indices: jax.Array,  # (B, L) int32
+    *,
+    mode: str = "blelloch",
+) -> jax.Array:
+    """Full packed selective-scan operator: discretize, scan, project.
+
+    Matches ``ref.ssm_packed_ref`` exactly (same discretization), but runs
+    the recurrence through the Pallas parallel-scan kernel and is
+    differentiable end to end (scan VJP above, rest via jax autodiff).
+    """
+    a = jnp.exp(dt[..., None] * A[None, None])  # (B, L, D, N)
+    b = (dt * x)[..., None] * B[:, :, None, :]  # (B, L, D, N)
+    mask = (position_indices != 0).astype(x.dtype)
+    h = segmented_scan(a, b, mask, mode)
+    y = jnp.einsum("bldn,bln->bld", h, C)
+    return y + x * D[None, None]
+
+
+def ssm_dense(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    D: jax.Array,
+    *,
+    mode: str = "blelloch",
+) -> jax.Array:
+    """Unpacked selective scan (baseline single-sequence / padding schemes).
+
+    Identical to ``ssm_packed`` with an all-ones mask except position 0.
+    """
+    Bsz, L, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (Bsz, L))
+    return ssm_packed(x, dt, A, B, C, D, pos, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Stateful scan: the paper's §5 future-work extension ("sequences cut into
+# two parts at the end of long sequences, with states still being passed
+# between these parts ... reducing padding to zero").
+# ---------------------------------------------------------------------------
+
+
+def segmented_scan_with_state(
+    a: jax.Array,
+    b: jax.Array,
+    boundary_mask: jax.Array,
+    h0: jax.Array,  # (B, D, N) — carried state from the previous chunk
+    mode: str = "blelloch",
+) -> Tuple[jax.Array, jax.Array]:
+    """Segmented scan with an initial state.
+
+    The carried state folds into the first step as an input transform:
+    ``b'_0 = b_0 + (a_0 · m_0) · h0`` — if the chunk *continues* a sequence
+    its first position index is non-zero (m_0 = 1) and the state flows in;
+    if it starts a fresh sequence (m_0 = 0) the state is discarded by the
+    same mask that isolates packed neighbours.  Returns (h, h_last).
+    """
+    a0m = a[:, 0] * boundary_mask[:, 0][:, None, None]
+    b = b.at[:, 0].add(a0m * h0)
+    h = segmented_scan(a, b, boundary_mask, mode)
+    return h, h[:, -1]
+
+
+def ssm_packed_with_state(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    D: jax.Array,
+    position_indices: jax.Array,
+    h0: jax.Array,
+    *,
+    mode: str = "blelloch",
+) -> Tuple[jax.Array, jax.Array]:
+    """``ssm_packed`` with cross-chunk state carry; returns (y, h_last)."""
+    a = jnp.exp(dt[..., None] * A[None, None])
+    b = (dt * x)[..., None] * B[:, :, None, :]
+    mask = (position_indices != 0).astype(x.dtype)
+    h, h_last = segmented_scan_with_state(a, b, mask, h0, mode)
+    y = jnp.einsum("bldn,bln->bld", h, C)
+    return y + x * D[None, None], h_last

@@ -1,0 +1,413 @@
+"""L2: the Mamba language model (fwd/bwd) built on the Pallas kernels.
+
+A faithful Mamba-1 block (Gu & Dao 2023), with the PackMamba modifications
+threaded through: every sequence-wise operator (conv1d, selective scan)
+takes ``position_indices`` so that packed sequences never exchange state
+(paper §3.2-§3.4).  All *element-wise* (silu) and *token-wise* (linear,
+RMSNorm) operators are PUI-trivially-safe and stay in plain jnp.
+
+The same forward serves all three batching schemes of the paper's
+evaluation — they differ only in batch geometry and in the index plane the
+rust coordinator feeds:
+
+  single-sequence : B=1, L=natural length (bucketed), pos = arange
+  padding         : B=rows, L=max length, one sequence per row
+  pack            : B=rows, L=pack_len, many sequences per row + indices
+
+Everything here runs at build time only; ``aot.py`` lowers the jitted
+functions to HLO text artifacts that the rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv1d import conv1d_packed
+from .kernels.selective_scan import ssm_packed
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    """Model hyperparameters.  Presets mirror the paper's table of models
+    (110M/1.4B/2.8B) plus CPU-scale configs used for real execution."""
+
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    norm_eps: float = 1e-5
+    scan_mode: str = "blelloch"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return math.ceil(self.d_model / 16)
+
+    def param_count(self) -> int:
+        """Exact parameter count (used by config tests and the perf model)."""
+        per_layer = (
+            self.d_model * 2 * self.d_inner  # in_proj
+            + self.d_conv * self.d_inner  # conv w
+            + self.d_inner  # conv bias
+            + self.d_inner * (self.dt_rank + 2 * self.d_state)  # x_proj
+            + self.dt_rank * self.d_inner  # dt_proj
+            + self.d_inner  # dt_bias
+            + self.d_inner * self.d_state  # A_log
+            + self.d_inner  # D
+            + self.d_inner * self.d_model  # out_proj
+            + self.d_model  # norm weight
+        )
+        return self.vocab_size * self.d_model + self.n_layers * per_layer + self.d_model
+
+
+# CPU-executable presets (artifacts are built for these).  Training
+# artifacts use the depth-efficient Hillis-Steele schedule: under
+# interpret=True every ladder pass executes serially, so halving the pass
+# count (log2 L vs Blelloch's 2·log2 L) nearly halves the scan cost
+# (§Perf, EXPERIMENTS.md).  The work-efficient Blelloch schedule — the
+# paper's Algorithm 2 — is kept for the Fig 2/Fig 6 operator artifacts
+# and the ablation; on a real TPU it wins instead (DESIGN.md §9).
+TINY = MambaConfig(name="tiny", vocab_size=512, d_model=64, n_layers=2,
+                   scan_mode="hillis")
+SMALL = MambaConfig(name="small", vocab_size=1024, d_model=128, n_layers=4,
+                    scan_mode="hillis")
+# ...and the paper's A100-scale models (perfmodel only, no artifacts).
+MAMBA_110M = MambaConfig(name="110m", vocab_size=50280, d_model=1024, n_layers=16)
+MAMBA_1_4B = MambaConfig(name="1.4b", vocab_size=50280, d_model=2048, n_layers=48)
+MAMBA_2_8B = MambaConfig(name="2.8b", vocab_size=50280, d_model=2560, n_layers=64)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, MAMBA_110M, MAMBA_1_4B, MAMBA_2_8B)}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (matches the reference Mamba init).
+# ---------------------------------------------------------------------------
+
+
+def param_order(cfg: MambaConfig) -> List[str]:
+    """Canonical flat ordering of parameters — the interchange contract with
+    the rust runtime (recorded in artifacts/manifest.json)."""
+    names = ["embedding"]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        names += [
+            p + "norm_w",
+            p + "in_proj",
+            p + "conv_w",
+            p + "conv_b",
+            p + "x_proj",
+            p + "dt_proj",
+            p + "dt_bias",
+            p + "A_log",
+            p + "D",
+            p + "out_proj",
+        ]
+    names.append("norm_f_w")
+    return names
+
+
+def param_shapes(cfg: MambaConfig) -> Dict[str, Tuple[int, ...]]:
+    d, di, n, r, w = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+    shapes: Dict[str, Tuple[int, ...]] = {"embedding": (cfg.vocab_size, d)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        shapes[p + "norm_w"] = (d,)
+        shapes[p + "in_proj"] = (d, 2 * di)
+        shapes[p + "conv_w"] = (w, di)
+        shapes[p + "conv_b"] = (di,)
+        shapes[p + "x_proj"] = (di, r + 2 * n)
+        shapes[p + "dt_proj"] = (r, di)
+        shapes[p + "dt_bias"] = (di,)
+        shapes[p + "A_log"] = (di, n)
+        shapes[p + "D"] = (di,)
+        shapes[p + "out_proj"] = (di, d)
+    shapes["norm_f_w"] = (d,)
+    return shapes
+
+
+def init_params(cfg: MambaConfig, seed: int = 0) -> Params:
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes(cfg)
+    params: Params = {}
+    dt_min, dt_max = 1e-3, 1e-1
+    for name in param_order(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("norm_w") or name.endswith("norm_f_w"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("A_log"):
+            # S4D-real init: A = -(1..N) per channel.
+            di, n = shape
+            a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+            params[name] = jnp.log(a)
+        elif name.endswith(".D"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("dt_bias"):
+            # inverse-softplus of log-uniform dt in [dt_min, dt_max]
+            key, s2 = jax.random.split(key)
+            u = jax.random.uniform(s2, shape)
+            dt = jnp.exp(u * (math.log(dt_max) - math.log(dt_min)) + math.log(dt_min))
+            params[name] = dt + jnp.log(-jnp.expm1(-dt))
+        elif name.endswith("conv_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "embedding":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            scale = 1.0 / math.sqrt(fan_in)
+            params[name] = jax.random.uniform(sub, shape, jnp.float32, -scale, scale)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward.
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def mamba_block(
+    params: Params,
+    prefix: str,
+    u: jax.Array,  # (B, L, d_model)
+    position_indices: jax.Array,  # (B, L)
+    cfg: MambaConfig,
+) -> jax.Array:
+    """One Mamba block (pre-norm residual form)."""
+    p = lambda s: params[prefix + s]
+    resid = u
+    u = rms_norm(u, p("norm_w"), cfg.norm_eps)
+    xz = u @ p("in_proj")  # (B, L, 2*d_inner)
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    # sequence-wise op #1: packed causal depthwise conv (Pallas kernel)
+    x = conv1d_packed(x, p("conv_w"), p("conv_b"), position_indices)
+    x = jax.nn.silu(x)
+
+    # selective projections
+    dbc = x @ p("x_proj")  # (B, L, dt_rank + 2N)
+    dt_low = dbc[..., : cfg.dt_rank]
+    Bm = dbc[..., cfg.dt_rank : cfg.dt_rank + cfg.d_state]
+    Cm = dbc[..., cfg.dt_rank + cfg.d_state :]
+    dt = jax.nn.softplus(dt_low @ p("dt_proj") + p("dt_bias"))
+
+    # sequence-wise op #2: packed selective scan (Pallas kernel)
+    A = -jnp.exp(p("A_log"))
+    y = ssm_packed(
+        x, dt, A, Bm, Cm, p("D"), position_indices, mode=cfg.scan_mode
+    )
+
+    y = y * jax.nn.silu(z)
+    return resid + y @ p("out_proj")
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,  # (B, L) int32
+    position_indices: jax.Array,  # (B, L) int32
+    cfg: MambaConfig,
+) -> jax.Array:
+    """Token logits: (B, L, vocab).  Head is tied to the embedding."""
+    h = params["embedding"][tokens]
+    for i in range(cfg.n_layers):
+        h = mamba_block(params, f"layers.{i}.", h, position_indices, cfg)
+    h = rms_norm(h, params["norm_f_w"], cfg.norm_eps)
+    return h @ params["embedding"].T
+
+
+def loss_fn(
+    params: Params,
+    tokens: jax.Array,
+    targets: jax.Array,
+    position_indices: jax.Array,
+    loss_mask: jax.Array,  # (B, L) f32; 0 on padding AND on final tokens of
+    cfg: MambaConfig,  # each sequence (targets never cross boundaries)
+) -> jax.Array:
+    logits = forward(params, tokens, position_indices, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum(nll * loss_mask) / denom
+
+
+# ---------------------------------------------------------------------------
+# Optimizer: fused AdamW train step.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def _decay_mask(name: str) -> bool:
+    """Weight decay only on matrices (standard GPT practice)."""
+    return name.endswith(("in_proj", "x_proj", "dt_proj", "out_proj", "embedding"))
+
+
+def adamw_update(
+    params: Params,
+    m: Params,
+    v: Params,
+    grads: Params,
+    step: jax.Array,  # f32 scalar, 1-based
+    opt: AdamWConfig,
+) -> Tuple[Params, Params, Params]:
+    b1c = 1.0 - opt.beta1**step
+    b2c = 1.0 - opt.beta2**step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m_k = opt.beta1 * m[k] + (1.0 - opt.beta1) * g
+        v_k = opt.beta2 * v[k] + (1.0 - opt.beta2) * jnp.square(g)
+        upd = (m_k / b1c) / (jnp.sqrt(v_k / b2c) + opt.eps)
+        if _decay_mask(k):
+            upd = upd + opt.weight_decay * params[k]
+        new_p[k] = params[k] - opt.lr * upd
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_p, new_m, new_v
+
+
+def make_train_step(cfg: MambaConfig, opt: AdamWConfig):
+    """(params, m, v, step, tokens, targets, pos, mask) →
+    (params', m', v', loss) — the single fused artifact the trainer runs."""
+
+    def train_step(params, m, v, step, tokens, targets, pos, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, tokens, targets, pos, mask, cfg
+        )
+        new_p, new_m, new_v = adamw_update(params, m, v, grads, step, opt)
+        return new_p, new_m, new_v, loss
+
+    return train_step
+
+
+def make_grads_fn(cfg: MambaConfig):
+    """(params, tokens, targets, pos, mask) → (loss, grads) — the worker
+    half of the data-parallel path (leader all-reduces then applies)."""
+
+    def grads_fn(params, tokens, targets, pos, mask):
+        return jax.value_and_grad(loss_fn)(params, tokens, targets, pos, mask, cfg)
+
+    return grads_fn
+
+
+def make_adam_apply(cfg: MambaConfig, opt: AdamWConfig):
+    """(params, m, v, step, grads) → (params', m', v') — leader-side update
+    applied to all-reduced grads in the data-parallel scheme."""
+
+    def apply_fn(params, m, v, step, grads):
+        return adamw_update(params, m, v, grads, step, opt)
+
+    return apply_fn
+
+
+# ---------------------------------------------------------------------------
+# Chunked (stateful) forward — the paper's §5 future-work extension:
+# long sequences are cut at pack-row ends and their state (SSM hidden
+# state + conv window tail) is carried into the next chunk, driving
+# padding to zero and supporting unbounded sequence length.
+# ---------------------------------------------------------------------------
+
+
+def init_chunk_state(cfg: MambaConfig, batch: int):
+    """Zero carry-state: one (h, conv_tail) pair per layer."""
+    return [
+        {
+            "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32),
+        }
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def mamba_block_with_state(
+    params: Params,
+    prefix: str,
+    u: jax.Array,
+    position_indices: jax.Array,
+    cfg: MambaConfig,
+    state,
+):
+    """One Mamba block with cross-chunk state carry.
+
+    A chunk that *continues* a sequence has non-zero position indices at
+    its first slot, which is exactly the condition under which the carried
+    state flows in (the same boundary mask that isolates packed
+    neighbours); a fresh-start chunk ignores the state.
+    """
+    from .kernels.conv1d import conv1d_packed_with_state
+    from .kernels.selective_scan import ssm_packed_with_state
+
+    p = lambda s: params[prefix + s]
+    resid = u
+    u = rms_norm(u, p("norm_w"), cfg.norm_eps)
+    xz = u @ p("in_proj")
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    x, new_tail = conv1d_packed_with_state(
+        x, p("conv_w"), p("conv_b"), position_indices, state["conv"]
+    )
+    x = jax.nn.silu(x)
+
+    dbc = x @ p("x_proj")
+    dt_low = dbc[..., : cfg.dt_rank]
+    Bm = dbc[..., cfg.dt_rank : cfg.dt_rank + cfg.d_state]
+    Cm = dbc[..., cfg.dt_rank + cfg.d_state :]
+    dt = jax.nn.softplus(dt_low @ p("dt_proj") + p("dt_bias"))
+
+    A = -jnp.exp(p("A_log"))
+    y, h_last = ssm_packed_with_state(
+        x, dt, A, Bm, Cm, p("D"), position_indices, state["h"],
+        mode=cfg.scan_mode,
+    )
+    y = y * jax.nn.silu(z)
+    return resid + y @ p("out_proj"), {"h": h_last, "conv": new_tail}
+
+
+def forward_chunked(
+    params: Params,
+    tokens: jax.Array,
+    position_indices: jax.Array,
+    cfg: MambaConfig,
+    states,
+):
+    """Stateful forward over one chunk; returns (logits, new_states).
+
+    Feeding consecutive chunks of a long sequence (position indices
+    continuing across chunks) reproduces the unchunked forward exactly —
+    asserted by `tests/test_chunked.py`.  Note: the carried SSM state is
+    the state at each row's final slot, so this mode targets the
+    zero-padding regime the paper's §5 describes (rows end mid-sequence,
+    not in padding).
+    """
+    h = params["embedding"][tokens]
+    new_states = []
+    for i in range(cfg.n_layers):
+        h, st = mamba_block_with_state(
+            params, f"layers.{i}.", h, position_indices, cfg, states[i]
+        )
+        new_states.append(st)
+    h = rms_norm(h, params["norm_f_w"], cfg.norm_eps)
+    return h @ params["embedding"].T, new_states

@@ -1,0 +1,144 @@
+"""Reference pack()/unpack() semantics shared by the kernels, tests and AOT.
+
+This is the *mathematical* definition the paper's Packing-Unpacking
+Invariance (PUI) property is stated against (paper §3.1):
+
+    f(S) == unpack(f(pack(S)))
+
+``pack`` concatenates variable-length sequences along the sequence dimension
+into fixed-length rows of a ``(B, L)`` tensor and records, per packed token,
+its *position index* — the token's offset inside its own original sequence.
+A position index of 0 therefore marks a sequence start, which is exactly the
+signal the modified sequence-wise operators (conv1d / selective scan) use to
+stop information from crossing sequence boundaries.
+
+The rust coordinator re-implements this (``rust/src/packing/``) for the hot
+path; this module is the slow, obviously-correct oracle used to pin the
+semantics in pytest, and by ``aot.py`` to build example inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Pack:
+    """One packed batch row set.
+
+    tokens:           (B, L) int32 — packed token ids, 0-padded at row tails.
+    position_indices: (B, L) int32 — offset of each token within its original
+                      sequence; 0 marks a sequence start.  Padding tokens are
+                      a degenerate "sequence" of their own: the first padding
+                      slot has position index 0 (resetting the SSM state) and
+                      the rest count up, so padded garbage can never
+                      contaminate a real sequence and is excluded via
+                      ``loss_mask``.
+    segment_ids:      (B, L) int32 — 1-based id of the original sequence each
+                      token came from; 0 for padding slots.
+    loss_mask:        (B, L) float32 — 1.0 on real tokens, 0.0 on padding.
+    lengths:          per row, the original sequence lengths packed into it.
+    """
+
+    tokens: np.ndarray
+    position_indices: np.ndarray
+    segment_ids: np.ndarray
+    loss_mask: np.ndarray
+    lengths: List[List[int]]
+
+    @property
+    def batch(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def seq_len(self) -> int:
+        return self.tokens.shape[1]
+
+
+def indices_for_lengths(lengths: Sequence[int], pack_len: int) -> np.ndarray:
+    """position_indices for one packed row holding ``lengths`` sequences."""
+    total = sum(lengths)
+    if total > pack_len:
+        raise ValueError(f"lengths {lengths} overflow pack_len {pack_len}")
+    idx = np.zeros(pack_len, dtype=np.int32)
+    off = 0
+    for n in lengths:
+        idx[off : off + n] = np.arange(n, dtype=np.int32)
+        off += n
+    # padding tail: its own segment, position indices counting from 0
+    if off < pack_len:
+        idx[off:] = np.arange(pack_len - off, dtype=np.int32)
+    return idx
+
+
+def segment_ids_for_lengths(lengths: Sequence[int], pack_len: int) -> np.ndarray:
+    seg = np.zeros(pack_len, dtype=np.int32)
+    off = 0
+    for i, n in enumerate(lengths):
+        seg[off : off + n] = i + 1
+        off += n
+    return seg
+
+
+def pack_sequences(
+    sequences: Iterable[np.ndarray], pack_len: int, rows: int | None = None
+) -> Pack:
+    """Streaming first-fit packer (paper §5 'received order' scheme).
+
+    Appends each sequence to the current row; seals the row when the next
+    sequence does not fit.  This mirrors ``rust/src/packing/streaming.rs``.
+    """
+    seqs = [np.asarray(s, dtype=np.int32) for s in sequences]
+    for s in seqs:
+        if s.ndim != 1:
+            raise ValueError("sequences must be 1-D token arrays")
+        if len(s) > pack_len:
+            raise ValueError(f"sequence of length {len(s)} exceeds pack_len {pack_len}")
+    row_lengths: List[List[int]] = [[]]
+    row_tokens: List[List[np.ndarray]] = [[]]
+    for s in seqs:
+        used = sum(row_lengths[-1])
+        if used + len(s) > pack_len:
+            row_lengths.append([])
+            row_tokens.append([])
+        row_lengths[-1].append(len(s))
+        row_tokens[-1].append(s)
+    if rows is not None:
+        while len(row_lengths) < rows:
+            row_lengths.append([])
+            row_tokens.append([])
+        if len(row_lengths) > rows:
+            raise ValueError(f"needs {len(row_lengths)} rows, caller allows {rows}")
+
+    b = len(row_lengths)
+    tokens = np.zeros((b, pack_len), dtype=np.int32)
+    pos = np.zeros((b, pack_len), dtype=np.int32)
+    seg = np.zeros((b, pack_len), dtype=np.int32)
+    mask = np.zeros((b, pack_len), dtype=np.float32)
+    for r, (lens, toks) in enumerate(zip(row_lengths, row_tokens)):
+        if toks:
+            flat = np.concatenate(toks)
+            tokens[r, : len(flat)] = flat
+            mask[r, : len(flat)] = 1.0
+        pos[r] = indices_for_lengths(lens, pack_len)
+        seg[r] = segment_ids_for_lengths(lens, pack_len)
+    return Pack(tokens, pos, seg, mask, row_lengths)
+
+
+def unpack(values: np.ndarray, pack: Pack) -> List[np.ndarray]:
+    """Inverse of pack() applied to per-token outputs (B, L, ...)."""
+    out: List[np.ndarray] = []
+    for r, lens in enumerate(pack.lengths):
+        off = 0
+        for n in lens:
+            out.append(np.asarray(values[r, off : off + n]))
+            off += n
+    return out
+
+
+def padding_rate(pack: Pack) -> float:
+    """Fraction of packed slots that are padding (paper §2.1 / §5 metric)."""
+    return 1.0 - float(pack.loss_mask.mean())

@@ -1,0 +1,88 @@
+"""AOT pipeline tests: HLO text generation, manifest integrity, and the
+generated artifacts' signatures (runs a tiny in-process build)."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    b = aot.Builder(str(out))
+    cfg = M.MambaConfig(name="unit", vocab_size=64, d_model=16, n_layers=1)
+    b.add_config(cfg)
+    order = M.param_order(cfg)
+    shapes = M.param_shapes(cfg)
+    pspecs = [aot.spec(shapes[n]) for n in order]
+    b.build(
+        "forward_unit_b1x8",
+        "forward",
+        aot.flat_forward(cfg),
+        pspecs + [aot.spec((1, 8), jnp.int32), aot.spec((1, 8), jnp.int32)],
+        {"config": "unit", "batch": 1, "seq_len": 8},
+    )
+    b.build("init_unit", "init", aot.flat_init(cfg, seed=3), [], {"config": "unit"})
+    b.finish()
+    return str(out), cfg
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, _ = built
+    text = open(os.path.join(out, "forward_unit_b1x8.hlo.txt")).read()
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # interpret-mode pallas must lower to plain HLO: no Mosaic custom calls
+    assert "mosaic" not in text.lower()
+
+
+def test_manifest_structure(built):
+    out, cfg = built
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    assert man["version"] == 1
+    names = {a["name"] for a in man["artifacts"]}
+    assert names == {"forward_unit_b1x8", "init_unit"}
+    fwd = next(a for a in man["artifacts"] if a["name"] == "forward_unit_b1x8")
+    # inputs: params + tokens + pos
+    assert len(fwd["inputs"]) == len(M.param_order(cfg)) + 2
+    assert fwd["inputs"][-1]["dtype"] == "int32"
+    assert fwd["outputs"][0]["shape"] == [1, 8, cfg.vocab_size]
+    # params section records the interchange order
+    porder = [p["name"] for p in man["params"]["unit"]]
+    assert porder == M.param_order(cfg)
+    assert man["configs"]["unit"]["param_count"] == cfg.param_count()
+
+
+def test_init_artifact_has_no_inputs(built):
+    out, cfg = built
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    init = next(a for a in man["artifacts"] if a["name"] == "init_unit")
+    assert init["inputs"] == []
+    assert len(init["outputs"]) == len(M.param_order(cfg))
+
+
+def test_real_manifest_if_present():
+    """When `make artifacts` has run, sanity-check the shipped manifest."""
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    man = json.load(open(path))
+    kinds = {a["kind"] for a in man["artifacts"]}
+    assert {"train_step", "forward", "grads", "adam_apply", "init",
+            "ssm_op", "op_gemm", "op_conv1d", "op_ssm", "op_norm"} <= kinds
+    # every artifact file exists
+    d = os.path.dirname(path)
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(d, a["file"])), a["file"]
+    # fig2 sweep covers pow2 and non-pow2 lengths in both scan modes
+    fig2 = [a for a in man["artifacts"] if a["kind"] == "ssm_op"]
+    lens = {a["seq_len"] for a in fig2}
+    assert {256, 512, 1024, 2048, 4096} <= lens
+    assert any(l & (l - 1) for l in lens), "need non-pow2 lengths"
+    modes = {a["mode"] for a in fig2}
+    assert modes == {"blelloch", "hillis"}

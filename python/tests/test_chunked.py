@@ -1,0 +1,97 @@
+"""§5 future-work extension: sequences split across pack rows with state
+carry.  Chunked forward must equal the unchunked forward exactly."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.MambaConfig(name="chunk", vocab_size=64, d_model=16, n_layers=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=5)
+
+
+def test_chunked_forward_matches_full(params):
+    rng = np.random.default_rng(0)
+    L = 32
+    tokens = jnp.array(rng.integers(1, 64, size=(1, L)), jnp.int32)
+    pos_full = jnp.arange(L, dtype=jnp.int32)[None]
+    full = M.forward(params, tokens, pos_full, CFG)
+
+    # two chunks of 16; the second chunk's position indices continue
+    states = M.init_chunk_state(CFG, 1)
+    out = []
+    for c in range(2):
+        sl = slice(16 * c, 16 * (c + 1))
+        logits, states = M.forward_chunked(
+            params, tokens[:, sl], pos_full[:, sl], CFG, states
+        )
+        out.append(logits)
+    chunked = jnp.concatenate(out, axis=1)
+    np.testing.assert_allclose(chunked, full, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_three_uneven_chunks(params):
+    rng = np.random.default_rng(1)
+    L = 40
+    tokens = jnp.array(rng.integers(1, 64, size=(1, L)), jnp.int32)
+    pos_full = jnp.arange(L, dtype=jnp.int32)[None]
+    full = M.forward(params, tokens, pos_full, CFG)
+
+    states = M.init_chunk_state(CFG, 1)
+    out = []
+    for lo, hi in [(0, 8), (8, 24), (24, 40)]:
+        logits, states = M.forward_chunked(
+            params, tokens[:, lo:hi], pos_full[:, lo:hi], CFG, states
+        )
+        out.append(logits)
+    chunked = jnp.concatenate(out, axis=1)
+    np.testing.assert_allclose(chunked, full, rtol=2e-4, atol=2e-4)
+
+
+def test_fresh_start_chunk_ignores_carried_state(params):
+    """A chunk whose position indices start at 0 must give the same output
+    whether the carried state is zero or garbage."""
+    rng = np.random.default_rng(2)
+    tokens = jnp.array(rng.integers(1, 64, size=(1, 16)), jnp.int32)
+    pos = jnp.arange(16, dtype=jnp.int32)[None]
+
+    zero_states = M.init_chunk_state(CFG, 1)
+    junk_states = [
+        {"h": s["h"] + 37.0, "conv": s["conv"] - 11.0} for s in zero_states
+    ]
+    a, _ = M.forward_chunked(params, tokens, pos, CFG, zero_states)
+    b, _ = M.forward_chunked(params, tokens, pos, CFG, junk_states)
+    np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_chunked_packed_mix(params):
+    """A chunk can both continue one sequence AND contain fresh packed
+    sequences after it — state flows only into the continuation."""
+    rng = np.random.default_rng(3)
+    # original: one 24-token sequence + one fresh 8-token sequence
+    seq_a = jnp.array(rng.integers(1, 64, size=24), jnp.int32)
+    seq_b = jnp.array(rng.integers(1, 64, size=8), jnp.int32)
+
+    # reference: run each alone
+    full_a = M.forward(params, seq_a[None], jnp.arange(24, dtype=jnp.int32)[None], CFG)
+    full_b = M.forward(params, seq_b[None], jnp.arange(8, dtype=jnp.int32)[None], CFG)
+
+    # chunk 1: first 16 of A.  chunk 2: last 8 of A (continuing) + all of B
+    states = M.init_chunk_state(CFG, 1)
+    c1, states = M.forward_chunked(
+        params, seq_a[None, :16], jnp.arange(16, dtype=jnp.int32)[None], CFG, states
+    )
+    chunk2_tokens = jnp.concatenate([seq_a[16:], seq_b])[None]
+    chunk2_pos = jnp.concatenate(
+        [jnp.arange(16, 24, dtype=jnp.int32), jnp.arange(8, dtype=jnp.int32)]
+    )[None]
+    c2, _ = M.forward_chunked(params, chunk2_tokens, chunk2_pos, CFG, states)
+
+    np.testing.assert_allclose(c1, full_a[:, :16], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(c2[:, :8], full_a[:, 16:], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(c2[:, 8:], full_b, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,233 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Every Pallas kernel is checked against the pure-jnp oracle in
+``compile/kernels/ref.py`` — values, PUI, and gradients.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import packing
+from compile.kernels import conv1d as cv
+from compile.kernels import ref
+from compile.kernels import selective_scan as ss
+
+
+def make_inputs(seed, B, L, D, N, W=4):
+    rng = np.random.default_rng(seed)
+    return dict(
+        x=jnp.array(rng.standard_normal((B, L, D)), jnp.float32),
+        dt=jnp.array(rng.uniform(0.01, 0.2, (B, L, D)), jnp.float32),
+        A=jnp.array(-rng.uniform(0.5, 2.0, (D, N)), jnp.float32),
+        B=jnp.array(rng.standard_normal((B, L, N)), jnp.float32),
+        C=jnp.array(rng.standard_normal((B, L, N)), jnp.float32),
+        D=jnp.array(rng.standard_normal((D,)), jnp.float32),
+        w=jnp.array(rng.standard_normal((W, D)), jnp.float32),
+        bias=jnp.array(rng.standard_normal((D,)), jnp.float32),
+    )
+
+
+def pos_for(lengths_rows, L):
+    return jnp.array(
+        np.stack([packing.indices_for_lengths(r, L) for r in lengths_rows])
+    )
+
+
+LAYOUTS = [
+    ("multi", [[7, 9, 5, 3], [24]]),
+    ("single_seq", [[24], [24]]),
+    ("all_singletons", [[1] * 24, [2] * 12]),
+    ("with_pad_tail", [[10, 6], [20]]),
+]
+
+
+@pytest.mark.parametrize("mode", ["hillis", "blelloch"])
+@pytest.mark.parametrize("name,rows", LAYOUTS)
+def test_scan_masked_matches_ref(mode, name, rows):
+    B, L, D, N = len(rows), 24, 8, 4
+    inp = make_inputs(0, B, L, D, N)
+    pos = pos_for(rows, L)
+    a = jnp.exp(inp["dt"][..., None] * inp["A"][None, None])
+    b = (inp["dt"] * inp["x"])[..., None] * inp["B"][:, :, None, :]
+    h_ref = ref.segmented_scan_ref(a, b, pos)
+    h = ss.scan_masked_pallas(a, b, pos, mode=mode, d_block=4)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["hillis", "blelloch"])
+@pytest.mark.parametrize("L", [1, 2, 3, 7, 16, 33, 64])
+def test_scan_odd_lengths(mode, L):
+    """Non-power-of-two L exercises Blelloch's internal padding."""
+    B, D, N = 1, 4, 2
+    inp = make_inputs(L, B, L, D, N)
+    a = jnp.exp(inp["dt"][..., None] * inp["A"][None, None])
+    b = (inp["dt"] * inp["x"])[..., None] * inp["B"][:, :, None, :]
+    h_ref = ref.linear_scan_ref(a, b)
+    h = ss.scan_plain_pallas(a, b, mode=mode, d_block=4)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name,rows", LAYOUTS)
+def test_ssm_packed_matches_ref(name, rows):
+    B, L, D, N = len(rows), 24, 8, 4
+    inp = make_inputs(1, B, L, D, N)
+    pos = pos_for(rows, L)
+    y_ref = ref.ssm_packed_ref(
+        inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos
+    )
+    y = ss.ssm_packed(
+        inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos
+    )
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_pui_against_per_sequence_oracle():
+    rows = [[7, 9, 5, 3]]
+    B, L, D, N = 1, 24, 8, 4
+    inp = make_inputs(2, B, L, D, N)
+    pos = pos_for(rows, L)
+    y = ss.ssm_packed(
+        inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos
+    )
+    per = ref.ssm_per_sequence(
+        inp["x"][0], inp["dt"][0], inp["A"], inp["B"][0], inp["C"][0], inp["D"],
+        rows[0],
+    )
+    np.testing.assert_allclose(y[0], per, rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_state_isolation_negative_control():
+    """Without the index reset, outputs after a boundary must change —
+    proving the mask is load-bearing."""
+    rows = [[12, 12]]
+    B, L, D, N = 1, 24, 8, 4
+    inp = make_inputs(3, B, L, D, N)
+    pos_good = pos_for(rows, L)
+    pos_bad = jnp.arange(L, dtype=jnp.int32)[None, :]
+    y_good = ss.ssm_packed(
+        inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos_good
+    )
+    y_bad = ss.ssm_packed(
+        inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos_bad
+    )
+    # first sequence identical, second differs
+    np.testing.assert_allclose(y_good[0, :12], y_bad[0, :12], rtol=1e-6, atol=1e-6)
+    assert float(jnp.abs(y_good[0, 12:] - y_bad[0, 12:]).max()) > 1e-4
+
+
+@pytest.mark.parametrize("name,rows", LAYOUTS)
+@pytest.mark.parametrize("W", [2, 3, 4])
+def test_conv1d_packed_matches_ref(name, rows, W):
+    B, L, D = len(rows), 24, 8
+    inp = make_inputs(4, B, L, D, 4, W=W)
+    pos = pos_for(rows, L)
+    y_ref = ref.conv1d_packed_ref(inp["x"], inp["w"], inp["bias"], pos)
+    y = cv.conv1d_packed(inp["x"], inp["w"], inp["bias"], pos)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_conv1d_pui_against_per_sequence_oracle():
+    rows = [[2, 9, 5, 8]]
+    B, L, D = 1, 24, 8
+    inp = make_inputs(5, B, L, D, 4)
+    pos = pos_for(rows, L)
+    y = cv.conv1d_packed(inp["x"], inp["w"], inp["bias"], pos)
+    per = ref.conv1d_per_sequence(inp["x"][0], inp["w"], inp["bias"], rows[0])
+    np.testing.assert_allclose(y[0], per, rtol=1e-5, atol=1e-5)
+
+
+def test_conv1d_boundary_no_cross_sequence_reads():
+    """First tokens of the 2nd sequence must be independent of the 1st
+    sequence's tail (the red line in the paper's Fig 3b)."""
+    rows = [[12, 12]]
+    B, L, D = 1, 24, 4
+    inp = make_inputs(6, B, L, D, 4)
+    pos = pos_for(rows, L)
+    y1 = cv.conv1d_packed(inp["x"], inp["w"], inp["bias"], pos)
+    # perturb the first sequence's last token
+    x2 = inp["x"].at[0, 11].add(100.0)
+    y2 = cv.conv1d_packed(x2, inp["w"], inp["bias"], pos)
+    np.testing.assert_allclose(y1[0, 12:], y2[0, 12:], rtol=0, atol=0)
+    # within the first sequence the perturbation is visible
+    assert float(jnp.abs(y1[0, 11] - y2[0, 11]).max()) > 1.0
+
+
+def test_gradients_match_reference():
+    rows = [[7, 9, 8]]
+    B, L, D, N = 1, 24, 8, 4
+    inp = make_inputs(7, B, L, D, N)
+    pos = pos_for(rows, L)
+
+    def loss_kernel(x, dt, w, bias, A, Bm, Cm, Dv):
+        xc = cv.conv1d_packed(x, w, bias, pos)
+        y = ss.ssm_packed(xc, dt, A, Bm, Cm, Dv, pos)
+        return jnp.sum(jnp.tanh(y))
+
+    def loss_ref(x, dt, w, bias, A, Bm, Cm, Dv):
+        xc = ref.conv1d_packed_ref(x, w, bias, pos)
+        y = ref.ssm_packed_ref(xc, dt, A, Bm, Cm, Dv, pos)
+        return jnp.sum(jnp.tanh(y))
+
+    args = (inp["x"], inp["dt"], inp["w"], inp["bias"], inp["A"], inp["B"],
+            inp["C"], inp["D"])
+    gk = jax.grad(loss_kernel, argnums=tuple(range(8)))(*args)
+    gr = jax.grad(loss_ref, argnums=tuple(range(8)))(*args)
+    for name, a, b in zip("x dt w bias A B C D".split(), gk, gr):
+        np.testing.assert_allclose(
+            a, b, rtol=2e-4, atol=2e-5, err_msg=f"grad {name}"
+        )
+
+
+def test_gradients_do_not_cross_boundaries():
+    """dL/dx of sequence 1 must be zero when the loss only reads
+    sequence 2's outputs — gradient isolation mirrors forward isolation."""
+    rows = [[12, 12]]
+    B, L, D, N = 1, 24, 8, 4
+    inp = make_inputs(8, B, L, D, N)
+    pos = pos_for(rows, L)
+
+    def loss(x):
+        xc = cv.conv1d_packed(x, inp["w"], inp["bias"], pos)
+        y = ss.ssm_packed(
+            xc, inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos
+        )
+        return jnp.sum(y[0, 12:] ** 2)  # only the 2nd sequence
+
+    g = jax.grad(loss)(inp["x"])
+    assert float(jnp.abs(g[0, :12]).max()) == 0.0, "gradient leaked backwards"
+    assert float(jnp.abs(g[0, 12:]).max()) > 0.0
+
+
+def test_scan_modes_agree():
+    B, L, D, N = 2, 40, 8, 4
+    inp = make_inputs(9, B, L, D, N)
+    pos = pos_for([[13, 17, 10], [40]], L)
+    a = jnp.exp(inp["dt"][..., None] * inp["A"][None, None])
+    b = (inp["dt"] * inp["x"])[..., None] * inp["B"][:, :, None, :]
+    h1 = ss.scan_masked_pallas(a, b, pos, mode="hillis", d_block=8)
+    h2 = ss.scan_masked_pallas(a, b, pos, mode="blelloch", d_block=8)
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+
+
+def test_d_block_tiling_invariance():
+    """Grid tiling over channels must not change results."""
+    B, L, D, N = 1, 16, 12, 4
+    inp = make_inputs(10, B, L, D, N)
+    pos = pos_for([[9, 7]], L)
+    a = jnp.exp(inp["dt"][..., None] * inp["A"][None, None])
+    b = (inp["dt"] * inp["x"])[..., None] * inp["B"][:, :, None, :]
+    h_full = ss.scan_masked_pallas(a, b, pos, d_block=12)
+    for blk in [1, 2, 3, 4, 6]:
+        h_blk = ss.scan_masked_pallas(a, b, pos, d_block=blk)
+        np.testing.assert_allclose(h_blk, h_full, rtol=1e-6, atol=1e-6)
+
+
+def test_ssm_dense_equals_packed_with_arange():
+    B, L, D, N = 2, 16, 4, 4
+    inp = make_inputs(11, B, L, D, N)
+    y1 = ss.ssm_dense(inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"])
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    y2 = ss.ssm_packed(inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos)
+    np.testing.assert_allclose(y1, y2, rtol=0, atol=0)

@@ -1,0 +1,184 @@
+"""L2 model tests: shapes, PUI at the full-model level, loss/grads,
+optimizer semantics, and the AOT flat-argument contract."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import packing
+
+CFG = M.MambaConfig(name="test", vocab_size=64, d_model=16, n_layers=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def batch_for(lengths_rows, L, seed=0):
+    rng = np.random.default_rng(seed)
+    B = len(lengths_rows)
+    tokens = np.zeros((B, L), np.int32)
+    pos = np.zeros((B, L), np.int32)
+    mask = np.zeros((B, L), np.float32)
+    targets = np.zeros((B, L), np.int32)
+    for r, lens in enumerate(lengths_rows):
+        pos[r] = packing.indices_for_lengths(lens, L)
+        off = 0
+        for n in lens:
+            toks = rng.integers(1, CFG.vocab_size, size=n)
+            tokens[r, off : off + n] = toks
+            targets[r, off : off + n - 1] = toks[1:]
+            mask[r, off : off + n - 1] = 1.0
+            off += n
+    return (jnp.array(tokens), jnp.array(targets), jnp.array(pos), jnp.array(mask))
+
+
+def test_param_shapes_and_count(params):
+    shapes = M.param_shapes(CFG)
+    assert set(params) == set(shapes)
+    total = sum(int(np.prod(shapes[k])) for k in shapes)
+    assert total == CFG.param_count()
+    for k, p in params.items():
+        assert p.shape == shapes[k], k
+        assert bool(jnp.isfinite(p).all()), k
+
+
+def test_forward_shapes(params):
+    tokens, _, pos, _ = batch_for([[10, 6], [16]], 16)
+    logits = M.forward(params, tokens, pos, CFG)
+    assert logits.shape == (2, 16, CFG.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_model_level_pui(params):
+    """forward(pack(S)) == forward(S_i) per sequence — whole model."""
+    lengths = [9, 7]
+    L = 16
+    tokens, _, pos, _ = batch_for([lengths], L, seed=3)
+    packed_logits = M.forward(params, tokens, pos, CFG)
+
+    off = 0
+    for n in lengths:
+        solo_toks = tokens[:, off : off + n]
+        solo_pos = jnp.arange(n, dtype=jnp.int32)[None]
+        solo = M.forward(params, solo_toks, solo_pos, CFG)
+        np.testing.assert_allclose(
+            packed_logits[0, off : off + n],
+            solo[0],
+            rtol=5e-4,
+            atol=5e-4,
+        )
+        off += n
+
+
+def test_loss_is_scalar_and_masked(params):
+    tokens, targets, pos, mask = batch_for([[10, 6], [16]], 16, seed=4)
+    loss = M.loss_fn(params, tokens, targets, pos, mask, CFG)
+    assert loss.shape == ()
+    # fully-masked batch gives 0 loss (no targets)
+    zero = M.loss_fn(params, tokens, targets, pos, jnp.zeros_like(mask), CFG)
+    assert float(zero) == 0.0
+    # untrained model: loss near ln(vocab)
+    assert abs(float(loss) - np.log(CFG.vocab_size)) < 1.0
+
+
+def test_padding_does_not_affect_loss(params):
+    """Adding padding slots must not change the loss (they are masked and
+    isolated)."""
+    lengths = [9, 5]
+    t14, g14, p14, m14 = batch_for([lengths], 14, seed=5)
+    loss14 = M.loss_fn(params, t14, g14, p14, m14, CFG)
+    # same data in a longer row
+    t20 = jnp.zeros((1, 20), jnp.int32).at[:, :14].set(t14)
+    g20 = jnp.zeros((1, 20), jnp.int32).at[:, :14].set(g14)
+    p20 = jnp.array(packing.indices_for_lengths(lengths, 20))[None]
+    m20 = jnp.zeros((1, 20), jnp.float32).at[:, :14].set(m14)
+    loss20 = M.loss_fn(params, t20, g20, p20, m20, CFG)
+    np.testing.assert_allclose(float(loss14), float(loss20), rtol=1e-5)
+
+
+def test_grads_flow_to_all_params(params):
+    tokens, targets, pos, mask = batch_for([[12, 4]], 16, seed=6)
+    loss, grads = jax.value_and_grad(M.loss_fn)(
+        params, tokens, targets, pos, mask, CFG
+    )
+    assert float(loss) > 0
+    for k, g in grads.items():
+        assert bool(jnp.isfinite(g).all()), k
+        assert float(jnp.abs(g).max()) > 0, f"no gradient reaches {k}"
+
+
+def test_adamw_moves_params_and_decays(params):
+    grads = {k: jnp.ones_like(v) for k, v in params.items()}
+    m0 = {k: jnp.zeros_like(v) for k, v in params.items()}
+    opt = M.AdamWConfig(lr=1e-2, weight_decay=0.5)
+    new_p, new_m, new_v = M.adamw_update(params, m0, m0, grads, jnp.float32(1), opt)
+    for k in params:
+        assert float(jnp.abs(new_p[k] - params[k]).max()) > 0, k
+        assert float(jnp.abs(new_m[k]).max()) > 0
+        assert float(jnp.abs(new_v[k]).max()) > 0
+    # decayed matrices move further than undecayed vectors of equal grad
+    dk = float(jnp.abs(new_p["layers.0.in_proj"] - params["layers.0.in_proj"]).mean())
+    dv = float(jnp.abs(new_p["layers.0.conv_b"] - params["layers.0.conv_b"]).mean())
+    assert dk > dv
+
+
+def test_train_step_decreases_loss_on_fixed_batch(params):
+    opt = M.AdamWConfig(lr=3e-3)
+    step_fn = jax.jit(M.make_train_step(CFG, opt))
+    tokens, targets, pos, mask = batch_for([[12, 4], [16]], 16, seed=7)
+    p = params
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    losses = []
+    for i in range(8):
+        p, m, v, loss = step_fn(p, m, v, jnp.float32(i + 1), tokens, targets, pos, mask)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_flat_wrappers_round_trip():
+    """The AOT flat-argument contract: flat wrapper == dict API."""
+    from compile import aot
+
+    order = M.param_order(CFG)
+    params = M.init_params(CFG, seed=1)
+    flat = [params[k] for k in order]
+    tokens, targets, pos, mask = batch_for([[10, 6]], 16, seed=8)
+
+    fwd = aot.flat_forward(CFG)
+    (logits_flat,) = fwd(*flat, tokens, pos)
+    logits_dict = M.forward(params, tokens, pos, CFG)
+    np.testing.assert_allclose(logits_flat, logits_dict, rtol=1e-6, atol=1e-6)
+
+    gr = aot.flat_grads(CFG)
+    outs = gr(*flat, tokens, targets, pos, mask)
+    loss_flat = outs[0]
+    loss_dict, grads = jax.value_and_grad(M.loss_fn)(
+        params, tokens, targets, pos, mask, CFG
+    )
+    np.testing.assert_allclose(loss_flat, loss_dict, rtol=1e-6)
+    for name, g_flat in zip(order, outs[1:]):
+        np.testing.assert_allclose(g_flat, grads[name], rtol=1e-5, atol=1e-6,
+                                   err_msg=name)
+
+
+def test_scan_mode_config_is_respected():
+    cfg_h = M.MambaConfig(name="h", vocab_size=64, d_model=16, n_layers=1,
+                          scan_mode="hillis")
+    cfg_b = M.MambaConfig(name="b", vocab_size=64, d_model=16, n_layers=1,
+                          scan_mode="blelloch")
+    p = M.init_params(cfg_h, seed=2)
+    tokens, _, pos, _ = batch_for([[10, 6]], 16, seed=9)
+    lh = M.forward(p, tokens, pos, cfg_h)
+    lb = M.forward(p, tokens, pos, cfg_b)
+    np.testing.assert_allclose(lh, lb, rtol=1e-4, atol=1e-4)
+
+
+def test_preset_param_counts():
+    assert 100e6 < M.MAMBA_110M.param_count() < 180e6
+    assert 1.2e9 < M.MAMBA_1_4B.param_count() < 1.6e9
+    assert 2.5e9 < M.MAMBA_2_8B.param_count() < 3.1e9

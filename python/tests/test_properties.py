@@ -1,0 +1,134 @@
+"""Hypothesis property sweeps: PUI over random shapes, dtypes and
+boundary layouts (deliverable (c): property-based tests on invariants)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import packing
+from compile.kernels import conv1d as cv
+from compile.kernels import ref
+from compile.kernels import selective_scan as ss
+
+
+@st.composite
+def packed_layout(draw, max_len=48):
+    """A random row layout: sequence lengths that fit in pack_len."""
+    pack_len = draw(st.integers(8, max_len))
+    lengths = []
+    remaining = pack_len
+    while remaining > 0:
+        if lengths and draw(st.booleans()):
+            break
+        n = draw(st.integers(1, remaining))
+        lengths.append(n)
+        remaining -= n
+    return pack_len, lengths
+
+
+def inputs_for(seed, B, L, D, N, W=4, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return dict(
+        x=jnp.asarray(rng.standard_normal((B, L, D)), dtype),
+        dt=jnp.asarray(rng.uniform(0.01, 0.2, (B, L, D)), dtype),
+        A=jnp.asarray(-rng.uniform(0.5, 2.0, (D, N)), dtype),
+        B=jnp.asarray(rng.standard_normal((B, L, N)), dtype),
+        C=jnp.asarray(rng.standard_normal((B, L, N)), dtype),
+        D=jnp.asarray(rng.standard_normal((D,)), dtype),
+        w=jnp.asarray(rng.standard_normal((W, D)), dtype),
+        bias=jnp.asarray(rng.standard_normal((D,)), dtype),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(layout=packed_layout(), seed=st.integers(0, 2**16), mode=st.sampled_from(["hillis", "blelloch"]))
+def test_pui_ssm_random_layouts(layout, seed, mode):
+    pack_len, lengths = layout
+    inp = inputs_for(seed, 1, pack_len, 4, 2)
+    pos = jnp.array(packing.indices_for_lengths(lengths, pack_len))[None]
+    y = ss.ssm_packed(
+        inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos,
+        mode=mode,
+    )
+    per = ref.ssm_per_sequence(
+        inp["x"][0], inp["dt"][0], inp["A"], inp["B"][0], inp["C"][0],
+        inp["D"], lengths,
+    )
+    used = sum(lengths)
+    np.testing.assert_allclose(y[0, :used], per, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(layout=packed_layout(), seed=st.integers(0, 2**16), W=st.integers(2, 5))
+def test_pui_conv1d_random_layouts(layout, seed, W):
+    pack_len, lengths = layout
+    inp = inputs_for(seed, 1, pack_len, 4, 2, W=W)
+    pos = jnp.array(packing.indices_for_lengths(lengths, pack_len))[None]
+    y = cv.conv1d_packed(inp["x"], inp["w"], inp["bias"], pos)
+    per = ref.conv1d_per_sequence(inp["x"][0], inp["w"], inp["bias"], lengths)
+    used = sum(lengths)
+    np.testing.assert_allclose(y[0, :used], per, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), L=st.integers(1, 40))
+def test_scan_matches_serial_any_length(seed, L):
+    inp = inputs_for(seed, 2, L, 4, 2)
+    a = jnp.exp(inp["dt"][..., None] * inp["A"][None, None])
+    b = (inp["dt"] * inp["x"])[..., None] * inp["B"][:, :, None, :]
+    h_ref = ref.linear_scan_ref(a, b)
+    h = ss.scan_plain_pallas(a, b, d_block=4)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_pui_holds_in_bfloat16(seed):
+    """dtype sweep: bf16 still satisfies PUI within its precision."""
+    lengths = [9, 7, 4]
+    L = 20
+    inp = inputs_for(seed, 1, L, 4, 2, dtype=np.float32)
+    inp = {k: v.astype(jnp.bfloat16) for k, v in inp.items()}
+    pos = jnp.array(packing.indices_for_lengths(lengths, L))[None]
+    y = ss.ssm_packed(
+        inp["x"], inp["dt"], inp["A"], inp["B"], inp["C"], inp["D"], pos
+    ).astype(jnp.float32)
+    per = ref.ssm_per_sequence(
+        inp["x"][0], inp["dt"][0], inp["A"], inp["B"][0], inp["C"][0],
+        inp["D"], lengths,
+    ).astype(jnp.float32)
+    np.testing.assert_allclose(y[0, :20], per, rtol=0.1, atol=0.1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    lengths=st.lists(st.integers(1, 30), min_size=0, max_size=8),
+    pack_len_extra=st.integers(0, 16),
+)
+def test_pack_unpack_identity(lengths, pack_len_extra):
+    """unpack(pack(S)) == S at the data level (paper §3.1)."""
+    pack_len = sum(lengths) + pack_len_extra
+    if pack_len == 0:
+        pack_len = 1
+    rng = np.random.default_rng(sum(lengths) + pack_len)
+    seqs = [rng.integers(1, 100, size=n).astype(np.int32) for n in lengths]
+    if any(n > pack_len for n in lengths):
+        return
+    pack = packing.pack_sequences(seqs, pack_len)
+    toks = pack.tokens[..., None].astype(np.float32)
+    pieces = packing.unpack(toks, pack)
+    assert len(pieces) == len(seqs)
+    for got, want in zip(pieces, seqs):
+        np.testing.assert_array_equal(got[:, 0].astype(np.int32), want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(lengths=st.lists(st.integers(1, 20), min_size=1, max_size=6))
+def test_padding_rate_accounting(lengths):
+    pack_len = max(sum(lengths), 1)
+    rng = np.random.default_rng(0)
+    seqs = [rng.integers(1, 9, size=n).astype(np.int32) for n in lengths]
+    pack = packing.pack_sequences(seqs, pack_len)
+    total_slots = pack.batch * pack.seq_len
+    real = sum(lengths)
+    assert abs(packing.padding_rate(pack) - (1 - real / total_slots)) < 1e-9

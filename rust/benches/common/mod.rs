@@ -1,0 +1,61 @@
+//! Shared bench plumbing: artifact discovery, random operator inputs,
+//! and JSON result output under target/bench/.
+#![allow(dead_code)] // each bench binary uses a different subset
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use packmamba::runtime::{ArtifactSpec, DType, HostValue, Runtime};
+use packmamba::tensor::{IntTensor, Tensor};
+use packmamba::util::json::Json;
+use packmamba::util::rng::Pcg64;
+
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+pub fn runtime() -> Option<Rc<Runtime>> {
+    artifacts_dir().map(|d| Runtime::load(&d).expect("runtime"))
+}
+
+/// Random inputs matching an operator artifact's signature.  Position
+/// indices get a two-sequences-per-row layout; floats are small (keeps
+/// exp() in the scan well-conditioned).
+pub fn random_args(spec: &ArtifactSpec, rng: &mut Pcg64) -> Vec<HostValue> {
+    spec.inputs
+        .iter()
+        .map(|ts| match ts.dtype {
+            DType::I32 => {
+                let l = *ts.shape.last().unwrap_or(&1);
+                let half = (l / 2).max(1);
+                let mut v = vec![0i32; ts.element_count()];
+                for (i, slot) in v.iter_mut().enumerate() {
+                    let t = i % l;
+                    *slot = if t < half { t as i32 } else { (t - half) as i32 };
+                }
+                HostValue::I32(IntTensor::new(&ts.shape, v))
+            }
+            DType::F32 => HostValue::F32(Tensor::from_fn(&ts.shape, |_| {
+                0.05 * (rng.next_f32() - 0.5)
+            })),
+            DType::Bf16 => HostValue::Bf16(Tensor::from_fn(&ts.shape, |_| {
+                0.05 * (rng.next_f32() - 0.5)
+            })),
+        })
+        .collect()
+}
+
+/// Write a bench result JSON under target/bench/<name>.json.
+pub fn write_results(name: &str, json: &Json) {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target/bench");
+    std::fs::create_dir_all(&dir).expect("mkdir target/bench");
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json.pretty()).expect("write bench json");
+    println!("\nresults written to {}", path.display());
+}

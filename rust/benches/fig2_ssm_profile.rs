@@ -1,0 +1,108 @@
+//! Fig 2 reproduction: SSM operator duration & throughput vs seqlen.
+//!
+//! Two series, as in DESIGN.md §3:
+//!  * MEASURED — the real packed selective-scan artifact executed on the
+//!    CPU PJRT client (Blelloch schedule; the internal pad-to-2^n plateau
+//!    emerges from the actual kernel),
+//!  * MODELED — the calibrated A100 curve (adds the paper's vectorized
+//!    loading fast path at 2^n / multiples of 2048).
+//!
+//! Also runs the hillis-vs-blelloch schedule ablation at a subset of
+//! lengths (DESIGN.md §8 ablation).
+
+mod common;
+
+use packmamba::perfmodel::{ssm_time, vector_path, Dtype, GpuSpec};
+use packmamba::util::json::Json;
+use packmamba::util::rng::Pcg64;
+use std::time::Instant;
+
+fn main() {
+    let Some(rt) = common::runtime() else { return };
+    let mut rng = Pcg64::new(2, 0);
+    let gpu = GpuSpec::a100();
+
+    let mut specs: Vec<_> = rt
+        .manifest()
+        .by_kind("ssm_op")
+        .into_iter()
+        .map(|a| {
+            (
+                a.name.clone(),
+                a.meta_usize("seq_len").unwrap(),
+                a.meta_str("mode").unwrap().to_string(),
+            )
+        })
+        .collect();
+    specs.sort_by_key(|(_, l, m)| (*l, m.clone()));
+
+    println!("=== Fig 2: SSM operator vs seqlen (D=256, N=16, B=1) ===");
+    println!(
+        "{:>7} {:>9} | {:>13} {:>13} | {:>13} {:>14} {:>9}",
+        "seqlen", "schedule", "cpu ms", "cpu tok/ms", "a100 µs", "a100 tok/s", "fastpath"
+    );
+
+    let mut rows = Vec::new();
+    for (name, l, mode) in &specs {
+        // hillis ablation only at a subset; blelloch (paper schedule) at all
+        if mode == "hillis" && ![256usize, 512, 1024, 2048].contains(l) {
+            continue;
+        }
+        let exe = rt.executable(name).expect("compile");
+        let args = common::random_args(exe.spec(), &mut rng);
+        exe.run(&args).expect("warmup"); // warm-up / first-run compile
+        let reps = if *l <= 1024 { 3 } else { 1 };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            exe.run(&args).expect("run");
+        }
+        let cpu_s = t0.elapsed().as_secs_f64() / reps as f64;
+        let a100_s = ssm_time(&gpu, 1, *l, 256, 16, Dtype::Bf16);
+        println!(
+            "{:>7} {:>9} | {:>13.1} {:>13.0} | {:>13.1} {:>14.0} {:>9}",
+            l,
+            mode,
+            cpu_s * 1e3,
+            *l as f64 / (cpu_s * 1e3),
+            a100_s * 1e6,
+            *l as f64 / a100_s,
+            vector_path(*l)
+        );
+        rows.push(Json::from_pairs([
+            ("seqlen", Json::from(*l)),
+            ("mode", Json::from(mode.clone())),
+            ("cpu_secs", Json::from(cpu_s)),
+            ("a100_secs_model", Json::from(a100_s)),
+        ]));
+    }
+
+    // --- the paper's three observations, asserted on the measured data ---
+    let cpu = |l: usize| {
+        rows.iter()
+            .find(|r| {
+                r.get("seqlen").unwrap().as_usize() == Some(l)
+                    && r.get("mode").unwrap().as_str() == Some("blelloch")
+            })
+            .and_then(|r| r.get("cpu_secs").unwrap().as_f64())
+            .unwrap()
+    };
+    // obs 1: plateau between powers of two (640..1024 within 2.2x of each other)
+    let plateau = cpu(1024) / cpu(640);
+    println!("\nobs1 plateau 640→1024 ratio (measured): {plateau:.2} (expect ≈1)");
+    // obs 3: throughput at 2^n grows with n
+    let thr = |l: usize| l as f64 / cpu(l);
+    println!(
+        "obs3 tokens/s at 2^n (measured): 256→{:.0}  1024→{:.0}  4096→{:.0}",
+        thr(256),
+        thr(1024),
+        thr(4096)
+    );
+
+    common::write_results(
+        "fig2_ssm_profile",
+        &Json::from_pairs([
+            ("figure", Json::from("fig2")),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
+}

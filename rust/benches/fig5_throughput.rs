@@ -1,0 +1,111 @@
+//! Fig 5 reproduction: training throughput of the three batching schemes.
+//!
+//! MEASURED — real training steps (fused train_step artifacts, real data
+//! pipeline and packers) on the `tiny` config at CPU scale, using the
+//! paper's protocol (warm-up, then the average over a stable window of
+//! consecutive steps).
+//!
+//! MODELED — the calibrated A100 table at paper scale
+//! ({110M, 1.4B, 2.8B} × {bf16, f32}), where the headline numbers live.
+
+mod common;
+
+use std::rc::Rc;
+
+use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::Trainer;
+use packmamba::data::LengthTrace;
+use packmamba::perfmodel::{fig5_table, GpuSpec};
+use packmamba::util::json::Json;
+
+fn measured(rt: &Rc<packmamba::runtime::Runtime>, scheme: Scheme, steps: usize) -> (f64, f64, f64) {
+    let mut cfg = TrainConfig::defaults(ModelConfig::tiny());
+    cfg.scheme = scheme;
+    cfg.steps = steps;
+    let mut trainer = Trainer::new(Rc::clone(rt), cfg).expect("trainer");
+    trainer.train().expect("train");
+    let m = &trainer.metrics;
+    (
+        m.stable_throughput(2, 100).unwrap_or(0.0),
+        m.padding_rate(),
+        m.mean_step_secs(),
+    )
+}
+
+fn main() {
+    let Some(rt) = common::runtime() else { return };
+
+    println!("=== Fig 5 (measured, tiny config, CPU PJRT) ===");
+    println!(
+        "{:<10} {:>14} {:>12} {:>12}",
+        "scheme", "real tok/s", "padding", "s/step"
+    );
+    let mut json_rows = Vec::new();
+    let mut tps = std::collections::BTreeMap::new();
+    for scheme in [Scheme::SingleSequence, Scheme::Padding, Scheme::Pack] {
+        let steps = if scheme == Scheme::SingleSequence { 24 } else { 12 };
+        let (thr, pad, step_s) = measured(&rt, scheme, steps);
+        println!(
+            "{:<10} {:>14.0} {:>11.1}% {:>12.3}",
+            scheme.name(),
+            thr,
+            pad * 100.0,
+            step_s
+        );
+        tps.insert(scheme.name(), thr);
+        json_rows.push(Json::from_pairs([
+            ("scheme", Json::from(scheme.name())),
+            ("tokens_per_sec", Json::from(thr)),
+            ("padding_rate", Json::from(pad)),
+            ("secs_per_step", Json::from(step_s)),
+        ]));
+    }
+    let speedup = tps["pack"] / tps["single"];
+    let vs_pad = tps["pack"] / tps["padding"];
+    println!("measured pack speedup vs single: {speedup:.2}x, vs padding: {vs_pad:.2}x");
+
+    println!("\n=== Fig 5 (modeled, A100, paper scale) ===");
+    println!(
+        "{:<8} {:<6} {:>13} {:>13} {:>13} {:>10} {:>9}",
+        "model", "dtype", "single tok/s", "pad tok/s", "pack tok/s", "vs single", "paper"
+    );
+    let trace = LengthTrace::paper_like(5000, 7);
+    let table = fig5_table(&GpuSpec::a100(), &trace);
+    let paper = |m: &str, d: &str| match (m, d) {
+        ("1.4b", "bf16") => "3.06x",
+        ("2.8b", "bf16") => "2.62x",
+        (_, "bf16") => "3-5x",
+        _ => "1.3-1.6x",
+    };
+    let mut model_rows = Vec::new();
+    for r in &table {
+        println!(
+            "{:<8} {:<6} {:>13.0} {:>13.0} {:>13.0} {:>9.2}x {:>9}",
+            r.model,
+            r.dtype,
+            r.single_tps,
+            r.padding_tps,
+            r.pack_tps,
+            r.speedup_vs_single,
+            paper(&r.model, r.dtype)
+        );
+        model_rows.push(Json::from_pairs([
+            ("model", Json::from(r.model.clone())),
+            ("dtype", Json::from(r.dtype)),
+            ("single_tps", Json::from(r.single_tps)),
+            ("padding_tps", Json::from(r.padding_tps)),
+            ("pack_tps", Json::from(r.pack_tps)),
+            ("speedup_vs_single", Json::from(r.speedup_vs_single)),
+        ]));
+    }
+
+    common::write_results(
+        "fig5_throughput",
+        &Json::from_pairs([
+            ("figure", Json::from("fig5")),
+            ("measured_tiny", Json::Arr(json_rows)),
+            ("measured_pack_vs_single", Json::from(speedup)),
+            ("modeled_a100", Json::Arr(model_rows)),
+        ]),
+    );
+}

@@ -1,0 +1,119 @@
+//! Fig 6 reproduction: per-kernel time, padding scheme vs pack scheme.
+//!
+//! MEASURED — the isolated operator artifacts (gemm / conv1d / ssm / norm)
+//! at 1.4B-scaled dims, "padding" geometry (3×1024, one sequence per row)
+//! vs "pack" geometry (1×2048 dense) on the CPU PJRT client; speedups are
+//! per *useful token*.
+//!
+//! MODELED — the calibrated A100 breakdown at the paper's true scale
+//! (Mamba-1.4B, seqlen 4096), where the 3.91× fwd-bwd figure lives.
+
+mod common;
+
+use packmamba::data::LengthTrace;
+use packmamba::perfmodel::{fig6_breakdown, Dtype, GpuSpec};
+use packmamba::util::bench::{BenchConfig, Suite};
+use packmamba::util::json::Json;
+use packmamba::util::rng::Pcg64;
+
+fn main() {
+    let Some(rt) = common::runtime() else { return };
+    let mut rng = Pcg64::new(3, 0);
+
+    // Useful-token accounting mirrors the paper's rates: padding rows are
+    // 33.7% useful (66.3% padding, §2.1), packed rows ~95% useful (19.1%
+    // streaming-pack padding would be 81%, but the op artifacts use a
+    // denser two-sequence layout; 95% matches their geometry).
+    let useful = |scheme: &str, tokens: usize| -> f64 {
+        match scheme {
+            "padding" => tokens as f64 * (1.0 - 0.663),
+            _ => tokens as f64 * 0.95,
+        }
+    };
+
+    let mut cfg = BenchConfig::default();
+    cfg.samples = 10;
+    cfg.budget = std::time::Duration::from_secs(30);
+    let mut suite = Suite::new("Fig 6 measured (CPU, 1.4B-scaled ops)", cfg);
+
+    let ops = ["op_gemm", "op_conv1d", "op_ssm", "op_norm"];
+    let mut rows = Vec::new();
+    for op in ops {
+        let mut per_scheme = std::collections::BTreeMap::new();
+        for scheme in ["padding", "pack"] {
+            let name = if op == "op_gemm" {
+                format!("{op}_{scheme}_f32")
+            } else {
+                format!("{op}_{scheme}")
+            };
+            let exe = rt.executable(&name).expect("compile");
+            let spec = exe.spec().clone();
+            let tokens = spec.meta_usize("tokens").unwrap_or(
+                spec.meta_usize("batch").unwrap_or(1) * spec.meta_usize("seq_len").unwrap_or(1),
+            );
+            let args = common::random_args(&spec, &mut rng);
+            exe.run(&args).expect("warmup");
+            let med = suite.bench(&name, || {
+                exe.run(&args).expect("run");
+            });
+            per_scheme.insert(scheme, med / useful(scheme, tokens));
+        }
+        let speedup = per_scheme["padding"] / per_scheme["pack"];
+        println!("  -> {op}: pack speedup per useful token = {speedup:.2}x");
+        rows.push(Json::from_pairs([
+            ("op", Json::from(op)),
+            ("padding_s_per_tok", Json::from(per_scheme["padding"])),
+            ("pack_s_per_tok", Json::from(per_scheme["pack"])),
+            ("speedup", Json::from(speedup)),
+        ]));
+    }
+
+    // bf16 vs f32 gemm (the dtype axis of the paper's evaluation)
+    for scheme in ["padding", "pack"] {
+        for dt in ["f32", "bf16"] {
+            let name = format!("op_gemm_{scheme}_{dt}");
+            let exe = rt.executable(&name).expect("compile");
+            let args = common::random_args(exe.spec(), &mut rng);
+            exe.run(&args).expect("warmup");
+            suite.bench(&name, || {
+                exe.run(&args).expect("run");
+            });
+        }
+    }
+
+    println!("\n=== Fig 6 modeled (A100, Mamba-1.4B, packed seqlen 4096, bf16) ===");
+    let trace = LengthTrace::paper_like(2000, 7);
+    let (mrows, total) = fig6_breakdown(&GpuSpec::a100(), &trace, Dtype::Bf16);
+    println!(
+        "{:<12} {:>14} {:>14} {:>9}",
+        "op", "padding s", "pack s", "speedup"
+    );
+    let mut model_rows = Vec::new();
+    for r in &mrows {
+        println!(
+            "{:<12} {:>14.3} {:>14.3} {:>8.2}x",
+            r.op.name(),
+            r.padding_secs,
+            r.pack_secs,
+            r.speedup
+        );
+        model_rows.push(Json::from_pairs([
+            ("op", Json::from(r.op.name())),
+            ("padding_secs", Json::from(r.padding_secs)),
+            ("pack_secs", Json::from(r.pack_secs)),
+            ("speedup", Json::from(r.speedup)),
+        ]));
+    }
+    println!("fwd-bwd total speedup: {total:.2}x   (paper: 3.91x)");
+
+    common::write_results(
+        "fig6_kernel_breakdown",
+        &Json::from_pairs([
+            ("figure", Json::from("fig6")),
+            ("measured_ops", Json::Arr(rows)),
+            ("modeled_a100", Json::Arr(model_rows)),
+            ("modeled_total_speedup", Json::from(total)),
+            ("suite", suite.to_json()),
+        ]),
+    );
+}

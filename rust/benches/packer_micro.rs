@@ -1,0 +1,108 @@
+//! Packer micro-benchmarks: the L3 hot-path pieces in isolation
+//! (StreamingPacker, GreedyPacker, batch materialization, index-plane
+//! builders).  §Perf targets the packer at ≥ 10M tokens/s so the data
+//! pipeline never becomes the trainer's bottleneck.
+
+mod common;
+
+use packmamba::data::{LengthSampler, SyntheticCorpus};
+use packmamba::packing::{
+    position_indices, reverse_indices, GreedyPacker, PackedBatch, PackedRow, Sequence,
+    StreamingPacker,
+};
+use packmamba::util::bench::{BenchConfig, Suite};
+use packmamba::util::json::Json;
+use packmamba::util::rng::Pcg64;
+
+fn make_seqs(n: usize, seed: u64) -> Vec<Sequence> {
+    let sampler = LengthSampler::calibrated(57, 2048, 646.0);
+    let mut rng = Pcg64::new(seed, 0);
+    (0..n)
+        .map(|i| Sequence {
+            tokens: vec![1; sampler.sample(&mut rng)],
+            id: i as u64,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut suite = Suite::new("packer micro-benchmarks", BenchConfig::default());
+    let seqs = make_seqs(512, 9);
+    let total_tokens: usize = seqs.iter().map(Sequence::len).sum();
+
+    let med = suite.bench("streaming_packer_512_seqs", || {
+        let mut p = StreamingPacker::new(4096, 1);
+        let mut rows = 0usize;
+        for s in &seqs {
+            if let Some(b) = p.push(s.clone()) {
+                rows += b.rows();
+            }
+        }
+        if let Some(b) = p.flush() {
+            rows += b.rows();
+        }
+        std::hint::black_box(rows);
+    });
+    let stream_mtps = total_tokens as f64 / med / 1e6;
+    println!("  -> streaming packer: {stream_mtps:.1} Mtok/s");
+
+    let med = suite.bench("greedy_packer_buf256_512_seqs", || {
+        let mut p = GreedyPacker::new(4096, 1, 256);
+        let mut rows = 0usize;
+        for s in &seqs {
+            if let Some(b) = p.push(s.clone()) {
+                rows += b.rows();
+            }
+        }
+        while let Some(b) = p.flush() {
+            rows += b.rows();
+        }
+        std::hint::black_box(rows);
+    });
+    let greedy_mtps = total_tokens as f64 / med / 1e6;
+    println!("  -> greedy packer:    {greedy_mtps:.1} Mtok/s");
+
+    // batch materialization (tokens/targets/indices/mask tensors)
+    let row = PackedRow {
+        sequences: make_seqs(6, 11).into_iter().take(6).collect(),
+    };
+    let mut rows4 = vec![row.clone(), row.clone(), row.clone(), row];
+    for r in rows4.iter_mut() {
+        while r.used() > 4096 {
+            r.sequences.pop();
+        }
+    }
+    suite.bench("packed_batch_from_rows_4x4096", || {
+        std::hint::black_box(PackedBatch::from_rows(&rows4, 4096));
+    });
+
+    // index-plane builders (the §3.3/§3.5 auxiliary structures)
+    let lens = [640usize, 512, 800, 1000, 900];
+    suite.bench("position_indices_4096", || {
+        std::hint::black_box(position_indices(&lens, 4096));
+    });
+    suite.bench("reverse_indices_4096", || {
+        std::hint::black_box(reverse_indices(&lens, 4096));
+    });
+
+    // corpus generation (the pipeline producer side)
+    suite.bench("synthetic_corpus_sequence", || {
+        let mut c = SyntheticCorpus::paper_like(50280, 5, 1);
+        std::hint::black_box(c.next_sequence());
+    });
+
+    // §Perf target: the packer must clear 10M tokens/s
+    assert!(
+        stream_mtps > 10.0,
+        "streaming packer below the 10 Mtok/s budget: {stream_mtps:.1}"
+    );
+
+    common::write_results(
+        "packer_micro",
+        &Json::from_pairs([
+            ("streaming_mtok_per_s", Json::from(stream_mtps)),
+            ("greedy_mtok_per_s", Json::from(greedy_mtps)),
+            ("suite", suite.to_json()),
+        ]),
+    );
+}

@@ -1,0 +1,117 @@
+//! Discussion-section reproduction (§2.1 / §5): padding rates of the
+//! batching policies on the InternLM-like length distribution, plus the
+//! greedy packer's buffer-size sweep and its sorting-time overhead (the
+//! trade the paper calls out).  Pure host logic — no artifacts needed.
+
+mod common;
+
+use std::time::Instant;
+
+use packmamba::data::LengthTrace;
+use packmamba::packing::{pad_to_max, GreedyPacker, PackingStats, Sequence, StreamingPacker};
+use packmamba::util::json::Json;
+
+fn seqs_of(trace: &LengthTrace) -> Vec<Sequence> {
+    trace
+        .lengths
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| Sequence { tokens: vec![1; l], id: i as u64 })
+        .collect()
+}
+
+fn main() {
+    let n = 50_000;
+    let trace = LengthTrace::paper_like(n, 7);
+    let seqs = seqs_of(&trace);
+    println!(
+        "trace: {n} sequences, min {} max {} mean {:.0} (paper: 57/2048/646)",
+        trace.lengths.iter().min().unwrap(),
+        trace.lengths.iter().max().unwrap(),
+        trace.mean()
+    );
+
+    let mut rows = Vec::new();
+    let mut record = |name: &str, rate: f64, paper: &str, secs: f64| {
+        println!(
+            "{:<30} {:>9.2}% {:>9} {:>11.1} Mtok/s",
+            name,
+            rate * 100.0,
+            paper,
+            trace.lengths.iter().sum::<usize>() as f64 / secs / 1e6
+        );
+        rows.push(Json::from_pairs([
+            ("policy", Json::from(name)),
+            ("padding_rate", Json::from(rate)),
+            ("paper", Json::from(paper)),
+            ("pack_secs", Json::from(secs)),
+        ]));
+    };
+
+    println!(
+        "\n{:<30} {:>10} {:>9} {:>17}",
+        "policy", "padding", "paper", "packer throughput"
+    );
+
+    // pad-to-max baseline (corpus max 2048)
+    let t0 = Instant::now();
+    let mut pad = PackingStats::default();
+    for chunk in seqs.chunks(8) {
+        pad.record(&pad_to_max(chunk, 2048));
+    }
+    record("pad-to-max (2048)", pad.padding_rate(), "66.3%", t0.elapsed().as_secs_f64());
+
+    // streaming first-fit at 4096
+    let t0 = Instant::now();
+    let mut st = PackingStats::default();
+    let mut p = StreamingPacker::new(4096, 1);
+    for s in &seqs {
+        if let Some(b) = p.push(s.clone()) {
+            st.record(&b);
+        }
+    }
+    if let Some(b) = p.flush() {
+        st.record(&b);
+    }
+    record("streaming first-fit", st.padding_rate(), "19.1%", t0.elapsed().as_secs_f64());
+
+    // greedy best-fit-decreasing, buffer sweep (the §5 sorting trade-off)
+    for buf in [16usize, 64, 256, 1024, 4096] {
+        let t0 = Instant::now();
+        let mut gs = PackingStats::default();
+        let mut g = GreedyPacker::new(4096, 1, buf);
+        for s in &seqs {
+            if let Some(b) = g.push(s.clone()) {
+                gs.record(&b);
+            }
+        }
+        while let Some(b) = g.flush() {
+            gs.record(&b);
+        }
+        record(
+            &format!("greedy BFD (buffer {buf})"),
+            gs.padding_rate(),
+            if buf == 256 { "0.41%" } else { "" },
+            t0.elapsed().as_secs_f64(),
+        );
+    }
+
+    // sanity ordering, as the paper reports
+    let rate = |name: &str| {
+        rows.iter()
+            .find(|r| r.get("policy").unwrap().as_str().unwrap().starts_with(name))
+            .and_then(|r| r.get("padding_rate").unwrap().as_f64())
+            .unwrap()
+    };
+    assert!(rate("greedy BFD (buffer 256)") < rate("streaming"));
+    assert!(rate("streaming") < rate("pad-to-max"));
+    println!("\nordering greedy < streaming < pad-to-max holds ✓");
+
+    common::write_results(
+        "padding_rates",
+        &Json::from_pairs([
+            ("figure", Json::from("discussion_padding_rates")),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
+}

@@ -1,0 +1,406 @@
+//! Configuration system: model presets, training and packing configs.
+//!
+//! Everything is JSON-backed (load/save/validate) so runs are fully
+//! described by a config file plus CLI overrides — the "real config
+//! system" a deployable trainer needs.  Model presets mirror the paper's
+//! evaluated models (§4) plus the CPU-scale configs the artifacts are
+//! built for.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Mamba model hyperparameters (must agree with `python/compile/model.py`;
+/// the artifact manifest cross-checks them at load time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_state: usize,
+    pub d_conv: usize,
+    pub expand: usize,
+}
+
+impl ModelConfig {
+    pub fn d_inner(&self) -> usize {
+        self.expand * self.d_model
+    }
+
+    pub fn dt_rank(&self) -> usize {
+        self.d_model.div_ceil(16)
+    }
+
+    /// Exact parameter count — mirrors `MambaConfig.param_count()` in
+    /// model.py and is asserted against the manifest in tests.
+    pub fn param_count(&self) -> usize {
+        let (d, di, n, r, w) = (
+            self.d_model,
+            self.d_inner(),
+            self.d_state,
+            self.dt_rank(),
+            self.d_conv,
+        );
+        let per_layer =
+            d * 2 * di + w * di + di + di * (r + 2 * n) + r * di + di + di * n + di + di * d + d;
+        self.vocab_size * d + self.n_layers * per_layer + d
+    }
+
+    /// CPU-scale preset: artifacts exist for these.
+    pub fn tiny() -> Self {
+        Self::preset("tiny", 512, 64, 2)
+    }
+
+    pub fn small() -> Self {
+        Self::preset("small", 1024, 128, 4)
+    }
+
+    /// Paper-scale presets (perfmodel only; §4 of the paper).
+    pub fn mamba_110m() -> Self {
+        Self::preset("110m", 50280, 1024, 16)
+    }
+
+    pub fn mamba_1_4b() -> Self {
+        Self::preset("1.4b", 50280, 2048, 48)
+    }
+
+    pub fn mamba_2_8b() -> Self {
+        Self::preset("2.8b", 50280, 2560, 64)
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            "110m" => Some(Self::mamba_110m()),
+            "1.4b" => Some(Self::mamba_1_4b()),
+            "2.8b" => Some(Self::mamba_2_8b()),
+            _ => None,
+        }
+    }
+
+    fn preset(name: &str, vocab: usize, d_model: usize, n_layers: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            vocab_size: vocab,
+            d_model,
+            n_layers,
+            d_state: 16,
+            d_conv: 4,
+            expand: 2,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("name", Json::from(self.name.clone())),
+            ("vocab_size", Json::from(self.vocab_size)),
+            ("d_model", Json::from(self.d_model)),
+            ("n_layers", Json::from(self.n_layers)),
+            ("d_state", Json::from(self.d_state)),
+            ("d_conv", Json::from(self.d_conv)),
+            ("expand", Json::from(self.expand)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("model config `{k}` must be a number"))
+        };
+        let cfg = Self {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("model config `name` must be a string"))?
+                .to_string(),
+            vocab_size: u("vocab_size")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            d_state: u("d_state")?,
+            d_conv: u("d_conv")?,
+            expand: u("expand")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.vocab_size > 0, "vocab_size must be positive");
+        anyhow::ensure!(self.d_model > 0, "d_model must be positive");
+        anyhow::ensure!(self.n_layers > 0, "n_layers must be positive");
+        anyhow::ensure!(self.d_conv >= 2, "d_conv must be >= 2");
+        anyhow::ensure!(self.expand >= 1, "expand must be >= 1");
+        Ok(())
+    }
+}
+
+/// Which batching scheme the trainer uses — the paper's three compared
+/// approaches (§4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// one sequence per step at (bucketed) natural length — the baseline
+    SingleSequence,
+    /// pad every sequence in a batch to the max length
+    Padding,
+    /// PackMamba: pack variable-length sequences + position indices
+    Pack,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "single" | "single-sequence" => Some(Scheme::SingleSequence),
+            "padding" | "pad" => Some(Scheme::Padding),
+            "pack" | "packed" => Some(Scheme::Pack),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::SingleSequence => "single",
+            Scheme::Padding => "padding",
+            Scheme::Pack => "pack",
+        }
+    }
+}
+
+/// Packing-policy knobs (paper §5 discussion).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackingConfig {
+    /// target packed sequence length (paper: 4096 for Mamba-1.4B)
+    pub pack_len: usize,
+    /// rows per packed batch
+    pub rows: usize,
+    /// buffered sequences for the greedy (sorted best-fit) packer;
+    /// 0 = pure streaming first-fit
+    pub greedy_buffer: usize,
+}
+
+impl PackingConfig {
+    pub fn streaming(pack_len: usize, rows: usize) -> Self {
+        Self {
+            pack_len,
+            rows,
+            greedy_buffer: 0,
+        }
+    }
+
+    pub fn greedy(pack_len: usize, rows: usize, buffer: usize) -> Self {
+        Self {
+            pack_len,
+            rows,
+            greedy_buffer: buffer,
+        }
+    }
+}
+
+/// Full training-run description.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelConfig,
+    pub scheme: Scheme,
+    pub packing: PackingConfig,
+    pub steps: usize,
+    pub seed: u64,
+    /// data-parallel worker count (paper: 8 GPUs; here: threads)
+    pub dp_workers: usize,
+    /// batch queue capacity (backpressure bound)
+    pub queue_depth: usize,
+    /// corpus length distribution (see data::LengthSampler)
+    pub min_len: usize,
+    pub max_len: usize,
+    pub mean_len: f64,
+    pub artifacts_dir: String,
+}
+
+impl TrainConfig {
+    pub fn defaults(model: ModelConfig) -> Self {
+        // CPU-scale geometry: paper's lengths (57-2048, mean 646) / 8.
+        let pack_len = match model.name.as_str() {
+            "tiny" => 256,
+            _ => 512,
+        };
+        Self {
+            model,
+            scheme: Scheme::Pack,
+            packing: PackingConfig::streaming(pack_len, 2),
+            steps: 200,
+            seed: 42,
+            dp_workers: 1,
+            queue_depth: 8,
+            min_len: 8,
+            max_len: pack_len / 2,
+            mean_len: (pack_len / 2) as f64 * 0.315, // ≈ paper's 646/2048
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("model", self.model.to_json()),
+            ("scheme", Json::from(self.scheme.name())),
+            ("pack_len", Json::from(self.packing.pack_len)),
+            ("rows", Json::from(self.packing.rows)),
+            ("greedy_buffer", Json::from(self.packing.greedy_buffer)),
+            ("steps", Json::from(self.steps)),
+            ("seed", Json::from(self.seed as usize)),
+            ("dp_workers", Json::from(self.dp_workers)),
+            ("queue_depth", Json::from(self.queue_depth)),
+            ("min_len", Json::from(self.min_len)),
+            ("max_len", Json::from(self.max_len)),
+            ("mean_len", Json::from(self.mean_len)),
+            ("artifacts_dir", Json::from(self.artifacts_dir.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let model = ModelConfig::from_json(j.req("model")?)?;
+        let mut cfg = Self::defaults(model);
+        let get_u = |k: &str| j.get(k).and_then(Json::as_usize);
+        if let Some(s) = j.get("scheme").and_then(Json::as_str) {
+            cfg.scheme = Scheme::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown scheme `{s}`"))?;
+        }
+        if let Some(v) = get_u("pack_len") {
+            cfg.packing.pack_len = v;
+        }
+        if let Some(v) = get_u("rows") {
+            cfg.packing.rows = v;
+        }
+        if let Some(v) = get_u("greedy_buffer") {
+            cfg.packing.greedy_buffer = v;
+        }
+        if let Some(v) = get_u("steps") {
+            cfg.steps = v;
+        }
+        if let Some(v) = get_u("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = get_u("dp_workers") {
+            cfg.dp_workers = v;
+        }
+        if let Some(v) = get_u("queue_depth") {
+            cfg.queue_depth = v;
+        }
+        if let Some(v) = get_u("min_len") {
+            cfg.min_len = v;
+        }
+        if let Some(v) = get_u("max_len") {
+            cfg.max_len = v;
+        }
+        if let Some(v) = j.get("mean_len").and_then(Json::as_f64) {
+            cfg.mean_len = v;
+        }
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.model.validate()?;
+        anyhow::ensure!(self.packing.pack_len > 0, "pack_len must be positive");
+        anyhow::ensure!(self.packing.rows > 0, "rows must be positive");
+        anyhow::ensure!(self.steps > 0, "steps must be positive");
+        anyhow::ensure!(self.dp_workers >= 1, "dp_workers must be >= 1");
+        anyhow::ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
+        anyhow::ensure!(
+            self.min_len <= self.max_len,
+            "min_len {} > max_len {}",
+            self.min_len,
+            self.max_len
+        );
+        anyhow::ensure!(
+            self.max_len <= self.packing.pack_len,
+            "max_len {} exceeds pack_len {}",
+            self.max_len,
+            self.packing.pack_len
+        );
+        anyhow::ensure!(
+            self.min_len as f64 <= self.mean_len && self.mean_len <= self.max_len as f64,
+            "mean_len {} outside [min_len, max_len]",
+            self.mean_len
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_paper_scale() {
+        // the paper's models should land near their nominal sizes
+        let m110 = ModelConfig::mamba_110m().param_count() as f64;
+        assert!((100e6..180e6).contains(&m110), "110m -> {m110}");
+        let m14 = ModelConfig::mamba_1_4b().param_count() as f64;
+        assert!((1.2e9..1.6e9).contains(&m14), "1.4b -> {m14}");
+        let m28 = ModelConfig::mamba_2_8b().param_count() as f64;
+        assert!((2.5e9..3.1e9).contains(&m28), "2.8b -> {m28}");
+    }
+
+    #[test]
+    fn model_json_round_trip() {
+        let m = ModelConfig::small();
+        let j = m.to_json();
+        let m2 = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn train_json_round_trip() {
+        let mut c = TrainConfig::defaults(ModelConfig::tiny());
+        c.scheme = Scheme::Padding;
+        c.steps = 7;
+        c.dp_workers = 3;
+        let j = c.to_json();
+        let c2 = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c2.scheme, Scheme::Padding);
+        assert_eq!(c2.steps, 7);
+        assert_eq!(c2.dp_workers, 3);
+        assert_eq!(c2.model, c.model);
+    }
+
+    #[test]
+    fn validation_rejects_bad_geometry() {
+        let mut c = TrainConfig::defaults(ModelConfig::tiny());
+        c.min_len = 100;
+        c.max_len = 10;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::defaults(ModelConfig::tiny());
+        c.max_len = 10 * c.packing.pack_len;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scheme_parse_names() {
+        for s in [Scheme::SingleSequence, Scheme::Padding, Scheme::Pack] {
+            assert_eq!(Scheme::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::parse("bogus"), None);
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for name in ["tiny", "small", "110m", "1.4b", "2.8b"] {
+            assert!(ModelConfig::by_name(name).is_some(), "{name}");
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+}

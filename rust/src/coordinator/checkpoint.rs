@@ -1,0 +1,180 @@
+//! Checkpointing: binary params + optimizer state with a JSON header.
+//!
+//! Format (version 1):
+//!   8 bytes  magic  b"PKMAMBA1"
+//!   4 bytes  little-endian u32: header length H
+//!   H bytes  JSON header {config, step, tensors: [{name, shape, role}]}
+//!   raw      f32 little-endian payload, tensors in header order
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::ParamSpec;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::trainer::TrainState;
+
+const MAGIC: &[u8; 8] = b"PKMAMBA1";
+
+pub fn save(
+    path: &Path,
+    config: &str,
+    specs: &[ParamSpec],
+    state: &TrainState,
+) -> Result<()> {
+    anyhow::ensure!(
+        specs.len() == state.params.len(),
+        "spec/param count mismatch"
+    );
+    let mut tensors = Vec::new();
+    for role in ["param", "adam_m", "adam_v"] {
+        for spec in specs {
+            tensors.push(Json::from_pairs([
+                ("name", Json::from(spec.name.clone())),
+                (
+                    "shape",
+                    Json::Arr(spec.shape.iter().map(|&d| Json::from(d)).collect()),
+                ),
+                ("role", Json::from(role)),
+            ]));
+        }
+    }
+    let header = Json::from_pairs([
+        ("config", Json::from(config)),
+        ("step", Json::from(state.step)),
+        ("tensors", Json::Arr(tensors)),
+    ])
+    .dump();
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for group in [&state.params, &state.m, &state.v] {
+            for t in group.iter() {
+                for &x in t.data() {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?; // atomic publish
+    Ok(())
+}
+
+pub fn load(path: &Path, specs: &[ParamSpec]) -> Result<(String, TrainState)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
+    let mut len = [0u8; 4];
+    f.read_exact(&mut len)?;
+    let mut header = vec![0u8; u32::from_le_bytes(len) as usize];
+    f.read_exact(&mut header)?;
+    let header = Json::parse(std::str::from_utf8(&header)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+    let config = header
+        .req("config")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("config must be a string"))?
+        .to_string();
+    let step = header
+        .req("step")?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("step must be a number"))?;
+    let n_tensors = header.req("tensors")?.as_arr().map(|a| a.len()).unwrap_or(0);
+    anyhow::ensure!(
+        n_tensors == 3 * specs.len(),
+        "checkpoint has {n_tensors} tensors, expected {}",
+        3 * specs.len()
+    );
+
+    let mut read_group = || -> Result<Vec<Tensor>> {
+        specs
+            .iter()
+            .map(|spec| {
+                let n = spec.element_count();
+                let mut bytes = vec![0u8; n * 4];
+                f.read_exact(&mut bytes)?;
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(Tensor::new(&spec.shape, data))
+            })
+            .collect()
+    };
+    let params = read_group()?;
+    let m = read_group()?;
+    let v = read_group()?;
+    Ok((config, TrainState { params, m, v, step }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec {
+                name: "embedding".into(),
+                shape: vec![4, 3],
+            },
+            ParamSpec {
+                name: "norm".into(),
+                shape: vec![3],
+            },
+        ]
+    }
+
+    fn state() -> TrainState {
+        TrainState {
+            params: vec![
+                Tensor::from_fn(&[4, 3], |i| i as f32),
+                Tensor::full(&[3], 1.0),
+            ],
+            m: vec![Tensor::full(&[4, 3], 0.5), Tensor::zeros(&[3])],
+            v: vec![Tensor::full(&[4, 3], 0.25), Tensor::full(&[3], 2.0)],
+            step: 17,
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        let st = state();
+        save(&path, "tiny", &specs(), &st).unwrap();
+        let (config, loaded) = load(&path, &specs()).unwrap();
+        assert_eq!(config, "tiny");
+        assert_eq!(loaded.step, 17);
+        assert_eq!(loaded.params, st.params);
+        assert_eq!(loaded.m, st.m);
+        assert_eq!(loaded.v, st.v);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC0000").unwrap();
+        assert!(load(&path, &specs()).is_err());
+    }
+
+    #[test]
+    fn rejects_spec_mismatch() {
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        save(&path, "tiny", &specs(), &state()).unwrap();
+        let wrong = vec![specs().remove(0)];
+        assert!(load(&path, &wrong).is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! Data-parallel training (the paper trains on 8 GPUs with data
+//! parallelism; §4).
+//!
+//! Worker = one thread owning its own PJRT runtime (the `xla` client is
+//! `Rc`-based, mirroring one-process-per-device), its own corpus shard and
+//! pipeline, and a full replica of model + optimizer state.  Per step:
+//!
+//!   1. every worker computes (loss, grads) with the `grads_<cfg>`
+//!      artifact on its shard's batch,
+//!   2. grads cross to the leader thread, which averages them
+//!      (host all-reduce, [`crate::tensor::allreduce_mean`]),
+//!   3. averaged grads go back; each worker applies the *identical*
+//!      `adam_apply_<cfg>` update, keeping replicas bit-identical — the
+//!      invariant `replicas_identical` tests assert.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use crate::config::{Scheme, TrainConfig};
+use crate::packing::PackedBatch;
+use crate::runtime::{HostValue, Runtime};
+use crate::tensor::{allreduce_mean, Tensor};
+use crate::Result;
+
+use super::metrics::{StepRecord, TrainMetrics};
+use super::trainer::{Pipeline, TrainState};
+
+/// Per-step message from a worker to the leader.
+struct GradMsg {
+    worker: usize,
+    loss: f32,
+    grads: Vec<Tensor>,
+    real_tokens: usize,
+    slot_tokens: usize,
+    sequences: usize,
+}
+
+/// Aggregated result of a data-parallel run.
+#[derive(Debug)]
+pub struct DpRunResult {
+    pub metrics: TrainMetrics,
+    /// final parameters of worker 0 (replicas are identical; asserted)
+    pub final_params: Vec<Tensor>,
+    pub replicas_identical: bool,
+    pub steps: usize,
+}
+
+pub struct DataParallelTrainer {
+    cfg: TrainConfig,
+    artifacts_dir: PathBuf,
+}
+
+impl DataParallelTrainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.scheme == Scheme::Pack,
+            "data-parallel path is wired for the pack scheme (the paper's)"
+        );
+        let artifacts_dir = PathBuf::from(&cfg.artifacts_dir);
+        Ok(Self { cfg, artifacts_dir })
+    }
+
+    /// Run `cfg.steps` synchronous data-parallel steps on
+    /// `cfg.dp_workers` worker threads.
+    pub fn run(&self) -> Result<DpRunResult> {
+        let n = self.cfg.dp_workers;
+        let steps = self.cfg.steps;
+        // leader <- workers: gradients
+        let (grad_tx, grad_rx) = mpsc::channel::<GradMsg>();
+        // workers <- leader: averaged gradients (one channel per worker)
+        let mut avg_txs = Vec::with_capacity(n);
+        let mut avg_rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<Vec<Tensor>>();
+            avg_txs.push(tx);
+            avg_rxs.push(Some(rx));
+        }
+        // workers -> leader: final params for the identity check
+        let (done_tx, done_rx) = mpsc::channel::<(usize, Vec<Tensor>)>();
+
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let cfg = self.cfg.clone();
+            let dir = self.artifacts_dir.clone();
+            let grad_tx = grad_tx.clone();
+            let avg_rx = avg_rxs[w].take().unwrap();
+            let done_tx = done_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dp-worker-{w}"))
+                    .spawn(move || -> Result<()> {
+                        worker_loop(w, n, steps, &cfg, &dir, grad_tx, avg_rx, done_tx)
+                    })
+                    .expect("spawn dp worker"),
+            );
+        }
+        drop(grad_tx);
+        drop(done_tx);
+
+        // ----- leader: synchronous all-reduce per step -----
+        let mut metrics = TrainMetrics::new();
+        for step in 0..steps {
+            let t0 = std::time::Instant::now();
+            let mut msgs: Vec<GradMsg> = Vec::with_capacity(n);
+            for _ in 0..n {
+                msgs.push(
+                    grad_rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("worker died at step {step}"))?,
+                );
+            }
+            msgs.sort_by_key(|m| m.worker);
+            let mut grad_sets: Vec<Vec<Tensor>> =
+                msgs.iter().map(|m| m.grads.clone()).collect();
+            allreduce_mean(&mut grad_sets);
+            let avg = grad_sets.swap_remove(0);
+            for tx in &avg_txs {
+                tx.send(avg.clone())
+                    .map_err(|_| anyhow::anyhow!("worker hung up"))?;
+            }
+            let loss = msgs.iter().map(|m| m.loss).sum::<f32>() / n as f32;
+            metrics.record(StepRecord {
+                step,
+                loss,
+                secs: t0.elapsed().as_secs_f64(),
+                real_tokens: msgs.iter().map(|m| m.real_tokens).sum(),
+                slot_tokens: msgs.iter().map(|m| m.slot_tokens).sum(),
+                sequences: msgs.iter().map(|m| m.sequences).sum(),
+            });
+            if step % 20 == 0 {
+                log::info!("dp step {step}/{steps} mean-loss {loss:.4}");
+            }
+        }
+
+        // ----- final replica-identity check -----
+        let mut finals: Vec<(usize, Vec<Tensor>)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            finals.push(done_rx.recv().map_err(|_| anyhow::anyhow!("worker died at end"))?);
+        }
+        finals.sort_by_key(|(w, _)| *w);
+        let identical = finals.windows(2).all(|pair| {
+            pair[0]
+                .1
+                .iter()
+                .zip(&pair[1].1)
+                .all(|(a, b)| a.data() == b.data())
+        });
+        for h in handles {
+            h.join().expect("dp worker panicked")?;
+        }
+        let final_params = finals.swap_remove(0).1;
+        Ok(DpRunResult {
+            metrics,
+            final_params,
+            replicas_identical: identical,
+            steps,
+        })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    w: usize,
+    num_shards: usize,
+    steps: usize,
+    cfg: &TrainConfig,
+    dir: &std::path::Path,
+    grad_tx: mpsc::Sender<GradMsg>,
+    avg_rx: mpsc::Receiver<Vec<Tensor>>,
+    done_tx: mpsc::Sender<(usize, Vec<Tensor>)>,
+) -> Result<()> {
+    let runtime = Runtime::load(dir)?;
+    let config = cfg.model.name.as_str();
+    let manifest = runtime.manifest();
+    let grads_spec = manifest
+        .by_kind("grads")
+        .into_iter()
+        .find(|a| a.meta_str("config") == Some(config))
+        .ok_or_else(|| anyhow::anyhow!("no grads artifact for {config}"))?
+        .name
+        .clone();
+    let (rows, plen) = {
+        let a = manifest.artifact(&grads_spec)?;
+        (
+            a.meta_usize("batch").unwrap_or(cfg.packing.rows),
+            a.meta_usize("seq_len").unwrap_or(cfg.packing.pack_len),
+        )
+    };
+    let grads_exe = runtime.executable(&grads_spec)?;
+    let apply_exe = runtime.executable(&format!("adam_apply_{config}"))?;
+
+    // identical init on every worker (same seed inside the artifact)
+    let mut state = TrainState::init(&runtime, config)?;
+    let np = state.params.len();
+
+    let mut pcfg = cfg.clone();
+    pcfg.packing.rows = rows;
+    pcfg.packing.pack_len = plen;
+    pcfg.max_len = pcfg.max_len.min(plen);
+    let pipeline = Pipeline::spawn(&pcfg, Vec::new(), (rows, plen), w, num_shards);
+
+    for _step in 0..steps {
+        let batch: PackedBatch = pipeline
+            .next_batch()
+            .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
+        // grads(params, tokens, targets, pos, mask) -> (loss, grads...)
+        let mut args: Vec<HostValue> = Vec::with_capacity(np + 4);
+        for p in &state.params {
+            args.push(HostValue::F32(p.clone()));
+        }
+        args.push(HostValue::I32(batch.tokens.clone()));
+        args.push(HostValue::I32(batch.targets.clone()));
+        args.push(HostValue::I32(batch.position_indices.clone()));
+        args.push(HostValue::F32(batch.loss_mask.clone()));
+        let outs = grads_exe.run(&args)?;
+        anyhow::ensure!(outs.len() == np + 1, "grads output arity");
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().as_f32()?.data()[0];
+        let grads: Vec<Tensor> = it.map(HostValue::into_f32).collect::<Result<Vec<_>>>()?;
+        grad_tx
+            .send(GradMsg {
+                worker: w,
+                loss,
+                grads,
+                real_tokens: batch.real_tokens(),
+                slot_tokens: batch.rows() * batch.pack_len(),
+                sequences: batch.row_lengths.iter().map(Vec::len).sum(),
+            })
+            .map_err(|_| anyhow::anyhow!("leader hung up"))?;
+        let avg = avg_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("leader hung up (avg)"))?;
+
+        // apply the identical update: (p, m, v, step, grads) -> (p', m', v')
+        let mut args: Vec<HostValue> = Vec::with_capacity(3 * np + 1 + np);
+        for p in &state.params {
+            args.push(HostValue::F32(p.clone()));
+        }
+        for m in &state.m {
+            args.push(HostValue::F32(m.clone()));
+        }
+        for v in &state.v {
+            args.push(HostValue::F32(v.clone()));
+        }
+        args.push(HostValue::scalar(state.step as f32 + 1.0));
+        for g in &avg {
+            args.push(HostValue::F32(g.clone()));
+        }
+        let outs = apply_exe.run(&args)?;
+        anyhow::ensure!(outs.len() == 3 * np, "adam_apply output arity");
+        let mut it = outs.into_iter();
+        for p in state.params.iter_mut() {
+            *p = it.next().unwrap().into_f32()?;
+        }
+        for m in state.m.iter_mut() {
+            *m = it.next().unwrap().into_f32()?;
+        }
+        for v in state.v.iter_mut() {
+            *v = it.next().unwrap().into_f32()?;
+        }
+        state.step += 1;
+    }
+    done_tx
+        .send((w, state.params))
+        .map_err(|_| anyhow::anyhow!("leader hung up (done)"))?;
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! Training metrics: the paper's measurement protocol.
+//!
+//! §4: "we compute the average throughput of a stable sequence of 100
+//! consecutive steps" — [`TrainMetrics::stable_throughput`] implements
+//! exactly that (drop warm-up, average a consecutive window).
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Streaming;
+
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    /// wall seconds for the whole step (stage + execute + fetch + host)
+    pub secs: f64,
+    /// real (non-padding) tokens processed
+    pub real_tokens: usize,
+    /// device slots processed (rows × seq_len), incl. padding
+    pub slot_tokens: usize,
+    /// sequences finished this step
+    pub sequences: usize,
+}
+
+#[derive(Debug)]
+pub struct TrainMetrics {
+    pub records: Vec<StepRecord>,
+    step_times: Streaming,
+    started: Instant,
+}
+
+impl Default for TrainMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrainMetrics {
+    pub fn new() -> Self {
+        Self {
+            records: Vec::new(),
+            step_times: Streaming::new(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record(&mut self, rec: StepRecord) {
+        self.step_times.push(rec.secs);
+        self.records.push(rec);
+    }
+
+    pub fn steps(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the first/last `k` steps (loss-decrease assertions).
+    pub fn mean_loss_head(&self, k: usize) -> f32 {
+        let k = k.min(self.records.len()).max(1);
+        self.records[..k].iter().map(|r| r.loss).sum::<f32>() / k as f32
+    }
+
+    pub fn mean_loss_tail(&self, k: usize) -> f32 {
+        let n = self.records.len();
+        let k = k.min(n).max(1);
+        self.records[n - k..].iter().map(|r| r.loss).sum::<f32>() / k as f32
+    }
+
+    /// Real tokens per second over a stable window of `window` consecutive
+    /// steps after skipping `warmup` steps (paper protocol: warm-up then a
+    /// 100-step stable window).
+    pub fn stable_throughput(&self, warmup: usize, window: usize) -> Option<f64> {
+        let recs = &self.records;
+        if recs.len() <= warmup {
+            return None;
+        }
+        let end = recs.len().min(warmup + window.max(1));
+        let win = &recs[warmup..end];
+        let secs: f64 = win.iter().map(|r| r.secs).sum();
+        let toks: usize = win.iter().map(|r| r.real_tokens).sum();
+        if secs > 0.0 {
+            Some(toks as f64 / secs)
+        } else {
+            None
+        }
+    }
+
+    /// Overall padding rate across recorded steps.
+    pub fn padding_rate(&self) -> f64 {
+        let slots: usize = self.records.iter().map(|r| r.slot_tokens).sum();
+        let real: usize = self.records.iter().map(|r| r.real_tokens).sum();
+        if slots == 0 {
+            0.0
+        } else {
+            1.0 - real as f64 / slots as f64
+        }
+    }
+
+    pub fn total_real_tokens(&self) -> usize {
+        self.records.iter().map(|r| r.real_tokens).sum()
+    }
+
+    pub fn total_sequences(&self) -> usize {
+        self.records.iter().map(|r| r.sequences).sum()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn mean_step_secs(&self) -> f64 {
+        self.step_times.mean()
+    }
+
+    /// Loss curve as (step, loss) pairs, subsampled to at most `max_points`.
+    pub fn loss_curve(&self, max_points: usize) -> Vec<(usize, f32)> {
+        let n = self.records.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let stride = n.div_ceil(max_points.max(1)).max(1);
+        self.records
+            .iter()
+            .step_by(stride)
+            .map(|r| (r.step, r.loss))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("steps", Json::from(self.steps())),
+            (
+                "stable_tokens_per_sec",
+                self.stable_throughput(5, 100).map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("padding_rate", Json::from(self.padding_rate())),
+            ("total_real_tokens", Json::from(self.total_real_tokens())),
+            ("total_sequences", Json::from(self.total_sequences())),
+            ("mean_step_secs", Json::from(self.mean_step_secs())),
+            (
+                "loss_curve",
+                Json::Arr(
+                    self.loss_curve(200)
+                        .into_iter()
+                        .map(|(s, l)| {
+                            Json::Arr(vec![Json::from(s), Json::from(l as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32, secs: f64, real: usize, slots: usize) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            secs,
+            real_tokens: real,
+            slot_tokens: slots,
+            sequences: 1,
+        }
+    }
+
+    #[test]
+    fn stable_throughput_skips_warmup() {
+        let mut m = TrainMetrics::new();
+        // slow warm-up step, then fast steady state
+        m.record(rec(0, 5.0, 100.0, 1000, 1000));
+        for i in 1..21 {
+            m.record(rec(i, 4.0, 0.1, 1000, 1000));
+        }
+        let thr = m.stable_throughput(1, 100).unwrap();
+        assert!((thr - 10_000.0).abs() < 1.0, "thr={thr}");
+        // including warm-up would be much slower
+        let with_warm = m.stable_throughput(0, 100).unwrap();
+        assert!(with_warm < 250.0, "with_warm={with_warm}");
+    }
+
+    #[test]
+    fn padding_rate_accumulates() {
+        let mut m = TrainMetrics::new();
+        m.record(rec(0, 1.0, 0.1, 30, 100));
+        m.record(rec(1, 1.0, 0.1, 70, 100));
+        assert!((m.padding_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_head_tail() {
+        let mut m = TrainMetrics::new();
+        for i in 0..10 {
+            m.record(rec(i, 10.0 - i as f32, 0.1, 10, 10));
+        }
+        assert!(m.mean_loss_head(3) > m.mean_loss_tail(3));
+    }
+
+    #[test]
+    fn loss_curve_subsamples() {
+        let mut m = TrainMetrics::new();
+        for i in 0..1000 {
+            m.record(rec(i, 1.0, 0.01, 10, 10));
+        }
+        let curve = m.loss_curve(100);
+        assert!(curve.len() <= 100 && curve.len() >= 50);
+        assert_eq!(curve[0].0, 0);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut m = TrainMetrics::new();
+        m.record(rec(0, 2.0, 0.1, 10, 20));
+        let j = m.to_json();
+        assert_eq!(j.get("steps").unwrap().as_usize(), Some(1));
+        assert!(j.get("loss_curve").unwrap().as_arr().is_some());
+    }
+}

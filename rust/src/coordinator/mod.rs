@@ -1,0 +1,22 @@
+//! The training coordinator (L3): everything between the data pipeline
+//! and the PJRT runtime.
+//!
+//! * [`trainer`] — single-process training loop: pipeline thread →
+//!   bounded queue → fused train-step artifact; supports all three
+//!   batching schemes of the paper's evaluation.
+//! * [`dataparallel`] — multi-worker orchestration: per-worker gradient
+//!   computation, host-side all-reduce, replicated optimizer step
+//!   (the paper trains with 8-GPU data parallel; workers here are
+//!   threads, each owning its own PJRT runtime).
+//! * [`metrics`] — step timing, token accounting, loss curves, padding
+//!   rates; JSON export for EXPERIMENTS.md.
+//! * [`checkpoint`] — binary save/load of params + optimizer state.
+
+pub mod checkpoint;
+pub mod dataparallel;
+pub mod metrics;
+pub mod trainer;
+
+pub use dataparallel::DataParallelTrainer;
+pub use metrics::TrainMetrics;
+pub use trainer::{TrainState, Trainer};

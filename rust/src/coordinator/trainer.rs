@@ -1,0 +1,363 @@
+//! Single-process trainer: data pipeline thread → bounded queue → fused
+//! train-step artifact.
+//!
+//! One [`Trainer`] drives one model replica.  The batching scheme decides
+//! how the pipeline turns the document stream into device batches:
+//!
+//! * `Pack`      — StreamingPacker/GreedyPacker → (rows, pack_len) batches
+//!                 with position indices (the PackMamba scheme),
+//! * `Padding`   — groups of `rows` sequences padded to the artifact's
+//!                 max length,
+//! * `SingleSequence` — one sequence per step, bucketed to the smallest
+//!                 compiled length that fits (the paper's baseline).
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::config::{Scheme, TrainConfig};
+use crate::data::{LengthSampler, SyntheticCorpus};
+use crate::packing::{
+    pad_to_max, single_sequence_batch, GreedyPacker, PackedBatch, Sequence, StreamingPacker,
+};
+use crate::runtime::{Executable, HostValue, Runtime};
+use crate::tensor::Tensor;
+use crate::util::threadpool::BoundedQueue;
+use crate::Result;
+
+use super::metrics::{StepRecord, TrainMetrics};
+
+/// Model + optimizer state as flat host values (manifest parameter order).
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: usize,
+}
+
+impl TrainState {
+    /// Initialize by running the `init_<cfg>` artifact (XLA owns the RNG;
+    /// rust never re-implements the init numerics).
+    pub fn init(runtime: &Rc<Runtime>, config: &str) -> Result<TrainState> {
+        let init = runtime.executable(&format!("init_{config}"))?;
+        let outs = init.run(&[])?;
+        let params: Vec<Tensor> = outs
+            .into_iter()
+            .map(HostValue::into_f32)
+            .collect::<Result<Vec<_>>>()?;
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        Ok(TrainState {
+            m: zeros.clone(),
+            v: zeros,
+            params,
+            step: 0,
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(Tensor::len).sum()
+    }
+}
+
+/// Batch producer: runs the corpus + batching scheme on its own thread.
+pub struct Pipeline {
+    queue: BoundedQueue<PackedBatch>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Pipeline {
+    /// Spawn a producer for `scheme`.  `buckets` is the single-sequence
+    /// bucket list from the manifest; `pad_geom` = (rows, max_len) for the
+    /// padding artifact.
+    pub fn spawn(
+        cfg: &TrainConfig,
+        buckets: Vec<usize>,
+        pad_geom: (usize, usize),
+        shard: usize,
+        num_shards: usize,
+    ) -> Pipeline {
+        let queue = BoundedQueue::new(cfg.queue_depth);
+        let q = queue.clone();
+        let scheme = cfg.scheme;
+        let packing = cfg.packing.clone();
+        let sampler = LengthSampler::calibrated(cfg.min_len, cfg.max_len, cfg.mean_len);
+        let vocab = cfg.model.vocab_size;
+        let seed = cfg.seed;
+        let handle = std::thread::Builder::new()
+            .name(format!("pipeline-{shard}"))
+            .spawn(move || {
+                let mut corpus = SyntheticCorpus::new(vocab, sampler, seed, shard, num_shards);
+                match scheme {
+                    Scheme::Pack => {
+                        if packing.greedy_buffer > 0 {
+                            let mut p = GreedyPacker::new(
+                                packing.pack_len,
+                                packing.rows,
+                                packing.greedy_buffer,
+                            );
+                            loop {
+                                if let Some(b) = p.push(corpus.next_sequence()) {
+                                    if q.push(b).is_err() {
+                                        return;
+                                    }
+                                }
+                            }
+                        } else {
+                            let mut p = StreamingPacker::new(packing.pack_len, packing.rows);
+                            loop {
+                                if let Some(b) = p.push(corpus.next_sequence()) {
+                                    if q.push(b).is_err() {
+                                        return;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Scheme::Padding => {
+                        let (rows, max_len) = pad_geom;
+                        loop {
+                            let seqs: Vec<Sequence> = (0..rows)
+                                .map(|_| {
+                                    let mut s = corpus.next_sequence();
+                                    s.tokens.truncate(max_len);
+                                    s
+                                })
+                                .collect();
+                            if q.push(pad_to_max(&seqs, max_len)).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                    Scheme::SingleSequence => loop {
+                        let s = corpus.next_sequence();
+                        match single_sequence_batch(&s, &buckets) {
+                            Some(b) => {
+                                if q.push(b).is_err() {
+                                    return;
+                                }
+                            }
+                            None => continue, // longer than every bucket: skip
+                        }
+                    },
+                }
+            })
+            .expect("spawn pipeline");
+        Pipeline {
+            queue,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn next_batch(&self) -> Option<PackedBatch> {
+        self.queue.pop()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Single-replica trainer.
+pub struct Trainer {
+    runtime: Rc<Runtime>,
+    cfg: TrainConfig,
+    state: TrainState,
+    pipeline: Pipeline,
+    /// per batch geometry (b, l) → compiled step executable
+    steps: std::collections::HashMap<(usize, usize), Rc<Executable>>,
+    pub metrics: TrainMetrics,
+}
+
+impl Trainer {
+    pub fn new(runtime: Rc<Runtime>, cfg: TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let config_name = cfg.model.name.clone();
+        let config = config_name.as_str();
+        let manifest = runtime.manifest();
+        // check manifest agrees with the local config
+        let mcfg = manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow::anyhow!("config `{config}` has no artifacts"))?;
+        anyhow::ensure!(
+            mcfg.get("param_count").and_then(crate::util::json::Json::as_usize)
+                == Some(cfg.model.param_count()),
+            "param_count mismatch between manifest and config::ModelConfig"
+        );
+
+        // resolve artifacts for the scheme
+        let mut steps = std::collections::HashMap::new();
+        let buckets = manifest.single_buckets(config);
+        let mut pad_geom = (cfg.packing.rows, cfg.packing.pack_len);
+        match cfg.scheme {
+            Scheme::Pack => {
+                let spec = manifest.train_step(config, "pack")?;
+                let geom = (
+                    spec.meta_usize("batch").unwrap_or(0),
+                    spec.meta_usize("seq_len").unwrap_or(0),
+                );
+                steps.insert(geom, runtime.executable(&spec.name.clone())?);
+            }
+            Scheme::Padding => {
+                let spec = manifest.train_step(config, "padding")?;
+                let geom = (
+                    spec.meta_usize("batch").unwrap_or(0),
+                    spec.meta_usize("seq_len").unwrap_or(0),
+                );
+                pad_geom = geom;
+                steps.insert(geom, runtime.executable(&spec.name.clone())?);
+            }
+            Scheme::SingleSequence => {
+                for spec in manifest.by_kind("train_step") {
+                    if spec.meta_str("config") == Some(config)
+                        && spec.meta_str("scheme") == Some("single")
+                    {
+                        let geom = (
+                            spec.meta_usize("batch").unwrap_or(0),
+                            spec.meta_usize("seq_len").unwrap_or(0),
+                        );
+                        steps.insert(geom, runtime.executable(&spec.name)?);
+                    }
+                }
+                anyhow::ensure!(!steps.is_empty(), "no single-sequence artifacts");
+            }
+        }
+
+        // pipeline geometry must match the compiled artifacts
+        let mut cfg = cfg;
+        match cfg.scheme {
+            Scheme::Pack => {
+                let (&(b, l), _) = steps.iter().next().unwrap();
+                cfg.packing.rows = b;
+                cfg.packing.pack_len = l;
+                cfg.max_len = cfg.max_len.min(l);
+            }
+            Scheme::Padding => {
+                cfg.max_len = cfg.max_len.min(pad_geom.1);
+            }
+            Scheme::SingleSequence => {
+                let max_bucket = *buckets.last().unwrap();
+                cfg.max_len = cfg.max_len.min(max_bucket);
+            }
+        }
+
+        let state = TrainState::init(&runtime, config)?;
+        let pipeline = Pipeline::spawn(&cfg, buckets, pad_geom, 0, 1);
+        Ok(Trainer {
+            runtime,
+            cfg,
+            state,
+            pipeline,
+            steps,
+            metrics: TrainMetrics::new(),
+        })
+    }
+
+    pub fn state(&self) -> &TrainState {
+        &self.state
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.runtime
+    }
+
+    /// Run one training step; returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let t0 = Instant::now();
+        let batch = self
+            .pipeline
+            .next_batch()
+            .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
+        let geom = (batch.rows(), batch.pack_len());
+        let exe = self
+            .steps
+            .get(&geom)
+            .ok_or_else(|| anyhow::anyhow!("no step executable for geometry {geom:?}"))?
+            .clone();
+        let loss = self.run_step(&exe, &batch)?;
+        self.metrics.record(StepRecord {
+            step: self.state.step,
+            loss,
+            secs: t0.elapsed().as_secs_f64(),
+            real_tokens: batch.real_tokens(),
+            slot_tokens: batch.rows() * batch.pack_len(),
+            sequences: batch.row_lengths.iter().map(Vec::len).sum(),
+        });
+        Ok(loss)
+    }
+
+    /// Execute the fused train step on `batch` and update host state.
+    fn run_step(&mut self, exe: &Executable, batch: &PackedBatch) -> Result<f32> {
+        let np = self.state.params.len();
+        let mut args: Vec<HostValue> = Vec::with_capacity(3 * np + 5);
+        for p in &self.state.params {
+            args.push(HostValue::F32(p.clone()));
+        }
+        for m in &self.state.m {
+            args.push(HostValue::F32(m.clone()));
+        }
+        for v in &self.state.v {
+            args.push(HostValue::F32(v.clone()));
+        }
+        args.push(HostValue::scalar(self.state.step as f32 + 1.0));
+        args.push(HostValue::I32(batch.tokens.clone()));
+        args.push(HostValue::I32(batch.targets.clone()));
+        args.push(HostValue::I32(batch.position_indices.clone()));
+        args.push(HostValue::F32(batch.loss_mask.clone()));
+
+        let mut outs = exe.run(&args)?;
+        anyhow::ensure!(outs.len() == 3 * np + 1, "train_step output arity");
+        let loss = outs
+            .pop()
+            .unwrap()
+            .as_f32()?
+            .data()
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("empty loss"))?;
+        let mut outs = outs.into_iter();
+        for p in self.state.params.iter_mut() {
+            *p = outs.next().unwrap().into_f32()?;
+        }
+        for m in self.state.m.iter_mut() {
+            *m = outs.next().unwrap().into_f32()?;
+        }
+        for v in self.state.v.iter_mut() {
+            *v = outs.next().unwrap().into_f32()?;
+        }
+        self.state.step += 1;
+        anyhow::ensure!(loss.is_finite(), "non-finite loss at step {}", self.state.step);
+        Ok(loss)
+    }
+
+    /// Train for the configured number of steps.
+    pub fn train(&mut self) -> Result<()> {
+        for i in 0..self.cfg.steps {
+            let loss = self.step()?;
+            if i % 20 == 0 || i + 1 == self.cfg.steps {
+                log::info!(
+                    "step {:>5}/{} loss {:.4} ({} real tok, queue {})",
+                    i + 1,
+                    self.cfg.steps,
+                    loss,
+                    self.metrics.records.last().map(|r| r.real_tokens).unwrap_or(0),
+                    self.pipeline.queue_len(),
+                );
+            }
+        }
+        Ok(())
+    }
+}

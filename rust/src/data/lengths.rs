@@ -1,0 +1,138 @@
+//! Sequence-length distribution calibrated to the paper's corpus stats.
+//!
+//! The paper reports min 57 / max 2048 / mean 646 on InternLM data (§4).
+//! Natural-text document lengths are well-approximated by a log-normal;
+//! we use a log-normal truncated to [min, max] and *calibrate* its μ by
+//! bisection so the truncated mean matches the requested mean (σ fixed at
+//! 0.85, a typical text-corpus spread).  Padding rates — the quantity all
+//! the packing results depend on — are then governed by the same
+//! mean/range geometry as the paper's corpus.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct LengthSampler {
+    min: usize,
+    max: usize,
+    mu: f64,
+    sigma: f64,
+}
+
+impl LengthSampler {
+    /// Fixed-parameter constructor (tests / traces).
+    pub fn new(min: usize, max: usize, mu: f64, sigma: f64) -> Self {
+        assert!(min >= 1 && min <= max);
+        Self { min, max, mu, sigma }
+    }
+
+    /// Calibrate μ so the *truncated* mean hits `target_mean`.
+    pub fn calibrated(min: usize, max: usize, target_mean: f64) -> Self {
+        let min = min.max(1);
+        assert!(min <= max, "min {min} > max {max}");
+        let target = target_mean.clamp(min as f64, max as f64);
+        let sigma = 0.85;
+        // bisect μ: truncated mean is monotone in μ
+        let (mut lo, mut hi) = ((min as f64).ln() - 4.0, (max as f64).ln() + 4.0);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if Self::truncated_mean(mid, sigma, min, max) < target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Self::new(min, max, 0.5 * (lo + hi), sigma)
+    }
+
+    /// Mean of clamp(LogNormal(mu, sigma), min, max), by numeric quadrature
+    /// over the standard-normal density (256-point midpoint rule on ±6σ).
+    fn truncated_mean(mu: f64, sigma: f64, min: usize, max: usize) -> f64 {
+        let n = 256;
+        let (a, b) = (-6.0f64, 6.0f64);
+        let h = (b - a) / n as f64;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let z = a + (i as f64 + 0.5) * h;
+            let w = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+            let x = (mu + sigma * z).exp().clamp(min as f64, max as f64);
+            acc += w * x * h;
+        }
+        acc
+    }
+
+    pub fn min_len(&self) -> usize {
+        self.min
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.max
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let x = rng.next_log_normal(self.mu, self.sigma);
+        (x.round() as usize).clamp(self.min, self.max)
+    }
+
+    /// The paper's corpus at scale 1.
+    pub fn paper() -> Self {
+        Self::calibrated(
+            super::PAPER_MIN_LEN,
+            super::PAPER_MAX_LEN,
+            super::PAPER_MEAN_LEN,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mean(s: &LengthSampler, n: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::new(seed, 0);
+        (0..n).map(|_| s.sample(&mut rng)).sum::<usize>() as f64 / n as f64
+    }
+
+    #[test]
+    fn paper_calibration_hits_mean() {
+        let s = LengthSampler::paper();
+        let mean = sample_mean(&s, 50_000, 1);
+        assert!(
+            (mean - super::super::PAPER_MEAN_LEN).abs() < 25.0,
+            "mean={mean}, want ≈646"
+        );
+    }
+
+    #[test]
+    fn samples_respect_bounds() {
+        let s = LengthSampler::calibrated(57, 2048, 646.0);
+        let mut rng = Pcg64::new(2, 0);
+        for _ in 0..10_000 {
+            let x = s.sample(&mut rng);
+            assert!((57..=2048).contains(&x));
+        }
+    }
+
+    #[test]
+    fn calibration_monotone_in_target() {
+        let lo = LengthSampler::calibrated(8, 256, 40.0);
+        let hi = LengthSampler::calibrated(8, 256, 120.0);
+        assert!(sample_mean(&lo, 20_000, 3) < sample_mean(&hi, 20_000, 3));
+    }
+
+    #[test]
+    fn degenerate_range_is_constant() {
+        let s = LengthSampler::calibrated(16, 16, 16.0);
+        let mut rng = Pcg64::new(4, 0);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&mut rng), 16);
+        }
+    }
+
+    #[test]
+    fn scaled_down_mean_tracks() {
+        // the CPU-scale corpus: paper/8 → mean ≈ 81
+        let s = LengthSampler::calibrated(7, 256, 80.75);
+        let mean = sample_mean(&s, 50_000, 5);
+        assert!((mean - 80.75).abs() < 4.0, "mean={mean}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Length-trace record/replay.
+//!
+//! Benches and tests replay a fixed stream of sequence lengths (an
+//! "InternLM-like trace") so padding-rate numbers are exactly
+//! reproducible; a trace recorded from a real corpus could be dropped in
+//! the same way.  Format: JSON `{"lengths": [..], "note": "..."}`.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+use super::LengthSampler;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct LengthTrace {
+    pub lengths: Vec<usize>,
+    pub note: String,
+}
+
+impl LengthTrace {
+    /// Record `n` draws from a sampler.
+    pub fn record(sampler: &LengthSampler, n: usize, seed: u64, note: &str) -> Self {
+        let mut rng = Pcg64::new(seed, 0x7ACE);
+        Self {
+            lengths: (0..n).map(|_| sampler.sample(&mut rng)).collect(),
+            note: note.to_string(),
+        }
+    }
+
+    /// The canonical evaluation trace: paper-distribution lengths.
+    pub fn paper_like(n: usize, seed: u64) -> Self {
+        Self::record(
+            &LengthSampler::paper(),
+            n,
+            seed,
+            "synthetic InternLM-like trace (57-2048, mean 646)",
+        )
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.lengths.is_empty() {
+            return 0.0;
+        }
+        self.lengths.iter().sum::<usize>() as f64 / self.lengths.len() as f64
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let j = Json::from_pairs([
+            (
+                "lengths",
+                Json::Arr(self.lengths.iter().map(|&l| Json::from(l)).collect()),
+            ),
+            ("note", Json::from(self.note.clone())),
+        ]);
+        std::fs::write(path, j.dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = Json::parse_file(path)?;
+        let lengths = j
+            .req("lengths")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("trace `lengths` must be an array"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("trace length must be a number"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            lengths,
+            note: j
+                .get("note")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_is_deterministic() {
+        let s = LengthSampler::calibrated(10, 100, 40.0);
+        assert_eq!(LengthTrace::record(&s, 50, 1, "x"), LengthTrace::record(&s, 50, 1, "x"));
+        assert_ne!(
+            LengthTrace::record(&s, 50, 1, "x").lengths,
+            LengthTrace::record(&s, 50, 2, "x").lengths
+        );
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let t = LengthTrace::paper_like(100, 3);
+        let dir = std::env::temp_dir().join("packmamba_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        t.save(&path).unwrap();
+        let t2 = LengthTrace::load(&path).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn paper_like_stats() {
+        let t = LengthTrace::paper_like(20_000, 9);
+        assert!((t.mean() - 646.0).abs() < 40.0, "mean={}", t.mean());
+        assert!(t.lengths.iter().all(|&l| (57..=2048).contains(&l)));
+    }
+}

@@ -1,0 +1,42 @@
+//! # PackMamba
+//!
+//! A reproduction of *PackMamba: Efficient Processing of Variable-Length
+//! Sequences in Mamba Training* (Xu et al., 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (build time)** — the Mamba model and its packed sequence-wise
+//!   operators (causal conv1d + selective scan) live in `python/compile/`,
+//!   AOT-lowered to HLO text artifacts.
+//! * **L3 (this crate)** — the training coordinator: data pipeline,
+//!   the packing library (the paper's host-side contribution), the PJRT
+//!   runtime that executes the artifacts, data-parallel orchestration,
+//!   metrics, and the benchmark harness that regenerates every figure of
+//!   the paper's evaluation.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! `packmamba` binary is self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | offline substrates: RNG, JSON, CLI parsing, stats, bench + property-test harnesses, thread pool, logging |
+//! | [`tensor`] | host tensors (f32 / software bf16) used by tests, checkpoints and host-side all-reduce |
+//! | [`config`] | model / training / packing configuration, JSON-backed |
+//! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
+//! | [`packing`] | pack()/unpack(), position indices, the packers for all three batching schemes |
+//! | [`runtime`] | PJRT client wrapper: artifact registry, executors, literal staging |
+//! | [`coordinator`] | trainer, schemes, data-parallel leader, metrics, checkpoints |
+//! | [`perfmodel`] | analytic A100 model reproducing the paper-scale figure shapes |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod packing;
+pub mod perfmodel;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed, like the rest of the stack).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,293 @@
+//! `packmamba` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train              train a model with a chosen batching scheme
+//!   dp-train           synchronous data-parallel training (N workers)
+//!   pack-stats         padding-rate comparison of the batching schemes
+//!   inspect-artifacts  list AOT artifacts and their signatures
+//!   model-perf         analytic A100 projections (Fig 5 summary)
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::{checkpoint, DataParallelTrainer, Trainer};
+use packmamba::data::LengthTrace;
+use packmamba::packing::{pad_to_max, GreedyPacker, PackingStats, Sequence, StreamingPacker};
+use packmamba::perfmodel::{fig5_table, GpuSpec};
+use packmamba::runtime::Runtime;
+use packmamba::util::argparse::{App, Command, Matches};
+use packmamba::util::logging;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app = App::new("packmamba", "PackMamba training coordinator")
+        .command(
+            Command::new("train", "train with a batching scheme")
+                .flag("config", "c", "training config json (overrides flags)", None)
+                .flag("model", "m", "model preset (tiny|small)", Some("tiny"))
+                .flag("scheme", "s", "single|padding|pack", Some("pack"))
+                .flag("steps", "n", "training steps", Some("100"))
+                .flag("seed", "", "corpus seed", Some("42"))
+                .flag("greedy-buffer", "g", "greedy packer buffer (0=streaming)", Some("0"))
+                .flag("artifacts", "a", "artifacts directory", Some("artifacts"))
+                .flag("save", "o", "checkpoint output path", None)
+                .flag("metrics-out", "", "write metrics json here", None),
+        )
+        .command(
+            Command::new("dp-train", "data-parallel training (pack scheme)")
+                .flag("model", "m", "model preset (tiny|small)", Some("tiny"))
+                .flag("steps", "n", "training steps", Some("50"))
+                .flag("workers", "w", "data-parallel workers", Some("2"))
+                .flag("seed", "", "corpus seed", Some("42"))
+                .flag("artifacts", "a", "artifacts directory", Some("artifacts")),
+        )
+        .command(
+            Command::new("pack-stats", "padding rates of the batching schemes")
+                .flag("sequences", "n", "trace length (sequences)", Some("20000"))
+                .flag("pack-len", "l", "packed sequence length", Some("4096"))
+                .flag("greedy-buffer", "g", "greedy packer buffer", Some("64"))
+                .flag("seed", "", "trace seed", Some("7")),
+        )
+        .command(
+            Command::new("inspect-artifacts", "list artifacts + signatures")
+                .flag("artifacts", "a", "artifacts directory", Some("artifacts"))
+                .switch("verbose", "v", "print full input/output signatures"),
+        )
+        .command(Command::new(
+            "model-perf",
+            "analytic A100 projections (paper-scale Fig 5)",
+        ));
+
+    let (cmd, m) = match app.parse(&args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.name {
+        "train" => cmd_train(&m),
+        "dp-train" => cmd_dp_train(&m),
+        "pack-stats" => cmd_pack_stats(&m),
+        "inspect-artifacts" => cmd_inspect(&m),
+        "model-perf" => cmd_model_perf(),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_train_config(m: &Matches) -> anyhow::Result<TrainConfig> {
+    if let Some(path) = m.get("config") {
+        return TrainConfig::load(Path::new(path));
+    }
+    let model = ModelConfig::by_name(m.get_or("model", "tiny"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset"))?;
+    anyhow::ensure!(
+        matches!(model.name.as_str(), "tiny" | "small"),
+        "artifacts exist only for tiny/small (paper-scale models are perfmodel-only)"
+    );
+    let mut cfg = TrainConfig::defaults(model);
+    if let Some(s) = m.get("scheme") {
+        cfg.scheme = Scheme::parse(s).ok_or_else(|| anyhow::anyhow!("bad scheme `{s}`"))?;
+    }
+    if let Some(n) = m.get_usize("steps")? {
+        cfg.steps = n;
+    }
+    if let Some(s) = m.get_usize("seed")? {
+        cfg.seed = s as u64;
+    }
+    if let Some(g) = m.get_usize("greedy-buffer")? {
+        cfg.packing.greedy_buffer = g;
+    }
+    cfg.artifacts_dir = m.get_or("artifacts", "artifacts").to_string();
+    if let Some(w) = m.get_usize("workers").unwrap_or(None) {
+        cfg.dp_workers = w;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(m: &Matches) -> anyhow::Result<()> {
+    let cfg = build_train_config(m)?;
+    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    let mut trainer = Trainer::new(Rc::clone(&runtime), cfg.clone())?;
+    log::info!(
+        "training {} ({} params) scheme={} steps={}",
+        cfg.model.name,
+        trainer.state().param_count(),
+        cfg.scheme.name(),
+        cfg.steps
+    );
+    trainer.train()?;
+    let met = &trainer.metrics;
+    println!(
+        "\nscheme={} steps={} loss {:.4} -> {:.4}",
+        cfg.scheme.name(),
+        met.steps(),
+        met.mean_loss_head(5),
+        met.mean_loss_tail(5)
+    );
+    println!(
+        "stable throughput: {:.0} tokens/s, padding rate {:.1}%",
+        met.stable_throughput(5, 100).unwrap_or(0.0),
+        met.padding_rate() * 100.0
+    );
+    // per-artifact host-overhead profile (the §Perf L3 target: staging +
+    // fetch must stay below 5% of execute time)
+    for (name, st) in runtime.stats() {
+        let host = st.stage_secs + st.fetch_secs;
+        println!(
+            "  {name}: {} calls, exec {:.2}s, host staging+fetch {:.2}s ({:.1}% of exec)",
+            st.calls,
+            st.exec_secs,
+            host,
+            100.0 * host / st.exec_secs.max(1e-9)
+        );
+    }
+    if let Some(out) = m.get("metrics-out") {
+        std::fs::write(out, met.to_json().pretty())?;
+        log::info!("metrics written to {out}");
+    }
+    if let Some(path) = m.get("save") {
+        let specs = runtime.manifest().params_for(&cfg.model.name)?.to_vec();
+        checkpoint::save(&PathBuf::from(path), &cfg.model.name, &specs, trainer.state())?;
+        log::info!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_dp_train(m: &Matches) -> anyhow::Result<()> {
+    let mut cfg = build_train_config(m)?;
+    cfg.scheme = Scheme::Pack;
+    if let Some(w) = m.get_usize("workers")? {
+        cfg.dp_workers = w;
+    }
+    let dp = DataParallelTrainer::new(cfg.clone())?;
+    let result = dp.run()?;
+    println!(
+        "dp-train: {} workers, {} steps, mean-loss {:.4} -> {:.4}, replicas identical: {}",
+        cfg.dp_workers,
+        result.steps,
+        result.metrics.mean_loss_head(5),
+        result.metrics.mean_loss_tail(5),
+        result.replicas_identical
+    );
+    println!(
+        "aggregate throughput: {:.0} tokens/s",
+        result.metrics.stable_throughput(2, 100).unwrap_or(0.0)
+    );
+    anyhow::ensure!(result.replicas_identical, "replica divergence detected");
+    Ok(())
+}
+
+fn cmd_pack_stats(m: &Matches) -> anyhow::Result<()> {
+    let n = m.get_usize("sequences")?.unwrap_or(20000);
+    let pack_len = m.get_usize("pack-len")?.unwrap_or(4096);
+    let buffer = m.get_usize("greedy-buffer")?.unwrap_or(64);
+    let seed = m.get_usize("seed")?.unwrap_or(7) as u64;
+    let trace = LengthTrace::paper_like(n, seed);
+    println!(
+        "trace: {} sequences, lengths {}..{} mean {:.0}",
+        n,
+        trace.lengths.iter().min().unwrap(),
+        trace.lengths.iter().max().unwrap(),
+        trace.mean()
+    );
+
+    let seqs: Vec<Sequence> = trace
+        .lengths
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| Sequence { tokens: vec![0; l], id: i as u64 })
+        .collect();
+
+    // padding baseline
+    let mut pad_stats = PackingStats::default();
+    for chunk in seqs.chunks(8) {
+        pad_stats.record(&pad_to_max(chunk, 2048));
+    }
+    // streaming pack
+    let mut stream_stats = PackingStats::default();
+    let mut p = StreamingPacker::new(pack_len, 1);
+    for s in &seqs {
+        if let Some(b) = p.push(s.clone()) {
+            stream_stats.record(&b);
+        }
+    }
+    if let Some(b) = p.flush() {
+        stream_stats.record(&b);
+    }
+    // greedy pack
+    let mut greedy_stats = PackingStats::default();
+    let mut g = GreedyPacker::new(pack_len, 1, buffer);
+    for s in &seqs {
+        if let Some(b) = g.push(s.clone()) {
+            greedy_stats.record(&b);
+        }
+    }
+    while let Some(b) = g.flush() {
+        greedy_stats.record(&b);
+    }
+
+    println!("\n{:<28} {:>12} {:>10}", "scheme", "padding rate", "paper");
+    println!("{:<28} {:>11.1}% {:>10}", "pad-to-max (baseline)", pad_stats.padding_rate() * 100.0, "66.3%");
+    println!("{:<28} {:>11.1}% {:>10}", "streaming pack", stream_stats.padding_rate() * 100.0, "19.1%");
+    println!(
+        "{:<28} {:>11.2}% {:>10}",
+        format!("greedy pack (buf={buffer})"),
+        greedy_stats.padding_rate() * 100.0,
+        "0.41%"
+    );
+    Ok(())
+}
+
+fn cmd_inspect(m: &Matches) -> anyhow::Result<()> {
+    let dir = m.get_or("artifacts", "artifacts");
+    let runtime = Runtime::load(Path::new(dir))?;
+    let manifest = runtime.manifest();
+    println!("{} artifacts in {dir}:", manifest.artifacts.len());
+    for (name, spec) in &manifest.artifacts {
+        println!(
+            "  {:<36} kind={:<12} {} in / {} out",
+            name,
+            spec.kind,
+            spec.inputs.len(),
+            spec.outputs.len()
+        );
+        if m.get_switch("verbose") {
+            for (i, t) in spec.inputs.iter().enumerate() {
+                println!("      in[{i:>2}]  {:?} {:?}", t.dtype, t.shape);
+            }
+            for (i, t) in spec.outputs.iter().enumerate() {
+                println!("      out[{i:>2}] {:?} {:?}", t.dtype, t.shape);
+            }
+        }
+    }
+    for (cfg, params) in &manifest.params {
+        let total: usize = params.iter().map(|p| p.element_count()).sum();
+        println!("config {cfg}: {} tensors, {total} params", params.len());
+    }
+    Ok(())
+}
+
+fn cmd_model_perf() -> anyhow::Result<()> {
+    let trace = LengthTrace::paper_like(5000, 7);
+    let rows = fig5_table(&GpuSpec::a100(), &trace);
+    println!(
+        "{:<8} {:<6} {:>14} {:>14} {:>14} {:>10} {:>10}",
+        "model", "dtype", "single tok/s", "padding tok/s", "pack tok/s", "vs single", "vs pad"
+    );
+    for r in rows {
+        println!(
+            "{:<8} {:<6} {:>14.0} {:>14.0} {:>14.0} {:>9.2}x {:>9.2}x",
+            r.model, r.dtype, r.single_tps, r.padding_tps, r.pack_tps,
+            r.speedup_vs_single, r.speedup_vs_padding
+        );
+    }
+    println!("\npaper headlines: 3.06x (1.4B bf16), 2.62x (2.8B), f32 1.34-1.57x");
+    Ok(())
+}

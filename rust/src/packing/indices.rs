@@ -1,0 +1,94 @@
+//! Index-plane builders (paper §3.3 / §3.5).
+//!
+//! `position_indices` is the auxiliary structure the pack() operation
+//! produces; the kernels read it to mask cross-sequence state.
+//! `reverse_indices` is the backward-pass companion: distance to the *end*
+//! of the own sequence (the paper derives it on the GPU from the position
+//! indices of the trailing `conv_width` elements via a shared-memory
+//! stagger; on the host we just compute it).
+
+/// Position index of each slot in a row packed with `lengths`, padding
+/// tail restarting at 0 (isolated garbage segment).
+pub fn position_indices(lengths: &[usize], pack_len: usize) -> Vec<i32> {
+    let used: usize = lengths.iter().sum();
+    assert!(used <= pack_len, "lengths {lengths:?} overflow pack_len {pack_len}");
+    let mut out = Vec::with_capacity(pack_len);
+    for &n in lengths {
+        out.extend((0..n as i32).collect::<Vec<_>>());
+    }
+    out.extend(0..(pack_len - used) as i32);
+    out
+}
+
+/// 1-based id of the source sequence per slot; 0 for padding.
+pub fn segment_ids(lengths: &[usize], pack_len: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(pack_len);
+    for (i, &n) in lengths.iter().enumerate() {
+        out.extend(std::iter::repeat(i as i32 + 1).take(n));
+    }
+    out.resize(pack_len, 0);
+    out
+}
+
+/// Distance to the end of the own sequence: `rev[t] = len - 1 - pos[t]`.
+/// The conv backward mask `pos[t+s] >= s` can equivalently be expressed
+/// as `rev[t] >= s`; tests assert that equivalence.
+pub fn reverse_indices(lengths: &[usize], pack_len: usize) -> Vec<i32> {
+    let used: usize = lengths.iter().sum();
+    assert!(used <= pack_len);
+    let mut out = Vec::with_capacity(pack_len);
+    for &n in lengths {
+        out.extend((0..n).map(|k| (n - 1 - k) as i32));
+    }
+    let pad = pack_len - used;
+    out.extend((0..pad).map(|k| (pad - 1 - k) as i32));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn position_indices_reset_per_sequence() {
+        assert_eq!(
+            position_indices(&[3, 2], 8),
+            vec![0, 1, 2, 0, 1, 0, 1, 2]
+        );
+        assert_eq!(position_indices(&[], 3), vec![0, 1, 2]);
+        assert_eq!(position_indices(&[4], 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn segment_ids_zero_on_padding() {
+        assert_eq!(segment_ids(&[3, 2], 8), vec![1, 1, 1, 2, 2, 0, 0, 0]);
+    }
+
+    #[test]
+    fn reverse_indices_mirror() {
+        assert_eq!(reverse_indices(&[3, 2], 8), vec![2, 1, 0, 1, 0, 2, 1, 0]);
+    }
+
+    #[test]
+    fn reverse_equivalence_with_shifted_position() {
+        // rev[t] >= s  ⇔  t+s within row and pos[t+s] >= s and same segment.
+        let lengths = [5usize, 3, 4];
+        let l = 16;
+        let pos = position_indices(&lengths, l);
+        let rev = reverse_indices(&lengths, l);
+        let seg = segment_ids(&lengths, l);
+        for t in 0..l {
+            for s in 0..4usize {
+                let via_rev = rev[t] >= s as i32;
+                let via_pos = t + s < l && pos[t + s] >= s as i32 && seg[t + s] == seg[t];
+                assert_eq!(via_rev, via_pos, "t={t} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        position_indices(&[9], 8);
+    }
+}

@@ -1,0 +1,286 @@
+//! The packing library: PackMamba's host-side contribution.
+//!
+//! Variable-length sequences are concatenated into fixed-length rows
+//! (`pack_len`, the paper uses 4096) together with **position indices** —
+//! per-token offsets within the original sequence.  A position index of 0
+//! marks a sequence start; the modified sequence-wise operators (L1
+//! kernels) use that to reset SSM/conv state so packed neighbours never
+//! exchange information (PUI, paper §3.1).
+//!
+//! Three batching schemes from the paper's evaluation live here:
+//!
+//! * [`StreamingPacker`] — first-fit in arrival order, seals a row when
+//!   the next sequence does not fit (§5: 19.1% padding on InternLM-like
+//!   lengths),
+//! * [`GreedyPacker`] — buffers N sequences, sorts descending, best-fit
+//!   decreasing (§5: down to 0.41% padding),
+//! * [`pad_to_max`] — the pad-everything baseline (§2.1: 66.3% padding),
+//!   and single-sequence batches via [`single_sequence_batch`].
+
+mod greedy;
+mod indices;
+mod streaming;
+mod unpack;
+
+pub use greedy::GreedyPacker;
+pub use indices::{position_indices, reverse_indices, segment_ids};
+pub use streaming::StreamingPacker;
+pub use unpack::{unpack_outputs, unpack_row};
+
+use crate::tensor::{IntTensor, Tensor};
+
+/// A sequence of token ids (the unit the data pipeline produces).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sequence {
+    pub tokens: Vec<i32>,
+    /// stable id assigned by the pipeline (ordering / unpack bookkeeping)
+    pub id: u64,
+}
+
+impl Sequence {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// One packed row: the sequences packed into it, in order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PackedRow {
+    pub sequences: Vec<Sequence>,
+}
+
+impl PackedRow {
+    pub fn used(&self) -> usize {
+        self.sequences.iter().map(Sequence::len).sum()
+    }
+}
+
+/// A complete packed batch, ready for the runtime: dense tensors plus the
+/// bookkeeping to unpack model outputs.
+#[derive(Clone, Debug)]
+pub struct PackedBatch {
+    /// (rows, pack_len) token ids, zero-padded
+    pub tokens: IntTensor,
+    /// (rows, pack_len) next-token targets (never cross sequence ends)
+    pub targets: IntTensor,
+    /// (rows, pack_len) position indices; 0 at each sequence start
+    pub position_indices: IntTensor,
+    /// (rows, pack_len) 1.0 where a *target* exists (0 on final token of
+    /// each sequence and on padding)
+    pub loss_mask: Tensor,
+    /// per row: lengths of the original sequences, in packed order
+    pub row_lengths: Vec<Vec<usize>>,
+    /// per row: ids of the original sequences
+    pub row_ids: Vec<Vec<u64>>,
+}
+
+impl PackedBatch {
+    pub fn rows(&self) -> usize {
+        self.tokens.shape()[0]
+    }
+
+    pub fn pack_len(&self) -> usize {
+        self.tokens.shape()[1]
+    }
+
+    /// Number of real (non-padding) tokens.
+    pub fn real_tokens(&self) -> usize {
+        self.row_lengths.iter().flatten().sum()
+    }
+
+    /// Number of tokens that contribute to the loss.
+    pub fn target_tokens(&self) -> usize {
+        self.loss_mask.data().iter().filter(|&&x| x > 0.0).count()
+    }
+
+    /// Fraction of slots that are padding (the paper's padding-rate metric).
+    pub fn padding_rate(&self) -> f64 {
+        let slots = self.rows() * self.pack_len();
+        1.0 - self.real_tokens() as f64 / slots as f64
+    }
+
+    /// Build the dense tensors for a set of packed rows.
+    ///
+    /// Targets are next-token *within each sequence*: the final token of
+    /// every sequence gets target 0 with loss-mask 0, so training never
+    /// predicts across a boundary.  Padding slots get position indices
+    /// that restart from 0 (isolating them as a garbage "sequence") and
+    /// loss-mask 0 — see `python/compile/packing.py` for the mirrored
+    /// reference semantics.
+    pub fn from_rows(rows: &[PackedRow], pack_len: usize) -> PackedBatch {
+        let b = rows.len();
+        let mut tokens = vec![0i32; b * pack_len];
+        let mut targets = vec![0i32; b * pack_len];
+        let mut pos = vec![0i32; b * pack_len];
+        let mut mask = vec![0f32; b * pack_len];
+        let mut row_lengths = Vec::with_capacity(b);
+        let mut row_ids = Vec::with_capacity(b);
+        for (r, row) in rows.iter().enumerate() {
+            let base = r * pack_len;
+            let mut off = 0usize;
+            let mut lens = Vec::with_capacity(row.sequences.len());
+            let mut ids = Vec::with_capacity(row.sequences.len());
+            for seq in &row.sequences {
+                let n = seq.len();
+                assert!(off + n <= pack_len, "row overflows pack_len");
+                for (k, &t) in seq.tokens.iter().enumerate() {
+                    tokens[base + off + k] = t;
+                    pos[base + off + k] = k as i32;
+                    if k + 1 < n {
+                        targets[base + off + k] = seq.tokens[k + 1];
+                        mask[base + off + k] = 1.0;
+                    }
+                }
+                off += n;
+                lens.push(n);
+                ids.push(seq.id);
+            }
+            // padding tail: its own isolated "sequence" of zeros
+            for (k, slot) in (off..pack_len).enumerate() {
+                pos[base + slot] = k as i32;
+            }
+            row_lengths.push(lens);
+            row_ids.push(ids);
+        }
+        PackedBatch {
+            tokens: IntTensor::new(&[b, pack_len], tokens),
+            targets: IntTensor::new(&[b, pack_len], targets),
+            position_indices: IntTensor::new(&[b, pack_len], pos),
+            loss_mask: Tensor::new(&[b, pack_len], mask),
+            row_lengths,
+            row_ids,
+        }
+    }
+}
+
+/// Padding baseline: each sequence gets its own row of length `max_len`
+/// (paper §2.1 — 66.3% padding rate at InternLM lengths).
+pub fn pad_to_max(sequences: &[Sequence], max_len: usize) -> PackedBatch {
+    let rows: Vec<PackedRow> = sequences
+        .iter()
+        .map(|s| {
+            assert!(s.len() <= max_len, "sequence longer than max_len");
+            PackedRow {
+                sequences: vec![s.clone()],
+            }
+        })
+        .collect();
+    PackedBatch::from_rows(&rows, max_len)
+}
+
+/// Single-sequence baseline: one sequence, bucketed up to the smallest
+/// artifact length that fits (XLA shapes are static; the real Mamba
+/// baseline re-launches kernels per sequence, paying the same
+/// fine-grained-work penalty the paper describes in §1).
+pub fn single_sequence_batch(seq: &Sequence, buckets: &[usize]) -> Option<PackedBatch> {
+    let bucket = buckets.iter().copied().find(|&b| b >= seq.len())?;
+    Some(PackedBatch::from_rows(
+        &[PackedRow {
+            sequences: vec![seq.clone()],
+        }],
+        bucket,
+    ))
+}
+
+/// Accumulated padding-rate statistics across many batches (paper §5).
+#[derive(Clone, Debug, Default)]
+pub struct PackingStats {
+    pub batches: usize,
+    pub rows: usize,
+    pub slots: usize,
+    pub real_tokens: usize,
+    pub sequences: usize,
+}
+
+impl PackingStats {
+    pub fn record(&mut self, batch: &PackedBatch) {
+        self.batches += 1;
+        self.rows += batch.rows();
+        self.slots += batch.rows() * batch.pack_len();
+        self.real_tokens += batch.real_tokens();
+        self.sequences += batch.row_lengths.iter().map(Vec::len).sum::<usize>();
+    }
+
+    pub fn padding_rate(&self) -> f64 {
+        if self.slots == 0 {
+            0.0
+        } else {
+            1.0 - self.real_tokens as f64 / self.slots as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(id: u64, toks: &[i32]) -> Sequence {
+        Sequence {
+            tokens: toks.to_vec(),
+            id,
+        }
+    }
+
+    #[test]
+    fn from_rows_targets_never_cross_boundaries() {
+        let rows = vec![PackedRow {
+            sequences: vec![seq(0, &[10, 11, 12]), seq(1, &[20, 21])],
+        }];
+        let b = PackedBatch::from_rows(&rows, 8);
+        // tokens: 10 11 12 20 21 0 0 0
+        assert_eq!(b.tokens.data(), &[10, 11, 12, 20, 21, 0, 0, 0]);
+        // targets: 11 12 [0] 21 [0] ...
+        assert_eq!(b.targets.data(), &[11, 12, 0, 21, 0, 0, 0, 0]);
+        // mask: final token of each sequence and padding get 0
+        assert_eq!(b.loss_mask.data(), &[1., 1., 0., 1., 0., 0., 0., 0.]);
+        // position indices reset at each start, including the padding tail
+        assert_eq!(b.position_indices.data(), &[0, 1, 2, 0, 1, 0, 1, 2]);
+        assert_eq!(b.real_tokens(), 5);
+        assert_eq!(b.target_tokens(), 3);
+        assert!((b.padding_rate() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pad_to_max_one_row_per_sequence() {
+        let b = pad_to_max(&[seq(0, &[1, 2]), seq(1, &[3, 4, 5])], 4);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.pack_len(), 4);
+        assert_eq!(b.real_tokens(), 5);
+        assert!((b.padding_rate() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sequence_bucketing() {
+        let s = seq(7, &[1, 2, 3, 4, 5]);
+        let b = single_sequence_batch(&s, &[4, 8, 16]).unwrap();
+        assert_eq!(b.pack_len(), 8);
+        assert_eq!(b.rows(), 1);
+        // too long for any bucket
+        assert!(single_sequence_batch(&seq(8, &[0; 32]), &[4, 8, 16]).is_none());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut st = PackingStats::default();
+        st.record(&pad_to_max(&[seq(0, &[1, 2])], 4));
+        st.record(&pad_to_max(&[seq(1, &[3, 4, 5])], 4));
+        assert_eq!(st.batches, 2);
+        assert_eq!(st.slots, 8);
+        assert_eq!(st.real_tokens, 5);
+        assert_eq!(st.sequences, 2);
+        assert!((st.padding_rate() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_row_panics() {
+        let rows = vec![PackedRow {
+            sequences: vec![seq(0, &[1; 10])],
+        }];
+        PackedBatch::from_rows(&rows, 8);
+    }
+}

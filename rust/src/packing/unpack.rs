@@ -1,0 +1,96 @@
+//! unpack(): the inverse of pack(), recovering per-sequence outputs from
+//! packed model outputs — the right-hand side of the PUI equation
+//! f(S) = unpack(f(pack(S))) (paper §3.1).
+
+use super::PackedBatch;
+use crate::tensor::Tensor;
+
+/// Slice one packed row's per-token output back into per-sequence pieces.
+///
+/// `row_values` has shape (pack_len, feature...) flattened row-major with
+/// `feat` trailing elements per token.
+pub fn unpack_row(row_values: &[f32], feat: usize, lengths: &[usize]) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(lengths.len());
+    let mut off = 0usize;
+    for &n in lengths {
+        out.push(row_values[off * feat..(off + n) * feat].to_vec());
+        off += n;
+    }
+    out
+}
+
+/// Unpack a whole batch of model outputs (rows, pack_len, feat) into
+/// (sequence id, per-token values) in packed order.
+pub fn unpack_outputs(batch: &PackedBatch, values: &Tensor) -> Vec<(u64, Vec<f32>)> {
+    let shape = values.shape();
+    assert!(shape.len() >= 2, "expected (rows, pack_len, ...)");
+    assert_eq!(shape[0], batch.rows(), "row count mismatch");
+    assert_eq!(shape[1], batch.pack_len(), "pack_len mismatch");
+    let feat: usize = shape[2..].iter().product::<usize>().max(1);
+    let row_stride = batch.pack_len() * feat;
+    let mut out = Vec::new();
+    for (r, (lens, ids)) in batch.row_lengths.iter().zip(&batch.row_ids).enumerate() {
+        let row = &values.data()[r * row_stride..(r + 1) * row_stride];
+        for (piece, &id) in unpack_row(row, feat, lens).into_iter().zip(ids) {
+            out.push((id, piece));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::{PackedRow, Sequence};
+
+    #[test]
+    fn unpack_row_slices() {
+        let vals: Vec<f32> = (0..16).map(|x| x as f32).collect(); // 8 tokens × feat 2
+        let pieces = unpack_row(&vals, 2, &[3, 2]);
+        assert_eq!(pieces.len(), 2);
+        assert_eq!(pieces[0], (0..6).map(|x| x as f32).collect::<Vec<_>>());
+        assert_eq!(pieces[1], (6..10).map(|x| x as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn unpack_outputs_round_trip() {
+        let rows = vec![
+            PackedRow {
+                sequences: vec![
+                    Sequence { tokens: vec![1, 2, 3], id: 10 },
+                    Sequence { tokens: vec![4, 5], id: 11 },
+                ],
+            },
+            PackedRow {
+                sequences: vec![Sequence { tokens: vec![6], id: 12 }],
+            },
+        ];
+        let b = PackedBatch::from_rows(&rows, 6);
+        // fabricate "model outputs" = token id as the single feature
+        let mut vals = Tensor::zeros(&[2, 6, 1]);
+        for r in 0..2 {
+            for t in 0..6 {
+                let tok = b.tokens.data()[r * 6 + t] as f32;
+                vals.set(&[r, t, 0], tok);
+            }
+        }
+        let un = unpack_outputs(&b, &vals);
+        assert_eq!(un.len(), 3);
+        assert_eq!(un[0], (10, vec![1.0, 2.0, 3.0]));
+        assert_eq!(un[1], (11, vec![4.0, 5.0]));
+        assert_eq!(un[2], (12, vec![6.0]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let b = PackedBatch::from_rows(
+            &[PackedRow {
+                sequences: vec![Sequence { tokens: vec![1], id: 0 }],
+            }],
+            4,
+        );
+        let vals = Tensor::zeros(&[2, 4, 1]); // wrong row count
+        unpack_outputs(&b, &vals);
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-operator cost model for a Mamba block and full training steps.
+//!
+//! Operator inventory follows the paper's Fig 1/Fig 6 categories:
+//! GEMM (in_proj, x_proj, dt_proj, out_proj, lm head), conv1d, SSM
+//! (selective scan), norm + elementwise.  Forward and backward; backward
+//! GEMM cost ≈ 2× forward (dX and dW), sequence-wise ops ≈ 2× (reverse
+//! scan + input grads), matching the usual fwd:bwd ≈ 1:2 ratio.
+
+use crate::config::ModelConfig;
+
+use super::{kernel_time, ssm_time, Dtype, GpuSpec};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    Gemm,
+    Conv1d,
+    Ssm,
+    NormElementwise,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Gemm => "gemm",
+            OpKind::Conv1d => "conv1d",
+            OpKind::Ssm => "ssm",
+            OpKind::NormElementwise => "norm+elem",
+        }
+    }
+
+    pub fn all() -> [OpKind; 4] {
+        [OpKind::Gemm, OpKind::Conv1d, OpKind::Ssm, OpKind::NormElementwise]
+    }
+}
+
+/// Geometry of one layer invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerGeometry {
+    pub batch: usize,
+    pub seqlen: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpTime {
+    pub fwd: f64,
+    pub bwd: f64,
+}
+
+impl OpTime {
+    pub fn total(&self) -> f64 {
+        self.fwd + self.bwd
+    }
+}
+
+/// Per-op times for one full model step (all layers + head).
+#[derive(Clone, Debug, Default)]
+pub struct StepBreakdown {
+    pub gemm: OpTime,
+    pub conv1d: OpTime,
+    pub ssm: OpTime,
+    pub norm: OpTime,
+    /// number of kernel launches (the single-sequence overhead driver)
+    pub launches: f64,
+}
+
+impl StepBreakdown {
+    pub fn total(&self) -> f64 {
+        self.gemm.total() + self.conv1d.total() + self.ssm.total() + self.norm.total()
+    }
+
+    pub fn of(&self, kind: OpKind) -> OpTime {
+        match kind {
+            OpKind::Gemm => self.gemm,
+            OpKind::Conv1d => self.conv1d,
+            OpKind::Ssm => self.ssm,
+            OpKind::NormElementwise => self.norm,
+        }
+    }
+
+    /// Accumulate another breakdown's op into this one (figure compositors).
+    pub fn add_public(&mut self, kind: OpKind, fwd: f64, bwd: f64) {
+        self.add(kind, fwd, bwd, 0.0);
+    }
+
+    fn add(&mut self, kind: OpKind, fwd: f64, bwd: f64, launches: f64) {
+        let slot = match kind {
+            OpKind::Gemm => &mut self.gemm,
+            OpKind::Conv1d => &mut self.conv1d,
+            OpKind::Ssm => &mut self.ssm,
+            OpKind::NormElementwise => &mut self.norm,
+        };
+        slot.fwd += fwd;
+        slot.bwd += bwd;
+        self.launches += launches;
+    }
+}
+
+fn gemm_time(spec: &GpuSpec, m: f64, k: f64, n: f64, dtype: Dtype) -> f64 {
+    let flops = 2.0 * m * k * n;
+    let bytes = (m * k + k * n + m * n) * dtype.bytes();
+    // GEMM efficiency depends on how many row-tiles (tokens) feed the
+    // MMA pipeline — the single-sequence scheme's core penalty.
+    kernel_time(spec, flops, bytes, dtype, spec.util(m, dtype))
+}
+
+/// Model one training step (fwd+bwd) at the given geometry.
+pub fn step_breakdown(
+    spec: &GpuSpec,
+    cfg: &ModelConfig,
+    geom: LayerGeometry,
+    dtype: Dtype,
+) -> StepBreakdown {
+    let mut bd = StepBreakdown::default();
+    let t = (geom.batch * geom.seqlen) as f64; // tokens incl. padding
+    let d = cfg.d_model as f64;
+    let di = cfg.d_inner() as f64;
+    let n = cfg.d_state as f64;
+    let r = cfg.dt_rank() as f64;
+    let w = cfg.d_conv as f64;
+    let layers = cfg.n_layers as f64;
+
+    // --- per layer ---
+    // in_proj: (t, d) @ (d, 2di)
+    let g_in = gemm_time(spec, t, d, 2.0 * di, dtype);
+    // x_proj: (t, di) @ (di, r+2n)
+    let g_x = gemm_time(spec, t, di, r + 2.0 * n, dtype);
+    // dt_proj: (t, r) @ (r, di)
+    let g_dt = gemm_time(spec, t, r, di, dtype);
+    // out_proj: (t, di) @ (di, d)
+    let g_out = gemm_time(spec, t, di, d, dtype);
+    let gemm_fwd = g_in + g_x + g_dt + g_out;
+    bd.add(OpKind::Gemm, gemm_fwd * layers, 2.0 * gemm_fwd * layers, 8.0 * layers);
+
+    // conv1d: depthwise, memory-bound: read x + w taps, write y
+    let conv_bytes = t * di * dtype.bytes() * (2.0 + w * 0.25);
+    let conv_fwd = kernel_time(spec, 2.0 * t * di * w, conv_bytes, dtype, 1.0);
+    bd.add(OpKind::Conv1d, conv_fwd * layers, 2.0 * conv_fwd * layers, 2.0 * layers);
+
+    // ssm: the Fig 2 kernel
+    let ssm_fwd = ssm_time(spec, geom.batch, geom.seqlen, cfg.d_inner(), cfg.d_state, dtype);
+    bd.add(OpKind::Ssm, ssm_fwd * layers, 2.0 * ssm_fwd * layers, 2.0 * layers);
+
+    // norms + gates + residuals: ~6 elementwise passes over (t, d)/(t, di)
+    let elem_bytes = t * (2.0 * d + 4.0 * di) * dtype.bytes();
+    let norm_fwd = kernel_time(spec, 8.0 * t * (d + di), elem_bytes, dtype, 1.0);
+    bd.add(OpKind::NormElementwise, norm_fwd * layers, 2.0 * norm_fwd * layers, 6.0 * layers);
+
+    // --- head: logits GEMM (t, d) @ (d, vocab), fwd + bwd ---
+    let g_head = gemm_time(spec, t, d, cfg.vocab_size as f64, dtype);
+    bd.add(OpKind::Gemm, g_head, 2.0 * g_head, 3.0);
+    bd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_1_4b() -> ModelConfig {
+        ModelConfig::by_name("1.4b").unwrap()
+    }
+
+    #[test]
+    fn ssm_dominates_padded_step() {
+        // paper §2.2: SSM uses 59.3% of step time in the padding approach
+        // (bf16, 1.4B).  Padding geometry: one sequence per row padded to
+        // 2048, mean length 646 → the SSM runs at full padded length.
+        let spec = GpuSpec::a100();
+        let bd = step_breakdown(
+            &spec,
+            &cfg_1_4b(),
+            LayerGeometry { batch: 8, seqlen: 2048 },
+            Dtype::Bf16,
+        );
+        let share = bd.ssm.total() / bd.total();
+        assert!(
+            (0.40..0.75).contains(&share),
+            "SSM share {share}, paper says 0.593"
+        );
+    }
+
+    #[test]
+    fn bwd_roughly_twice_fwd() {
+        let spec = GpuSpec::a100();
+        let bd = step_breakdown(
+            &spec,
+            &cfg_1_4b(),
+            LayerGeometry { batch: 1, seqlen: 4096 },
+            Dtype::Bf16,
+        );
+        let fwd = bd.gemm.fwd + bd.conv1d.fwd + bd.ssm.fwd + bd.norm.fwd;
+        let bwd = bd.gemm.bwd + bd.conv1d.bwd + bd.ssm.bwd + bd.norm.bwd;
+        assert!((bwd / fwd - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn times_scale_with_model() {
+        let spec = GpuSpec::a100();
+        let geom = LayerGeometry { batch: 1, seqlen: 4096 };
+        let t110 = step_breakdown(&spec, &ModelConfig::by_name("110m").unwrap(), geom, Dtype::Bf16)
+            .total();
+        let t28 = step_breakdown(&spec, &ModelConfig::by_name("2.8b").unwrap(), geom, Dtype::Bf16)
+            .total();
+        assert!(t28 > 5.0 * t110, "2.8B should be ≫ 110M: {t28} vs {t110}");
+    }
+
+    #[test]
+    fn f32_slower_than_bf16() {
+        let spec = GpuSpec::a100();
+        let geom = LayerGeometry { batch: 1, seqlen: 4096 };
+        let b = step_breakdown(&spec, &cfg_1_4b(), geom, Dtype::Bf16).total();
+        let f = step_breakdown(&spec, &cfg_1_4b(), geom, Dtype::F32).total();
+        assert!(f > 1.5 * b, "f32 {f} should be well above bf16 {b}");
+    }
+}

@@ -1,0 +1,256 @@
+//! Typed view of `artifacts/manifest.json` — the interchange contract
+//! written by `python/compile/aot.py`.
+//!
+//! The manifest describes every AOT artifact: its HLO file, the exact
+//! flat input/output tensor specs (order matters — it is the HLO
+//! parameter order), and per-kind metadata (config name, batch geometry,
+//! scheme, operator shapes).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "bfloat16" => Ok(DType::Bf16),
+            other => anyhow::bail!("unsupported dtype `{other}` in manifest"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::Bf16 => 2,
+        }
+    }
+}
+
+/// One tensor slot in an artifact's flat signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("spec shape must be an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.req("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("dtype must be a string"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// raw metadata (config, batch, seq_len, scheme, mode, ...)
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+}
+
+/// A named parameter slot of a model config (flat interchange order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// per config: ordered parameter list
+    pub params: BTreeMap<String, Vec<ParamSpec>>,
+    /// per config: raw config json (cross-checked against config::ModelConfig)
+    pub configs: BTreeMap<String, Json>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        anyhow::ensure!(
+            j.req("version")?.as_usize() == Some(1),
+            "unsupported manifest version"
+        );
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("artifacts must be an array"))?
+        {
+            let name = a
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact name must be a string"))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let spec = ArtifactSpec {
+                file: dir.join(
+                    a.req("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("artifact file must be a string"))?,
+                ),
+                kind: a
+                    .req("kind")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifact kind must be a string"))?
+                    .to_string(),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                meta: a.clone(),
+                name: name.clone(),
+            };
+            anyhow::ensure!(
+                spec.file.exists(),
+                "artifact file missing: {}",
+                spec.file.display()
+            );
+            artifacts.insert(name, spec);
+        }
+        let mut params = BTreeMap::new();
+        for (cfg, list) in j
+            .req("params")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("params must be an object"))?
+        {
+            let specs = list
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("params list must be an array"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p
+                            .req("name")?
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("param name"))?
+                            .to_string(),
+                        shape: p
+                            .req("shape")?
+                            .as_arr()
+                            .ok_or_else(|| anyhow::anyhow!("param shape"))?
+                            .iter()
+                            .map(|v| {
+                                v.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim"))
+                            })
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            params.insert(cfg.clone(), specs);
+        }
+        let configs = j
+            .req("configs")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("configs must be an object"))?
+            .clone();
+        Ok(Manifest {
+            artifacts,
+            params,
+            configs,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    pub fn params_for(&self, config: &str) -> Result<&[ParamSpec]> {
+        self.params
+            .get(config)
+            .map(Vec::as_slice)
+            .ok_or_else(|| anyhow::anyhow!("no params for config `{config}`"))
+    }
+
+    /// All artifacts of a kind, sorted by name.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == kind)
+            .collect()
+    }
+
+    /// Find the train_step artifact for (config, scheme) with the given
+    /// geometry, e.g. the pack-scheme step for "tiny".
+    pub fn train_step(&self, config: &str, scheme: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.kind == "train_step"
+                    && a.meta_str("config") == Some(config)
+                    && a.meta_str("scheme") == Some(scheme)
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!("no train_step artifact for config={config} scheme={scheme}")
+            })
+    }
+
+    /// Single-sequence bucket lengths available for a config, ascending.
+    pub fn single_buckets(&self, config: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.kind == "train_step"
+                    && a.meta_str("config") == Some(config)
+                    && a.meta_str("scheme") == Some("single")
+            })
+            .filter_map(|a| a.meta_usize("seq_len"))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}

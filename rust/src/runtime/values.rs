@@ -1,0 +1,183 @@
+//! Host-value ⇄ XLA literal conversion.
+//!
+//! `HostValue` is the typed unit crossing the host/device boundary:
+//! f32 tensors (parameters, activations, masks), i32 tensors (tokens,
+//! position indices) and bf16 tensors staged from f32 data.
+
+use crate::tensor::{bf16_bytes_to_f32_vec, f32_slice_to_bf16_bytes, IntTensor, Tensor};
+
+use super::manifest::{DType, TensorSpec};
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(IntTensor),
+    /// f32 payload staged to/from device as bfloat16
+    Bf16(Tensor),
+}
+
+impl HostValue {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) | HostValue::Bf16(t) => t.shape(),
+            HostValue::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype_compatible(&self, dtype: DType) -> bool {
+        matches!(
+            (self, dtype),
+            (HostValue::F32(_), DType::F32)
+                | (HostValue::I32(_), DType::I32)
+                | (HostValue::Bf16(_), DType::Bf16)
+        )
+    }
+
+    /// Scalar f32 (step counters, losses).
+    pub fn scalar(v: f32) -> HostValue {
+        HostValue::F32(Tensor::scalar(v))
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) | HostValue::Bf16(t) => Ok(t),
+            HostValue::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32(t) | HostValue::Bf16(t) => Ok(t),
+            HostValue::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&IntTensor> {
+        match self {
+            HostValue::I32(t) => Ok(t),
+            _ => anyhow::bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn to_literal(&self) -> xla::Literal {
+        fn dims_i64(shape: &[usize]) -> Vec<i64> {
+            shape.iter().map(|&d| d as i64).collect()
+        }
+        match self {
+            HostValue::F32(t) => {
+                if t.shape().is_empty() {
+                    xla::Literal::scalar(t.data()[0])
+                } else {
+                    xla::Literal::vec1(t.data())
+                        .reshape(&dims_i64(t.shape()))
+                        .expect("f32 literal reshape")
+                }
+            }
+            HostValue::I32(t) => {
+                if t.shape().is_empty() {
+                    xla::Literal::scalar(t.data()[0])
+                } else {
+                    xla::Literal::vec1(t.data())
+                        .reshape(&dims_i64(t.shape()))
+                        .expect("i32 literal reshape")
+                }
+            }
+            HostValue::Bf16(t) => {
+                let bytes = f32_slice_to_bf16_bytes(t.data());
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::Bf16,
+                    t.shape(),
+                    &bytes,
+                )
+                .expect("bf16 literal create")
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostValue> {
+        let shape = spec.shape.clone();
+        match spec.dtype {
+            DType::F32 => {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e}"))?;
+                Ok(HostValue::F32(Tensor::new(&shape, data)))
+            }
+            DType::I32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal to i32 vec: {e}"))?;
+                Ok(HostValue::I32(IntTensor::new(&shape, data)))
+            }
+            DType::Bf16 => {
+                let n = spec.element_count();
+                let mut bytes = vec![0u8; n * 2];
+                lit.copy_raw_to::<xla::Bf16>(bytemuck_cast_bf16_mut(&mut bytes))
+                    .map_err(|e| anyhow::anyhow!("literal to bf16 bytes: {e}"))?;
+                Ok(HostValue::Bf16(Tensor::new(
+                    &shape,
+                    bf16_bytes_to_f32_vec(&bytes),
+                )))
+            }
+        }
+    }
+}
+
+// `xla::Bf16` is a zero-sized marker type: `copy_raw_to::<Bf16>` reads the
+// byte count from `ELEMENT_SIZE_IN_BYTES` and the destination pointer from
+// the slice, so a slice view over our byte buffer (one marker per element)
+// is the intended calling convention.
+fn bytemuck_cast_bf16_mut(bytes: &mut [u8]) -> &mut [xla::Bf16] {
+    unsafe {
+        std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut xla::Bf16, bytes.len() / 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_round_trip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = HostValue::F32(t.clone()).to_literal();
+        let spec = TensorSpec {
+            shape: vec![2, 3],
+            dtype: DType::F32,
+        };
+        let back = HostValue::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &t);
+    }
+
+    #[test]
+    fn i32_literal_round_trip() {
+        let t = IntTensor::new(&[4], vec![1, -2, 3, -4]);
+        let lit = HostValue::I32(t.clone()).to_literal();
+        let spec = TensorSpec {
+            shape: vec![4],
+            dtype: DType::I32,
+        };
+        let back = HostValue::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &t);
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        let lit = HostValue::scalar(7.5).to_literal();
+        let spec = TensorSpec {
+            shape: vec![],
+            dtype: DType::F32,
+        };
+        let back = HostValue::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap().data(), &[7.5]);
+    }
+
+    #[test]
+    fn dtype_compatibility() {
+        let f = HostValue::scalar(1.0);
+        assert!(f.dtype_compatible(DType::F32));
+        assert!(!f.dtype_compatible(DType::I32));
+        assert!(!f.dtype_compatible(DType::Bf16));
+    }
+}

@@ -1,0 +1,123 @@
+//! Software bfloat16: the top 16 bits of an IEEE-754 f32.
+//!
+//! Used to stage bf16 artifact inputs (the xla crate moves raw bytes; the
+//! numeric conversion happens here) and for size accounting in the perf
+//! model.  Round-to-nearest-even on conversion from f32, like hardware.
+
+/// bfloat16 value (bit pattern).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+
+    /// Round-to-nearest-even conversion (matches x86/ARM/TPU hardware).
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // preserve NaN, force a set mantissa bit so it stays NaN
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x007F) != 0
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// Convert a slice of f32 to packed bf16 bytes (little endian), as the
+/// PJRT `buffer_from_host_raw_bytes` path expects.
+pub fn f32_slice_to_bf16_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&Bf16::from_f32(x).0.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32_slice_to_bf16_bytes`].
+pub fn bf16_bytes_to_f32_vec(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 2 == 0);
+    bytes
+        .chunks_exact(2)
+        .map(|c| Bf16(u16::from_le_bytes([c[0], c[1]])).to_f32())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_round_trip() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, -0.5, 2.0, 256.0, -1024.0] {
+            assert_eq!(Bf16::from_f32(v).to_f32(), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between two bf16 values around 1.0;
+        // RNE keeps the even mantissa (1.0).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(halfway).to_f32(), 1.0);
+        // slightly above halfway rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert!(Bf16::from_f32(above).to_f32() > 1.0);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // bf16 has 8 mantissa bits → rel. error ≤ 2^-8 after RNE.
+        let mut x = 0.1f32;
+        for _ in 0..100 {
+            let r = Bf16::from_f32(x).to_f32();
+            assert!(((r - x) / x).abs() <= 1.0 / 256.0, "x={x} r={r}");
+            x *= 1.37;
+            if !x.is_finite() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn byte_round_trip() {
+        let xs = vec![0.0f32, 1.5, -3.25, 1e10, -1e-10];
+        let bytes = f32_slice_to_bf16_bytes(&xs);
+        assert_eq!(bytes.len(), xs.len() * 2);
+        let back = bf16_bytes_to_f32_vec(&bytes);
+        for (a, b) in xs.iter().zip(&back) {
+            let expect = Bf16::from_f32(*a).to_f32();
+            assert_eq!(*b, expect);
+        }
+    }
+}

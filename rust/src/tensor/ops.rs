@@ -1,0 +1,184 @@
+//! Elementwise / linear-algebra ops on host tensors.
+//!
+//! Only what the coordinator needs: axpy-style accumulation for the
+//! all-reduce, scaling, matmul for test oracles, reductions, and
+//! tolerance-based comparison for integration tests.
+
+use super::Tensor;
+
+impl Tensor {
+    /// self += other (shapes must match) — the all-reduce accumulator.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    /// self *= s — all-reduce averaging.
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            &self.shape,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.data.len() as f32
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// 2-D matmul: (m, k) x (k, n) -> (m, n).  Test oracle only; the hot
+    /// path runs GEMMs inside XLA.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2, "matmul lhs must be 2-D");
+        assert_eq!(other.shape.len(), 2, "matmul rhs must be 2-D");
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &other.data[p * n..(p + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for (d, &b) in dst.iter_mut().zip(row) {
+                    *d += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// numpy-style allclose: |a-b| <= atol + rtol*|b| elementwise.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// Average a set of per-worker tensors in place into the first one —
+/// the host-side gradient all-reduce.
+pub fn allreduce_mean(workers: &mut [Vec<Tensor>]) {
+    assert!(!workers.is_empty());
+    let n = workers.len();
+    if n == 1 {
+        return;
+    }
+    let (first, rest) = workers.split_at_mut(1);
+    let k = first[0].len();
+    for j in 0..k {
+        for w in rest.iter() {
+            let other = &w[j];
+            first[0][j].add_assign(other);
+        }
+        first[0][j].scale(1.0 / n as f32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        let a = Tensor::new(&[1, 3], vec![1., 2., 3.]);
+        let b = Tensor::new(&[3, 2], vec![1., 0., 0., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape(), &[1, 2]);
+        assert_eq!(c.data(), &[4., 5.]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(&[2], vec![1.0, 100.0]);
+        let b = Tensor::new(&[2], vec![1.0001, 100.01]);
+        assert!(a.allclose(&b, 1e-3, 1e-3));
+        assert!(!a.allclose(&b, 1e-6, 1e-6));
+        let c = Tensor::new(&[3], vec![0.0; 3]);
+        assert!(!a.allclose(&c, 1.0, 1.0)); // shape mismatch
+    }
+
+    #[test]
+    fn allreduce_mean_averages() {
+        let mut workers = vec![
+            vec![Tensor::full(&[4], 1.0), Tensor::full(&[2], 10.0)],
+            vec![Tensor::full(&[4], 3.0), Tensor::full(&[2], 30.0)],
+        ];
+        allreduce_mean(&mut workers);
+        assert_eq!(workers[0][0].data(), &[2.0; 4]);
+        assert_eq!(workers[0][1].data(), &[20.0; 2]);
+    }
+
+    #[test]
+    fn norms_and_reductions() {
+        let t = Tensor::new(&[4], vec![1., -2., 3., -4.]);
+        assert_eq!(t.sum(), -2.0);
+        assert_eq!(t.mean(), -0.5);
+        assert_eq!(t.abs_max(), 4.0);
+        assert!((t.l2_norm() - 30.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = Tensor::new(&[2], vec![1., 2.]);
+        let b = Tensor::new(&[2], vec![3., 5.]);
+        assert_eq!(a.add(&b).data(), &[4., 7.]);
+        assert_eq!(b.sub(&a).data(), &[2., 3.]);
+        let mut c = a.clone();
+        c.scale(2.0);
+        assert_eq!(c.data(), &[2., 4.]);
+    }
+}

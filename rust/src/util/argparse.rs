@@ -1,0 +1,330 @@
+//! Declarative CLI parsing (offline replacement for `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required flags, and auto-generated `--help` text.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this offline image)
+//! use packmamba::util::argparse::Command;
+//! let cmd = Command::new("train", "train a model")
+//!     .flag("config", "c", "path to config json", Some("configs/tiny.json"))
+//!     .switch("verbose", "v", "chatty logging");
+//! let m = cmd.parse(&["--config", "x.json", "-v"]).unwrap();
+//! assert_eq!(m.get("config"), Some("x.json"));
+//! assert!(m.get_switch("verbose"));
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: &'static str,
+    short: &'static str,
+    help: &'static str,
+    default: Option<&'static str>,
+    is_switch: bool,
+    required: bool,
+}
+
+/// One (sub)command: a set of flags plus help text.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parse result: flag name → value.
+#[derive(Clone, Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<&'static str, String>,
+    switches: BTreeMap<&'static str, bool>,
+    /// positional arguments (anything not starting with `-`)
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`"))
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`"))
+            })
+            .transpose()
+    }
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    /// A value-taking flag with optional default.
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        short: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            short,
+            help,
+            default,
+            is_switch: false,
+            required: false,
+        });
+        self
+    }
+
+    /// A required value-taking flag.
+    pub fn required_flag(
+        mut self,
+        name: &'static str,
+        short: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            short,
+            help,
+            default: None,
+            is_switch: false,
+            required: true,
+        });
+        self
+    }
+
+    /// A boolean switch (present or absent).
+    pub fn switch(mut self, name: &'static str, short: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            short,
+            help,
+            default: None,
+            is_switch: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let short = if f.short.is_empty() {
+                String::new()
+            } else {
+                format!("-{}, ", f.short)
+            };
+            let kind = if f.is_switch { "" } else { " <value>" };
+            let def = match f.default {
+                Some(d) => format!(" (default: {d})"),
+                None if f.required => " (required)".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!(
+                "  {short}--{}{kind}\n      {}{def}\n",
+                f.name, f.help
+            ));
+        }
+        s
+    }
+
+    fn find(&self, token: &str) -> Option<&FlagSpec> {
+        self.flags
+            .iter()
+            .find(|f| f.name == token || (!f.short.is_empty() && f.short == token))
+    }
+
+    pub fn parse<S: AsRef<str>>(&self, args: &[S]) -> anyhow::Result<Matches> {
+        let mut m = Matches::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                m.values.insert(f.name, d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let tok = args[i].as_ref();
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(rest) = tok.strip_prefix("--").or_else(|| tok.strip_prefix('-')) {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .find(key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag `{tok}`\n\n{}", self.usage()))?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        anyhow::bail!("switch --{} takes no value", spec.name);
+                    }
+                    m.switches.insert(spec.name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .map(|s| s.as_ref().to_string())
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("flag --{} expects a value", spec.name)
+                                })?
+                        }
+                    };
+                    m.values.insert(spec.name, v);
+                }
+            } else {
+                m.positional.push(tok.to_string());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.required && !m.values.contains_key(f.name) {
+                anyhow::bail!("missing required flag --{}\n\n{}", f.name, self.usage());
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Top-level multi-command application.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\ncommands:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<20} {}\n", c.name, c.about));
+        }
+        s.push_str("\nrun `<command> --help` for per-command flags\n");
+        s
+    }
+
+    /// Returns (command name, matches).
+    pub fn parse<S: AsRef<str>>(&self, args: &[S]) -> anyhow::Result<(&Command, Matches)> {
+        let first = args
+            .first()
+            .map(|s| s.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("{}", self.usage()))?;
+        if first == "--help" || first == "-h" {
+            anyhow::bail!("{}", self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == first)
+            .ok_or_else(|| anyhow::anyhow!("unknown command `{first}`\n\n{}", self.usage()))?;
+        let m = cmd.parse(&args[1..])?;
+        Ok((cmd, m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "t")
+            .flag("config", "c", "cfg", Some("default.json"))
+            .required_flag("steps", "n", "steps")
+            .switch("verbose", "v", "chatty")
+    }
+
+    #[test]
+    fn parses_long_short_inline_forms() {
+        let m = cmd().parse(&["--config", "a.json", "-n", "10", "-v"]).unwrap();
+        assert_eq!(m.get("config"), Some("a.json"));
+        assert_eq!(m.get_usize("steps").unwrap(), Some(10));
+        assert!(m.get_switch("verbose"));
+
+        let m = cmd().parse(&["--config=b.json", "--steps=5"]).unwrap();
+        assert_eq!(m.get("config"), Some("b.json"));
+        assert_eq!(m.get_usize("steps").unwrap(), Some(5));
+        assert!(!m.get_switch("verbose"));
+    }
+
+    #[test]
+    fn default_applies() {
+        let m = cmd().parse(&["--steps", "1"]).unwrap();
+        assert_eq!(m.get("config"), Some("default.json"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(cmd().parse(&["--config", "x"]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cmd().parse(&["--steps", "1", "--nope"]).is_err());
+    }
+
+    #[test]
+    fn value_type_errors() {
+        let m = cmd().parse(&["--steps", "abc"]).unwrap();
+        assert!(m.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let m = cmd().parse(&["--steps", "1", "pos1", "pos2"]).unwrap();
+        assert_eq!(m.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App::new("packmamba", "x")
+            .command(Command::new("train", "t"))
+            .command(Command::new("bench", "b").flag("fig", "f", "figure", Some("2")));
+        let (c, m) = app.parse(&["bench", "--fig", "5"]).unwrap();
+        assert_eq!(c.name, "bench");
+        assert_eq!(m.get("fig"), Some("5"));
+        assert!(app.parse(&["nope"]).is_err());
+    }
+}

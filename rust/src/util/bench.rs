@@ -1,0 +1,260 @@
+//! Micro-benchmark harness (offline replacement for `criterion`).
+//!
+//! Protocol per benchmark:
+//!   1. warm up for `warmup` (amortizes compilation caches, page faults),
+//!   2. choose an iteration batch so one sample ≈ `sample_target`,
+//!   3. collect `samples` timed batches,
+//!   4. report median ± MAD (robust to scheduler noise).
+//!
+//! The paper's evaluation protocol — "average throughput of a stable
+//! sequence of 100 consecutive steps" (§4) — maps to `samples: 100` with
+//! batch size 1 in the figure benches.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub sample_target: Duration,
+    pub samples: usize,
+    /// hard cap on total measurement time per benchmark
+    pub budget: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            sample_target: Duration::from_millis(20),
+            samples: 30,
+            budget: Duration::from_secs(20),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast settings for expensive end-to-end benches.
+    pub fn coarse() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            sample_target: Duration::from_millis(1),
+            samples: 10,
+            budget: Duration::from_secs(60),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// seconds per single iteration
+    pub secs_per_iter: Summary,
+    pub iters_per_sample: u64,
+    pub total_iters: u64,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        self.secs_per_iter.p50
+    }
+
+    pub fn report(&self) -> String {
+        let s = &self.secs_per_iter;
+        format!(
+            "{:<44} {:>12}/iter  ±{:<10} (n={}, min {})",
+            self.name,
+            fmt_duration(s.p50),
+            fmt_duration(s.mad),
+            s.n,
+            fmt_duration(s.min),
+        )
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if !secs.is_finite() {
+        return format!("{secs}");
+    }
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Run one benchmark; `f` is a single iteration of the workload.
+pub fn run<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warm-up and per-iteration cost estimate.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < cfg.warmup || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= 1_000_000 {
+            break;
+        }
+    }
+    let est = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+    let iters = ((cfg.sample_target.as_secs_f64() / est.max(1e-12)).ceil() as u64).max(1);
+
+    let mut samples = Vec::with_capacity(cfg.samples);
+    let budget_start = Instant::now();
+    let mut total = 0u64;
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        total += iters;
+        if budget_start.elapsed() > cfg.budget && samples.len() >= 3 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        secs_per_iter: Summary::of(&samples),
+        iters_per_sample: iters,
+        total_iters: total,
+    }
+}
+
+/// A named group of benches with uniform reporting — what a criterion
+/// "bench group" would be.  Also collects (name, median secs) pairs for
+/// machine-readable output.
+pub struct Suite {
+    pub title: String,
+    pub cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(title: &str, cfg: BenchConfig) -> Self {
+        println!("\n=== {title} ===");
+        Self {
+            title: title.to_string(),
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> f64 {
+        let r = run(name, &self.cfg, f);
+        println!("{}", r.report());
+        let med = r.median();
+        self.results.push(r);
+        med
+    }
+
+    /// Record an externally-measured scalar (e.g. a modeled time) so it
+    /// appears in the same table.
+    pub fn record(&mut self, name: &str, secs: f64) {
+        println!(
+            "{:<44} {:>12}/iter  (recorded)",
+            name,
+            fmt_duration(secs)
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            secs_per_iter: Summary::of(&[secs]),
+            iters_per_sample: 0,
+            total_iters: 0,
+        });
+    }
+
+    pub fn median_of(&self, name: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median())
+    }
+
+    /// Dump results as JSON (benches tee this next to stdout tables).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::from_pairs([
+                    ("name", Json::from(r.name.clone())),
+                    ("median_s", Json::from(r.secs_per_iter.p50)),
+                    ("mad_s", Json::from(r.secs_per_iter.mad)),
+                    ("min_s", Json::from(r.secs_per_iter.min)),
+                    ("samples", Json::from(r.secs_per_iter.n)),
+                ])
+            })
+            .collect();
+        Json::from_pairs([
+            ("suite", Json::from(self.title.clone())),
+            ("results", Json::Arr(rows)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_sleep() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            sample_target: Duration::from_millis(2),
+            samples: 5,
+            budget: Duration::from_secs(2),
+        };
+        let r = run("sleep1ms", &cfg, || std::thread::sleep(Duration::from_millis(1)));
+        // medians should land within 3x of the true cost on any sane box
+        assert!(r.median() > 0.0005 && r.median() < 0.01, "median={}", r.median());
+    }
+
+    #[test]
+    fn scales_iteration_count_for_fast_ops() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            sample_target: Duration::from_millis(1),
+            samples: 3,
+            budget: Duration::from_secs(2),
+        };
+        let mut x = 0u64;
+        let r = run("add", &cfg, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters_per_sample > 100, "iters={}", r.iters_per_sample);
+    }
+
+    #[test]
+    fn suite_collects_and_serializes() {
+        let mut s = Suite::new(
+            "test",
+            BenchConfig {
+                warmup: Duration::from_millis(1),
+                sample_target: Duration::from_millis(1),
+                samples: 3,
+                budget: Duration::from_secs(1),
+            },
+        );
+        s.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        s.record("model", 0.5);
+        let j = s.to_json();
+        assert_eq!(j.get("results").unwrap().as_arr().unwrap().len(), 2);
+        assert!(s.median_of("model").unwrap() == 0.5);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(2.0), "2.000s");
+        assert_eq!(fmt_duration(0.002), "2.000ms");
+        assert_eq!(fmt_duration(2e-6), "2.000µs");
+        assert_eq!(fmt_duration(2e-9), "2.0ns");
+    }
+}

@@ -1,0 +1,111 @@
+//! Env-filtered logger for the `log` facade.
+//!
+//! `PACKMAMBA_LOG` selects the max level (`error|warn|info|debug|trace`,
+//! default `info`).  Messages carry a wall-clock timestamp and the target
+//! module, colorized when stderr is a TTY.
+
+use std::io::{IsTerminal, Write};
+use std::sync::OnceLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct Logger {
+    level: LevelFilter,
+    color: bool,
+}
+
+impl Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default();
+        let secs = now.as_secs();
+        let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+        let ms = now.subsec_millis();
+        let lvl = record.level();
+        let (pre, post) = if self.color {
+            let c = match lvl {
+                Level::Error => "\x1b[31m",
+                Level::Warn => "\x1b[33m",
+                Level::Info => "\x1b[32m",
+                Level::Debug => "\x1b[36m",
+                Level::Trace => "\x1b[90m",
+            };
+            (c, "\x1b[0m")
+        } else {
+            ("", "")
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "{pre}[{h:02}:{m:02}:{s:02}.{ms:03} {lvl:<5} {}]{post} {}",
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+/// Install the logger (idempotent).  Returns the active level.
+pub fn init() -> LevelFilter {
+    init_with(parse_level(
+        &std::env::var("PACKMAMBA_LOG").unwrap_or_default(),
+    ))
+}
+
+pub fn init_with(level: LevelFilter) -> LevelFilter {
+    let logger = LOGGER.get_or_init(|| Logger {
+        level,
+        color: std::io::stderr().is_terminal(),
+    });
+    // set_logger fails if already set; that's fine (tests call init repeatedly)
+    let _ = log::set_logger(logger);
+    log::set_max_level(logger.level);
+    logger.level
+}
+
+fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        "off" => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
+        assert_eq!(parse_level(""), LevelFilter::Info);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        let a = init_with(LevelFilter::Debug);
+        let b = init_with(LevelFilter::Error); // second call: keeps first logger
+        assert_eq!(a, LevelFilter::Debug);
+        assert_eq!(b, LevelFilter::Debug);
+        log::info!("logger smoke message");
+    }
+}

@@ -1,0 +1,16 @@
+//! Offline substrates.
+//!
+//! This build environment has no network access to crates.io, so the usual
+//! ecosystem crates (`rand`, `serde_json`, `clap`, `criterion`, `proptest`,
+//! `tokio`) are unavailable.  Each submodule here is a small, focused,
+//! fully-tested replacement for the subset of functionality this project
+//! needs.  They are deliberately dependency-free.
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,260 @@
+//! Mini property-testing framework (offline replacement for `proptest`).
+//!
+//! A property is a predicate over generated inputs; on failure the runner
+//! *shrinks* the failing case by repeatedly trying smaller variants from
+//! the generator's shrink stream, then panics with the minimal case and
+//! the seed needed to replay it.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this offline image)
+//! use packmamba::util::proptest::*;
+//! check("reverse twice is identity", vec_u32(0..100, 0..1000), |xs| {
+//!     let mut r = xs.clone();
+//!     r.reverse();
+//!     r.reverse();
+//!     r == *xs
+//! });
+//! ```
+
+use std::fmt::Debug;
+use std::ops::Range;
+
+use super::rng::Pcg64;
+
+/// Number of cases per property (kept modest; tests run in CI loops).
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator of values of type `T` plus a shrinker.
+pub struct Gen<T> {
+    /// generate a value; `size` grows with the case index so early cases
+    /// are small (fast failure on trivial bugs)
+    pub gen: Box<dyn Fn(&mut Pcg64, usize) -> T>,
+    /// candidate smaller versions of a failing value, most aggressive first
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn map<U: Clone + 'static>(
+        self,
+        f: impl Fn(T) -> U + Clone + 'static,
+        unf: impl Fn(&U) -> T + 'static,
+    ) -> Gen<U> {
+        let g = self.gen;
+        let s = self.shrink;
+        let f2 = f.clone();
+        Gen {
+            gen: Box::new(move |r, size| f(g(r, size))),
+            shrink: Box::new(move |u| s(&unf(u)).into_iter().map(&f2).collect()),
+        }
+    }
+}
+
+pub fn usize_in(range: Range<usize>) -> Gen<usize> {
+    let (lo, hi) = (range.start, range.end);
+    assert!(lo < hi);
+    Gen {
+        gen: Box::new(move |r, _| lo + r.next_below((hi - lo) as u64) as usize),
+        shrink: Box::new(move |&x| {
+            let mut out = Vec::new();
+            if x > lo {
+                out.push(lo);
+                out.push(lo + (x - lo) / 2);
+                out.push(x - 1);
+            }
+            out.dedup();
+            out
+        }),
+    }
+}
+
+pub fn vec_of<T: Clone + 'static>(
+    elem: impl Fn(&mut Pcg64, usize) -> T + 'static,
+    len: Range<usize>,
+) -> Gen<Vec<T>> {
+    let (lo, hi) = (len.start, len.end);
+    Gen {
+        gen: Box::new(move |r, size| {
+            // bias towards shorter vectors early in the run
+            let cap = (lo + 1 + size / 4).min(hi.max(lo + 1));
+            let n = lo + r.next_below((cap - lo).max(1) as u64) as usize;
+            (0..n).map(|_| elem(r, size)).collect()
+        }),
+        shrink: Box::new(move |xs| {
+            let mut out = Vec::new();
+            if xs.len() > lo {
+                out.push(xs[..lo].to_vec()); // minimal length
+                out.push(xs[..xs.len() / 2].to_vec()); // halve
+                let mut one_less = xs.clone();
+                one_less.pop();
+                out.push(one_less);
+                out.push(xs[1..].to_vec()); // drop head
+            }
+            out
+        }),
+    }
+}
+
+pub fn vec_u32(val: Range<u32>, len: Range<usize>) -> Gen<Vec<u32>> {
+    let (vlo, vhi) = (val.start, val.end);
+    vec_of(
+        move |r, _| vlo + r.next_below((vhi - vlo) as u64) as u32,
+        len,
+    )
+}
+
+/// Vectors of sequence lengths — the domain of the packer properties.
+pub fn lengths_vec(min_len: usize, max_len: usize, count: Range<usize>) -> Gen<Vec<usize>> {
+    let (lo, hi) = (min_len, max_len);
+    vec_of(
+        move |r, _| lo + r.next_below((hi - lo + 1) as u64) as usize,
+        count,
+    )
+}
+
+/// Outcome carried by panics so callers can assert on failure contents.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Env overrides let CI crank cases up: PACKMAMBA_PROPTEST_CASES.
+        let cases = std::env::var("PACKMAMBA_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(DEFAULT_CASES);
+        let seed = std::env::var("PACKMAMBA_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self {
+            cases,
+            seed,
+            max_shrink_steps: 500,
+        }
+    }
+}
+
+/// Run a property with the default configuration; panics on failure with
+/// the minimal counterexample.
+pub fn check<T: Clone + Debug + 'static>(
+    name: &str,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_with(name, Config::default(), gen, prop)
+}
+
+pub fn check_with<T: Clone + Debug + 'static>(
+    name: &str,
+    cfg: Config,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg64::new(cfg.seed, 0xB0B);
+    for case in 0..cfg.cases {
+        let value = (gen.gen)(&mut rng, case);
+        if !prop(&value) {
+            let minimal = shrink_failure(&gen, &prop, value, cfg.max_shrink_steps);
+            panic!(
+                "property `{name}` failed (case {case}, seed {:#x});\n\
+                 minimal counterexample: {minimal:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+fn shrink_failure<T: Clone + Debug>(
+    gen: &Gen<T>,
+    prop: &impl Fn(&T) -> bool,
+    mut failing: T,
+    max_steps: usize,
+) -> T {
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for cand in (gen.shrink)(&failing) {
+            steps += 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative-ish", vec_u32(0..100, 0..50), |xs| {
+            let a: u64 = xs.iter().map(|&x| x as u64).sum();
+            let b: u64 = xs.iter().rev().map(|&x| x as u64).sum();
+            a == b
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // property: no vector contains a value >= 90.  Fails; the minimal
+        // counterexample should be a short vector.
+        let result = std::panic::catch_unwind(|| {
+            check_with(
+                "no large values",
+                Config {
+                    cases: 500,
+                    seed: 42,
+                    max_shrink_steps: 500,
+                },
+                vec_u32(0..100, 0..40),
+                |xs| xs.iter().all(|&x| x < 90),
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("minimal counterexample"), "{msg}");
+        // shrunk case should be small: extract the debug list and count items
+        let list = msg.split('[').nth(1).unwrap().split(']').next().unwrap();
+        let n_items = list.split(',').filter(|s| !s.trim().is_empty()).count();
+        assert!(n_items <= 3, "shrinker left {n_items} items: {msg}");
+    }
+
+    #[test]
+    fn usize_gen_respects_bounds() {
+        let g = usize_in(5..10);
+        let mut r = Pcg64::new(1, 1);
+        for i in 0..200 {
+            let v = (g.gen)(&mut r, i);
+            assert!((5..10).contains(&v));
+        }
+    }
+
+    #[test]
+    fn lengths_vec_in_domain() {
+        let g = lengths_vec(57, 2048, 0..64);
+        let mut r = Pcg64::new(2, 2);
+        for i in 0..100 {
+            for v in (g.gen)(&mut r, i) {
+                assert!((57..=2048).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let g = vec_u32(0..1000, 0..20);
+            let mut r = Pcg64::new(99, 0xB0B);
+            (0..10).map(|i| (g.gen)(&mut r, i)).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+}

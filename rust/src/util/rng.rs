@@ -1,0 +1,250 @@
+//! Deterministic PRNGs and samplers (offline replacement for `rand`).
+//!
+//! `Pcg64` is the workhorse generator (PCG-XSL-RR 128/64); `split_mix64`
+//! seeds it.  The samplers cover what the data pipeline and tests need:
+//! uniforms, normals (Box–Muller), truncated log-normal (the paper's
+//! sequence-length distribution) and Zipf (synthetic token stream).
+
+/// SplitMix64 step — good avalanche, used for seeding and cheap hashing.
+pub fn split_mix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xor-shift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MUL: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed deterministically; distinct `stream` values give independent
+    /// sequences for the same seed (used for per-worker RNGs).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let s0 = split_mix64(&mut sm) as u128;
+        let s1 = split_mix64(&mut sm) as u128;
+        let mut sm2 = stream ^ 0xDA3E_39CB_94B9_5BDB;
+        let i0 = split_mix64(&mut sm2) as u128;
+        let i1 = split_mix64(&mut sm2) as u128;
+        let mut rng = Self {
+            state: (s0 << 64) | s1,
+            inc: (((i0 << 64) | i1) << 1) | 1,
+        };
+        rng.next_u64();
+        rng
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MUL)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.next_below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Log-normal with the given *underlying* normal parameters.
+    pub fn next_log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.next_normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical with zero total weight");
+        let mut r = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Zipf-distributed ranks in [1, n] with exponent `s` (synthetic corpus
+/// token frequencies).  Uses the rejection-inversion method of Hörmann &
+/// Derflinger, which is O(1) per sample.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    dens: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1 && s > 0.0 && (s - 1.0).abs() > 1e-9, "unsupported Zipf params");
+        let h = |x: f64, s: f64| (x.powf(1.0 - s)) / (1.0 - s);
+        let h_x1 = h(1.5, s) - 1.0;
+        let h_n = h(n as f64 + 0.5, s);
+        let dens = h_x1 - h_n;
+        Self { n, s, h_x1, dens }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        ((1.0 - self.s) * x).powf(1.0 / (1.0 - self.s))
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        loop {
+            let u = self.h_x1 - rng.next_f64() * self.dens;
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64) as u64;
+            // acceptance test
+            let h = |x: f64| (x.powf(1.0 - self.s)) / (1.0 - self.s);
+            let lhs = h(k as f64 + 0.5) - (k as f64).powf(-self.s);
+            if u >= lhs {
+                return k;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_is_deterministic_and_stream_dependent() {
+        let mut a = Pcg64::new(1, 0);
+        let mut b = Pcg64::new(1, 0);
+        let mut c = Pcg64::new(1, 1);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Pcg64::new(7, 0);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_small_range() {
+        let mut r = Pcg64::new(3, 0);
+        let mut counts = [0u32; 5];
+        for _ in 0..50_000 {
+            counts[r.next_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket should be ~10k; allow generous slack
+            assert!((8_500..11_500).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11, 0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Pcg64::new(5, 0);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn zipf_rank1_most_frequent() {
+        let z = Zipf::new(1000, 1.2);
+        let mut r = Pcg64::new(13, 0);
+        let mut c1 = 0;
+        let mut c10 = 0;
+        for _ in 0..20_000 {
+            let k = z.sample(&mut r);
+            assert!((1..=1000).contains(&k));
+            if k == 1 {
+                c1 += 1;
+            }
+            if k == 10 {
+                c10 += 1;
+            }
+        }
+        assert!(c1 > c10 * 5, "c1={c1} c10={c10}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Pcg64::new(17, 0);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0], "{counts:?}");
+    }
+}

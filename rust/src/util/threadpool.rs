@@ -1,0 +1,287 @@
+//! Bounded channel + fixed worker pool (offline replacement for the
+//! small slice of `tokio`/`crossbeam` this project needs).
+//!
+//! `BoundedQueue` is an MPMC queue with capacity-based **backpressure** —
+//! the data-pipeline threads block in `push` when the trainer falls
+//! behind, which is exactly the flow control the coordinator wants.
+//! `ThreadPool` runs closures on N workers and joins them on drop.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// MPMC bounded queue with blocking push/pop and explicit close.
+pub struct BoundedQueue<T> {
+    inner: Arc<QueueInner<T>>,
+}
+
+struct QueueInner<T> {
+    state: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            inner: Arc::new(QueueInner {
+                state: Mutex::new(QueueState {
+                    items: VecDeque::with_capacity(cap),
+                    closed: false,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                cap,
+            }),
+        }
+    }
+
+    /// Blocking push; returns Err(item) if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.inner.cap {
+                st.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop; returns None once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: producers fail, consumers drain then get None.
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.closed = true;
+        self.inner.not_full.notify_all();
+        self.inner.not_empty.notify_all();
+    }
+}
+
+/// Fixed pool of named worker threads; joins on drop.
+pub struct ThreadPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers, each running `make_worker(worker_index)()`.
+    pub fn spawn<F>(name: &str, n: usize, make_worker: impl Fn(usize) -> F) -> Self
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let handles = (0..n)
+            .map(|i| {
+                let f = make_worker(i);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(f)
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { handles }
+    }
+
+    pub fn join(mut self) {
+        for h in self.handles.drain(..) {
+            h.join().expect("worker panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Scatter `items` across `n` threads with `f(index, item)`, preserving
+/// output order — the host-side all-reduce and packer benches use this.
+pub fn parallel_map<T, U, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, T) -> U + Sync,
+{
+    assert!(n_threads > 0);
+    let n = items.len();
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let work: Mutex<VecDeque<(usize, T)>> = Mutex::new(items.into_iter().enumerate().collect());
+    let results: Mutex<Vec<(usize, U)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads.min(n.max(1)) {
+            scope.spawn(|| loop {
+                let job = work.lock().unwrap().pop_front();
+                match job {
+                    Some((i, item)) => {
+                        let r = f(i, item);
+                        results.lock().unwrap().push((i, r));
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    for (i, r) in results.into_inner().unwrap() {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|o| o.expect("missing result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn queue_fifo_single_thread() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn queue_backpressure_blocks_producer() {
+        let q = BoundedQueue::new(1);
+        q.push(0u32).unwrap();
+        let q2 = q.clone();
+        let blocked = Arc::new(AtomicUsize::new(0));
+        let b2 = blocked.clone();
+        let t = std::thread::spawn(move || {
+            b2.store(1, Ordering::SeqCst);
+            q2.push(1).unwrap(); // must block until consumer pops
+            b2.store(2, Ordering::SeqCst);
+        });
+        while blocked.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(blocked.load(Ordering::SeqCst), 1, "producer should be blocked");
+        assert_eq!(q.pop(), Some(0));
+        t.join().unwrap();
+        assert_eq!(blocked.load(Ordering::SeqCst), 2);
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn queue_close_drains_then_none() {
+        let q = BoundedQueue::new(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.push(3).is_err());
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_mpmc_counts() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(16);
+        let total = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    while let Some(v) = q.pop() {
+                        total.fetch_add(v, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        q.push(1).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..100).collect::<Vec<_>>(), 7, |_, x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_pool_runs_all() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = ThreadPool::spawn("w", 4, |_| {
+            let c = counter.clone();
+            move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+}

@@ -1,0 +1,68 @@
+//! Data-parallel coordinator integration tests (need artifacts).
+
+use std::path::Path;
+
+use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::DataParallelTrainer;
+
+fn have_artifacts() -> bool {
+    let ok = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn cfg(workers: usize, steps: usize) -> TrainConfig {
+    let mut c = TrainConfig::defaults(ModelConfig::tiny());
+    c.scheme = Scheme::Pack;
+    c.dp_workers = workers;
+    c.steps = steps;
+    c.artifacts_dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .to_string_lossy()
+        .into_owned();
+    c
+}
+
+#[test]
+fn two_workers_keep_replicas_identical_and_learn() {
+    if !have_artifacts() {
+        return;
+    }
+    let dp = DataParallelTrainer::new(cfg(2, 12)).unwrap();
+    let r = dp.run().unwrap();
+    assert!(r.replicas_identical, "replicas diverged");
+    assert_eq!(r.metrics.steps(), 12);
+    assert!(
+        r.metrics.mean_loss_tail(3) < r.metrics.mean_loss_head(3),
+        "dp loss should decrease"
+    );
+    // both shards contribute tokens every step
+    for rec in &r.metrics.records {
+        assert!(rec.real_tokens > 0);
+        assert!(rec.sequences >= 2);
+    }
+}
+
+#[test]
+fn single_worker_dp_matches_trainer_semantics() {
+    if !have_artifacts() {
+        return;
+    }
+    // one-worker DP must be a valid degenerate case
+    let dp = DataParallelTrainer::new(cfg(1, 6)).unwrap();
+    let r = dp.run().unwrap();
+    assert!(r.replicas_identical);
+    assert_eq!(r.metrics.steps(), 6);
+    assert!(r.final_params.iter().all(|t| t.data().iter().all(|x| x.is_finite())));
+}
+
+#[test]
+fn rejects_non_pack_scheme() {
+    let mut c = cfg(2, 2);
+    c.scheme = Scheme::Padding;
+    assert!(DataParallelTrainer::new(c).is_err());
+}

@@ -1,0 +1,348 @@
+//! Integration tests over the real AOT artifacts: load HLO text, compile
+//! on the PJRT CPU client, execute, and verify the paper's invariants
+//! end-to-end from rust.
+//!
+//! Requires `make artifacts` to have run (skipped with a message if not).
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::{checkpoint, Trainer, TrainState};
+use packmamba::packing::{PackedBatch, PackedRow, Sequence};
+use packmamba::runtime::{HostValue, Runtime};
+use packmamba::tensor::Tensor;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn runtime() -> Option<Rc<Runtime>> {
+    artifacts_dir().map(|d| Runtime::load(&d).expect("runtime load"))
+}
+
+fn seq(id: u64, toks: Vec<i32>) -> Sequence {
+    Sequence { tokens: toks, id }
+}
+
+/// Deterministic pseudo-random token sequence in [1, vocab).
+fn rand_seq(id: u64, len: usize, vocab: usize) -> Sequence {
+    let mut tokens = Vec::with_capacity(len);
+    let mut x = id.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    for _ in 0..len {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        tokens.push(1 + (x % (vocab as u64 - 1)) as i32);
+    }
+    seq(id, tokens)
+}
+
+#[test]
+fn manifest_param_count_matches_config() {
+    let Some(rt) = runtime() else { return };
+    for name in ["tiny", "small"] {
+        let cfg = ModelConfig::by_name(name).unwrap();
+        let total: usize = rt
+            .manifest()
+            .params_for(name)
+            .unwrap()
+            .iter()
+            .map(|p| p.element_count())
+            .sum();
+        assert_eq!(total, cfg.param_count(), "{name}");
+    }
+}
+
+#[test]
+fn init_artifact_produces_finite_params() {
+    let Some(rt) = runtime() else { return };
+    let state = TrainState::init(&rt, "tiny").unwrap();
+    assert_eq!(
+        state.param_count(),
+        ModelConfig::tiny().param_count()
+    );
+    for (p, spec) in state.params.iter().zip(rt.manifest().params_for("tiny").unwrap()) {
+        assert_eq!(p.shape(), spec.shape.as_slice(), "{}", spec.name);
+        assert!(p.data().iter().all(|x| x.is_finite()), "{}", spec.name);
+    }
+    // norm weights start at 1
+    let order = rt.manifest().params_for("tiny").unwrap();
+    let norm_idx = order.iter().position(|p| p.name == "norm_f_w").unwrap();
+    assert!(state.params[norm_idx].data().iter().all(|&x| x == 1.0));
+}
+
+/// The central invariant, from rust: forward(pack(S)) unpacked equals
+/// forward on each sequence alone (PUI, paper §3.1).
+#[test]
+fn packing_unpacking_invariance_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    let state = TrainState::init(&rt, "tiny").unwrap();
+    let vocab = 512;
+
+    // three sequences that pack into one 128-slot row
+    let seqs = vec![
+        rand_seq(1, 30, vocab),
+        rand_seq(2, 50, vocab),
+        rand_seq(3, 40, vocab),
+    ];
+    let row = PackedRow { sequences: seqs.clone() };
+    let packed = PackedBatch::from_rows(
+        &[row, PackedRow::default(), PackedRow::default(), PackedRow::default()],
+        128,
+    );
+
+    // packed forward
+    let fwd = rt.executable("forward_tiny_b4x128").unwrap();
+    let mut args: Vec<HostValue> = state.params.iter().map(|p| HostValue::F32(p.clone())).collect();
+    args.push(HostValue::I32(packed.tokens.clone()));
+    args.push(HostValue::I32(packed.position_indices.clone()));
+    let logits = fwd.run(&args).unwrap().remove(0).into_f32().unwrap();
+    assert_eq!(logits.shape(), &[4, 128, vocab]);
+
+    // per-sequence forward through the bucketed single-sequence artifacts
+    let mut off = 0usize;
+    for s in &seqs {
+        let bucket = [32usize, 64, 128].iter().copied().find(|&b| b >= s.len()).unwrap();
+        let single = PackedBatch::from_rows(
+            &[PackedRow { sequences: vec![s.clone()] }],
+            bucket,
+        );
+        let exe = rt.executable(&format!("forward_tiny_b1x{bucket}")).unwrap();
+        let mut args: Vec<HostValue> =
+            state.params.iter().map(|p| HostValue::F32(p.clone())).collect();
+        args.push(HostValue::I32(single.tokens.clone()));
+        args.push(HostValue::I32(single.position_indices.clone()));
+        let solo = exe.run(&args).unwrap().remove(0).into_f32().unwrap();
+
+        // compare token-by-token logits
+        for t in 0..s.len() {
+            for v in 0..vocab {
+                let a = logits.at(&[0, off + t, v]);
+                let b = solo.at(&[0, t, v]);
+                assert!(
+                    (a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+                    "PUI violated at seq {} tok {t} vocab {v}: packed={a} solo={b}",
+                    s.id
+                );
+            }
+        }
+        off += s.len();
+    }
+}
+
+/// Negative control: with position indices that do NOT reset at sequence
+/// starts, state leaks across the boundary and PUI must fail — proving the
+/// test above is actually sensitive to the kernel modification.
+#[test]
+fn pui_fails_without_index_reset() {
+    let Some(rt) = runtime() else { return };
+    let state = TrainState::init(&rt, "tiny").unwrap();
+    let seqs = vec![rand_seq(4, 60, 512), rand_seq(5, 60, 512)];
+    let packed = PackedBatch::from_rows(
+        &[
+            PackedRow { sequences: seqs.clone() },
+            PackedRow::default(),
+            PackedRow::default(),
+            PackedRow::default(),
+        ],
+        128,
+    );
+    // sabotage: continuous arange indices (no reset at the 2nd sequence)
+    let mut bad = packed.position_indices.clone();
+    for (i, v) in bad.data_mut().iter_mut().enumerate() {
+        *v = (i % 128) as i32;
+    }
+
+    let fwd = rt.executable("forward_tiny_b4x128").unwrap();
+    let run = |pos: &packmamba::tensor::IntTensor| {
+        let mut args: Vec<HostValue> =
+            state.params.iter().map(|p| HostValue::F32(p.clone())).collect();
+        args.push(HostValue::I32(packed.tokens.clone()));
+        args.push(HostValue::I32(pos.clone()));
+        fwd.run(&args).unwrap().remove(0).into_f32().unwrap()
+    };
+    let good = run(&packed.position_indices);
+    let leaky = run(&bad);
+    // outputs of the SECOND sequence must differ (state leaked into it)
+    let mut max_diff = 0f32;
+    for t in 60..120 {
+        for v in 0..512 {
+            max_diff = max_diff.max((good.at(&[0, t, v]) - leaky.at(&[0, t, v])).abs());
+        }
+    }
+    assert!(
+        max_diff > 1e-3,
+        "removing the index reset should change downstream outputs (got {max_diff})"
+    );
+    // and the FIRST sequence (before any boundary) must be identical
+    let mut first_diff = 0f32;
+    for t in 0..60 {
+        for v in 0..512 {
+            first_diff = first_diff.max((good.at(&[0, t, v]) - leaky.at(&[0, t, v])).abs());
+        }
+    }
+    assert!(first_diff == 0.0, "first sequence must be unaffected: {first_diff}");
+}
+
+#[test]
+fn train_step_decreases_loss_tiny() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = TrainConfig::defaults(ModelConfig::tiny());
+    cfg.scheme = Scheme::Pack;
+    cfg.steps = 30;
+    let mut trainer = Trainer::new(Rc::clone(&rt), cfg).unwrap();
+    trainer.train().unwrap();
+    let m = &trainer.metrics;
+    assert_eq!(m.steps(), 30);
+    let head = m.mean_loss_head(5);
+    let tail = m.mean_loss_tail(5);
+    assert!(
+        tail < head,
+        "loss should decrease: head {head} tail {tail}"
+    );
+    // vs ln(vocab) = 6.24 random baseline, head should start near it
+    assert!((4.0..8.0).contains(&head), "initial loss {head}");
+}
+
+#[test]
+fn all_three_schemes_train() {
+    let Some(rt) = runtime() else { return };
+    for scheme in [Scheme::Pack, Scheme::Padding, Scheme::SingleSequence] {
+        let mut cfg = TrainConfig::defaults(ModelConfig::tiny());
+        cfg.scheme = scheme;
+        cfg.steps = 4;
+        let mut trainer = Trainer::new(Rc::clone(&rt), cfg).unwrap();
+        trainer.train().unwrap_or_else(|e| panic!("{} failed: {e}", scheme.name()));
+        assert_eq!(trainer.metrics.steps(), 4, "{}", scheme.name());
+        // padding scheme must waste more slots than pack
+    }
+}
+
+#[test]
+fn padding_rates_ordered_across_schemes() {
+    let Some(rt) = runtime() else { return };
+    let run = |scheme: Scheme| {
+        let mut cfg = TrainConfig::defaults(ModelConfig::tiny());
+        cfg.scheme = scheme;
+        cfg.steps = 12;
+        let mut trainer = Trainer::new(Rc::clone(&rt), cfg).unwrap();
+        trainer.train().unwrap();
+        trainer.metrics.padding_rate()
+    };
+    let pack = run(Scheme::Pack);
+    let padding = run(Scheme::Padding);
+    assert!(
+        pack < padding,
+        "pack padding rate {pack} must beat padding scheme {padding}"
+    );
+}
+
+#[test]
+fn fused_step_equals_grads_plus_apply() {
+    // the DP path (grads + adam_apply) must produce the same update as the
+    // fused train_step artifact on an identical batch.
+    let Some(rt) = runtime() else { return };
+    let state = TrainState::init(&rt, "tiny").unwrap();
+    let np = state.params.len();
+
+    let seqs = vec![rand_seq(11, 70, 512), rand_seq(12, 50, 512), rand_seq(13, 40, 512)];
+    let batch = PackedBatch::from_rows(
+        &[
+            PackedRow { sequences: seqs[..2].to_vec() },
+            PackedRow { sequences: seqs[2..].to_vec() },
+            PackedRow::default(),
+            PackedRow::default(),
+        ],
+        128,
+    );
+
+    // fused
+    let fused = rt.executable("train_step_tiny_pack_b4x128").unwrap();
+    let mut args: Vec<HostValue> = Vec::new();
+    for group in [&state.params, &state.m, &state.v] {
+        for t in group.iter() {
+            args.push(HostValue::F32(t.clone()));
+        }
+    }
+    args.push(HostValue::scalar(1.0));
+    args.push(HostValue::I32(batch.tokens.clone()));
+    args.push(HostValue::I32(batch.targets.clone()));
+    args.push(HostValue::I32(batch.position_indices.clone()));
+    args.push(HostValue::F32(batch.loss_mask.clone()));
+    let fused_out = fused.run(&args).unwrap();
+    let fused_loss = fused_out[3 * np].as_f32().unwrap().data()[0];
+
+    // grads + apply
+    let grads_exe = rt.executable("grads_tiny_b4x128").unwrap();
+    let mut gargs: Vec<HostValue> =
+        state.params.iter().map(|p| HostValue::F32(p.clone())).collect();
+    gargs.push(HostValue::I32(batch.tokens.clone()));
+    gargs.push(HostValue::I32(batch.targets.clone()));
+    gargs.push(HostValue::I32(batch.position_indices.clone()));
+    gargs.push(HostValue::F32(batch.loss_mask.clone()));
+    let gout = grads_exe.run(&gargs).unwrap();
+    let loss = gout[0].as_f32().unwrap().data()[0];
+    assert!((loss - fused_loss).abs() < 1e-5, "{loss} vs {fused_loss}");
+
+    let apply = rt.executable("adam_apply_tiny").unwrap();
+    let mut aargs: Vec<HostValue> = Vec::new();
+    for group in [&state.params, &state.m, &state.v] {
+        for t in group.iter() {
+            aargs.push(HostValue::F32(t.clone()));
+        }
+    }
+    aargs.push(HostValue::scalar(1.0));
+    for g in &gout[1..] {
+        aargs.push(g.clone());
+    }
+    let aout = apply.run(&aargs).unwrap();
+
+    // compare new params
+    for i in 0..np {
+        let fused_p = fused_out[i].as_f32().unwrap();
+        let dp_p = aout[i].as_f32().unwrap();
+        assert!(
+            fused_p.allclose(dp_p, 1e-5, 1e-6),
+            "param {i} diverges between fused and grads+apply"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_round_trip_with_real_state() {
+    let Some(rt) = runtime() else { return };
+    let state = TrainState::init(&rt, "tiny").unwrap();
+    let specs = rt.manifest().params_for("tiny").unwrap().to_vec();
+    let dir = std::env::temp_dir().join("packmamba_int_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.bin");
+    checkpoint::save(&path, "tiny", &specs, &state).unwrap();
+    let (config, loaded) = checkpoint::load(&path, &specs).unwrap();
+    assert_eq!(config, "tiny");
+    assert_eq!(loaded.params.len(), state.params.len());
+    for (a, b) in loaded.params.iter().zip(&state.params) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn executable_validates_shapes() {
+    let Some(rt) = runtime() else { return };
+    let fwd = rt.executable("forward_tiny_b1x32").unwrap();
+    // wrong arity
+    assert!(fwd.run(&[HostValue::scalar(1.0)]).is_err());
+    // wrong shape for tokens
+    let state = TrainState::init(&rt, "tiny").unwrap();
+    let mut args: Vec<HostValue> =
+        state.params.iter().map(|p| HostValue::F32(p.clone())).collect();
+    args.push(HostValue::F32(Tensor::zeros(&[1, 32]))); // f32, must be i32
+    args.push(HostValue::F32(Tensor::zeros(&[1, 32])));
+    assert!(fwd.run(&args).is_err());
+}
