@@ -1,54 +1,53 @@
-//! Shared bench plumbing: artifact discovery, random operator inputs,
-//! and JSON result output under target/bench/.
+//! Shared bench plumbing: backend selection, packed input builders, and
+//! JSON result output under target/bench/.  The figure benches run
+//! against the native implementation and need no artifacts; for the
+//! end-to-end training bench (fig5) `PACKMAMBA_BACKEND=pjrt` selects
+//! the artifact runtime when built with `--features pjrt`.  fig2/fig6
+//! measure the native kernels directly and ignore that variable.
 #![allow(dead_code)] // each bench binary uses a different subset
 
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::path::Path;
 
-use packmamba::runtime::{ArtifactSpec, DType, HostValue, Runtime};
-use packmamba::tensor::{IntTensor, Tensor};
+use packmamba::config::{BackendKind, TrainConfig};
 use packmamba::util::json::Json;
-use packmamba::util::rng::Pcg64;
 
-pub fn artifacts_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-        None
+/// Apply `PACKMAMBA_BACKEND` (if set) to a train config.
+pub fn apply_backend_env(cfg: &mut TrainConfig) {
+    if let Ok(b) = std::env::var("PACKMAMBA_BACKEND") {
+        match BackendKind::parse(&b) {
+            Some(kind) => cfg.backend = kind,
+            None => eprintln!("ignoring bad PACKMAMBA_BACKEND `{b}`"),
+        }
     }
 }
 
-pub fn runtime() -> Option<Rc<Runtime>> {
-    artifacts_dir().map(|d| Runtime::load(&d).expect("runtime"))
+/// Position-index plane with two equal sequences per row (the dense
+/// layout the paper's op benchmarks use).
+pub fn two_seq_positions(rows: usize, len: usize) -> Vec<i32> {
+    let half = (len / 2).max(1);
+    let mut v = vec![0i32; rows * len];
+    for (i, slot) in v.iter_mut().enumerate() {
+        let t = i % len;
+        *slot = if t < half { t as i32 } else { (t - half) as i32 };
+    }
+    v
 }
 
-/// Random inputs matching an operator artifact's signature.  Position
-/// indices get a two-sequences-per-row layout; floats are small (keeps
-/// exp() in the scan well-conditioned).
-pub fn random_args(spec: &ArtifactSpec, rng: &mut Pcg64) -> Vec<HostValue> {
-    spec.inputs
-        .iter()
-        .map(|ts| match ts.dtype {
-            DType::I32 => {
-                let l = *ts.shape.last().unwrap_or(&1);
-                let half = (l / 2).max(1);
-                let mut v = vec![0i32; ts.element_count()];
-                for (i, slot) in v.iter_mut().enumerate() {
-                    let t = i % l;
-                    *slot = if t < half { t as i32 } else { (t - half) as i32 };
-                }
-                HostValue::I32(IntTensor::new(&ts.shape, v))
-            }
-            DType::F32 => HostValue::F32(Tensor::from_fn(&ts.shape, |_| {
-                0.05 * (rng.next_f32() - 0.5)
-            })),
-            DType::Bf16 => HostValue::Bf16(Tensor::from_fn(&ts.shape, |_| {
-                0.05 * (rng.next_f32() - 0.5)
-            })),
-        })
-        .collect()
+/// Position-index plane with one sequence of `used` tokens per row
+/// (padding-scheme layout; the tail restarts at 0).
+pub fn one_seq_positions(rows: usize, len: usize, used: usize) -> Vec<i32> {
+    let used = used.min(len);
+    let mut v = vec![0i32; rows * len];
+    for (i, slot) in v.iter_mut().enumerate() {
+        let t = i % len;
+        *slot = if t < used { t as i32 } else { (t - used) as i32 };
+    }
+    v
+}
+
+/// Small random f32 buffer (keeps `exp()` in the scan well-conditioned).
+pub fn small_random(rng: &mut packmamba::util::rng::Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| scale * (rng.next_f32() - 0.5)).collect()
 }
 
 /// Write a bench result JSON under target/bench/<name>.json.

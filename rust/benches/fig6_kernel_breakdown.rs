@@ -1,84 +1,136 @@
 //! Fig 6 reproduction: per-kernel time, padding scheme vs pack scheme.
 //!
-//! MEASURED — the isolated operator artifacts (gemm / conv1d / ssm / norm)
-//! at 1.4B-scaled dims, "padding" geometry (3×1024, one sequence per row)
-//! vs "pack" geometry (1×2048 dense) on the CPU PJRT client; speedups are
-//! per *useful token*.
+//! MEASURED — the native packed operators (gemm / conv1d / ssm / norm)
+//! at 1.4B-scaled dims (D=256, N=16), "padding" geometry (3×1024, one
+//! sequence per row, 33.7% useful) vs "pack" geometry (1×2048 dense,
+//! ~95% useful); speedups are per *useful token*.  No artifacts needed.
 //!
 //! MODELED — the calibrated A100 breakdown at the paper's true scale
 //! (Mamba-1.4B, seqlen 4096), where the 3.91× fwd-bwd figure lives.
 
 mod common;
 
+use packmamba::backend::kernels::{self, Dims};
+use packmamba::backend::ops;
 use packmamba::data::LengthTrace;
 use packmamba::perfmodel::{fig6_breakdown, Dtype, GpuSpec};
 use packmamba::util::bench::{BenchConfig, Suite};
 use packmamba::util::json::Json;
 use packmamba::util::rng::Pcg64;
 
-fn main() {
-    let Some(rt) = common::runtime() else { return };
-    let mut rng = Pcg64::new(3, 0);
+/// One op-benchmark geometry: (rows, len, useful fraction, positions).
+struct Geometry {
+    scheme: &'static str,
+    rows: usize,
+    len: usize,
+    useful: f64,
+    pos: Vec<i32>,
+}
 
-    // Useful-token accounting mirrors the paper's rates: padding rows are
-    // 33.7% useful (66.3% padding, §2.1), packed rows ~95% useful (19.1%
-    // streaming-pack padding would be 81%, but the op artifacts use a
-    // denser two-sequence layout; 95% matches their geometry).
-    let useful = |scheme: &str, tokens: usize| -> f64 {
-        match scheme {
-            "padding" => tokens as f64 * (1.0 - 0.663),
-            _ => tokens as f64 * 0.95,
-        }
-    };
+fn geometries() -> Vec<Geometry> {
+    vec![
+        // padding rows are 33.7% useful (66.3% padding, §2.1)
+        Geometry {
+            scheme: "padding",
+            rows: 3,
+            len: 1024,
+            useful: 1.0 - 0.663,
+            pos: common::one_seq_positions(3, 1024, (1024.0 * 0.337) as usize),
+        },
+        // packed rows ~95% useful (dense two-sequence layout)
+        Geometry {
+            scheme: "pack",
+            rows: 1,
+            len: 2048,
+            useful: 0.95,
+            pos: common::two_seq_positions(1, 2048),
+        },
+    ]
+}
+
+fn main() {
+    let mut rng = Pcg64::new(3, 0);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let d = 256usize; // 1.4B-scaled channel count for CPU measurement
+    let n = 16usize;
+    let wlen = 4usize;
 
     let mut cfg = BenchConfig::default();
     cfg.samples = 10;
     cfg.budget = std::time::Duration::from_secs(30);
-    let mut suite = Suite::new("Fig 6 measured (CPU, 1.4B-scaled ops)", cfg);
+    let mut suite = Suite::new("Fig 6 measured (native packed ops, 1.4B-scaled)", cfg);
 
-    let ops = ["op_gemm", "op_conv1d", "op_ssm", "op_norm"];
-    let mut rows = Vec::new();
-    for op in ops {
+    let ops_list = ["op_gemm", "op_conv1d", "op_ssm", "op_norm"];
+    let mut rows_json = Vec::new();
+    for op in ops_list {
         let mut per_scheme = std::collections::BTreeMap::new();
-        for scheme in ["padding", "pack"] {
-            let name = if op == "op_gemm" {
-                format!("{op}_{scheme}_f32")
-            } else {
-                format!("{op}_{scheme}")
+        for g in geometries() {
+            let dims = Dims {
+                b: g.rows,
+                l: g.len,
+                d,
+                n,
             };
-            let exe = rt.executable(&name).expect("compile");
-            let spec = exe.spec().clone();
-            let tokens = spec.meta_usize("tokens").unwrap_or(
-                spec.meta_usize("batch").unwrap_or(1) * spec.meta_usize("seq_len").unwrap_or(1),
-            );
-            let args = common::random_args(&spec, &mut rng);
-            exe.run(&args).expect("warmup");
-            let med = suite.bench(&name, || {
-                exe.run(&args).expect("run");
-            });
-            per_scheme.insert(scheme, med / useful(scheme, tokens));
+            let t = g.rows * g.len;
+            let tokens = t as f64;
+            let name = format!("{op}_{}", g.scheme);
+            let med = match op {
+                "op_gemm" => {
+                    // the block's in_proj GEMM: (T, d) @ (d, 2d)
+                    let a = common::small_random(&mut rng, t * d, 0.05);
+                    let b = common::small_random(&mut rng, d * 2 * d, 0.05);
+                    suite.bench(&name, || {
+                        std::hint::black_box(ops::matmul(&a, t, d, &b, 2 * d, threads));
+                    })
+                }
+                "op_conv1d" => {
+                    let x = common::small_random(&mut rng, t * d, 0.05);
+                    let w = common::small_random(&mut rng, wlen * d, 0.05);
+                    let bias = common::small_random(&mut rng, d, 0.05);
+                    suite.bench(&name, || {
+                        std::hint::black_box(kernels::conv1d_packed_fwd(
+                            &x, dims, &w, wlen, &bias, &g.pos, threads,
+                        ));
+                    })
+                }
+                "op_ssm" => {
+                    let x = common::small_random(&mut rng, t * d, 0.05);
+                    let dt: Vec<f32> = common::small_random(&mut rng, t * d, 0.05)
+                        .into_iter()
+                        .map(|v| v.abs() + 0.01)
+                        .collect();
+                    let a: Vec<f32> = common::small_random(&mut rng, d * n, 1.0)
+                        .into_iter()
+                        .map(|v| -(v.abs() + 0.1))
+                        .collect();
+                    let bm = common::small_random(&mut rng, t * n, 0.05);
+                    let cm = common::small_random(&mut rng, t * n, 0.05);
+                    let dv = common::small_random(&mut rng, d, 0.05);
+                    suite.bench(&name, || {
+                        std::hint::black_box(kernels::ssm_packed_fwd_nocache(
+                            &x, &dt, &a, &bm, &cm, &dv, &g.pos, dims, threads,
+                        ));
+                    })
+                }
+                "op_norm" => {
+                    let x = common::small_random(&mut rng, t * d, 0.05);
+                    let w = common::small_random(&mut rng, d, 0.05);
+                    suite.bench(&name, || {
+                        std::hint::black_box(ops::rms_norm_fwd(&x, d, &w, 1e-5));
+                    })
+                }
+                _ => unreachable!(),
+            };
+            per_scheme.insert(g.scheme, med / (tokens * g.useful));
         }
         let speedup = per_scheme["padding"] / per_scheme["pack"];
         println!("  -> {op}: pack speedup per useful token = {speedup:.2}x");
-        rows.push(Json::from_pairs([
+        rows_json.push(Json::from_pairs([
             ("op", Json::from(op)),
             ("padding_s_per_tok", Json::from(per_scheme["padding"])),
             ("pack_s_per_tok", Json::from(per_scheme["pack"])),
             ("speedup", Json::from(speedup)),
         ]));
-    }
-
-    // bf16 vs f32 gemm (the dtype axis of the paper's evaluation)
-    for scheme in ["padding", "pack"] {
-        for dt in ["f32", "bf16"] {
-            let name = format!("op_gemm_{scheme}_{dt}");
-            let exe = rt.executable(&name).expect("compile");
-            let args = common::random_args(exe.spec(), &mut rng);
-            exe.run(&args).expect("warmup");
-            suite.bench(&name, || {
-                exe.run(&args).expect("run");
-            });
-        }
     }
 
     println!("\n=== Fig 6 modeled (A100, Mamba-1.4B, packed seqlen 4096, bf16) ===");
@@ -110,7 +162,7 @@ fn main() {
         "fig6_kernel_breakdown",
         &Json::from_pairs([
             ("figure", Json::from("fig6")),
-            ("measured_ops", Json::Arr(rows)),
+            ("measured_ops", Json::Arr(rows_json)),
             ("modeled_a100", Json::Arr(model_rows)),
             ("modeled_total_speedup", Json::from(total)),
             ("suite", suite.to_json()),

@@ -81,6 +81,12 @@ fn main() {
     suite.bench("position_indices_4096", || {
         std::hint::black_box(position_indices(&lens, 4096));
     });
+    // many short sequences: the regime where a per-sequence intermediate
+    // allocation would dominate (regression guard for the extend fix)
+    let short_lens = [8usize; 500];
+    suite.bench("position_indices_many_short", || {
+        std::hint::black_box(position_indices(&short_lens, 4096));
+    });
     suite.bench("reverse_indices_4096", || {
         std::hint::black_box(reverse_indices(&lens, 4096));
     });

@@ -1,0 +1,88 @@
+//! Quickstart: pack variable-length sequences, run the native packed
+//! Mamba forward, unpack, and verify Packing-Unpacking Invariance (PUI)
+//! against per-sequence execution — no artifacts, no features:
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (With `--features pjrt` and `make artifacts`, the same invariant is
+//! asserted against the AOT artifacts by `tests/runtime_integration.rs`.)
+
+use packmamba::backend::{Backend, NativeBackend};
+use packmamba::config::ModelConfig;
+use packmamba::packing::{unpack_outputs, PackedBatch, PackedRow, Sequence};
+use packmamba::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    packmamba::util::logging::init();
+    let cfg = ModelConfig::tiny();
+    let backend = NativeBackend::new();
+
+    // 1. initialize model parameters (deterministic host init)
+    let state = backend.init_state(&cfg, 7)?;
+    println!(
+        "tiny Mamba: {} parameters, native backend ({} threads)",
+        state.param_count(),
+        backend.threads()
+    );
+
+    // 2. three variable-length "documents"
+    let mut rng = Pcg64::new(7, 0);
+    let seqs: Vec<Sequence> = [50usize, 38, 30]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| Sequence {
+            tokens: (0..n).map(|_| 1 + rng.next_below(511) as i32).collect(),
+            id: i as u64,
+        })
+        .collect();
+
+    // 3. pack them into one 128-slot row
+    let packed = PackedBatch::from_rows(
+        &[PackedRow {
+            sequences: seqs.clone(),
+        }],
+        128,
+    );
+    println!(
+        "packed {} sequences into {}x{} ({}% padding)",
+        seqs.len(),
+        packed.rows(),
+        packed.pack_len(),
+        (packed.padding_rate() * 100.0).round()
+    );
+
+    // 4. run the packed forward
+    let logits = backend.forward(&cfg, &state.params, &packed)?;
+    println!("packed logits: {:?}", logits.shape());
+
+    // 5. unpack per-sequence outputs
+    let per_seq = unpack_outputs(&packed, &logits);
+    for (id, vals) in &per_seq {
+        println!("  sequence {id}: {} logit values", vals.len());
+    }
+
+    // 6. PUI check: each sequence alone must give identical logits
+    let mut worst = 0f32;
+    let mut off = 0usize;
+    for s in &seqs {
+        let solo_batch = PackedBatch::from_rows(
+            &[PackedRow {
+                sequences: vec![s.clone()],
+            }],
+            s.len(),
+        );
+        let solo = backend.forward(&cfg, &state.params, &solo_batch)?;
+        for t in 0..s.len() {
+            for v in 0..cfg.vocab_size {
+                let a = logits.at(&[0, off + t, v]);
+                let b = solo.at(&[0, t, v]);
+                worst = worst.max((a - b).abs());
+            }
+        }
+        off += s.len();
+    }
+    println!("PUI max |packed - solo| over all logits: {worst:.2e}");
+    anyhow::ensure!(worst < 1e-5, "PUI violated!");
+    println!("PUI holds: f(S) == unpack(f(pack(S)))  ✓");
+    Ok(())
+}

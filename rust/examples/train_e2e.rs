@@ -1,16 +1,17 @@
-//! End-to-end training driver (the repo's required E2E validation): train
-//! the `small` Mamba LM for a few hundred steps on the synthetic corpus
-//! with the PackMamba scheme, logging the loss curve and throughput.
-//! Results are recorded in EXPERIMENTS.md.
+//! End-to-end training driver (the repo's required E2E validation):
+//! train the `small` Mamba LM for a few hundred steps on the synthetic
+//! corpus with the PackMamba scheme, logging the loss curve and
+//! throughput.  Runs self-contained on the native backend:
 //!
-//!     make artifacts && cargo run --release --example train_e2e [steps]
+//!     cargo run --release --example train_e2e [steps]
+//!
+//! Set PACKMAMBA_BACKEND=pjrt (with `--features pjrt` + artifacts) to
+//! drive the AOT path instead.
 
 use std::path::Path;
-use std::rc::Rc;
 
-use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
 use packmamba::coordinator::{checkpoint, Trainer};
-use packmamba::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     packmamba::util::logging::init();
@@ -23,15 +24,19 @@ fn main() -> anyhow::Result<()> {
     cfg.scheme = Scheme::Pack;
     cfg.steps = steps;
     cfg.seed = 1234;
+    if let Ok(b) = std::env::var("PACKMAMBA_BACKEND") {
+        cfg.backend = BackendKind::parse(&b)
+            .ok_or_else(|| anyhow::anyhow!("bad PACKMAMBA_BACKEND `{b}`"))?;
+    }
 
-    let runtime = Runtime::load(Path::new("artifacts"))?;
-    let mut trainer = Trainer::new(Rc::clone(&runtime), cfg.clone())?;
+    let mut trainer = Trainer::from_config(cfg.clone())?;
     println!(
-        "training `small` ({} params, {} layers, d_model {}) for {} steps, scheme=pack",
+        "training `small` ({} params, {} layers, d_model {}) for {} steps, scheme=pack, backend={}",
         trainer.state().param_count(),
         cfg.model.n_layers,
         cfg.model.d_model,
-        steps
+        steps,
+        cfg.backend.name()
     );
 
     let t0 = std::time::Instant::now();
@@ -68,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     // persist run outputs
     std::fs::create_dir_all("target/e2e")?;
     std::fs::write("target/e2e/metrics.json", m.to_json().pretty())?;
-    let specs = runtime.manifest().params_for("small")?.to_vec();
+    let specs = trainer.backend().param_specs(&cfg.model)?;
     checkpoint::save(
         Path::new("target/e2e/small.ckpt"),
         "small",

@@ -1,0 +1,148 @@
+//! Host-side fused AdamW — mirrors `adamw_update` in
+//! `python/compile/model.py` (same defaults, same decoupled weight decay
+//! on matrices only) so native and PJRT training follow the same
+//! optimizer trajectory.
+
+use crate::runtime::ParamSpec;
+use crate::tensor::Tensor;
+use crate::Result;
+
+use super::params;
+use super::TrainState;
+
+/// Optimizer hyperparameters (defaults match the AOT artifacts).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamWConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamWConfig {
+    fn default() -> Self {
+        Self {
+            lr: 3e-4,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+        }
+    }
+}
+
+/// Apply one AdamW update in place.  `step` inside is 1-based
+/// (`state.step + 1`), matching the fused artifact's convention; the
+/// caller advances `state.step` afterwards.
+pub fn apply(
+    opt: &AdamWConfig,
+    specs: &[ParamSpec],
+    state: &mut TrainState,
+    grads: &[Tensor],
+) -> Result<()> {
+    anyhow::ensure!(
+        specs.len() == state.params.len() && grads.len() == state.params.len(),
+        "adamw arity: {} specs, {} params, {} grads",
+        specs.len(),
+        state.params.len(),
+        grads.len()
+    );
+    let step = state.step as f32 + 1.0;
+    let b1c = 1.0 - opt.beta1.powf(step);
+    let b2c = 1.0 - opt.beta2.powf(step);
+    for (((spec, pt), mt), (vt, gt)) in specs
+        .iter()
+        .zip(state.params.iter_mut())
+        .zip(state.m.iter_mut())
+        .zip(state.v.iter_mut().zip(grads.iter()))
+    {
+        anyhow::ensure!(
+            pt.shape() == gt.shape(),
+            "adamw shape mismatch on {}: {:?} vs {:?}",
+            spec.name,
+            pt.shape(),
+            gt.shape()
+        );
+        let wd = if params::decays(&spec.name) {
+            opt.weight_decay
+        } else {
+            0.0
+        };
+        let p = pt.data_mut();
+        let m = mt.data_mut();
+        let v = vt.data_mut();
+        let g = gt.data();
+        for i in 0..p.len() {
+            let gi = g[i];
+            m[i] = opt.beta1 * m[i] + (1.0 - opt.beta1) * gi;
+            v[i] = opt.beta2 * v[i] + (1.0 - opt.beta2) * gi * gi;
+            let mut upd = (m[i] / b1c) / ((v[i] / b2c).sqrt() + opt.eps);
+            upd += wd * p[i];
+            p[i] -= opt.lr * upd;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn tiny_state() -> (Vec<ParamSpec>, TrainState) {
+        let specs = vec![
+            ParamSpec {
+                name: "embedding".to_string(),
+                shape: vec![2, 2],
+            },
+            ParamSpec {
+                name: "layers.0.conv_b".to_string(),
+                shape: vec![3],
+            },
+        ];
+        let params = vec![Tensor::full(&[2, 2], 1.0), Tensor::full(&[3], 1.0)];
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        (
+            specs,
+            TrainState {
+                m: zeros.clone(),
+                v: zeros,
+                params,
+                step: 0,
+            },
+        )
+    }
+
+    #[test]
+    fn moves_against_gradient_and_decays_matrices() {
+        let (specs, mut state) = tiny_state();
+        let grads = vec![Tensor::full(&[2, 2], 1.0), Tensor::full(&[3], 1.0)];
+        let opt = AdamWConfig::default();
+        apply(&opt, &specs, &mut state, &grads).unwrap();
+        // both move down (positive gradient); the decayed matrix moves more
+        let decayed = state.params[0].data()[0];
+        let plain = state.params[1].data()[0];
+        assert!(decayed < 1.0 && plain < 1.0);
+        assert!(decayed < plain, "decay should shrink the matrix more");
+        // bias-corrected first step ≈ lr * (1 + wd) for the matrix
+        let expect = 1.0 - opt.lr * (1.0 + opt.weight_decay);
+        assert!((decayed - expect).abs() < 1e-4, "{decayed} vs {expect}");
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let (specs, mut state) = tiny_state();
+        let grads = vec![Tensor::full(&[2, 2], 1.0), Tensor::full(&[4], 1.0)];
+        assert!(apply(&AdamWConfig::default(), &specs, &mut state, &grads).is_err());
+    }
+
+    #[test]
+    fn state_specs_align_with_model_params() {
+        // the canonical spec list drives decay decisions; spot check it
+        let cfg = ModelConfig::tiny();
+        let specs = params::specs(&cfg);
+        assert!(specs.iter().any(|s| params::decays(&s.name)));
+        assert!(specs.iter().any(|s| !params::decays(&s.name)));
+    }
+}

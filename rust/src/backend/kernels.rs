@@ -1,0 +1,786 @@
+//! The paper's modified sequence-wise operators, natively on the CPU:
+//! **packed causal depthwise conv1d** (§3.3) and the **packed selective
+//! scan** (§3.1/§3.4–3.5), forward *and* backward.
+//!
+//! Both take the `position_indices` plane produced by `pack()` and reset
+//! state at every `pos == 0` slot, so packed neighbours never exchange
+//! information:
+//!
+//! * conv: tap `j` (reaching back `shift = W-1-j` steps) contributes only
+//!   where `pos[t] >= shift` — the own-sequence guard of Algorithm 1;
+//! * scan: the multiplicative term `Ā = exp(Δ·A)` is zeroed at `pos == 0`,
+//!   killing every prefix product that crosses a boundary (Algorithm 2's
+//!   segmented formulation).
+//!
+//! Layout: activations are **channel-major** `(B, D, L)` here so each
+//! `(row, channel)` lane is a contiguous stretch the thread pool can own
+//! (`util::threadpool::parallel_chunks_mut`); the model layer transposes
+//! at the GEMM boundaries.  Scan state history `(B, D, L, N)` and the
+//! masked decay `Ā` are cached by the forward for the backward pass.
+//! All reductions have a fixed order, so results are independent of
+//! thread count.
+
+use crate::util::threadpool::{parallel_chunks_mut, parallel_map};
+
+/// Geometry of one packed operator call.
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    /// packed rows
+    pub b: usize,
+    /// slots per row (pack_len)
+    pub l: usize,
+    /// channels (d_inner)
+    pub d: usize,
+    /// SSM state dimension
+    pub n: usize,
+}
+
+impl Dims {
+    fn lanes(&self) -> usize {
+        self.b * self.d
+    }
+}
+
+fn lane_threads(dims: Dims, work_per_slot: usize, threads: usize) -> usize {
+    if dims.lanes() * dims.l * work_per_slot < 1 << 20 {
+        1
+    } else {
+        threads.max(1)
+    }
+}
+
+/// Packed causal depthwise conv1d forward.
+///
+/// `x`: `(B, D, L)` channel-major; `w`: `(W, D)`; `bias`: `(D)`;
+/// `pos`: `(B, L)`.  Returns `y` channel-major.
+pub fn conv1d_packed_fwd(
+    x: &[f32],
+    dims: Dims,
+    w: &[f32],
+    wlen: usize,
+    bias: &[f32],
+    pos: &[i32],
+    threads: usize,
+) -> Vec<f32> {
+    let Dims { b, l, d, .. } = dims;
+    assert_eq!(x.len(), b * d * l);
+    assert_eq!(w.len(), wlen * d);
+    assert_eq!(bias.len(), d);
+    assert_eq!(pos.len(), b * l);
+    let mut y = vec![0.0f32; b * d * l];
+    let threads = lane_threads(dims, wlen, threads);
+    parallel_chunks_mut(&mut y, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let prow = &pos[bi * l..(bi + 1) * l];
+        for t in 0..l {
+            let mut acc = bias[c];
+            for j in 0..wlen {
+                let shift = wlen - 1 - j;
+                if t >= shift && prow[t] >= shift as i32 {
+                    acc += w[j * d + c] * xrow[t - shift];
+                }
+            }
+            out[t] = acc;
+        }
+    });
+    y
+}
+
+/// Packed conv1d backward; returns `(dx, dw, dbias)` with `dx`
+/// channel-major and `dw` in `(W, D)` layout.
+pub fn conv1d_packed_bwd(
+    x: &[f32],
+    dims: Dims,
+    w: &[f32],
+    wlen: usize,
+    pos: &[i32],
+    dy: &[f32],
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let Dims { b, l, d, .. } = dims;
+    assert_eq!(x.len(), b * d * l);
+    assert_eq!(dy.len(), b * d * l);
+    let threads = lane_threads(dims, wlen, threads);
+
+    // dx: token t' receives tap contributions from outputs t'+shift that
+    // looked back at it (same guard as the forward).
+    let mut dx = vec![0.0f32; b * d * l];
+    parallel_chunks_mut(&mut dx, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let gyrow = &dy[lane * l..(lane + 1) * l];
+        let prow = &pos[bi * l..(bi + 1) * l];
+        for tp in 0..l {
+            let mut acc = 0.0f32;
+            for shift in 0..wlen {
+                let t = tp + shift;
+                if t < l && prow[t] >= shift as i32 {
+                    acc += w[(wlen - 1 - shift) * d + c] * gyrow[t];
+                }
+            }
+            out[tp] = acc;
+        }
+    });
+
+    // dw / dbias: one task per channel, fixed (b, t) reduction order.
+    let cols = parallel_map((0..d).collect::<Vec<_>>(), threads, |_, c| {
+        let mut dwc = vec![0.0f32; wlen];
+        let mut dbc = 0.0f32;
+        for bi in 0..b {
+            let lane = bi * d + c;
+            let xrow = &x[lane * l..(lane + 1) * l];
+            let gyrow = &dy[lane * l..(lane + 1) * l];
+            let prow = &pos[bi * l..(bi + 1) * l];
+            for t in 0..l {
+                let g = gyrow[t];
+                dbc += g;
+                if g != 0.0 {
+                    for j in 0..wlen {
+                        let shift = wlen - 1 - j;
+                        if t >= shift && prow[t] >= shift as i32 {
+                            dwc[j] += g * xrow[t - shift];
+                        }
+                    }
+                }
+            }
+        }
+        (dwc, dbc)
+    });
+    let mut dw = vec![0.0f32; wlen * d];
+    let mut dbias = vec![0.0f32; d];
+    for (c, (dwc, dbc)) in cols.into_iter().enumerate() {
+        for j in 0..wlen {
+            dw[j * d + c] = dwc[j];
+        }
+        dbias[c] = dbc;
+    }
+    (dx, dw, dbias)
+}
+
+/// State history the scan forward caches for its backward.
+pub struct ScanCache {
+    /// `h_t` per slot: `(B, D, L, N)`
+    pub hist: Vec<f32>,
+    /// masked decay `Ā_t = exp(Δ_t A) · [pos_t != 0]`: `(B, D, L, N)`
+    pub am: Vec<f32>,
+}
+
+/// Packed selective scan forward (full S6 semantics).
+///
+/// `x`, `dt`: `(B, D, L)` channel-major; `a`: `(D, N)` (negative
+/// continuous-time matrix); `bm`, `cm`: `(B, L, N)` token-major
+/// (selective, shared across channels); `dvec`: `(D)` skip; `pos`:
+/// `(B, L)`.  Returns `(y, cache)` with `y` channel-major.
+#[allow(clippy::too_many_arguments)]
+pub fn ssm_packed_fwd(
+    x: &[f32],
+    dt: &[f32],
+    a: &[f32],
+    bm: &[f32],
+    cm: &[f32],
+    dvec: &[f32],
+    pos: &[i32],
+    dims: Dims,
+    threads: usize,
+) -> (Vec<f32>, ScanCache) {
+    let Dims { b, l, d, n } = dims;
+    assert_eq!(x.len(), b * d * l);
+    assert_eq!(dt.len(), b * d * l);
+    assert_eq!(a.len(), d * n);
+    assert_eq!(bm.len(), b * l * n);
+    assert_eq!(cm.len(), b * l * n);
+    assert_eq!(dvec.len(), d);
+    assert_eq!(pos.len(), b * l);
+    let threads = lane_threads(dims, 4 * n, threads);
+
+    // Pass 1: recurrence h_t = Ā_t h_{t-1} + Δ_t x_t B_t, with Ā zeroed
+    // at sequence starts.  Each lane owns its (L, N) slab of hist/am.
+    let mut hist = vec![0.0f32; b * d * l * n];
+    let mut am = vec![0.0f32; b * d * l * n];
+    {
+        // hist and am are filled by the same lane decomposition; fill am
+        // first (it only needs dt/a/pos), then hist using it.
+        parallel_chunks_mut(&mut am, l * n, threads, |lane, amc| {
+            let (bi, c) = (lane / d, lane % d);
+            let dtrow = &dt[lane * l..(lane + 1) * l];
+            let arow = &a[c * n..(c + 1) * n];
+            let prow = &pos[bi * l..(bi + 1) * l];
+            for t in 0..l {
+                let slot = &mut amc[t * n..(t + 1) * n];
+                if prow[t] == 0 {
+                    slot.iter_mut().for_each(|v| *v = 0.0);
+                } else {
+                    for (sv, &av) in slot.iter_mut().zip(arow) {
+                        *sv = (dtrow[t] * av).exp();
+                    }
+                }
+            }
+        });
+        let am_ref = &am;
+        parallel_chunks_mut(&mut hist, l * n, threads, |lane, hc| {
+            let (bi, _c) = (lane / d, lane % d);
+            let dtrow = &dt[lane * l..(lane + 1) * l];
+            let xrow = &x[lane * l..(lane + 1) * l];
+            let amc = &am_ref[lane * l * n..(lane + 1) * l * n];
+            let mut prev = vec![0.0f32; n];
+            for t in 0..l {
+                let dx_t = dtrow[t] * xrow[t];
+                let brow = &bm[(bi * l + t) * n..(bi * l + t + 1) * n];
+                let arow = &amc[t * n..(t + 1) * n];
+                let hrow = &mut hc[t * n..(t + 1) * n];
+                for nn in 0..n {
+                    prev[nn] = arow[nn] * prev[nn] + dx_t * brow[nn];
+                    hrow[nn] = prev[nn];
+                }
+            }
+        });
+    }
+
+    // Pass 2: y_t = C_t · h_t + D x_t.
+    let mut y = vec![0.0f32; b * d * l];
+    let hist_ref = &hist;
+    parallel_chunks_mut(&mut y, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let hc = &hist_ref[lane * l * n..(lane + 1) * l * n];
+        for t in 0..l {
+            let crow = &cm[(bi * l + t) * n..(bi * l + t + 1) * n];
+            let hrow = &hc[t * n..(t + 1) * n];
+            let mut acc = dvec[c] * xrow[t];
+            for nn in 0..n {
+                acc += crow[nn] * hrow[nn];
+            }
+            out[t] = acc;
+        }
+    });
+    (y, ScanCache { hist, am })
+}
+
+/// Forward-only packed selective scan: same semantics as
+/// [`ssm_packed_fwd`] but fused into one pass with O(N) scratch per
+/// lane — no state history, no decay cache.  Use it when no backward
+/// will follow (inference, PUI checks, operator benches); at paper-ish
+/// dims the cache the training forward materializes is hundreds of MB.
+#[allow(clippy::too_many_arguments)]
+pub fn ssm_packed_fwd_nocache(
+    x: &[f32],
+    dt: &[f32],
+    a: &[f32],
+    bm: &[f32],
+    cm: &[f32],
+    dvec: &[f32],
+    pos: &[i32],
+    dims: Dims,
+    threads: usize,
+) -> Vec<f32> {
+    let Dims { b, l, d, n } = dims;
+    assert_eq!(x.len(), b * d * l);
+    assert_eq!(dt.len(), b * d * l);
+    assert_eq!(a.len(), d * n);
+    assert_eq!(bm.len(), b * l * n);
+    assert_eq!(cm.len(), b * l * n);
+    assert_eq!(dvec.len(), d);
+    assert_eq!(pos.len(), b * l);
+    let threads = lane_threads(dims, 4 * n, threads);
+    let mut y = vec![0.0f32; b * d * l];
+    parallel_chunks_mut(&mut y, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let dtrow = &dt[lane * l..(lane + 1) * l];
+        let arow = &a[c * n..(c + 1) * n];
+        let prow = &pos[bi * l..(bi + 1) * l];
+        let mut h = vec![0.0f32; n];
+        for t in 0..l {
+            let dx_t = dtrow[t] * xrow[t];
+            let brow = &bm[(bi * l + t) * n..(bi * l + t + 1) * n];
+            let crow = &cm[(bi * l + t) * n..(bi * l + t + 1) * n];
+            let mut acc = dvec[c] * xrow[t];
+            if prow[t] == 0 {
+                for nn in 0..n {
+                    h[nn] = dx_t * brow[nn];
+                    acc += crow[nn] * h[nn];
+                }
+            } else {
+                for nn in 0..n {
+                    h[nn] = (dtrow[t] * arow[nn]).exp() * h[nn] + dx_t * brow[nn];
+                    acc += crow[nn] * h[nn];
+                }
+            }
+            out[t] = acc;
+        }
+    });
+    y
+}
+
+/// Gradients of the packed selective scan.
+pub struct SsmGrads {
+    /// `(B, D, L)` channel-major
+    pub dx: Vec<f32>,
+    /// `(B, D, L)` channel-major
+    pub ddt: Vec<f32>,
+    /// `(D, N)`
+    pub da: Vec<f32>,
+    /// `(B, L, N)`
+    pub dbm: Vec<f32>,
+    /// `(B, L, N)`
+    pub dcm: Vec<f32>,
+    /// `(D)`
+    pub dd: Vec<f32>,
+}
+
+/// Packed selective scan backward.
+///
+/// The adjoint of the masked first-order recurrence: with
+/// `g_t = ∂L/∂h_t`, the reverse scan is `g_t = C_t·dy_t + Ā_{t+1} g_{t+1}`
+/// — the same boundary mask isolates sequences in both directions, so no
+/// gradient crosses a packed boundary either.
+#[allow(clippy::too_many_arguments)]
+pub fn ssm_packed_bwd(
+    x: &[f32],
+    dt: &[f32],
+    a: &[f32],
+    bm: &[f32],
+    cm: &[f32],
+    dvec: &[f32],
+    cache: &ScanCache,
+    dy: &[f32],
+    dims: Dims,
+    threads: usize,
+) -> SsmGrads {
+    let Dims { b, l, d, n } = dims;
+    assert_eq!(dy.len(), b * d * l);
+    assert_eq!(cache.hist.len(), b * d * l * n);
+    assert_eq!(cache.am.len(), b * d * l * n);
+    let threads = lane_threads(dims, 8 * n, threads);
+
+    // Pass 1: reverse scan for g = dL/dh, one lane per (row, channel).
+    let mut g = vec![0.0f32; b * d * l * n];
+    parallel_chunks_mut(&mut g, l * n, threads, |lane, gc| {
+        let (bi, _c) = (lane / d, lane % d);
+        let gyrow = &dy[lane * l..(lane + 1) * l];
+        let amc = &cache.am[lane * l * n..(lane + 1) * l * n];
+        let mut nxt = vec![0.0f32; n];
+        for t in (0..l).rev() {
+            let gy = gyrow[t];
+            let crow = &cm[(bi * l + t) * n..(bi * l + t + 1) * n];
+            let arow = &amc[t * n..(t + 1) * n];
+            let grow = &mut gc[t * n..(t + 1) * n];
+            for nn in 0..n {
+                let cur = gy * crow[nn] + nxt[nn];
+                grow[nn] = cur;
+                nxt[nn] = arow[nn] * cur;
+            }
+        }
+    });
+    let g_ref = &g;
+
+    // Pass 2: dx_t = D·dy_t + Σ_n g_t Δ_t B_t.
+    let mut dx = vec![0.0f32; b * d * l];
+    parallel_chunks_mut(&mut dx, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let gyrow = &dy[lane * l..(lane + 1) * l];
+        let dtrow = &dt[lane * l..(lane + 1) * l];
+        let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
+        for t in 0..l {
+            let brow = &bm[(bi * l + t) * n..(bi * l + t + 1) * n];
+            let grow = &gc[t * n..(t + 1) * n];
+            let mut acc = dvec[c] * gyrow[t];
+            let mut dot = 0.0f32;
+            for nn in 0..n {
+                dot += grow[nn] * brow[nn];
+            }
+            acc += dot * dtrow[t];
+            out[t] = acc;
+        }
+    });
+
+    // Pass 3: ddt_t = Σ_n (g_t h_{t-1}) A Ā_t + Σ_n g_t x_t B_t.
+    // (g·h_{t-1}·mask·A·exp(ΔA) folds to g·h_{t-1}·A·Ā since Ā caches the
+    // mask; at pos==0 the Ā factor is zero, so no decay gradient leaks
+    // across the boundary.)
+    let mut ddt = vec![0.0f32; b * d * l];
+    parallel_chunks_mut(&mut ddt, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let arow = &a[c * n..(c + 1) * n];
+        let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
+        let hc = &cache.hist[lane * l * n..(lane + 1) * l * n];
+        let amc = &cache.am[lane * l * n..(lane + 1) * l * n];
+        for t in 0..l {
+            let brow = &bm[(bi * l + t) * n..(bi * l + t + 1) * n];
+            let grow = &gc[t * n..(t + 1) * n];
+            let arow_m = &amc[t * n..(t + 1) * n];
+            let mut acc = 0.0f32;
+            if t > 0 {
+                let hprev = &hc[(t - 1) * n..t * n];
+                for nn in 0..n {
+                    acc += grow[nn] * hprev[nn] * arow[nn] * arow_m[nn];
+                }
+            }
+            let mut dot = 0.0f32;
+            for nn in 0..n {
+                dot += grow[nn] * brow[nn];
+            }
+            out[t] = acc + dot * xrow[t];
+        }
+    });
+
+    // Pass 4: per-channel reductions dA[c, n] and dD[c] over (b, t).
+    let cols = parallel_map((0..d).collect::<Vec<_>>(), threads, |_, c| {
+        let mut dac = vec![0.0f32; n];
+        let mut ddc = 0.0f32;
+        for bi in 0..b {
+            let lane = bi * d + c;
+            let xrow = &x[lane * l..(lane + 1) * l];
+            let dtrow = &dt[lane * l..(lane + 1) * l];
+            let gyrow = &dy[lane * l..(lane + 1) * l];
+            let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
+            let hc = &cache.hist[lane * l * n..(lane + 1) * l * n];
+            let amc = &cache.am[lane * l * n..(lane + 1) * l * n];
+            for t in 0..l {
+                ddc += gyrow[t] * xrow[t];
+                if t > 0 {
+                    let grow = &gc[t * n..(t + 1) * n];
+                    let hprev = &hc[(t - 1) * n..t * n];
+                    let arow_m = &amc[t * n..(t + 1) * n];
+                    for nn in 0..n {
+                        dac[nn] += grow[nn] * hprev[nn] * dtrow[t] * arow_m[nn];
+                    }
+                }
+            }
+        }
+        (dac, ddc)
+    });
+    let mut da = vec![0.0f32; d * n];
+    let mut dd = vec![0.0f32; d];
+    for (c, (dac, ddc)) in cols.into_iter().enumerate() {
+        da[c * n..(c + 1) * n].copy_from_slice(&dac);
+        dd[c] = ddc;
+    }
+
+    // Pass 5: dB[b,t,n] = Σ_c g Δ x, dC[b,t,n] = Σ_c dy h — the only
+    // reductions across channels; one task per (b, t) slot.
+    let mut dbm = vec![0.0f32; b * l * n];
+    parallel_chunks_mut(&mut dbm, n, threads, |slot, out| {
+        let (bi, t) = (slot / l, slot % l);
+        for c in 0..d {
+            let lane = bi * d + c;
+            let w = dt[lane * l + t] * x[lane * l + t];
+            if w != 0.0 {
+                let grow = &g_ref[(lane * l + t) * n..(lane * l + t + 1) * n];
+                for nn in 0..n {
+                    out[nn] += grow[nn] * w;
+                }
+            }
+        }
+    });
+    let mut dcm = vec![0.0f32; b * l * n];
+    parallel_chunks_mut(&mut dcm, n, threads, |slot, out| {
+        let (bi, t) = (slot / l, slot % l);
+        for c in 0..d {
+            let lane = bi * d + c;
+            let gy = dy[lane * l + t];
+            if gy != 0.0 {
+                let hrow = &cache.hist[(lane * l + t) * n..(lane * l + t + 1) * n];
+                for nn in 0..n {
+                    out[nn] += gy * hrow[nn];
+                }
+            }
+        }
+    });
+
+    SsmGrads {
+        dx,
+        ddt,
+        da,
+        dbm,
+        dcm,
+        dd,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::position_indices;
+    use crate::util::rng::Pcg64;
+
+    fn randv(rng: &mut Pcg64, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| scale * (rng.next_f32() - 0.5)).collect()
+    }
+
+    /// Serial per-sequence conv reference (no packing): each segment run
+    /// independently with plain causal semantics.
+    fn conv_per_sequence(
+        x: &[f32],
+        lens: &[usize],
+        l: usize,
+        d: usize,
+        w: &[f32],
+        wlen: usize,
+        bias: &[f32],
+    ) -> Vec<f32> {
+        // x channel-major (1, D, L) single row
+        let mut y = vec![0.0f32; d * l];
+        let mut segs: Vec<(usize, usize)> = Vec::new();
+        let mut off = 0;
+        for &nl in lens {
+            segs.push((off, nl));
+            off += nl;
+        }
+        if off < l {
+            segs.push((off, l - off)); // padding tail is its own segment
+        }
+        for c in 0..d {
+            for &(s0, sl) in &segs {
+                for t in 0..sl {
+                    let mut acc = bias[c];
+                    for j in 0..wlen {
+                        let shift = wlen - 1 - j;
+                        if t >= shift {
+                            acc += w[j * d + c] * x[c * l + s0 + t - shift];
+                        }
+                    }
+                    y[c * l + s0 + t] = acc;
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn conv_packed_equals_per_sequence() {
+        let (l, d, wlen) = (24, 3, 4);
+        let lens = [7usize, 9, 5]; // + 3 padding
+        let pos = position_indices(&lens, l);
+        let mut rng = Pcg64::new(5, 0);
+        let x = randv(&mut rng, d * l, 2.0);
+        let w = randv(&mut rng, wlen * d, 1.0);
+        let bias = randv(&mut rng, d, 1.0);
+        let dims = Dims { b: 1, l, d, n: 1 };
+        let y = conv1d_packed_fwd(&x, dims, &w, wlen, &bias, &pos, 1);
+        let yref = conv_per_sequence(&x, &lens, l, d, &w, wlen, &bias);
+        for (a, b) in y.iter().zip(&yref) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn conv_backward_matches_finite_differences() {
+        let (l, d, wlen) = (10, 2, 3);
+        let lens = [4usize, 3];
+        let pos = position_indices(&lens, l);
+        let mut rng = Pcg64::new(9, 0);
+        let x = randv(&mut rng, d * l, 1.0);
+        let w = randv(&mut rng, wlen * d, 1.0);
+        let bias = randv(&mut rng, d, 1.0);
+        let gy = randv(&mut rng, d * l, 1.0);
+        let dims = Dims { b: 1, l, d, n: 1 };
+        let obj = |x: &[f32], w: &[f32], bias: &[f32]| -> f32 {
+            conv1d_packed_fwd(x, dims, w, wlen, bias, &pos, 1)
+                .iter()
+                .zip(&gy)
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let (dx, dw, db) = conv1d_packed_bwd(&x, dims, &w, wlen, &pos, &gy, 1);
+        let h = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let fd = (obj(&xp, &w, &bias) - obj(&xm, &w, &bias)) / (2.0 * h);
+            assert!((fd - dx[i]).abs() < 1e-2, "dx[{i}] fd {fd} an {}", dx[i]);
+        }
+        for i in 0..w.len() {
+            let mut wp = w.clone();
+            wp[i] += h;
+            let mut wm = w.clone();
+            wm[i] -= h;
+            let fd = (obj(&x, &wp, &bias) - obj(&x, &wm, &bias)) / (2.0 * h);
+            assert!((fd - dw[i]).abs() < 1e-2, "dw[{i}] fd {fd} an {}", dw[i]);
+        }
+        for i in 0..bias.len() {
+            let mut bp = bias.clone();
+            bp[i] += h;
+            let mut bm2 = bias.clone();
+            bm2[i] -= h;
+            let fd = (obj(&x, &w, &bp) - obj(&x, &w, &bm2)) / (2.0 * h);
+            assert!((fd - db[i]).abs() < 1e-2, "db[{i}] fd {fd} an {}", db[i]);
+        }
+    }
+
+    /// Serial unpacked scan oracle over one segment.
+    #[allow(clippy::too_many_arguments)]
+    fn ssm_segment(
+        x: &[f32],
+        dt: &[f32],
+        a: &[f32],
+        bm: &[f32],
+        cm: &[f32],
+        dvec: &[f32],
+        d: usize,
+        n: usize,
+        sl: usize,
+    ) -> Vec<f32> {
+        // x, dt: (D, sl) channel-major; bm, cm: (sl, N)
+        let mut y = vec![0.0f32; d * sl];
+        for c in 0..d {
+            let mut hstate = vec![0.0f32; n];
+            for t in 0..sl {
+                let dtv = dt[c * sl + t];
+                let xv = x[c * sl + t];
+                for nn in 0..n {
+                    let av = (dtv * a[c * n + nn]).exp();
+                    hstate[nn] = if t == 0 {
+                        dtv * xv * bm[t * n + nn]
+                    } else {
+                        av * hstate[nn] + dtv * xv * bm[t * n + nn]
+                    };
+                }
+                let mut acc = dvec[c] * xv;
+                for nn in 0..n {
+                    acc += cm[t * n + nn] * hstate[nn];
+                }
+                y[c * sl + t] = acc;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn scan_packed_equals_per_sequence() {
+        let (l, d, n) = (20, 3, 4);
+        let lens = [8usize, 7, 5]; // exactly full row
+        let pos = position_indices(&lens, l);
+        let mut rng = Pcg64::new(11, 0);
+        let x = randv(&mut rng, d * l, 1.0);
+        let dt: Vec<f32> = randv(&mut rng, d * l, 1.0)
+            .into_iter()
+            .map(|v| v.abs() + 0.05)
+            .collect();
+        let a: Vec<f32> = randv(&mut rng, d * n, 1.0)
+            .into_iter()
+            .map(|v| -(v.abs() + 0.1))
+            .collect();
+        let bm = randv(&mut rng, l * n, 1.0);
+        let cm = randv(&mut rng, l * n, 1.0);
+        let dvec = randv(&mut rng, d, 1.0);
+        let dims = Dims { b: 1, l, d, n };
+        let (y, _) = ssm_packed_fwd(&x, &dt, &a, &bm, &cm, &dvec, &pos, dims, 1);
+        // the fused forward-only variant must agree exactly
+        let y_nc = ssm_packed_fwd_nocache(&x, &dt, &a, &bm, &cm, &dvec, &pos, dims, 1);
+        assert_eq!(y, y_nc, "nocache forward diverged from cached forward");
+
+        let mut off = 0;
+        for &sl in &lens {
+            // slice out the segment, per channel
+            let mut xs = vec![0.0f32; d * sl];
+            let mut dts = vec![0.0f32; d * sl];
+            for c in 0..d {
+                for t in 0..sl {
+                    xs[c * sl + t] = x[c * l + off + t];
+                    dts[c * sl + t] = dt[c * l + off + t];
+                }
+            }
+            let bms = bm[off * n..(off + sl) * n].to_vec();
+            let cms = cm[off * n..(off + sl) * n].to_vec();
+            let yref = ssm_segment(&xs, &dts, &a, &bms, &cms, &dvec, d, n, sl);
+            for c in 0..d {
+                for t in 0..sl {
+                    let got = y[c * l + off + t];
+                    let want = yref[c * sl + t];
+                    assert!(
+                        (got - want).abs() < 1e-5,
+                        "seg@{off} c{c} t{t}: {got} vs {want}"
+                    );
+                }
+            }
+            off += sl;
+        }
+    }
+
+    #[test]
+    fn scan_backward_matches_finite_differences() {
+        let (l, d, n) = (9, 2, 3);
+        let lens = [5usize, 3];
+        let pos = position_indices(&lens, l);
+        let mut rng = Pcg64::new(13, 0);
+        let x = randv(&mut rng, d * l, 1.0);
+        let dt: Vec<f32> = randv(&mut rng, d * l, 1.0)
+            .into_iter()
+            .map(|v| v.abs() + 0.05)
+            .collect();
+        let a: Vec<f32> = randv(&mut rng, d * n, 1.0)
+            .into_iter()
+            .map(|v| -(v.abs() + 0.1))
+            .collect();
+        let bm = randv(&mut rng, l * n, 1.0);
+        let cm = randv(&mut rng, l * n, 1.0);
+        let dvec = randv(&mut rng, d, 1.0);
+        let gy = randv(&mut rng, d * l, 1.0);
+        let dims = Dims { b: 1, l, d, n };
+
+        let obj = |x: &[f32], dt: &[f32], a: &[f32], bm: &[f32], cm: &[f32], dvec: &[f32]| -> f32 {
+            let (y, _) = ssm_packed_fwd(x, dt, a, bm, cm, dvec, &pos, dims, 1);
+            y.iter().zip(&gy).map(|(p, q)| p * q).sum()
+        };
+        let (y0, cache) = ssm_packed_fwd(&x, &dt, &a, &bm, &cm, &dvec, &pos, dims, 1);
+        let _ = y0;
+        let gr = ssm_packed_bwd(&x, &dt, &a, &bm, &cm, &dvec, &cache, &gy, dims, 1);
+
+        let h = 1e-3;
+        let check = |name: &str, vals: &[f32], an: &[f32], f: &dyn Fn(&[f32]) -> f32| {
+            for i in 0..vals.len() {
+                let mut vp = vals.to_vec();
+                vp[i] += h;
+                let mut vm = vals.to_vec();
+                vm[i] -= h;
+                let fd = (f(&vp) - f(&vm)) / (2.0 * h);
+                assert!(
+                    (fd - an[i]).abs() < 2e-2_f32.max(0.02 * fd.abs()),
+                    "{name}[{i}] fd {fd} an {}",
+                    an[i]
+                );
+            }
+        };
+        check("dx", &x, &gr.dx, &|v| obj(v, &dt, &a, &bm, &cm, &dvec));
+        check("ddt", &dt, &gr.ddt, &|v| obj(&x, v, &a, &bm, &cm, &dvec));
+        check("da", &a, &gr.da, &|v| obj(&x, &dt, v, &bm, &cm, &dvec));
+        check("dbm", &bm, &gr.dbm, &|v| obj(&x, &dt, &a, v, &cm, &dvec));
+        check("dcm", &cm, &gr.dcm, &|v| obj(&x, &dt, &a, &bm, v, &dvec));
+        check("dd", &dvec, &gr.dd, &|v| obj(&x, &dt, &a, &bm, &cm, v));
+    }
+
+    #[test]
+    fn no_state_crosses_boundaries() {
+        // Changing tokens of the FIRST sequence must not change scan
+        // outputs of the SECOND (the PUI isolation property, op-level).
+        let (l, d, n) = (16, 2, 3);
+        let lens = [8usize, 8];
+        let pos = position_indices(&lens, l);
+        let mut rng = Pcg64::new(17, 0);
+        let mut x = randv(&mut rng, d * l, 1.0);
+        let dt: Vec<f32> = randv(&mut rng, d * l, 1.0)
+            .into_iter()
+            .map(|v| v.abs() + 0.05)
+            .collect();
+        let a: Vec<f32> = vec![-0.5; d * n];
+        let bm = randv(&mut rng, l * n, 1.0);
+        let cm = randv(&mut rng, l * n, 1.0);
+        let dvec = vec![1.0; d];
+        let dims = Dims { b: 1, l, d, n };
+        let (y1, _) = ssm_packed_fwd(&x, &dt, &a, &bm, &cm, &dvec, &pos, dims, 1);
+        for t in 0..8 {
+            x[t] += 3.0; // perturb channel 0 of the first sequence
+        }
+        let (y2, _) = ssm_packed_fwd(&x, &dt, &a, &bm, &cm, &dvec, &pos, dims, 1);
+        for c in 0..d {
+            for t in 8..16 {
+                assert_eq!(y1[c * l + t], y2[c * l + t], "leak at c{c} t{t}");
+            }
+        }
+        assert_ne!(y1[0], y2[0]);
+    }
+}

@@ -1,0 +1,332 @@
+//! The default backend: pure-Rust packed Mamba training on the host CPU.
+//!
+//! No artifacts, no FFI — [`model`] implements the forward/backward and
+//! [`kernels`](super::kernels) the paper's packed operators, parallelized
+//! over rows and channels via `util::threadpool`.  Thread count comes
+//! from `PACKMAMBA_THREADS` or the machine's available parallelism; the
+//! numerics are bit-identical for any thread count, which keeps
+//! data-parallel replicas exactly in sync.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
+use crate::packing::PackedBatch;
+use crate::runtime::{ExecStats, ParamSpec};
+use crate::tensor::Tensor;
+use crate::Result;
+
+use super::adamw::{self, AdamWConfig};
+use super::{model, native_buckets, params, Backend, BatchGeometry, TrainState};
+
+pub struct NativeBackend {
+    threads: usize,
+    opt: AdamWConfig,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl NativeBackend {
+    /// Backend with `PACKMAMBA_THREADS` (or all available) workers.
+    pub fn new() -> NativeBackend {
+        let threads = std::env::var("PACKMAMBA_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            });
+        Self::with_threads(threads)
+    }
+
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend {
+            threads: threads.max(1),
+            opt: AdamWConfig::default(),
+            stats: RefCell::new(HashMap::new()),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn note(&self, name: &str, secs: f64) {
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.exec_secs += secs;
+    }
+
+    fn check_batch(&self, model: &ModelConfig, batch: &PackedBatch) -> Result<()> {
+        let v = model.vocab_size as i32;
+        anyhow::ensure!(
+            batch.tokens.data().iter().all(|&t| (0..v).contains(&t)),
+            "batch contains tokens outside vocab 0..{v}"
+        );
+        Ok(())
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn geometry(&self, cfg: &TrainConfig) -> Result<BatchGeometry> {
+        // Native execution handles any geometry; echo the packing config
+        // so the trainer's pipeline and the compute agree by definition.
+        let rows = cfg.packing.rows;
+        let pack_len = cfg.packing.pack_len;
+        anyhow::ensure!(rows > 0 && pack_len > 0, "degenerate batch geometry");
+        let pad_len = match cfg.scheme {
+            Scheme::Padding => cfg.max_len.clamp(1, pack_len),
+            _ => pack_len,
+        };
+        Ok(BatchGeometry {
+            rows,
+            pack_len,
+            buckets: native_buckets(pack_len),
+            pad_geom: (rows, pad_len),
+        })
+    }
+
+    fn init_state(&self, model: &ModelConfig, seed: u64) -> Result<TrainState> {
+        let t0 = Instant::now();
+        let params = params::init(model, seed);
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        self.note("init", t0.elapsed().as_secs_f64());
+        Ok(TrainState {
+            m: zeros.clone(),
+            v: zeros,
+            params,
+            step: 0,
+        })
+    }
+
+    fn train_step(
+        &self,
+        model: &ModelConfig,
+        state: &mut TrainState,
+        batch: &PackedBatch,
+    ) -> Result<f32> {
+        self.check_batch(model, batch)?;
+        let t0 = Instant::now();
+        let (loss, grads) = model::loss_and_grads(
+            model,
+            &state.params,
+            batch.tokens.data(),
+            batch.targets.data(),
+            batch.position_indices.data(),
+            batch.loss_mask.data(),
+            batch.rows(),
+            batch.pack_len(),
+            self.threads,
+        );
+        let t1 = Instant::now();
+        adamw::apply(&self.opt, &params::specs(model), state, &grads)?;
+        state.step += 1;
+        let t2 = Instant::now();
+        self.note("train_step.fwd_bwd", (t1 - t0).as_secs_f64());
+        self.note("train_step.adamw", (t2 - t1).as_secs_f64());
+        anyhow::ensure!(loss.is_finite(), "non-finite loss at step {}", state.step);
+        Ok(loss)
+    }
+
+    fn forward(
+        &self,
+        model: &ModelConfig,
+        state_params: &[Tensor],
+        batch: &PackedBatch,
+    ) -> Result<Tensor> {
+        self.check_batch(model, batch)?;
+        let t0 = Instant::now();
+        let logits = model::forward_logits(
+            model,
+            state_params,
+            batch.tokens.data(),
+            batch.position_indices.data(),
+            batch.rows(),
+            batch.pack_len(),
+            self.threads,
+        );
+        self.note("forward", t0.elapsed().as_secs_f64());
+        Ok(logits)
+    }
+
+    fn loss_and_grads(
+        &self,
+        model: &ModelConfig,
+        state_params: &[Tensor],
+        batch: &PackedBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        self.check_batch(model, batch)?;
+        let t0 = Instant::now();
+        let out = model::loss_and_grads(
+            model,
+            state_params,
+            batch.tokens.data(),
+            batch.targets.data(),
+            batch.position_indices.data(),
+            batch.loss_mask.data(),
+            batch.rows(),
+            batch.pack_len(),
+            self.threads,
+        );
+        self.note("grads", t0.elapsed().as_secs_f64());
+        anyhow::ensure!(out.0.is_finite(), "non-finite loss in grads pass");
+        Ok(out)
+    }
+
+    fn apply_update(
+        &self,
+        model: &ModelConfig,
+        state: &mut TrainState,
+        grads: &[Tensor],
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        adamw::apply(&self.opt, &params::specs(model), state, grads)?;
+        state.step += 1;
+        self.note("adam_apply", t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    fn param_specs(&self, model: &ModelConfig) -> Result<Vec<ParamSpec>> {
+        Ok(params::specs(model))
+    }
+
+    fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut out: Vec<(String, ExecStats)> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::{PackedRow, Sequence};
+
+    fn nano() -> ModelConfig {
+        ModelConfig {
+            name: "nano".to_string(),
+            vocab_size: 31,
+            d_model: 16,
+            n_layers: 2,
+            d_state: 4,
+            d_conv: 4,
+            expand: 2,
+        }
+    }
+
+    fn batch(pack_len: usize) -> PackedBatch {
+        let seq = |id: u64, n: usize| Sequence {
+            tokens: (0..n).map(|k| 1 + ((id as usize * 7 + k * 3) % 30) as i32).collect(),
+            id,
+        };
+        PackedBatch::from_rows(
+            &[
+                PackedRow {
+                    sequences: vec![seq(0, 9), seq(1, 5)],
+                },
+                PackedRow {
+                    sequences: vec![seq(2, 12)],
+                },
+            ],
+            pack_len,
+        )
+    }
+
+    #[test]
+    fn fused_step_equals_grads_plus_apply() {
+        let cfg = nano();
+        let be = NativeBackend::with_threads(2);
+        let mut s1 = be.init_state(&cfg, 11).unwrap();
+        let mut s2 = s1.clone();
+        let b = batch(16);
+
+        let l1 = be.train_step(&cfg, &mut s1, &b).unwrap();
+        let (l2, grads) = be.loss_and_grads(&cfg, &s2.params, &b).unwrap();
+        be.apply_update(&cfg, &mut s2, &grads).unwrap();
+
+        assert_eq!(l1, l2);
+        assert_eq!(s1.step, s2.step);
+        for (a, bb) in s1.params.iter().zip(&s2.params) {
+            assert_eq!(a.data(), bb.data());
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let cfg = nano();
+        let b = batch(16);
+        let run = |threads: usize| {
+            let be = NativeBackend::with_threads(threads);
+            let mut st = be.init_state(&cfg, 3).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(be.train_step(&cfg, &mut st, &b).unwrap());
+            }
+            (losses, st.params)
+        };
+        let (la, pa) = run(1);
+        let (lb, pb) = run(7);
+        assert_eq!(la, lb);
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.data(), y.data());
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_tokens() {
+        let cfg = nano();
+        let be = NativeBackend::with_threads(1);
+        let state = be.init_state(&cfg, 1).unwrap();
+        let b = PackedBatch::from_rows(
+            &[PackedRow {
+                sequences: vec![Sequence {
+                    tokens: vec![1, 2, 10_000],
+                    id: 0,
+                }],
+            }],
+            8,
+        );
+        assert!(be.forward(&cfg, &state.params, &b).is_err());
+    }
+
+    #[test]
+    fn geometry_echoes_config_and_buckets_cover() {
+        let cfg = TrainConfig::defaults(ModelConfig::tiny());
+        let be = NativeBackend::with_threads(1);
+        let g = be.geometry(&cfg).unwrap();
+        assert_eq!(g.rows, cfg.packing.rows);
+        assert_eq!(g.pack_len, cfg.packing.pack_len);
+        assert_eq!(*g.buckets.last().unwrap(), cfg.packing.pack_len);
+        assert!(g.pad_geom.1 <= g.pack_len);
+    }
+
+    #[test]
+    fn stats_accumulate_per_op() {
+        let cfg = nano();
+        let be = NativeBackend::with_threads(1);
+        let mut st = be.init_state(&cfg, 2).unwrap();
+        be.train_step(&cfg, &mut st, &batch(16)).unwrap();
+        let stats = be.stats();
+        let names: Vec<&str> = stats.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"train_step.fwd_bwd"), "{names:?}");
+        assert!(names.contains(&"train_step.adamw"));
+    }
+}

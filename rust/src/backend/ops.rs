@@ -1,0 +1,394 @@
+//! Dense host primitives for the native backend: multithreaded GEMMs,
+//! RMSNorm, activations, layout transposes, and the masked cross-entropy
+//! head.  All operate on flat row-major `f32` slices; shapes travel as
+//! explicit dimensions.
+//!
+//! Determinism: every parallel routine assigns each output chunk a fixed
+//! serial computation, so results are bit-identical for any thread count
+//! — the invariant the data-parallel replica check relies on.
+
+use crate::util::threadpool::{parallel_chunks_mut, parallel_map};
+
+/// Threads actually worth using for `work` fused multiply-adds (scoped
+/// thread spawn costs ~tens of µs; small ops run serially).
+fn effective_threads(work: usize, threads: usize) -> usize {
+    if work < 1 << 20 {
+        1
+    } else {
+        threads.max(1)
+    }
+}
+
+/// Rows per parallel task, aiming for a few tasks per thread.
+fn rows_per_task(m: usize, threads: usize) -> usize {
+    m.div_ceil(threads.max(1) * 4).max(1)
+}
+
+/// `(m, k) @ (k, n) -> (m, n)`.
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul lhs size");
+    assert_eq!(b.len(), k * n, "matmul rhs size");
+    let mut out = vec![0.0f32; m * n];
+    let threads = effective_threads(m * k * n, threads);
+    let rows = rows_per_task(m, threads);
+    parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
+        let r0 = ci * rows;
+        for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(r0 + ri) * k..(r0 + ri + 1) * k];
+            for (p, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `(m, k) @ (n, k)^T -> (m, n)` — right operand transposed (e.g.
+/// `dy @ W^T`, logits against the tied embedding).
+pub fn matmul_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_nt lhs size");
+    assert_eq!(b.len(), n * k, "matmul_nt rhs size");
+    let mut out = vec![0.0f32; m * n];
+    let threads = effective_threads(m * k * n, threads);
+    let rows = rows_per_task(m, threads);
+    parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
+        let r0 = ci * rows;
+        for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(r0 + ri) * k..(r0 + ri + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+    });
+    out
+}
+
+/// `(t, m)^T @ (t, n) -> (m, n)` — left operand transposed (weight
+/// gradients `x^T @ dy`).
+pub fn matmul_tn(a: &[f32], t: usize, m: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
+    assert_eq!(a.len(), t * m, "matmul_tn lhs size");
+    assert_eq!(b.len(), t * n, "matmul_tn rhs size");
+    let mut out = vec![0.0f32; m * n];
+    let threads = effective_threads(t * m * n, threads);
+    let rows = rows_per_task(m, threads);
+    parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
+        let r0 = ci * rows;
+        for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+            let p = r0 + ri;
+            for ti in 0..t {
+                let av = a[ti * m + p];
+                if av != 0.0 {
+                    let brow = &b[ti * n..(ti + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `(B, L, D)` token-major → `(B, D, L)` channel-major.
+pub fn to_channel_major(x: &[f32], b: usize, l: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * l * d);
+    let mut out = vec![0.0f32; b * l * d];
+    for bi in 0..b {
+        let src = &x[bi * l * d..(bi + 1) * l * d];
+        let dst = &mut out[bi * l * d..(bi + 1) * l * d];
+        for t in 0..l {
+            for c in 0..d {
+                dst[c * l + t] = src[t * d + c];
+            }
+        }
+    }
+    out
+}
+
+/// `(B, D, L)` channel-major → `(B, L, D)` token-major.
+pub fn to_token_major(x: &[f32], b: usize, d: usize, l: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * l * d);
+    let mut out = vec![0.0f32; b * l * d];
+    for bi in 0..b {
+        let src = &x[bi * l * d..(bi + 1) * l * d];
+        let dst = &mut out[bi * l * d..(bi + 1) * l * d];
+        for c in 0..d {
+            for t in 0..l {
+                dst[t * d + c] = src[c * l + t];
+            }
+        }
+    }
+    out
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// d(silu)/dx.
+pub fn dsilu(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Numerically stable softplus.
+pub fn softplus(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// RMSNorm forward over rows of length `d`; returns `(y, inv)` with
+/// `inv[t] = 1/sqrt(mean(x_t^2) + eps)`.
+pub fn rms_norm_fwd(x: &[f32], d: usize, w: &[f32], eps: f32) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len() % d, 0);
+    assert_eq!(w.len(), d);
+    let t = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    let mut inv = vec![0.0f32; t];
+    for ti in 0..t {
+        let row = &x[ti * d..(ti + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        inv[ti] = r;
+        let orow = &mut y[ti * d..(ti + 1) * d];
+        for ((o, &xv), &wv) in orow.iter_mut().zip(row).zip(w) {
+            *o = xv * r * wv;
+        }
+    }
+    (y, inv)
+}
+
+/// RMSNorm backward; returns `(dx, dw)`.
+pub fn rms_norm_bwd(
+    x: &[f32],
+    d: usize,
+    w: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let t = x.len() / d;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; d];
+    for ti in 0..t {
+        let row = &x[ti * d..(ti + 1) * d];
+        let grow = &dy[ti * d..(ti + 1) * d];
+        let r = inv[ti];
+        let mut dot = 0.0f32; // sum_i dy_i * w_i * x_i
+        for ((&xv, &gv), &wv) in row.iter().zip(grow).zip(w) {
+            dot += gv * wv * xv;
+        }
+        let scale = r * r * r / d as f32 * dot;
+        let orow = &mut dx[ti * d..(ti + 1) * d];
+        for i in 0..d {
+            orow[i] = r * w[i] * grow[i] - row[i] * scale;
+            dw[i] += row[i] * r * grow[i];
+        }
+    }
+    (dx, dw)
+}
+
+/// Masked cross-entropy over `(T, V)` logits with next-token targets.
+///
+/// Returns `(loss, dlogits)` where
+/// `loss = Σ_t mask_t · nll_t / max(Σ mask, 1)` and `dlogits` is its
+/// gradient — the packed `loss_mask` zeroes padding slots and each
+/// sequence's final token, so training never predicts across a packed
+/// boundary.
+pub fn cross_entropy(
+    logits: &[f32],
+    v: usize,
+    targets: &[i32],
+    mask: &[f32],
+    threads: usize,
+) -> (f32, Vec<f32>) {
+    let t = targets.len();
+    assert_eq!(logits.len(), t * v);
+    assert_eq!(mask.len(), t);
+    let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+    let threads = effective_threads(t * v * 8, threads);
+    // fixed chunk size: the loss is a sum of per-chunk partials, so the
+    // grouping (and therefore the f64 rounding) must not depend on the
+    // thread count — the determinism invariant DP replicas rely on
+    let rows = 64usize;
+    let ranges: Vec<(usize, usize)> = ranges_of(t, rows).collect();
+    let pieces = parallel_map(ranges.clone(), threads, |_, (lo, hi)| {
+        let mut dl = vec![0.0f32; (hi - lo) * v];
+        let mut loss = 0.0f64;
+        for ti in lo..hi {
+            let row = &logits[ti * v..(ti + 1) * v];
+            let w = mask[ti];
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let sum: f32 = row.iter().map(|&x| (x - max).exp()).sum();
+            let lse = max + sum.ln();
+            let tgt = targets[ti] as usize;
+            debug_assert!(tgt < v, "target {tgt} out of vocab {v}");
+            if w > 0.0 {
+                loss += (w * (lse - row[tgt])) as f64;
+            }
+            let drow = &mut dl[(ti - lo) * v..(ti - lo + 1) * v];
+            let scale = w / denom;
+            if scale != 0.0 {
+                for (o, &x) in drow.iter_mut().zip(row) {
+                    *o = scale * (x - max).exp() / sum;
+                }
+                drow[tgt] -= scale;
+            }
+        }
+        (loss, dl)
+    });
+    let mut dlogits = vec![0.0f32; t * v];
+    let mut loss = 0.0f64;
+    for (&(lo, hi), (pl, dl)) in ranges.iter().zip(pieces) {
+        loss += pl;
+        dlogits[lo * v..hi * v].copy_from_slice(&dl);
+    }
+    ((loss / denom as f64) as f32, dlogits)
+}
+
+fn ranges_of(t: usize, rows: usize) -> impl Iterator<Item = (usize, usize)> {
+    (0..t.div_ceil(rows)).map(move |i| (i * rows, ((i + 1) * rows).min(t)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_variants_agree_with_reference() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // (2,3)
+        let b = [1.0f32, 0.5, -1.0, 2.0, 0.0, 1.0]; // (3,2)
+        let c = matmul(&a, 2, 3, &b, 2, 1);
+        // row0: [1*1+2*(-1)+3*0, 1*.5+2*2+3*1] = [-1, 7.5]
+        assert_eq!(c, vec![-1.0, 7.5, -1.0, 18.0]);
+
+        // b^T is (2,3); matmul_nt(a, b_t) must equal matmul(a, b)
+        let b_t = [1.0f32, -1.0, 0.0, 0.5, 2.0, 1.0];
+        assert_eq!(matmul_nt(&a, 2, 3, &b_t, 2, 1), c);
+
+        // a^T @ a via matmul_tn equals explicit transpose multiply
+        let ata = matmul_tn(&a, 2, 3, &a, 3, 1);
+        let a_t = [1.0f32, 4.0, 2.0, 5.0, 3.0, 6.0]; // (3,2)
+        assert_eq!(ata, matmul(&a_t, 3, 2, &a, 3, 1));
+    }
+
+    #[test]
+    fn matmul_parallel_matches_serial() {
+        let m = 37;
+        let k = 19;
+        let n = 23;
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i * 5 % 11) as f32) - 5.0).collect();
+        assert_eq!(matmul(&a, m, k, &b, n, 1), matmul(&a, m, k, &b, n, 8));
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let (b, l, d) = (2, 5, 3);
+        let x: Vec<f32> = (0..b * l * d).map(|i| i as f32).collect();
+        let cm = to_channel_major(&x, b, l, d);
+        assert_eq!(cm[0 * l + 1], x[1 * d]); // channel 0, t=1
+        assert_eq!(to_token_major(&cm, b, d, l), x);
+    }
+
+    #[test]
+    fn rms_norm_normalizes_and_backward_matches_fd() {
+        let d = 4;
+        let x = vec![0.5f32, -1.0, 2.0, 0.25, 1.0, 1.0, -1.0, 3.0];
+        let w = vec![1.0f32, 0.5, 2.0, -1.0];
+        let eps = 1e-5;
+        let (y, inv) = rms_norm_fwd(&x, d, &w, eps);
+        // unit-ish rms after normalization (before w)
+        let rms: f32 = (0..d).map(|i| (x[i] * inv[0]).powi(2)).sum::<f32>() / d as f32;
+        assert!((rms - 1.0).abs() < 1e-3, "rms {rms}");
+
+        // finite-difference check of dx against a scalar objective Σ y·g
+        let g = vec![0.3f32, -0.2, 0.1, 0.7, -0.4, 0.25, 0.6, -0.1];
+        let (dx, dw) = rms_norm_bwd(&x, d, &w, &inv, &g);
+        let f = |x: &[f32], w: &[f32]| -> f32 {
+            let (y, _) = rms_norm_fwd(x, d, w, eps);
+            y.iter().zip(&g).map(|(a, b)| a * b).sum()
+        };
+        let h = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let fd = (f(&xp, &w) - f(&xm, &w)) / (2.0 * h);
+            assert!((fd - dx[i]).abs() < 2e-3, "dx[{i}]: fd {fd} an {}", dx[i]);
+        }
+        for i in 0..d {
+            let mut wp = w.clone();
+            wp[i] += h;
+            let mut wm = w.clone();
+            wm[i] -= h;
+            let fd = (f(&x, &wp) - f(&x, &wm)) / (2.0 * h);
+            assert!((fd - dw[i]).abs() < 2e-3, "dw[{i}]: fd {fd} an {}", dw[i]);
+        }
+        let _ = y;
+    }
+
+    #[test]
+    fn activations_sane() {
+        assert!((silu(0.0)).abs() < 1e-9);
+        assert!((softplus(0.0) - (2.0f32).ln()).abs() < 1e-6);
+        assert!((softplus(30.0) - 30.0).abs() < 1e-4);
+        assert!(softplus(-30.0) > 0.0 && softplus(-30.0) < 1e-9);
+        // dsilu via finite differences
+        for x in [-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let h = 1e-3;
+            let fd = (silu(x + h) - silu(x - h)) / (2.0 * h);
+            assert!((fd - dsilu(x)).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let v = 8;
+        let t = 4;
+        let logits = vec![0.0f32; t * v];
+        let targets = vec![1i32, 2, 3, 4];
+        let mask = vec![1.0f32, 1.0, 0.0, 1.0];
+        let (loss, dl) = cross_entropy(&logits, v, &targets, &mask, 1);
+        assert!((loss - (v as f32).ln()).abs() < 1e-5);
+        // masked-out token contributes no gradient
+        assert!(dl[2 * v..3 * v].iter().all(|&x| x == 0.0));
+        // gradient rows sum to ~0
+        let s: f32 = dl[..v].iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_gradient_matches_fd() {
+        let v = 5;
+        let t = 3;
+        let mut logits: Vec<f32> = (0..t * v).map(|i| ((i * 13 % 7) as f32) * 0.3 - 1.0).collect();
+        let targets = vec![4i32, 0, 2];
+        let mask = vec![1.0f32, 0.0, 1.0];
+        let (_, dl) = cross_entropy(&logits, v, &targets, &mask, 1);
+        let h = 1e-3;
+        for i in 0..t * v {
+            let old = logits[i];
+            logits[i] = old + h;
+            let (lp, _) = cross_entropy(&logits, v, &targets, &mask, 1);
+            logits[i] = old - h;
+            let (lm, _) = cross_entropy(&logits, v, &targets, &mask, 1);
+            logits[i] = old;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!((fd - dl[i]).abs() < 1e-3, "dl[{i}]: fd {fd} an {}", dl[i]);
+        }
+    }
+}

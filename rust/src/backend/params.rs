@@ -1,0 +1,199 @@
+//! Canonical parameter layout + host-side initialization.
+//!
+//! The flat parameter ordering is the interchange contract shared by the
+//! native backend, checkpoints, and (when built with `pjrt`) the AOT
+//! artifact manifest — it mirrors `param_order()` in
+//! `python/compile/model.py` exactly:
+//!
+//!   embedding,
+//!   per layer: norm_w, in_proj, conv_w, conv_b, x_proj, dt_proj,
+//!              dt_bias, A_log, D, out_proj,
+//!   norm_f_w
+//!
+//! [`init`] reproduces the reference Mamba initialization *distributions*
+//! (S4D-real A, log-uniform dt, tied-embedding normal, uniform fan-in
+//! projections) with the crate's own deterministic RNG; it is not
+//! bit-identical to the JAX init the artifacts bake in, and does not need
+//! to be — each backend owns its init numerics.
+
+use crate::config::ModelConfig;
+use crate::runtime::ParamSpec;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Parameter slots per layer (order within a layer's block of specs).
+pub const PER_LAYER: usize = 10;
+
+/// Offsets of each per-layer parameter inside its layer block.
+pub mod slot {
+    pub const NORM_W: usize = 0;
+    pub const IN_PROJ: usize = 1;
+    pub const CONV_W: usize = 2;
+    pub const CONV_B: usize = 3;
+    pub const X_PROJ: usize = 4;
+    pub const DT_PROJ: usize = 5;
+    pub const DT_BIAS: usize = 6;
+    pub const A_LOG: usize = 7;
+    pub const D: usize = 8;
+    pub const OUT_PROJ: usize = 9;
+}
+
+/// Flat index of the embedding table.
+pub const EMBEDDING: usize = 0;
+
+/// Flat index of `layers.{layer}.{slot}`.
+pub fn layer_param(layer: usize, slot: usize) -> usize {
+    1 + layer * PER_LAYER + slot
+}
+
+/// Flat index of the final norm weight.
+pub fn norm_f(cfg: &ModelConfig) -> usize {
+    1 + cfg.n_layers * PER_LAYER
+}
+
+/// Total number of parameter tensors.
+pub fn count(cfg: &ModelConfig) -> usize {
+    2 + cfg.n_layers * PER_LAYER
+}
+
+/// Named shapes in canonical flat order (the checkpoint header layout).
+pub fn specs(cfg: &ModelConfig) -> Vec<ParamSpec> {
+    let (d, di, n, r, w) = (
+        cfg.d_model,
+        cfg.d_inner(),
+        cfg.d_state,
+        cfg.dt_rank(),
+        cfg.d_conv,
+    );
+    let mut out = Vec::with_capacity(count(cfg));
+    let mut push = |name: String, shape: Vec<usize>| out.push(ParamSpec { name, shape });
+    push("embedding".to_string(), vec![cfg.vocab_size, d]);
+    for i in 0..cfg.n_layers {
+        let p = |s: &str| format!("layers.{i}.{s}");
+        push(p("norm_w"), vec![d]);
+        push(p("in_proj"), vec![d, 2 * di]);
+        push(p("conv_w"), vec![w, di]);
+        push(p("conv_b"), vec![di]);
+        push(p("x_proj"), vec![di, r + 2 * n]);
+        push(p("dt_proj"), vec![r, di]);
+        push(p("dt_bias"), vec![di]);
+        push(p("A_log"), vec![di, n]);
+        push(p("D"), vec![di]);
+        push(p("out_proj"), vec![di, d]);
+    }
+    push("norm_f_w".to_string(), vec![d]);
+    out
+}
+
+/// Whether AdamW applies weight decay to this parameter (matrices only,
+/// mirroring `_decay_mask` in model.py).
+pub fn decays(name: &str) -> bool {
+    name.ends_with("in_proj")
+        || name.ends_with("x_proj")
+        || name.ends_with("dt_proj")
+        || name.ends_with("out_proj")
+        || name == "embedding"
+}
+
+/// Deterministic host-side initialization in canonical order.
+pub fn init(cfg: &ModelConfig, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg64::new(seed, 0x1217);
+    let (dt_min, dt_max) = (1e-3f64, 1e-1f64);
+    specs(cfg)
+        .into_iter()
+        .map(|spec| {
+            let shape = spec.shape.clone();
+            let n_el = spec.element_count();
+            let name = spec.name.as_str();
+            let data: Vec<f32> = if name.ends_with("norm_w") || name == "norm_f_w" {
+                vec![1.0; n_el]
+            } else if name.ends_with("A_log") {
+                // S4D-real: A = -(1..=N) per channel, stored as log.
+                let n = shape[1];
+                (0..n_el)
+                    .map(|i| ((i % n + 1) as f32).ln())
+                    .collect()
+            } else if name.ends_with(".D") {
+                vec![1.0; n_el]
+            } else if name.ends_with("dt_bias") {
+                // inverse-softplus of log-uniform dt in [dt_min, dt_max]
+                (0..n_el)
+                    .map(|_| {
+                        let u = rng.next_f64();
+                        let dt = (u * (dt_max.ln() - dt_min.ln()) + dt_min.ln()).exp();
+                        (dt + (-(-dt).exp_m1()).ln()) as f32
+                    })
+                    .collect()
+            } else if name.ends_with("conv_b") {
+                vec![0.0; n_el]
+            } else if name == "embedding" {
+                (0..n_el).map(|_| 0.02 * rng.next_normal() as f32).collect()
+            } else {
+                let fan_in = shape[0] as f64;
+                let scale = 1.0 / fan_in.sqrt();
+                (0..n_el)
+                    .map(|_| ((rng.next_f64() * 2.0 - 1.0) * scale) as f32)
+                    .collect()
+            };
+            Tensor::new(&shape, data)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_count_matches_param_count() {
+        for cfg in [ModelConfig::tiny(), ModelConfig::small()] {
+            let specs = specs(&cfg);
+            assert_eq!(specs.len(), count(&cfg));
+            let total: usize = specs.iter().map(ParamSpec::element_count).sum();
+            assert_eq!(total, cfg.param_count(), "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn indices_line_up_with_names() {
+        let cfg = ModelConfig::tiny();
+        let specs = specs(&cfg);
+        assert_eq!(specs[EMBEDDING].name, "embedding");
+        assert_eq!(specs[layer_param(0, slot::CONV_W)].name, "layers.0.conv_w");
+        assert_eq!(specs[layer_param(1, slot::A_LOG)].name, "layers.1.A_log");
+        assert_eq!(specs[norm_f(&cfg)].name, "norm_f_w");
+    }
+
+    #[test]
+    fn init_matches_specs_and_is_deterministic() {
+        let cfg = ModelConfig::tiny();
+        let a = init(&cfg, 7);
+        let b = init(&cfg, 7);
+        let c = init(&cfg, 8);
+        assert_eq!(a.len(), count(&cfg));
+        for (t, spec) in a.iter().zip(specs(&cfg)) {
+            assert_eq!(t.shape(), spec.shape.as_slice(), "{}", spec.name);
+            assert!(t.data().iter().all(|x| x.is_finite()), "{}", spec.name);
+        }
+        assert_eq!(a[EMBEDDING], b[EMBEDDING]);
+        assert_ne!(a[EMBEDDING], c[EMBEDDING]);
+        // norm weights start at one; conv bias at zero
+        assert!(a[layer_param(0, slot::NORM_W)].data().iter().all(|&x| x == 1.0));
+        assert!(a[layer_param(0, slot::CONV_B)].data().iter().all(|&x| x == 0.0));
+        // dt_bias softplus lands inside [dt_min, dt_max]
+        for &b in a[layer_param(0, slot::DT_BIAS)].data() {
+            let dt = (1.0 + (b as f64).exp()).ln();
+            assert!((1e-4..0.2).contains(&dt), "dt {dt}");
+        }
+    }
+
+    #[test]
+    fn decay_mask_matches_reference() {
+        assert!(decays("embedding"));
+        assert!(decays("layers.0.in_proj"));
+        assert!(decays("layers.3.out_proj"));
+        assert!(!decays("layers.0.conv_w"));
+        assert!(!decays("layers.0.A_log"));
+        assert!(!decays("norm_f_w"));
+    }
+}

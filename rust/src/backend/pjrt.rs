@@ -1,0 +1,324 @@
+//! PJRT-backed [`Backend`]: executes the AOT HLO artifacts through the
+//! XLA PJRT CPU client (`--features pjrt`).
+//!
+//! This is the original execution path of the repo, refactored behind
+//! the [`Backend`] trait: geometry comes from the artifact manifest,
+//! init/train/grads/apply each map to one compiled artifact, and XLA
+//! owns all numerics (including init RNG — the host never re-implements
+//! them).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
+use crate::packing::PackedBatch;
+use crate::runtime::{ExecStats, Executable, HostValue, ParamSpec, Runtime};
+use crate::tensor::Tensor;
+use crate::Result;
+
+use super::{Backend, BatchGeometry, TrainState};
+
+impl TrainState {
+    /// Initialize by running the `init_<cfg>` artifact (XLA owns the
+    /// RNG; the host never re-implements the artifact init numerics).
+    pub fn init(runtime: &Rc<Runtime>, config: &str) -> Result<TrainState> {
+        let init = runtime.executable(&format!("init_{config}"))?;
+        let outs = init.run(&[])?;
+        let params: Vec<Tensor> = outs
+            .into_iter()
+            .map(HostValue::into_f32)
+            .collect::<Result<Vec<_>>>()?;
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        Ok(TrainState {
+            m: zeros.clone(),
+            v: zeros,
+            params,
+            step: 0,
+        })
+    }
+}
+
+pub struct PjrtBackend {
+    runtime: Rc<Runtime>,
+    /// (rows, pack_len) → train-step executable, resolved by `geometry`.
+    steps: RefCell<HashMap<(usize, usize), Rc<Executable>>>,
+}
+
+impl PjrtBackend {
+    /// Load the manifest and create a PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend::new(Runtime::load(artifacts_dir)?))
+    }
+
+    pub fn new(runtime: Rc<Runtime>) -> PjrtBackend {
+        PjrtBackend {
+            runtime,
+            steps: RefCell::new(HashMap::new()),
+        }
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.runtime
+    }
+
+    fn check_config(&self, model: &ModelConfig) -> Result<()> {
+        let manifest = self.runtime.manifest();
+        let mcfg = manifest
+            .configs
+            .get(&model.name)
+            .ok_or_else(|| anyhow::anyhow!("config `{}` has no artifacts", model.name))?;
+        anyhow::ensure!(
+            mcfg.get("param_count").and_then(crate::util::json::Json::as_usize)
+                == Some(model.param_count()),
+            "param_count mismatch between manifest and config::ModelConfig"
+        );
+        Ok(())
+    }
+
+    fn step_exe(&self, geom: (usize, usize)) -> Result<Rc<Executable>> {
+        self.steps
+            .borrow()
+            .get(&geom)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no train-step executable for geometry {geom:?} \
+                     (geometry() must run before train_step)"
+                )
+            })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn geometry(&self, cfg: &TrainConfig) -> Result<BatchGeometry> {
+        self.check_config(&cfg.model)?;
+        let config = cfg.model.name.as_str();
+        let manifest = self.runtime.manifest();
+        let buckets = manifest.single_buckets(config);
+        let mut steps = self.steps.borrow_mut();
+        let mut rows = cfg.packing.rows;
+        let mut pack_len = cfg.packing.pack_len;
+        let mut pad_geom = (cfg.packing.rows, cfg.packing.pack_len);
+        match cfg.scheme {
+            Scheme::Pack => {
+                let spec = manifest.train_step(config, "pack")?;
+                let geom = (
+                    spec.meta_usize("batch").unwrap_or(0),
+                    spec.meta_usize("seq_len").unwrap_or(0),
+                );
+                steps.insert(geom, self.runtime.executable(&spec.name.clone())?);
+                rows = geom.0;
+                pack_len = geom.1;
+            }
+            Scheme::Padding => {
+                let spec = manifest.train_step(config, "padding")?;
+                let geom = (
+                    spec.meta_usize("batch").unwrap_or(0),
+                    spec.meta_usize("seq_len").unwrap_or(0),
+                );
+                steps.insert(geom, self.runtime.executable(&spec.name.clone())?);
+                pad_geom = geom;
+            }
+            Scheme::SingleSequence => {
+                let mut found = false;
+                for spec in manifest.by_kind("train_step") {
+                    if spec.meta_str("config") == Some(config)
+                        && spec.meta_str("scheme") == Some("single")
+                    {
+                        let geom = (
+                            spec.meta_usize("batch").unwrap_or(0),
+                            spec.meta_usize("seq_len").unwrap_or(0),
+                        );
+                        steps.insert(geom, self.runtime.executable(&spec.name)?);
+                        found = true;
+                    }
+                }
+                anyhow::ensure!(found, "no single-sequence artifacts for {config}");
+            }
+        }
+        Ok(BatchGeometry {
+            rows,
+            pack_len,
+            buckets,
+            pad_geom,
+        })
+    }
+
+    fn init_state(&self, model: &ModelConfig, _seed: u64) -> Result<TrainState> {
+        // the artifact bakes its own seed: XLA owns the init numerics
+        TrainState::init(&self.runtime, &model.name)
+    }
+
+    fn train_step(
+        &self,
+        _model: &ModelConfig,
+        state: &mut TrainState,
+        batch: &PackedBatch,
+    ) -> Result<f32> {
+        let exe = self.step_exe((batch.rows(), batch.pack_len()))?;
+        let np = state.params.len();
+        let mut args: Vec<HostValue> = Vec::with_capacity(3 * np + 5);
+        for p in &state.params {
+            args.push(HostValue::F32(p.clone()));
+        }
+        for m in &state.m {
+            args.push(HostValue::F32(m.clone()));
+        }
+        for v in &state.v {
+            args.push(HostValue::F32(v.clone()));
+        }
+        args.push(HostValue::scalar(state.step as f32 + 1.0));
+        args.push(HostValue::I32(batch.tokens.clone()));
+        args.push(HostValue::I32(batch.targets.clone()));
+        args.push(HostValue::I32(batch.position_indices.clone()));
+        args.push(HostValue::F32(batch.loss_mask.clone()));
+
+        let mut outs = exe.run(&args)?;
+        anyhow::ensure!(outs.len() == 3 * np + 1, "train_step output arity");
+        let loss = outs
+            .pop()
+            .unwrap()
+            .as_f32()?
+            .data()
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("empty loss"))?;
+        let mut outs = outs.into_iter();
+        for p in state.params.iter_mut() {
+            *p = outs.next().unwrap().into_f32()?;
+        }
+        for m in state.m.iter_mut() {
+            *m = outs.next().unwrap().into_f32()?;
+        }
+        for v in state.v.iter_mut() {
+            *v = outs.next().unwrap().into_f32()?;
+        }
+        state.step += 1;
+        anyhow::ensure!(loss.is_finite(), "non-finite loss at step {}", state.step);
+        Ok(loss)
+    }
+
+    fn forward(
+        &self,
+        model: &ModelConfig,
+        state_params: &[Tensor],
+        batch: &PackedBatch,
+    ) -> Result<Tensor> {
+        let exe = self.runtime.executable(&format!(
+            "forward_{}_b{}x{}",
+            model.name,
+            batch.rows(),
+            batch.pack_len()
+        ))?;
+        let mut args: Vec<HostValue> = state_params
+            .iter()
+            .map(|p| HostValue::F32(p.clone()))
+            .collect();
+        args.push(HostValue::I32(batch.tokens.clone()));
+        args.push(HostValue::I32(batch.position_indices.clone()));
+        exe.run(&args)?
+            .swap_remove(0)
+            .into_f32()
+    }
+
+    fn loss_and_grads(
+        &self,
+        model: &ModelConfig,
+        state_params: &[Tensor],
+        batch: &PackedBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let config = model.name.as_str();
+        let name = self
+            .runtime
+            .manifest()
+            .by_kind("grads")
+            .into_iter()
+            .find(|a| {
+                a.meta_str("config") == Some(config)
+                    && a.meta_usize("batch") == Some(batch.rows())
+                    && a.meta_usize("seq_len") == Some(batch.pack_len())
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no grads artifact for {config} at {}x{}",
+                    batch.rows(),
+                    batch.pack_len()
+                )
+            })?
+            .name
+            .clone();
+        let exe = self.runtime.executable(&name)?;
+        let np = state_params.len();
+        let mut args: Vec<HostValue> = Vec::with_capacity(np + 4);
+        for p in state_params {
+            args.push(HostValue::F32(p.clone()));
+        }
+        args.push(HostValue::I32(batch.tokens.clone()));
+        args.push(HostValue::I32(batch.targets.clone()));
+        args.push(HostValue::I32(batch.position_indices.clone()));
+        args.push(HostValue::F32(batch.loss_mask.clone()));
+        let outs = exe.run(&args)?;
+        anyhow::ensure!(outs.len() == np + 1, "grads output arity");
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().as_f32()?.data()[0];
+        let grads: Vec<Tensor> = it.map(HostValue::into_f32).collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    fn apply_update(
+        &self,
+        model: &ModelConfig,
+        state: &mut TrainState,
+        grads: &[Tensor],
+    ) -> Result<()> {
+        let exe = self
+            .runtime
+            .executable(&format!("adam_apply_{}", model.name))?;
+        let np = state.params.len();
+        anyhow::ensure!(grads.len() == np, "adam_apply grads arity");
+        let mut args: Vec<HostValue> = Vec::with_capacity(4 * np + 1);
+        for p in &state.params {
+            args.push(HostValue::F32(p.clone()));
+        }
+        for m in &state.m {
+            args.push(HostValue::F32(m.clone()));
+        }
+        for v in &state.v {
+            args.push(HostValue::F32(v.clone()));
+        }
+        args.push(HostValue::scalar(state.step as f32 + 1.0));
+        for g in grads {
+            args.push(HostValue::F32(g.clone()));
+        }
+        let outs = exe.run(&args)?;
+        anyhow::ensure!(outs.len() == 3 * np, "adam_apply output arity");
+        let mut it = outs.into_iter();
+        for p in state.params.iter_mut() {
+            *p = it.next().unwrap().into_f32()?;
+        }
+        for m in state.m.iter_mut() {
+            *m = it.next().unwrap().into_f32()?;
+        }
+        for v in state.v.iter_mut() {
+            *v = it.next().unwrap().into_f32()?;
+        }
+        state.step += 1;
+        Ok(())
+    }
+
+    fn param_specs(&self, model: &ModelConfig) -> Result<Vec<ParamSpec>> {
+        Ok(self.runtime.manifest().params_for(&model.name)?.to_vec())
+    }
+
+    fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut out: Vec<(String, ExecStats)> = self.runtime.stats().into_iter().collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}

@@ -169,6 +169,33 @@ impl Scheme {
     }
 }
 
+/// Which execution backend runs the training step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// pure-Rust CPU implementation of the packed operators (default;
+    /// self-contained, no artifacts required)
+    Native,
+    /// AOT HLO artifacts on the PJRT CPU client (`--features pjrt`)
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" | "cpu" | "rust" => Some(BackendKind::Native),
+            "pjrt" | "xla" | "artifacts" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Packing-policy knobs (paper §5 discussion).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackingConfig {
@@ -204,6 +231,7 @@ impl PackingConfig {
 pub struct TrainConfig {
     pub model: ModelConfig,
     pub scheme: Scheme,
+    pub backend: BackendKind,
     pub packing: PackingConfig,
     pub steps: usize,
     pub seed: u64,
@@ -228,6 +256,7 @@ impl TrainConfig {
         Self {
             model,
             scheme: Scheme::Pack,
+            backend: BackendKind::Native,
             packing: PackingConfig::streaming(pack_len, 2),
             steps: 200,
             seed: 42,
@@ -244,6 +273,7 @@ impl TrainConfig {
         Json::from_pairs([
             ("model", self.model.to_json()),
             ("scheme", Json::from(self.scheme.name())),
+            ("backend", Json::from(self.backend.name())),
             ("pack_len", Json::from(self.packing.pack_len)),
             ("rows", Json::from(self.packing.rows)),
             ("greedy_buffer", Json::from(self.packing.greedy_buffer)),
@@ -265,6 +295,10 @@ impl TrainConfig {
         if let Some(s) = j.get("scheme").and_then(Json::as_str) {
             cfg.scheme = Scheme::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown scheme `{s}`"))?;
+        }
+        if let Some(s) = j.get("backend").and_then(Json::as_str) {
+            cfg.backend = BackendKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend `{s}`"))?;
         }
         if let Some(v) = get_u("pack_len") {
             cfg.packing.pack_len = v;
@@ -367,14 +401,25 @@ mod tests {
     fn train_json_round_trip() {
         let mut c = TrainConfig::defaults(ModelConfig::tiny());
         c.scheme = Scheme::Padding;
+        c.backend = BackendKind::Pjrt;
         c.steps = 7;
         c.dp_workers = 3;
         let j = c.to_json();
         let c2 = TrainConfig::from_json(&j).unwrap();
         assert_eq!(c2.scheme, Scheme::Padding);
+        assert_eq!(c2.backend, BackendKind::Pjrt);
         assert_eq!(c2.steps, 7);
         assert_eq!(c2.dp_workers, 3);
         assert_eq!(c2.model, c.model);
+    }
+
+    #[test]
+    fn backend_parse_names() {
+        for b in [BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(b.name()), Some(b));
+        }
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("bogus"), None);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::Result;
 
-use super::trainer::TrainState;
+use crate::backend::TrainState;
 
 const MAGIC: &[u8; 8] = b"PKMAMBA1";
 

@@ -1,29 +1,30 @@
 //! Data-parallel training (the paper trains on 8 GPUs with data
 //! parallelism; §4).
 //!
-//! Worker = one thread owning its own PJRT runtime (the `xla` client is
-//! `Rc`-based, mirroring one-process-per-device), its own corpus shard and
-//! pipeline, and a full replica of model + optimizer state.  Per step:
+//! Worker = one thread owning its own backend instance (backends are
+//! thread-local by design, mirroring one-process-per-device), its own
+//! corpus shard and pipeline, and a full replica of model + optimizer
+//! state.  Per step:
 //!
-//!   1. every worker computes (loss, grads) with the `grads_<cfg>`
-//!      artifact on its shard's batch,
+//!   1. every worker computes (loss, grads) on its shard's batch,
 //!   2. grads cross to the leader thread, which averages them
 //!      (host all-reduce, [`crate::tensor::allreduce_mean`]),
 //!   3. averaged grads go back; each worker applies the *identical*
-//!      `adam_apply_<cfg>` update, keeping replicas bit-identical — the
-//!      invariant `replicas_identical` tests assert.
+//!      optimizer update, keeping replicas bit-identical — the
+//!      invariant `replicas_identical` tests assert.  (The native
+//!      backend's numerics are deterministic for any thread count,
+//!      which is what makes the bit-identity achievable on the host.)
 
-use std::path::PathBuf;
 use std::sync::mpsc;
 
+use crate::backend;
 use crate::config::{Scheme, TrainConfig};
 use crate::packing::PackedBatch;
-use crate::runtime::{HostValue, Runtime};
 use crate::tensor::{allreduce_mean, Tensor};
 use crate::Result;
 
 use super::metrics::{StepRecord, TrainMetrics};
-use super::trainer::{Pipeline, TrainState};
+use super::trainer::Pipeline;
 
 /// Per-step message from a worker to the leader.
 struct GradMsg {
@@ -47,7 +48,6 @@ pub struct DpRunResult {
 
 pub struct DataParallelTrainer {
     cfg: TrainConfig,
-    artifacts_dir: PathBuf,
 }
 
 impl DataParallelTrainer {
@@ -56,8 +56,7 @@ impl DataParallelTrainer {
             cfg.scheme == Scheme::Pack,
             "data-parallel path is wired for the pack scheme (the paper's)"
         );
-        let artifacts_dir = PathBuf::from(&cfg.artifacts_dir);
-        Ok(Self { cfg, artifacts_dir })
+        Ok(Self { cfg })
     }
 
     /// Run `cfg.steps` synchronous data-parallel steps on
@@ -81,7 +80,6 @@ impl DataParallelTrainer {
         let mut handles = Vec::with_capacity(n);
         for w in 0..n {
             let cfg = self.cfg.clone();
-            let dir = self.artifacts_dir.clone();
             let grad_tx = grad_tx.clone();
             let avg_rx = avg_rxs[w].take().unwrap();
             let done_tx = done_tx.clone();
@@ -89,7 +87,7 @@ impl DataParallelTrainer {
                 std::thread::Builder::new()
                     .name(format!("dp-worker-{w}"))
                     .spawn(move || -> Result<()> {
-                        worker_loop(w, n, steps, &cfg, &dir, grad_tx, avg_rx, done_tx)
+                        worker_loop(w, n, steps, &cfg, grad_tx, avg_rx, done_tx)
                     })
                     .expect("spawn dp worker"),
             );
@@ -158,65 +156,33 @@ impl DataParallelTrainer {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
     num_shards: usize,
     steps: usize,
     cfg: &TrainConfig,
-    dir: &std::path::Path,
     grad_tx: mpsc::Sender<GradMsg>,
     avg_rx: mpsc::Receiver<Vec<Tensor>>,
     done_tx: mpsc::Sender<(usize, Vec<Tensor>)>,
 ) -> Result<()> {
-    let runtime = Runtime::load(dir)?;
-    let config = cfg.model.name.as_str();
-    let manifest = runtime.manifest();
-    let grads_spec = manifest
-        .by_kind("grads")
-        .into_iter()
-        .find(|a| a.meta_str("config") == Some(config))
-        .ok_or_else(|| anyhow::anyhow!("no grads artifact for {config}"))?
-        .name
-        .clone();
-    let (rows, plen) = {
-        let a = manifest.artifact(&grads_spec)?;
-        (
-            a.meta_usize("batch").unwrap_or(cfg.packing.rows),
-            a.meta_usize("seq_len").unwrap_or(cfg.packing.pack_len),
-        )
-    };
-    let grads_exe = runtime.executable(&grads_spec)?;
-    let apply_exe = runtime.executable(&format!("adam_apply_{config}"))?;
+    // each worker owns its backend (thread-local by design)
+    let be = backend::create(cfg)?;
+    let geom = be.geometry(cfg)?;
 
-    // identical init on every worker (same seed inside the artifact)
-    let mut state = TrainState::init(&runtime, config)?;
-    let np = state.params.len();
+    // identical init on every worker (same seed)
+    let mut state = be.init_state(&cfg.model, cfg.seed)?;
 
     let mut pcfg = cfg.clone();
-    pcfg.packing.rows = rows;
-    pcfg.packing.pack_len = plen;
-    pcfg.max_len = pcfg.max_len.min(plen);
-    let pipeline = Pipeline::spawn(&pcfg, Vec::new(), (rows, plen), w, num_shards);
+    pcfg.packing.rows = geom.rows;
+    pcfg.packing.pack_len = geom.pack_len;
+    pcfg.max_len = pcfg.max_len.min(geom.pack_len);
+    let pipeline = Pipeline::spawn(&pcfg, geom.buckets.clone(), geom.pad_geom, w, num_shards);
 
     for _step in 0..steps {
         let batch: PackedBatch = pipeline
             .next_batch()
             .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
-        // grads(params, tokens, targets, pos, mask) -> (loss, grads...)
-        let mut args: Vec<HostValue> = Vec::with_capacity(np + 4);
-        for p in &state.params {
-            args.push(HostValue::F32(p.clone()));
-        }
-        args.push(HostValue::I32(batch.tokens.clone()));
-        args.push(HostValue::I32(batch.targets.clone()));
-        args.push(HostValue::I32(batch.position_indices.clone()));
-        args.push(HostValue::F32(batch.loss_mask.clone()));
-        let outs = grads_exe.run(&args)?;
-        anyhow::ensure!(outs.len() == np + 1, "grads output arity");
-        let mut it = outs.into_iter();
-        let loss = it.next().unwrap().as_f32()?.data()[0];
-        let grads: Vec<Tensor> = it.map(HostValue::into_f32).collect::<Result<Vec<_>>>()?;
+        let (loss, grads) = be.loss_and_grads(&cfg.model, &state.params, &batch)?;
         grad_tx
             .send(GradMsg {
                 worker: w,
@@ -230,35 +196,7 @@ fn worker_loop(
         let avg = avg_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("leader hung up (avg)"))?;
-
-        // apply the identical update: (p, m, v, step, grads) -> (p', m', v')
-        let mut args: Vec<HostValue> = Vec::with_capacity(3 * np + 1 + np);
-        for p in &state.params {
-            args.push(HostValue::F32(p.clone()));
-        }
-        for m in &state.m {
-            args.push(HostValue::F32(m.clone()));
-        }
-        for v in &state.v {
-            args.push(HostValue::F32(v.clone()));
-        }
-        args.push(HostValue::scalar(state.step as f32 + 1.0));
-        for g in &avg {
-            args.push(HostValue::F32(g.clone()));
-        }
-        let outs = apply_exe.run(&args)?;
-        anyhow::ensure!(outs.len() == 3 * np, "adam_apply output arity");
-        let mut it = outs.into_iter();
-        for p in state.params.iter_mut() {
-            *p = it.next().unwrap().into_f32()?;
-        }
-        for m in state.m.iter_mut() {
-            *m = it.next().unwrap().into_f32()?;
-        }
-        for v in state.v.iter_mut() {
-            *v = it.next().unwrap().into_f32()?;
-        }
-        state.step += 1;
+        be.apply_update(&cfg.model, &mut state, &avg)?;
     }
     done_tx
         .send((w, state.params))

@@ -1,13 +1,14 @@
 //! The training coordinator (L3): everything between the data pipeline
-//! and the PJRT runtime.
+//! and the execution backend.
 //!
 //! * [`trainer`] — single-process training loop: pipeline thread →
-//!   bounded queue → fused train-step artifact; supports all three
-//!   batching schemes of the paper's evaluation.
+//!   bounded queue → fused backend train step; supports all three
+//!   batching schemes of the paper's evaluation on any
+//!   [`crate::backend::Backend`].
 //! * [`dataparallel`] — multi-worker orchestration: per-worker gradient
 //!   computation, host-side all-reduce, replicated optimizer step
 //!   (the paper trains with 8-GPU data parallel; workers here are
-//!   threads, each owning its own PJRT runtime).
+//!   threads, each owning its own backend instance).
 //! * [`metrics`] — step timing, token accounting, loss curves, padding
 //!   rates; JSON export for EXPERIMENTS.md.
 //! * [`checkpoint`] — binary save/load of params + optimizer state.
@@ -17,6 +18,7 @@ pub mod dataparallel;
 pub mod metrics;
 pub mod trainer;
 
+pub use crate::backend::TrainState;
 pub use dataparallel::DataParallelTrainer;
 pub use metrics::TrainMetrics;
-pub use trainer::{TrainState, Trainer};
+pub use trainer::Trainer;

@@ -1,63 +1,30 @@
 //! Single-process trainer: data pipeline thread → bounded queue → fused
-//! train-step artifact.
+//! backend train step.
 //!
-//! One [`Trainer`] drives one model replica.  The batching scheme decides
-//! how the pipeline turns the document stream into device batches:
+//! One [`Trainer`] drives one model replica on one [`Backend`] — the
+//! native CPU implementation by default, or the PJRT artifact runtime
+//! with `--features pjrt`.  The batching scheme decides how the pipeline
+//! turns the document stream into device batches:
 //!
 //! * `Pack`      — StreamingPacker/GreedyPacker → (rows, pack_len) batches
 //!                 with position indices (the PackMamba scheme),
-//! * `Padding`   — groups of `rows` sequences padded to the artifact's
+//! * `Padding`   — groups of `rows` sequences padded to the scheme's
 //!                 max length,
 //! * `SingleSequence` — one sequence per step, bucketed to the smallest
-//!                 compiled length that fits (the paper's baseline).
+//!                 supported length that fits (the paper's baseline).
 
-use std::rc::Rc;
 use std::time::Instant;
 
+use crate::backend::{Backend, TrainState};
 use crate::config::{Scheme, TrainConfig};
 use crate::data::{LengthSampler, SyntheticCorpus};
 use crate::packing::{
     pad_to_max, single_sequence_batch, GreedyPacker, PackedBatch, Sequence, StreamingPacker,
 };
-use crate::runtime::{Executable, HostValue, Runtime};
-use crate::tensor::Tensor;
 use crate::util::threadpool::BoundedQueue;
 use crate::Result;
 
 use super::metrics::{StepRecord, TrainMetrics};
-
-/// Model + optimizer state as flat host values (manifest parameter order).
-#[derive(Clone, Debug)]
-pub struct TrainState {
-    pub params: Vec<Tensor>,
-    pub m: Vec<Tensor>,
-    pub v: Vec<Tensor>,
-    pub step: usize,
-}
-
-impl TrainState {
-    /// Initialize by running the `init_<cfg>` artifact (XLA owns the RNG;
-    /// rust never re-implements the init numerics).
-    pub fn init(runtime: &Rc<Runtime>, config: &str) -> Result<TrainState> {
-        let init = runtime.executable(&format!("init_{config}"))?;
-        let outs = init.run(&[])?;
-        let params: Vec<Tensor> = outs
-            .into_iter()
-            .map(HostValue::into_f32)
-            .collect::<Result<Vec<_>>>()?;
-        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
-        Ok(TrainState {
-            m: zeros.clone(),
-            v: zeros,
-            params,
-            step: 0,
-        })
-    }
-
-    pub fn param_count(&self) -> usize {
-        self.params.iter().map(Tensor::len).sum()
-    }
-}
 
 /// Batch producer: runs the corpus + batching scheme on its own thread.
 pub struct Pipeline {
@@ -67,8 +34,8 @@ pub struct Pipeline {
 
 impl Pipeline {
     /// Spawn a producer for `scheme`.  `buckets` is the single-sequence
-    /// bucket list from the manifest; `pad_geom` = (rows, max_len) for the
-    /// padding artifact.
+    /// bucket list from the backend's geometry; `pad_geom` = (rows,
+    /// max_len) for the padding scheme.
     pub fn spawn(
         cfg: &TrainConfig,
         buckets: Vec<usize>,
@@ -166,98 +133,53 @@ impl Drop for Pipeline {
     }
 }
 
-/// Single-replica trainer.
+/// Single-replica trainer over an arbitrary backend.
 pub struct Trainer {
-    runtime: Rc<Runtime>,
+    backend: Box<dyn Backend>,
     cfg: TrainConfig,
     state: TrainState,
     pipeline: Pipeline,
-    /// per batch geometry (b, l) → compiled step executable
-    steps: std::collections::HashMap<(usize, usize), Rc<Executable>>,
     pub metrics: TrainMetrics,
 }
 
 impl Trainer {
-    pub fn new(runtime: Rc<Runtime>, cfg: TrainConfig) -> Result<Trainer> {
+    /// Build a trainer from the config's selected backend
+    /// (`cfg.backend`).
+    pub fn from_config(cfg: TrainConfig) -> Result<Trainer> {
+        let backend = crate::backend::create(&cfg)?;
+        Trainer::new(backend, cfg)
+    }
+
+    pub fn new(backend: Box<dyn Backend>, cfg: TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
-        let config_name = cfg.model.name.clone();
-        let config = config_name.as_str();
-        let manifest = runtime.manifest();
-        // check manifest agrees with the local config
-        let mcfg = manifest
-            .configs
-            .get(config)
-            .ok_or_else(|| anyhow::anyhow!("config `{config}` has no artifacts"))?;
-        anyhow::ensure!(
-            mcfg.get("param_count").and_then(crate::util::json::Json::as_usize)
-                == Some(cfg.model.param_count()),
-            "param_count mismatch between manifest and config::ModelConfig"
-        );
-
-        // resolve artifacts for the scheme
-        let mut steps = std::collections::HashMap::new();
-        let buckets = manifest.single_buckets(config);
-        let mut pad_geom = (cfg.packing.rows, cfg.packing.pack_len);
-        match cfg.scheme {
-            Scheme::Pack => {
-                let spec = manifest.train_step(config, "pack")?;
-                let geom = (
-                    spec.meta_usize("batch").unwrap_or(0),
-                    spec.meta_usize("seq_len").unwrap_or(0),
-                );
-                steps.insert(geom, runtime.executable(&spec.name.clone())?);
-            }
-            Scheme::Padding => {
-                let spec = manifest.train_step(config, "padding")?;
-                let geom = (
-                    spec.meta_usize("batch").unwrap_or(0),
-                    spec.meta_usize("seq_len").unwrap_or(0),
-                );
-                pad_geom = geom;
-                steps.insert(geom, runtime.executable(&spec.name.clone())?);
-            }
-            Scheme::SingleSequence => {
-                for spec in manifest.by_kind("train_step") {
-                    if spec.meta_str("config") == Some(config)
-                        && spec.meta_str("scheme") == Some("single")
-                    {
-                        let geom = (
-                            spec.meta_usize("batch").unwrap_or(0),
-                            spec.meta_usize("seq_len").unwrap_or(0),
-                        );
-                        steps.insert(geom, runtime.executable(&spec.name)?);
-                    }
-                }
-                anyhow::ensure!(!steps.is_empty(), "no single-sequence artifacts");
-            }
-        }
-
-        // pipeline geometry must match the compiled artifacts
+        // the backend dictates the executable geometry; the pipeline and
+        // config must follow it
+        let geom = backend.geometry(&cfg)?;
         let mut cfg = cfg;
         match cfg.scheme {
             Scheme::Pack => {
-                let (&(b, l), _) = steps.iter().next().unwrap();
-                cfg.packing.rows = b;
-                cfg.packing.pack_len = l;
-                cfg.max_len = cfg.max_len.min(l);
+                cfg.packing.rows = geom.rows;
+                cfg.packing.pack_len = geom.pack_len;
+                cfg.max_len = cfg.max_len.min(geom.pack_len);
             }
             Scheme::Padding => {
-                cfg.max_len = cfg.max_len.min(pad_geom.1);
+                cfg.max_len = cfg.max_len.min(geom.pad_geom.1);
             }
             Scheme::SingleSequence => {
-                let max_bucket = *buckets.last().unwrap();
+                let max_bucket = *geom
+                    .buckets
+                    .last()
+                    .ok_or_else(|| anyhow::anyhow!("backend reports no buckets"))?;
                 cfg.max_len = cfg.max_len.min(max_bucket);
             }
         }
-
-        let state = TrainState::init(&runtime, config)?;
-        let pipeline = Pipeline::spawn(&cfg, buckets, pad_geom, 0, 1);
+        let state = backend.init_state(&cfg.model, cfg.seed)?;
+        let pipeline = Pipeline::spawn(&cfg, geom.buckets.clone(), geom.pad_geom, 0, 1);
         Ok(Trainer {
-            runtime,
+            backend,
             cfg,
             state,
             pipeline,
-            steps,
             metrics: TrainMetrics::new(),
         })
     }
@@ -270,8 +192,8 @@ impl Trainer {
         &self.cfg
     }
 
-    pub fn runtime(&self) -> &Rc<Runtime> {
-        &self.runtime
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
 
     /// Run one training step; returns the loss.
@@ -281,13 +203,9 @@ impl Trainer {
             .pipeline
             .next_batch()
             .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
-        let geom = (batch.rows(), batch.pack_len());
-        let exe = self
-            .steps
-            .get(&geom)
-            .ok_or_else(|| anyhow::anyhow!("no step executable for geometry {geom:?}"))?
-            .clone();
-        let loss = self.run_step(&exe, &batch)?;
+        let loss = self
+            .backend
+            .train_step(&self.cfg.model, &mut self.state, &batch)?;
         self.metrics.record(StepRecord {
             step: self.state.step,
             loss,
@@ -296,50 +214,6 @@ impl Trainer {
             slot_tokens: batch.rows() * batch.pack_len(),
             sequences: batch.row_lengths.iter().map(Vec::len).sum(),
         });
-        Ok(loss)
-    }
-
-    /// Execute the fused train step on `batch` and update host state.
-    fn run_step(&mut self, exe: &Executable, batch: &PackedBatch) -> Result<f32> {
-        let np = self.state.params.len();
-        let mut args: Vec<HostValue> = Vec::with_capacity(3 * np + 5);
-        for p in &self.state.params {
-            args.push(HostValue::F32(p.clone()));
-        }
-        for m in &self.state.m {
-            args.push(HostValue::F32(m.clone()));
-        }
-        for v in &self.state.v {
-            args.push(HostValue::F32(v.clone()));
-        }
-        args.push(HostValue::scalar(self.state.step as f32 + 1.0));
-        args.push(HostValue::I32(batch.tokens.clone()));
-        args.push(HostValue::I32(batch.targets.clone()));
-        args.push(HostValue::I32(batch.position_indices.clone()));
-        args.push(HostValue::F32(batch.loss_mask.clone()));
-
-        let mut outs = exe.run(&args)?;
-        anyhow::ensure!(outs.len() == 3 * np + 1, "train_step output arity");
-        let loss = outs
-            .pop()
-            .unwrap()
-            .as_f32()?
-            .data()
-            .first()
-            .copied()
-            .ok_or_else(|| anyhow::anyhow!("empty loss"))?;
-        let mut outs = outs.into_iter();
-        for p in self.state.params.iter_mut() {
-            *p = outs.next().unwrap().into_f32()?;
-        }
-        for m in self.state.m.iter_mut() {
-            *m = outs.next().unwrap().into_f32()?;
-        }
-        for v in self.state.v.iter_mut() {
-            *v = outs.next().unwrap().into_f32()?;
-        }
-        self.state.step += 1;
-        anyhow::ensure!(loss.is_finite(), "non-finite loss at step {}", self.state.step);
         Ok(loss)
     }
 

@@ -1,34 +1,40 @@
 //! # PackMamba
 //!
 //! A reproduction of *PackMamba: Efficient Processing of Variable-Length
-//! Sequences in Mamba Training* (Xu et al., 2024) as a three-layer
-//! Rust + JAX + Pallas system:
+//! Sequences in Mamba Training* (Xu et al., 2024) as a multi-backend
+//! Rust training system:
 //!
-//! * **L1/L2 (build time)** — the Mamba model and its packed sequence-wise
-//!   operators (causal conv1d + selective scan) live in `python/compile/`,
-//!   AOT-lowered to HLO text artifacts.
-//! * **L3 (this crate)** — the training coordinator: data pipeline,
-//!   the packing library (the paper's host-side contribution), the PJRT
-//!   runtime that executes the artifacts, data-parallel orchestration,
-//!   metrics, and the benchmark harness that regenerates every figure of
-//!   the paper's evaluation.
+//! * **[`backend::NativeBackend`]** (default) — a pure-Rust,
+//!   multi-threaded CPU implementation of the packed Mamba training
+//!   step.  The paper's §3 operator modifications live in
+//!   [`backend::kernels`]: the packed causal conv1d masks taps with the
+//!   position-index plane (§3.3), and the packed selective scan zeroes
+//!   the decay `Ā` at `pos == 0` boundaries (§3.1/§3.4-3.5) so packed
+//!   neighbours never exchange state.  `cargo run -- train` works on a
+//!   fresh checkout with no artifacts and no external dependencies.
+//! * **`backend::pjrt`** (`--features pjrt`) — the AOT path: the Mamba
+//!   model and its packed Pallas operators in `python/compile/` are
+//!   lowered to HLO text artifacts and executed through the PJRT C API.
+//!   The default build ships a compile-only `xla` stub (`vendor/xla`);
+//!   patch in a real xla build to execute artifacts.
 //!
-//! Python never runs on the training path: after `make artifacts` the
-//! `packmamba` binary is self-contained.
+//! Either way, Python never runs on the training path.
 //!
 //! ## Module map
 //!
 //! | module | role |
 //! |---|---|
 //! | [`util`] | offline substrates: RNG, JSON, CLI parsing, stats, bench + property-test harnesses, thread pool, logging |
-//! | [`tensor`] | host tensors (f32 / software bf16) used by tests, checkpoints and host-side all-reduce |
-//! | [`config`] | model / training / packing configuration, JSON-backed |
+//! | [`tensor`] | host tensors (f32 / software bf16) used by backends, tests, checkpoints and host-side all-reduce |
+//! | [`config`] | model / training / packing / backend configuration, JSON-backed |
 //! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
 //! | [`packing`] | pack()/unpack(), position indices, the packers for all three batching schemes |
-//! | [`runtime`] | PJRT client wrapper: artifact registry, executors, literal staging |
+//! | [`backend`] | the `Backend` trait + `NativeBackend` (packed conv1d + selective scan fwd/bwd, AdamW) + PJRT backend (feature `pjrt`) |
+//! | [`runtime`] | artifact manifest + host values; PJRT client wrapper behind the `pjrt` feature |
 //! | [`coordinator`] | trainer, schemes, data-parallel leader, metrics, checkpoints |
 //! | [`perfmodel`] | analytic A100 model reproducing the paper-scale figure shapes |
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;

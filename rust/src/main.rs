@@ -1,21 +1,24 @@
 //! `packmamba` CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   train              train a model with a chosen batching scheme
+//!   train              train a model with a chosen batching scheme + backend
 //!   dp-train           synchronous data-parallel training (N workers)
 //!   pack-stats         padding-rate comparison of the batching schemes
 //!   inspect-artifacts  list AOT artifacts and their signatures
 //!   model-perf         analytic A100 projections (Fig 5 summary)
+//!
+//! The default backend is `native` (pure-Rust packed operators, no
+//! artifacts needed); `--backend pjrt` selects the AOT artifact runtime
+//! when built with `--features pjrt`.
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
-use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
 use packmamba::coordinator::{checkpoint, DataParallelTrainer, Trainer};
 use packmamba::data::LengthTrace;
 use packmamba::packing::{pad_to_max, GreedyPacker, PackingStats, Sequence, StreamingPacker};
 use packmamba::perfmodel::{fig5_table, GpuSpec};
-use packmamba::runtime::Runtime;
+use packmamba::runtime::Manifest;
 use packmamba::util::argparse::{App, Command, Matches};
 use packmamba::util::logging;
 
@@ -28,20 +31,22 @@ fn main() {
                 .flag("config", "c", "training config json (overrides flags)", None)
                 .flag("model", "m", "model preset (tiny|small)", Some("tiny"))
                 .flag("scheme", "s", "single|padding|pack", Some("pack"))
+                .flag("backend", "b", "native|pjrt", Some("native"))
                 .flag("steps", "n", "training steps", Some("100"))
                 .flag("seed", "", "corpus seed", Some("42"))
                 .flag("greedy-buffer", "g", "greedy packer buffer (0=streaming)", Some("0"))
-                .flag("artifacts", "a", "artifacts directory", Some("artifacts"))
+                .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts"))
                 .flag("save", "o", "checkpoint output path", None)
                 .flag("metrics-out", "", "write metrics json here", None),
         )
         .command(
             Command::new("dp-train", "data-parallel training (pack scheme)")
                 .flag("model", "m", "model preset (tiny|small)", Some("tiny"))
+                .flag("backend", "b", "native|pjrt", Some("native"))
                 .flag("steps", "n", "training steps", Some("50"))
                 .flag("workers", "w", "data-parallel workers", Some("2"))
                 .flag("seed", "", "corpus seed", Some("42"))
-                .flag("artifacts", "a", "artifacts directory", Some("artifacts")),
+                .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts")),
         )
         .command(
             Command::new("pack-stats", "padding rates of the batching schemes")
@@ -87,11 +92,16 @@ fn build_train_config(m: &Matches) -> anyhow::Result<TrainConfig> {
     }
     let model = ModelConfig::by_name(m.get_or("model", "tiny"))
         .ok_or_else(|| anyhow::anyhow!("unknown model preset"))?;
+    let mut cfg = TrainConfig::defaults(model);
+    if let Some(s) = m.get("backend") {
+        cfg.backend = BackendKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad backend `{s}` (native|pjrt)"))?;
+    }
     anyhow::ensure!(
-        matches!(model.name.as_str(), "tiny" | "small"),
+        cfg.backend == BackendKind::Native
+            || matches!(cfg.model.name.as_str(), "tiny" | "small"),
         "artifacts exist only for tiny/small (paper-scale models are perfmodel-only)"
     );
-    let mut cfg = TrainConfig::defaults(model);
     if let Some(s) = m.get("scheme") {
         cfg.scheme = Scheme::parse(s).ok_or_else(|| anyhow::anyhow!("bad scheme `{s}`"))?;
     }
@@ -113,20 +123,21 @@ fn build_train_config(m: &Matches) -> anyhow::Result<TrainConfig> {
 
 fn cmd_train(m: &Matches) -> anyhow::Result<()> {
     let cfg = build_train_config(m)?;
-    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
-    let mut trainer = Trainer::new(Rc::clone(&runtime), cfg.clone())?;
+    let mut trainer = Trainer::from_config(cfg.clone())?;
     log::info!(
-        "training {} ({} params) scheme={} steps={}",
+        "training {} ({} params) scheme={} backend={} steps={}",
         cfg.model.name,
         trainer.state().param_count(),
         cfg.scheme.name(),
+        cfg.backend.name(),
         cfg.steps
     );
     trainer.train()?;
     let met = &trainer.metrics;
     println!(
-        "\nscheme={} steps={} loss {:.4} -> {:.4}",
+        "\nscheme={} backend={} steps={} loss {:.4} -> {:.4}",
         cfg.scheme.name(),
+        cfg.backend.name(),
         met.steps(),
         met.mean_loss_head(5),
         met.mean_loss_tail(5)
@@ -136,9 +147,9 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
         met.stable_throughput(5, 100).unwrap_or(0.0),
         met.padding_rate() * 100.0
     );
-    // per-artifact host-overhead profile (the §Perf L3 target: staging +
-    // fetch must stay below 5% of execute time)
-    for (name, st) in runtime.stats() {
+    // per-op profile (for the PJRT backend this is the §Perf L3 target:
+    // staging + fetch must stay below 5% of execute time)
+    for (name, st) in trainer.backend().stats() {
         let host = st.stage_secs + st.fetch_secs;
         println!(
             "  {name}: {} calls, exec {:.2}s, host staging+fetch {:.2}s ({:.1}% of exec)",
@@ -153,7 +164,7 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
         log::info!("metrics written to {out}");
     }
     if let Some(path) = m.get("save") {
-        let specs = runtime.manifest().params_for(&cfg.model.name)?.to_vec();
+        let specs = trainer.backend().param_specs(&cfg.model)?;
         checkpoint::save(&PathBuf::from(path), &cfg.model.name, &specs, trainer.state())?;
         log::info!("checkpoint written to {path}");
     }
@@ -247,8 +258,8 @@ fn cmd_pack_stats(m: &Matches) -> anyhow::Result<()> {
 
 fn cmd_inspect(m: &Matches) -> anyhow::Result<()> {
     let dir = m.get_or("artifacts", "artifacts");
-    let runtime = Runtime::load(Path::new(dir))?;
-    let manifest = runtime.manifest();
+    // pure manifest inspection: works without the pjrt feature
+    let manifest = Manifest::load(Path::new(dir))?;
     println!("{} artifacts in {dir}:", manifest.artifacts.len());
     for (name, spec) in &manifest.artifacts {
         println!(

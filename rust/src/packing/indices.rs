@@ -14,7 +14,9 @@ pub fn position_indices(lengths: &[usize], pack_len: usize) -> Vec<i32> {
     assert!(used <= pack_len, "lengths {lengths:?} overflow pack_len {pack_len}");
     let mut out = Vec::with_capacity(pack_len);
     for &n in lengths {
-        out.extend((0..n as i32).collect::<Vec<_>>());
+        // extend straight from the range: no intermediate Vec per
+        // sequence on the hot pack path (covered by `packer_micro`)
+        out.extend(0..n as i32);
     }
     out.extend(0..(pack_len - used) as i32);
     out

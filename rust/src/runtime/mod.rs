@@ -1,206 +1,39 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute many.
+//! Artifact runtime layer.
 //!
-//! Wraps the `xla` crate (PJRT C API) following the pattern in
-//! `/opt/xla-example/load_hlo`: HLO **text** → `HloModuleProto` →
-//! `XlaComputation` → `PjRtClient::compile` → `execute`.
+//! * [`Manifest`] — typed view of `artifacts/manifest.json` (pure JSON;
+//!   always available, e.g. for `inspect-artifacts`).
+//! * [`HostValue`] — typed host tensors crossing an execution boundary.
+//! * [`Runtime`]/[`Executable`] (feature `pjrt`) — the PJRT client
+//!   wrapper: HLO **text** → `HloModuleProto` → `XlaComputation` →
+//!   `PjRtClient::compile` → `execute`, with a compile cache per
+//!   artifact.  The client is `Rc`-based and thread-local; data-parallel
+//!   workers each construct their own `Runtime` (mirroring
+//!   one-process-per-GPU in the paper's 8-GPU setup).
 //!
-//! A [`Runtime`] owns one PJRT CPU client plus a compile cache keyed by
-//! artifact name.  The client is `Rc`-based and therefore thread-local;
-//! data-parallel workers each construct their own `Runtime` (mirroring
-//! one-process-per-GPU in the paper's 8-GPU setup) and exchange host
-//! tensors.
+//! The default build carries no PJRT dependency at all — the native
+//! backend (`crate::backend::NativeBackend`) executes the packed
+//! operators directly.
 
 mod manifest;
 pub mod values;
 
+#[cfg(feature = "pjrt")]
+mod client;
+
 pub use manifest::{ArtifactSpec, DType, Manifest, ParamSpec, TensorSpec};
 pub use values::HostValue;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
+#[cfg(feature = "pjrt")]
+pub use client::{Executable, Runtime};
 
-use crate::Result;
-
-/// Cumulative execution timing per artifact (drives the §Perf profile).
+/// Cumulative per-op timing.  The PJRT path splits host staging and
+/// output fetch from device execute (the §Perf L3 target: staging +
+/// fetch below 5% of execute); the native backend reports pure compute
+/// in `exec_secs`.
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
     pub calls: u64,
     pub stage_secs: f64,
     pub exec_secs: f64,
     pub fetch_secs: f64,
-}
-
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-    stats: RefCell<HashMap<String, ExecStats>>,
-}
-
-impl Runtime {
-    /// Load the manifest and create a PJRT CPU client.
-    pub fn load(artifacts_dir: &Path) -> Result<Rc<Runtime>> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
-        log::info!(
-            "PJRT client: platform={} devices={} ({} artifacts)",
-            client.platform_name(),
-            client.device_count(),
-            manifest.artifacts.len()
-        );
-        Ok(Rc::new(Runtime {
-            client,
-            dir: artifacts_dir.to_path_buf(),
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
-        }))
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Fetch (compiling and caching on first use) an executable.
-    pub fn executable(self: &Rc<Self>, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(Rc::clone(e));
-        }
-        let spec = self.manifest.artifact(name)?.clone();
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&spec.file)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
-        log::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
-        let executable = Rc::new(Executable {
-            runtime: Rc::clone(self),
-            exe,
-            spec,
-        });
-        self.cache
-            .borrow_mut()
-            .insert(name.to_string(), Rc::clone(&executable));
-        Ok(executable)
-    }
-
-    /// Number of compiled executables currently cached.
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    pub fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.borrow().clone()
-    }
-
-    pub fn reset_stats(&self) {
-        self.stats.borrow_mut().clear();
-    }
-
-    fn record(&self, name: &str, stage: f64, exec: f64, fetch: f64) {
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(name.to_string()).or_default();
-        s.calls += 1;
-        s.stage_secs += stage;
-        s.exec_secs += exec;
-        s.fetch_secs += fetch;
-    }
-}
-
-/// A compiled artifact bound to its runtime.
-pub struct Executable {
-    runtime: Rc<Runtime>,
-    exe: xla::PjRtLoadedExecutable,
-    spec: ArtifactSpec,
-}
-
-impl Executable {
-    pub fn spec(&self) -> &ArtifactSpec {
-        &self.spec
-    }
-
-    pub fn name(&self) -> &str {
-        &self.spec.name
-    }
-
-    /// Execute with host values; returns decomposed host outputs.
-    ///
-    /// Validates arity and shapes against the manifest before calling into
-    /// PJRT (shape bugs surface as readable errors, not XLA aborts).
-    pub fn run(&self, args: &[HostValue]) -> Result<Vec<HostValue>> {
-        self.validate_args(args)?;
-        let t0 = Instant::now();
-        let literals: Vec<xla::Literal> = args.iter().map(HostValue::to_literal).collect();
-        let t1 = Instant::now();
-        let out_buffers = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.spec.name))?;
-        let t2 = Instant::now();
-        let result = out_buffers[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {} output: {e}", self.spec.name))?;
-        // aot.py lowers with return_tuple=True: the root is always a tuple.
-        let parts = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {} output: {e}", self.spec.name))?;
-        anyhow::ensure!(
-            parts.len() == self.spec.outputs.len(),
-            "{}: expected {} outputs, got {}",
-            self.spec.name,
-            self.spec.outputs.len(),
-            parts.len()
-        );
-        let outs = parts
-            .into_iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, spec)| HostValue::from_literal(&lit, spec))
-            .collect::<Result<Vec<_>>>()?;
-        let t3 = Instant::now();
-        self.runtime.record(
-            &self.spec.name,
-            (t1 - t0).as_secs_f64(),
-            (t2 - t1).as_secs_f64(),
-            (t3 - t2).as_secs_f64(),
-        );
-        Ok(outs)
-    }
-
-    fn validate_args(&self, args: &[HostValue]) -> Result<()> {
-        anyhow::ensure!(
-            args.len() == self.spec.inputs.len(),
-            "{}: expected {} inputs, got {}",
-            self.spec.name,
-            self.spec.inputs.len(),
-            args.len()
-        );
-        for (i, (arg, spec)) in args.iter().zip(&self.spec.inputs).enumerate() {
-            anyhow::ensure!(
-                arg.shape() == spec.shape.as_slice(),
-                "{} input {i}: shape {:?}, expected {:?}",
-                self.spec.name,
-                arg.shape(),
-                spec.shape
-            );
-            anyhow::ensure!(
-                arg.dtype_compatible(spec.dtype),
-                "{} input {i}: dtype mismatch (expected {:?})",
-                self.spec.name,
-                spec.dtype
-            );
-        }
-        Ok(())
-    }
 }

@@ -180,6 +180,41 @@ where
     out.into_iter().map(|o| o.expect("missing result")).collect()
 }
 
+/// Split `out` into contiguous chunks of `chunk` elements and run
+/// `f(chunk_index, chunk_slice)` over them on `n_threads` scoped workers.
+///
+/// This is the write-side companion of [`parallel_map`]: the native
+/// backend's operators use it to fill disjoint slices of one output
+/// buffer (rows of a GEMM, (row, channel) lanes of the packed conv and
+/// scan) in place, with no unsafe aliasing and deterministic results —
+/// every chunk is computed with a fixed intra-chunk order regardless of
+/// scheduling, so thread count never changes the bits produced.
+pub fn parallel_chunks_mut<T, F>(out: &mut [T], chunk: usize, n_threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    if n_threads <= 1 || out.len() <= chunk {
+        for (i, c) in out.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let work = Mutex::new(out.chunks_mut(chunk).enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let job = work.lock().unwrap().next();
+                match job {
+                    Some((i, c)) => f(i, c),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +299,24 @@ mod tests {
             c.join().unwrap();
         }
         assert_eq!(total.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn parallel_chunks_mut_covers_all_chunks() {
+        let mut out = vec![0u32; 103]; // non-multiple of chunk size
+        parallel_chunks_mut(&mut out, 10, 4, |i, c| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = (i * 10 + j) as u32;
+            }
+        });
+        assert_eq!(out, (0..103).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn parallel_chunks_mut_single_thread_path() {
+        let mut out = vec![0u32; 8];
+        parallel_chunks_mut(&mut out, 3, 1, |i, c| c.iter_mut().for_each(|v| *v = i as u32));
+        assert_eq!(out, vec![0, 0, 0, 1, 1, 1, 2, 2]);
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! Data-parallel coordinator integration tests (need artifacts).
+//! Data-parallel coordinator integration tests over the PJRT backend
+//! (need the `pjrt` feature + artifacts; the native-backend DP tests in
+//! `native_backend.rs` run everywhere).
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
-use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
 use packmamba::coordinator::DataParallelTrainer;
 
 fn have_artifacts() -> bool {
@@ -18,6 +21,7 @@ fn have_artifacts() -> bool {
 fn cfg(workers: usize, steps: usize) -> TrainConfig {
     let mut c = TrainConfig::defaults(ModelConfig::tiny());
     c.scheme = Scheme::Pack;
+    c.backend = BackendKind::Pjrt;
     c.dp_workers = workers;
     c.steps = steps;
     c.artifacts_dir = Path::new(env!("CARGO_MANIFEST_DIR"))

@@ -1,0 +1,259 @@
+//! Native-backend integration tests — run on every machine, no
+//! artifacts, no features.
+//!
+//! The centrepiece is the paper's "no cross-sequence information"
+//! invariant (PUI, §3.1), asserted *differentially*: the packed forward
+//! over pack(S) must equal running every sequence individually, within
+//! 1e-5, across randomized length mixes (via the crate's property-test
+//! harness) and the boundary cases — length-1 sequences, exactly-full
+//! rows, and padding tails.
+
+use packmamba::backend::{Backend, NativeBackend};
+use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::{DataParallelTrainer, Trainer};
+use packmamba::packing::{PackedBatch, PackedRow, Sequence};
+use packmamba::util::proptest::{check_with, lengths_vec, Config};
+
+fn nano() -> ModelConfig {
+    ModelConfig {
+        name: "nano".to_string(),
+        vocab_size: 61,
+        d_model: 16,
+        n_layers: 2,
+        d_state: 4,
+        d_conv: 4,
+        expand: 2,
+    }
+}
+
+fn rand_seq(id: u64, len: usize, vocab: usize) -> Sequence {
+    let mut x = id.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    let tokens = (0..len)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            1 + (x % (vocab as u64 - 1)) as i32
+        })
+        .collect();
+    Sequence { tokens, id }
+}
+
+/// First-fit pack `lengths` into rows of `pack_len`.
+fn pack_rows(lengths: &[usize], pack_len: usize, vocab: usize) -> Vec<PackedRow> {
+    let mut rows: Vec<PackedRow> = vec![PackedRow::default()];
+    for (i, &n) in lengths.iter().enumerate() {
+        if rows.last().unwrap().used() + n > pack_len {
+            rows.push(PackedRow::default());
+        }
+        rows.last_mut()
+            .unwrap()
+            .sequences
+            .push(rand_seq(i as u64, n, vocab));
+    }
+    rows
+}
+
+/// Max |packed - solo| over every token logit of every sequence.
+fn pui_max_diff(cfg: &ModelConfig, backend: &NativeBackend, lengths: &[usize], pack_len: usize) -> f32 {
+    let state = backend.init_state(cfg, 42).unwrap();
+    let rows = pack_rows(lengths, pack_len, cfg.vocab_size);
+    let packed = PackedBatch::from_rows(&rows, pack_len);
+    let logits = backend.forward(cfg, &state.params, &packed).unwrap();
+
+    let mut worst = 0.0f32;
+    for (r, row) in rows.iter().enumerate() {
+        let mut off = 0usize;
+        for seq in &row.sequences {
+            let solo_batch = PackedBatch::from_rows(
+                &[PackedRow {
+                    sequences: vec![seq.clone()],
+                }],
+                seq.len(),
+            );
+            let solo = backend.forward(cfg, &state.params, &solo_batch).unwrap();
+            for t in 0..seq.len() {
+                for v in 0..cfg.vocab_size {
+                    let a = logits.at(&[r, off + t, v]);
+                    let b = solo.at(&[0, t, v]);
+                    worst = worst.max((a - b).abs());
+                }
+            }
+            off += seq.len();
+        }
+    }
+    worst
+}
+
+#[test]
+fn differential_pui_randomized_length_mixes() {
+    let cfg = nano();
+    let backend = NativeBackend::with_threads(2);
+    check_with(
+        "native packed forward == per-sequence forward",
+        Config {
+            cases: 14,
+            seed: 0xC0FFEE,
+            max_shrink_steps: 40,
+        },
+        lengths_vec(1, 24, 1..7),
+        |lengths| {
+            if lengths.is_empty() {
+                return true;
+            }
+            pui_max_diff(&cfg, &backend, lengths, 32) <= 1e-5
+        },
+    );
+}
+
+#[test]
+fn differential_pui_boundary_cases() {
+    let cfg = nano();
+    let backend = NativeBackend::with_threads(1);
+    // length-1 sequences packed side by side
+    assert!(pui_max_diff(&cfg, &backend, &[1, 1, 1, 1], 8) <= 1e-5);
+    // an exactly-full row (no padding tail at all)
+    assert!(pui_max_diff(&cfg, &backend, &[5, 4, 3, 4], 16) <= 1e-5);
+    // a single sequence filling the row exactly
+    assert!(pui_max_diff(&cfg, &backend, &[16], 16) <= 1e-5);
+    // long padding tail after one short sequence
+    assert!(pui_max_diff(&cfg, &backend, &[3], 32) <= 1e-5);
+    // mix of length-1 and near-full
+    assert!(pui_max_diff(&cfg, &backend, &[1, 14, 1], 16) <= 1e-5);
+}
+
+#[test]
+fn sabotaged_position_indices_break_pui() {
+    // Negative control: continuous (non-resetting) indices must leak
+    // state across the boundary — proving the differential test is
+    // sensitive to the §3 kernel modification.
+    let cfg = nano();
+    let backend = NativeBackend::with_threads(1);
+    let state = backend.init_state(&cfg, 42).unwrap();
+    let rows = pack_rows(&[8, 8], 16, cfg.vocab_size);
+    let packed = PackedBatch::from_rows(&rows, 16);
+    let good = backend.forward(&cfg, &state.params, &packed).unwrap();
+
+    let mut bad = packed.clone();
+    for (i, v) in bad.position_indices.data_mut().iter_mut().enumerate() {
+        *v = (i % 16) as i32; // no reset at the second sequence
+    }
+    let leaky = backend.forward(&cfg, &state.params, &bad).unwrap();
+
+    // first sequence identical, second sequence must differ
+    let mut first = 0.0f32;
+    let mut second = 0.0f32;
+    for t in 0..8 {
+        for v in 0..cfg.vocab_size {
+            first = first.max((good.at(&[0, t, v]) - leaky.at(&[0, t, v])).abs());
+        }
+    }
+    for t in 8..16 {
+        for v in 0..cfg.vocab_size {
+            second = second.max((good.at(&[0, t, v]) - leaky.at(&[0, t, v])).abs());
+        }
+    }
+    assert_eq!(first, 0.0, "first sequence must be unaffected");
+    assert!(second > 1e-4, "state must leak without the reset ({second})");
+}
+
+fn nano_train_config(steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::defaults(nano());
+    cfg.scheme = Scheme::Pack;
+    cfg.packing.pack_len = 64;
+    cfg.packing.rows = 2;
+    cfg.steps = steps;
+    cfg.min_len = 4;
+    cfg.max_len = 32;
+    cfg.mean_len = 12.0;
+    cfg
+}
+
+#[test]
+fn native_training_decreases_loss() {
+    let mut trainer = Trainer::from_config(nano_train_config(60)).unwrap();
+    trainer.train().unwrap();
+    let m = &trainer.metrics;
+    assert_eq!(m.steps(), 60);
+    let head = m.mean_loss_head(10);
+    let tail = m.mean_loss_tail(10);
+    assert!(tail < head, "loss should decrease: head {head} tail {tail}");
+    // starts near the ln(vocab) random baseline
+    let uniform = (nano().vocab_size as f32).ln();
+    assert!(
+        (head - uniform).abs() < 1.5,
+        "initial loss {head} vs ln(V) {uniform}"
+    );
+}
+
+#[test]
+fn native_padding_and_single_schemes_train() {
+    for scheme in [Scheme::Padding, Scheme::SingleSequence] {
+        let mut cfg = nano_train_config(4);
+        cfg.scheme = scheme;
+        let mut trainer = Trainer::from_config(cfg).unwrap();
+        trainer
+            .train()
+            .unwrap_or_else(|e| panic!("{} failed: {e}", scheme.name()));
+        assert_eq!(trainer.metrics.steps(), 4, "{}", scheme.name());
+    }
+}
+
+#[test]
+fn native_dataparallel_replicas_stay_identical() {
+    let mut cfg = nano_train_config(5);
+    cfg.dp_workers = 2;
+    let dp = DataParallelTrainer::new(cfg).unwrap();
+    let r = dp.run().unwrap();
+    assert!(r.replicas_identical, "replicas diverged");
+    assert_eq!(r.metrics.steps(), 5);
+    assert!(r
+        .final_params
+        .iter()
+        .all(|t| t.data().iter().all(|x| x.is_finite())));
+    for rec in &r.metrics.records {
+        assert!(rec.real_tokens > 0);
+        assert!(rec.sequences >= 2);
+    }
+}
+
+#[test]
+fn checkpoint_round_trip_with_native_state() {
+    let cfg = nano();
+    let backend = NativeBackend::with_threads(1);
+    let state = backend.init_state(&cfg, 9).unwrap();
+    let specs = backend.param_specs(&cfg).unwrap();
+    let dir = std::env::temp_dir().join("packmamba_native_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("nano.bin");
+    packmamba::coordinator::checkpoint::save(&path, "nano", &specs, &state).unwrap();
+    let (config, loaded) = packmamba::coordinator::checkpoint::load(&path, &specs).unwrap();
+    assert_eq!(config, "nano");
+    assert_eq!(loaded.params.len(), state.params.len());
+    for (a, b) in loaded.params.iter().zip(&state.params) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn loss_mask_excludes_padding_from_the_loss() {
+    // Two batches with the same sequences but very different padding
+    // must produce the same loss (padding contributes nothing).
+    let cfg = nano();
+    let backend = NativeBackend::with_threads(1);
+    let state = backend.init_state(&cfg, 4).unwrap();
+    let seqs = vec![rand_seq(1, 6, cfg.vocab_size), rand_seq(2, 4, cfg.vocab_size)];
+    let tight = PackedBatch::from_rows(
+        &[PackedRow {
+            sequences: seqs.clone(),
+        }],
+        10,
+    );
+    let padded = PackedBatch::from_rows(&[PackedRow { sequences: seqs }], 32);
+    let (l1, _) = backend.loss_and_grads(&cfg, &state.params, &tight).unwrap();
+    let (l2, _) = backend.loss_and_grads(&cfg, &state.params, &padded).unwrap();
+    assert!(
+        (l1 - l2).abs() < 1e-5,
+        "padding changed the loss: {l1} vs {l2}"
+    );
+}

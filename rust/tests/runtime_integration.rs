@@ -2,12 +2,16 @@
 //! on the PJRT CPU client, execute, and verify the paper's invariants
 //! end-to-end from rust.
 //!
-//! Requires `make artifacts` to have run (skipped with a message if not).
+//! Gated behind the `pjrt` feature (the default build has no PJRT
+//! client), and additionally requires `make artifacts` to have run
+//! (skipped with a message if not).
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::backend::pjrt::PjrtBackend;
+use packmamba::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
 use packmamba::coordinator::{checkpoint, Trainer, TrainState};
 use packmamba::packing::{PackedBatch, PackedRow, Sequence};
 use packmamba::runtime::{HostValue, Runtime};
@@ -196,8 +200,10 @@ fn train_step_decreases_loss_tiny() {
     let Some(rt) = runtime() else { return };
     let mut cfg = TrainConfig::defaults(ModelConfig::tiny());
     cfg.scheme = Scheme::Pack;
+    cfg.backend = BackendKind::Pjrt;
     cfg.steps = 30;
-    let mut trainer = Trainer::new(Rc::clone(&rt), cfg).unwrap();
+    let mut trainer =
+        Trainer::new(Box::new(PjrtBackend::new(Rc::clone(&rt))), cfg).unwrap();
     trainer.train().unwrap();
     let m = &trainer.metrics;
     assert_eq!(m.steps(), 30);
@@ -217,8 +223,10 @@ fn all_three_schemes_train() {
     for scheme in [Scheme::Pack, Scheme::Padding, Scheme::SingleSequence] {
         let mut cfg = TrainConfig::defaults(ModelConfig::tiny());
         cfg.scheme = scheme;
+        cfg.backend = BackendKind::Pjrt;
         cfg.steps = 4;
-        let mut trainer = Trainer::new(Rc::clone(&rt), cfg).unwrap();
+        let mut trainer =
+            Trainer::new(Box::new(PjrtBackend::new(Rc::clone(&rt))), cfg).unwrap();
         trainer.train().unwrap_or_else(|e| panic!("{} failed: {e}", scheme.name()));
         assert_eq!(trainer.metrics.steps(), 4, "{}", scheme.name());
         // padding scheme must waste more slots than pack
@@ -231,8 +239,10 @@ fn padding_rates_ordered_across_schemes() {
     let run = |scheme: Scheme| {
         let mut cfg = TrainConfig::defaults(ModelConfig::tiny());
         cfg.scheme = scheme;
+        cfg.backend = BackendKind::Pjrt;
         cfg.steps = 12;
-        let mut trainer = Trainer::new(Rc::clone(&rt), cfg).unwrap();
+        let mut trainer =
+            Trainer::new(Box::new(PjrtBackend::new(Rc::clone(&rt))), cfg).unwrap();
         trainer.train().unwrap();
         trainer.metrics.padding_rate()
     };

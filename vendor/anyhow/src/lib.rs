@@ -1,0 +1,132 @@
+//! Offline shim for the `anyhow` API subset this workspace uses.
+//!
+//! The build environment has no crates.io access, so this tiny crate
+//! provides source-compatible `anyhow::{Result, Error, anyhow!, ensure!,
+//! bail!}`.  Errors are a message string; `?` works on any
+//! `std::error::Error` via the blanket `From` impl (which is coherent
+//! because `Error` itself deliberately does not implement
+//! `std::error::Error`, mirroring the real crate's design).
+
+use std::fmt;
+
+/// String-backed error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both print the message; the shim keeps no
+        // cause chain to elaborate in alternate mode.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format() {
+        fn fails(x: usize) -> Result<()> {
+            ensure!(x > 2, "x too small: {x}");
+            if x > 100 {
+                bail!("x too big: {}", x);
+            }
+            Ok(())
+        }
+        assert!(fails(5).is_ok());
+        assert_eq!(fails(1).unwrap_err().to_string(), "x too small: 1");
+        assert_eq!(fails(101).unwrap_err().to_string(), "x too big: 101");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        assert_eq!(format!("{e:#}"), "plain");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("condition failed"));
+    }
+}

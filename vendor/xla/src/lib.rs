@@ -1,0 +1,164 @@
+//! Compile-only stub of the `xla` (PJRT C API) bindings.
+//!
+//! The real crate links the PJRT CPU plugin and cannot be vendored in an
+//! offline image, so this stub keeps `--features pjrt` *compiling*
+//! everywhere: every entry point that would touch PJRT returns a clear
+//! runtime error, and the rest are inert value types.  To run the PJRT
+//! path for real, point Cargo at an actual `xla` build, e.g. in the
+//! workspace root:
+//!
+//! ```toml
+//! [patch."*"]
+//! # xla = { path = "/opt/xla-rs" }
+//! ```
+//!
+//! The API surface mirrors exactly what `packmamba::runtime` calls.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type returned by every stubbed PJRT entry point.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT is unavailable (this build links the compile-only \
+             `xla` stub; patch in a real xla crate to execute artifacts)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes the runtime stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Bf16,
+}
+
+/// Marker type for bf16 raw-buffer copies (zero-sized, as in the real
+/// bindings' calling convention the runtime relies on).
+#[derive(Clone, Copy, Debug)]
+pub struct Bf16;
+
+impl Bf16 {
+    pub const ELEMENT_SIZE_IN_BYTES: usize = 2;
+}
+
+/// Conversions supported by `Literal::{scalar, vec1, to_vec}`.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host literal (inert in the stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn copy_raw_to<T>(&self, _dst: &mut [T]) -> Result<()> {
+        Err(Error::unavailable("Literal::copy_raw_to"))
+    }
+}
+
+/// Parsed HLO module (inert).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper (inert).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (inert).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (inert).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle; construction fails in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
