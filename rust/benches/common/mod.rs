@@ -21,6 +21,35 @@ pub fn apply_backend_env(cfg: &mut TrainConfig) {
     }
 }
 
+/// Apply `PACKMAMBA_GEMM` (`naive` forces the PR-1 scalar GEMMs, anything
+/// else keeps the blocked micro-kernel) and return the active mode name
+/// for the result JSON — so every figure bench records which GEMM path
+/// produced its numbers.
+pub fn apply_gemm_env() -> &'static str {
+    match std::env::var("PACKMAMBA_GEMM").as_deref() {
+        Ok("naive") => {
+            packmamba::backend::gemm::set_force_naive(true);
+            "naive"
+        }
+        Ok("blocked") | Err(_) => {
+            packmamba::backend::gemm::set_force_naive(false);
+            "blocked"
+        }
+        Ok(other) => {
+            eprintln!("ignoring bad PACKMAMBA_GEMM `{other}` (want naive|blocked)");
+            "blocked"
+        }
+    }
+}
+
+/// Write a bench result JSON at the repo root (machine-readable perf
+/// trajectory, e.g. BENCH_GEMM.json).
+pub fn write_root_json(file_name: &str, json: &Json) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(file_name);
+    std::fs::write(&path, json.pretty()).expect("write root bench json");
+    println!("\nresults written to {}", path.display());
+}
+
 /// Position-index plane with two equal sequences per row (the dense
 /// layout the paper's op benchmarks use).
 pub fn two_seq_positions(rows: usize, len: usize) -> Vec<i32> {

@@ -19,6 +19,7 @@ use packmamba::util::rng::Pcg64;
 use std::time::Instant;
 
 fn main() {
+    let gemm_mode = common::apply_gemm_env();
     let mut rng = Pcg64::new(2, 0);
     let gpu = GpuSpec::a100();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -95,6 +96,7 @@ fn main() {
         "fig2_ssm_profile",
         &Json::from_pairs([
             ("figure", Json::from("fig2")),
+            ("gemm_mode", Json::from(gemm_mode)),
             ("rows", Json::Arr(rows)),
         ]),
     );

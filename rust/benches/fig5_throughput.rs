@@ -34,7 +34,9 @@ fn measured(scheme: Scheme, steps: usize) -> (f64, f64, f64) {
 }
 
 fn main() {
-    println!("=== Fig 5 (measured, tiny config) ===");
+    // PACKMAMBA_GEMM=naive measures the PR-1 scalar-GEMM baseline
+    let gemm_mode = common::apply_gemm_env();
+    println!("=== Fig 5 (measured, tiny config, {gemm_mode} gemm) ===");
     println!(
         "{:<10} {:>14} {:>12} {:>12}",
         "scheme", "real tok/s", "padding", "s/step"
@@ -102,6 +104,7 @@ fn main() {
         "fig5_throughput",
         &Json::from_pairs([
             ("figure", Json::from("fig5")),
+            ("gemm_mode", Json::from(gemm_mode)),
             ("measured_tiny", Json::Arr(json_rows)),
             ("measured_pack_vs_single", Json::from(speedup)),
             ("modeled_a100", Json::Arr(model_rows)),

@@ -49,6 +49,7 @@ fn geometries() -> Vec<Geometry> {
 }
 
 fn main() {
+    let gemm_mode = common::apply_gemm_env();
     let mut rng = Pcg64::new(3, 0);
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let d = 256usize; // 1.4B-scaled channel count for CPU measurement
@@ -162,6 +163,7 @@ fn main() {
         "fig6_kernel_breakdown",
         &Json::from_pairs([
             ("figure", Json::from("fig6")),
+            ("gemm_mode", Json::from(gemm_mode)),
             ("measured_ops", Json::Arr(rows_json)),
             ("modeled_a100", Json::Arr(model_rows)),
             ("modeled_total_speedup", Json::from(total)),

@@ -1,0 +1,221 @@
+//! GEMM micro-kernel bench: the blocked kernel vs the PR-1 scalar
+//! baseline, across the paper's projection shapes, plus the end-to-end
+//! native training step the speedup is supposed to buy.
+//!
+//! * **micro** — in_proj-shaped `(T, d) @ (d, 4d)` GEMMs over
+//!   d_model ∈ {2048, 2560} (the paper's 1.4B/2.8B widths, expand = 2)
+//!   and packed T ∈ {512..4096}: GFLOP/s for naive and blocked, plus the
+//!   speedup, for all three layout variants at the base shape.
+//! * **e2e** — a real `fig5`-style native training step (forward +
+//!   backward + AdamW through the packed kernels) at d_model = 768,
+//!   packed T = 2048, 8 threads, with the GEMMs forced to the scalar
+//!   baseline and then the blocked kernel.
+//!
+//! Results land in `BENCH_GEMM.json` at the repo root (and under
+//! `target/bench/`), so the perf trajectory is machine-readable.
+//!
+//! `-- --smoke` runs a differential correctness sweep and a reduced perf
+//! set for CI; the e2e acceptance shape is measured in both modes.
+
+mod common;
+
+use std::time::Instant;
+
+use packmamba::backend::gemm::{self, GemmScratch, Layout};
+use packmamba::backend::{Backend, NativeBackend};
+use packmamba::config::ModelConfig;
+use packmamba::packing::{PackedBatch, PackedRow, Sequence};
+use packmamba::util::json::Json;
+use packmamba::util::rng::Pcg64;
+
+fn randv(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| scale * (rng.next_f32() - 0.5)).collect()
+}
+
+/// Median-of-reps seconds for one closure.
+fn time_reps(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// One (m, k, n) NN shape: (naive s, blocked s).  Both sides get the
+/// same warmup and rep count (median).  The naive side keeps its
+/// per-call output allocation — that is the PR-1 baseline's real
+/// behavior — but runs after a warmup so the allocator is hot.
+fn bench_nn(m: usize, k: usize, n: usize, threads: usize, reps: usize) -> (f64, f64) {
+    let mut rng = Pcg64::new((m * 31 + k * 7 + n) as u64, 0);
+    let a = randv(&mut rng, m * k, 0.05);
+    let b = randv(&mut rng, k * n, 0.05);
+    let mut c = vec![0.0f32; m * n];
+    let mut scratch = GemmScratch::new();
+    // warmups (size the scratch, fault in the pages, prime the allocator)
+    gemm::gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c, threads, &mut scratch);
+    std::hint::black_box(gemm::naive::matmul(&a, m, k, &b, n, threads));
+    let blocked = time_reps(reps, || {
+        gemm::gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c, threads, &mut scratch);
+        std::hint::black_box(&c);
+    });
+    let naive = time_reps(reps, || {
+        std::hint::black_box(gemm::naive::matmul(&a, m, k, &b, n, threads));
+    });
+    (naive, blocked)
+}
+
+/// Differential check of all three layouts against the naive reference.
+fn differential_sweep() {
+    let mut rng = Pcg64::new(99, 0);
+    let mut scratch = GemmScratch::new();
+    let mut worst = 0.0f32;
+    for &(m, k, n) in &[(1, 1, 5), (3, 17, 63), (129, 63, 17), (63, 129, 3), (17, 300, 40)] {
+        let a = randv(&mut rng, m * k, 1.0);
+        let b = randv(&mut rng, k * n, 1.0);
+        let bt = randv(&mut rng, n * k, 1.0);
+        let at = randv(&mut rng, k * m, 1.0);
+        for (tag, got, want) in [
+            ("nn", {
+                let mut c = vec![0.0f32; m * n];
+                gemm::gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c, 2, &mut scratch);
+                c
+            }, gemm::naive::matmul(&a, m, k, &b, n, 1)),
+            ("nt", {
+                let mut c = vec![0.0f32; m * n];
+                gemm::gemm_into(Layout::NT, m, k, n, &a, &bt, 0.0, &mut c, 2, &mut scratch);
+                c
+            }, gemm::naive::matmul_nt(&a, m, k, &bt, n, 1)),
+            ("tn", {
+                let mut c = vec![0.0f32; m * n];
+                gemm::gemm_into(Layout::TN, m, k, n, &at, &b, 0.0, &mut c, 2, &mut scratch);
+                c
+            }, gemm::naive::matmul_tn(&at, k, m, &b, n, 1)),
+        ] {
+            for (g, w) in got.iter().zip(&want) {
+                let diff = (g - w).abs() / w.abs().max(1.0);
+                assert!(diff <= 1e-5, "{tag} ({m},{k},{n}): {g} vs {w}");
+                worst = worst.max(diff);
+            }
+        }
+    }
+    println!("differential sweep OK (worst rel diff {worst:.2e})");
+}
+
+/// d_model=768 fig5-style training-step batch: one packed row of T=2048.
+fn e2e_batch(cfg: &ModelConfig, pack_len: usize) -> PackedBatch {
+    let seq = |id: u64, n: usize| Sequence {
+        tokens: (0..n)
+            .map(|k| 1 + ((id as usize * 131 + k * 17) % (cfg.vocab_size - 1)) as i32)
+            .collect(),
+        id,
+    };
+    PackedBatch::from_rows(
+        &[PackedRow {
+            sequences: vec![seq(0, 512), seq(1, 512), seq(2, 512), seq(3, 512)],
+        }],
+        pack_len,
+    )
+}
+
+/// Seconds per end-to-end native training step with the current GEMM
+/// mode (1 warmup step, median of `reps`).
+fn e2e_step_secs(cfg: &ModelConfig, batch: &PackedBatch, threads: usize, reps: usize) -> f64 {
+    let be = NativeBackend::with_threads(threads);
+    let mut state = be.init_state(cfg, 42).expect("init");
+    be.train_step(cfg, &mut state, batch).expect("warmup step");
+    time_reps(reps, || {
+        be.train_step(cfg, &mut state, batch).expect("train step");
+    })
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // PACKMAMBA_GEMM is deliberately ignored here: this bench's whole job
+    // is to measure BOTH paths (micro via direct calls, e2e by toggling
+    // set_force_naive explicitly below).
+    println!(
+        "=== GEMM micro-kernel bench ({}, {} threads available) ===",
+        if smoke { "smoke" } else { "full" },
+        threads
+    );
+
+    differential_sweep();
+
+    // --- micro sweep: in_proj-shaped (T, d) @ (d, 4d) ---
+    let d_models: &[usize] = if smoke { &[256] } else { &[2048, 2560] };
+    let ts: &[usize] = if smoke { &[128, 512] } else { &[512, 1024, 2048, 4096] };
+    let mut micro_rows = Vec::new();
+    for &d in d_models {
+        for &t in ts {
+            let (m, k, n) = (t, d, 4 * d); // expand=2 ⇒ in_proj is (d, 2·di) = (d, 4d)
+            let flops = 2.0 * (m * k * n) as f64;
+            let reps = if flops > 5e10 { 1 } else { 3 };
+            let (naive_s, blocked_s) = bench_nn(m, k, n, threads, reps);
+            let (gf_n, gf_b) = (flops / naive_s / 1e9, flops / blocked_s / 1e9);
+            let speedup = naive_s / blocked_s;
+            println!(
+                "d_model {d:>5} T {t:>5}  naive {gf_n:>7.2} GF/s  blocked {gf_b:>7.2} GF/s  speedup {speedup:.2}x"
+            );
+            micro_rows.push(Json::from_pairs([
+                ("d_model", Json::from(d)),
+                ("t", Json::from(t)),
+                ("m", Json::from(m)),
+                ("k", Json::from(k)),
+                ("n", Json::from(n)),
+                ("naive_gflops", Json::from(gf_n)),
+                ("blocked_gflops", Json::from(gf_b)),
+                ("speedup", Json::from(speedup)),
+            ]));
+        }
+    }
+
+    // --- e2e: fig5-style native training step, d_model=768, T=2048 ---
+    let cfg = ModelConfig {
+        name: "gemm-e2e-768".to_string(),
+        vocab_size: 4096,
+        d_model: 768,
+        n_layers: 2,
+        d_state: 16,
+        d_conv: 4,
+        expand: 2,
+    };
+    let e2e_threads = 8;
+    let pack_len = 2048;
+    let batch = e2e_batch(&cfg, pack_len);
+    let reps = if smoke { 1 } else { 2 };
+    gemm::set_force_naive(true);
+    let naive_step = e2e_step_secs(&cfg, &batch, e2e_threads, reps);
+    gemm::set_force_naive(false);
+    let blocked_step = e2e_step_secs(&cfg, &batch, e2e_threads, reps);
+    let e2e_speedup = naive_step / blocked_step;
+    println!(
+        "e2e train step d_model=768 T=2048 ({e2e_threads} threads): naive {naive_step:.3}s, \
+         blocked {blocked_step:.3}s, speedup {e2e_speedup:.2}x"
+    );
+
+    let json = Json::from_pairs([
+        ("bench", Json::from("gemm_micro")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        ("threads_available", Json::from(threads)),
+        ("micro", Json::Arr(micro_rows)),
+        (
+            "e2e_fig5_step",
+            Json::from_pairs([
+                ("d_model", Json::from(cfg.d_model)),
+                ("pack_len", Json::from(pack_len)),
+                ("rows", Json::from(1usize)),
+                ("n_layers", Json::from(cfg.n_layers)),
+                ("threads", Json::from(e2e_threads)),
+                ("naive_secs_per_step", Json::from(naive_step)),
+                ("blocked_secs_per_step", Json::from(blocked_step)),
+                ("speedup", Json::from(e2e_speedup)),
+            ]),
+        ),
+    ]);
+    common::write_results("gemm_micro", &json);
+    common::write_root_json("BENCH_GEMM.json", &json);
+}

@@ -32,6 +32,34 @@ impl Default for AdamWConfig {
     }
 }
 
+/// The per-parameter update kernel shared by [`apply`] and
+/// [`apply_slices`] — one fused pass, no temporaries.
+#[allow(clippy::too_many_arguments)]
+fn update_param(
+    opt: &AdamWConfig,
+    wd: f32,
+    b1c: f32,
+    b2c: f32,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+) {
+    for i in 0..p.len() {
+        let gi = g[i];
+        m[i] = opt.beta1 * m[i] + (1.0 - opt.beta1) * gi;
+        v[i] = opt.beta2 * v[i] + (1.0 - opt.beta2) * gi * gi;
+        let mut upd = (m[i] / b1c) / ((v[i] / b2c).sqrt() + opt.eps);
+        upd += wd * p[i];
+        p[i] -= opt.lr * upd;
+    }
+}
+
+fn bias_corrections(opt: &AdamWConfig, state: &TrainState) -> (f32, f32) {
+    let step = state.step as f32 + 1.0;
+    (1.0 - opt.beta1.powf(step), 1.0 - opt.beta2.powf(step))
+}
+
 /// Apply one AdamW update in place.  `step` inside is 1-based
 /// (`state.step + 1`), matching the fused artifact's convention; the
 /// caller advances `state.step` afterwards.
@@ -48,9 +76,7 @@ pub fn apply(
         state.params.len(),
         grads.len()
     );
-    let step = state.step as f32 + 1.0;
-    let b1c = 1.0 - opt.beta1.powf(step);
-    let b2c = 1.0 - opt.beta2.powf(step);
+    let (b1c, b2c) = bias_corrections(opt, state);
     for (((spec, pt), mt), (vt, gt)) in specs
         .iter()
         .zip(state.params.iter_mut())
@@ -69,18 +95,46 @@ pub fn apply(
         } else {
             0.0
         };
-        let p = pt.data_mut();
-        let m = mt.data_mut();
-        let v = vt.data_mut();
-        let g = gt.data();
-        for i in 0..p.len() {
-            let gi = g[i];
-            m[i] = opt.beta1 * m[i] + (1.0 - opt.beta1) * gi;
-            v[i] = opt.beta2 * v[i] + (1.0 - opt.beta2) * gi * gi;
-            let mut upd = (m[i] / b1c) / ((v[i] / b2c).sqrt() + opt.eps);
-            upd += wd * p[i];
-            p[i] -= opt.lr * upd;
-        }
+        update_param(opt, wd, b1c, b2c, pt.data_mut(), mt.data_mut(), vt.data_mut(), gt.data());
+    }
+    Ok(())
+}
+
+/// [`apply`] over raw gradient buffers — the fused-train-step path: no
+/// tensor wrapping, no allocation.
+pub fn apply_slices(
+    opt: &AdamWConfig,
+    specs: &[ParamSpec],
+    state: &mut TrainState,
+    grads: &[Vec<f32>],
+) -> Result<()> {
+    anyhow::ensure!(
+        specs.len() == state.params.len() && grads.len() == state.params.len(),
+        "adamw arity: {} specs, {} params, {} grads",
+        specs.len(),
+        state.params.len(),
+        grads.len()
+    );
+    let (b1c, b2c) = bias_corrections(opt, state);
+    for (((spec, pt), mt), (vt, g)) in specs
+        .iter()
+        .zip(state.params.iter_mut())
+        .zip(state.m.iter_mut())
+        .zip(state.v.iter_mut().zip(grads.iter()))
+    {
+        anyhow::ensure!(
+            pt.len() == g.len(),
+            "adamw size mismatch on {}: {} vs {}",
+            spec.name,
+            pt.len(),
+            g.len()
+        );
+        let wd = if params::decays(&spec.name) {
+            opt.weight_decay
+        } else {
+            0.0
+        };
+        update_param(opt, wd, b1c, b2c, pt.data_mut(), mt.data_mut(), vt.data_mut(), g);
     }
     Ok(())
 }
@@ -128,6 +182,28 @@ mod tests {
         // bias-corrected first step ≈ lr * (1 + wd) for the matrix
         let expect = 1.0 - opt.lr * (1.0 + opt.weight_decay);
         assert!((decayed - expect).abs() < 1e-4, "{decayed} vs {expect}");
+    }
+
+    #[test]
+    fn apply_slices_matches_apply() {
+        let (specs, mut s1) = tiny_state();
+        let mut s2 = TrainState {
+            params: s1.params.clone(),
+            m: s1.m.clone(),
+            v: s1.v.clone(),
+            step: s1.step,
+        };
+        let grads = vec![Tensor::full(&[2, 2], 0.3), Tensor::full(&[3], -0.7)];
+        let raw: Vec<Vec<f32>> = grads.iter().map(|g| g.data().to_vec()).collect();
+        let opt = AdamWConfig::default();
+        apply(&opt, &specs, &mut s1, &grads).unwrap();
+        apply_slices(&opt, &specs, &mut s2, &raw).unwrap();
+        for (a, b) in s1.params.iter().zip(&s2.params) {
+            assert_eq!(a.data(), b.data());
+        }
+        for (a, b) in s1.m.iter().zip(&s2.m) {
+            assert_eq!(a.data(), b.data());
+        }
     }
 
     #[test]

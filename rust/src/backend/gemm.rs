@@ -1,0 +1,503 @@
+//! Cache-blocked, register-tiled GEMM micro-kernel — the one matrix
+//! engine behind `ops::matmul` / `matmul_nt` / `matmul_tn`.
+//!
+//! Structure (classic Goto/BLIS three-level blocking, sized for the L1/L2
+//! of a commodity core):
+//!
+//! * **B panel packing** — the right operand is repacked once per call
+//!   into `NR`-wide column strips (zero-padded at the edge) so the micro-
+//!   kernel streams it with unit stride whatever the source layout
+//!   (normal or transposed) was;
+//! * **`KC`-blocked A packing** — each `MC×KC` block of the left operand
+//!   is packed into `MR`-tall row strips immediately before use, so the
+//!   innermost loops touch only two small, contiguous, cache-resident
+//!   buffers;
+//! * **an `MR×NR` register micro-kernel** — a fully unrolled
+//!   multiply-accumulate over fixed-size arrays, written so rustc's
+//!   autovectorizer turns the `NR`-wide inner loop into SIMD without any
+//!   `unsafe` or intrinsics (the differential tests in
+//!   `tests/gemm_properties.rs` pin it against the naive reference).
+//!
+//! The kernel supports **beta-accumulate** (`C = A·B + beta·C`,
+//! `beta ∈ {0, 1}`) so backward passes fuse `C += A·B` without a
+//! temporary, and all three layout variants through effective strides —
+//! no transposed copies of the operands are ever materialized.
+//!
+//! Determinism: each output element is accumulated by exactly one task in
+//! a fixed k-order (`KC` blocks ascending, sequential within a block), so
+//! results are bit-identical for any thread count — the same invariant
+//! the rest of the native backend upholds.  Note the *grouping* into `KC`
+//! blocks means results can differ from the naive single-sweep reference
+//! in the last ulps once `k > KC`; tests compare with a 1e-5 tolerance.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::threadpool::{parallel_chunks2_mut, parallel_chunks_mut};
+
+/// Micro-kernel rows (register tile height).
+pub const MR: usize = 4;
+/// Micro-kernel columns (register tile width; 2 SSE / 1 AVX vector of f32).
+pub const NR: usize = 8;
+/// k-blocking: one `MC×KC` A block + one `KC×NR` B strip stay cache-hot.
+pub const KC: usize = 256;
+/// Row-panel height; unit of thread-level parallelism (multiple of MR).
+pub const MC: usize = 128;
+
+/// Operand layouts, in the effective-`(m,k)·(k,n)` sense.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// `a` is `(m, k)` row-major, `b` is `(k, n)` row-major.
+    NN,
+    /// `a` is `(m, k)` row-major, `b` is `(n, k)` row-major (used as Bᵀ).
+    NT,
+    /// `a` is `(k, m)` row-major (used as Aᵀ), `b` is `(k, n)` row-major.
+    TN,
+}
+
+/// Reusable packing scratch.  Grows to the largest shape seen and then
+/// stays allocation-free — `StepArena` owns one per backend so steady-
+/// state training steps never touch the heap for GEMM scratch.
+#[derive(Default)]
+pub struct GemmScratch {
+    /// Packed B: `ceil(n/NR)` strips of `k×NR`.
+    b_pack: Vec<f32>,
+    /// Packed A blocks: one `panel_height×KC` slab per row panel (panels
+    /// are the parallel tasks, so each owns a disjoint slab).
+    a_pack: Vec<f32>,
+}
+
+impl GemmScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reserve(&mut self, a_need: usize, b_need: usize) {
+        if self.b_pack.len() < b_need {
+            self.b_pack.resize(b_need, 0.0);
+        }
+        if self.a_pack.len() < a_need {
+            self.a_pack.resize(a_need, 0.0);
+        }
+    }
+}
+
+/// When set, `ops::matmul*` fall back to the [`naive`] scalar reference —
+/// the PR-1 baseline.  Benches flip this to measure the speedup honestly
+/// end-to-end; it is never set on the training path.
+static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
+
+pub fn set_force_naive(v: bool) {
+    FORCE_NAIVE.store(v, Ordering::SeqCst);
+}
+
+pub fn naive_forced() -> bool {
+    FORCE_NAIVE.load(Ordering::SeqCst)
+}
+
+/// Threads actually worth using for `work` fused multiply-adds (scoped
+/// thread spawn costs ~tens of µs; small ops run serially).
+pub(crate) fn effective_threads(work: usize, threads: usize) -> usize {
+    if work < 1 << 20 {
+        1
+    } else {
+        threads.max(1)
+    }
+}
+
+/// Rows per parallel panel task: `MC` for serial runs, otherwise a few
+/// MR-aligned panels per thread, so GEMMs with small `m` (the weight
+/// gradients — `m` is as small as `dt_rank`) still spread across the
+/// pool instead of landing on one MC-row panel.  Partitioning never
+/// changes the bits: every C element accumulates in the same fixed
+/// k-order whichever panel owns it.
+fn panel_height(m: usize, threads: usize) -> usize {
+    if threads <= 1 {
+        return MC;
+    }
+    let target = m.div_ceil(threads * 3);
+    (target.div_ceil(MR) * MR).min(MC)
+}
+
+/// `C = A·B + beta·C` over flat row-major `c` of shape `(m, n)`.
+///
+/// `layout` fixes how `a`/`b` are interpreted (see [`Layout`]); `beta`
+/// must be 0.0 (overwrite) or 1.0 (accumulate).  `scratch` is reused
+/// across calls and only grows.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(
+    layout: Layout,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    assert!(beta == 0.0 || beta == 1.0, "beta must be 0 or 1, got {beta}");
+    assert_eq!(a.len(), m * k, "gemm lhs size");
+    assert_eq!(b.len(), k * n, "gemm rhs size");
+    assert_eq!(c.len(), m * n, "gemm out size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if beta == 0.0 {
+            c.iter_mut().for_each(|v| *v = 0.0);
+        }
+        return;
+    }
+    // Effective strides: element (i, p) of A is a[i*ars + p*acs], element
+    // (p, j) of B is b[p*brs + j*bcs].
+    let (ars, acs, brs, bcs) = match layout {
+        Layout::NN => (k, 1, n, 1),
+        Layout::NT => (k, 1, 1, k),
+        Layout::TN => (1, m, n, 1),
+    };
+    let threads = effective_threads(m * k * n, threads);
+    let ph = panel_height(m, threads);
+    let panels = m.div_ceil(ph);
+    // A-pack slabs are bounded by a few per thread, not by panel count:
+    // huge-m GEMMs (the embedding gradient at real vocab sizes) run in
+    // waves over the same slabs instead of retaining ~m·KC scratch.
+    let slabs = panels.min((threads * 4).max(4));
+    let n_strips = n.div_ceil(NR);
+    scratch.reserve(slabs * ph * KC, n_strips * NR * k);
+
+    // Pack all of B once, strip-major; shared read-only by every panel.
+    let b_pack = &mut scratch.b_pack[..n_strips * k * NR];
+    parallel_chunks_mut(b_pack, k * NR, threads, |jp, strip| {
+        let j0 = jp * NR;
+        for p in 0..k {
+            let dst = &mut strip[p * NR..(p + 1) * NR];
+            for (jj, d) in dst.iter_mut().enumerate() {
+                let j = j0 + jj;
+                *d = if j < n { b[p * brs + j * bcs] } else { 0.0 };
+            }
+        }
+    });
+    let b_pack = &scratch.b_pack[..n_strips * k * NR];
+
+    // One task per row panel of C, each with its own A-packing slab;
+    // more panels than slabs ⇒ process in waves (barrier between waves,
+    // negligible next to the per-wave compute).
+    let a_pack = &mut scratch.a_pack[..slabs * ph * KC];
+    let wave_rows = slabs * ph;
+    let mut row0 = 0;
+    while row0 < m {
+        let rows = wave_rows.min(m - row0);
+        let cslice = &mut c[row0 * n..(row0 + rows) * n];
+        let aslice = &mut a_pack[..rows.div_ceil(ph) * ph * KC];
+        parallel_chunks2_mut(cslice, ph * n, aslice, ph * KC, threads, |pi, cpanel, apanel| {
+            let i0 = row0 + pi * ph;
+            let mc = ph.min(m - i0);
+            run_panel(a, ars, acs, i0, mc, k, n, b_pack, beta, cpanel, apanel);
+        });
+        row0 += rows;
+    }
+}
+
+/// All KC blocks × NR strips × MR strips for one MC-row panel of C.
+#[allow(clippy::too_many_arguments)]
+fn run_panel(
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    i0: usize,
+    mc: usize,
+    k: usize,
+    n: usize,
+    b_pack: &[f32],
+    beta: f32,
+    cpanel: &mut [f32],
+    apanel: &mut [f32],
+) {
+    let n_strips = n.div_ceil(NR);
+    let row_strips = mc.div_ceil(MR);
+    for (pci, pc) in (0..k).step_by(KC).enumerate() {
+        let kc = KC.min(k - pc);
+        pack_a(a, ars, acs, i0, mc, pc, kc, apanel);
+        let acc_beta = if pci == 0 { beta } else { 1.0 };
+        for jp in 0..n_strips {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let b_strip = &b_pack[jp * k * NR + pc * NR..][..kc * NR];
+            for ir in 0..row_strips {
+                let mr = MR.min(mc - ir * MR);
+                let a_strip = &apanel[ir * KC * MR..][..kc * MR];
+                let mut acc = [[0.0f32; NR]; MR];
+                micro_kernel(kc, a_strip, b_strip, &mut acc);
+                store_tile(&acc, cpanel, ir * MR, j0, mr, nr, n, acc_beta);
+            }
+        }
+    }
+}
+
+/// Pack the `mc×kc` block of A starting at (`i0`, `pc`) into MR-tall row
+/// strips (strip stride `KC*MR`, zero-padded past `mc`), so the micro-
+/// kernel reads it with unit stride regardless of the source layout.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    i0: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    apanel: &mut [f32],
+) {
+    for ir in 0..mc.div_ceil(MR) {
+        let dst = &mut apanel[ir * KC * MR..][..kc * MR];
+        for p in 0..kc {
+            let col = (pc + p) * acs;
+            let slot = &mut dst[p * MR..(p + 1) * MR];
+            for (ii, s) in slot.iter_mut().enumerate() {
+                let row = ir * MR + ii;
+                *s = if row < mc { a[(i0 + row) * ars + col] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[i][j] += a[p·MR+i] · b[p·NR+j]` over `p`.
+///
+/// Fixed-size arrays + unit-stride packed operands are exactly the shape
+/// rustc autovectorizes: the `NR`-wide inner loop becomes SIMD FMAs with
+/// `MR` accumulator vectors held in registers across the k loop.  Each
+/// `acc[i][j]` still sums in strict ascending-`p` order, so the result is
+/// independent of vector width.
+#[inline(always)]
+fn micro_kernel(kc: usize, a_strip: &[f32], b_strip: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(a_strip.len() >= kc * MR && b_strip.len() >= kc * NR);
+    for p in 0..kc {
+        let av: &[f32] = &a_strip[p * MR..(p + 1) * MR];
+        let bv: &[f32] = &b_strip[p * NR..(p + 1) * NR];
+        for i in 0..MR {
+            let ai = av[i];
+            let row = &mut acc[i];
+            for j in 0..NR {
+                row[j] += ai * bv[j];
+            }
+        }
+    }
+}
+
+/// Write one register tile back into the C panel, honouring the edge
+/// (`mr×nr` valid) and `beta`.
+#[allow(clippy::too_many_arguments)]
+fn store_tile(
+    acc: &[[f32; NR]; MR],
+    cpanel: &mut [f32],
+    r0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    n: usize,
+    beta: f32,
+) {
+    for ii in 0..mr {
+        let crow = &mut cpanel[(r0 + ii) * n + j0..][..nr];
+        let arow = &acc[ii][..nr];
+        if beta == 0.0 {
+            crow.copy_from_slice(arow);
+        } else {
+            for (cv, &av) in crow.iter_mut().zip(arow) {
+                *cv += av;
+            }
+        }
+    }
+}
+
+/// The PR-1 scalar triple-loop GEMMs, kept verbatim as (a) the
+/// differential-test reference and (b) the honest baseline the benches
+/// measure speedups against (`set_force_naive`).  Note the skip-zero
+/// branch in the dense loops — the pessimization the blocked kernel
+/// removes.
+pub mod naive {
+    use super::effective_threads;
+    use crate::util::threadpool::parallel_chunks_mut;
+
+    /// Rows per parallel task, aiming for a few tasks per thread.
+    fn rows_per_task(m: usize, threads: usize) -> usize {
+        m.div_ceil(threads.max(1) * 4).max(1)
+    }
+
+    /// `(m, k) @ (k, n) -> (m, n)`.
+    pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * k, "matmul lhs size");
+        assert_eq!(b.len(), k * n, "matmul rhs size");
+        let mut out = vec![0.0f32; m * n];
+        let threads = effective_threads(m * k * n, threads);
+        let rows = rows_per_task(m, threads);
+        parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
+            let r0 = ci * rows;
+            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                let arow = &a[(r0 + ri) * k..(r0 + ri + 1) * k];
+                for (p, &av) in arow.iter().enumerate() {
+                    if av != 0.0 {
+                        let brow = &b[p * n..(p + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `(m, k) @ (n, k)^T -> (m, n)` — right operand transposed.
+    pub fn matmul_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * k, "matmul_nt lhs size");
+        assert_eq!(b.len(), n * k, "matmul_nt rhs size");
+        let mut out = vec![0.0f32; m * n];
+        let threads = effective_threads(m * k * n, threads);
+        let rows = rows_per_task(m, threads);
+        parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
+            let r0 = ci * rows;
+            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                let arow = &a[(r0 + ri) * k..(r0 + ri + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for (&av, &bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    *o = acc;
+                }
+            }
+        });
+        out
+    }
+
+    /// `(t, m)^T @ (t, n) -> (m, n)` — left operand transposed.
+    pub fn matmul_tn(a: &[f32], t: usize, m: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
+        assert_eq!(a.len(), t * m, "matmul_tn lhs size");
+        assert_eq!(b.len(), t * n, "matmul_tn rhs size");
+        let mut out = vec![0.0f32; m * n];
+        let threads = effective_threads(t * m * n, threads);
+        let rows = rows_per_task(m, threads);
+        parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
+            let r0 = ci * rows;
+            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                let p = r0 + ri;
+                for ti in 0..t {
+                    let av = a[ti * m + p];
+                    if av != 0.0 {
+                        let brow = &b[ti * n..(ti + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randv(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        (0..len).map(|_| 2.0 * (rng.next_f32() - 0.5)).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag} len");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * w.abs().max(1.0),
+                "{tag}[{i}]: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_all_layouts() {
+        let mut rng = Pcg64::new(1, 0);
+        let mut scratch = GemmScratch::new();
+        // shapes straddling MR/NR/KC/MC edges
+        for &(m, k, n) in &[(1, 1, 1), (5, 7, 9), (4, 8, 8), (130, 300, 17), (33, 257, 40)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut c = vec![0.0f32; m * n];
+            gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c, 1, &mut scratch);
+            assert_close(&c, &naive::matmul(&a, m, k, &b, n, 1), 1e-5, "nn");
+
+            let bt = randv(&mut rng, n * k); // (n, k) for NT
+            let mut c = vec![0.0f32; m * n];
+            gemm_into(Layout::NT, m, k, n, &a, &bt, 0.0, &mut c, 1, &mut scratch);
+            assert_close(&c, &naive::matmul_nt(&a, m, k, &bt, n, 1), 1e-5, "nt");
+
+            let at = randv(&mut rng, k * m); // (k, m) for TN
+            let mut c = vec![0.0f32; m * n];
+            gemm_into(Layout::TN, m, k, n, &at, &b, 0.0, &mut c, 1, &mut scratch);
+            assert_close(&c, &naive::matmul_tn(&at, k, m, &b, n, 1), 1e-5, "tn");
+        }
+    }
+
+    #[test]
+    fn beta_one_accumulates() {
+        let mut rng = Pcg64::new(2, 0);
+        let (m, k, n) = (13, 21, 11);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let base = randv(&mut rng, m * n);
+        let mut scratch = GemmScratch::new();
+        let mut c = base.clone();
+        gemm_into(Layout::NN, m, k, n, &a, &b, 1.0, &mut c, 1, &mut scratch);
+        let prod = naive::matmul(&a, m, k, &b, n, 1);
+        let want: Vec<f32> = base.iter().zip(&prod).map(|(x, y)| x + y).collect();
+        assert_close(&c, &want, 1e-5, "beta1");
+    }
+
+    #[test]
+    fn thread_count_is_bit_invisible() {
+        let mut rng = Pcg64::new(3, 0);
+        let (m, k, n) = (301, 129, 67);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let run = |threads: usize| {
+            let mut scratch = GemmScratch::new();
+            let mut c = vec![0.0f32; m * n];
+            gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c, threads, &mut scratch);
+            c
+        };
+        assert_eq!(run(1), run(8));
+    }
+
+    #[test]
+    fn k_zero_respects_beta() {
+        let mut c = vec![3.0f32; 6];
+        let mut scratch = GemmScratch::new();
+        gemm_into(Layout::NN, 2, 0, 3, &[], &[], 1.0, &mut c, 1, &mut scratch);
+        assert_eq!(c, vec![3.0; 6]);
+        gemm_into(Layout::NN, 2, 0, 3, &[], &[], 0.0, &mut c, 1, &mut scratch);
+        assert_eq!(c, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn scratch_is_reused_across_calls() {
+        let mut rng = Pcg64::new(4, 0);
+        let mut scratch = GemmScratch::new();
+        let (m, k, n) = (40, 50, 30);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c1, 1, &mut scratch);
+        let cap_b = scratch.b_pack.capacity();
+        let cap_a = scratch.a_pack.capacity();
+        // second call with stale scratch contents must give the same answer
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c2, 1, &mut scratch);
+        assert_eq!(c1, c2);
+        assert_eq!(scratch.b_pack.capacity(), cap_b);
+        assert_eq!(scratch.a_pack.capacity(), cap_a);
+    }
+}

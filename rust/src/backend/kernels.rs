@@ -17,10 +17,17 @@
 //! (`util::threadpool::parallel_chunks_mut`); the model layer transposes
 //! at the GEMM boundaries.  Scan state history `(B, D, L, N)` and the
 //! masked decay `Ā` are cached by the forward for the backward pass.
+//!
+//! Every kernel has an `_into` form writing caller-provided buffers (the
+//! `StepArena` path — no heap allocation, no per-lane scratch: the
+//! recurrences read their own already-written output rows instead of
+//! keeping a scratch state vector), plus allocating wrappers for tests
+//! and benches.  Invariant slices (the per-lane `bm`/`cm`/`pos` bases,
+//! the per-channel `a` row) are hoisted out of the time loops.
 //! All reductions have a fixed order, so results are independent of
 //! thread count.
 
-use crate::util::threadpool::{parallel_chunks_mut, parallel_map};
+use crate::util::threadpool::parallel_chunks_mut;
 
 /// Geometry of one packed operator call.
 #[derive(Clone, Copy, Debug)]
@@ -49,11 +56,12 @@ fn lane_threads(dims: Dims, work_per_slot: usize, threads: usize) -> usize {
     }
 }
 
-/// Packed causal depthwise conv1d forward.
+/// Packed causal depthwise conv1d forward, into `y`.
 ///
 /// `x`: `(B, D, L)` channel-major; `w`: `(W, D)`; `bias`: `(D)`;
-/// `pos`: `(B, L)`.  Returns `y` channel-major.
-pub fn conv1d_packed_fwd(
+/// `pos`: `(B, L)`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_packed_fwd_into(
     x: &[f32],
     dims: Dims,
     w: &[f32],
@@ -61,20 +69,22 @@ pub fn conv1d_packed_fwd(
     bias: &[f32],
     pos: &[i32],
     threads: usize,
-) -> Vec<f32> {
+    y: &mut [f32],
+) {
     let Dims { b, l, d, .. } = dims;
     assert_eq!(x.len(), b * d * l);
     assert_eq!(w.len(), wlen * d);
     assert_eq!(bias.len(), d);
     assert_eq!(pos.len(), b * l);
-    let mut y = vec![0.0f32; b * d * l];
+    assert_eq!(y.len(), b * d * l);
     let threads = lane_threads(dims, wlen, threads);
-    parallel_chunks_mut(&mut y, l, threads, |lane, out| {
+    parallel_chunks_mut(y, l, threads, |lane, out| {
         let (bi, c) = (lane / d, lane % d);
         let xrow = &x[lane * l..(lane + 1) * l];
         let prow = &pos[bi * l..(bi + 1) * l];
+        let bc = bias[c];
         for t in 0..l {
-            let mut acc = bias[c];
+            let mut acc = bc;
             for j in 0..wlen {
                 let shift = wlen - 1 - j;
                 if t >= shift && prow[t] >= shift as i32 {
@@ -84,12 +94,29 @@ pub fn conv1d_packed_fwd(
             out[t] = acc;
         }
     });
+}
+
+/// Packed causal depthwise conv1d forward; returns `y` channel-major.
+pub fn conv1d_packed_fwd(
+    x: &[f32],
+    dims: Dims,
+    w: &[f32],
+    wlen: usize,
+    bias: &[f32],
+    pos: &[i32],
+    threads: usize,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; dims.b * dims.d * dims.l];
+    conv1d_packed_fwd_into(x, dims, w, wlen, bias, pos, threads, &mut y);
     y
 }
 
-/// Packed conv1d backward; returns `(dx, dw, dbias)` with `dx`
-/// channel-major and `dw` in `(W, D)` layout.
-pub fn conv1d_packed_bwd(
+/// Packed conv1d backward, into caller buffers: writes `dx`
+/// (channel-major) and **accumulates** into `dw_acc` (`(W, D)`) and
+/// `db_acc` (`(D)`).  `colbuf` is `(D, W+1)` scratch for the per-channel
+/// reduction (one parallel task per channel, fixed `(b, t)` order).
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_packed_bwd_into(
     x: &[f32],
     dims: Dims,
     w: &[f32],
@@ -97,16 +124,23 @@ pub fn conv1d_packed_bwd(
     pos: &[i32],
     dy: &[f32],
     threads: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dx: &mut [f32],
+    dw_acc: &mut [f32],
+    db_acc: &mut [f32],
+    colbuf: &mut [f32],
+) {
     let Dims { b, l, d, .. } = dims;
     assert_eq!(x.len(), b * d * l);
     assert_eq!(dy.len(), b * d * l);
+    assert_eq!(dx.len(), b * d * l);
+    assert_eq!(dw_acc.len(), wlen * d);
+    assert_eq!(db_acc.len(), d);
+    assert_eq!(colbuf.len(), d * (wlen + 1));
     let threads = lane_threads(dims, wlen, threads);
 
     // dx: token t' receives tap contributions from outputs t'+shift that
     // looked back at it (same guard as the forward).
-    let mut dx = vec![0.0f32; b * d * l];
-    parallel_chunks_mut(&mut dx, l, threads, |lane, out| {
+    parallel_chunks_mut(dx, l, threads, |lane, out| {
         let (bi, c) = (lane / d, lane % d);
         let gyrow = &dy[lane * l..(lane + 1) * l];
         let prow = &pos[bi * l..(bi + 1) * l];
@@ -122,10 +156,10 @@ pub fn conv1d_packed_bwd(
         }
     });
 
-    // dw / dbias: one task per channel, fixed (b, t) reduction order.
-    let cols = parallel_map((0..d).collect::<Vec<_>>(), threads, |_, c| {
-        let mut dwc = vec![0.0f32; wlen];
-        let mut dbc = 0.0f32;
+    // dw / dbias: one task per channel into its (W+1)-wide colbuf slot.
+    parallel_chunks_mut(colbuf, wlen + 1, threads, |c, slot| {
+        slot.iter_mut().for_each(|v| *v = 0.0);
+        let (dwc, dbc) = slot.split_at_mut(wlen);
         for bi in 0..b {
             let lane = bi * d + c;
             let xrow = &x[lane * l..(lane + 1) * l];
@@ -133,7 +167,7 @@ pub fn conv1d_packed_bwd(
             let prow = &pos[bi * l..(bi + 1) * l];
             for t in 0..l {
                 let g = gyrow[t];
-                dbc += g;
+                dbc[0] += g;
                 if g != 0.0 {
                     for j in 0..wlen {
                         let shift = wlen - 1 - j;
@@ -144,17 +178,35 @@ pub fn conv1d_packed_bwd(
                 }
             }
         }
-        (dwc, dbc)
     });
-    let mut dw = vec![0.0f32; wlen * d];
-    let mut dbias = vec![0.0f32; d];
-    for (c, (dwc, dbc)) in cols.into_iter().enumerate() {
+    for c in 0..d {
+        let slot = &colbuf[c * (wlen + 1)..(c + 1) * (wlen + 1)];
         for j in 0..wlen {
-            dw[j * d + c] = dwc[j];
+            dw_acc[j * d + c] += slot[j];
         }
-        dbias[c] = dbc;
+        db_acc[c] += slot[wlen];
     }
-    (dx, dw, dbias)
+}
+
+/// Packed conv1d backward; returns `(dx, dw, dbias)` with `dx`
+/// channel-major and `dw` in `(W, D)` layout.
+pub fn conv1d_packed_bwd(
+    x: &[f32],
+    dims: Dims,
+    w: &[f32],
+    wlen: usize,
+    pos: &[i32],
+    dy: &[f32],
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; dims.b * dims.d * dims.l];
+    let mut dw = vec![0.0f32; wlen * dims.d];
+    let mut db = vec![0.0f32; dims.d];
+    let mut colbuf = vec![0.0f32; dims.d * (wlen + 1)];
+    conv1d_packed_bwd_into(
+        x, dims, w, wlen, pos, dy, threads, &mut dx, &mut dw, &mut db, &mut colbuf,
+    );
+    (dx, dw, db)
 }
 
 /// State history the scan forward caches for its backward.
@@ -165,12 +217,111 @@ pub struct ScanCache {
     pub am: Vec<f32>,
 }
 
-/// Packed selective scan forward (full S6 semantics).
+/// Packed selective scan forward (full S6 semantics), into caller
+/// buffers: `y` `(B, D, L)`, plus the backward caches `hist`/`am`
+/// (`(B, D, L, N)` each).
 ///
 /// `x`, `dt`: `(B, D, L)` channel-major; `a`: `(D, N)` (negative
 /// continuous-time matrix); `bm`, `cm`: `(B, L, N)` token-major
 /// (selective, shared across channels); `dvec`: `(D)` skip; `pos`:
-/// `(B, L)`.  Returns `(y, cache)` with `y` channel-major.
+/// `(B, L)`.
+#[allow(clippy::too_many_arguments)]
+pub fn ssm_packed_fwd_into(
+    x: &[f32],
+    dt: &[f32],
+    a: &[f32],
+    bm: &[f32],
+    cm: &[f32],
+    dvec: &[f32],
+    pos: &[i32],
+    dims: Dims,
+    threads: usize,
+    y: &mut [f32],
+    hist: &mut [f32],
+    am: &mut [f32],
+) {
+    let Dims { b, l, d, n } = dims;
+    assert_eq!(x.len(), b * d * l);
+    assert_eq!(dt.len(), b * d * l);
+    assert_eq!(a.len(), d * n);
+    assert_eq!(bm.len(), b * l * n);
+    assert_eq!(cm.len(), b * l * n);
+    assert_eq!(dvec.len(), d);
+    assert_eq!(pos.len(), b * l);
+    assert_eq!(y.len(), b * d * l);
+    assert_eq!(hist.len(), b * d * l * n);
+    assert_eq!(am.len(), b * d * l * n);
+    let threads = lane_threads(dims, 4 * n, threads);
+
+    // Pass 1a: the masked decay Ā (needs only dt/a/pos).
+    parallel_chunks_mut(am, l * n, threads, |lane, amc| {
+        let (bi, c) = (lane / d, lane % d);
+        let dtrow = &dt[lane * l..(lane + 1) * l];
+        let arow = &a[c * n..(c + 1) * n];
+        let prow = &pos[bi * l..(bi + 1) * l];
+        for t in 0..l {
+            let slot = &mut amc[t * n..(t + 1) * n];
+            if prow[t] == 0 {
+                slot.iter_mut().for_each(|v| *v = 0.0);
+            } else {
+                let dtv = dtrow[t];
+                for (sv, &av) in slot.iter_mut().zip(arow) {
+                    *sv = (dtv * av).exp();
+                }
+            }
+        }
+    });
+
+    // Pass 1b: recurrence h_t = Ā_t h_{t-1} + Δ_t x_t B_t.  Each lane owns
+    // its (L, N) slab; the previous state is read back from the slab
+    // itself, so no per-lane scratch vector is needed.
+    let am_ref = &*am;
+    parallel_chunks_mut(hist, l * n, threads, |lane, hc| {
+        let bi = lane / d;
+        let dtrow = &dt[lane * l..(lane + 1) * l];
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let amc = &am_ref[lane * l * n..(lane + 1) * l * n];
+        let bmb = &bm[bi * l * n..(bi + 1) * l * n];
+        for t in 0..l {
+            let dx_t = dtrow[t] * xrow[t];
+            let brow = &bmb[t * n..(t + 1) * n];
+            let (done, rest) = hc.split_at_mut(t * n);
+            let hrow = &mut rest[..n];
+            if t == 0 {
+                for nn in 0..n {
+                    hrow[nn] = dx_t * brow[nn];
+                }
+            } else {
+                let arow = &amc[t * n..(t + 1) * n];
+                let hprev = &done[(t - 1) * n..];
+                for nn in 0..n {
+                    hrow[nn] = arow[nn] * hprev[nn] + dx_t * brow[nn];
+                }
+            }
+        }
+    });
+
+    // Pass 2: y_t = C_t · h_t + D x_t.
+    let hist_ref = &*hist;
+    parallel_chunks_mut(y, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let hc = &hist_ref[lane * l * n..(lane + 1) * l * n];
+        let cmb = &cm[bi * l * n..(bi + 1) * l * n];
+        let dv = dvec[c];
+        for t in 0..l {
+            let crow = &cmb[t * n..(t + 1) * n];
+            let hrow = &hc[t * n..(t + 1) * n];
+            let mut acc = dv * xrow[t];
+            for nn in 0..n {
+                acc += crow[nn] * hrow[nn];
+            }
+            out[t] = acc;
+        }
+    });
+}
+
+/// Packed selective scan forward; returns `(y, cache)`.
 #[allow(clippy::too_many_arguments)]
 pub fn ssm_packed_fwd(
     x: &[f32],
@@ -184,75 +335,12 @@ pub fn ssm_packed_fwd(
     threads: usize,
 ) -> (Vec<f32>, ScanCache) {
     let Dims { b, l, d, n } = dims;
-    assert_eq!(x.len(), b * d * l);
-    assert_eq!(dt.len(), b * d * l);
-    assert_eq!(a.len(), d * n);
-    assert_eq!(bm.len(), b * l * n);
-    assert_eq!(cm.len(), b * l * n);
-    assert_eq!(dvec.len(), d);
-    assert_eq!(pos.len(), b * l);
-    let threads = lane_threads(dims, 4 * n, threads);
-
-    // Pass 1: recurrence h_t = Ā_t h_{t-1} + Δ_t x_t B_t, with Ā zeroed
-    // at sequence starts.  Each lane owns its (L, N) slab of hist/am.
+    let mut y = vec![0.0f32; b * d * l];
     let mut hist = vec![0.0f32; b * d * l * n];
     let mut am = vec![0.0f32; b * d * l * n];
-    {
-        // hist and am are filled by the same lane decomposition; fill am
-        // first (it only needs dt/a/pos), then hist using it.
-        parallel_chunks_mut(&mut am, l * n, threads, |lane, amc| {
-            let (bi, c) = (lane / d, lane % d);
-            let dtrow = &dt[lane * l..(lane + 1) * l];
-            let arow = &a[c * n..(c + 1) * n];
-            let prow = &pos[bi * l..(bi + 1) * l];
-            for t in 0..l {
-                let slot = &mut amc[t * n..(t + 1) * n];
-                if prow[t] == 0 {
-                    slot.iter_mut().for_each(|v| *v = 0.0);
-                } else {
-                    for (sv, &av) in slot.iter_mut().zip(arow) {
-                        *sv = (dtrow[t] * av).exp();
-                    }
-                }
-            }
-        });
-        let am_ref = &am;
-        parallel_chunks_mut(&mut hist, l * n, threads, |lane, hc| {
-            let (bi, _c) = (lane / d, lane % d);
-            let dtrow = &dt[lane * l..(lane + 1) * l];
-            let xrow = &x[lane * l..(lane + 1) * l];
-            let amc = &am_ref[lane * l * n..(lane + 1) * l * n];
-            let mut prev = vec![0.0f32; n];
-            for t in 0..l {
-                let dx_t = dtrow[t] * xrow[t];
-                let brow = &bm[(bi * l + t) * n..(bi * l + t + 1) * n];
-                let arow = &amc[t * n..(t + 1) * n];
-                let hrow = &mut hc[t * n..(t + 1) * n];
-                for nn in 0..n {
-                    prev[nn] = arow[nn] * prev[nn] + dx_t * brow[nn];
-                    hrow[nn] = prev[nn];
-                }
-            }
-        });
-    }
-
-    // Pass 2: y_t = C_t · h_t + D x_t.
-    let mut y = vec![0.0f32; b * d * l];
-    let hist_ref = &hist;
-    parallel_chunks_mut(&mut y, l, threads, |lane, out| {
-        let (bi, c) = (lane / d, lane % d);
-        let xrow = &x[lane * l..(lane + 1) * l];
-        let hc = &hist_ref[lane * l * n..(lane + 1) * l * n];
-        for t in 0..l {
-            let crow = &cm[(bi * l + t) * n..(bi * l + t + 1) * n];
-            let hrow = &hc[t * n..(t + 1) * n];
-            let mut acc = dvec[c] * xrow[t];
-            for nn in 0..n {
-                acc += crow[nn] * hrow[nn];
-            }
-            out[t] = acc;
-        }
-    });
+    ssm_packed_fwd_into(
+        x, dt, a, bm, cm, dvec, pos, dims, threads, &mut y, &mut hist, &mut am,
+    );
     (y, ScanCache { hist, am })
 }
 
@@ -289,12 +377,15 @@ pub fn ssm_packed_fwd_nocache(
         let dtrow = &dt[lane * l..(lane + 1) * l];
         let arow = &a[c * n..(c + 1) * n];
         let prow = &pos[bi * l..(bi + 1) * l];
+        let bmb = &bm[bi * l * n..(bi + 1) * l * n];
+        let cmb = &cm[bi * l * n..(bi + 1) * l * n];
+        let dv = dvec[c];
         let mut h = vec![0.0f32; n];
         for t in 0..l {
             let dx_t = dtrow[t] * xrow[t];
-            let brow = &bm[(bi * l + t) * n..(bi * l + t + 1) * n];
-            let crow = &cm[(bi * l + t) * n..(bi * l + t + 1) * n];
-            let mut acc = dvec[c] * xrow[t];
+            let brow = &bmb[t * n..(t + 1) * n];
+            let crow = &cmb[t * n..(t + 1) * n];
+            let mut acc = dv * xrow[t];
             if prow[t] == 0 {
                 for nn in 0..n {
                     h[nn] = dx_t * brow[nn];
@@ -312,7 +403,7 @@ pub fn ssm_packed_fwd_nocache(
     y
 }
 
-/// Gradients of the packed selective scan.
+/// Gradients of the packed selective scan (owned form).
 pub struct SsmGrads {
     /// `(B, D, L)` channel-major
     pub dx: Vec<f32>,
@@ -328,69 +419,101 @@ pub struct SsmGrads {
     pub dd: Vec<f32>,
 }
 
-/// Packed selective scan backward.
+/// Borrowed output buffers for [`ssm_packed_bwd_into`]; every slice is
+/// fully overwritten.
+pub struct SsmGradsMut<'a> {
+    pub dx: &'a mut [f32],
+    pub ddt: &'a mut [f32],
+    pub da: &'a mut [f32],
+    pub dbm: &'a mut [f32],
+    pub dcm: &'a mut [f32],
+    pub dd: &'a mut [f32],
+}
+
+/// Packed selective scan backward, into caller buffers.
 ///
 /// The adjoint of the masked first-order recurrence: with
 /// `g_t = ∂L/∂h_t`, the reverse scan is `g_t = C_t·dy_t + Ā_{t+1} g_{t+1}`
 /// — the same boundary mask isolates sequences in both directions, so no
 /// gradient crosses a packed boundary either.
+///
+/// `g` is `(B, D, L, N)` scratch for the reverse-scan state; `colbuf` is
+/// `(D, N+1)` scratch for the per-channel `dA`/`dD` reduction.
 #[allow(clippy::too_many_arguments)]
-pub fn ssm_packed_bwd(
+pub fn ssm_packed_bwd_into(
     x: &[f32],
     dt: &[f32],
     a: &[f32],
     bm: &[f32],
     cm: &[f32],
     dvec: &[f32],
-    cache: &ScanCache,
+    hist: &[f32],
+    am: &[f32],
     dy: &[f32],
     dims: Dims,
     threads: usize,
-) -> SsmGrads {
+    out: SsmGradsMut<'_>,
+    g: &mut [f32],
+    colbuf: &mut [f32],
+) {
     let Dims { b, l, d, n } = dims;
     assert_eq!(dy.len(), b * d * l);
-    assert_eq!(cache.hist.len(), b * d * l * n);
-    assert_eq!(cache.am.len(), b * d * l * n);
+    assert_eq!(hist.len(), b * d * l * n);
+    assert_eq!(am.len(), b * d * l * n);
+    assert_eq!(g.len(), b * d * l * n);
+    assert_eq!(colbuf.len(), d * (n + 1));
+    assert_eq!(out.dx.len(), b * d * l);
+    assert_eq!(out.ddt.len(), b * d * l);
+    assert_eq!(out.da.len(), d * n);
+    assert_eq!(out.dbm.len(), b * l * n);
+    assert_eq!(out.dcm.len(), b * l * n);
+    assert_eq!(out.dd.len(), d);
     let threads = lane_threads(dims, 8 * n, threads);
 
     // Pass 1: reverse scan for g = dL/dh, one lane per (row, channel).
-    let mut g = vec![0.0f32; b * d * l * n];
-    parallel_chunks_mut(&mut g, l * n, threads, |lane, gc| {
-        let (bi, _c) = (lane / d, lane % d);
+    // The incoming state Ā_{t+1}·g_{t+1} is recomputed from the already-
+    // written g row — no per-lane scratch vector.
+    parallel_chunks_mut(g, l * n, threads, |lane, gc| {
+        let bi = lane / d;
         let gyrow = &dy[lane * l..(lane + 1) * l];
-        let amc = &cache.am[lane * l * n..(lane + 1) * l * n];
-        let mut nxt = vec![0.0f32; n];
+        let amc = &am[lane * l * n..(lane + 1) * l * n];
+        let cmb = &cm[bi * l * n..(bi + 1) * l * n];
         for t in (0..l).rev() {
             let gy = gyrow[t];
-            let crow = &cm[(bi * l + t) * n..(bi * l + t + 1) * n];
-            let arow = &amc[t * n..(t + 1) * n];
-            let grow = &mut gc[t * n..(t + 1) * n];
-            for nn in 0..n {
-                let cur = gy * crow[nn] + nxt[nn];
-                grow[nn] = cur;
-                nxt[nn] = arow[nn] * cur;
+            let crow = &cmb[t * n..(t + 1) * n];
+            let (cur, done) = gc.split_at_mut((t + 1) * n);
+            let grow = &mut cur[t * n..];
+            if t + 1 == l {
+                for nn in 0..n {
+                    grow[nn] = gy * crow[nn];
+                }
+            } else {
+                let gnext = &done[..n];
+                let anext = &amc[(t + 1) * n..(t + 2) * n];
+                for nn in 0..n {
+                    grow[nn] = gy * crow[nn] + anext[nn] * gnext[nn];
+                }
             }
         }
     });
-    let g_ref = &g;
+    let g_ref = &*g;
 
     // Pass 2: dx_t = D·dy_t + Σ_n g_t Δ_t B_t.
-    let mut dx = vec![0.0f32; b * d * l];
-    parallel_chunks_mut(&mut dx, l, threads, |lane, out| {
+    parallel_chunks_mut(out.dx, l, threads, |lane, out| {
         let (bi, c) = (lane / d, lane % d);
         let gyrow = &dy[lane * l..(lane + 1) * l];
         let dtrow = &dt[lane * l..(lane + 1) * l];
         let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
+        let bmb = &bm[bi * l * n..(bi + 1) * l * n];
+        let dv = dvec[c];
         for t in 0..l {
-            let brow = &bm[(bi * l + t) * n..(bi * l + t + 1) * n];
+            let brow = &bmb[t * n..(t + 1) * n];
             let grow = &gc[t * n..(t + 1) * n];
-            let mut acc = dvec[c] * gyrow[t];
             let mut dot = 0.0f32;
             for nn in 0..n {
                 dot += grow[nn] * brow[nn];
             }
-            acc += dot * dtrow[t];
-            out[t] = acc;
+            out[t] = dv * gyrow[t] + dot * dtrow[t];
         }
     });
 
@@ -398,16 +521,16 @@ pub fn ssm_packed_bwd(
     // (g·h_{t-1}·mask·A·exp(ΔA) folds to g·h_{t-1}·A·Ā since Ā caches the
     // mask; at pos==0 the Ā factor is zero, so no decay gradient leaks
     // across the boundary.)
-    let mut ddt = vec![0.0f32; b * d * l];
-    parallel_chunks_mut(&mut ddt, l, threads, |lane, out| {
+    parallel_chunks_mut(out.ddt, l, threads, |lane, out| {
         let (bi, c) = (lane / d, lane % d);
         let xrow = &x[lane * l..(lane + 1) * l];
         let arow = &a[c * n..(c + 1) * n];
         let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
-        let hc = &cache.hist[lane * l * n..(lane + 1) * l * n];
-        let amc = &cache.am[lane * l * n..(lane + 1) * l * n];
+        let hc = &hist[lane * l * n..(lane + 1) * l * n];
+        let amc = &am[lane * l * n..(lane + 1) * l * n];
+        let bmb = &bm[bi * l * n..(bi + 1) * l * n];
         for t in 0..l {
-            let brow = &bm[(bi * l + t) * n..(bi * l + t + 1) * n];
+            let brow = &bmb[t * n..(t + 1) * n];
             let grow = &gc[t * n..(t + 1) * n];
             let arow_m = &amc[t * n..(t + 1) * n];
             let mut acc = 0.0f32;
@@ -425,44 +548,44 @@ pub fn ssm_packed_bwd(
         }
     });
 
-    // Pass 4: per-channel reductions dA[c, n] and dD[c] over (b, t).
-    let cols = parallel_map((0..d).collect::<Vec<_>>(), threads, |_, c| {
-        let mut dac = vec![0.0f32; n];
-        let mut ddc = 0.0f32;
+    // Pass 4: per-channel reductions dA[c, n] and dD[c] over (b, t), one
+    // task per channel into its (N+1)-wide colbuf slot.
+    parallel_chunks_mut(colbuf, n + 1, threads, |c, slot| {
+        slot.iter_mut().for_each(|v| *v = 0.0);
+        let (dac, ddc) = slot.split_at_mut(n);
         for bi in 0..b {
             let lane = bi * d + c;
             let xrow = &x[lane * l..(lane + 1) * l];
             let dtrow = &dt[lane * l..(lane + 1) * l];
             let gyrow = &dy[lane * l..(lane + 1) * l];
             let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
-            let hc = &cache.hist[lane * l * n..(lane + 1) * l * n];
-            let amc = &cache.am[lane * l * n..(lane + 1) * l * n];
+            let hc = &hist[lane * l * n..(lane + 1) * l * n];
+            let amc = &am[lane * l * n..(lane + 1) * l * n];
             for t in 0..l {
-                ddc += gyrow[t] * xrow[t];
+                ddc[0] += gyrow[t] * xrow[t];
                 if t > 0 {
                     let grow = &gc[t * n..(t + 1) * n];
                     let hprev = &hc[(t - 1) * n..t * n];
                     let arow_m = &amc[t * n..(t + 1) * n];
+                    let dtv = dtrow[t];
                     for nn in 0..n {
-                        dac[nn] += grow[nn] * hprev[nn] * dtrow[t] * arow_m[nn];
+                        dac[nn] += grow[nn] * hprev[nn] * dtv * arow_m[nn];
                     }
                 }
             }
         }
-        (dac, ddc)
     });
-    let mut da = vec![0.0f32; d * n];
-    let mut dd = vec![0.0f32; d];
-    for (c, (dac, ddc)) in cols.into_iter().enumerate() {
-        da[c * n..(c + 1) * n].copy_from_slice(&dac);
-        dd[c] = ddc;
+    for c in 0..d {
+        let slot = &colbuf[c * (n + 1)..(c + 1) * (n + 1)];
+        out.da[c * n..(c + 1) * n].copy_from_slice(&slot[..n]);
+        out.dd[c] = slot[n];
     }
 
     // Pass 5: dB[b,t,n] = Σ_c g Δ x, dC[b,t,n] = Σ_c dy h — the only
     // reductions across channels; one task per (b, t) slot.
-    let mut dbm = vec![0.0f32; b * l * n];
-    parallel_chunks_mut(&mut dbm, n, threads, |slot, out| {
+    parallel_chunks_mut(out.dbm, n, threads, |slot, out| {
         let (bi, t) = (slot / l, slot % l);
+        out.iter_mut().for_each(|v| *v = 0.0);
         for c in 0..d {
             let lane = bi * d + c;
             let w = dt[lane * l + t] * x[lane * l + t];
@@ -474,31 +597,72 @@ pub fn ssm_packed_bwd(
             }
         }
     });
-    let mut dcm = vec![0.0f32; b * l * n];
-    parallel_chunks_mut(&mut dcm, n, threads, |slot, out| {
+    parallel_chunks_mut(out.dcm, n, threads, |slot, out| {
         let (bi, t) = (slot / l, slot % l);
+        out.iter_mut().for_each(|v| *v = 0.0);
         for c in 0..d {
             let lane = bi * d + c;
             let gy = dy[lane * l + t];
             if gy != 0.0 {
-                let hrow = &cache.hist[(lane * l + t) * n..(lane * l + t + 1) * n];
+                let hrow = &hist[(lane * l + t) * n..(lane * l + t + 1) * n];
                 for nn in 0..n {
                     out[nn] += gy * hrow[nn];
                 }
             }
         }
     });
-
-    SsmGrads {
-        dx,
-        ddt,
-        da,
-        dbm,
-        dcm,
-        dd,
-    }
 }
 
+/// Packed selective scan backward; returns owned [`SsmGrads`].
+#[allow(clippy::too_many_arguments)]
+pub fn ssm_packed_bwd(
+    x: &[f32],
+    dt: &[f32],
+    a: &[f32],
+    bm: &[f32],
+    cm: &[f32],
+    dvec: &[f32],
+    cache: &ScanCache,
+    dy: &[f32],
+    dims: Dims,
+    threads: usize,
+) -> SsmGrads {
+    let Dims { b, l, d, n } = dims;
+    let mut gr = SsmGrads {
+        dx: vec![0.0f32; b * d * l],
+        ddt: vec![0.0f32; b * d * l],
+        da: vec![0.0f32; d * n],
+        dbm: vec![0.0f32; b * l * n],
+        dcm: vec![0.0f32; b * l * n],
+        dd: vec![0.0f32; d],
+    };
+    let mut g = vec![0.0f32; b * d * l * n];
+    let mut colbuf = vec![0.0f32; d * (n + 1)];
+    ssm_packed_bwd_into(
+        x,
+        dt,
+        a,
+        bm,
+        cm,
+        dvec,
+        &cache.hist,
+        &cache.am,
+        dy,
+        dims,
+        threads,
+        SsmGradsMut {
+            dx: &mut gr.dx,
+            ddt: &mut gr.ddt,
+            da: &mut gr.da,
+            dbm: &mut gr.dbm,
+            dcm: &mut gr.dcm,
+            dd: &mut gr.dd,
+        },
+        &mut g,
+        &mut colbuf,
+    );
+    gr
+}
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,8 +8,11 @@
 //!   RMSNorm, the gated Mamba block with **packed causal conv1d** and
 //!   **packed selective scan** (the paper's §3 operator modifications,
 //!   in [`kernels`]), masked cross-entropy, full analytic backward, and
-//!   fused AdamW.  No artifacts, no external deps: `cargo run` trains
-//!   out of the box on any machine.
+//!   fused AdamW.  The GEMM-shaped projections run on the blocked,
+//!   register-tiled micro-kernel in [`gemm`]; per-step buffers are
+//!   recycled through the [`arena`] so steady-state steps allocate
+//!   nothing.  No artifacts, no external deps: `cargo run` trains out of
+//!   the box on any machine.
 //! * `PjrtBackend` (`--features pjrt`) — the original AOT-artifact path:
 //!   HLO text compiled once on a PJRT CPU client and executed per step.
 //!
@@ -20,6 +23,8 @@
 //! backend-agnostic.
 
 pub mod adamw;
+pub mod arena;
+pub mod gemm;
 pub mod kernels;
 pub mod model;
 pub mod native;

@@ -12,18 +12,27 @@
 //! Activations flow token-major `(T, ·)` through the GEMMs and
 //! channel-major `(B, D, L)` through the sequence-wise kernels, with
 //! explicit transposes at the boundaries (see `kernels`).
+//!
+//! **Allocation discipline:** every buffer — activations, backward
+//! caches, temporaries — is taken from the [`ModelWorkspace`]'s
+//! [`StepArena`] and returned when dead, weight-gradient GEMMs fuse
+//! `G += Xᵀ·dY` via the micro-kernel's beta-accumulate, and the layer-
+//! cache list reuses its spine across steps.  After the first (warmup)
+//! step, [`loss_and_grads_into`] performs zero heap allocations
+//! (`tests/zero_alloc.rs` pins this with a counting allocator).
 
 use crate::config::ModelConfig;
 use crate::runtime::ParamSpec;
 use crate::tensor::Tensor;
 
-use super::kernels::{self, Dims, ScanCache};
+use super::arena::StepArena;
+use super::kernels::{self, Dims, SsmGradsMut};
 use super::ops;
 use super::params::{self, slot};
 
 const NORM_EPS: f32 = 1e-5;
 
-/// Per-layer activations the backward pass consumes.
+/// Per-layer activations the backward pass consumes (all arena-owned).
 struct LayerCache {
     /// block input `(T, d)`
     u: Vec<f32>,
@@ -51,19 +60,64 @@ struct LayerCache {
     dt_pre: Vec<f32>,
     /// dt after softplus, channel-major
     dt_cm: Vec<f32>,
-    /// scan state history + masked decay
-    scan: ScanCache,
+    /// scan state history `(B, di, L, n)`
+    hist: Vec<f32>,
+    /// masked decay `Ā` `(B, di, L, n)`
+    am: Vec<f32>,
     /// scan output token-major `(T, di)`
     y_tm: Vec<f32>,
     /// gated output `y · silu(z)` `(T, di)`
     yz: Vec<f32>,
 }
 
-/// Forward activations for one packed batch.
+fn release_layer(c: LayerCache, arena: &mut StepArena) {
+    let LayerCache {
+        u,
+        inv,
+        un,
+        xlin_cm,
+        z,
+        xc_cm,
+        xs_cm,
+        xs_tm,
+        dt_low,
+        bm,
+        cm,
+        dt_pre,
+        dt_cm,
+        hist,
+        am,
+        y_tm,
+        yz,
+    } = c;
+    for v in [
+        u, inv, un, xlin_cm, z, xc_cm, xs_cm, xs_tm, dt_low, bm, cm, dt_pre, dt_cm, hist, am,
+        y_tm, yz,
+    ] {
+        arena.put(v);
+    }
+}
+
+/// Reusable per-backend state for the model's forward/backward: the
+/// buffer arena plus the layer-cache spine (its `Vec` capacity survives
+/// across steps, so steady-state steps never touch the heap).
+#[derive(Default)]
+pub struct ModelWorkspace {
+    pub arena: StepArena,
+    layers: Vec<LayerCache>,
+}
+
+impl ModelWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Head-side activations of one forward pass (layer caches live in the
+/// workspace until consumed by the backward or released).
 pub struct ForwardCache {
     /// `(T, vocab)` token logits
     pub logits: Vec<f32>,
-    layers: Vec<LayerCache>,
     /// pre-final-norm hidden `(T, d)`
     h_pre: Vec<f32>,
     /// post-final-norm hidden `(T, d)`
@@ -78,7 +132,8 @@ fn add_into(dst: &mut [f32], src: &[f32]) {
     }
 }
 
-/// Full forward pass, caching everything the backward needs.
+/// Full forward pass, caching everything the backward needs in `ws`.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_cached(
     cfg: &ModelConfig,
     p: &[Tensor],
@@ -87,6 +142,7 @@ pub fn forward_cached(
     rows: usize,
     len: usize,
     threads: usize,
+    ws: &mut ModelWorkspace,
 ) -> ForwardCache {
     let (d, di, n, r, wl, v) = (
         cfg.d_model,
@@ -100,6 +156,7 @@ pub fn forward_cached(
     assert_eq!(tokens.len(), t, "token plane size");
     assert_eq!(pos.len(), t, "position plane size");
     assert_eq!(p.len(), params::count(cfg), "parameter count");
+    assert!(ws.layers.is_empty(), "workspace holds a previous forward");
     let dims = Dims {
         b: rows,
         l: len,
@@ -109,46 +166,97 @@ pub fn forward_cached(
 
     // embedding lookup
     let emb = p[params::EMBEDDING].data();
-    let mut h = vec![0.0f32; t * d];
+    let mut h = ws.arena.take(t * d);
     for (ti, &tok) in tokens.iter().enumerate() {
         let tok = tok as usize;
         assert!(tok < v, "token {tok} outside vocab {v}");
         h[ti * d..(ti + 1) * d].copy_from_slice(&emb[tok * d..(tok + 1) * d]);
     }
 
-    let mut layers = Vec::with_capacity(cfg.n_layers);
     for li in 0..cfg.n_layers {
         let lp = |s: usize| p[params::layer_param(li, s)].data();
 
-        let (un, inv) = ops::rms_norm_fwd(&h, d, lp(slot::NORM_W), NORM_EPS);
-        let xz = ops::matmul(&un, t, d, lp(slot::IN_PROJ), 2 * di, threads);
-        let mut xlin = vec![0.0f32; t * di];
-        let mut z = vec![0.0f32; t * di];
+        let mut un = ws.arena.take(t * d);
+        let mut inv = ws.arena.take(t);
+        ops::rms_norm_fwd_into(&h, d, lp(slot::NORM_W), NORM_EPS, &mut un, &mut inv);
+        let mut xz = ws.arena.take(t * 2 * di);
+        ops::matmul_into(
+            &un,
+            t,
+            d,
+            lp(slot::IN_PROJ),
+            2 * di,
+            0.0,
+            &mut xz,
+            threads,
+            &mut ws.arena.gemm,
+        );
+        let mut xlin = ws.arena.take(t * di);
+        let mut z = ws.arena.take(t * di);
         for ti in 0..t {
             xlin[ti * di..(ti + 1) * di].copy_from_slice(&xz[ti * 2 * di..ti * 2 * di + di]);
             z[ti * di..(ti + 1) * di].copy_from_slice(&xz[ti * 2 * di + di..(ti + 1) * 2 * di]);
         }
+        ws.arena.put(xz);
 
         // sequence-wise op #1: packed causal conv (state reset via pos)
-        let xlin_cm = ops::to_channel_major(&xlin, rows, len, di);
-        let xc_cm =
-            kernels::conv1d_packed_fwd(&xlin_cm, dims, lp(slot::CONV_W), wl, lp(slot::CONV_B), pos, threads);
-        let xs_cm: Vec<f32> = xc_cm.iter().map(|&x| ops::silu(x)).collect();
-        let xs_tm = ops::to_token_major(&xs_cm, rows, di, len);
+        let mut xlin_cm = ws.arena.take(t * di);
+        ops::to_channel_major_into(&xlin, rows, len, di, &mut xlin_cm);
+        ws.arena.put(xlin);
+        let mut xc_cm = ws.arena.take(t * di);
+        kernels::conv1d_packed_fwd_into(
+            &xlin_cm,
+            dims,
+            lp(slot::CONV_W),
+            wl,
+            lp(slot::CONV_B),
+            pos,
+            threads,
+            &mut xc_cm,
+        );
+        let mut xs_cm = ws.arena.take(t * di);
+        for (o, &x) in xs_cm.iter_mut().zip(xc_cm.iter()) {
+            *o = ops::silu(x);
+        }
+        let mut xs_tm = ws.arena.take(t * di);
+        ops::to_token_major_into(&xs_cm, rows, di, len, &mut xs_tm);
 
         // selective projections
         let stride = r + 2 * n;
-        let dbc = ops::matmul(&xs_tm, t, di, lp(slot::X_PROJ), stride, threads);
-        let mut dt_low = vec![0.0f32; t * r];
-        let mut bm = vec![0.0f32; t * n];
-        let mut cm = vec![0.0f32; t * n];
+        let mut dbc = ws.arena.take(t * stride);
+        ops::matmul_into(
+            &xs_tm,
+            t,
+            di,
+            lp(slot::X_PROJ),
+            stride,
+            0.0,
+            &mut dbc,
+            threads,
+            &mut ws.arena.gemm,
+        );
+        let mut dt_low = ws.arena.take(t * r);
+        let mut bm = ws.arena.take(t * n);
+        let mut cm = ws.arena.take(t * n);
         for ti in 0..t {
             let row = &dbc[ti * stride..(ti + 1) * stride];
             dt_low[ti * r..(ti + 1) * r].copy_from_slice(&row[..r]);
             bm[ti * n..(ti + 1) * n].copy_from_slice(&row[r..r + n]);
             cm[ti * n..(ti + 1) * n].copy_from_slice(&row[r + n..]);
         }
-        let mut dt_pre = ops::matmul(&dt_low, t, r, lp(slot::DT_PROJ), di, threads);
+        ws.arena.put(dbc);
+        let mut dt_pre = ws.arena.take(t * di);
+        ops::matmul_into(
+            &dt_low,
+            t,
+            r,
+            lp(slot::DT_PROJ),
+            di,
+            0.0,
+            &mut dt_pre,
+            threads,
+            &mut ws.arena.gemm,
+        );
         let dt_bias = lp(slot::DT_BIAS);
         for ti in 0..t {
             let row = &mut dt_pre[ti * di..(ti + 1) * di];
@@ -156,25 +264,62 @@ pub fn forward_cached(
                 *x += b;
             }
         }
-        let dt_tm: Vec<f32> = dt_pre.iter().map(|&x| ops::softplus(x)).collect();
-        let dt_cm = ops::to_channel_major(&dt_tm, rows, len, di);
+        let mut dt_tm = ws.arena.take(t * di);
+        for (o, &x) in dt_tm.iter_mut().zip(dt_pre.iter()) {
+            *o = ops::softplus(x);
+        }
+        let mut dt_cm = ws.arena.take(t * di);
+        ops::to_channel_major_into(&dt_tm, rows, len, di, &mut dt_cm);
+        ws.arena.put(dt_tm);
 
         // sequence-wise op #2: packed selective scan
-        let a_neg: Vec<f32> = lp(slot::A_LOG).iter().map(|&x| -x.exp()).collect();
-        let (y_cm, scan) =
-            kernels::ssm_packed_fwd(&xs_cm, &dt_cm, &a_neg, &bm, &cm, lp(slot::D), pos, dims, threads);
-        let y_tm = ops::to_token_major(&y_cm, rows, di, len);
+        let mut a_neg = ws.arena.take(di * n);
+        for (o, &x) in a_neg.iter_mut().zip(lp(slot::A_LOG)) {
+            *o = -x.exp();
+        }
+        let mut y_cm = ws.arena.take(t * di);
+        let mut hist = ws.arena.take(t * di * n);
+        let mut am = ws.arena.take(t * di * n);
+        kernels::ssm_packed_fwd_into(
+            &xs_cm,
+            &dt_cm,
+            &a_neg,
+            &bm,
+            &cm,
+            lp(slot::D),
+            pos,
+            dims,
+            threads,
+            &mut y_cm,
+            &mut hist,
+            &mut am,
+        );
+        ws.arena.put(a_neg);
+        let mut y_tm = ws.arena.take(t * di);
+        ops::to_token_major_into(&y_cm, rows, di, len, &mut y_tm);
+        ws.arena.put(y_cm);
 
         // gate + output projection + residual
-        let mut yz = vec![0.0f32; t * di];
+        let mut yz = ws.arena.take(t * di);
         for i in 0..t * di {
             yz[i] = y_tm[i] * ops::silu(z[i]);
         }
-        let mut out = ops::matmul(&yz, t, di, lp(slot::OUT_PROJ), d, threads);
+        let mut out = ws.arena.take(t * d);
+        ops::matmul_into(
+            &yz,
+            t,
+            di,
+            lp(slot::OUT_PROJ),
+            d,
+            0.0,
+            &mut out,
+            threads,
+            &mut ws.arena.gemm,
+        );
         add_into(&mut out, &h); // residual into the fresh projection buffer
         let u = std::mem::replace(&mut h, out);
 
-        layers.push(LayerCache {
+        ws.layers.push(LayerCache {
             u,
             inv,
             un,
@@ -188,24 +333,45 @@ pub fn forward_cached(
             cm,
             dt_pre,
             dt_cm,
-            scan,
+            hist,
+            am,
             y_tm,
             yz,
         });
     }
 
-    let (hf, invf) = ops::rms_norm_fwd(&h, d, p[params::norm_f(cfg)].data(), NORM_EPS);
-    let logits = ops::matmul_nt(&hf, t, d, emb, v, threads);
+    let mut hf = ws.arena.take(t * d);
+    let mut invf = ws.arena.take(t);
+    ops::rms_norm_fwd_into(&h, d, p[params::norm_f(cfg)].data(), NORM_EPS, &mut hf, &mut invf);
+    let mut logits = ws.arena.take(t * v);
+    ops::matmul_nt_into(&hf, t, d, emb, v, 0.0, &mut logits, threads, &mut ws.arena.gemm);
     ForwardCache {
         logits,
-        layers,
         h_pre: h,
         hf,
         invf,
     }
 }
 
+/// Release a forward's buffers (head cache + the workspace's layer
+/// caches) back to the arena without running a backward.
+pub fn release_forward(fc: ForwardCache, ws: &mut ModelWorkspace) {
+    let ForwardCache {
+        logits,
+        h_pre,
+        hf,
+        invf,
+    } = fc;
+    for v in [logits, h_pre, hf, invf] {
+        ws.arena.put(v);
+    }
+    while let Some(c) = ws.layers.pop() {
+        release_layer(c, &mut ws.arena);
+    }
+}
+
 /// Forward returning only `(rows, len, vocab)` logits — the PUI surface.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_logits(
     cfg: &ModelConfig,
     p: &[Tensor],
@@ -214,15 +380,31 @@ pub fn forward_logits(
     rows: usize,
     len: usize,
     threads: usize,
+    ws: &mut ModelWorkspace,
 ) -> Tensor {
-    let fc = forward_cached(cfg, p, tokens, pos, rows, len, threads);
-    Tensor::new(&[rows, len, cfg.vocab_size], fc.logits)
+    let fc = forward_cached(cfg, p, tokens, pos, rows, len, threads, ws);
+    // clone the logits instead of moving the arena's largest buffer into
+    // the tensor: the eval path allocates anyway, and draining the `t·v`
+    // buffer here would force the next train_step to re-allocate it
+    let out = Tensor::new(&[rows, len, cfg.vocab_size], fc.logits.clone());
+    release_forward(fc, ws);
+    out
 }
 
-/// Masked-cross-entropy loss and gradients for every parameter, in
-/// canonical flat order.
+/// Two disjoint `&mut` gradient buffers (the conv backward accumulates
+/// into weight and bias grads in one call).
+fn two_muts(s: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+    assert!(i < j && j < s.len());
+    let (a, b) = s.split_at_mut(j);
+    (&mut a[i], &mut b[0])
+}
+
+/// Masked-cross-entropy loss; **accumulates nothing outside `grads`** —
+/// gradient buffers (canonical flat order, spec-sized) are zeroed here
+/// and then filled via fused beta-accumulate GEMMs and kernel `_into`
+/// calls.  Performs zero heap allocations once the workspace is warm.
 #[allow(clippy::too_many_arguments)]
-pub fn loss_and_grads(
+pub fn loss_and_grads_into(
     cfg: &ModelConfig,
     p: &[Tensor],
     tokens: &[i32],
@@ -232,7 +414,9 @@ pub fn loss_and_grads(
     rows: usize,
     len: usize,
     threads: usize,
-) -> (f32, Vec<Tensor>) {
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) -> f32 {
     let (d, di, n, r, wl, v) = (
         cfg.d_model,
         cfg.d_inner(),
@@ -248,70 +432,167 @@ pub fn loss_and_grads(
         d: di,
         n,
     };
-    let fc = forward_cached(cfg, p, tokens, pos, rows, len, threads);
+    assert_eq!(grads.len(), params::count(cfg), "gradient buffer count");
+    for g in grads.iter_mut() {
+        g.iter_mut().for_each(|x| *x = 0.0);
+    }
 
-    let specs = params::specs(cfg);
-    let mut grads: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.element_count()]).collect();
+    let fc = forward_cached(cfg, p, tokens, pos, rows, len, threads, ws);
+    let emb = p[params::EMBEDDING].data();
 
     // head: masked cross-entropy against the tied embedding
-    let (loss, dlogits) = ops::cross_entropy(&fc.logits, v, targets, mask, threads);
-    let emb = p[params::EMBEDDING].data();
-    add_into(
-        &mut grads[params::EMBEDDING],
-        &ops::matmul_tn(&dlogits, t, v, &fc.hf, d, threads),
+    let ce_chunks = ops::cross_entropy_chunks(t);
+    if ws.arena.f64_scratch.len() < ce_chunks {
+        ws.arena.f64_scratch.resize(ce_chunks, 0.0);
+    }
+    let mut dlogits = ws.arena.take(t * v);
+    let loss = ops::cross_entropy_into(
+        &fc.logits,
+        v,
+        targets,
+        mask,
+        threads,
+        &mut dlogits,
+        &mut ws.arena.f64_scratch[..ce_chunks],
     );
-    let dhf = ops::matmul(&dlogits, t, v, emb, d, threads);
-    let (mut dh, dnormf) = ops::rms_norm_bwd(
+    ops::matmul_tn_into(
+        &dlogits,
+        t,
+        v,
+        &fc.hf,
+        d,
+        1.0,
+        &mut grads[params::EMBEDDING],
+        threads,
+        &mut ws.arena.gemm,
+    );
+    let mut dhf = ws.arena.take(t * d);
+    ops::matmul_into(&dlogits, t, v, emb, d, 0.0, &mut dhf, threads, &mut ws.arena.gemm);
+    ws.arena.put(dlogits);
+    let mut dh = ws.arena.take(t * d);
+    ops::rms_norm_bwd_into(
         &fc.h_pre,
         d,
         p[params::norm_f(cfg)].data(),
         &fc.invf,
         &dhf,
+        &mut dh,
+        &mut grads[params::norm_f(cfg)],
     );
-    add_into(&mut grads[params::norm_f(cfg)], &dnormf);
+    ws.arena.put(dhf);
+    let ForwardCache {
+        logits,
+        h_pre,
+        hf,
+        invf,
+    } = fc;
+    for buf in [logits, h_pre, hf, invf] {
+        ws.arena.put(buf);
+    }
 
-    for li in (0..cfg.n_layers).rev() {
+    while let Some(c) = ws.layers.pop() {
+        let li = ws.layers.len();
         let lp = |s: usize| p[params::layer_param(li, s)].data();
         let gi = |s: usize| params::layer_param(li, s);
-        let c = &fc.layers[li];
         let dout = dh; // grad of the block output, (T, d)
 
         // out = u + yz @ out_proj
-        let dyz = ops::matmul_nt(&dout, t, d, lp(slot::OUT_PROJ), di, threads);
-        add_into(
+        let mut dyz = ws.arena.take(t * di);
+        ops::matmul_nt_into(
+            &dout,
+            t,
+            d,
+            lp(slot::OUT_PROJ),
+            di,
+            0.0,
+            &mut dyz,
+            threads,
+            &mut ws.arena.gemm,
+        );
+        ops::matmul_tn_into(
+            &c.yz,
+            t,
+            di,
+            &dout,
+            d,
+            1.0,
             &mut grads[gi(slot::OUT_PROJ)],
-            &ops::matmul_tn(&c.yz, t, di, &dout, d, threads),
+            threads,
+            &mut ws.arena.gemm,
         );
 
         // yz = y · silu(z)
-        let mut dy_tm = vec![0.0f32; t * di];
-        let mut dz = vec![0.0f32; t * di];
+        let mut dy_tm = ws.arena.take(t * di);
+        let mut dz = ws.arena.take(t * di);
         for i in 0..t * di {
             dy_tm[i] = dyz[i] * ops::silu(c.z[i]);
             dz[i] = dyz[i] * c.y_tm[i] * ops::dsilu(c.z[i]);
         }
+        ws.arena.put(dyz);
 
         // packed selective scan backward
-        let a_neg: Vec<f32> = lp(slot::A_LOG).iter().map(|&x| -x.exp()).collect();
-        let dy_cm = ops::to_channel_major(&dy_tm, rows, len, di);
-        let gr = kernels::ssm_packed_bwd(
-            &c.xs_cm, &c.dt_cm, &a_neg, &c.bm, &c.cm, lp(slot::D), &c.scan, &dy_cm, dims, threads,
+        let mut a_neg = ws.arena.take(di * n);
+        for (o, &x) in a_neg.iter_mut().zip(lp(slot::A_LOG)) {
+            *o = -x.exp();
+        }
+        let mut dy_cm = ws.arena.take(t * di);
+        ops::to_channel_major_into(&dy_tm, rows, len, di, &mut dy_cm);
+        ws.arena.put(dy_tm);
+        let mut sdx = ws.arena.take(t * di);
+        let mut sddt = ws.arena.take(t * di);
+        let mut sda = ws.arena.take(di * n);
+        let mut sdbm = ws.arena.take(t * n);
+        let mut sdcm = ws.arena.take(t * n);
+        let mut sdd = ws.arena.take(di);
+        let mut gbuf = ws.arena.take(t * di * n);
+        let mut colbuf = ws.arena.take(di * (n + 1));
+        kernels::ssm_packed_bwd_into(
+            &c.xs_cm,
+            &c.dt_cm,
+            &a_neg,
+            &c.bm,
+            &c.cm,
+            lp(slot::D),
+            &c.hist,
+            &c.am,
+            &dy_cm,
+            dims,
+            threads,
+            SsmGradsMut {
+                dx: &mut sdx,
+                ddt: &mut sddt,
+                da: &mut sda,
+                dbm: &mut sdbm,
+                dcm: &mut sdcm,
+                dd: &mut sdd,
+            },
+            &mut gbuf,
+            &mut colbuf,
         );
+        ws.arena.put(gbuf);
+        ws.arena.put(colbuf);
+        ws.arena.put(dy_cm);
         {
             // A = -exp(A_log) ⇒ ∂A/∂A_log = A
             let g = &mut grads[gi(slot::A_LOG)];
             for i in 0..di * n {
-                g[i] += gr.da[i] * a_neg[i];
+                g[i] += sda[i] * a_neg[i];
             }
         }
-        add_into(&mut grads[gi(slot::D)], &gr.dd);
+        ws.arena.put(sda);
+        ws.arena.put(a_neg);
+        add_into(&mut grads[gi(slot::D)], &sdd);
+        ws.arena.put(sdd);
 
         // dt = softplus(dt_low @ dt_proj + dt_bias)
-        let ddt_tm = ops::to_token_major(&gr.ddt, rows, di, len);
-        let mut ddt_pre = vec![0.0f32; t * di];
+        let mut ddt_tm = ws.arena.take(t * di);
+        ops::to_token_major_into(&sddt, rows, di, len, &mut ddt_tm);
+        ws.arena.put(sddt);
+        let mut ddt_pre = ws.arena.take(t * di);
         for i in 0..t * di {
             ddt_pre[i] = ddt_tm[i] * ops::sigmoid(c.dt_pre[i]);
         }
+        ws.arena.put(ddt_tm);
         {
             let g = &mut grads[gi(slot::DT_BIAS)];
             for ti in 0..t {
@@ -321,59 +602,156 @@ pub fn loss_and_grads(
                 }
             }
         }
-        add_into(
+        ops::matmul_tn_into(
+            &c.dt_low,
+            t,
+            r,
+            &ddt_pre,
+            di,
+            1.0,
             &mut grads[gi(slot::DT_PROJ)],
-            &ops::matmul_tn(&c.dt_low, t, r, &ddt_pre, di, threads),
+            threads,
+            &mut ws.arena.gemm,
         );
-        let ddt_low = ops::matmul_nt(&ddt_pre, t, di, lp(slot::DT_PROJ), r, threads);
+        let mut ddt_low = ws.arena.take(t * r);
+        ops::matmul_nt_into(
+            &ddt_pre,
+            t,
+            di,
+            lp(slot::DT_PROJ),
+            r,
+            0.0,
+            &mut ddt_low,
+            threads,
+            &mut ws.arena.gemm,
+        );
+        ws.arena.put(ddt_pre);
 
         // dbc = xs @ x_proj, split into (dt_low | B | C)
         let stride = r + 2 * n;
-        let mut ddbc = vec![0.0f32; t * stride];
+        let mut ddbc = ws.arena.take(t * stride);
         for ti in 0..t {
             ddbc[ti * stride..ti * stride + r].copy_from_slice(&ddt_low[ti * r..(ti + 1) * r]);
             ddbc[ti * stride + r..ti * stride + r + n]
-                .copy_from_slice(&gr.dbm[ti * n..(ti + 1) * n]);
+                .copy_from_slice(&sdbm[ti * n..(ti + 1) * n]);
             ddbc[ti * stride + r + n..(ti + 1) * stride]
-                .copy_from_slice(&gr.dcm[ti * n..(ti + 1) * n]);
+                .copy_from_slice(&sdcm[ti * n..(ti + 1) * n]);
         }
-        add_into(
+        ws.arena.put(ddt_low);
+        ws.arena.put(sdbm);
+        ws.arena.put(sdcm);
+        ops::matmul_tn_into(
+            &c.xs_tm,
+            t,
+            di,
+            &ddbc,
+            stride,
+            1.0,
             &mut grads[gi(slot::X_PROJ)],
-            &ops::matmul_tn(&c.xs_tm, t, di, &ddbc, stride, threads),
+            threads,
+            &mut ws.arena.gemm,
         );
-        let mut dxs_tm = ops::matmul_nt(&ddbc, t, stride, lp(slot::X_PROJ), di, threads);
-        add_into(&mut dxs_tm, &ops::to_token_major(&gr.dx, rows, di, len));
+        // dxs = transpose(scan dx) + ddbc @ x_projᵀ, fused via beta=1
+        let mut dxs_tm = ws.arena.take(t * di);
+        ops::to_token_major_into(&sdx, rows, di, len, &mut dxs_tm);
+        ws.arena.put(sdx);
+        ops::matmul_nt_into(
+            &ddbc,
+            t,
+            stride,
+            lp(slot::X_PROJ),
+            di,
+            1.0,
+            &mut dxs_tm,
+            threads,
+            &mut ws.arena.gemm,
+        );
+        ws.arena.put(ddbc);
 
         // silu + packed conv backward
-        let dxs_cm = ops::to_channel_major(&dxs_tm, rows, len, di);
-        let mut dxc_cm = vec![0.0f32; rows * di * len];
-        for i in 0..rows * di * len {
+        let mut dxs_cm = ws.arena.take(t * di);
+        ops::to_channel_major_into(&dxs_tm, rows, len, di, &mut dxs_cm);
+        ws.arena.put(dxs_tm);
+        let mut dxc_cm = ws.arena.take(t * di);
+        for i in 0..t * di {
             dxc_cm[i] = dxs_cm[i] * ops::dsilu(c.xc_cm[i]);
         }
-        let (dxlin_cm, dw, db) =
-            kernels::conv1d_packed_bwd(&c.xlin_cm, dims, lp(slot::CONV_W), wl, pos, &dxc_cm, threads);
-        add_into(&mut grads[gi(slot::CONV_W)], &dw);
-        add_into(&mut grads[gi(slot::CONV_B)], &db);
-        let dxlin_tm = ops::to_token_major(&dxlin_cm, rows, di, len);
+        ws.arena.put(dxs_cm);
+        let mut dxlin_cm = ws.arena.take(t * di);
+        let mut convcol = ws.arena.take(di * (wl + 1));
+        {
+            let (dw_g, db_g) = two_muts(grads, gi(slot::CONV_W), gi(slot::CONV_B));
+            kernels::conv1d_packed_bwd_into(
+                &c.xlin_cm,
+                dims,
+                lp(slot::CONV_W),
+                wl,
+                pos,
+                &dxc_cm,
+                threads,
+                &mut dxlin_cm,
+                dw_g,
+                db_g,
+                &mut convcol,
+            );
+        }
+        ws.arena.put(dxc_cm);
+        ws.arena.put(convcol);
+        let mut dxlin_tm = ws.arena.take(t * di);
+        ops::to_token_major_into(&dxlin_cm, rows, di, len, &mut dxlin_tm);
+        ws.arena.put(dxlin_cm);
 
         // xz = un @ in_proj, xz = (x | z)
-        let mut dxz = vec![0.0f32; t * 2 * di];
+        let mut dxz = ws.arena.take(t * 2 * di);
         for ti in 0..t {
             dxz[ti * 2 * di..ti * 2 * di + di]
                 .copy_from_slice(&dxlin_tm[ti * di..(ti + 1) * di]);
             dxz[ti * 2 * di + di..(ti + 1) * 2 * di].copy_from_slice(&dz[ti * di..(ti + 1) * di]);
         }
-        add_into(
+        ws.arena.put(dxlin_tm);
+        ws.arena.put(dz);
+        ops::matmul_tn_into(
+            &c.un,
+            t,
+            d,
+            &dxz,
+            2 * di,
+            1.0,
             &mut grads[gi(slot::IN_PROJ)],
-            &ops::matmul_tn(&c.un, t, d, &dxz, 2 * di, threads),
+            threads,
+            &mut ws.arena.gemm,
         );
-        let dun = ops::matmul_nt(&dxz, t, 2 * di, lp(slot::IN_PROJ), d, threads);
+        let mut dun = ws.arena.take(t * d);
+        ops::matmul_nt_into(
+            &dxz,
+            t,
+            2 * di,
+            lp(slot::IN_PROJ),
+            d,
+            0.0,
+            &mut dun,
+            threads,
+            &mut ws.arena.gemm,
+        );
+        ws.arena.put(dxz);
 
         // RMSNorm backward + residual
-        let (mut dup, dnw) = ops::rms_norm_bwd(&c.u, d, lp(slot::NORM_W), &c.inv, &dun);
-        add_into(&mut grads[gi(slot::NORM_W)], &dnw);
+        let mut dup = ws.arena.take(t * d);
+        ops::rms_norm_bwd_into(
+            &c.u,
+            d,
+            lp(slot::NORM_W),
+            &c.inv,
+            &dun,
+            &mut dup,
+            &mut grads[gi(slot::NORM_W)],
+        );
+        ws.arena.put(dun);
         add_into(&mut dup, &dout);
+        ws.arena.put(dout);
         dh = dup;
+
+        release_layer(c, &mut ws.arena);
     }
 
     // embedding lookup gradient
@@ -387,7 +765,32 @@ pub fn loss_and_grads(
             }
         }
     }
+    ws.arena.put(dh);
 
+    loss
+}
+
+/// Masked-cross-entropy loss and gradients for every parameter, in
+/// canonical flat order (allocating convenience wrapper over
+/// [`loss_and_grads_into`]).
+#[allow(clippy::too_many_arguments)]
+pub fn loss_and_grads(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    tokens: &[i32],
+    targets: &[i32],
+    pos: &[i32],
+    mask: &[f32],
+    rows: usize,
+    len: usize,
+    threads: usize,
+) -> (f32, Vec<Tensor>) {
+    let mut ws = ModelWorkspace::new();
+    let specs = params::specs(cfg);
+    let mut grads: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.element_count()]).collect();
+    let loss = loss_and_grads_into(
+        cfg, p, tokens, targets, pos, mask, rows, len, threads, &mut ws, &mut grads,
+    );
     let tensors = specs
         .iter()
         .zip(grads)
@@ -441,6 +844,7 @@ mod tests {
             }],
             16,
         );
+        let mut ws = ModelWorkspace::new();
         let logits = forward_logits(
             &cfg,
             &p,
@@ -449,9 +853,51 @@ mod tests {
             1,
             16,
             1,
+            &mut ws,
         );
         assert_eq!(logits.shape(), &[1, 16, cfg.vocab_size]);
         assert!(logits.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn workspace_reuse_does_not_change_results() {
+        // warmup-recycled (stale) arena buffers must be invisible: the
+        // same batch through the same workspace twice gives identical
+        // losses and gradients, and matches a fresh workspace.
+        let cfg = nano();
+        let p = params::init(&cfg, 3);
+        let batch = PackedBatch::from_rows(
+            &[PackedRow {
+                sequences: vec![rand_seq(9, 11, cfg.vocab_size), rand_seq(10, 4, cfg.vocab_size)],
+            }],
+            16,
+        );
+        let specs = params::specs(&cfg);
+        let mut grads_a: Vec<Vec<f32>> =
+            specs.iter().map(|s| vec![0.0f32; s.element_count()]).collect();
+        let mut grads_b = grads_a.clone();
+        let mut ws = ModelWorkspace::new();
+        let run = |ws: &mut ModelWorkspace, grads: &mut [Vec<f32>]| {
+            loss_and_grads_into(
+                &cfg,
+                &p,
+                batch.tokens.data(),
+                batch.targets.data(),
+                batch.position_indices.data(),
+                batch.loss_mask.data(),
+                1,
+                16,
+                1,
+                ws,
+                grads,
+            )
+        };
+        let l1 = run(&mut ws, &mut grads_a);
+        let l2 = run(&mut ws, &mut grads_b); // recycled buffers
+        assert_eq!(l1, l2);
+        assert_eq!(grads_a, grads_b);
+        let (takes, hits) = ws.arena.stats();
+        assert!(hits * 2 >= takes, "second step should recycle: {takes} takes, {hits} hits");
     }
 
     #[test]

@@ -2,12 +2,18 @@
 //!
 //! No artifacts, no FFI — [`model`] implements the forward/backward and
 //! [`kernels`](super::kernels) the paper's packed operators, parallelized
-//! over rows and channels via `util::threadpool`.  Thread count comes
-//! from `PACKMAMBA_THREADS` or the machine's available parallelism; the
-//! numerics are bit-identical for any thread count, which keeps
+//! over rows and channels via `util::threadpool`; the GEMM-shaped ops run
+//! on the blocked micro-kernel in [`gemm`](super::gemm).  Thread count
+//! comes from `PACKMAMBA_THREADS` or the machine's available parallelism;
+//! the numerics are bit-identical for any thread count, which keeps
 //! data-parallel replicas exactly in sync.
+//!
+//! The backend owns a persistent [`model::ModelWorkspace`] (buffer arena
+//! + GEMM scratch) and spec-sized gradient buffers, so the fused
+//! [`Backend::train_step`] performs **zero heap allocations** after the
+//! first (warmup) step — see `tests/zero_alloc.rs`.
 
-use std::cell::RefCell;
+use std::cell::{Ref, RefCell};
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -24,6 +30,13 @@ pub struct NativeBackend {
     threads: usize,
     opt: AdamWConfig,
     stats: RefCell<HashMap<String, ExecStats>>,
+    /// Arena + layer caches + GEMM scratch, reused every step.
+    ws: RefCell<model::ModelWorkspace>,
+    /// Spec-sized gradient buffers for the fused step.
+    grad_bufs: RefCell<Vec<Vec<f32>>>,
+    /// Param specs for the model last seen (spec building allocates
+    /// names; caching keeps the steady-state step allocation-free).
+    specs_cache: RefCell<Option<(ModelConfig, Vec<ParamSpec>)>>,
 }
 
 impl NativeBackend {
@@ -46,6 +59,9 @@ impl NativeBackend {
             threads: threads.max(1),
             opt: AdamWConfig::default(),
             stats: RefCell::new(HashMap::new()),
+            ws: RefCell::new(model::ModelWorkspace::new()),
+            grad_bufs: RefCell::new(Vec::new()),
+            specs_cache: RefCell::new(None),
         }
     }
 
@@ -55,9 +71,47 @@ impl NativeBackend {
 
     fn note(&self, name: &str, secs: f64) {
         let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(name.to_string()).or_default();
-        s.calls += 1;
-        s.exec_secs += secs;
+        // lookup by &str first: the entry API would allocate a key String
+        // on every call, breaking the zero-alloc steady state
+        if let Some(s) = stats.get_mut(name) {
+            s.calls += 1;
+            s.exec_secs += secs;
+        } else {
+            let s = stats.entry(name.to_string()).or_default();
+            s.calls = 1;
+            s.exec_secs = secs;
+        }
+    }
+
+    /// Canonical specs for `model`, cached across steps.
+    fn cached_specs(&self, model: &ModelConfig) -> Ref<'_, Vec<ParamSpec>> {
+        {
+            let mut cache = self.specs_cache.borrow_mut();
+            let stale = match &*cache {
+                Some((m, _)) => m != model,
+                None => true,
+            };
+            if stale {
+                *cache = Some((model.clone(), params::specs(model)));
+            }
+        }
+        Ref::map(self.specs_cache.borrow(), |c| &c.as_ref().unwrap().1)
+    }
+
+    /// Size the persistent gradient buffers to `specs` (warmup only).
+    fn ensure_grad_bufs(&self, specs: &[ParamSpec]) {
+        let mut bufs = self.grad_bufs.borrow_mut();
+        let fits = bufs.len() == specs.len()
+            && bufs
+                .iter()
+                .zip(specs)
+                .all(|(b, s)| b.len() == s.element_count());
+        if !fits {
+            *bufs = specs
+                .iter()
+                .map(|s| vec![0.0f32; s.element_count()])
+                .collect();
+        }
     }
 
     fn check_batch(&self, model: &ModelConfig, batch: &PackedBatch) -> Result<()> {
@@ -119,20 +173,30 @@ impl Backend for NativeBackend {
         batch: &PackedBatch,
     ) -> Result<f32> {
         self.check_batch(model, batch)?;
+        let specs = self.cached_specs(model);
+        self.ensure_grad_bufs(specs.as_slice());
         let t0 = Instant::now();
-        let (loss, grads) = model::loss_and_grads(
-            model,
-            &state.params,
-            batch.tokens.data(),
-            batch.targets.data(),
-            batch.position_indices.data(),
-            batch.loss_mask.data(),
-            batch.rows(),
-            batch.pack_len(),
-            self.threads,
-        );
+        let loss = {
+            let mut ws = self.ws.borrow_mut();
+            let mut grads = self.grad_bufs.borrow_mut();
+            model::loss_and_grads_into(
+                model,
+                &state.params,
+                batch.tokens.data(),
+                batch.targets.data(),
+                batch.position_indices.data(),
+                batch.loss_mask.data(),
+                batch.rows(),
+                batch.pack_len(),
+                self.threads,
+                &mut ws,
+                &mut grads,
+            )
+        };
         let t1 = Instant::now();
-        adamw::apply(&self.opt, &params::specs(model), state, &grads)?;
+        let grads = self.grad_bufs.borrow();
+        adamw::apply_slices(&self.opt, specs.as_slice(), state, grads.as_slice())?;
+        drop(grads);
         state.step += 1;
         let t2 = Instant::now();
         self.note("train_step.fwd_bwd", (t1 - t0).as_secs_f64());
@@ -157,6 +221,7 @@ impl Backend for NativeBackend {
             batch.rows(),
             batch.pack_len(),
             self.threads,
+            &mut self.ws.borrow_mut(),
         );
         self.note("forward", t0.elapsed().as_secs_f64());
         Ok(logits)
@@ -169,8 +234,15 @@ impl Backend for NativeBackend {
         batch: &PackedBatch,
     ) -> Result<(f32, Vec<Tensor>)> {
         self.check_batch(model, batch)?;
+        let specs = self.cached_specs(model);
         let t0 = Instant::now();
-        let out = model::loss_and_grads(
+        // fresh grad buffers (they are moved into the returned tensors);
+        // activations still reuse the persistent arena
+        let mut grads: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|s| vec![0.0f32; s.element_count()])
+            .collect();
+        let loss = model::loss_and_grads_into(
             model,
             state_params,
             batch.tokens.data(),
@@ -180,10 +252,17 @@ impl Backend for NativeBackend {
             batch.rows(),
             batch.pack_len(),
             self.threads,
+            &mut self.ws.borrow_mut(),
+            &mut grads,
         );
         self.note("grads", t0.elapsed().as_secs_f64());
-        anyhow::ensure!(out.0.is_finite(), "non-finite loss in grads pass");
-        Ok(out)
+        anyhow::ensure!(loss.is_finite(), "non-finite loss in grads pass");
+        let tensors = specs
+            .iter()
+            .zip(grads)
+            .map(|(s, g)| Tensor::new(&s.shape, g))
+            .collect();
+        Ok((loss, tensors))
     }
 
     fn apply_update(
@@ -193,7 +272,7 @@ impl Backend for NativeBackend {
         grads: &[Tensor],
     ) -> Result<()> {
         let t0 = Instant::now();
-        adamw::apply(&self.opt, &params::specs(model), state, grads)?;
+        adamw::apply(&self.opt, self.cached_specs(model).as_slice(), state, grads)?;
         state.step += 1;
         self.note("adam_apply", t0.elapsed().as_secs_f64());
         Ok(())
@@ -291,6 +370,30 @@ mod tests {
     }
 
     #[test]
+    fn warm_workspace_does_not_change_results() {
+        // A backend whose arena is already warm (from steps on another
+        // batch) must produce exactly the numbers a cold backend does.
+        let cfg = nano();
+        let warm = NativeBackend::with_threads(2);
+        let mut throwaway = warm.init_state(&cfg, 5).unwrap();
+        for _ in 0..2 {
+            warm.train_step(&cfg, &mut throwaway, &batch(32)).unwrap();
+        }
+        let cold = NativeBackend::with_threads(2);
+        let mut sw = warm.init_state(&cfg, 8).unwrap();
+        let mut sc = cold.init_state(&cfg, 8).unwrap();
+        let b = batch(16);
+        for _ in 0..3 {
+            let lw = warm.train_step(&cfg, &mut sw, &b).unwrap();
+            let lc = cold.train_step(&cfg, &mut sc, &b).unwrap();
+            assert_eq!(lw, lc);
+        }
+        for (x, y) in sw.params.iter().zip(&sc.params) {
+            assert_eq!(x.data(), y.data());
+        }
+    }
+
+    #[test]
     fn rejects_out_of_vocab_tokens() {
         let cfg = nano();
         let be = NativeBackend::with_threads(1);
@@ -324,9 +427,15 @@ mod tests {
         let be = NativeBackend::with_threads(1);
         let mut st = be.init_state(&cfg, 2).unwrap();
         be.train_step(&cfg, &mut st, &batch(16)).unwrap();
+        be.train_step(&cfg, &mut st, &batch(16)).unwrap();
         let stats = be.stats();
         let names: Vec<&str> = stats.iter().map(|(n, _)| n.as_str()).collect();
         assert!(names.contains(&"train_step.fwd_bwd"), "{names:?}");
         assert!(names.contains(&"train_step.adamw"));
+        let fwd = stats
+            .iter()
+            .find(|(n, _)| n == "train_step.fwd_bwd")
+            .unwrap();
+        assert_eq!(fwd.1.calls, 2, "note() must accumulate across steps");
     }
 }

@@ -1,133 +1,174 @@
-//! Dense host primitives for the native backend: multithreaded GEMMs,
-//! RMSNorm, activations, layout transposes, and the masked cross-entropy
+//! Dense host primitives for the native backend: GEMM layout adapters
+//! over the blocked micro-kernel in [`gemm`](super::gemm), RMSNorm,
+//! activations, blocked layout transposes, and the masked cross-entropy
 //! head.  All operate on flat row-major `f32` slices; shapes travel as
 //! explicit dimensions.
+//!
+//! Every routine has an `_into` form that writes caller-provided buffers
+//! — the allocation-free surface `model` drives through the `StepArena` —
+//! plus a thin allocating wrapper for tests, benches, and one-shot use.
 //!
 //! Determinism: every parallel routine assigns each output chunk a fixed
 //! serial computation, so results are bit-identical for any thread count
 //! — the invariant the data-parallel replica check relies on.
 
-use crate::util::threadpool::{parallel_chunks_mut, parallel_map};
+use super::gemm::{self, GemmScratch, Layout};
+use crate::util::threadpool::parallel_chunks2_mut;
 
-/// Threads actually worth using for `work` fused multiply-adds (scoped
-/// thread spawn costs ~tens of µs; small ops run serially).
-fn effective_threads(work: usize, threads: usize) -> usize {
-    if work < 1 << 20 {
-        1
+pub(crate) use super::gemm::effective_threads;
+
+/// `(m, k) @ (k, n) + beta·out -> out`.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_into(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    beta: f32,
+    out: &mut [f32],
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    if gemm::naive_forced() {
+        accumulate_naive(gemm::naive::matmul(a, m, k, b, n, threads), beta, out);
     } else {
-        threads.max(1)
+        gemm::gemm_into(Layout::NN, m, k, n, a, b, beta, out, threads, scratch);
     }
 }
 
-/// Rows per parallel task, aiming for a few tasks per thread.
-fn rows_per_task(m: usize, threads: usize) -> usize {
-    m.div_ceil(threads.max(1) * 4).max(1)
+/// `(m, k) @ (n, k)^T + beta·out -> out` — right operand transposed
+/// (e.g. `dy @ W^T`, logits against the tied embedding).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_into(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    beta: f32,
+    out: &mut [f32],
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    if gemm::naive_forced() {
+        accumulate_naive(gemm::naive::matmul_nt(a, m, k, b, n, threads), beta, out);
+    } else {
+        gemm::gemm_into(Layout::NT, m, k, n, a, b, beta, out, threads, scratch);
+    }
+}
+
+/// `(t, m)^T @ (t, n) + beta·out -> out` — left operand transposed
+/// (weight gradients `x^T @ dy`, fused into the grad buffer via beta=1).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_into(
+    a: &[f32],
+    t: usize,
+    m: usize,
+    b: &[f32],
+    n: usize,
+    beta: f32,
+    out: &mut [f32],
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    if gemm::naive_forced() {
+        accumulate_naive(gemm::naive::matmul_tn(a, t, m, b, n, threads), beta, out);
+    } else {
+        gemm::gemm_into(Layout::TN, m, t, n, a, b, beta, out, threads, scratch);
+    }
+}
+
+fn accumulate_naive(prod: Vec<f32>, beta: f32, out: &mut [f32]) {
+    assert_eq!(prod.len(), out.len());
+    if beta == 0.0 {
+        out.copy_from_slice(&prod);
+    } else {
+        for (o, p) in out.iter_mut().zip(prod) {
+            *o += p;
+        }
+    }
 }
 
 /// `(m, k) @ (k, n) -> (m, n)`.
 pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul lhs size");
-    assert_eq!(b.len(), k * n, "matmul rhs size");
     let mut out = vec![0.0f32; m * n];
-    let threads = effective_threads(m * k * n, threads);
-    let rows = rows_per_task(m, threads);
-    parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
-        let r0 = ci * rows;
-        for (ri, orow) in chunk.chunks_mut(n).enumerate() {
-            let arow = &a[(r0 + ri) * k..(r0 + ri + 1) * k];
-            for (p, &av) in arow.iter().enumerate() {
-                if av != 0.0 {
-                    let brow = &b[p * n..(p + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
-            }
-        }
-    });
+    matmul_into(a, m, k, b, n, 0.0, &mut out, threads, &mut GemmScratch::new());
     out
 }
 
-/// `(m, k) @ (n, k)^T -> (m, n)` — right operand transposed (e.g.
-/// `dy @ W^T`, logits against the tied embedding).
+/// `(m, k) @ (n, k)^T -> (m, n)`.
 pub fn matmul_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul_nt lhs size");
-    assert_eq!(b.len(), n * k, "matmul_nt rhs size");
     let mut out = vec![0.0f32; m * n];
-    let threads = effective_threads(m * k * n, threads);
-    let rows = rows_per_task(m, threads);
-    parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
-        let r0 = ci * rows;
-        for (ri, orow) in chunk.chunks_mut(n).enumerate() {
-            let arow = &a[(r0 + ri) * k..(r0 + ri + 1) * k];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (&av, &bv) in arow.iter().zip(brow) {
-                    acc += av * bv;
-                }
-                *o = acc;
-            }
-        }
-    });
+    matmul_nt_into(a, m, k, b, n, 0.0, &mut out, threads, &mut GemmScratch::new());
     out
 }
 
-/// `(t, m)^T @ (t, n) -> (m, n)` — left operand transposed (weight
-/// gradients `x^T @ dy`).
+/// `(t, m)^T @ (t, n) -> (m, n)`.
 pub fn matmul_tn(a: &[f32], t: usize, m: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
-    assert_eq!(a.len(), t * m, "matmul_tn lhs size");
-    assert_eq!(b.len(), t * n, "matmul_tn rhs size");
     let mut out = vec![0.0f32; m * n];
-    let threads = effective_threads(t * m * n, threads);
-    let rows = rows_per_task(m, threads);
-    parallel_chunks_mut(&mut out, rows * n, threads, |ci, chunk| {
-        let r0 = ci * rows;
-        for (ri, orow) in chunk.chunks_mut(n).enumerate() {
-            let p = r0 + ri;
-            for ti in 0..t {
-                let av = a[ti * m + p];
-                if av != 0.0 {
-                    let brow = &b[ti * n..(ti + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
+    matmul_tn_into(a, t, m, b, n, 0.0, &mut out, threads, &mut GemmScratch::new());
+    out
+}
+
+/// Transpose tile edge (square blocking keeps both source and
+/// destination lines cache-resident instead of striding one of them
+/// through the whole plane per row).
+const TRANS_BLOCK: usize = 32;
+
+/// `(B, L, D)` token-major → `(B, D, L)` channel-major, blocked.
+pub fn to_channel_major_into(x: &[f32], b: usize, l: usize, d: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), b * l * d);
+    assert_eq!(out.len(), b * l * d);
+    for bi in 0..b {
+        let src = &x[bi * l * d..(bi + 1) * l * d];
+        let dst = &mut out[bi * l * d..(bi + 1) * l * d];
+        for t0 in (0..l).step_by(TRANS_BLOCK) {
+            let t1 = (t0 + TRANS_BLOCK).min(l);
+            for c0 in (0..d).step_by(TRANS_BLOCK) {
+                let c1 = (c0 + TRANS_BLOCK).min(d);
+                for t in t0..t1 {
+                    for c in c0..c1 {
+                        dst[c * l + t] = src[t * d + c];
                     }
                 }
             }
         }
-    });
-    out
+    }
+}
+
+/// `(B, D, L)` channel-major → `(B, L, D)` token-major, blocked.
+pub fn to_token_major_into(x: &[f32], b: usize, d: usize, l: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), b * l * d);
+    assert_eq!(out.len(), b * l * d);
+    for bi in 0..b {
+        let src = &x[bi * l * d..(bi + 1) * l * d];
+        let dst = &mut out[bi * l * d..(bi + 1) * l * d];
+        for c0 in (0..d).step_by(TRANS_BLOCK) {
+            let c1 = (c0 + TRANS_BLOCK).min(d);
+            for t0 in (0..l).step_by(TRANS_BLOCK) {
+                let t1 = (t0 + TRANS_BLOCK).min(l);
+                for c in c0..c1 {
+                    for t in t0..t1 {
+                        dst[t * d + c] = src[c * l + t];
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// `(B, L, D)` token-major → `(B, D, L)` channel-major.
 pub fn to_channel_major(x: &[f32], b: usize, l: usize, d: usize) -> Vec<f32> {
-    assert_eq!(x.len(), b * l * d);
-    let mut out = vec![0.0f32; b * l * d];
-    for bi in 0..b {
-        let src = &x[bi * l * d..(bi + 1) * l * d];
-        let dst = &mut out[bi * l * d..(bi + 1) * l * d];
-        for t in 0..l {
-            for c in 0..d {
-                dst[c * l + t] = src[t * d + c];
-            }
-        }
-    }
+    let mut out = vec![0.0f32; x.len()];
+    to_channel_major_into(x, b, l, d, &mut out);
     out
 }
 
 /// `(B, D, L)` channel-major → `(B, L, D)` token-major.
 pub fn to_token_major(x: &[f32], b: usize, d: usize, l: usize) -> Vec<f32> {
-    assert_eq!(x.len(), b * l * d);
-    let mut out = vec![0.0f32; b * l * d];
-    for bi in 0..b {
-        let src = &x[bi * l * d..(bi + 1) * l * d];
-        let dst = &mut out[bi * l * d..(bi + 1) * l * d];
-        for c in 0..d {
-            for t in 0..l {
-                dst[t * d + c] = src[c * l + t];
-            }
-        }
-    }
+    let mut out = vec![0.0f32; x.len()];
+    to_token_major_into(x, b, d, l, &mut out);
     out
 }
 
@@ -150,14 +191,14 @@ pub fn softplus(x: f32) -> f32 {
     x.max(0.0) + (-x.abs()).exp().ln_1p()
 }
 
-/// RMSNorm forward over rows of length `d`; returns `(y, inv)` with
+/// RMSNorm forward over rows of length `d` into `(y, inv)` with
 /// `inv[t] = 1/sqrt(mean(x_t^2) + eps)`.
-pub fn rms_norm_fwd(x: &[f32], d: usize, w: &[f32], eps: f32) -> (Vec<f32>, Vec<f32>) {
+pub fn rms_norm_fwd_into(x: &[f32], d: usize, w: &[f32], eps: f32, y: &mut [f32], inv: &mut [f32]) {
     assert_eq!(x.len() % d, 0);
     assert_eq!(w.len(), d);
     let t = x.len() / d;
-    let mut y = vec![0.0f32; x.len()];
-    let mut inv = vec![0.0f32; t];
+    assert_eq!(y.len(), x.len());
+    assert_eq!(inv.len(), t);
     for ti in 0..t {
         let row = &x[ti * d..(ti + 1) * d];
         let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
@@ -168,20 +209,29 @@ pub fn rms_norm_fwd(x: &[f32], d: usize, w: &[f32], eps: f32) -> (Vec<f32>, Vec<
             *o = xv * r * wv;
         }
     }
+}
+
+/// RMSNorm forward; returns `(y, inv)`.
+pub fn rms_norm_fwd(x: &[f32], d: usize, w: &[f32], eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; x.len()];
+    let mut inv = vec![0.0f32; x.len() / d];
+    rms_norm_fwd_into(x, d, w, eps, &mut y, &mut inv);
     (y, inv)
 }
 
-/// RMSNorm backward; returns `(dx, dw)`.
-pub fn rms_norm_bwd(
+/// RMSNorm backward: writes `dx` and **accumulates** into `dw_acc`.
+pub fn rms_norm_bwd_into(
     x: &[f32],
     d: usize,
     w: &[f32],
     inv: &[f32],
     dy: &[f32],
-) -> (Vec<f32>, Vec<f32>) {
+    dx: &mut [f32],
+    dw_acc: &mut [f32],
+) {
     let t = x.len() / d;
-    let mut dx = vec![0.0f32; x.len()];
-    let mut dw = vec![0.0f32; d];
+    assert_eq!(dx.len(), x.len());
+    assert_eq!(dw_acc.len(), d);
     for ti in 0..t {
         let row = &x[ti * d..(ti + 1) * d];
         let grow = &dy[ti * d..(ti + 1) * d];
@@ -194,38 +244,63 @@ pub fn rms_norm_bwd(
         let orow = &mut dx[ti * d..(ti + 1) * d];
         for i in 0..d {
             orow[i] = r * w[i] * grow[i] - row[i] * scale;
-            dw[i] += row[i] * r * grow[i];
+            dw_acc[i] += row[i] * r * grow[i];
         }
     }
+}
+
+/// RMSNorm backward; returns `(dx, dw)`.
+pub fn rms_norm_bwd(
+    x: &[f32],
+    d: usize,
+    w: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; d];
+    rms_norm_bwd_into(x, d, w, inv, dy, &mut dx, &mut dw);
     (dx, dw)
+}
+
+/// Rows per cross-entropy reduction chunk.  Fixed: the loss is a sum of
+/// per-chunk f64 partials, so the grouping (and therefore the rounding)
+/// must not depend on the thread count — the determinism invariant DP
+/// replicas rely on.
+const CE_ROWS: usize = 64;
+
+/// Number of `f64` partial slots [`cross_entropy_into`] needs for `t`
+/// targets (size `loss_parts` with this).
+pub fn cross_entropy_chunks(t: usize) -> usize {
+    t.div_ceil(CE_ROWS)
 }
 
 /// Masked cross-entropy over `(T, V)` logits with next-token targets.
 ///
-/// Returns `(loss, dlogits)` where
-/// `loss = Σ_t mask_t · nll_t / max(Σ mask, 1)` and `dlogits` is its
-/// gradient — the packed `loss_mask` zeroes padding slots and each
-/// sequence's final token, so training never predicts across a packed
-/// boundary.
-pub fn cross_entropy(
+/// Writes `dlogits` in place (every element), accumulates per-chunk f64
+/// loss partials in `loss_parts` (length [`cross_entropy_chunks`]`(t)`),
+/// and returns `loss = Σ_t mask_t · nll_t / max(Σ mask, 1)` — the packed
+/// `loss_mask` zeroes padding slots and each sequence's final token, so
+/// training never predicts across a packed boundary.
+pub fn cross_entropy_into(
     logits: &[f32],
     v: usize,
     targets: &[i32],
     mask: &[f32],
     threads: usize,
-) -> (f32, Vec<f32>) {
+    dlogits: &mut [f32],
+    loss_parts: &mut [f64],
+) -> f32 {
     let t = targets.len();
     assert_eq!(logits.len(), t * v);
     assert_eq!(mask.len(), t);
+    assert_eq!(dlogits.len(), t * v);
+    assert_eq!(loss_parts.len(), cross_entropy_chunks(t));
     let denom: f32 = mask.iter().sum::<f32>().max(1.0);
     let threads = effective_threads(t * v * 8, threads);
-    // fixed chunk size: the loss is a sum of per-chunk partials, so the
-    // grouping (and therefore the f64 rounding) must not depend on the
-    // thread count — the determinism invariant DP replicas rely on
-    let rows = 64usize;
-    let ranges: Vec<(usize, usize)> = ranges_of(t, rows).collect();
-    let pieces = parallel_map(ranges.clone(), threads, |_, (lo, hi)| {
-        let mut dl = vec![0.0f32; (hi - lo) * v];
+    parallel_chunks2_mut(dlogits, CE_ROWS * v, loss_parts, 1, threads, |ci, dl, part| {
+        let lo = ci * CE_ROWS;
+        let hi = (lo + CE_ROWS).min(t);
         let mut loss = 0.0f64;
         for ti in lo..hi {
             let row = &logits[ti * v..(ti + 1) * v];
@@ -245,21 +320,29 @@ pub fn cross_entropy(
                     *o = scale * (x - max).exp() / sum;
                 }
                 drow[tgt] -= scale;
+            } else {
+                drow.iter_mut().for_each(|o| *o = 0.0);
             }
         }
-        (loss, dl)
+        part[0] = loss;
     });
-    let mut dlogits = vec![0.0f32; t * v];
-    let mut loss = 0.0f64;
-    for (&(lo, hi), (pl, dl)) in ranges.iter().zip(pieces) {
-        loss += pl;
-        dlogits[lo * v..hi * v].copy_from_slice(&dl);
-    }
-    ((loss / denom as f64) as f32, dlogits)
+    let loss: f64 = loss_parts.iter().sum();
+    (loss / denom as f64) as f32
 }
 
-fn ranges_of(t: usize, rows: usize) -> impl Iterator<Item = (usize, usize)> {
-    (0..t.div_ceil(rows)).map(move |i| (i * rows, ((i + 1) * rows).min(t)))
+/// Masked cross-entropy; returns `(loss, dlogits)`.
+pub fn cross_entropy(
+    logits: &[f32],
+    v: usize,
+    targets: &[i32],
+    mask: &[f32],
+    threads: usize,
+) -> (f32, Vec<f32>) {
+    let t = targets.len();
+    let mut dlogits = vec![0.0f32; t * v];
+    let mut parts = vec![0.0f64; cross_entropy_chunks(t)];
+    let loss = cross_entropy_into(logits, v, targets, mask, threads, &mut dlogits, &mut parts);
+    (loss, dlogits)
 }
 
 #[cfg(test)]
@@ -295,11 +378,41 @@ mod tests {
     }
 
     #[test]
+    fn beta_accumulate_fuses_add() {
+        let (m, k, n) = (9, 14, 6);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 3 % 7) as f32) - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i * 5 % 9) as f32) - 4.0).collect();
+        let prior: Vec<f32> = (0..m * n).map(|i| i as f32 * 0.25).collect();
+        let mut fused = prior.clone();
+        matmul_into(&a, m, k, &b, n, 1.0, &mut fused, 1, &mut GemmScratch::new());
+        let prod = matmul(&a, m, k, &b, n, 1);
+        for ((f, p), q) in fused.iter().zip(&prior).zip(&prod) {
+            assert!((f - (p + q)).abs() < 1e-5, "{f} vs {}", p + q);
+        }
+    }
+
+    #[test]
     fn transpose_round_trips() {
         let (b, l, d) = (2, 5, 3);
         let x: Vec<f32> = (0..b * l * d).map(|i| i as f32).collect();
         let cm = to_channel_major(&x, b, l, d);
         assert_eq!(cm[0 * l + 1], x[1 * d]); // channel 0, t=1
+        assert_eq!(to_token_major(&cm, b, d, l), x);
+    }
+
+    #[test]
+    fn blocked_transpose_matches_reference_on_odd_shapes() {
+        // shapes straddling the 32-wide tile edge
+        let (b, l, d) = (2, 37, 33);
+        let x: Vec<f32> = (0..b * l * d).map(|i| (i as f32).sin()).collect();
+        let cm = to_channel_major(&x, b, l, d);
+        for bi in 0..b {
+            for t in 0..l {
+                for c in 0..d {
+                    assert_eq!(cm[bi * l * d + c * l + t], x[bi * l * d + t * d + c]);
+                }
+            }
+        }
         assert_eq!(to_token_major(&cm, b, d, l), x);
     }
 
@@ -369,6 +482,23 @@ mod tests {
         // gradient rows sum to ~0
         let s: f32 = dl[..v].iter().sum();
         assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_overwrites_stale_dlogits() {
+        // the _into form must fully overwrite arena-recycled buffers,
+        // including masked-out rows
+        let v = 5;
+        let t = 3;
+        let logits: Vec<f32> = (0..t * v).map(|i| (i as f32) * 0.1).collect();
+        let targets = vec![1i32, 2, 3];
+        let mask = vec![1.0f32, 0.0, 1.0];
+        let mut stale = vec![9.9f32; t * v];
+        let mut parts = vec![0.0f64; cross_entropy_chunks(t)];
+        let l1 = cross_entropy_into(&logits, v, &targets, &mask, 1, &mut stale, &mut parts);
+        let (l2, fresh) = cross_entropy(&logits, v, &targets, &mask, 1);
+        assert_eq!(l1, l2);
+        assert_eq!(stale, fresh);
     }
 
     #[test]

@@ -30,6 +30,8 @@
 //! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
 //! | [`packing`] | pack()/unpack(), position indices, the packers for all three batching schemes |
 //! | [`backend`] | the `Backend` trait + `NativeBackend` (packed conv1d + selective scan fwd/bwd, AdamW) + PJRT backend (feature `pjrt`) |
+//! | [`backend::gemm`] | the blocked, register-tiled GEMM micro-kernel (B-panel packing, MC/KC blocking, beta-accumulate) behind `ops::matmul*` |
+//! | [`backend::arena`] | `StepArena` — recycled step buffers + GEMM scratch; steady-state training steps allocate nothing |
 //! | [`runtime`] | artifact manifest + host values; PJRT client wrapper behind the `pjrt` feature |
 //! | [`coordinator`] | trainer, schemes, data-parallel leader, metrics, checkpoints |
 //! | [`perfmodel`] | analytic A100 model reproducing the paper-scale figure shapes |

@@ -148,7 +148,10 @@ impl Drop for ThreadPool {
 }
 
 /// Scatter `items` across `n` threads with `f(index, item)`, preserving
-/// output order — the host-side all-reduce and packer benches use this.
+/// output order.  General-purpose collect-style primitive; the native
+/// kernels' per-channel reductions moved off it onto
+/// [`parallel_chunks_mut`] packed column buffers (no per-task `Vec`s),
+/// but it remains the right tool for heterogeneous one-shot work.
 pub fn parallel_map<T, U, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<U>
 where
     T: Send,
@@ -201,13 +204,64 @@ where
         }
         return;
     }
+    let tasks = out.len().div_ceil(chunk);
     let work = Mutex::new(out.chunks_mut(chunk).enumerate());
     std::thread::scope(|scope| {
-        for _ in 0..n_threads {
+        for _ in 0..n_threads.min(tasks) {
             scope.spawn(|| loop {
                 let job = work.lock().unwrap().next();
                 match job {
                     Some((i, c)) => f(i, c),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Like [`parallel_chunks_mut`], but hands each task a *pair* of chunks,
+/// one from each buffer: chunk `i` of `x` (size `cx`) together with chunk
+/// `i` of `y` (size `cy`).  Both buffers must split into the same number
+/// of chunks.
+///
+/// This is the primitive behind the zero-allocation hot path: a task can
+/// fill its slice of a shared output *and* use (or fill) a disjoint slice
+/// of a second buffer — per-panel packing scratch in the blocked GEMM,
+/// per-chunk f64 loss partials in the cross-entropy head — without any
+/// per-task heap allocation.  The same fixed intra-chunk order keeps
+/// results independent of thread count.
+pub fn parallel_chunks2_mut<T, U, F>(
+    x: &mut [T],
+    cx: usize,
+    y: &mut [U],
+    cy: usize,
+    n_threads: usize,
+    f: F,
+) where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    assert!(cx > 0 && cy > 0, "chunk sizes must be positive");
+    assert_eq!(
+        x.len().div_ceil(cx),
+        y.len().div_ceil(cy),
+        "buffers must split into the same number of chunks"
+    );
+    if n_threads <= 1 || x.len() <= cx {
+        for (i, (a, b)) in x.chunks_mut(cx).zip(y.chunks_mut(cy)).enumerate() {
+            f(i, a, b);
+        }
+        return;
+    }
+    let tasks = x.len().div_ceil(cx);
+    let work = Mutex::new(x.chunks_mut(cx).zip(y.chunks_mut(cy)).enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads.min(tasks) {
+            scope.spawn(|| loop {
+                let job = work.lock().unwrap().next();
+                match job {
+                    Some((i, (a, b))) => f(i, a, b),
                     None => break,
                 }
             });
@@ -317,6 +371,30 @@ mod tests {
         let mut out = vec![0u32; 8];
         parallel_chunks_mut(&mut out, 3, 1, |i, c| c.iter_mut().for_each(|v| *v = i as u32));
         assert_eq!(out, vec![0, 0, 0, 1, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn parallel_chunks2_mut_pairs_line_up() {
+        let mut big = vec![0u32; 100];
+        let mut small = vec![0u32; 10];
+        parallel_chunks2_mut(&mut big, 10, &mut small, 1, 4, |i, a, b| {
+            for v in a.iter_mut() {
+                *v = i as u32;
+            }
+            b[0] = (i * i) as u32;
+        });
+        for (i, c) in big.chunks(10).enumerate() {
+            assert!(c.iter().all(|&v| v == i as u32));
+        }
+        assert_eq!(small, (0..10).map(|i| (i * i) as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "same number of chunks")]
+    fn parallel_chunks2_mut_rejects_mismatched_chunking() {
+        let mut a = vec![0u32; 10];
+        let mut b = vec![0u32; 3];
+        parallel_chunks2_mut(&mut a, 5, &mut b, 1, 2, |_, _, _| {});
     }
 
     #[test]
