@@ -34,11 +34,11 @@ fn main() {
         let mut p = StreamingPacker::new(4096, 1);
         let mut rows = 0usize;
         for s in &seqs {
-            if let Some(b) = p.push(s.clone()) {
+            for b in p.push(s.clone()) {
                 rows += b.rows();
             }
         }
-        if let Some(b) = p.flush() {
+        for b in p.flush() {
             rows += b.rows();
         }
         std::hint::black_box(rows);
@@ -50,11 +50,11 @@ fn main() {
         let mut p = GreedyPacker::new(4096, 1, 256);
         let mut rows = 0usize;
         for s in &seqs {
-            if let Some(b) = p.push(s.clone()) {
+            for b in p.push(s.clone()) {
                 rows += b.rows();
             }
         }
-        while let Some(b) = p.flush() {
+        for b in p.flush() {
             rows += b.rows();
         }
         std::hint::black_box(rows);

@@ -66,11 +66,11 @@ fn main() {
     let mut st = PackingStats::default();
     let mut p = StreamingPacker::new(4096, 1);
     for s in &seqs {
-        if let Some(b) = p.push(s.clone()) {
+        for b in p.push(s.clone()) {
             st.record(&b);
         }
     }
-    if let Some(b) = p.flush() {
+    for b in p.flush() {
         st.record(&b);
     }
     record("streaming first-fit", st.padding_rate(), "19.1%", t0.elapsed().as_secs_f64());
@@ -81,11 +81,11 @@ fn main() {
         let mut gs = PackingStats::default();
         let mut g = GreedyPacker::new(4096, 1, buf);
         for s in &seqs {
-            if let Some(b) = g.push(s.clone()) {
+            for b in g.push(s.clone()) {
                 gs.record(&b);
             }
         }
-        while let Some(b) = g.flush() {
+        for b in g.flush() {
             gs.record(&b);
         }
         record(

@@ -43,11 +43,11 @@ fn main() -> anyhow::Result<()> {
     let mut stream = PackingStats::default();
     let mut p = StreamingPacker::new(4096, 1);
     for s in &seqs {
-        if let Some(b) = p.push(s.clone()) {
+        for b in p.push(s.clone()) {
             stream.record(&b);
         }
     }
-    if let Some(b) = p.flush() {
+    for b in p.flush() {
         stream.record(&b);
     }
     println!("\n{:<34} {:>10} {:>8}", "scheme", "padding", "paper");
@@ -67,11 +67,11 @@ fn main() -> anyhow::Result<()> {
         let mut st = PackingStats::default();
         let mut g = GreedyPacker::new(4096, 1, buf);
         for s in &seqs {
-            if let Some(b) = g.push(s.clone()) {
+            for b in g.push(s.clone()) {
                 st.record(&b);
             }
         }
-        while let Some(b) = g.flush() {
+        for b in g.flush() {
             st.record(&b);
         }
         println!(

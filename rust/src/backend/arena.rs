@@ -66,6 +66,14 @@ impl StepArena {
         self.free.entry(v.len()).or_default().push(v);
     }
 
+    /// Return a collection of buffers (e.g. a `ChunkState`'s per-layer
+    /// carries) to the arena.
+    pub fn put_all(&mut self, vs: impl IntoIterator<Item = Vec<f32>>) {
+        for v in vs {
+            self.put(v);
+        }
+    }
+
     /// `(takes, recycle_hits)` since construction — warmup diagnostics.
     pub fn stats(&self) -> (usize, usize) {
         (self.taken, self.recycled)

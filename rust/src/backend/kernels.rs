@@ -96,6 +96,77 @@ pub fn conv1d_packed_fwd_into(
     });
 }
 
+/// Packed causal depthwise conv1d forward **with cross-chunk carry**
+/// (paper §5), into `y` and `tail_out`.
+///
+/// `tail` holds the previous chunk's final `W-1` conv *inputs* per lane,
+/// `(B, D, W-1)` lane-major: `tail[lane][k]` is the input at stream
+/// offset `k - (W-1)` relative to this chunk's first slot.  A tap that
+/// reaches past the chunk start reads the tail; the same `pos >= shift`
+/// guard that isolates packed neighbours admits the tail exactly when
+/// this chunk *continues* a sequence deep enough — a fresh start
+/// (`pos == 0`) masks the carry out entirely, so chunk-boundary carry
+/// and sequence-boundary isolation compose.  `tail_out` receives this
+/// chunk's own final `W-1` inputs (falling back to carried slots when
+/// `L < W-1`), ready to be the next chunk's `tail`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_packed_fwd_carry_into(
+    x: &[f32],
+    dims: Dims,
+    w: &[f32],
+    wlen: usize,
+    bias: &[f32],
+    pos: &[i32],
+    tail: &[f32],
+    threads: usize,
+    y: &mut [f32],
+    tail_out: &mut [f32],
+) {
+    let Dims { b, l, d, .. } = dims;
+    let tw = wlen - 1;
+    assert_eq!(x.len(), b * d * l);
+    assert_eq!(w.len(), wlen * d);
+    assert_eq!(bias.len(), d);
+    assert_eq!(pos.len(), b * l);
+    assert_eq!(tail.len(), b * d * tw);
+    assert_eq!(y.len(), b * d * l);
+    assert_eq!(tail_out.len(), b * d * tw);
+    let threads = lane_threads(dims, wlen, threads);
+    parallel_chunks_mut(y, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let trow = &tail[lane * tw..(lane + 1) * tw];
+        let prow = &pos[bi * l..(bi + 1) * l];
+        let bc = bias[c];
+        for t in 0..l {
+            let mut acc = bc;
+            for j in 0..wlen {
+                let shift = wlen - 1 - j;
+                if prow[t] >= shift as i32 {
+                    let xv = if t >= shift {
+                        xrow[t - shift]
+                    } else {
+                        // stream offset t - shift < 0 lands in the tail
+                        trow[tw + t - shift]
+                    };
+                    acc += w[j * d + c] * xv;
+                }
+            }
+            out[t] = acc;
+        }
+    });
+    // Carry-out: the stream's last W-1 inputs per lane (cheap; serial).
+    for lane in 0..b * d {
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let trow = &tail[lane * tw..(lane + 1) * tw];
+        let orow = &mut tail_out[lane * tw..(lane + 1) * tw];
+        for (m, o) in orow.iter_mut().enumerate() {
+            // outgoing slot m sits at stream offset l - (W-1) + m
+            *o = if l + m >= tw { xrow[l + m - tw] } else { trow[l + m] };
+        }
+    }
+}
+
 /// Packed causal depthwise conv1d forward; returns `y` channel-major.
 pub fn conv1d_packed_fwd(
     x: &[f32],
@@ -207,6 +278,131 @@ pub fn conv1d_packed_bwd(
         x, dims, w, wlen, pos, dy, threads, &mut dx, &mut dw, &mut db, &mut colbuf,
     );
     (dx, dw, db)
+}
+
+/// Packed conv1d backward **with cross-chunk carry**, into caller
+/// buffers.
+///
+/// Extends [`conv1d_packed_bwd_into`] with the two carry adjoints: taps
+/// that read the incoming `tail` route their input-gradient into
+/// `dtail_out` (this chunk's gradient w.r.t. the *previous* chunk's
+/// final inputs, to be consumed by that chunk's backward), and
+/// `dtail_next` — the next chunk's `dtail_out` — folds into `dx` on the
+/// slots that formed this chunk's outgoing tail (passing through to
+/// `dtail_out` when `L < W-1`).  `dw_acc`/`db_acc` accumulate; `dx` and
+/// `dtail_out` are fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_packed_bwd_carry_into(
+    x: &[f32],
+    dims: Dims,
+    w: &[f32],
+    wlen: usize,
+    pos: &[i32],
+    tail: &[f32],
+    dy: &[f32],
+    dtail_next: &[f32],
+    threads: usize,
+    dx: &mut [f32],
+    dw_acc: &mut [f32],
+    db_acc: &mut [f32],
+    dtail_out: &mut [f32],
+    colbuf: &mut [f32],
+) {
+    let Dims { b, l, d, .. } = dims;
+    let tw = wlen - 1;
+    assert_eq!(x.len(), b * d * l);
+    assert_eq!(dy.len(), b * d * l);
+    assert_eq!(dx.len(), b * d * l);
+    assert_eq!(tail.len(), b * d * tw);
+    assert_eq!(dtail_next.len(), b * d * tw);
+    assert_eq!(dtail_out.len(), b * d * tw);
+    assert_eq!(dw_acc.len(), wlen * d);
+    assert_eq!(db_acc.len(), d);
+    assert_eq!(colbuf.len(), d * (wlen + 1));
+    let threads = lane_threads(dims, wlen, threads);
+
+    // dx: in-chunk tap gather, plus the outgoing-tail adjoint on the
+    // final W-1 slots (x[t] is also carry-out slot t - (l - (W-1))).
+    parallel_chunks_mut(dx, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let gyrow = &dy[lane * l..(lane + 1) * l];
+        let dtrow = &dtail_next[lane * tw..(lane + 1) * tw];
+        let prow = &pos[bi * l..(bi + 1) * l];
+        for tp in 0..l {
+            let mut acc = 0.0f32;
+            for shift in 0..wlen {
+                let t = tp + shift;
+                if t < l && prow[t] >= shift as i32 {
+                    acc += w[(wlen - 1 - shift) * d + c] * gyrow[t];
+                }
+            }
+            if tp + tw >= l {
+                acc += dtrow[tp + tw - l];
+            }
+            out[tp] = acc;
+        }
+    });
+
+    // dtail_out: gradient w.r.t. the incoming tail — outputs t read tail
+    // slot k via shift = t + (W-1) - k — plus the pass-through of
+    // surviving slots when the chunk is shorter than the window.
+    for lane in 0..b * d {
+        let (bi, c) = (lane / d, lane % d);
+        let gyrow = &dy[lane * l..(lane + 1) * l];
+        let dtrow = &dtail_next[lane * tw..(lane + 1) * tw];
+        let prow = &pos[bi * l..(bi + 1) * l];
+        let orow = &mut dtail_out[lane * tw..(lane + 1) * tw];
+        for (k, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for t in 0..l.min(k + 1) {
+                let shift = t + tw - k;
+                if prow[t] >= shift as i32 {
+                    acc += w[(wlen - 1 - shift) * d + c] * gyrow[t];
+                }
+            }
+            if k >= l {
+                acc += dtrow[k - l];
+            }
+            *o = acc;
+        }
+    }
+
+    // dw / dbias: as the plain backward, with tail-sourced taps included.
+    parallel_chunks_mut(colbuf, wlen + 1, threads, |c, slot| {
+        slot.iter_mut().for_each(|v| *v = 0.0);
+        let (dwc, dbc) = slot.split_at_mut(wlen);
+        for bi in 0..b {
+            let lane = bi * d + c;
+            let xrow = &x[lane * l..(lane + 1) * l];
+            let trow = &tail[lane * tw..(lane + 1) * tw];
+            let gyrow = &dy[lane * l..(lane + 1) * l];
+            let prow = &pos[bi * l..(bi + 1) * l];
+            for t in 0..l {
+                let g = gyrow[t];
+                dbc[0] += g;
+                if g != 0.0 {
+                    for j in 0..wlen {
+                        let shift = wlen - 1 - j;
+                        if prow[t] >= shift as i32 {
+                            let xv = if t >= shift {
+                                xrow[t - shift]
+                            } else {
+                                trow[tw + t - shift]
+                            };
+                            dwc[j] += g * xv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    for c in 0..d {
+        let slot = &colbuf[c * (wlen + 1)..(c + 1) * (wlen + 1)];
+        for j in 0..wlen {
+            dw_acc[j * d + c] += slot[j];
+        }
+        db_acc[c] += slot[wlen];
+    }
 }
 
 /// State history the scan forward caches for its backward.
@@ -342,6 +538,115 @@ pub fn ssm_packed_fwd(
         x, dt, a, bm, cm, dvec, pos, dims, threads, &mut y, &mut hist, &mut am,
     );
     (y, ScanCache { hist, am })
+}
+
+/// Packed selective scan forward **with cross-chunk carry** (paper §5),
+/// into caller buffers.
+///
+/// `h0` is the SSM state at the previous chunk's final slot, `(B, D, N)`
+/// lane-major; the recurrence's first step reads it through the masked
+/// decay `Ā_0` — at a fresh sequence start (`pos == 0`) `Ā` is zero, so
+/// the carry is discarded by the same mask that isolates packed
+/// neighbours.  `h_out` receives this chunk's final-slot state, ready to
+/// be the next chunk's `h0`.
+#[allow(clippy::too_many_arguments)]
+pub fn ssm_packed_fwd_carry_into(
+    x: &[f32],
+    dt: &[f32],
+    a: &[f32],
+    bm: &[f32],
+    cm: &[f32],
+    dvec: &[f32],
+    pos: &[i32],
+    dims: Dims,
+    h0: &[f32],
+    threads: usize,
+    y: &mut [f32],
+    hist: &mut [f32],
+    am: &mut [f32],
+    h_out: &mut [f32],
+) {
+    let Dims { b, l, d, n } = dims;
+    assert_eq!(x.len(), b * d * l);
+    assert_eq!(dt.len(), b * d * l);
+    assert_eq!(a.len(), d * n);
+    assert_eq!(bm.len(), b * l * n);
+    assert_eq!(cm.len(), b * l * n);
+    assert_eq!(dvec.len(), d);
+    assert_eq!(pos.len(), b * l);
+    assert_eq!(h0.len(), b * d * n);
+    assert_eq!(y.len(), b * d * l);
+    assert_eq!(hist.len(), b * d * l * n);
+    assert_eq!(am.len(), b * d * l * n);
+    assert_eq!(h_out.len(), b * d * n);
+    let threads = lane_threads(dims, 4 * n, threads);
+
+    // Pass 1a: the masked decay Ā — identical to the carry-free form.
+    parallel_chunks_mut(am, l * n, threads, |lane, amc| {
+        let (bi, c) = (lane / d, lane % d);
+        let dtrow = &dt[lane * l..(lane + 1) * l];
+        let arow = &a[c * n..(c + 1) * n];
+        let prow = &pos[bi * l..(bi + 1) * l];
+        for t in 0..l {
+            let slot = &mut amc[t * n..(t + 1) * n];
+            if prow[t] == 0 {
+                slot.iter_mut().for_each(|v| *v = 0.0);
+            } else {
+                let dtv = dtrow[t];
+                for (sv, &av) in slot.iter_mut().zip(arow) {
+                    *sv = (dtv * av).exp();
+                }
+            }
+        }
+    });
+
+    // Pass 1b: recurrence with h_{-1} = h0 (Ā_0 already carries the
+    // fresh-start mask, so a pos==0 chunk ignores the carry).
+    let am_ref = &*am;
+    parallel_chunks_mut(hist, l * n, threads, |lane, hc| {
+        let bi = lane / d;
+        let dtrow = &dt[lane * l..(lane + 1) * l];
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let amc = &am_ref[lane * l * n..(lane + 1) * l * n];
+        let bmb = &bm[bi * l * n..(bi + 1) * l * n];
+        let h0c = &h0[lane * n..(lane + 1) * n];
+        for t in 0..l {
+            let dx_t = dtrow[t] * xrow[t];
+            let brow = &bmb[t * n..(t + 1) * n];
+            let arow = &amc[t * n..(t + 1) * n];
+            let (done, rest) = hc.split_at_mut(t * n);
+            let hrow = &mut rest[..n];
+            let hprev: &[f32] = if t == 0 { h0c } else { &done[(t - 1) * n..] };
+            for nn in 0..n {
+                hrow[nn] = arow[nn] * hprev[nn] + dx_t * brow[nn];
+            }
+        }
+    });
+
+    // Pass 2: y_t = C_t · h_t + D x_t — identical to the carry-free form.
+    let hist_ref = &*hist;
+    parallel_chunks_mut(y, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let hc = &hist_ref[lane * l * n..(lane + 1) * l * n];
+        let cmb = &cm[bi * l * n..(bi + 1) * l * n];
+        let dv = dvec[c];
+        for t in 0..l {
+            let crow = &cmb[t * n..(t + 1) * n];
+            let hrow = &hc[t * n..(t + 1) * n];
+            let mut acc = dv * xrow[t];
+            for nn in 0..n {
+                acc += crow[nn] * hrow[nn];
+            }
+            out[t] = acc;
+        }
+    });
+
+    // Carry-out: the final slot's state per lane.
+    for lane in 0..b * d {
+        let src = &hist_ref[(lane * l + (l - 1)) * n..(lane * l + l) * n];
+        h_out[lane * n..(lane + 1) * n].copy_from_slice(src);
+    }
 }
 
 /// Forward-only packed selective scan: same semantics as
@@ -663,6 +968,201 @@ pub fn ssm_packed_bwd(
     );
     gr
 }
+
+/// Packed selective scan backward **with cross-chunk carry**, into
+/// caller buffers.
+///
+/// Extends [`ssm_packed_bwd_into`] with the state adjoints: `h0` is the
+/// carry-in the forward consumed (`(B, D, N)`), `dh_next` is the
+/// downstream gradient w.r.t. this chunk's carry-out state (the next
+/// chunk's `dh0`; zeros for the stream's final chunk) — it seeds the
+/// reverse scan at `t = L-1` — and `dh0` receives the gradient w.r.t.
+/// `h0` (`Ā_0 ⊙ g_0`, so nothing flows past a fresh `pos == 0` start).
+/// The `t == 0` decay terms of `ddt`/`dA` read `h0` instead of zero.
+#[allow(clippy::too_many_arguments)]
+pub fn ssm_packed_bwd_carry_into(
+    x: &[f32],
+    dt: &[f32],
+    a: &[f32],
+    bm: &[f32],
+    cm: &[f32],
+    dvec: &[f32],
+    hist: &[f32],
+    am: &[f32],
+    dy: &[f32],
+    dims: Dims,
+    h0: &[f32],
+    dh_next: &[f32],
+    threads: usize,
+    out: SsmGradsMut<'_>,
+    dh0: &mut [f32],
+    g: &mut [f32],
+    colbuf: &mut [f32],
+) {
+    let Dims { b, l, d, n } = dims;
+    assert_eq!(dy.len(), b * d * l);
+    assert_eq!(hist.len(), b * d * l * n);
+    assert_eq!(am.len(), b * d * l * n);
+    assert_eq!(h0.len(), b * d * n);
+    assert_eq!(dh_next.len(), b * d * n);
+    assert_eq!(dh0.len(), b * d * n);
+    assert_eq!(g.len(), b * d * l * n);
+    assert_eq!(colbuf.len(), d * (n + 1));
+    assert_eq!(out.dx.len(), b * d * l);
+    assert_eq!(out.ddt.len(), b * d * l);
+    assert_eq!(out.da.len(), d * n);
+    assert_eq!(out.dbm.len(), b * l * n);
+    assert_eq!(out.dcm.len(), b * l * n);
+    assert_eq!(out.dd.len(), d);
+    let threads = lane_threads(dims, 8 * n, threads);
+
+    // Pass 1: reverse scan for g = dL/dh, seeded with the carry-out
+    // adjoint (h_{L-1} is the carry-out, so dh_next adds to g_{L-1}).
+    parallel_chunks_mut(g, l * n, threads, |lane, gc| {
+        let bi = lane / d;
+        let gyrow = &dy[lane * l..(lane + 1) * l];
+        let amc = &am[lane * l * n..(lane + 1) * l * n];
+        let cmb = &cm[bi * l * n..(bi + 1) * l * n];
+        let dhn = &dh_next[lane * n..(lane + 1) * n];
+        for t in (0..l).rev() {
+            let gy = gyrow[t];
+            let crow = &cmb[t * n..(t + 1) * n];
+            let (cur, done) = gc.split_at_mut((t + 1) * n);
+            let grow = &mut cur[t * n..];
+            if t + 1 == l {
+                for nn in 0..n {
+                    grow[nn] = gy * crow[nn] + dhn[nn];
+                }
+            } else {
+                let gnext = &done[..n];
+                let anext = &amc[(t + 1) * n..(t + 2) * n];
+                for nn in 0..n {
+                    grow[nn] = gy * crow[nn] + anext[nn] * gnext[nn];
+                }
+            }
+        }
+    });
+    let g_ref = &*g;
+
+    // Carry-in adjoint: dh0 = Ā_0 ⊙ g_0 (the mask inside Ā keeps fresh
+    // starts from leaking gradient into the previous chunk).
+    for lane in 0..b * d {
+        let amc = &am[lane * l * n..lane * l * n + n];
+        let g0 = &g_ref[lane * l * n..lane * l * n + n];
+        let orow = &mut dh0[lane * n..(lane + 1) * n];
+        for nn in 0..n {
+            orow[nn] = amc[nn] * g0[nn];
+        }
+    }
+
+    // Pass 2: dx_t = D·dy_t + Σ_n g_t Δ_t B_t — unchanged.
+    parallel_chunks_mut(out.dx, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let gyrow = &dy[lane * l..(lane + 1) * l];
+        let dtrow = &dt[lane * l..(lane + 1) * l];
+        let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
+        let bmb = &bm[bi * l * n..(bi + 1) * l * n];
+        let dv = dvec[c];
+        for t in 0..l {
+            let brow = &bmb[t * n..(t + 1) * n];
+            let grow = &gc[t * n..(t + 1) * n];
+            let mut dot = 0.0f32;
+            for nn in 0..n {
+                dot += grow[nn] * brow[nn];
+            }
+            out[t] = dv * gyrow[t] + dot * dtrow[t];
+        }
+    });
+
+    // Pass 3: ddt — the t == 0 decay term reads h0 (zero without carry).
+    parallel_chunks_mut(out.ddt, l, threads, |lane, out| {
+        let (bi, c) = (lane / d, lane % d);
+        let xrow = &x[lane * l..(lane + 1) * l];
+        let arow = &a[c * n..(c + 1) * n];
+        let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
+        let hc = &hist[lane * l * n..(lane + 1) * l * n];
+        let amc = &am[lane * l * n..(lane + 1) * l * n];
+        let bmb = &bm[bi * l * n..(bi + 1) * l * n];
+        let h0c = &h0[lane * n..(lane + 1) * n];
+        for t in 0..l {
+            let brow = &bmb[t * n..(t + 1) * n];
+            let grow = &gc[t * n..(t + 1) * n];
+            let arow_m = &amc[t * n..(t + 1) * n];
+            let hprev: &[f32] = if t > 0 { &hc[(t - 1) * n..t * n] } else { h0c };
+            let mut acc = 0.0f32;
+            for nn in 0..n {
+                acc += grow[nn] * hprev[nn] * arow[nn] * arow_m[nn];
+            }
+            let mut dot = 0.0f32;
+            for nn in 0..n {
+                dot += grow[nn] * brow[nn];
+            }
+            out[t] = acc + dot * xrow[t];
+        }
+    });
+
+    // Pass 4: dA / dD reductions — t == 0 reads h0 as well.
+    parallel_chunks_mut(colbuf, n + 1, threads, |c, slot| {
+        slot.iter_mut().for_each(|v| *v = 0.0);
+        let (dac, ddc) = slot.split_at_mut(n);
+        for bi in 0..b {
+            let lane = bi * d + c;
+            let xrow = &x[lane * l..(lane + 1) * l];
+            let dtrow = &dt[lane * l..(lane + 1) * l];
+            let gyrow = &dy[lane * l..(lane + 1) * l];
+            let gc = &g_ref[lane * l * n..(lane + 1) * l * n];
+            let hc = &hist[lane * l * n..(lane + 1) * l * n];
+            let amc = &am[lane * l * n..(lane + 1) * l * n];
+            let h0c = &h0[lane * n..(lane + 1) * n];
+            for t in 0..l {
+                ddc[0] += gyrow[t] * xrow[t];
+                let grow = &gc[t * n..(t + 1) * n];
+                let arow_m = &amc[t * n..(t + 1) * n];
+                let hprev: &[f32] = if t > 0 { &hc[(t - 1) * n..t * n] } else { h0c };
+                let dtv = dtrow[t];
+                for nn in 0..n {
+                    dac[nn] += grow[nn] * hprev[nn] * dtv * arow_m[nn];
+                }
+            }
+        }
+    });
+    for c in 0..d {
+        let slot = &colbuf[c * (n + 1)..(c + 1) * (n + 1)];
+        out.da[c * n..(c + 1) * n].copy_from_slice(&slot[..n]);
+        out.dd[c] = slot[n];
+    }
+
+    // Pass 5: dB / dC — unchanged.
+    parallel_chunks_mut(out.dbm, n, threads, |slot, out| {
+        let (bi, t) = (slot / l, slot % l);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for c in 0..d {
+            let lane = bi * d + c;
+            let w = dt[lane * l + t] * x[lane * l + t];
+            if w != 0.0 {
+                let grow = &g_ref[(lane * l + t) * n..(lane * l + t + 1) * n];
+                for nn in 0..n {
+                    out[nn] += grow[nn] * w;
+                }
+            }
+        }
+    });
+    parallel_chunks_mut(out.dcm, n, threads, |slot, out| {
+        let (bi, t) = (slot / l, slot % l);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for c in 0..d {
+            let lane = bi * d + c;
+            let gy = dy[lane * l + t];
+            if gy != 0.0 {
+                let hrow = &hist[(lane * l + t) * n..(lane * l + t + 1) * n];
+                for nn in 0..n {
+                    out[nn] += gy * hrow[nn];
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -915,6 +1415,341 @@ mod tests {
         check("dbm", &bm, &gr.dbm, &|v| obj(&x, &dt, &a, v, &cm, &dvec));
         check("dcm", &cm, &gr.dcm, &|v| obj(&x, &dt, &a, &bm, v, &dvec));
         check("dd", &dvec, &gr.dd, &|v| obj(&x, &dt, &a, &bm, &cm, v));
+    }
+
+    /// Gather chunk `[c0, c1)` of a channel-major `(1, D, L)` plane.
+    fn slice_cm(x: &[f32], d: usize, l: usize, c0: usize, c1: usize) -> Vec<f32> {
+        let cl = c1 - c0;
+        let mut out = vec![0.0f32; d * cl];
+        for c in 0..d {
+            out[c * cl..(c + 1) * cl].copy_from_slice(&x[c * l + c0..c * l + c1]);
+        }
+        out
+    }
+
+    /// Scatter chunk `[c0, c1)` back into a channel-major `(1, D, L)` plane.
+    fn unslice_cm(dst: &mut [f32], chunk: &[f32], d: usize, l: usize, c0: usize, c1: usize) {
+        let cl = c1 - c0;
+        for c in 0..d {
+            dst[c * l + c0..c * l + c1].copy_from_slice(&chunk[c * cl..(c + 1) * cl]);
+        }
+    }
+
+    const CHUNK_CUTS: [usize; 5] = [0, 5, 6, 13, 20];
+
+    #[test]
+    fn conv_carry_chunks_match_monolithic() {
+        // Chunked conv with tail carry over cuts {5,1,7,7} (including a
+        // length-1 chunk) must reproduce the monolithic packed conv —
+        // forward and backward — on a row with interior sequence starts.
+        let (l, d, wlen) = (20usize, 3usize, 4usize);
+        let tw = wlen - 1;
+        let lens = [8usize, 7, 5];
+        let pos = position_indices(&lens, l);
+        let mut rng = Pcg64::new(21, 0);
+        let x = randv(&mut rng, d * l, 1.5);
+        let w = randv(&mut rng, wlen * d, 1.0);
+        let bias = randv(&mut rng, d, 1.0);
+        let gy = randv(&mut rng, d * l, 1.0);
+        let dims = Dims { b: 1, l, d, n: 1 };
+        let y_full = conv1d_packed_fwd(&x, dims, &w, wlen, &bias, &pos, 1);
+        let (dx_full, dw_full, db_full) = conv1d_packed_bwd(&x, dims, &w, wlen, &pos, &gy, 1);
+
+        // forward over chunks, saving each chunk's carry-in tail
+        let mut y_chunked = vec![0.0f32; d * l];
+        let mut tails: Vec<Vec<f32>> = vec![vec![0.0f32; d * tw]];
+        for win in CHUNK_CUTS.windows(2) {
+            let (c0, c1) = (win[0], win[1]);
+            let cl = c1 - c0;
+            let cdims = Dims { b: 1, l: cl, d, n: 1 };
+            let xc = slice_cm(&x, d, l, c0, c1);
+            let mut yc = vec![0.0f32; d * cl];
+            let mut tail_out = vec![0.0f32; d * tw];
+            conv1d_packed_fwd_carry_into(
+                &xc,
+                cdims,
+                &w,
+                wlen,
+                &bias,
+                &pos[c0..c1],
+                tails.last().unwrap(),
+                1,
+                &mut yc,
+                &mut tail_out,
+            );
+            unslice_cm(&mut y_chunked, &yc, d, l, c0, c1);
+            tails.push(tail_out);
+        }
+        for (a, b) in y_full.iter().zip(&y_chunked) {
+            assert!((a - b).abs() < 1e-6, "fwd {a} vs {b}");
+        }
+
+        // backward over chunks in reverse, carrying the tail adjoint
+        let mut dx_chunked = vec![0.0f32; d * l];
+        let mut dw_acc = vec![0.0f32; wlen * d];
+        let mut db_acc = vec![0.0f32; d];
+        let mut dtail_next = vec![0.0f32; d * tw];
+        for (k, win) in CHUNK_CUTS.windows(2).enumerate().rev() {
+            let (c0, c1) = (win[0], win[1]);
+            let cl = c1 - c0;
+            let cdims = Dims { b: 1, l: cl, d, n: 1 };
+            let xc = slice_cm(&x, d, l, c0, c1);
+            let gyc = slice_cm(&gy, d, l, c0, c1);
+            let mut dxc = vec![0.0f32; d * cl];
+            let mut dtail_out = vec![0.0f32; d * tw];
+            let mut colbuf = vec![0.0f32; d * (wlen + 1)];
+            conv1d_packed_bwd_carry_into(
+                &xc,
+                cdims,
+                &w,
+                wlen,
+                &pos[c0..c1],
+                &tails[k],
+                &gyc,
+                &dtail_next,
+                1,
+                &mut dxc,
+                &mut dw_acc,
+                &mut db_acc,
+                &mut dtail_out,
+                &mut colbuf,
+            );
+            unslice_cm(&mut dx_chunked, &dxc, d, l, c0, c1);
+            dtail_next = dtail_out;
+        }
+        for (a, b) in dx_full.iter().zip(&dx_chunked) {
+            assert!((a - b).abs() < 1e-5, "dx {a} vs {b}");
+        }
+        for (a, b) in dw_full.iter().zip(&dw_acc) {
+            assert!((a - b).abs() < 1e-5, "dw {a} vs {b}");
+        }
+        for (a, b) in db_full.iter().zip(&db_acc) {
+            assert!((a - b).abs() < 1e-5, "db {a} vs {b}");
+        }
+        // the stream starts fresh: no gradient may leak before it
+        assert!(dtail_next.iter().all(|&v| v == 0.0), "{dtail_next:?}");
+    }
+
+    #[test]
+    fn scan_carry_chunks_match_monolithic() {
+        // Same cuts for the selective scan: state carry forward, g-seed
+        // + h0-read backward must reproduce the monolithic gradients.
+        let (l, d, n) = (20usize, 2usize, 3usize);
+        let lens = [8usize, 7, 5];
+        let pos = position_indices(&lens, l);
+        let mut rng = Pcg64::new(23, 0);
+        let x = randv(&mut rng, d * l, 1.0);
+        let dt: Vec<f32> = randv(&mut rng, d * l, 1.0)
+            .into_iter()
+            .map(|v| v.abs() + 0.05)
+            .collect();
+        let a: Vec<f32> = randv(&mut rng, d * n, 1.0)
+            .into_iter()
+            .map(|v| -(v.abs() + 0.1))
+            .collect();
+        let bm = randv(&mut rng, l * n, 1.0);
+        let cm = randv(&mut rng, l * n, 1.0);
+        let dvec = randv(&mut rng, d, 1.0);
+        let gy = randv(&mut rng, d * l, 1.0);
+        let dims = Dims { b: 1, l, d, n };
+        let (y_full, cache) = ssm_packed_fwd(&x, &dt, &a, &bm, &cm, &dvec, &pos, dims, 1);
+        let gr_full = ssm_packed_bwd(&x, &dt, &a, &bm, &cm, &dvec, &cache, &gy, dims, 1);
+
+        // forward over chunks, saving carry-in states and chunk caches
+        let mut y_chunked = vec![0.0f32; d * l];
+        let mut states: Vec<Vec<f32>> = vec![vec![0.0f32; d * n]];
+        let mut hists: Vec<Vec<f32>> = Vec::new();
+        let mut ams: Vec<Vec<f32>> = Vec::new();
+        for win in CHUNK_CUTS.windows(2) {
+            let (c0, c1) = (win[0], win[1]);
+            let cl = c1 - c0;
+            let cdims = Dims { b: 1, l: cl, d, n };
+            let xc = slice_cm(&x, d, l, c0, c1);
+            let dtc = slice_cm(&dt, d, l, c0, c1);
+            let mut yc = vec![0.0f32; d * cl];
+            let mut hist = vec![0.0f32; d * cl * n];
+            let mut am = vec![0.0f32; d * cl * n];
+            let mut h_out = vec![0.0f32; d * n];
+            ssm_packed_fwd_carry_into(
+                &xc,
+                &dtc,
+                &a,
+                &bm[c0 * n..c1 * n],
+                &cm[c0 * n..c1 * n],
+                &dvec,
+                &pos[c0..c1],
+                cdims,
+                states.last().unwrap(),
+                1,
+                &mut yc,
+                &mut hist,
+                &mut am,
+                &mut h_out,
+            );
+            unslice_cm(&mut y_chunked, &yc, d, l, c0, c1);
+            states.push(h_out);
+            hists.push(hist);
+            ams.push(am);
+        }
+        for (a1, b1) in y_full.iter().zip(&y_chunked) {
+            assert!((a1 - b1).abs() < 1e-6, "fwd {a1} vs {b1}");
+        }
+
+        // backward over chunks in reverse, carrying the state adjoint
+        let mut dx_c = vec![0.0f32; d * l];
+        let mut ddt_c = vec![0.0f32; d * l];
+        let mut da_c = vec![0.0f32; d * n];
+        let mut dbm_c = vec![0.0f32; l * n];
+        let mut dcm_c = vec![0.0f32; l * n];
+        let mut dd_c = vec![0.0f32; d];
+        let mut dh_next = vec![0.0f32; d * n];
+        for (k, win) in CHUNK_CUTS.windows(2).enumerate().rev() {
+            let (c0, c1) = (win[0], win[1]);
+            let cl = c1 - c0;
+            let cdims = Dims { b: 1, l: cl, d, n };
+            let xc = slice_cm(&x, d, l, c0, c1);
+            let dtc = slice_cm(&dt, d, l, c0, c1);
+            let gyc = slice_cm(&gy, d, l, c0, c1);
+            let mut dx = vec![0.0f32; d * cl];
+            let mut ddt = vec![0.0f32; d * cl];
+            let mut da = vec![0.0f32; d * n];
+            let mut dbm = vec![0.0f32; cl * n];
+            let mut dcm = vec![0.0f32; cl * n];
+            let mut dd = vec![0.0f32; d];
+            let mut dh0 = vec![0.0f32; d * n];
+            let mut g = vec![0.0f32; d * cl * n];
+            let mut colbuf = vec![0.0f32; d * (n + 1)];
+            ssm_packed_bwd_carry_into(
+                &xc,
+                &dtc,
+                &a,
+                &bm[c0 * n..c1 * n],
+                &cm[c0 * n..c1 * n],
+                &dvec,
+                &hists[k],
+                &ams[k],
+                &gyc,
+                cdims,
+                &states[k],
+                &dh_next,
+                1,
+                SsmGradsMut {
+                    dx: &mut dx,
+                    ddt: &mut ddt,
+                    da: &mut da,
+                    dbm: &mut dbm,
+                    dcm: &mut dcm,
+                    dd: &mut dd,
+                },
+                &mut dh0,
+                &mut g,
+                &mut colbuf,
+            );
+            unslice_cm(&mut dx_c, &dx, d, l, c0, c1);
+            unslice_cm(&mut ddt_c, &ddt, d, l, c0, c1);
+            dbm_c[c0 * n..c1 * n].copy_from_slice(&dbm);
+            dcm_c[c0 * n..c1 * n].copy_from_slice(&dcm);
+            for i in 0..d * n {
+                da_c[i] += da[i];
+            }
+            for i in 0..d {
+                dd_c[i] += dd[i];
+            }
+            dh_next = dh0;
+        }
+        let close = |name: &str, got: &[f32], want: &[f32]| {
+            for (i, (g1, w1)) in got.iter().zip(want).enumerate() {
+                assert!(
+                    (g1 - w1).abs() < 1e-4_f32.max(1e-4 * w1.abs()),
+                    "{name}[{i}]: {g1} vs {w1}"
+                );
+            }
+        };
+        close("dx", &dx_c, &gr_full.dx);
+        close("ddt", &ddt_c, &gr_full.ddt);
+        close("da", &da_c, &gr_full.da);
+        close("dbm", &dbm_c, &gr_full.dbm);
+        close("dcm", &dcm_c, &gr_full.dcm);
+        close("dd", &dd_c, &gr_full.dd);
+        assert!(dh_next.iter().all(|&v| v == 0.0), "{dh_next:?}");
+    }
+
+    #[test]
+    fn junk_carry_is_masked_at_fresh_starts() {
+        // A chunk whose first slot has pos == 0 must ignore arbitrary
+        // carried state entirely — conv and scan (the §5 composition of
+        // chunk-boundary carry with sequence-boundary isolation).
+        let (l, d, n, wlen) = (12usize, 2usize, 3usize, 4usize);
+        let tw = wlen - 1;
+        let lens = [7usize, 5];
+        let pos = position_indices(&lens, l);
+        let mut rng = Pcg64::new(29, 0);
+        let x = randv(&mut rng, d * l, 1.0);
+        let w = randv(&mut rng, wlen * d, 1.0);
+        let bias = randv(&mut rng, d, 1.0);
+        let dims = Dims { b: 1, l, d, n };
+        let zero_tail = vec![0.0f32; d * tw];
+        let junk_tail = vec![37.0f32; d * tw];
+        let run_conv = |tail: &[f32]| {
+            let mut y = vec![0.0f32; d * l];
+            let mut t_out = vec![0.0f32; d * tw];
+            conv1d_packed_fwd_carry_into(
+                &x,
+                dims,
+                &w,
+                wlen,
+                &bias,
+                &pos,
+                tail,
+                1,
+                &mut y,
+                &mut t_out,
+            );
+            y
+        };
+        assert_eq!(run_conv(&zero_tail), run_conv(&junk_tail));
+        // and the carry-free kernel agrees with zero-state carry
+        assert_eq!(
+            run_conv(&zero_tail),
+            conv1d_packed_fwd(&x, dims, &w, wlen, &bias, &pos, 1)
+        );
+
+        let dt: Vec<f32> = randv(&mut rng, d * l, 1.0)
+            .into_iter()
+            .map(|v| v.abs() + 0.05)
+            .collect();
+        let a: Vec<f32> = vec![-0.4; d * n];
+        let bm = randv(&mut rng, l * n, 1.0);
+        let cm = randv(&mut rng, l * n, 1.0);
+        let dvec = vec![0.5; d];
+        let run_scan = |h0: &[f32]| {
+            let mut y = vec![0.0f32; d * l];
+            let mut hist = vec![0.0f32; d * l * n];
+            let mut am = vec![0.0f32; d * l * n];
+            let mut h_out = vec![0.0f32; d * n];
+            ssm_packed_fwd_carry_into(
+                &x,
+                &dt,
+                &a,
+                &bm,
+                &cm,
+                &dvec,
+                &pos,
+                dims,
+                h0,
+                1,
+                &mut y,
+                &mut hist,
+                &mut am,
+                &mut h_out,
+            );
+            y
+        };
+        let zero_h = vec![0.0f32; d * n];
+        let junk_h = vec![-11.0f32; d * n];
+        assert_eq!(run_scan(&zero_h), run_scan(&junk_h));
+        let (y_plain, _) = ssm_packed_fwd(&x, &dt, &a, &bm, &cm, &dvec, &pos, dims, 1);
+        assert_eq!(run_scan(&zero_h), y_plain);
     }
 
     #[test]

@@ -20,7 +20,13 @@
 //! fused train step, `loss+grads`/`apply` halves for data-parallel
 //! training, forward logits for the PUI tests, and per-op timing stats —
 //! so `Trainer`, `DataParallelTrainer`, and the benches are
-//! backend-agnostic.
+//! backend-agnostic.  The native backend additionally implements the
+//! paper's §5 **chunked/stateful execution**
+//! ([`Backend::forward_chunked`] / [`Backend::train_step_chunked`]):
+//! fixed `L = chunk_len` operator shapes with SSM state + conv tails
+//! carried across chunk and row boundaries, enabling sequences longer
+//! than `pack_len` (split by the streaming packer) to train without
+//! padding blow-up.
 
 pub mod adamw;
 pub mod arena;
@@ -105,6 +111,47 @@ pub trait Backend {
         state_params: &[Tensor],
         batch: &PackedBatch,
     ) -> Result<Tensor>;
+
+    /// Chunked/stateful forward (paper §5): the batch's rows are
+    /// traversed as one row-major stream in `chunk_len`-slot pieces,
+    /// carrying SSM state + conv tails across chunk *and row* boundaries
+    /// (so sequences split over consecutive rows by the streaming packer
+    /// execute exactly); `pos == 0` still isolates every fresh start.
+    /// Stateless across calls; equals [`Backend::forward`] within fp
+    /// reassociation.  Backends without chunked support return an error.
+    fn forward_chunked(
+        &self,
+        model: &ModelConfig,
+        state_params: &[Tensor],
+        batch: &PackedBatch,
+        chunk_len: usize,
+    ) -> Result<Tensor> {
+        let _ = (model, state_params, batch, chunk_len);
+        anyhow::bail!(
+            "backend `{}` does not support chunked execution",
+            self.kind().name()
+        )
+    }
+
+    /// Fused chunked train step (paper §5): forward/backward in
+    /// `chunk_len` pieces with full BPTT across the stream's chunks,
+    /// then AdamW.  The stream-end carry state persists into the next
+    /// call (truncated BPTT across batches), so sequences the packer
+    /// split across batch boundaries continue with real state; fresh
+    /// `pos == 0` starts discard it automatically.
+    fn train_step_chunked(
+        &self,
+        model: &ModelConfig,
+        state: &mut TrainState,
+        batch: &PackedBatch,
+        chunk_len: usize,
+    ) -> Result<f32> {
+        let _ = (model, state, batch, chunk_len);
+        anyhow::bail!(
+            "backend `{}` does not support chunked execution",
+            self.kind().name()
+        )
+    }
 
     /// `(loss, grads)` — the worker half of data-parallel training.
     fn loss_and_grads(

@@ -111,6 +111,77 @@ impl ModelWorkspace {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Pre-size the scratch whose growth would otherwise happen inside
+    /// the hot step (the cross-entropy `f64` partials) for a step over
+    /// `t` tokens.  Backends call this in their warmup/ensure phase —
+    /// next to the gradient-buffer sizing — so the timed step body never
+    /// resizes it (`tests/zero_alloc.rs` interleaves two batch lengths
+    /// to pin this).
+    pub fn ensure_scratch(&mut self, t: usize) {
+        let chunks = ops::cross_entropy_chunks(t);
+        if self.arena.f64_scratch.len() < chunks {
+            self.arena.f64_scratch.resize(chunks, 0.0);
+        }
+    }
+}
+
+/// Cross-chunk carry for chunked/stateful execution (paper §5): per
+/// layer, the SSM state at the previous chunk's final slot
+/// (`rows · d_inner · d_state`) and the final `d_conv - 1` conv inputs
+/// (`rows · d_inner · (d_conv - 1)`) — a constant-size state per stream
+/// row, independent of sequence length.  Buffers are recycled through
+/// the [`StepArena`]; reused as-is for the *adjoint* carry (`h` ↦ dL/dh
+/// of the carry state, `tail` ↦ dL/d(tail)) in the chunked backward.
+/// `Default` is the empty placeholder (no layers) for `std::mem::take`.
+#[derive(Default)]
+pub struct ChunkState {
+    /// per layer: SSM carry, `(rows, d_inner, d_state)` lane-major
+    pub h: Vec<Vec<f32>>,
+    /// per layer: conv input tail, `(rows, d_inner, d_conv - 1)` lane-major
+    pub tail: Vec<Vec<f32>>,
+}
+
+impl ChunkState {
+    /// Zeroed carry (a stream start) for `rows` rows, arena-recycled.
+    pub fn zeroed(cfg: &ModelConfig, rows: usize, arena: &mut StepArena) -> ChunkState {
+        let (di, n, wl) = (cfg.d_inner(), cfg.d_state, cfg.d_conv);
+        ChunkState {
+            h: (0..cfg.n_layers)
+                .map(|_| arena.take_zeroed(rows * di * n))
+                .collect(),
+            tail: (0..cfg.n_layers)
+                .map(|_| arena.take_zeroed(rows * di * (wl - 1)))
+                .collect(),
+        }
+    }
+
+    /// Carry buffers with unspecified contents — for carry-*out* slots
+    /// that the kernels fully overwrite.
+    pub fn uninit(cfg: &ModelConfig, rows: usize, arena: &mut StepArena) -> ChunkState {
+        let (di, n, wl) = (cfg.d_inner(), cfg.d_state, cfg.d_conv);
+        ChunkState {
+            h: (0..cfg.n_layers).map(|_| arena.take(rows * di * n)).collect(),
+            tail: (0..cfg.n_layers)
+                .map(|_| arena.take(rows * di * (wl - 1)))
+                .collect(),
+        }
+    }
+
+    /// Whether this carry matches `cfg`'s shape for `rows` stream rows.
+    pub fn fits(&self, cfg: &ModelConfig, rows: usize) -> bool {
+        let (di, n, wl) = (cfg.d_inner(), cfg.d_state, cfg.d_conv);
+        self.h.len() == cfg.n_layers
+            && self.tail.len() == cfg.n_layers
+            && self.h.iter().all(|v| v.len() == rows * di * n)
+            && self.tail.iter().all(|v| v.len() == rows * di * (wl - 1))
+    }
+
+    /// Return every buffer to the arena.
+    pub fn release(self, arena: &mut StepArena) {
+        arena.put_all(self.h);
+        arena.put_all(self.tail);
+    }
 }
 
 /// Head-side activations of one forward pass (layer caches live in the
@@ -133,8 +204,11 @@ fn add_into(dst: &mut [f32], src: &[f32]) {
 }
 
 /// Full forward pass, caching everything the backward needs in `ws`.
+/// With `carry`, the sequence-wise kernels run their §5 carry variants:
+/// layer `li` reads `carry.0.h[li]`/`carry.0.tail[li]` and writes the
+/// chunk's outgoing state into `carry.1`.
 #[allow(clippy::too_many_arguments)]
-pub fn forward_cached(
+fn forward_impl(
     cfg: &ModelConfig,
     p: &[Tensor],
     tokens: &[i32],
@@ -143,6 +217,7 @@ pub fn forward_cached(
     len: usize,
     threads: usize,
     ws: &mut ModelWorkspace,
+    mut carry: Option<(&ChunkState, &mut ChunkState)>,
 ) -> ForwardCache {
     let (d, di, n, r, wl, v) = (
         cfg.d_model,
@@ -204,16 +279,31 @@ pub fn forward_cached(
         ops::to_channel_major_into(&xlin, rows, len, di, &mut xlin_cm);
         ws.arena.put(xlin);
         let mut xc_cm = ws.arena.take(t * di);
-        kernels::conv1d_packed_fwd_into(
-            &xlin_cm,
-            dims,
-            lp(slot::CONV_W),
-            wl,
-            lp(slot::CONV_B),
-            pos,
-            threads,
-            &mut xc_cm,
-        );
+        if let Some((sin, sout)) = carry.as_mut() {
+            kernels::conv1d_packed_fwd_carry_into(
+                &xlin_cm,
+                dims,
+                lp(slot::CONV_W),
+                wl,
+                lp(slot::CONV_B),
+                pos,
+                &sin.tail[li],
+                threads,
+                &mut xc_cm,
+                &mut sout.tail[li],
+            );
+        } else {
+            kernels::conv1d_packed_fwd_into(
+                &xlin_cm,
+                dims,
+                lp(slot::CONV_W),
+                wl,
+                lp(slot::CONV_B),
+                pos,
+                threads,
+                &mut xc_cm,
+            );
+        }
         let mut xs_cm = ws.arena.take(t * di);
         for (o, &x) in xs_cm.iter_mut().zip(xc_cm.iter()) {
             *o = ops::silu(x);
@@ -280,20 +370,39 @@ pub fn forward_cached(
         let mut y_cm = ws.arena.take(t * di);
         let mut hist = ws.arena.take(t * di * n);
         let mut am = ws.arena.take(t * di * n);
-        kernels::ssm_packed_fwd_into(
-            &xs_cm,
-            &dt_cm,
-            &a_neg,
-            &bm,
-            &cm,
-            lp(slot::D),
-            pos,
-            dims,
-            threads,
-            &mut y_cm,
-            &mut hist,
-            &mut am,
-        );
+        if let Some((sin, sout)) = carry.as_mut() {
+            kernels::ssm_packed_fwd_carry_into(
+                &xs_cm,
+                &dt_cm,
+                &a_neg,
+                &bm,
+                &cm,
+                lp(slot::D),
+                pos,
+                dims,
+                &sin.h[li],
+                threads,
+                &mut y_cm,
+                &mut hist,
+                &mut am,
+                &mut sout.h[li],
+            );
+        } else {
+            kernels::ssm_packed_fwd_into(
+                &xs_cm,
+                &dt_cm,
+                &a_neg,
+                &bm,
+                &cm,
+                lp(slot::D),
+                pos,
+                dims,
+                threads,
+                &mut y_cm,
+                &mut hist,
+                &mut am,
+            );
+        }
         ws.arena.put(a_neg);
         let mut y_tm = ws.arena.take(t * di);
         ops::to_token_major_into(&y_cm, rows, di, len, &mut y_tm);
@@ -351,6 +460,97 @@ pub fn forward_cached(
         hf,
         invf,
     }
+}
+
+/// Full forward pass, caching everything the backward needs in `ws`.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_cached(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    tokens: &[i32],
+    pos: &[i32],
+    rows: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ModelWorkspace,
+) -> ForwardCache {
+    forward_impl(cfg, p, tokens, pos, rows, len, threads, ws, None)
+}
+
+/// Forward over one chunk with §5 state carry: reads each layer's carry
+/// from `state_in`, writes the outgoing carry into `state_out` (every
+/// buffer fully overwritten).  Position indices decide whether the carry
+/// flows: a chunk continuing a sequence has `pos[0] > 0`; a fresh start
+/// (`pos[0] == 0`) masks the carried state out entirely, so junk carry
+/// can never leak into a fresh sequence.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_chunk_cached(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    tokens: &[i32],
+    pos: &[i32],
+    rows: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ModelWorkspace,
+    state_in: &ChunkState,
+    state_out: &mut ChunkState,
+) -> ForwardCache {
+    debug_assert!(state_in.fits(cfg, rows), "carry-in shape mismatch");
+    debug_assert!(state_out.fits(cfg, rows), "carry-out shape mismatch");
+    forward_impl(cfg, p, tokens, pos, rows, len, threads, ws, Some((state_in, state_out)))
+}
+
+/// Chunked/stateful forward over a whole packed batch (paper §5): the
+/// `(rows, len)` plane is traversed as **one row-major stream** in
+/// `chunk_len`-slot steps, carrying per-layer SSM state and conv tails
+/// across chunk boundaries — including across *row* boundaries, which is
+/// what lets the streaming packer split sequences longer than `pack_len`
+/// over consecutive rows (continuation position indices keep the carry
+/// flowing; every fresh `pos == 0` start still isolates).  Returns
+/// `(rows, len, vocab)` logits identical (within fp reassociation) to
+/// the monolithic [`forward_logits`].
+#[allow(clippy::too_many_arguments)]
+pub fn forward_logits_chunked(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    tokens: &[i32],
+    pos: &[i32],
+    rows: usize,
+    len: usize,
+    chunk_len: usize,
+    threads: usize,
+    ws: &mut ModelWorkspace,
+) -> Tensor {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let t_total = rows * len;
+    let v = cfg.vocab_size;
+    let mut out = vec![0.0f32; t_total * v];
+    let mut cur = ChunkState::zeroed(cfg, 1, &mut ws.arena);
+    let mut off = 0;
+    while off < t_total {
+        let clen = chunk_len.min(t_total - off);
+        let mut nxt = ChunkState::uninit(cfg, 1, &mut ws.arena);
+        let fc = forward_chunk_cached(
+            cfg,
+            p,
+            &tokens[off..off + clen],
+            &pos[off..off + clen],
+            1,
+            clen,
+            threads,
+            ws,
+            &cur,
+            &mut nxt,
+        );
+        out[off * v..(off + clen) * v].copy_from_slice(&fc.logits);
+        release_forward(fc, ws);
+        cur.release(&mut ws.arena);
+        cur = nxt;
+        off += clen;
+    }
+    cur.release(&mut ws.arena);
+    Tensor::new(&[rows, len, v], out)
 }
 
 /// Release a forward's buffers (head cache + the workspace's layer
@@ -417,40 +617,52 @@ pub fn loss_and_grads_into(
     ws: &mut ModelWorkspace,
     grads: &mut [Vec<f32>],
 ) -> f32 {
-    let (d, di, n, r, wl, v) = (
-        cfg.d_model,
-        cfg.d_inner(),
-        cfg.d_state,
-        cfg.dt_rank(),
-        cfg.d_conv,
-        cfg.vocab_size,
-    );
-    let t = rows * len;
-    let dims = Dims {
-        b: rows,
-        l: len,
-        d: di,
-        n,
-    };
     assert_eq!(grads.len(), params::count(cfg), "gradient buffer count");
     for g in grads.iter_mut() {
         g.iter_mut().for_each(|x| *x = 0.0);
     }
 
     let fc = forward_cached(cfg, p, tokens, pos, rows, len, threads, ws);
-    let emb = p[params::EMBEDDING].data();
+    let denom = ops::mask_denom(mask);
+    let (loss_sum, dh) = head_backward(cfg, p, fc, targets, mask, denom, threads, ws, grads);
+    let mut layers = std::mem::take(&mut ws.layers);
+    layers_backward(cfg, p, tokens, pos, rows, len, threads, ws, grads, &mut layers, dh, None);
+    ws.layers = layers; // keep the spine's capacity for the next step
+    (loss_sum / denom as f64) as f32
+}
 
-    // head: masked cross-entropy against the tied embedding
+/// Head backward: masked CE (externally normalized by `denom`) against
+/// the tied embedding, then the final RMSNorm.  Consumes `fc`, returns
+/// the unnormalized `f64` loss sum and `dL/dh` of the last block's
+/// output, `(T, d)` arena-owned.
+#[allow(clippy::too_many_arguments)]
+fn head_backward(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    fc: ForwardCache,
+    targets: &[i32],
+    mask: &[f32],
+    denom: f32,
+    threads: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) -> (f64, Vec<f32>) {
+    let (d, v) = (cfg.d_model, cfg.vocab_size);
+    let t = targets.len();
+    let emb = p[params::EMBEDDING].data();
     let ce_chunks = ops::cross_entropy_chunks(t);
     if ws.arena.f64_scratch.len() < ce_chunks {
+        // only direct callers with a cold workspace land here: backends
+        // pre-size via `ModelWorkspace::ensure_scratch` before the step
         ws.arena.f64_scratch.resize(ce_chunks, 0.0);
     }
     let mut dlogits = ws.arena.take(t * v);
-    let loss = ops::cross_entropy_into(
+    let loss_sum = ops::cross_entropy_sum_into(
         &fc.logits,
         v,
         targets,
         mask,
+        denom,
         threads,
         &mut dlogits,
         &mut ws.arena.f64_scratch[..ce_chunks],
@@ -489,9 +701,48 @@ pub fn loss_and_grads_into(
     for buf in [logits, h_pre, hf, invf] {
         ws.arena.put(buf);
     }
+    (loss_sum, dh)
+}
 
-    while let Some(c) = ws.layers.pop() {
-        let li = ws.layers.len();
+/// Backward through the Mamba blocks (reverse layer order), consuming
+/// `layers` and accumulating into `grads`; finishes with the embedding
+/// lookup gradient.  With `carry`, the sequence-wise backwards run their
+/// §5 adjoint-carry variants: on entry `carry.1` holds the adjoint of
+/// this chunk's carry-*out* (zeros for the stream's final chunk), on
+/// exit it holds the adjoint of the carry-*in* (for the previous chunk);
+/// `carry.0` is the carry-in state the forward consumed.
+#[allow(clippy::too_many_arguments)]
+fn layers_backward(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    tokens: &[i32],
+    pos: &[i32],
+    rows: usize,
+    len: usize,
+    threads: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+    layers: &mut Vec<LayerCache>,
+    dh_top: Vec<f32>,
+    mut carry: Option<(&ChunkState, &mut ChunkState)>,
+) {
+    let (d, di, n, r, wl) = (
+        cfg.d_model,
+        cfg.d_inner(),
+        cfg.d_state,
+        cfg.dt_rank(),
+        cfg.d_conv,
+    );
+    let t = rows * len;
+    let dims = Dims {
+        b: rows,
+        l: len,
+        d: di,
+        n,
+    };
+    let mut dh = dh_top;
+    while let Some(c) = layers.pop() {
+        let li = layers.len();
         let lp = |s: usize| p[params::layer_param(li, s)].data();
         let gi = |s: usize| params::layer_param(li, s);
         let dout = dh; // grad of the block output, (T, d)
@@ -546,29 +797,62 @@ pub fn loss_and_grads_into(
         let mut sdd = ws.arena.take(di);
         let mut gbuf = ws.arena.take(t * di * n);
         let mut colbuf = ws.arena.take(di * (n + 1));
-        kernels::ssm_packed_bwd_into(
-            &c.xs_cm,
-            &c.dt_cm,
-            &a_neg,
-            &c.bm,
-            &c.cm,
-            lp(slot::D),
-            &c.hist,
-            &c.am,
-            &dy_cm,
-            dims,
-            threads,
-            SsmGradsMut {
-                dx: &mut sdx,
-                ddt: &mut sddt,
-                da: &mut sda,
-                dbm: &mut sdbm,
-                dcm: &mut sdcm,
-                dd: &mut sdd,
-            },
-            &mut gbuf,
-            &mut colbuf,
-        );
+        if let Some((sin, adj)) = carry.as_mut() {
+            // adj.h[li] enters as dL/d(carry-out state) and is swapped
+            // for dL/d(carry-in state) for the previous chunk's backward
+            let mut dh0 = ws.arena.take(rows * di * n);
+            kernels::ssm_packed_bwd_carry_into(
+                &c.xs_cm,
+                &c.dt_cm,
+                &a_neg,
+                &c.bm,
+                &c.cm,
+                lp(slot::D),
+                &c.hist,
+                &c.am,
+                &dy_cm,
+                dims,
+                &sin.h[li],
+                &adj.h[li],
+                threads,
+                SsmGradsMut {
+                    dx: &mut sdx,
+                    ddt: &mut sddt,
+                    da: &mut sda,
+                    dbm: &mut sdbm,
+                    dcm: &mut sdcm,
+                    dd: &mut sdd,
+                },
+                &mut dh0,
+                &mut gbuf,
+                &mut colbuf,
+            );
+            ws.arena.put(std::mem::replace(&mut adj.h[li], dh0));
+        } else {
+            kernels::ssm_packed_bwd_into(
+                &c.xs_cm,
+                &c.dt_cm,
+                &a_neg,
+                &c.bm,
+                &c.cm,
+                lp(slot::D),
+                &c.hist,
+                &c.am,
+                &dy_cm,
+                dims,
+                threads,
+                SsmGradsMut {
+                    dx: &mut sdx,
+                    ddt: &mut sddt,
+                    da: &mut sda,
+                    dbm: &mut sdbm,
+                    dcm: &mut sdcm,
+                    dd: &mut sdd,
+                },
+                &mut gbuf,
+                &mut colbuf,
+            );
+        }
         ws.arena.put(gbuf);
         ws.arena.put(colbuf);
         ws.arena.put(dy_cm);
@@ -679,7 +963,29 @@ pub fn loss_and_grads_into(
         ws.arena.put(dxs_cm);
         let mut dxlin_cm = ws.arena.take(t * di);
         let mut convcol = ws.arena.take(di * (wl + 1));
-        {
+        if let Some((sin, adj)) = carry.as_mut() {
+            // adj.tail[li] enters as dL/d(carry-out tail) and is swapped
+            // for dL/d(carry-in tail)
+            let mut dtail0 = ws.arena.take(rows * di * (wl - 1));
+            let (dw_g, db_g) = two_muts(grads, gi(slot::CONV_W), gi(slot::CONV_B));
+            kernels::conv1d_packed_bwd_carry_into(
+                &c.xlin_cm,
+                dims,
+                lp(slot::CONV_W),
+                wl,
+                pos,
+                &sin.tail[li],
+                &dxc_cm,
+                &adj.tail[li],
+                threads,
+                &mut dxlin_cm,
+                dw_g,
+                db_g,
+                &mut dtail0,
+                &mut convcol,
+            );
+            ws.arena.put(std::mem::replace(&mut adj.tail[li], dtail0));
+        } else {
             let (dw_g, db_g) = two_muts(grads, gi(slot::CONV_W), gi(slot::CONV_B));
             kernels::conv1d_packed_bwd_into(
                 &c.xlin_cm,
@@ -766,8 +1072,162 @@ pub fn loss_and_grads_into(
         }
     }
     ws.arena.put(dh);
+    debug_assert_eq!(tokens.len(), t);
+}
 
-    loss
+/// Chunked/stateful loss + gradients (paper §5), the training-side twin
+/// of [`forward_logits_chunked`]: the `(rows, len)` batch is traversed
+/// as one row-major stream in `chunk_len`-slot pieces, forward carrying
+/// per-layer `(h, conv tail)` state, backward carrying the matching
+/// adjoints in reverse — full BPTT across every chunk of the stream, so
+/// the gradients match the monolithic [`loss_and_grads_into`] up to fp
+/// reassociation.  The cross-entropy is normalized by the *whole*
+/// batch's mask sum, chunk sums accumulated in `f64`.
+///
+/// `carry`, when provided, is the stream-start state (the previous
+/// step's stream-end state for truncated-BPTT continuation across
+/// batches; treated as a constant in the backward) and is replaced with
+/// this stream's end state on return.  `None` starts from zeros and
+/// discards the end state.
+#[allow(clippy::too_many_arguments)]
+pub fn loss_and_grads_chunked_into(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    tokens: &[i32],
+    targets: &[i32],
+    pos: &[i32],
+    mask: &[f32],
+    rows: usize,
+    len: usize,
+    chunk_len: usize,
+    threads: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+    mut carry: Option<&mut ChunkState>,
+) -> f32 {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert_eq!(grads.len(), params::count(cfg), "gradient buffer count");
+    for g in grads.iter_mut() {
+        g.iter_mut().for_each(|x| *x = 0.0);
+    }
+    let t_total = rows * len;
+    assert_eq!(tokens.len(), t_total);
+    assert_eq!(targets.len(), t_total);
+    assert_eq!(pos.len(), t_total);
+    assert_eq!(mask.len(), t_total);
+    let denom = ops::mask_denom(mask);
+
+    // Forward over the stream, keeping every chunk's layer caches, head
+    // cache, and carry-in state for the reverse sweep.
+    let mut cur = match carry.as_mut() {
+        Some(c) if c.fits(cfg, 1) => std::mem::take(*c),
+        Some(_) => panic!("chunk carry shape does not match model/geometry"),
+        None => ChunkState::zeroed(cfg, 1, &mut ws.arena),
+    };
+    let n_chunks = t_total.div_ceil(chunk_len);
+    let mut states: Vec<ChunkState> = Vec::with_capacity(n_chunks);
+    let mut heads: Vec<ForwardCache> = Vec::with_capacity(n_chunks);
+    let mut chunk_layers: Vec<Vec<LayerCache>> = Vec::with_capacity(n_chunks);
+    let mut off = 0;
+    while off < t_total {
+        let clen = chunk_len.min(t_total - off);
+        let mut nxt = ChunkState::uninit(cfg, 1, &mut ws.arena);
+        let fc = forward_chunk_cached(
+            cfg,
+            p,
+            &tokens[off..off + clen],
+            &pos[off..off + clen],
+            1,
+            clen,
+            threads,
+            ws,
+            &cur,
+            &mut nxt,
+        );
+        heads.push(fc);
+        chunk_layers.push(std::mem::take(&mut ws.layers));
+        states.push(cur);
+        cur = nxt;
+        off += clen;
+    }
+    match carry {
+        Some(c) => *c = cur, // stream-end state for the next batch
+        None => cur.release(&mut ws.arena),
+    }
+
+    // Backward over chunks in reverse; `adj` holds each layer's adjoint
+    // of the current chunk's carry-out (zeros for the final chunk).
+    let mut adj = ChunkState::zeroed(cfg, 1, &mut ws.arena);
+    let mut loss_sum = 0.0f64;
+    for k in (0..n_chunks).rev() {
+        let off = k * chunk_len;
+        let clen = chunk_len.min(t_total - off);
+        let fc = heads.pop().expect("head cache per chunk");
+        let mut layers = chunk_layers.pop().expect("layer caches per chunk");
+        let sin = states.pop().expect("carry-in per chunk");
+        let (ls, dh) = head_backward(
+            cfg,
+            p,
+            fc,
+            &targets[off..off + clen],
+            &mask[off..off + clen],
+            denom,
+            threads,
+            ws,
+            grads,
+        );
+        loss_sum += ls;
+        layers_backward(
+            cfg,
+            p,
+            &tokens[off..off + clen],
+            &pos[off..off + clen],
+            1,
+            clen,
+            threads,
+            ws,
+            grads,
+            &mut layers,
+            dh,
+            Some((&sin, &mut adj)),
+        );
+        sin.release(&mut ws.arena);
+        if layers.capacity() > ws.layers.capacity() {
+            ws.layers = layers; // keep the largest spine for reuse
+        }
+    }
+    adj.release(&mut ws.arena);
+    (loss_sum / denom as f64) as f32
+}
+
+/// Allocating convenience wrapper over [`loss_and_grads_chunked_into`]
+/// (zero stream-start state) — the differential-test surface.
+#[allow(clippy::too_many_arguments)]
+pub fn loss_and_grads_chunked(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    tokens: &[i32],
+    targets: &[i32],
+    pos: &[i32],
+    mask: &[f32],
+    rows: usize,
+    len: usize,
+    chunk_len: usize,
+    threads: usize,
+) -> (f32, Vec<Tensor>) {
+    let mut ws = ModelWorkspace::new();
+    let specs = params::specs(cfg);
+    let mut grads: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.element_count()]).collect();
+    let loss = loss_and_grads_chunked_into(
+        cfg, p, tokens, targets, pos, mask, rows, len, chunk_len, threads, &mut ws, &mut grads,
+        None,
+    );
+    let tensors = specs
+        .iter()
+        .zip(grads)
+        .map(|(s, g)| Tensor::new(&s.shape, g))
+        .collect();
+    (loss, tensors)
 }
 
 /// Masked-cross-entropy loss and gradients for every parameter, in
@@ -898,6 +1358,98 @@ mod tests {
         assert_eq!(grads_a, grads_b);
         let (takes, hits) = ws.arena.stats();
         assert!(hits * 2 >= takes, "second step should recycle: {takes} takes, {hits} hits");
+    }
+
+    #[test]
+    fn chunked_forward_matches_monolithic() {
+        // The flattened-stream chunked forward must reproduce the
+        // monolithic packed forward for any chunk length (fresh rows:
+        // every carry is masked at the row-start pos == 0).
+        let cfg = nano();
+        let p = params::init(&cfg, 4);
+        let batch = PackedBatch::from_rows(
+            &[
+                PackedRow {
+                    sequences: vec![rand_seq(1, 9, cfg.vocab_size), rand_seq(2, 5, cfg.vocab_size)],
+                },
+                PackedRow {
+                    sequences: vec![rand_seq(3, 12, cfg.vocab_size)],
+                },
+            ],
+            16,
+        );
+        let mut ws = ModelWorkspace::new();
+        let full = forward_logits(
+            &cfg,
+            &p,
+            batch.tokens.data(),
+            batch.position_indices.data(),
+            2,
+            16,
+            1,
+            &mut ws,
+        );
+        for chunk_len in [1usize, 5, 16, 32] {
+            let got = forward_logits_chunked(
+                &cfg,
+                &p,
+                batch.tokens.data(),
+                batch.position_indices.data(),
+                2,
+                16,
+                chunk_len,
+                1,
+                &mut ws,
+            );
+            assert_eq!(got.shape(), full.shape());
+            for (a, b) in got.data().iter().zip(full.data()) {
+                assert!((a - b).abs() < 1e-5, "chunk_len {chunk_len}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn junk_chunk_state_ignored_on_fresh_rows() {
+        // A chunk whose stream starts fresh (pos == 0) must produce
+        // identical logits under zero and junk carry-in.
+        let cfg = nano();
+        let p = params::init(&cfg, 6);
+        let batch = PackedBatch::from_rows(
+            &[PackedRow {
+                sequences: vec![rand_seq(11, 10, cfg.vocab_size), rand_seq(12, 6, cfg.vocab_size)],
+            }],
+            16,
+        );
+        let mut ws = ModelWorkspace::new();
+        let zero = ChunkState::zeroed(&cfg, 1, &mut ws.arena);
+        let mut junk = ChunkState::zeroed(&cfg, 1, &mut ws.arena);
+        for v in junk.h.iter_mut().chain(junk.tail.iter_mut()) {
+            v.iter_mut().for_each(|x| *x = 37.0);
+        }
+        let run = |state: &ChunkState, ws: &mut ModelWorkspace| -> Vec<f32> {
+            let mut out = ChunkState::uninit(&cfg, 1, &mut ws.arena);
+            let fc = forward_chunk_cached(
+                &cfg,
+                &p,
+                batch.tokens.data(),
+                batch.position_indices.data(),
+                1,
+                16,
+                1,
+                ws,
+                state,
+                &mut out,
+            );
+            let logits = fc.logits.clone();
+            release_forward(fc, ws);
+            out.release(&mut ws.arena);
+            logits
+        };
+        let a = run(&zero, &mut ws);
+        let b = run(&junk, &mut ws);
+        assert_eq!(a, b);
+        zero.release(&mut ws.arena);
+        junk.release(&mut ws.arena);
     }
 
     #[test]

@@ -37,6 +37,13 @@ pub struct NativeBackend {
     /// Param specs for the model last seen (spec building allocates
     /// names; caching keeps the steady-state step allocation-free).
     specs_cache: RefCell<Option<(ModelConfig, Vec<ParamSpec>)>>,
+    /// Stream-end carry of the last chunked train step (paper §5):
+    /// reused as the next step's stream-start state — truncated BPTT at
+    /// batch boundaries, so sequences the packer split across batches
+    /// continue with real state.  Fresh `pos == 0` starts discard it via
+    /// the boundary mask; reset explicitly with
+    /// [`NativeBackend::reset_chunk_carry`].
+    chunk_carry: RefCell<Option<model::ChunkState>>,
 }
 
 impl NativeBackend {
@@ -62,11 +69,21 @@ impl NativeBackend {
             ws: RefCell::new(model::ModelWorkspace::new()),
             grad_bufs: RefCell::new(Vec::new()),
             specs_cache: RefCell::new(None),
+            chunk_carry: RefCell::new(None),
         }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Drop the persisted cross-batch chunk carry (e.g. between
+    /// unrelated evaluation runs).  The next chunked step starts from a
+    /// zero stream state.
+    pub fn reset_chunk_carry(&self) {
+        if let Some(c) = self.chunk_carry.borrow_mut().take() {
+            c.release(&mut self.ws.borrow_mut().arena);
+        }
     }
 
     fn note(&self, name: &str, secs: f64) {
@@ -175,6 +192,9 @@ impl Backend for NativeBackend {
         self.check_batch(model, batch)?;
         let specs = self.cached_specs(model);
         self.ensure_grad_bufs(specs.as_slice());
+        self.ws
+            .borrow_mut()
+            .ensure_scratch(batch.rows() * batch.pack_len());
         let t0 = Instant::now();
         let loss = {
             let mut ws = self.ws.borrow_mut();
@@ -227,6 +247,90 @@ impl Backend for NativeBackend {
         Ok(logits)
     }
 
+    fn forward_chunked(
+        &self,
+        model: &ModelConfig,
+        state_params: &[Tensor],
+        batch: &PackedBatch,
+        chunk_len: usize,
+    ) -> Result<Tensor> {
+        self.check_batch(model, batch)?;
+        anyhow::ensure!(chunk_len > 0, "chunk_len must be positive");
+        let t0 = Instant::now();
+        let logits = model::forward_logits_chunked(
+            model,
+            state_params,
+            batch.tokens.data(),
+            batch.position_indices.data(),
+            batch.rows(),
+            batch.pack_len(),
+            chunk_len,
+            self.threads,
+            &mut self.ws.borrow_mut(),
+        );
+        self.note("forward_chunked", t0.elapsed().as_secs_f64());
+        Ok(logits)
+    }
+
+    fn train_step_chunked(
+        &self,
+        model: &ModelConfig,
+        state: &mut TrainState,
+        batch: &PackedBatch,
+        chunk_len: usize,
+    ) -> Result<f32> {
+        self.check_batch(model, batch)?;
+        anyhow::ensure!(chunk_len > 0, "chunk_len must be positive");
+        let specs = self.cached_specs(model);
+        self.ensure_grad_bufs(specs.as_slice());
+        self.ws
+            .borrow_mut()
+            .ensure_scratch(batch.rows() * batch.pack_len());
+        // cross-batch carry: reset when the model geometry changed
+        {
+            let mut ws = self.ws.borrow_mut();
+            let mut carry = self.chunk_carry.borrow_mut();
+            let fits = carry.as_ref().is_some_and(|c| c.fits(model, 1));
+            if !fits {
+                if let Some(old) = carry.take() {
+                    old.release(&mut ws.arena);
+                }
+                *carry = Some(model::ChunkState::zeroed(model, 1, &mut ws.arena));
+            }
+        }
+        let t0 = Instant::now();
+        let loss = {
+            let mut ws = self.ws.borrow_mut();
+            let mut grads = self.grad_bufs.borrow_mut();
+            let mut carry = self.chunk_carry.borrow_mut();
+            model::loss_and_grads_chunked_into(
+                model,
+                &state.params,
+                batch.tokens.data(),
+                batch.targets.data(),
+                batch.position_indices.data(),
+                batch.loss_mask.data(),
+                batch.rows(),
+                batch.pack_len(),
+                chunk_len,
+                self.threads,
+                &mut ws,
+                &mut grads,
+                carry.as_mut(),
+            )
+        };
+        let t1 = Instant::now();
+        let grads = self.grad_bufs.borrow();
+        adamw::apply_slices(&self.opt, specs.as_slice(), state, grads.as_slice())?;
+        drop(grads);
+        state.step += 1;
+        let t2 = Instant::now();
+        self.note("train_step_chunked.fwd_bwd", (t1 - t0).as_secs_f64());
+        self.note("train_step_chunked.adamw", (t2 - t1).as_secs_f64());
+        anyhow::ensure!(loss.is_finite(), "non-finite loss at step {}", state.step);
+        Ok(loss)
+    }
+
     fn loss_and_grads(
         &self,
         model: &ModelConfig,
@@ -235,6 +339,9 @@ impl Backend for NativeBackend {
     ) -> Result<(f32, Vec<Tensor>)> {
         self.check_batch(model, batch)?;
         let specs = self.cached_specs(model);
+        self.ws
+            .borrow_mut()
+            .ensure_scratch(batch.rows() * batch.pack_len());
         let t0 = Instant::now();
         // fresh grad buffers (they are moved into the returned tensors);
         // activations still reuse the persistent arena

@@ -291,12 +291,39 @@ pub fn cross_entropy_into(
     dlogits: &mut [f32],
     loss_parts: &mut [f64],
 ) -> f32 {
+    let denom = mask_denom(mask);
+    let sum = cross_entropy_sum_into(logits, v, targets, mask, denom, threads, dlogits, loss_parts);
+    (sum / denom as f64) as f32
+}
+
+/// The masked-CE normalizer: `max(Σ mask, 1)` — exposed so the chunked
+/// path can normalize per-chunk sums by the whole batch's mask.
+pub fn mask_denom(mask: &[f32]) -> f32 {
+    mask.iter().sum::<f32>().max(1.0)
+}
+
+/// Masked cross-entropy with an **externally supplied** denominator:
+/// `dlogits` is scaled by `mask/denom` and the return value is the
+/// *unnormalized* `f64` sum `Σ_t mask_t · nll_t`.  The chunked path runs
+/// this per chunk with the whole batch's [`mask_denom`] and divides the
+/// cross-chunk total once, so chunked gradients match the monolithic
+/// step's normalization exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn cross_entropy_sum_into(
+    logits: &[f32],
+    v: usize,
+    targets: &[i32],
+    mask: &[f32],
+    denom: f32,
+    threads: usize,
+    dlogits: &mut [f32],
+    loss_parts: &mut [f64],
+) -> f64 {
     let t = targets.len();
     assert_eq!(logits.len(), t * v);
     assert_eq!(mask.len(), t);
     assert_eq!(dlogits.len(), t * v);
     assert_eq!(loss_parts.len(), cross_entropy_chunks(t));
-    let denom: f32 = mask.iter().sum::<f32>().max(1.0);
     let threads = effective_threads(t * v * 8, threads);
     parallel_chunks2_mut(dlogits, CE_ROWS * v, loss_parts, 1, threads, |ci, dl, part| {
         let lo = ci * CE_ROWS;
@@ -326,8 +353,7 @@ pub fn cross_entropy_into(
         }
         part[0] = loss;
     });
-    let loss: f64 = loss_parts.iter().sum();
-    (loss / denom as f64) as f32
+    loss_parts.iter().sum()
 }
 
 /// Masked cross-entropy; returns `(loss, dlogits)`.

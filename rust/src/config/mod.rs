@@ -233,6 +233,11 @@ pub struct TrainConfig {
     pub scheme: Scheme,
     pub backend: BackendKind,
     pub packing: PackingConfig,
+    /// chunked/stateful execution (paper §5): slots per chunk for the
+    /// fixed-shape stateful step; 0 = monolithic.  With chunking on, the
+    /// streaming packer may split sequences longer than `pack_len` into
+    /// continuation fragments (state carries across the cuts).
+    pub chunk_len: usize,
     pub steps: usize,
     pub seed: u64,
     /// data-parallel worker count (paper: 8 GPUs; here: threads)
@@ -258,6 +263,7 @@ impl TrainConfig {
             scheme: Scheme::Pack,
             backend: BackendKind::Native,
             packing: PackingConfig::streaming(pack_len, 2),
+            chunk_len: 0,
             steps: 200,
             seed: 42,
             dp_workers: 1,
@@ -277,6 +283,7 @@ impl TrainConfig {
             ("pack_len", Json::from(self.packing.pack_len)),
             ("rows", Json::from(self.packing.rows)),
             ("greedy_buffer", Json::from(self.packing.greedy_buffer)),
+            ("chunk_len", Json::from(self.chunk_len)),
             ("steps", Json::from(self.steps)),
             ("seed", Json::from(self.seed as usize)),
             ("dp_workers", Json::from(self.dp_workers)),
@@ -308,6 +315,9 @@ impl TrainConfig {
         }
         if let Some(v) = get_u("greedy_buffer") {
             cfg.packing.greedy_buffer = v;
+        }
+        if let Some(v) = get_u("chunk_len") {
+            cfg.chunk_len = v;
         }
         if let Some(v) = get_u("steps") {
             cfg.steps = v;
@@ -359,9 +369,16 @@ impl TrainConfig {
             self.min_len,
             self.max_len
         );
+        // Monolithic execution cannot run a sequence longer than a pack
+        // row; chunked execution (§5) can, via the streaming packer's
+        // continuation fragments — best-fit-decreasing reorders rows, so
+        // the greedy packer cannot host split sequences.
+        let over_length_ok =
+            self.chunk_len > 0 && self.scheme == Scheme::Pack && self.packing.greedy_buffer == 0;
         anyhow::ensure!(
-            self.max_len <= self.packing.pack_len,
-            "max_len {} exceeds pack_len {}",
+            over_length_ok || self.max_len <= self.packing.pack_len,
+            "max_len {} exceeds pack_len {} (allowed only with chunk_len > 0 \
+             on the pack scheme with the streaming packer)",
             self.max_len,
             self.packing.pack_len
         );
@@ -431,6 +448,23 @@ mod tests {
         let mut c = TrainConfig::defaults(ModelConfig::tiny());
         c.max_len = 10 * c.packing.pack_len;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn chunked_allows_over_length_on_streaming_pack_only() {
+        let mut c = TrainConfig::defaults(ModelConfig::tiny());
+        c.max_len = 2 * c.packing.pack_len;
+        c.mean_len = c.packing.pack_len as f64;
+        assert!(c.validate().is_err(), "monolithic must reject over-length");
+        c.chunk_len = 64;
+        assert!(c.validate().is_ok(), "chunked streaming pack splits");
+        c.packing.greedy_buffer = 16;
+        assert!(c.validate().is_err(), "greedy packer cannot split");
+        // round trip keeps chunk_len
+        c.packing.greedy_buffer = 0;
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.chunk_len, 64);
+        assert_eq!(c2.max_len, c.max_len);
     }
 
     #[test]

@@ -56,6 +56,12 @@ impl DataParallelTrainer {
             cfg.scheme == Scheme::Pack,
             "data-parallel path is wired for the pack scheme (the paper's)"
         );
+        anyhow::ensure!(
+            cfg.chunk_len == 0,
+            "data-parallel training is monolithic: chunked execution \
+             carries state across a batch's rows, which a per-worker row \
+             split would sever (set chunk_len = 0 for dp-train)"
+        );
         Ok(Self { cfg })
     }
 
@@ -190,7 +196,7 @@ fn worker_loop(
                 grads,
                 real_tokens: batch.real_tokens(),
                 slot_tokens: batch.rows() * batch.pack_len(),
-                sequences: batch.row_lengths.iter().map(Vec::len).sum(),
+                sequences: batch.sequence_count(),
             })
             .map_err(|_| anyhow::anyhow!("leader hung up"))?;
         let avg = avg_rx

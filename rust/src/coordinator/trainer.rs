@@ -7,7 +7,12 @@
 //! turns the document stream into device batches:
 //!
 //! * `Pack`      — StreamingPacker/GreedyPacker → (rows, pack_len) batches
-//!                 with position indices (the PackMamba scheme),
+//!                 with position indices (the PackMamba scheme).  With
+//!                 `chunk_len > 0` the step runs chunked/stateful (§5):
+//!                 fixed `L = chunk_len` operator shapes, SSM/conv state
+//!                 carried across chunk and row boundaries, and the
+//!                 streaming packer may split sequences longer than
+//!                 `pack_len` into continuation fragments,
 //! * `Padding`   — groups of `rows` sequences padded to the scheme's
 //!                 max length,
 //! * `SingleSequence` — one sequence per step, bucketed to the smallest
@@ -56,6 +61,8 @@ impl Pipeline {
                 let mut corpus = SyntheticCorpus::new(vocab, sampler, seed, shard, num_shards);
                 match scheme {
                     Scheme::Pack => {
+                        // both packers may emit several ready batches per
+                        // push (each exactly rows_per_batch rows)
                         if packing.greedy_buffer > 0 {
                             let mut p = GreedyPacker::new(
                                 packing.pack_len,
@@ -63,7 +70,7 @@ impl Pipeline {
                                 packing.greedy_buffer,
                             );
                             loop {
-                                if let Some(b) = p.push(corpus.next_sequence()) {
+                                for b in p.push(corpus.next_sequence()) {
                                     if q.push(b).is_err() {
                                         return;
                                     }
@@ -72,7 +79,7 @@ impl Pipeline {
                         } else {
                             let mut p = StreamingPacker::new(packing.pack_len, packing.rows);
                             loop {
-                                if let Some(b) = p.push(corpus.next_sequence()) {
+                                for b in p.push(corpus.next_sequence()) {
                                     if q.push(b).is_err() {
                                         return;
                                     }
@@ -160,7 +167,12 @@ impl Trainer {
             Scheme::Pack => {
                 cfg.packing.rows = geom.rows;
                 cfg.packing.pack_len = geom.pack_len;
-                cfg.max_len = cfg.max_len.min(geom.pack_len);
+                // chunked execution carries state across rows, so the
+                // streaming packer may split sequences longer than
+                // pack_len — only clamp for the monolithic step
+                if cfg.chunk_len == 0 {
+                    cfg.max_len = cfg.max_len.min(geom.pack_len);
+                }
             }
             Scheme::Padding => {
                 cfg.max_len = cfg.max_len.min(geom.pad_geom.1);
@@ -203,16 +215,26 @@ impl Trainer {
             .pipeline
             .next_batch()
             .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
-        let loss = self
-            .backend
-            .train_step(&self.cfg.model, &mut self.state, &batch)?;
+        let loss = if self.cfg.chunk_len > 0 {
+            // §5 chunked/stateful step: fixed L = chunk_len operator
+            // shapes, state carried across chunk and row boundaries
+            self.backend.train_step_chunked(
+                &self.cfg.model,
+                &mut self.state,
+                &batch,
+                self.cfg.chunk_len,
+            )?
+        } else {
+            self.backend
+                .train_step(&self.cfg.model, &mut self.state, &batch)?
+        };
         self.metrics.record(StepRecord {
             step: self.state.step,
             loss,
             secs: t0.elapsed().as_secs_f64(),
             real_tokens: batch.real_tokens(),
             slot_tokens: batch.rows() * batch.pack_len(),
-            sequences: batch.row_lengths.iter().map(Vec::len).sum(),
+            sequences: batch.sequence_count(),
         });
         Ok(loss)
     }

@@ -28,8 +28,9 @@
 //! | [`tensor`] | host tensors (f32 / software bf16) used by backends, tests, checkpoints and host-side all-reduce |
 //! | [`config`] | model / training / packing / backend configuration, JSON-backed |
 //! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
-//! | [`packing`] | pack()/unpack(), position indices, the packers for all three batching schemes |
+//! | [`packing`] | pack()/unpack(), position indices, the packers for all three batching schemes; over-length sequences split into continuation `Fragment`s |
 //! | [`backend`] | the `Backend` trait + `NativeBackend` (packed conv1d + selective scan fwd/bwd, AdamW) + PJRT backend (feature `pjrt`) |
+//! | [`backend::model`] | the native packed Mamba LM fwd/bwd, incl. the §5 chunked/stateful API: `ChunkState`, `forward_logits_chunked`, `loss_and_grads_chunked_into` (`--chunk-len` on the CLI) |
 //! | [`backend::gemm`] | the blocked, register-tiled GEMM micro-kernel (B-panel packing, MC/KC blocking, beta-accumulate) behind `ops::matmul*` |
 //! | [`backend::arena`] | `StepArena` — recycled step buffers + GEMM scratch; steady-state training steps allocate nothing |
 //! | [`runtime`] | artifact manifest + host values; PJRT client wrapper behind the `pjrt` feature |

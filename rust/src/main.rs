@@ -27,7 +27,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let app = App::new("packmamba", "PackMamba training coordinator")
         .command(
-            Command::new("train", "train with a batching scheme")
+            Command::new("train", "train with a batching scheme (--chunk-len 256 = chunked §5)")
                 .flag("config", "c", "training config json (overrides flags)", None)
                 .flag("model", "m", "model preset (tiny|small)", Some("tiny"))
                 .flag("scheme", "s", "single|padding|pack", Some("pack"))
@@ -35,6 +35,12 @@ fn main() {
                 .flag("steps", "n", "training steps", Some("100"))
                 .flag("seed", "", "corpus seed", Some("42"))
                 .flag("greedy-buffer", "g", "greedy packer buffer (0=streaming)", Some("0"))
+                .flag(
+                    "chunk-len",
+                    "",
+                    "chunked/stateful execution: slots per chunk, 0 = monolithic",
+                    Some("0"),
+                )
                 .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts"))
                 .flag("save", "o", "checkpoint output path", None)
                 .flag("metrics-out", "", "write metrics json here", None),
@@ -113,6 +119,9 @@ fn build_train_config(m: &Matches) -> anyhow::Result<TrainConfig> {
     }
     if let Some(g) = m.get_usize("greedy-buffer")? {
         cfg.packing.greedy_buffer = g;
+    }
+    if let Some(c) = m.get_usize("chunk-len")? {
+        cfg.chunk_len = c;
     }
     cfg.artifacts_dir = m.get_or("artifacts", "artifacts").to_string();
     if let Some(w) = m.get_usize("workers").unwrap_or(None) {
@@ -225,22 +234,22 @@ fn cmd_pack_stats(m: &Matches) -> anyhow::Result<()> {
     let mut stream_stats = PackingStats::default();
     let mut p = StreamingPacker::new(pack_len, 1);
     for s in &seqs {
-        if let Some(b) = p.push(s.clone()) {
+        for b in p.push(s.clone()) {
             stream_stats.record(&b);
         }
     }
-    if let Some(b) = p.flush() {
+    for b in p.flush() {
         stream_stats.record(&b);
     }
     // greedy pack
     let mut greedy_stats = PackingStats::default();
     let mut g = GreedyPacker::new(pack_len, 1, buffer);
     for s in &seqs {
-        if let Some(b) = g.push(s.clone()) {
+        for b in g.push(s.clone()) {
             greedy_stats.record(&b);
         }
     }
-    while let Some(b) = g.flush() {
+    for b in g.flush() {
         greedy_stats.record(&b);
     }
 

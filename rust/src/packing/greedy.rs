@@ -10,6 +10,13 @@
 //! The cost is sorting latency and reordering — the paper calls this out
 //! as "additional sorting time overhead"; `benches/padding_rates.rs`
 //! quantifies both sides of that trade.
+//!
+//! **Batch contract:** `push`/`flush` return every batch that became
+//! ready; each has exactly `rows_per_batch` rows except the final
+//! `flush` batch, which may be smaller.  (A buffer pack can ready far
+//! more than one batch's worth of rows at once, and downstream consumers
+//! — warm trainer workspaces, `DataParallelTrainer` row splits — rely on
+//! the fixed row count.)
 
 use super::{PackedBatch, PackedRow, Sequence};
 
@@ -34,11 +41,19 @@ impl GreedyPacker {
         }
     }
 
-    /// Add a sequence; may trigger a buffer pack and return a batch.
-    pub fn push(&mut self, seq: Sequence) -> Option<PackedBatch> {
+    /// Add a sequence; returns **every** batch that became ready (a
+    /// buffer pack can ready many rows at once — each emitted batch has
+    /// exactly `rows_per_batch` rows, so the trainer's warm workspace
+    /// shapes and `DataParallelTrainer` row splits stay stable).
+    ///
+    /// Over-length sequences are rejected: best-fit-decreasing reorders
+    /// rows, which would break the consecutive-row continuity that split
+    /// fragments need — route those through [`StreamingPacker`].
+    pub fn push(&mut self, seq: Sequence) -> Vec<PackedBatch> {
         assert!(
             seq.len() <= self.pack_len,
-            "sequence of length {} exceeds pack_len {}",
+            "sequence of length {} exceeds pack_len {} (the greedy packer \
+             does not split; use StreamingPacker for over-length sequences)",
             seq.len(),
             self.pack_len
         );
@@ -47,19 +62,22 @@ impl GreedyPacker {
         if self.buffer.len() >= self.buffer_cap {
             self.pack_buffer();
         }
-        self.maybe_batch()
+        self.drain()
     }
 
-    /// Pack whatever is buffered and emit the remaining rows.
-    pub fn flush(&mut self) -> Option<PackedBatch> {
+    /// Pack whatever is buffered and emit everything: full
+    /// `rows_per_batch`-row batches first, then one final batch with the
+    /// leftover rows (the only batch allowed to be undersized).
+    pub fn flush(&mut self) -> Vec<PackedBatch> {
         if !self.buffer.is_empty() {
             self.pack_buffer();
         }
-        if self.ready.is_empty() {
-            return None;
+        let mut out = self.drain();
+        if !self.ready.is_empty() {
+            let rows = std::mem::take(&mut self.ready);
+            out.push(PackedBatch::from_rows(&rows, self.pack_len));
         }
-        let rows = std::mem::take(&mut self.ready);
-        Some(PackedBatch::from_rows(&rows, self.pack_len))
+        out
     }
 
     /// Best-fit decreasing over the current buffer.
@@ -90,13 +108,14 @@ impl GreedyPacker {
         self.ready.extend(open);
     }
 
-    fn maybe_batch(&mut self) -> Option<PackedBatch> {
-        if self.ready.len() >= self.rows_per_batch {
+    /// Emit every full batch the ready queue holds (in ready order).
+    fn drain(&mut self) -> Vec<PackedBatch> {
+        let mut out = Vec::new();
+        while self.ready.len() >= self.rows_per_batch {
             let rows: Vec<PackedRow> = self.ready.drain(..self.rows_per_batch).collect();
-            Some(PackedBatch::from_rows(&rows, self.pack_len))
-        } else {
-            None
+            out.push(PackedBatch::from_rows(&rows, self.pack_len));
         }
+        out
     }
 }
 
@@ -123,7 +142,7 @@ mod tests {
         let mut p = GreedyPacker::new(10, 3, 6);
         let mut batch = None;
         for (i, n) in [7usize, 3, 6, 4, 5, 5].into_iter().enumerate() {
-            if let Some(b) = p.push(seq(i as u64, n)) {
+            for b in p.push(seq(i as u64, n)) {
                 batch = Some(b);
             }
         }
@@ -141,14 +160,58 @@ mod tests {
         for i in 0..200u64 {
             let n = 1 + rng.next_below(64) as usize;
             pushed += n;
-            if let Some(b) = p.push(seq(i, n)) {
+            for b in p.push(seq(i, n)) {
                 got += total_tokens(&b);
             }
         }
-        while let Some(b) = p.flush() {
+        for b in p.flush() {
             got += total_tokens(&b);
         }
         assert_eq!(pushed, got);
+    }
+
+    #[test]
+    fn every_batch_full_except_final_flush() {
+        // A buffer pack readies many rows at once: every batch — from
+        // push *and* flush — must still have exactly rows_per_batch
+        // rows, with only the very last flush batch undersized.  (The
+        // old contract emitted one giant flush batch and stalled push
+        // surplus, breaking warm workspace shapes and DP row splits.)
+        let rows_per_batch = 2;
+        let mut p = GreedyPacker::new(32, rows_per_batch, 64);
+        let mut rng = Pcg64::new(17, 0);
+        let mut batches = Vec::new();
+        for i in 0..300u64 {
+            let n = 1 + rng.next_below(32) as usize;
+            batches.extend(p.push(seq(i, n)));
+        }
+        // the first flush call must empty the packer completely
+        batches.extend(p.flush());
+        assert!(p.flush().is_empty(), "second flush must find nothing");
+        assert!(batches.len() > 3, "exercise several emissions");
+        for (i, b) in batches.iter().enumerate() {
+            if i + 1 < batches.len() {
+                assert_eq!(
+                    b.rows(),
+                    rows_per_batch,
+                    "batch {i}/{} has wrong row count",
+                    batches.len()
+                );
+            } else {
+                assert!(b.rows() <= rows_per_batch, "final batch oversize");
+            }
+        }
+        // a single buffer pack readying >> rows_per_batch rows drains as
+        // several exact batches in one push
+        let mut p = GreedyPacker::new(8, 2, 16);
+        let mut out = Vec::new();
+        for i in 0..16u64 {
+            out.extend(p.push(seq(i, 8))); // every row is one full seq
+        }
+        assert!(!out.is_empty());
+        assert!(out.iter().all(|b| b.rows() == 2), "push must drain fully");
+        let rows_emitted: usize = out.iter().map(PackedBatch::rows).sum();
+        assert_eq!(rows_emitted, 16, "no rows may stall in the packer");
     }
 
     #[test]
@@ -168,21 +231,21 @@ mod tests {
             if greedy {
                 let mut p = GreedyPacker::new(90, 1, 64);
                 for (i, &n) in lens.iter().enumerate() {
-                    if let Some(b) = p.push(seq(i as u64, n)) {
+                    for b in p.push(seq(i as u64, n)) {
                         record(b);
                     }
                 }
-                while let Some(b) = p.flush() {
+                for b in p.flush() {
                     record(b);
                 }
             } else {
                 let mut p = StreamingPacker::new(90, 1);
                 for (i, &n) in lens.iter().enumerate() {
-                    if let Some(b) = p.push(seq(i as u64, n)) {
+                    for b in p.push(seq(i as u64, n)) {
                         record(b);
                     }
                 }
-                if let Some(b) = p.flush() {
+                for b in p.flush() {
                     record(b);
                 }
             }
@@ -204,11 +267,11 @@ mod tests {
             let mut out = Vec::new();
             for i in 0..40u64 {
                 let n = 1 + ((i * 13) % 31) as usize;
-                if let Some(b) = p.push(seq(i, n)) {
+                for b in p.push(seq(i, n)) {
                     out.push(b.row_ids.clone());
                 }
             }
-            while let Some(b) = p.flush() {
+            for b in p.flush() {
                 out.push(b.row_ids.clone());
             }
             out

@@ -11,7 +11,10 @@
 //!
 //! * [`StreamingPacker`] — first-fit in arrival order, seals a row when
 //!   the next sequence does not fit (§5: 19.1% padding on InternLM-like
-//!   lengths),
+//!   lengths); sequences longer than `pack_len` are split at row ends
+//!   into [`Fragment`]s with continuation position indices (§5's
+//!   chunked/stateful regime — the native backend's chunked executor
+//!   carries state across the cuts),
 //! * [`GreedyPacker`] — buffers N sequences, sorts descending, best-fit
 //!   decreasing (§5: down to 0.41% padding),
 //! * [`pad_to_max`] — the pad-everything baseline (§2.1: 66.3% padding),
@@ -59,6 +62,51 @@ impl PackedRow {
     }
 }
 
+/// A contiguous slice of a sequence placed in a packed row (paper §5:
+/// over-length sequences are cut at row ends and continue in the next
+/// row, with state carried by the chunked executor).
+///
+/// `start` is the slice's offset within the original sequence — its
+/// position indices run `start..start + len`, so a continuation fragment
+/// begins at `pos > 0` and the carry kernels let state flow in.  `next`
+/// is the original sequence's token right after this fragment (`None`
+/// when the sequence ends here): the cross-fragment next-token target,
+/// so splitting loses no training signal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fragment {
+    pub seq: Sequence,
+    pub start: usize,
+    pub next: Option<i32>,
+}
+
+impl Fragment {
+    /// A whole (unsplit) sequence as a single fragment.
+    pub fn whole(seq: Sequence) -> Fragment {
+        Fragment {
+            seq,
+            start: 0,
+            next: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seq.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seq.is_empty()
+    }
+}
+
+/// Borrowed view the batch builder consumes (both public constructors
+/// lower to this; no token copies).
+struct FragRef<'a> {
+    tokens: &'a [i32],
+    id: u64,
+    start: usize,
+    next: Option<i32>,
+}
+
 /// A complete packed batch, ready for the runtime: dense tensors plus the
 /// bookkeeping to unpack model outputs.
 #[derive(Clone, Debug)]
@@ -72,10 +120,13 @@ pub struct PackedBatch {
     /// (rows, pack_len) 1.0 where a *target* exists (0 on final token of
     /// each sequence and on padding)
     pub loss_mask: Tensor,
-    /// per row: lengths of the original sequences, in packed order
+    /// per row: lengths of the packed sequences/fragments, in order
     pub row_lengths: Vec<Vec<usize>>,
     /// per row: ids of the original sequences
     pub row_ids: Vec<Vec<u64>>,
+    /// per row: start offset of each entry within its original sequence
+    /// (0 for whole sequences; > 0 marks a continuation fragment)
+    pub row_starts: Vec<Vec<usize>>,
 }
 
 impl PackedBatch {
@@ -97,6 +148,17 @@ impl PackedBatch {
         self.loss_mask.data().iter().filter(|&&x| x > 0.0).count()
     }
 
+    /// Number of *original* sequences starting in this batch: counts
+    /// each split sequence once (at its `start == 0` fragment), so
+    /// sequences/sec metrics are not inflated by fragment multiplicity.
+    pub fn sequence_count(&self) -> usize {
+        self.row_starts
+            .iter()
+            .flatten()
+            .filter(|&&s| s == 0)
+            .count()
+    }
+
     /// Fraction of slots that are padding (the paper's padding-rate metric).
     pub fn padding_rate(&self) -> f64 {
         let slots = self.rows() * self.pack_len();
@@ -112,6 +174,46 @@ impl PackedBatch {
     /// loss-mask 0 — see `python/compile/packing.py` for the mirrored
     /// reference semantics.
     pub fn from_rows(rows: &[PackedRow], pack_len: usize) -> PackedBatch {
+        let rows: Vec<Vec<FragRef<'_>>> = rows
+            .iter()
+            .map(|r| {
+                r.sequences
+                    .iter()
+                    .map(|s| FragRef {
+                        tokens: &s.tokens,
+                        id: s.id,
+                        start: 0,
+                        next: None,
+                    })
+                    .collect()
+            })
+            .collect();
+        Self::build(&rows, pack_len)
+    }
+
+    /// Build the dense tensors for rows of sequence *fragments* (the
+    /// streaming packer's §5 chunk-aware output): position indices of a
+    /// fragment continue at `start`, and the final token of a fragment
+    /// that continues elsewhere gets the cross-fragment target `next`
+    /// with loss-mask 1.
+    pub fn from_fragment_rows(rows: &[Vec<Fragment>], pack_len: usize) -> PackedBatch {
+        let rows: Vec<Vec<FragRef<'_>>> = rows
+            .iter()
+            .map(|r| {
+                r.iter()
+                    .map(|f| FragRef {
+                        tokens: &f.seq.tokens,
+                        id: f.seq.id,
+                        start: f.start,
+                        next: f.next,
+                    })
+                    .collect()
+            })
+            .collect();
+        Self::build(&rows, pack_len)
+    }
+
+    fn build(rows: &[Vec<FragRef<'_>>], pack_len: usize) -> PackedBatch {
         let b = rows.len();
         let mut tokens = vec![0i32; b * pack_len];
         let mut targets = vec![0i32; b * pack_len];
@@ -119,25 +221,31 @@ impl PackedBatch {
         let mut mask = vec![0f32; b * pack_len];
         let mut row_lengths = Vec::with_capacity(b);
         let mut row_ids = Vec::with_capacity(b);
+        let mut row_starts = Vec::with_capacity(b);
         for (r, row) in rows.iter().enumerate() {
             let base = r * pack_len;
             let mut off = 0usize;
-            let mut lens = Vec::with_capacity(row.sequences.len());
-            let mut ids = Vec::with_capacity(row.sequences.len());
-            for seq in &row.sequences {
-                let n = seq.len();
+            let mut lens = Vec::with_capacity(row.len());
+            let mut ids = Vec::with_capacity(row.len());
+            let mut starts = Vec::with_capacity(row.len());
+            for f in row {
+                let n = f.tokens.len();
                 assert!(off + n <= pack_len, "row overflows pack_len");
-                for (k, &t) in seq.tokens.iter().enumerate() {
+                for (k, &t) in f.tokens.iter().enumerate() {
                     tokens[base + off + k] = t;
-                    pos[base + off + k] = k as i32;
+                    pos[base + off + k] = (f.start + k) as i32;
                     if k + 1 < n {
-                        targets[base + off + k] = seq.tokens[k + 1];
+                        targets[base + off + k] = f.tokens[k + 1];
+                        mask[base + off + k] = 1.0;
+                    } else if let Some(nx) = f.next {
+                        targets[base + off + k] = nx;
                         mask[base + off + k] = 1.0;
                     }
                 }
                 off += n;
                 lens.push(n);
-                ids.push(seq.id);
+                ids.push(f.id);
+                starts.push(f.start);
             }
             // padding tail: its own isolated "sequence" of zeros
             for (k, slot) in (off..pack_len).enumerate() {
@@ -145,6 +253,7 @@ impl PackedBatch {
             }
             row_lengths.push(lens);
             row_ids.push(ids);
+            row_starts.push(starts);
         }
         PackedBatch {
             tokens: IntTensor::new(&[b, pack_len], tokens),
@@ -153,6 +262,7 @@ impl PackedBatch {
             loss_mask: Tensor::new(&[b, pack_len], mask),
             row_lengths,
             row_ids,
+            row_starts,
         }
     }
 }
@@ -202,7 +312,7 @@ impl PackingStats {
         self.rows += batch.rows();
         self.slots += batch.rows() * batch.pack_len();
         self.real_tokens += batch.real_tokens();
-        self.sequences += batch.row_lengths.iter().map(Vec::len).sum::<usize>();
+        self.sequences += batch.sequence_count();
     }
 
     pub fn padding_rate(&self) -> f64 {
@@ -242,6 +352,30 @@ mod tests {
         assert_eq!(b.real_tokens(), 5);
         assert_eq!(b.target_tokens(), 3);
         assert!((b.padding_rate() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fragment_rows_continue_positions_and_targets() {
+        // fragment 1 of a 5-token sequence split 3|2 across two rows
+        let f1 = Fragment {
+            seq: seq(5, &[1, 2, 3]),
+            start: 0,
+            next: Some(4),
+        };
+        let f2 = Fragment {
+            seq: seq(5, &[4, 5]),
+            start: 3,
+            next: None,
+        };
+        let b = PackedBatch::from_fragment_rows(&[vec![f1], vec![f2]], 4);
+        // continuation positions pick up where the first fragment ended
+        assert_eq!(b.position_indices.data(), &[0, 1, 2, 0, 3, 4, 0, 1]);
+        // the cut loses no training signal: the first fragment's final
+        // token targets the continuation's first token
+        assert_eq!(b.targets.data(), &[2, 3, 4, 0, 5, 0, 0, 0]);
+        assert_eq!(b.loss_mask.data(), &[1., 1., 1., 0., 1., 0., 0., 0.]);
+        assert_eq!(b.row_starts, vec![vec![0], vec![3]]);
+        assert_eq!(b.row_ids, vec![vec![5], vec![5]]);
     }
 
     #[test]

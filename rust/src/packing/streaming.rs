@@ -4,16 +4,32 @@
 //! next sequence does not fit the row is *sealed* and a new one starts.
 //! The paper measures ~19.1% padding for this policy on InternLM-like
 //! lengths with pack_len 4096.
+//!
+//! **Chunk-aware splitting (§5 extension):** a sequence longer than
+//! `pack_len` is no longer rejected — it is cut at row ends into
+//! [`Fragment`]s with *continuation position indices* (`start > 0`) and
+//! cross-fragment next-token targets, filling every intermediate row to
+//! exactly `pack_len` (zero padding along the cut).  The fragments land
+//! in consecutive rows of the emitted stream, and the native backend's
+//! chunked executor carries SSM state + conv tails across those row
+//! boundaries so the split sequence trains exactly (see
+//! `backend::model::forward_logits_chunked`).
+//!
+//! **Batch contract:** `push`/`flush` return every batch that became
+//! ready (an over-length sequence can seal many rows at once); each
+//! batch has exactly `rows_per_batch` rows except the final `flush`
+//! batch, which may be smaller.
 
-use super::{PackedBatch, PackedRow, Sequence};
+use super::{Fragment, PackedBatch, Sequence};
 
 /// Incremental packer: push sequences, pop full batches.
 #[derive(Debug)]
 pub struct StreamingPacker {
     pack_len: usize,
     rows_per_batch: usize,
-    current: PackedRow,
-    sealed: Vec<PackedRow>,
+    current: Vec<Fragment>,
+    current_used: usize,
+    sealed: Vec<Vec<Fragment>>,
 }
 
 impl StreamingPacker {
@@ -22,7 +38,8 @@ impl StreamingPacker {
         Self {
             pack_len,
             rows_per_batch,
-            current: PackedRow::default(),
+            current: Vec::new(),
+            current_used: 0,
             sealed: Vec::new(),
         }
     }
@@ -31,50 +48,89 @@ impl StreamingPacker {
         self.pack_len
     }
 
-    /// Add a sequence; returns a batch when `rows_per_batch` rows sealed.
-    pub fn push(&mut self, seq: Sequence) -> Option<PackedBatch> {
-        assert!(
-            seq.len() <= self.pack_len,
-            "sequence of length {} exceeds pack_len {}",
-            seq.len(),
-            self.pack_len
-        );
+    /// Add a sequence; returns every batch that became ready (each with
+    /// exactly `rows_per_batch` rows).  Sequences longer than `pack_len`
+    /// are split across consecutive rows with continuation position
+    /// indices.
+    pub fn push(&mut self, seq: Sequence) -> Vec<PackedBatch> {
         assert!(!seq.is_empty(), "empty sequence");
-        if self.current.used() + seq.len() > self.pack_len {
-            let full = std::mem::take(&mut self.current);
-            self.sealed.push(full);
-        }
-        self.current.sequences.push(seq);
-        self.maybe_batch()
-    }
-
-    /// Seal the in-progress row and flush whatever rows remain (padding
-    /// short batches with empty rows is the caller's choice; here the
-    /// final batch simply has fewer rows).
-    pub fn flush(&mut self) -> Option<PackedBatch> {
-        if self.current.used() > 0 {
-            let full = std::mem::take(&mut self.current);
-            self.sealed.push(full);
-        }
-        if self.sealed.is_empty() {
-            return None;
-        }
-        let rows = std::mem::take(&mut self.sealed);
-        Some(PackedBatch::from_rows(&rows, self.pack_len))
-    }
-
-    fn maybe_batch(&mut self) -> Option<PackedBatch> {
-        if self.sealed.len() >= self.rows_per_batch {
-            let rows: Vec<PackedRow> = self.sealed.drain(..self.rows_per_batch).collect();
-            Some(PackedBatch::from_rows(&rows, self.pack_len))
+        if seq.len() <= self.pack_len {
+            if self.current_used + seq.len() > self.pack_len {
+                self.seal();
+            }
+            self.current_used += seq.len();
+            self.current.push(Fragment::whole(seq));
         } else {
-            None
+            // §5 chunk-aware split: cut at row ends; intermediate rows
+            // fill to exactly pack_len (zero padding along the cut)
+            let n = seq.len();
+            let mut off = 0usize;
+            while off < n {
+                if self.current_used == self.pack_len {
+                    self.seal();
+                }
+                let room = self.pack_len - self.current_used;
+                let take = room.min(n - off);
+                let next = if off + take < n {
+                    Some(seq.tokens[off + take])
+                } else {
+                    None
+                };
+                self.current.push(Fragment {
+                    seq: Sequence {
+                        tokens: seq.tokens[off..off + take].to_vec(),
+                        id: seq.id,
+                    },
+                    start: off,
+                    next,
+                });
+                self.current_used += take;
+                off += take;
+            }
+            if self.current_used == self.pack_len {
+                self.seal();
+            }
         }
+        self.drain()
+    }
+
+    /// Seal the in-progress row and emit everything that remains: full
+    /// batches first, then one final batch with the leftover rows
+    /// (padding short batches with empty rows is the caller's choice;
+    /// here the final batch simply has fewer rows).
+    pub fn flush(&mut self) -> Vec<PackedBatch> {
+        if self.current_used > 0 {
+            self.seal();
+        }
+        let mut out = self.drain();
+        if !self.sealed.is_empty() {
+            let rows = std::mem::take(&mut self.sealed);
+            out.push(PackedBatch::from_fragment_rows(&rows, self.pack_len));
+        }
+        out
+    }
+
+    fn seal(&mut self) {
+        if self.current.is_empty() {
+            return;
+        }
+        let row = std::mem::take(&mut self.current);
+        self.current_used = 0;
+        self.sealed.push(row);
+    }
+
+    fn drain(&mut self) -> Vec<PackedBatch> {
+        let mut out = Vec::new();
+        while self.sealed.len() >= self.rows_per_batch {
+            let rows: Vec<Vec<Fragment>> = self.sealed.drain(..self.rows_per_batch).collect();
+            out.push(PackedBatch::from_fragment_rows(&rows, self.pack_len));
+        }
+        out
     }
 
     /// Rows currently sealed but not yet emitted (for tests/metrics).
     pub fn pending_rows(&self) -> usize {
-        self.sealed.len() + usize::from(self.current.used() > 0)
+        self.sealed.len() + usize::from(self.current_used > 0)
     }
 }
 
@@ -89,45 +145,52 @@ mod tests {
         }
     }
 
+    /// Convenience for tests that expect at most one ready batch.
+    fn one(mut v: Vec<PackedBatch>) -> Option<PackedBatch> {
+        assert!(v.len() <= 1, "expected at most one batch, got {}", v.len());
+        v.pop()
+    }
+
     #[test]
     fn seals_on_overflow_in_arrival_order() {
         let mut p = StreamingPacker::new(10, 1);
-        assert!(p.push(seq(0, 6)).is_none());
+        assert!(p.push(seq(0, 6)).is_empty());
         // 6 + 5 > 10 → row [6] sealed, batch emitted (1 row/batch)
-        let b = p.push(seq(1, 5)).unwrap();
+        let b = one(p.push(seq(1, 5))).unwrap();
         assert_eq!(b.row_lengths, vec![vec![6]]);
         // current now holds [5]
-        let b2 = p.flush().unwrap();
+        let b2 = one(p.flush()).unwrap();
         assert_eq!(b2.row_lengths, vec![vec![5]]);
     }
 
     #[test]
     fn fits_multiple_per_row() {
         let mut p = StreamingPacker::new(10, 1);
-        assert!(p.push(seq(0, 3)).is_none());
-        assert!(p.push(seq(1, 4)).is_none());
-        assert!(p.push(seq(2, 3)).is_none()); // exactly fills the row
-        let b = p.push(seq(3, 2)).unwrap(); // overflow seals
+        assert!(p.push(seq(0, 3)).is_empty());
+        assert!(p.push(seq(1, 4)).is_empty());
+        assert!(p.push(seq(2, 3)).is_empty()); // exactly fills the row
+        let b = one(p.push(seq(3, 2))).unwrap(); // overflow seals
         assert_eq!(b.row_lengths, vec![vec![3, 4, 3]]);
         assert_eq!(b.padding_rate(), 0.0);
+        assert_eq!(b.row_starts, vec![vec![0, 0, 0]]);
     }
 
     #[test]
     fn batches_of_multiple_rows() {
         let mut p = StreamingPacker::new(8, 2);
-        assert!(p.push(seq(0, 8)).is_none()); // fills row exactly; not sealed yet
-        assert!(p.push(seq(1, 8)).is_none()); // seals row 0, row 1 = [8]
-        let b = p.push(seq(2, 8)).unwrap(); // seals row 1 → 2 rows → batch
+        assert!(p.push(seq(0, 8)).is_empty()); // fills row exactly; not sealed yet
+        assert!(p.push(seq(1, 8)).is_empty()); // seals row 0, row 1 = [8]
+        let b = one(p.push(seq(2, 8))).unwrap(); // seals row 1 → 2 rows → batch
         assert_eq!(b.rows(), 2);
         assert_eq!(b.row_lengths, vec![vec![8], vec![8]]);
-        let fin = p.flush().unwrap();
+        let fin = one(p.flush()).unwrap();
         assert_eq!(fin.rows(), 1);
     }
 
     #[test]
     fn flush_on_empty_is_none() {
         let mut p = StreamingPacker::new(8, 2);
-        assert!(p.flush().is_none());
+        assert!(p.flush().is_empty());
     }
 
     #[test]
@@ -139,12 +202,12 @@ mod tests {
         for i in 0..37u64 {
             let n = 1 + (i as usize * 7) % 16;
             pushed += n;
-            if let Some(b) = p.push(seq(i, n)) {
+            for b in p.push(seq(i, n)) {
                 got += b.real_tokens();
                 ids_out.extend(b.row_ids.iter().flatten().copied());
             }
         }
-        if let Some(b) = p.flush() {
+        for b in p.flush() {
             got += b.real_tokens();
             ids_out.extend(b.row_ids.iter().flatten().copied());
         }
@@ -154,8 +217,68 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn rejects_oversized_sequence() {
-        StreamingPacker::new(8, 1).push(seq(0, 9));
+    fn over_length_sequence_splits_with_continuation_indices() {
+        // 23 tokens into pack_len 8: rows [0..8), [8..16), [16..23)
+        let mut p = StreamingPacker::new(8, 16);
+        let toks: Vec<i32> = (1..=23).collect();
+        let long = Sequence { tokens: toks.clone(), id: 7 };
+        assert!(p.push(long).is_empty());
+        // a following short sequence packs after the final fragment
+        assert!(p.push(seq(9, 1)).is_empty());
+        let b = one(p.flush()).unwrap();
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b.row_lengths, vec![vec![8], vec![8], vec![7, 1]]);
+        assert_eq!(b.row_starts, vec![vec![0], vec![8], vec![16, 0]]);
+        // tokens survive the cut in stream order
+        let flat: Vec<i32> = b.tokens.data()[..23].to_vec();
+        assert_eq!(flat, toks);
+        // continuation positions keep counting across rows
+        let pos = b.position_indices.data();
+        assert_eq!(&pos[..8], &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(&pos[8..16], &[8, 9, 10, 11, 12, 13, 14, 15]);
+        assert_eq!(&pos[16..23], &[16, 17, 18, 19, 20, 21, 22]);
+        // cross-fragment targets: the cut loses no training signal
+        let tg = b.targets.data();
+        let mask = b.loss_mask.data();
+        assert_eq!(tg[7], 9, "row-end token targets the continuation");
+        assert_eq!(mask[7], 1.0);
+        assert_eq!(tg[15], 17);
+        assert_eq!(mask[15], 1.0);
+        assert_eq!(mask[22], 0.0, "true sequence end stays unmasked");
+        // zero padding on the filled rows
+        assert_eq!(b.real_tokens(), 24);
+        // the split sequence counts once, not per fragment
+        assert_eq!(b.sequence_count(), 2);
+    }
+
+    #[test]
+    fn over_length_push_emits_every_ready_batch() {
+        // one 70-token sequence at pack_len 8, 2 rows/batch: 8 full rows
+        // seal at once → 4 full batches from the single push
+        let mut p = StreamingPacker::new(8, 2);
+        let batches = p.push(seq(3, 70));
+        assert_eq!(batches.len(), 4);
+        for b in &batches {
+            assert_eq!(b.rows(), 2, "every non-final batch is exactly full");
+        }
+        let fin = one(p.flush()).unwrap();
+        assert_eq!(fin.rows(), 1);
+        assert_eq!(fin.row_lengths, vec![vec![6]]);
+        let total: usize = batches.iter().map(|b| b.real_tokens()).sum::<usize>()
+            + fin.real_tokens();
+        assert_eq!(total, 70);
+    }
+
+    #[test]
+    fn split_fills_partially_used_row_first() {
+        // current row holds 5 of 8; a 10-token sequence fills the 3 free
+        // slots, then continues: no padding along the cut
+        let mut p = StreamingPacker::new(8, 16);
+        assert!(p.push(seq(0, 5)).is_empty());
+        assert!(p.push(seq(1, 10)).is_empty());
+        let b = one(p.flush()).unwrap();
+        assert_eq!(b.row_lengths, vec![vec![5, 3], vec![7]]);
+        assert_eq!(b.row_starts, vec![vec![0, 0], vec![3]]);
+        assert_eq!(b.padding_rate(), 1.0 - 15.0 / 16.0);
     }
 }

@@ -88,12 +88,12 @@ pub fn scheme_times(
     let mut real = 0usize;
     for (i, &l) in trace.lengths.iter().enumerate() {
         let seq = Sequence { tokens: vec![0; l], id: i as u64 };
-        if let Some(b) = packer.push(seq) {
+        for b in packer.push(seq) {
             rows += b.rows();
             real += b.real_tokens();
         }
     }
-    if let Some(b) = packer.flush() {
+    for b in packer.flush() {
         rows += b.rows();
         real += b.real_tokens();
     }
@@ -187,11 +187,11 @@ pub fn fig6_breakdown(spec: &GpuSpec, trace: &LengthTrace, dtype: Dtype) -> (Vec
     let mut packer = StreamingPacker::new(4096, 1);
     let mut rows = 0usize;
     for (i, &l) in trace.lengths.iter().enumerate() {
-        if let Some(b) = packer.push(Sequence { tokens: vec![0; l], id: i as u64 }) {
+        for b in packer.push(Sequence { tokens: vec![0; l], id: i as u64 }) {
             rows += b.rows();
         }
     }
-    if let Some(b) = packer.flush() {
+    for b in packer.flush() {
         rows += b.rows();
     }
     let mut bd_pack =

@@ -1,0 +1,259 @@
+//! Native chunked/stateful execution — the §5 differential suite,
+//! mirroring `python/tests/test_chunked.py` on the Rust backend.
+//!
+//! Invariants:
+//!   * chunked forward == monolithic packed forward within 1e-5 across
+//!     chunk lengths {1, 7, 64, exact-fit},
+//!   * junk carry-in is invisible at `pos == 0` (fresh starts isolate),
+//!   * chunked train-step gradients == monolithic gradients within 1e-5,
+//!   * a sequence longer than `pack_len`, split by the streaming packer
+//!     into continuation fragments over consecutive rows, executes
+//!     chunked exactly like the unsplit sequence run monolithically.
+
+use packmamba::backend::model::{self, ChunkState, ModelWorkspace};
+use packmamba::backend::{params, Backend, NativeBackend};
+use packmamba::config::ModelConfig;
+use packmamba::packing::{PackedBatch, PackedRow, Sequence, StreamingPacker};
+
+fn nano() -> ModelConfig {
+    ModelConfig {
+        name: "nano-chunk".to_string(),
+        vocab_size: 61,
+        d_model: 16,
+        n_layers: 2,
+        d_state: 4,
+        d_conv: 4,
+        expand: 2,
+    }
+}
+
+fn rand_seq(id: u64, len: usize, vocab: usize) -> Sequence {
+    let mut x = id.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    let tokens = (0..len)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            1 + (x % (vocab as u64 - 1)) as i32
+        })
+        .collect();
+    Sequence { tokens, id }
+}
+
+/// Two rows of 64: interior boundaries, an exactly-full first row, and a
+/// padding tail on the second.
+fn mixed_batch(cfg: &ModelConfig) -> PackedBatch {
+    PackedBatch::from_rows(
+        &[
+            PackedRow {
+                sequences: vec![
+                    rand_seq(1, 30, cfg.vocab_size),
+                    rand_seq(2, 33, cfg.vocab_size),
+                    rand_seq(3, 1, cfg.vocab_size),
+                ],
+            },
+            PackedRow {
+                sequences: vec![rand_seq(4, 40, cfg.vocab_size), rand_seq(5, 9, cfg.vocab_size)],
+            },
+        ],
+        64,
+    )
+}
+
+#[test]
+fn chunked_forward_matches_monolithic_across_chunk_lengths() {
+    let cfg = nano();
+    let be = NativeBackend::with_threads(2);
+    let state = be.init_state(&cfg, 42).unwrap();
+    let batch = mixed_batch(&cfg);
+    let full = be.forward(&cfg, &state.params, &batch).unwrap();
+    // exact-fit = the whole stream (2 rows × 64) in one carry chunk
+    for chunk_len in [1usize, 7, 64, 128] {
+        let got = be
+            .forward_chunked(&cfg, &state.params, &batch, chunk_len)
+            .unwrap();
+        assert_eq!(got.shape(), full.shape());
+        let mut worst = 0.0f32;
+        for (a, b) in got.data().iter().zip(full.data()) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 1e-5, "chunk_len {chunk_len}: max diff {worst}");
+    }
+}
+
+#[test]
+fn junk_carry_in_is_isolated_at_fresh_starts() {
+    // model-level: a chunk whose stream starts at pos == 0 must give
+    // identical logits under zero and junk carry (§5 masking property).
+    let cfg = nano();
+    let p = params::init(&cfg, 7);
+    let batch = mixed_batch(&cfg);
+    let (rows, len) = (batch.rows(), batch.pack_len());
+    let mut ws = ModelWorkspace::new();
+    let zero = ChunkState::zeroed(&cfg, 1, &mut ws.arena);
+    let mut junk = ChunkState::zeroed(&cfg, 1, &mut ws.arena);
+    for v in junk.h.iter_mut().chain(junk.tail.iter_mut()) {
+        v.iter_mut().for_each(|x| *x = -17.5);
+    }
+    let run = |state: &ChunkState, ws: &mut ModelWorkspace| -> Vec<f32> {
+        let mut out = ChunkState::uninit(&cfg, 1, &mut ws.arena);
+        let fc = model::forward_chunk_cached(
+            &cfg,
+            &p,
+            batch.tokens.data(),
+            batch.position_indices.data(),
+            1,
+            rows * len,
+            1,
+            ws,
+            state,
+            &mut out,
+        );
+        let logits = fc.logits.clone();
+        model::release_forward(fc, ws);
+        out.release(&mut ws.arena);
+        logits
+    };
+    let a = run(&zero, &mut ws);
+    let b = run(&junk, &mut ws);
+    assert_eq!(a, b, "junk carry leaked into a fresh stream");
+}
+
+#[test]
+fn chunked_gradients_match_monolithic() {
+    let cfg = nano();
+    let p = params::init(&cfg, 5);
+    let batch = mixed_batch(&cfg);
+    let (rows, len) = (batch.rows(), batch.pack_len());
+    let (loss_full, grads_full) = model::loss_and_grads(
+        &cfg,
+        &p,
+        batch.tokens.data(),
+        batch.targets.data(),
+        batch.position_indices.data(),
+        batch.loss_mask.data(),
+        rows,
+        len,
+        1,
+    );
+    for chunk_len in [7usize, 64] {
+        let (loss_c, grads_c) = model::loss_and_grads_chunked(
+            &cfg,
+            &p,
+            batch.tokens.data(),
+            batch.targets.data(),
+            batch.position_indices.data(),
+            batch.loss_mask.data(),
+            rows,
+            len,
+            chunk_len,
+            1,
+        );
+        assert!(
+            (loss_c - loss_full).abs() < 1e-5,
+            "chunk_len {chunk_len}: loss {loss_c} vs {loss_full}"
+        );
+        for (gi, (gc, gf)) in grads_c.iter().zip(&grads_full).enumerate() {
+            for (i, (a, b)) in gc.data().iter().zip(gf.data()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5_f32.max(1e-4 * b.abs()),
+                    "chunk_len {chunk_len}: grad[{gi}][{i}] {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_train_step_matches_monolithic_loss() {
+    let cfg = nano();
+    let batch = mixed_batch(&cfg);
+    let be_mono = NativeBackend::with_threads(1);
+    let be_chunk = NativeBackend::with_threads(1);
+    let mut s1 = be_mono.init_state(&cfg, 9).unwrap();
+    let mut s2 = s1.clone();
+    for _ in 0..3 {
+        let l1 = be_mono.train_step(&cfg, &mut s1, &batch).unwrap();
+        let l2 = be_chunk
+            .train_step_chunked(&cfg, &mut s2, &batch, 16)
+            .unwrap();
+        assert!((l1 - l2).abs() < 1e-5, "loss {l1} vs {l2}");
+    }
+    for (a, b) in s1.params.iter().zip(&s2.params) {
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 5e-3, "params diverged: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn split_over_length_sequence_executes_exactly() {
+    // The acceptance case: a sequence longer than pack_len, split by the
+    // streaming packer over consecutive rows, must produce — under
+    // chunked execution — the same logits as the unsplit sequence run
+    // monolithically as one long row.
+    let cfg = nano();
+    let be = NativeBackend::with_threads(2);
+    let state = be.init_state(&cfg, 11).unwrap();
+
+    let pack_len = 32;
+    let long = rand_seq(0, 75, cfg.vocab_size); // 32 + 32 + 11
+    let short = rand_seq(1, 12, cfg.vocab_size);
+    let mut packer = StreamingPacker::new(pack_len, 8);
+    let mut batches = packer.push(long.clone());
+    batches.extend(packer.push(short.clone()));
+    batches.extend(packer.flush());
+    assert_eq!(batches.len(), 1, "everything fits one under-8-row batch");
+    let batch = batches.pop().unwrap();
+    assert_eq!(batch.rows(), 3);
+    assert_eq!(batch.row_starts[1], vec![32], "continuation fragment");
+
+    // reference: each original sequence alone, monolithic, natural length
+    let solo = |seq: &Sequence| {
+        let b = PackedBatch::from_rows(
+            &[PackedRow {
+                sequences: vec![seq.clone()],
+            }],
+            seq.len(),
+        );
+        be.forward(&cfg, &state.params, &b).unwrap()
+    };
+    let ref_long = solo(&long);
+    let ref_short = solo(&short);
+
+    for chunk_len in [pack_len, 7] {
+        let got = be
+            .forward_chunked(&cfg, &state.params, &batch, chunk_len)
+            .unwrap();
+        let v = cfg.vocab_size;
+        let flat = got.data(); // (3, 32, V) row-major == stream order
+        let mut worst = 0.0f32;
+        // slots 0..75 of the stream are the split sequence
+        for (i, r) in ref_long.data().iter().enumerate() {
+            worst = worst.max((flat[i] - r).abs());
+        }
+        assert!(worst < 1e-5, "chunk_len {chunk_len}: long-seq diff {worst}");
+        // the short sequence packs right after the final fragment
+        let mut worst_s = 0.0f32;
+        for (i, r) in ref_short.data().iter().enumerate() {
+            worst_s = worst_s.max((flat[75 * v + i] - r).abs());
+        }
+        assert!(
+            worst_s < 1e-5,
+            "chunk_len {chunk_len}: short-seq diff {worst_s}"
+        );
+    }
+
+    // the monolithic forward CANNOT reproduce this: the continuation row
+    // restarts with zero state, so its outputs must differ
+    let mono = be.forward(&cfg, &state.params, &batch).unwrap();
+    let v = cfg.vocab_size;
+    let mut diff = 0.0f32;
+    for (i, r) in ref_long.data().iter().enumerate().skip(32 * v) {
+        diff = diff.max((mono.data()[i] - r).abs());
+    }
+    assert!(
+        diff > 1e-4,
+        "monolithic execution of a split sequence should diverge ({diff})"
+    );
+}

@@ -31,24 +31,16 @@ fn pack_all(lengths: &[usize], pack_len: usize, greedy: Option<usize>) -> Vec<Pa
         Some(buf) => {
             let mut p = GreedyPacker::new(pack_len, 1, buf);
             for s in seqs {
-                if let Some(b) = p.push(s) {
-                    out.push(b);
-                }
+                out.extend(p.push(s));
             }
-            while let Some(b) = p.flush() {
-                out.push(b);
-            }
+            out.extend(p.flush());
         }
         None => {
             let mut p = StreamingPacker::new(pack_len, 1);
             for s in seqs {
-                if let Some(b) = p.push(s) {
-                    out.push(b);
-                }
+                out.extend(p.push(s));
             }
-            if let Some(b) = p.flush() {
-                out.push(b);
-            }
+            out.extend(p.flush());
         }
     }
     out
@@ -280,22 +272,22 @@ fn padding_rates_match_paper_on_internlm_like_trace() {
             None => {
                 let mut p = StreamingPacker::new(4096, 1);
                 for s in &seqs {
-                    if let Some(b) = p.push(s.clone()) {
+                    for b in p.push(s.clone()) {
                         record(b);
                     }
                 }
-                if let Some(b) = p.flush() {
+                for b in p.flush() {
                     record(b);
                 }
             }
             Some(buf) => {
                 let mut p = GreedyPacker::new(4096, 1, buf);
                 for s in &seqs {
-                    if let Some(b) = p.push(s.clone()) {
+                    for b in p.push(s.clone()) {
                         record(b);
                     }
                 }
-                while let Some(b) = p.flush() {
+                for b in p.flush() {
                     record(b);
                 }
             }
@@ -325,7 +317,7 @@ fn length_sampler_feeds_packers_without_overflow() {
     for i in 0..2000u64 {
         let n = sampler.sample(&mut rng);
         let s = Sequence { tokens: vec![1; n], id: i };
-        if let Some(b) = p.push(s) {
+        for b in p.push(s) {
             assert_eq!(b.rows(), 2);
             batches += 1;
         }

@@ -95,7 +95,7 @@ fn steady_state_train_step_is_allocation_free() {
     // warmup: populates the arena free lists, the gemm scratch, the
     // gradient buffers, the specs cache, and the stats map keys
     // (pre-sized so the audit loop's own pushes never reallocate)
-    let mut losses: Vec<f32> = Vec::with_capacity(16);
+    let mut losses: Vec<f32> = Vec::with_capacity(32);
     losses.push(be.train_step(&cfg, &mut state, &b).unwrap());
     losses.push(be.train_step(&cfg, &mut state, &b).unwrap());
 
@@ -112,6 +112,29 @@ fn steady_state_train_step_is_allocation_free() {
     let deallocs = DEALLOCS.load(Ordering::SeqCst);
     assert_eq!(allocs, 0, "steady-state step allocated {allocs} times");
     assert_eq!(deallocs, 0, "steady-state step deallocated {deallocs} times");
+
+    // Mixed geometries: warm a second, longer batch shape (its arena
+    // buffers and the larger cross-entropy f64 scratch are sized in the
+    // backend's ensure phase), then *interleave* the two lengths — the
+    // arena recycles by length, so steps at either geometry must stay
+    // allocation-free once both are warm.
+    let b2 = batch(&cfg, 96);
+    losses.push(be.train_step(&cfg, &mut state, &b2).unwrap());
+    ALLOCS.store(0, Ordering::SeqCst);
+    DEALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..2 {
+        losses.push(be.train_step(&cfg, &mut state, &b).unwrap());
+        losses.push(be.train_step(&cfg, &mut state, &b2).unwrap());
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    let deallocs = DEALLOCS.load(Ordering::SeqCst);
+    assert_eq!(allocs, 0, "interleaved-length step allocated {allocs} times");
+    assert_eq!(
+        deallocs, 0,
+        "interleaved-length step deallocated {deallocs} times"
+    );
 
     // the audited steps must still be doing real work (loss-decrease
     // itself is asserted over longer runs in tests/native_backend.rs)
