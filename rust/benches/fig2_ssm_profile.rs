@@ -92,12 +92,11 @@ fn main() {
         4096.0 / model(4096)
     );
 
-    common::write_results(
-        "fig2_ssm_profile",
-        &Json::from_pairs([
-            ("figure", Json::from("fig2")),
-            ("gemm_mode", Json::from(gemm_mode)),
-            ("rows", Json::Arr(rows)),
-        ]),
-    );
+    let json = Json::from_pairs([
+        ("figure", Json::from("fig2")),
+        ("gemm_mode", Json::from(gemm_mode)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("fig2_ssm_profile", &json);
+    common::write_root_json("BENCH_FIG2_SSM.json", &json);
 }

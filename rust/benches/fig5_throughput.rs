@@ -100,14 +100,13 @@ fn main() {
         ]));
     }
 
-    common::write_results(
-        "fig5_throughput",
-        &Json::from_pairs([
-            ("figure", Json::from("fig5")),
-            ("gemm_mode", Json::from(gemm_mode)),
-            ("measured_tiny", Json::Arr(json_rows)),
-            ("measured_pack_vs_single", Json::from(speedup)),
-            ("modeled_a100", Json::Arr(model_rows)),
-        ]),
-    );
+    let json = Json::from_pairs([
+        ("figure", Json::from("fig5")),
+        ("gemm_mode", Json::from(gemm_mode)),
+        ("measured_tiny", Json::Arr(json_rows)),
+        ("measured_pack_vs_single", Json::from(speedup)),
+        ("modeled_a100", Json::Arr(model_rows)),
+    ]);
+    common::write_results("fig5_throughput", &json);
+    common::write_root_json("BENCH_FIG5_THROUGHPUT.json", &json);
 }

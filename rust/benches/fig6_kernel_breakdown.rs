@@ -159,15 +159,14 @@ fn main() {
     }
     println!("fwd-bwd total speedup: {total:.2}x   (paper: 3.91x)");
 
-    common::write_results(
-        "fig6_kernel_breakdown",
-        &Json::from_pairs([
-            ("figure", Json::from("fig6")),
-            ("gemm_mode", Json::from(gemm_mode)),
-            ("measured_ops", Json::Arr(rows_json)),
-            ("modeled_a100", Json::Arr(model_rows)),
-            ("modeled_total_speedup", Json::from(total)),
-            ("suite", suite.to_json()),
-        ]),
-    );
+    let json = Json::from_pairs([
+        ("figure", Json::from("fig6")),
+        ("gemm_mode", Json::from(gemm_mode)),
+        ("measured_ops", Json::Arr(rows_json)),
+        ("modeled_a100", Json::Arr(model_rows)),
+        ("modeled_total_speedup", Json::from(total)),
+        ("suite", suite.to_json()),
+    ]);
+    common::write_results("fig6_kernel_breakdown", &json);
+    common::write_root_json("BENCH_FIG6_KERNELS.json", &json);
 }

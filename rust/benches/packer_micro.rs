@@ -103,12 +103,11 @@ fn main() {
         "streaming packer below the 10 Mtok/s budget: {stream_mtps:.1}"
     );
 
-    common::write_results(
-        "packer_micro",
-        &Json::from_pairs([
-            ("streaming_mtok_per_s", Json::from(stream_mtps)),
-            ("greedy_mtok_per_s", Json::from(greedy_mtps)),
-            ("suite", suite.to_json()),
-        ]),
-    );
+    let json = Json::from_pairs([
+        ("streaming_mtok_per_s", Json::from(stream_mtps)),
+        ("greedy_mtok_per_s", Json::from(greedy_mtps)),
+        ("suite", suite.to_json()),
+    ]);
+    common::write_results("packer_micro", &json);
+    common::write_root_json("BENCH_PACKER.json", &json);
 }

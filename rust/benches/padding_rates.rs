@@ -107,11 +107,10 @@ fn main() {
     assert!(rate("streaming") < rate("pad-to-max"));
     println!("\nordering greedy < streaming < pad-to-max holds ✓");
 
-    common::write_results(
-        "padding_rates",
-        &Json::from_pairs([
-            ("figure", Json::from("discussion_padding_rates")),
-            ("rows", Json::Arr(rows)),
-        ]),
-    );
+    let json = Json::from_pairs([
+        ("figure", Json::from("discussion_padding_rates")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("padding_rates", &json);
+    common::write_root_json("BENCH_PADDING_RATES.json", &json);
 }

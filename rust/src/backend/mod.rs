@@ -22,11 +22,15 @@
 //! so `Trainer`, `DataParallelTrainer`, and the benches are
 //! backend-agnostic.  The native backend additionally implements the
 //! paper's §5 **chunked/stateful execution**
-//! ([`Backend::forward_chunked`] / [`Backend::train_step_chunked`]):
-//! fixed `L = chunk_len` operator shapes with SSM state + conv tails
-//! carried across chunk and row boundaries, enabling sequences longer
-//! than `pack_len` (split by the streaming packer) to train without
-//! padding blow-up.
+//! ([`Backend::forward_chunked`] / [`Backend::train_step_chunked`] /
+//! [`Backend::loss_and_grads_chunked`]): fixed `L = chunk_len` operator
+//! shapes with SSM state + conv tails carried across chunk and row
+//! boundaries, enabling sequences longer than `pack_len` (split by the
+//! streaming packer) to train without padding blow-up.  A batch's rows
+//! may be partitioned into independent **streams**
+//! (`PackedBatch::streams`, one carry lane each), which is what lets the
+//! chunked step compose with data parallelism: each dp worker owns a
+//! stable row range of whole streams and threads its carries alone.
 
 pub mod adamw;
 pub mod arena;
@@ -160,6 +164,31 @@ pub trait Backend {
         state_params: &[Tensor],
         batch: &PackedBatch,
     ) -> Result<(f32, Vec<Tensor>)>;
+
+    /// `(loss, grads)` of the chunked/stateful step (§5) — the worker
+    /// half of **chunk-aware data-parallel training** (§4).  `batch` is
+    /// this worker's stable row range of the step's batch (a contiguous
+    /// run of whole streams, [`PackedBatch::split_rows`]); the worker's
+    /// per-stream carry persists across calls, exactly as in
+    /// [`Backend::train_step_chunked`].  `denom` is the cross-entropy
+    /// normalizer of the *whole* (unsplit) batch, so the returned loss
+    /// and gradients are partial contributions: **summing** them across
+    /// workers reproduces the single-worker chunked step's loss and
+    /// gradients.  Backends without chunked support return an error.
+    fn loss_and_grads_chunked(
+        &self,
+        model: &ModelConfig,
+        state_params: &[Tensor],
+        batch: &PackedBatch,
+        chunk_len: usize,
+        denom: f32,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let _ = (model, state_params, batch, chunk_len, denom);
+        anyhow::bail!(
+            "backend `{}` does not support chunked execution",
+            self.kind().name()
+        )
+    }
 
     /// Apply one optimizer update with externally averaged grads — the
     /// leader half of data-parallel training.

@@ -99,12 +99,30 @@ fn release_layer(c: LayerCache, arena: &mut StepArena) {
 }
 
 /// Reusable per-backend state for the model's forward/backward: the
-/// buffer arena plus the layer-cache spine (its `Vec` capacity survives
-/// across steps, so steady-state steps never touch the heap).
+/// buffer arena, the layer-cache spine, and the chunked step's per-chunk
+/// spines + carry-state pool (every `Vec` capacity survives across
+/// steps, so steady-state steps — monolithic *and* chunked — never touch
+/// the heap).
 #[derive(Default)]
 pub struct ModelWorkspace {
     pub arena: StepArena,
     layers: Vec<LayerCache>,
+    /// chunked step: per-chunk head caches (spine reused across steps)
+    chunk_heads: Vec<ForwardCache>,
+    /// chunked step: per-chunk carry-in states awaiting the backward
+    chunk_states: Vec<ChunkState>,
+    /// chunked step: per-chunk filled layer-cache spines
+    chunk_layers: Vec<Vec<LayerCache>>,
+    /// empty layer-cache spines (capacity kept) for the next chunk
+    spare_layer_spines: Vec<Vec<LayerCache>>,
+    /// pooled `ChunkState`s (spines + buffers) for the chunked step
+    free_chunk_states: Vec<ChunkState>,
+    /// multi-stream gather scratch: per-chunk lane-major token planes
+    gather_tokens: Vec<i32>,
+    gather_targets: Vec<i32>,
+    gather_pos: Vec<i32>,
+    /// multi-stream gather scratch: per-chunk lane-major loss mask
+    gather_mask: Vec<f32>,
 }
 
 impl ModelWorkspace {
@@ -123,6 +141,53 @@ impl ModelWorkspace {
         if self.arena.f64_scratch.len() < chunks {
             self.arena.f64_scratch.resize(chunks, 0.0);
         }
+    }
+
+    /// Pre-size the multi-stream gather scratch for chunks of
+    /// `streams · chunk_len` slots (ensure phase, like
+    /// [`ensure_scratch`](Self::ensure_scratch)) so the chunked step
+    /// body never grows it.
+    pub fn ensure_chunk_gather(&mut self, streams: usize, chunk_len: usize) {
+        // clear first (the buffers may still hold the previous step's
+        // final gather): with len 0, `reserve(n)` guarantees capacity
+        // ≥ n and is a no-op once warm
+        let n = streams * chunk_len;
+        self.gather_tokens.clear();
+        self.gather_tokens.reserve(n);
+        self.gather_targets.clear();
+        self.gather_targets.reserve(n);
+        self.gather_pos.clear();
+        self.gather_pos.reserve(n);
+        self.gather_mask.clear();
+        self.gather_mask.reserve(n);
+    }
+
+    /// A pooled [`ChunkState`] with `lanes` carry lanes for `cfg`
+    /// (`zeroed` = stream-start semantics; otherwise contents are
+    /// unspecified and must be fully overwritten).  Pool misses fall
+    /// back to the arena; stale-geometry pool entries are recycled.
+    pub fn take_chunk_state(&mut self, cfg: &ModelConfig, lanes: usize, zeroed: bool) -> ChunkState {
+        while let Some(mut cs) = self.free_chunk_states.pop() {
+            if cs.fits(cfg, lanes) {
+                if zeroed {
+                    for v in cs.h.iter_mut().chain(cs.tail.iter_mut()) {
+                        v.iter_mut().for_each(|x| *x = 0.0);
+                    }
+                }
+                return cs;
+            }
+            cs.release(&mut self.arena);
+        }
+        if zeroed {
+            ChunkState::zeroed(cfg, lanes, &mut self.arena)
+        } else {
+            ChunkState::uninit(cfg, lanes, &mut self.arena)
+        }
+    }
+
+    /// Return a [`ChunkState`] (buffers *and* spine) to the pool.
+    pub fn recycle_chunk_state(&mut self, cs: ChunkState) {
+        self.free_chunk_states.push(cs);
     }
 }
 
@@ -501,15 +566,37 @@ pub fn forward_chunk_cached(
     forward_impl(cfg, p, tokens, pos, rows, len, threads, ws, Some((state_in, state_out)))
 }
 
+/// Gather one chunk's lane-major plane: lane `s`'s slice
+/// `[s·stream_tokens + off, s·stream_tokens + off + clen)` of `src`,
+/// concatenated over lanes.  `dst` keeps its capacity (clear + extend),
+/// so a warm buffer gathers without touching the heap.
+fn gather_plane<T: Copy>(
+    src: &[T],
+    streams: usize,
+    stream_tokens: usize,
+    off: usize,
+    clen: usize,
+    dst: &mut Vec<T>,
+) {
+    dst.clear();
+    for s in 0..streams {
+        let base = s * stream_tokens + off;
+        dst.extend_from_slice(&src[base..base + clen]);
+    }
+}
+
 /// Chunked/stateful forward over a whole packed batch (paper §5): the
-/// `(rows, len)` plane is traversed as **one row-major stream** in
-/// `chunk_len`-slot steps, carrying per-layer SSM state and conv tails
-/// across chunk boundaries — including across *row* boundaries, which is
-/// what lets the streaming packer split sequences longer than `pack_len`
-/// over consecutive rows (continuation position indices keep the carry
-/// flowing; every fresh `pos == 0` start still isolates).  Returns
-/// `(rows, len, vocab)` logits identical (within fp reassociation) to
-/// the monolithic [`forward_logits`].
+/// `(rows, len)` plane is traversed as `streams` independent row-major
+/// streams (stream `s` = rows `[s·rows/streams, (s+1)·rows/streams)`,
+/// one carry lane each, processed side by side) in `chunk_len`-slot
+/// steps, carrying per-layer SSM state and conv tails across chunk
+/// boundaries — including across *row* boundaries within a stream, which
+/// is what lets the streaming packer split sequences longer than
+/// `pack_len` over consecutive rows (continuation position indices keep
+/// the carry flowing; every fresh `pos == 0` start still isolates).
+/// With `streams == 1` the whole batch is one stream (the PR-3
+/// behavior).  Returns `(rows, len, vocab)` logits identical (within fp
+/// reassociation) to the monolithic [`forward_logits`].
 #[allow(clippy::too_many_arguments)]
 pub fn forward_logits_chunked(
     cfg: &ModelConfig,
@@ -518,38 +605,57 @@ pub fn forward_logits_chunked(
     pos: &[i32],
     rows: usize,
     len: usize,
+    streams: usize,
     chunk_len: usize,
     threads: usize,
     ws: &mut ModelWorkspace,
 ) -> Tensor {
     assert!(chunk_len > 0, "chunk_len must be positive");
+    assert!(
+        streams >= 1 && rows % streams == 0,
+        "rows {rows} must divide into {streams} streams"
+    );
     let t_total = rows * len;
     let v = cfg.vocab_size;
+    let stream_tokens = t_total / streams;
     let mut out = vec![0.0f32; t_total * v];
-    let mut cur = ChunkState::zeroed(cfg, 1, &mut ws.arena);
+    let mut g_tokens = std::mem::take(&mut ws.gather_tokens);
+    let mut g_pos = std::mem::take(&mut ws.gather_pos);
+    let mut cur = ws.take_chunk_state(cfg, streams, true);
     let mut off = 0;
-    while off < t_total {
-        let clen = chunk_len.min(t_total - off);
-        let mut nxt = ChunkState::uninit(cfg, 1, &mut ws.arena);
+    while off < stream_tokens {
+        let clen = chunk_len.min(stream_tokens - off);
+        let mut nxt = ws.take_chunk_state(cfg, streams, false);
+        // lane-major gather (with one stream this is a plain sub-slice
+        // copy — negligible next to the chunk's GEMMs, and alloc-free on
+        // warm buffers)
+        gather_plane(tokens, streams, stream_tokens, off, clen, &mut g_tokens);
+        gather_plane(pos, streams, stream_tokens, off, clen, &mut g_pos);
         let fc = forward_chunk_cached(
             cfg,
             p,
-            &tokens[off..off + clen],
-            &pos[off..off + clen],
-            1,
+            &g_tokens,
+            &g_pos,
+            streams,
             clen,
             threads,
             ws,
             &cur,
             &mut nxt,
         );
-        out[off * v..(off + clen) * v].copy_from_slice(&fc.logits);
+        // scatter the chunk's lane-major logits back to batch order
+        for s in 0..streams {
+            let dst = (s * stream_tokens + off) * v;
+            out[dst..dst + clen * v].copy_from_slice(&fc.logits[s * clen * v..(s + 1) * clen * v]);
+        }
         release_forward(fc, ws);
-        cur.release(&mut ws.arena);
+        ws.recycle_chunk_state(cur);
         cur = nxt;
         off += clen;
     }
-    cur.release(&mut ws.arena);
+    ws.recycle_chunk_state(cur);
+    ws.gather_tokens = g_tokens;
+    ws.gather_pos = g_pos;
     Tensor::new(&[rows, len, v], out)
 }
 
@@ -1077,18 +1183,29 @@ fn layers_backward(
 
 /// Chunked/stateful loss + gradients (paper §5), the training-side twin
 /// of [`forward_logits_chunked`]: the `(rows, len)` batch is traversed
-/// as one row-major stream in `chunk_len`-slot pieces, forward carrying
+/// as `streams` independent row-major streams (one carry lane each,
+/// processed side by side) in `chunk_len`-slot pieces, forward carrying
 /// per-layer `(h, conv tail)` state, backward carrying the matching
-/// adjoints in reverse — full BPTT across every chunk of the stream, so
-/// the gradients match the monolithic [`loss_and_grads_into`] up to fp
-/// reassociation.  The cross-entropy is normalized by the *whole*
-/// batch's mask sum, chunk sums accumulated in `f64`.
+/// adjoints in reverse — full BPTT across every chunk of every stream,
+/// so the gradients match the monolithic [`loss_and_grads_into`] up to
+/// fp reassociation.  Chunk loss sums are accumulated in `f64`.
 ///
-/// `carry`, when provided, is the stream-start state (the previous
+/// `denom` is the cross-entropy normalizer.  For a whole batch that is
+/// [`ops::mask_denom`] of its own mask; a data-parallel worker running a
+/// row-split sub-batch passes the *full* batch's denominator instead, so
+/// summing worker losses and gradients reproduces the single-worker
+/// step exactly (§4 chunk-aware dp).
+///
+/// `carry`, when provided, is the per-stream start state (the previous
 /// step's stream-end state for truncated-BPTT continuation across
 /// batches; treated as a constant in the backward) and is replaced with
-/// this stream's end state on return.  `None` starts from zeros and
-/// discards the end state.
+/// this batch's stream-end state on return.  Its lane count must equal
+/// `streams`.  `None` starts from zeros and discards the end state.
+///
+/// Every per-chunk spine (head caches, layer caches, carry states) and
+/// the multi-stream gather scratch is recycled through `ws`, so the
+/// steady-state chunked step performs zero heap allocations
+/// (`tests/zero_alloc.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn loss_and_grads_chunked_into(
     cfg: &ModelConfig,
@@ -1099,13 +1216,20 @@ pub fn loss_and_grads_chunked_into(
     mask: &[f32],
     rows: usize,
     len: usize,
+    streams: usize,
     chunk_len: usize,
     threads: usize,
     ws: &mut ModelWorkspace,
     grads: &mut [Vec<f32>],
+    denom: f32,
     mut carry: Option<&mut ChunkState>,
 ) -> f32 {
     assert!(chunk_len > 0, "chunk_len must be positive");
+    assert!(
+        streams >= 1 && rows % streams == 0,
+        "rows {rows} must divide into {streams} streams"
+    );
+    assert!(denom > 0.0, "cross-entropy denom must be positive");
     assert_eq!(grads.len(), params::count(cfg), "gradient buffer count");
     for g in grads.iter_mut() {
         g.iter_mut().for_each(|x| *x = 0.0);
@@ -1115,29 +1239,47 @@ pub fn loss_and_grads_chunked_into(
     assert_eq!(targets.len(), t_total);
     assert_eq!(pos.len(), t_total);
     assert_eq!(mask.len(), t_total);
-    let denom = ops::mask_denom(mask);
+    let stream_tokens = t_total / streams;
+    let n_chunks = stream_tokens.div_ceil(chunk_len);
 
-    // Forward over the stream, keeping every chunk's layer caches, head
+    // Persistent spines out of the workspace: their capacities survive
+    // across steps, so the steady-state step never grows them.
+    let mut heads = std::mem::take(&mut ws.chunk_heads);
+    let mut states = std::mem::take(&mut ws.chunk_states);
+    let mut filled = std::mem::take(&mut ws.chunk_layers);
+    let mut spare = std::mem::take(&mut ws.spare_layer_spines);
+    debug_assert!(heads.is_empty() && states.is_empty() && filled.is_empty());
+    if ws.layers.capacity() == 0 {
+        if let Some(s) = spare.pop() {
+            ws.layers = s;
+        }
+    }
+    let mut g_tokens = std::mem::take(&mut ws.gather_tokens);
+    let mut g_targets = std::mem::take(&mut ws.gather_targets);
+    let mut g_pos = std::mem::take(&mut ws.gather_pos);
+    let mut g_mask = std::mem::take(&mut ws.gather_mask);
+
+    // Forward over the streams, keeping every chunk's layer caches, head
     // cache, and carry-in state for the reverse sweep.
     let mut cur = match carry.as_mut() {
-        Some(c) if c.fits(cfg, 1) => std::mem::take(*c),
-        Some(_) => panic!("chunk carry shape does not match model/geometry"),
-        None => ChunkState::zeroed(cfg, 1, &mut ws.arena),
+        Some(c) if c.fits(cfg, streams) => std::mem::take(*c),
+        Some(_) => panic!("chunk carry shape does not match model/stream geometry"),
+        None => ws.take_chunk_state(cfg, streams, true),
     };
-    let n_chunks = t_total.div_ceil(chunk_len);
-    let mut states: Vec<ChunkState> = Vec::with_capacity(n_chunks);
-    let mut heads: Vec<ForwardCache> = Vec::with_capacity(n_chunks);
-    let mut chunk_layers: Vec<Vec<LayerCache>> = Vec::with_capacity(n_chunks);
     let mut off = 0;
-    while off < t_total {
-        let clen = chunk_len.min(t_total - off);
-        let mut nxt = ChunkState::uninit(cfg, 1, &mut ws.arena);
+    while off < stream_tokens {
+        let clen = chunk_len.min(stream_tokens - off);
+        let mut nxt = ws.take_chunk_state(cfg, streams, false);
+        // lane-major gather (with one stream: a plain sub-slice copy,
+        // alloc-free on warm buffers)
+        gather_plane(tokens, streams, stream_tokens, off, clen, &mut g_tokens);
+        gather_plane(pos, streams, stream_tokens, off, clen, &mut g_pos);
         let fc = forward_chunk_cached(
             cfg,
             p,
-            &tokens[off..off + clen],
-            &pos[off..off + clen],
-            1,
+            &g_tokens,
+            &g_pos,
+            streams,
             clen,
             threads,
             ws,
@@ -1145,44 +1287,41 @@ pub fn loss_and_grads_chunked_into(
             &mut nxt,
         );
         heads.push(fc);
-        chunk_layers.push(std::mem::take(&mut ws.layers));
+        filled.push(std::mem::replace(
+            &mut ws.layers,
+            spare.pop().unwrap_or_default(),
+        ));
         states.push(cur);
         cur = nxt;
         off += clen;
     }
     match carry {
-        Some(c) => *c = cur, // stream-end state for the next batch
-        None => cur.release(&mut ws.arena),
+        Some(c) => *c = cur, // per-stream end state for the next batch
+        None => ws.recycle_chunk_state(cur),
     }
 
     // Backward over chunks in reverse; `adj` holds each layer's adjoint
     // of the current chunk's carry-out (zeros for the final chunk).
-    let mut adj = ChunkState::zeroed(cfg, 1, &mut ws.arena);
+    let mut adj = ws.take_chunk_state(cfg, streams, true);
     let mut loss_sum = 0.0f64;
     for k in (0..n_chunks).rev() {
         let off = k * chunk_len;
-        let clen = chunk_len.min(t_total - off);
+        let clen = chunk_len.min(stream_tokens - off);
         let fc = heads.pop().expect("head cache per chunk");
-        let mut layers = chunk_layers.pop().expect("layer caches per chunk");
+        let mut layers = filled.pop().expect("layer caches per chunk");
         let sin = states.pop().expect("carry-in per chunk");
-        let (ls, dh) = head_backward(
-            cfg,
-            p,
-            fc,
-            &targets[off..off + clen],
-            &mask[off..off + clen],
-            denom,
-            threads,
-            ws,
-            grads,
-        );
+        gather_plane(tokens, streams, stream_tokens, off, clen, &mut g_tokens);
+        gather_plane(targets, streams, stream_tokens, off, clen, &mut g_targets);
+        gather_plane(pos, streams, stream_tokens, off, clen, &mut g_pos);
+        gather_plane(mask, streams, stream_tokens, off, clen, &mut g_mask);
+        let (ls, dh) = head_backward(cfg, p, fc, &g_targets, &g_mask, denom, threads, ws, grads);
         loss_sum += ls;
         layers_backward(
             cfg,
             p,
-            &tokens[off..off + clen],
-            &pos[off..off + clen],
-            1,
+            &g_tokens,
+            &g_pos,
+            streams,
             clen,
             threads,
             ws,
@@ -1191,17 +1330,26 @@ pub fn loss_and_grads_chunked_into(
             dh,
             Some((&sin, &mut adj)),
         );
-        sin.release(&mut ws.arena);
-        if layers.capacity() > ws.layers.capacity() {
-            ws.layers = layers; // keep the largest spine for reuse
-        }
+        ws.recycle_chunk_state(sin);
+        spare.push(layers); // drained; capacity kept for the next step
     }
-    adj.release(&mut ws.arena);
+    ws.recycle_chunk_state(adj);
+
+    // Restore the workspace spines (capacities survive to the next step).
+    ws.chunk_heads = heads;
+    ws.chunk_states = states;
+    ws.chunk_layers = filled;
+    ws.spare_layer_spines = spare;
+    ws.gather_tokens = g_tokens;
+    ws.gather_targets = g_targets;
+    ws.gather_pos = g_pos;
+    ws.gather_mask = g_mask;
     (loss_sum / denom as f64) as f32
 }
 
 /// Allocating convenience wrapper over [`loss_and_grads_chunked_into`]
-/// (zero stream-start state) — the differential-test surface.
+/// (zero stream-start state, whole-batch denominator) — the
+/// differential-test surface.
 #[allow(clippy::too_many_arguments)]
 pub fn loss_and_grads_chunked(
     cfg: &ModelConfig,
@@ -1212,15 +1360,17 @@ pub fn loss_and_grads_chunked(
     mask: &[f32],
     rows: usize,
     len: usize,
+    streams: usize,
     chunk_len: usize,
     threads: usize,
 ) -> (f32, Vec<Tensor>) {
     let mut ws = ModelWorkspace::new();
     let specs = params::specs(cfg);
     let mut grads: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.element_count()]).collect();
+    let denom = ops::mask_denom(mask);
     let loss = loss_and_grads_chunked_into(
-        cfg, p, tokens, targets, pos, mask, rows, len, chunk_len, threads, &mut ws, &mut grads,
-        None,
+        cfg, p, tokens, targets, pos, mask, rows, len, streams, chunk_len, threads, &mut ws,
+        &mut grads, denom, None,
     );
     let tensors = specs
         .iter()
@@ -1389,21 +1539,72 @@ mod tests {
             1,
             &mut ws,
         );
-        for chunk_len in [1usize, 5, 16, 32] {
-            let got = forward_logits_chunked(
+        for streams in [1usize, 2] {
+            for chunk_len in [1usize, 5, 16, 32] {
+                let got = forward_logits_chunked(
+                    &cfg,
+                    &p,
+                    batch.tokens.data(),
+                    batch.position_indices.data(),
+                    2,
+                    16,
+                    streams,
+                    chunk_len,
+                    1,
+                    &mut ws,
+                );
+                assert_eq!(got.shape(), full.shape());
+                for (a, b) in got.data().iter().zip(full.data()) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "streams {streams} chunk_len {chunk_len}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_partitioned_grads_match_single_stream() {
+        // Two fresh rows (every row starts at pos == 0): running them as
+        // two side-by-side streams must give the same loss and gradients
+        // as the one-stream row-major traversal.
+        let cfg = nano();
+        let p = params::init(&cfg, 8);
+        let batch = PackedBatch::from_rows(
+            &[
+                PackedRow {
+                    sequences: vec![rand_seq(1, 9, cfg.vocab_size), rand_seq(2, 5, cfg.vocab_size)],
+                },
+                PackedRow {
+                    sequences: vec![rand_seq(3, 12, cfg.vocab_size)],
+                },
+            ],
+            16,
+        );
+        let run = |streams: usize, chunk_len: usize| {
+            loss_and_grads_chunked(
                 &cfg,
                 &p,
                 batch.tokens.data(),
+                batch.targets.data(),
                 batch.position_indices.data(),
+                batch.loss_mask.data(),
                 2,
                 16,
+                streams,
                 chunk_len,
                 1,
-                &mut ws,
-            );
-            assert_eq!(got.shape(), full.shape());
-            for (a, b) in got.data().iter().zip(full.data()) {
-                assert!((a - b).abs() < 1e-5, "chunk_len {chunk_len}: {a} vs {b}");
+            )
+        };
+        let (l1, g1) = run(1, 7);
+        for chunk_len in [4usize, 16] {
+            let (l2, g2) = run(2, chunk_len);
+            assert!((l1 - l2).abs() < 1e-5, "loss {l1} vs {l2}");
+            for (a, b) in g1.iter().zip(&g2) {
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert!((x - y).abs() < 1e-5_f32.max(1e-4 * y.abs()), "{x} vs {y}");
+                }
             }
         }
     }

@@ -24,7 +24,7 @@ use crate::tensor::Tensor;
 use crate::Result;
 
 use super::adamw::{self, AdamWConfig};
-use super::{model, native_buckets, params, Backend, BatchGeometry, TrainState};
+use super::{model, native_buckets, ops, params, Backend, BatchGeometry, TrainState};
 
 pub struct NativeBackend {
     threads: usize,
@@ -37,12 +37,15 @@ pub struct NativeBackend {
     /// Param specs for the model last seen (spec building allocates
     /// names; caching keeps the steady-state step allocation-free).
     specs_cache: RefCell<Option<(ModelConfig, Vec<ParamSpec>)>>,
-    /// Stream-end carry of the last chunked train step (paper §5):
-    /// reused as the next step's stream-start state — truncated BPTT at
-    /// batch boundaries, so sequences the packer split across batches
-    /// continue with real state.  Fresh `pos == 0` starts discard it via
-    /// the boundary mask; reset explicitly with
-    /// [`NativeBackend::reset_chunk_carry`].
+    /// Stream-end carry of the last chunked train step (paper §5), one
+    /// lane per stream of the batch it served: reused as the next step's
+    /// stream-start state — truncated BPTT at batch boundaries, so
+    /// sequences the packer split across batches continue with real
+    /// state.  Fresh `pos == 0` starts discard it via the boundary mask;
+    /// a batch whose stream partition no longer matches (e.g. the
+    /// packer's final undersized flush batch collapsing to fewer
+    /// streams) resets it to zeros instead of reusing stale lanes; reset
+    /// explicitly with [`NativeBackend::reset_chunk_carry`].
     chunk_carry: RefCell<Option<model::ChunkState>>,
 }
 
@@ -138,6 +141,54 @@ impl NativeBackend {
             "batch contains tokens outside vocab 0..{v}"
         );
         Ok(())
+    }
+
+    /// The batch's validated stream count for chunked execution (rows
+    /// must divide evenly into streams; `chunk_len` must be positive) —
+    /// the single source of the partition rule for every chunked entry
+    /// point.
+    fn batch_streams(batch: &PackedBatch, chunk_len: usize) -> Result<usize> {
+        anyhow::ensure!(chunk_len > 0, "chunk_len must be positive");
+        let streams = batch.streams.max(1);
+        anyhow::ensure!(
+            batch.rows() % streams == 0,
+            "batch of {} rows has a degenerate stream partition ({streams})",
+            batch.rows()
+        );
+        Ok(streams)
+    }
+
+    /// Ensure phase shared by the chunked training entry points:
+    /// validates the batch's stream partition, sizes the workspace
+    /// scratch, and keeps the persisted per-stream carry consistent —
+    /// when the model or the stream count changed (e.g. the packer's
+    /// final undersized flush batch collapsing to fewer streams), the
+    /// carry is reset to zeros rather than reinterpreting stale lanes as
+    /// another stream's state.  Returns the batch's stream count.
+    fn ensure_chunked(
+        &self,
+        model_cfg: &ModelConfig,
+        batch: &PackedBatch,
+        chunk_len: usize,
+    ) -> Result<usize> {
+        let streams = Self::batch_streams(batch, chunk_len)?;
+        let mut ws = self.ws.borrow_mut();
+        ws.ensure_scratch(batch.rows() * batch.pack_len());
+        let stream_tokens = batch.rows() / streams * batch.pack_len();
+        ws.ensure_chunk_gather(streams, chunk_len.min(stream_tokens));
+        let mut carry = self.chunk_carry.borrow_mut();
+        let fits = carry.as_ref().is_some_and(|c| c.fits(model_cfg, streams));
+        if !fits {
+            if let Some(old) = carry.take() {
+                log::debug!(
+                    "chunked carry reset: model/stream geometry changed \
+                     (now {streams} streams)"
+                );
+                old.release(&mut ws.arena);
+            }
+            *carry = Some(ws.take_chunk_state(model_cfg, streams, true));
+        }
+        Ok(streams)
     }
 }
 
@@ -255,7 +306,7 @@ impl Backend for NativeBackend {
         chunk_len: usize,
     ) -> Result<Tensor> {
         self.check_batch(model, batch)?;
-        anyhow::ensure!(chunk_len > 0, "chunk_len must be positive");
+        let streams = Self::batch_streams(batch, chunk_len)?;
         let t0 = Instant::now();
         let logits = model::forward_logits_chunked(
             model,
@@ -264,6 +315,7 @@ impl Backend for NativeBackend {
             batch.position_indices.data(),
             batch.rows(),
             batch.pack_len(),
+            streams,
             chunk_len,
             self.threads,
             &mut self.ws.borrow_mut(),
@@ -280,24 +332,10 @@ impl Backend for NativeBackend {
         chunk_len: usize,
     ) -> Result<f32> {
         self.check_batch(model, batch)?;
-        anyhow::ensure!(chunk_len > 0, "chunk_len must be positive");
         let specs = self.cached_specs(model);
         self.ensure_grad_bufs(specs.as_slice());
-        self.ws
-            .borrow_mut()
-            .ensure_scratch(batch.rows() * batch.pack_len());
-        // cross-batch carry: reset when the model geometry changed
-        {
-            let mut ws = self.ws.borrow_mut();
-            let mut carry = self.chunk_carry.borrow_mut();
-            let fits = carry.as_ref().is_some_and(|c| c.fits(model, 1));
-            if !fits {
-                if let Some(old) = carry.take() {
-                    old.release(&mut ws.arena);
-                }
-                *carry = Some(model::ChunkState::zeroed(model, 1, &mut ws.arena));
-            }
-        }
+        let streams = self.ensure_chunked(model, batch, chunk_len)?;
+        let denom = ops::mask_denom(batch.loss_mask.data());
         let t0 = Instant::now();
         let loss = {
             let mut ws = self.ws.borrow_mut();
@@ -312,10 +350,12 @@ impl Backend for NativeBackend {
                 batch.loss_mask.data(),
                 batch.rows(),
                 batch.pack_len(),
+                streams,
                 chunk_len,
                 self.threads,
                 &mut ws,
                 &mut grads,
+                denom,
                 carry.as_mut(),
             )
         };
@@ -329,6 +369,56 @@ impl Backend for NativeBackend {
         self.note("train_step_chunked.adamw", (t2 - t1).as_secs_f64());
         anyhow::ensure!(loss.is_finite(), "non-finite loss at step {}", state.step);
         Ok(loss)
+    }
+
+    fn loss_and_grads_chunked(
+        &self,
+        model: &ModelConfig,
+        state_params: &[Tensor],
+        batch: &PackedBatch,
+        chunk_len: usize,
+        denom: f32,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        self.check_batch(model, batch)?;
+        anyhow::ensure!(denom > 0.0, "cross-entropy denom must be positive");
+        let specs = self.cached_specs(model);
+        let streams = self.ensure_chunked(model, batch, chunk_len)?;
+        let t0 = Instant::now();
+        // fresh grad buffers (they are moved into the returned tensors);
+        // activations and chunk spines still reuse the persistent arena
+        let mut grads: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|s| vec![0.0f32; s.element_count()])
+            .collect();
+        let loss = {
+            let mut ws = self.ws.borrow_mut();
+            let mut carry = self.chunk_carry.borrow_mut();
+            model::loss_and_grads_chunked_into(
+                model,
+                state_params,
+                batch.tokens.data(),
+                batch.targets.data(),
+                batch.position_indices.data(),
+                batch.loss_mask.data(),
+                batch.rows(),
+                batch.pack_len(),
+                streams,
+                chunk_len,
+                self.threads,
+                &mut ws,
+                &mut grads,
+                denom,
+                carry.as_mut(),
+            )
+        };
+        self.note("grads_chunked", t0.elapsed().as_secs_f64());
+        anyhow::ensure!(loss.is_finite(), "non-finite loss in chunked grads pass");
+        let tensors = specs
+            .iter()
+            .zip(grads)
+            .map(|(s, g)| Tensor::new(&s.shape, g))
+            .collect();
+        Ok((loss, tensors))
     }
 
     fn loss_and_grads(

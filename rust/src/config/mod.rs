@@ -206,6 +206,13 @@ pub struct PackingConfig {
     /// buffered sequences for the greedy (sorted best-fit) packer;
     /// 0 = pure streaming first-fit
     pub greedy_buffer: usize,
+    /// stream-partition count for the streaming packer (§5 chunked
+    /// execution composed with §4 data parallelism): the batch's rows
+    /// divide into `streams` independent lanes whose fragments never
+    /// cross lane boundaries, so chunked execution threads one carry per
+    /// lane and a dp row split along lane boundaries is exact.  Must
+    /// divide `rows`; 1 = the whole batch is one stream.
+    pub streams: usize,
 }
 
 impl PackingConfig {
@@ -214,6 +221,7 @@ impl PackingConfig {
             pack_len,
             rows,
             greedy_buffer: 0,
+            streams: 1,
         }
     }
 
@@ -222,6 +230,7 @@ impl PackingConfig {
             pack_len,
             rows,
             greedy_buffer: buffer,
+            streams: 1,
         }
     }
 }
@@ -283,6 +292,7 @@ impl TrainConfig {
             ("pack_len", Json::from(self.packing.pack_len)),
             ("rows", Json::from(self.packing.rows)),
             ("greedy_buffer", Json::from(self.packing.greedy_buffer)),
+            ("streams", Json::from(self.packing.streams)),
             ("chunk_len", Json::from(self.chunk_len)),
             ("steps", Json::from(self.steps)),
             ("seed", Json::from(self.seed as usize)),
@@ -315,6 +325,9 @@ impl TrainConfig {
         }
         if let Some(v) = get_u("greedy_buffer") {
             cfg.packing.greedy_buffer = v;
+        }
+        if let Some(v) = get_u("streams") {
+            cfg.packing.streams = v;
         }
         if let Some(v) = get_u("chunk_len") {
             cfg.chunk_len = v;
@@ -356,10 +369,37 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Chunked-execution packer routing (§5): with over-length sequences
+    /// (`max_len > pack_len`) only the streaming packer can split —
+    /// best-fit-decreasing reorders rows, severing fragment chains — so
+    /// a greedy-buffer config is routed to streaming with a warning
+    /// rather than erroring (or panicking in the pipeline) depending on
+    /// the packer choice.  Both trainer entry points call this after
+    /// resolving the backend's geometry.
+    pub fn route_chunked_packer(&mut self, pack_len: usize) {
+        if self.chunk_len > 0 && self.max_len > pack_len && self.packing.greedy_buffer > 0 {
+            log::warn!(
+                "chunked training with max_len {} > pack_len {pack_len}: \
+                 over-length sequences need the streaming packer; ignoring \
+                 greedy_buffer {}",
+                self.max_len,
+                self.packing.greedy_buffer
+            );
+            self.packing.greedy_buffer = 0;
+        }
+    }
+
     pub fn validate(&self) -> Result<()> {
         self.model.validate()?;
         anyhow::ensure!(self.packing.pack_len > 0, "pack_len must be positive");
         anyhow::ensure!(self.packing.rows > 0, "rows must be positive");
+        anyhow::ensure!(self.packing.streams >= 1, "packing streams must be >= 1");
+        anyhow::ensure!(
+            self.packing.rows % self.packing.streams == 0,
+            "rows {} must divide into {} streams",
+            self.packing.rows,
+            self.packing.streams
+        );
         anyhow::ensure!(self.steps > 0, "steps must be positive");
         anyhow::ensure!(self.dp_workers >= 1, "dp_workers must be >= 1");
         anyhow::ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
@@ -369,16 +409,30 @@ impl TrainConfig {
             self.min_len,
             self.max_len
         );
+        // Chunked execution assumes the pack scheme's row/fragment
+        // semantics (position-index boundary resets, continuation
+        // fragments, per-stream carries); padding and single-sequence
+        // batches have none of that, so dispatching them chunked would
+        // silently break the step's contracts.
+        anyhow::ensure!(
+            self.chunk_len == 0 || self.scheme == Scheme::Pack,
+            "chunk_len > 0 requires the pack scheme (chunked/stateful \
+             execution assumes packed row/fragment semantics; set \
+             chunk_len = 0 for scheme `{}`)",
+            self.scheme.name()
+        );
         // Monolithic execution cannot run a sequence longer than a pack
         // row; chunked execution (§5) can, via the streaming packer's
-        // continuation fragments — best-fit-decreasing reorders rows, so
-        // the greedy packer cannot host split sequences.
-        let over_length_ok =
-            self.chunk_len > 0 && self.scheme == Scheme::Pack && self.packing.greedy_buffer == 0;
+        // continuation fragments.  Best-fit-decreasing reorders rows, so
+        // the greedy packer cannot host split sequences — the trainer
+        // routes a chunked over-length config to the streaming packer
+        // (see `Trainer::new`), so `greedy_buffer > 0` is not an error.
+        let over_length_ok = self.chunk_len > 0 && self.scheme == Scheme::Pack;
         anyhow::ensure!(
             over_length_ok || self.max_len <= self.packing.pack_len,
             "max_len {} exceeds pack_len {} (allowed only with chunk_len > 0 \
-             on the pack scheme with the streaming packer)",
+             on the pack scheme, where the streaming packer splits \
+             over-length sequences into continuation fragments)",
             self.max_len,
             self.packing.pack_len
         );
@@ -451,20 +505,50 @@ mod tests {
     }
 
     #[test]
-    fn chunked_allows_over_length_on_streaming_pack_only() {
+    fn chunked_allows_over_length_on_pack_only() {
         let mut c = TrainConfig::defaults(ModelConfig::tiny());
         c.max_len = 2 * c.packing.pack_len;
         c.mean_len = c.packing.pack_len as f64;
         assert!(c.validate().is_err(), "monolithic must reject over-length");
         c.chunk_len = 64;
         assert!(c.validate().is_ok(), "chunked streaming pack splits");
+        // greedy + over-length validates too: the trainer routes it to
+        // the streaming packer, so the config no longer errors depending
+        // on packer choice
         c.packing.greedy_buffer = 16;
-        assert!(c.validate().is_err(), "greedy packer cannot split");
-        // round trip keeps chunk_len
+        assert!(c.validate().is_ok(), "greedy is routed, not rejected");
+        // round trip keeps chunk_len and streams
         c.packing.greedy_buffer = 0;
+        c.packing.streams = 2;
         let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.chunk_len, 64);
         assert_eq!(c2.max_len, c.max_len);
+        assert_eq!(c2.packing.streams, 2);
+    }
+
+    #[test]
+    fn chunked_requires_pack_scheme() {
+        for scheme in [Scheme::Padding, Scheme::SingleSequence] {
+            let mut c = TrainConfig::defaults(ModelConfig::tiny());
+            c.scheme = scheme;
+            c.chunk_len = 64;
+            let err = c.validate().unwrap_err().to_string();
+            assert!(err.contains("pack scheme"), "{}: {err}", scheme.name());
+            c.chunk_len = 0;
+            assert!(c.validate().is_ok(), "{} monolithic stays fine", scheme.name());
+        }
+    }
+
+    #[test]
+    fn streams_must_divide_rows() {
+        let mut c = TrainConfig::defaults(ModelConfig::tiny());
+        c.packing.rows = 4;
+        c.packing.streams = 3;
+        assert!(c.validate().is_err());
+        c.packing.streams = 2;
+        assert!(c.validate().is_ok());
+        c.packing.streams = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Data-parallel training (the paper trains on 8 GPUs with data
 //! parallelism; §4).
 //!
-//! Worker = one thread owning its own backend instance (backends are
-//! thread-local by design, mirroring one-process-per-device), its own
-//! corpus shard and pipeline, and a full replica of model + optimizer
-//! state.  Per step:
+//! Two wirings share the synchronous per-step all-reduce:
+//!
+//! **Monolithic** (`chunk_len == 0`) — worker = one thread owning its
+//! own backend instance (backends are thread-local by design, mirroring
+//! one-process-per-device), its own corpus shard and pipeline, and a
+//! full replica of model + optimizer state.  Per step:
 //!
 //!   1. every worker computes (loss, grads) on its shard's batch,
 //!   2. grads cross to the leader thread, which averages them
@@ -14,13 +16,30 @@
 //!      invariant `replicas_identical` tests assert.  (The native
 //!      backend's numerics are deterministic for any thread count,
 //!      which is what makes the bit-identity achievable on the host.)
+//!
+//! **Chunk-aware** (`chunk_len > 0`, §5 composed with §4) — chunked
+//! execution threads per-stream carries across a batch's rows *and*
+//! across steps, so independent per-worker pipelines would give every
+//! worker a different stream history than a single-worker run.  Instead,
+//! the **leader owns one pipeline** whose stream-partitioned packer
+//! ([`crate::packing::StreamingPacker::with_streams`]) guarantees no
+//! fragment chain crosses a stream boundary.  Per step the leader pops
+//! one batch, computes the whole batch's cross-entropy denominator, and
+//! splits the rows along stream boundaries
+//! ([`crate::packing::PackedBatch::split_rows`]) — worker `w` always
+//! receives the same row range, so it alone threads those streams'
+//! carries across chunks and steps.  Workers return gradients already
+//! normalized by the *whole-batch* denominator; the leader **sums** them
+//! ([`crate::tensor::allreduce_sum`]), which reproduces the
+//! single-worker chunked step's loss and gradients exactly (up to fp
+//! reassociation — `tests/dp_chunked.rs` pins 1e-5).
 
 use std::sync::mpsc;
 
-use crate::backend;
+use crate::backend::{self, ops};
 use crate::config::{Scheme, TrainConfig};
 use crate::packing::PackedBatch;
-use crate::tensor::{allreduce_mean, Tensor};
+use crate::tensor::{allreduce_mean, allreduce_sum, Tensor};
 use crate::Result;
 
 use super::metrics::{StepRecord, TrainMetrics};
@@ -52,26 +71,48 @@ pub struct DataParallelTrainer {
 
 impl DataParallelTrainer {
     pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let mut cfg = cfg;
+        cfg.validate()?;
         anyhow::ensure!(
             cfg.scheme == Scheme::Pack,
             "data-parallel path is wired for the pack scheme (the paper's)"
         );
-        anyhow::ensure!(
-            cfg.chunk_len == 0,
-            "data-parallel training is monolithic: chunked execution \
-             carries state across a batch's rows, which a per-worker row \
-             split would sever (set chunk_len = 0 for dp-train)"
-        );
+        if cfg.chunk_len > 0 {
+            // chunk-aware dp: the packer partitions every batch into
+            // streams and each worker owns a whole group of them, so the
+            // row split never severs a stream carry
+            if cfg.packing.streams <= 1 {
+                cfg.packing.streams = cfg.dp_workers;
+            }
+            anyhow::ensure!(
+                cfg.packing.streams % cfg.dp_workers == 0,
+                "packing streams {} must be a multiple of dp_workers {} \
+                 so each worker owns whole streams",
+                cfg.packing.streams,
+                cfg.dp_workers
+            );
+            anyhow::ensure!(
+                cfg.packing.rows % cfg.packing.streams == 0,
+                "rows {} must divide into {} streams",
+                cfg.packing.rows,
+                cfg.packing.streams
+            );
+        }
         Ok(Self { cfg })
     }
 
     /// Run `cfg.steps` synchronous data-parallel steps on
     /// `cfg.dp_workers` worker threads.
     pub fn run(&self) -> Result<DpRunResult> {
+        if self.cfg.chunk_len > 0 {
+            return self.run_chunked();
+        }
         let n = self.cfg.dp_workers;
         let steps = self.cfg.steps;
-        // leader <- workers: gradients
-        let (grad_tx, grad_rx) = mpsc::channel::<GradMsg>();
+        // leader <- workers: gradients (Err = the worker's step failed;
+        // surfacing it here keeps the synchronous rendezvous from
+        // deadlocking on a silently-dead worker)
+        let (grad_tx, grad_rx) = mpsc::channel::<Result<GradMsg>>();
         // workers <- leader: averaged gradients (one channel per worker)
         let mut avg_txs = Vec::with_capacity(n);
         let mut avg_rxs = Vec::with_capacity(n);
@@ -93,7 +134,10 @@ impl DataParallelTrainer {
                 std::thread::Builder::new()
                     .name(format!("dp-worker-{w}"))
                     .spawn(move || -> Result<()> {
-                        worker_loop(w, n, steps, &cfg, grad_tx, avg_rx, done_tx)
+                        let tx = grad_tx.clone();
+                        guard_worker(w, &tx, || {
+                            worker_loop(w, n, steps, &cfg, grad_tx, avg_rx, done_tx)
+                        })
                     })
                     .expect("spawn dp worker"),
             );
@@ -107,52 +151,168 @@ impl DataParallelTrainer {
             let t0 = std::time::Instant::now();
             let mut msgs: Vec<GradMsg> = Vec::with_capacity(n);
             for _ in 0..n {
-                msgs.push(
-                    grad_rx
-                        .recv()
-                        .map_err(|_| anyhow::anyhow!("worker died at step {step}"))?,
-                );
+                let msg = grad_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("worker died at step {step}"))?
+                    .map_err(|e| anyhow::anyhow!("worker failed at step {step}: {e:#}"))?;
+                msgs.push(msg);
             }
             msgs.sort_by_key(|m| m.worker);
-            let mut grad_sets: Vec<Vec<Tensor>> =
-                msgs.iter().map(|m| m.grads.clone()).collect();
+            let loss = msgs.iter().map(|m| m.loss).sum::<f32>() / n as f32;
+            let (real, slots, seqs) = (
+                msgs.iter().map(|m| m.real_tokens).sum(),
+                msgs.iter().map(|m| m.slot_tokens).sum(),
+                msgs.iter().map(|m| m.sequences).sum(),
+            );
+            // move the gradients out of the messages: no per-worker
+            // full-model deep copy on the leader's critical path
+            let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
             allreduce_mean(&mut grad_sets);
             let avg = grad_sets.swap_remove(0);
             for tx in &avg_txs {
                 tx.send(avg.clone())
-                    .map_err(|_| anyhow::anyhow!("worker hung up"))?;
+                    .map_err(|_| leader_send_error(&grad_rx, "avg"))?;
             }
-            let loss = msgs.iter().map(|m| m.loss).sum::<f32>() / n as f32;
             metrics.record(StepRecord {
                 step,
                 loss,
                 secs: t0.elapsed().as_secs_f64(),
-                real_tokens: msgs.iter().map(|m| m.real_tokens).sum(),
-                slot_tokens: msgs.iter().map(|m| m.slot_tokens).sum(),
-                sequences: msgs.iter().map(|m| m.sequences).sum(),
+                real_tokens: real,
+                slot_tokens: slots,
+                sequences: seqs,
             });
             if step % 20 == 0 {
                 log::info!("dp step {step}/{steps} mean-loss {loss:.4}");
             }
         }
 
-        // ----- final replica-identity check -----
-        let mut finals: Vec<(usize, Vec<Tensor>)> = Vec::with_capacity(n);
+        let (final_params, identical) = collect_finals(done_rx, &grad_rx, handles, n)?;
+        Ok(DpRunResult {
+            metrics,
+            final_params,
+            replicas_identical: identical,
+            steps,
+        })
+    }
+
+    /// Chunk-aware data-parallel run (§5 composed with §4): one leader
+    /// pipeline, per-step row split along stream boundaries, gradient
+    /// **sum** all-reduce with whole-batch loss normalization, and
+    /// per-worker stream-carry ownership across steps.
+    fn run_chunked(&self) -> Result<DpRunResult> {
+        let n = self.cfg.dp_workers;
+        let steps = self.cfg.steps;
+
+        // The leader owns geometry + pipeline; workers receive their row
+        // ranges, so every worker sees exactly the rows a single-worker
+        // run would traverse as those streams.
+        let geom = backend::create(&self.cfg)?.geometry(&self.cfg)?;
+        let mut pcfg = self.cfg.clone();
+        pcfg.packing.rows = geom.rows;
+        pcfg.packing.pack_len = geom.pack_len;
+        anyhow::ensure!(
+            pcfg.packing.rows % pcfg.packing.streams == 0,
+            "backend geometry rows {} cannot host {} streams",
+            pcfg.packing.rows,
+            pcfg.packing.streams
+        );
+        // chunked execution: no max_len clamp (the streaming packer
+        // splits over-length sequences); over-length + greedy buffer is
+        // routed to the streaming packer, mirroring Trainer::new
+        pcfg.route_chunked_packer(geom.pack_len);
+        let pipeline = Pipeline::spawn(&pcfg, geom.buckets.clone(), geom.pad_geom, 0, 1);
+
+        // workers <- leader: (row-range sub-batch, whole-batch denom)
+        let mut batch_txs = Vec::with_capacity(n);
+        let mut batch_rxs = Vec::with_capacity(n);
         for _ in 0..n {
-            finals.push(done_rx.recv().map_err(|_| anyhow::anyhow!("worker died at end"))?);
+            let (tx, rx) = mpsc::channel::<(PackedBatch, f32)>();
+            batch_txs.push(tx);
+            batch_rxs.push(Some(rx));
         }
-        finals.sort_by_key(|(w, _)| *w);
-        let identical = finals.windows(2).all(|pair| {
-            pair[0]
-                .1
-                .iter()
-                .zip(&pair[1].1)
-                .all(|(a, b)| a.data() == b.data())
-        });
-        for h in handles {
-            h.join().expect("dp worker panicked")?;
+        let (grad_tx, grad_rx) = mpsc::channel::<Result<GradMsg>>();
+        let mut sum_txs = Vec::with_capacity(n);
+        let mut sum_rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<Vec<Tensor>>();
+            sum_txs.push(tx);
+            sum_rxs.push(Some(rx));
         }
-        let final_params = finals.swap_remove(0).1;
+        let (done_tx, done_rx) = mpsc::channel::<(usize, Vec<Tensor>)>();
+
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let cfg = pcfg.clone();
+            let batch_rx = batch_rxs[w].take().unwrap();
+            let grad_tx = grad_tx.clone();
+            let sum_rx = sum_rxs[w].take().unwrap();
+            let done_tx = done_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dp-chunk-worker-{w}"))
+                    .spawn(move || -> Result<()> {
+                        let tx = grad_tx.clone();
+                        guard_worker(w, &tx, || {
+                            worker_loop_chunked(w, steps, &cfg, batch_rx, grad_tx, sum_rx, done_tx)
+                        })
+                    })
+                    .expect("spawn dp worker"),
+            );
+        }
+        drop(grad_tx);
+        drop(done_tx);
+
+        let mut metrics = TrainMetrics::new();
+        for step in 0..steps {
+            let t0 = std::time::Instant::now();
+            let batch = pipeline
+                .next_batch()
+                .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
+            let denom = ops::mask_denom(batch.loss_mask.data());
+            let (real, slots, seqs) = (
+                batch.real_tokens(),
+                batch.rows() * batch.pack_len(),
+                batch.sequence_count(),
+            );
+            let parts = batch.split_rows(n)?;
+            for (tx, part) in batch_txs.iter().zip(parts) {
+                tx.send((part, denom))
+                    .map_err(|_| leader_send_error(&grad_rx, "batch"))?;
+            }
+            let mut msgs: Vec<GradMsg> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let msg = grad_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("worker died at step {step}"))?
+                    .map_err(|e| anyhow::anyhow!("worker failed at step {step}: {e:#}"))?;
+                msgs.push(msg);
+            }
+            msgs.sort_by_key(|m| m.worker);
+            let loss = msgs.iter().map(|m| m.loss).sum::<f32>();
+            // move the gradients out of the messages (no deep copy), then
+            // sum, not mean: worker grads are partial contributions
+            // normalized by the whole batch's denominator
+            let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
+            allreduce_sum(&mut grad_sets);
+            let sum = grad_sets.swap_remove(0);
+            for tx in &sum_txs {
+                tx.send(sum.clone())
+                    .map_err(|_| leader_send_error(&grad_rx, "sum"))?;
+            }
+            metrics.record(StepRecord {
+                step,
+                loss,
+                secs: t0.elapsed().as_secs_f64(),
+                real_tokens: real,
+                slot_tokens: slots,
+                sequences: seqs,
+            });
+            if step % 20 == 0 {
+                log::info!("dp-chunked step {step}/{steps} loss {loss:.4}");
+            }
+        }
+
+        let (final_params, identical) = collect_finals(done_rx, &grad_rx, handles, n)?;
         Ok(DpRunResult {
             metrics,
             final_params,
@@ -162,12 +322,77 @@ impl DataParallelTrainer {
     }
 }
 
+/// A failed leader→worker send usually means the worker died; if the
+/// worker forwarded its error through the gradient channel before
+/// exiting (see [`guard_worker`]), surface that instead of a generic
+/// "hung up" — draining pending messages is fine, the step is aborting.
+fn leader_send_error(
+    grad_rx: &mpsc::Receiver<Result<GradMsg>>,
+    what: &str,
+) -> anyhow::Error {
+    while let Ok(msg) = grad_rx.try_recv() {
+        if let Err(e) = msg {
+            return anyhow::anyhow!("worker failed ({what}): {e:#}");
+        }
+    }
+    anyhow::anyhow!("worker hung up ({what})")
+}
+
+/// Collect every worker's final parameters, check the replicas are
+/// bit-identical, and join the threads.  A worker that died after its
+/// last gradient send (e.g. in `apply_update`) forwarded its error
+/// through the gradient channel — surface that instead of a generic
+/// "died at end".
+fn collect_finals(
+    done_rx: mpsc::Receiver<(usize, Vec<Tensor>)>,
+    grad_rx: &mpsc::Receiver<Result<GradMsg>>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    n: usize,
+) -> Result<(Vec<Tensor>, bool)> {
+    let mut finals: Vec<(usize, Vec<Tensor>)> = Vec::with_capacity(n);
+    for _ in 0..n {
+        finals.push(
+            done_rx
+                .recv()
+                .map_err(|_| leader_send_error(grad_rx, "end"))?,
+        );
+    }
+    finals.sort_by_key(|(w, _)| *w);
+    let identical = finals.windows(2).all(|pair| {
+        pair[0]
+            .1
+            .iter()
+            .zip(&pair[1].1)
+            .all(|(a, b)| a.data() == b.data())
+    });
+    for h in handles {
+        h.join().expect("dp worker panicked")?;
+    }
+    Ok((finals.swap_remove(0).1, identical))
+}
+
+/// Run a worker body and forward any error into the gradient channel:
+/// the leader's synchronous rendezvous then aborts with the worker's
+/// error instead of deadlocking on a silently-dead worker.
+fn guard_worker(
+    w: usize,
+    grad_tx: &mpsc::Sender<Result<GradMsg>>,
+    body: impl FnOnce() -> Result<()>,
+) -> Result<()> {
+    if let Err(e) = body() {
+        // ignore send failures: the leader may already be gone
+        let _ = grad_tx.send(Err(e));
+        anyhow::bail!("dp worker {w} failed");
+    }
+    Ok(())
+}
+
 fn worker_loop(
     w: usize,
     num_shards: usize,
     steps: usize,
     cfg: &TrainConfig,
-    grad_tx: mpsc::Sender<GradMsg>,
+    grad_tx: mpsc::Sender<Result<GradMsg>>,
     avg_rx: mpsc::Receiver<Vec<Tensor>>,
     done_tx: mpsc::Sender<(usize, Vec<Tensor>)>,
 ) -> Result<()> {
@@ -190,19 +415,62 @@ fn worker_loop(
             .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
         let (loss, grads) = be.loss_and_grads(&cfg.model, &state.params, &batch)?;
         grad_tx
-            .send(GradMsg {
+            .send(Ok(GradMsg {
                 worker: w,
                 loss,
                 grads,
                 real_tokens: batch.real_tokens(),
                 slot_tokens: batch.rows() * batch.pack_len(),
                 sequences: batch.sequence_count(),
-            })
+            }))
             .map_err(|_| anyhow::anyhow!("leader hung up"))?;
         let avg = avg_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("leader hung up (avg)"))?;
         be.apply_update(&cfg.model, &mut state, &avg)?;
+    }
+    done_tx
+        .send((w, state.params))
+        .map_err(|_| anyhow::anyhow!("leader hung up (done)"))?;
+    Ok(())
+}
+
+/// Chunk-aware worker: receives its stable row range (whole streams) of
+/// every batch from the leader, computes chunked loss + grads normalized
+/// by the whole batch's denominator (the backend threads this worker's
+/// per-stream carries across steps), and applies the identical summed
+/// update.
+fn worker_loop_chunked(
+    w: usize,
+    steps: usize,
+    cfg: &TrainConfig,
+    batch_rx: mpsc::Receiver<(PackedBatch, f32)>,
+    grad_tx: mpsc::Sender<Result<GradMsg>>,
+    sum_rx: mpsc::Receiver<Vec<Tensor>>,
+    done_tx: mpsc::Sender<(usize, Vec<Tensor>)>,
+) -> Result<()> {
+    let be = backend::create(cfg)?;
+    let mut state = be.init_state(&cfg.model, cfg.seed)?;
+    for _step in 0..steps {
+        let (batch, denom) = batch_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("leader hung up (batch)"))?;
+        let (loss, grads) =
+            be.loss_and_grads_chunked(&cfg.model, &state.params, &batch, cfg.chunk_len, denom)?;
+        grad_tx
+            .send(Ok(GradMsg {
+                worker: w,
+                loss,
+                grads,
+                real_tokens: batch.real_tokens(),
+                slot_tokens: batch.rows() * batch.pack_len(),
+                sequences: batch.sequence_count(),
+            }))
+            .map_err(|_| anyhow::anyhow!("leader hung up"))?;
+        let sum = sum_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("leader hung up (sum)"))?;
+        be.apply_update(&cfg.model, &mut state, &sum)?;
     }
     done_tx
         .send((w, state.params))

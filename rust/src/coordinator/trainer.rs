@@ -77,7 +77,11 @@ impl Pipeline {
                                 }
                             }
                         } else {
-                            let mut p = StreamingPacker::new(packing.pack_len, packing.rows);
+                            let mut p = StreamingPacker::with_streams(
+                                packing.pack_len,
+                                packing.rows,
+                                packing.streams.max(1),
+                            );
                             loop {
                                 for b in p.push(corpus.next_sequence()) {
                                     if q.push(b).is_err() {
@@ -172,6 +176,10 @@ impl Trainer {
                 // pack_len — only clamp for the monolithic step
                 if cfg.chunk_len == 0 {
                     cfg.max_len = cfg.max_len.min(geom.pack_len);
+                } else {
+                    // over-length + greedy buffer: route to the
+                    // streaming packer (only it can split fragments)
+                    cfg.route_chunked_packer(geom.pack_len);
                 }
             }
             Scheme::Padding => {
@@ -217,7 +225,11 @@ impl Trainer {
             .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
         let loss = if self.cfg.chunk_len > 0 {
             // §5 chunked/stateful step: fixed L = chunk_len operator
-            // shapes, state carried across chunk and row boundaries
+            // shapes, state carried across chunk and row boundaries.
+            // validate() (called in Trainer::new) guarantees this only
+            // dispatches on the pack scheme — padding/single-sequence
+            // batches lack the packed row/fragment semantics the chunked
+            // path assumes.
             self.backend.train_step_chunked(
                 &self.cfg.model,
                 &mut self.state,

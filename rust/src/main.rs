@@ -46,12 +46,23 @@ fn main() {
                 .flag("metrics-out", "", "write metrics json here", None),
         )
         .command(
-            Command::new("dp-train", "data-parallel training (pack scheme)")
+            Command::new(
+                "dp-train",
+                "data-parallel training (pack scheme; --chunk-len composes §5)",
+            )
                 .flag("model", "m", "model preset (tiny|small)", Some("tiny"))
                 .flag("backend", "b", "native|pjrt", Some("native"))
                 .flag("steps", "n", "training steps", Some("50"))
                 .flag("workers", "w", "data-parallel workers", Some("2"))
                 .flag("seed", "", "corpus seed", Some("42"))
+                .flag("greedy-buffer", "g", "greedy packer buffer (0=streaming)", Some("0"))
+                .flag(
+                    "chunk-len",
+                    "",
+                    "chunk-aware dp: slots per chunk, one stream group per worker \
+                     (0 = monolithic)",
+                    Some("0"),
+                )
                 .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts")),
         )
         .command(

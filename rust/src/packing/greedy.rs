@@ -75,7 +75,9 @@ impl GreedyPacker {
         let mut out = self.drain();
         if !self.ready.is_empty() {
             let rows = std::mem::take(&mut self.ready);
-            out.push(PackedBatch::from_rows(&rows, self.pack_len));
+            let mut b = PackedBatch::from_rows(&rows, self.pack_len);
+            b.streams = b.rows();
+            out.push(b);
         }
         out
     }
@@ -109,11 +111,18 @@ impl GreedyPacker {
     }
 
     /// Emit every full batch the ready queue holds (in ready order).
+    ///
+    /// Every greedy row holds only whole sequences (each starting at
+    /// `pos == 0`), so every row is its own carry-isolated stream:
+    /// `batch.streams = rows`, and a data-parallel trainer may split a
+    /// greedy batch along any row boundary.
     fn drain(&mut self) -> Vec<PackedBatch> {
         let mut out = Vec::new();
         while self.ready.len() >= self.rows_per_batch {
             let rows: Vec<PackedRow> = self.ready.drain(..self.rows_per_batch).collect();
-            out.push(PackedBatch::from_rows(&rows, self.pack_len));
+            let mut b = PackedBatch::from_rows(&rows, self.pack_len);
+            b.streams = b.rows();
+            out.push(b);
         }
         out
     }

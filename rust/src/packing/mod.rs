@@ -31,6 +31,7 @@ pub use streaming::StreamingPacker;
 pub use unpack::{unpack_outputs, unpack_row};
 
 use crate::tensor::{IntTensor, Tensor};
+use crate::Result;
 
 /// A sequence of token ids (the unit the data pipeline produces).
 #[derive(Clone, Debug, PartialEq)]
@@ -127,6 +128,16 @@ pub struct PackedBatch {
     /// per row: start offset of each entry within its original sequence
     /// (0 for whole sequences; > 0 marks a continuation fragment)
     pub row_starts: Vec<Vec<usize>>,
+    /// Stream-partition count (§5 chunked execution composed with §4
+    /// data parallelism): the batch's rows divide into `streams`
+    /// contiguous, equal row ranges, and the packer guarantees no
+    /// fragment chain crosses a range boundary — so chunked execution
+    /// threads an independent carry along each range (including across
+    /// consecutive batches, where range `s` of batch `k` continues in
+    /// range `s` of batch `k+1`), and a data-parallel row split along
+    /// range boundaries never severs a stream.  `1` = the whole batch is
+    /// one row-major stream (the packers' default).
+    pub streams: usize,
 }
 
 impl PackedBatch {
@@ -263,7 +274,59 @@ impl PackedBatch {
             row_lengths,
             row_ids,
             row_starts,
+            streams: 1,
         }
+    }
+
+    /// Rows per stream range (`rows / streams`).
+    pub fn rows_per_stream(&self) -> usize {
+        self.rows() / self.streams.max(1)
+    }
+
+    /// Split into `parts` row-range sub-batches for data-parallel
+    /// workers: part `k` takes rows `[k·rows/parts, (k+1)·rows/parts)`,
+    /// i.e. a contiguous run of **whole streams** — so no fragment chain
+    /// or chunked stream carry is severed by the split.  Requires the
+    /// stream count (and therefore the row count) to divide evenly.
+    pub fn split_rows(&self, parts: usize) -> Result<Vec<PackedBatch>> {
+        anyhow::ensure!(parts >= 1, "parts must be >= 1");
+        anyhow::ensure!(
+            self.streams >= 1 && self.rows() % self.streams == 0,
+            "batch of {} rows has a degenerate stream partition ({})",
+            self.rows(),
+            self.streams
+        );
+        anyhow::ensure!(
+            self.streams % parts == 0,
+            "cannot split {} streams ({} rows) into {} parts without \
+             severing a stream carry",
+            self.streams,
+            self.rows(),
+            parts
+        );
+        let rpp = self.rows() / parts;
+        let l = self.pack_len();
+        Ok((0..parts)
+            .map(|k| {
+                let (r0, r1) = (k * rpp, (k + 1) * rpp);
+                PackedBatch {
+                    tokens: IntTensor::new(&[rpp, l], self.tokens.data()[r0 * l..r1 * l].to_vec()),
+                    targets: IntTensor::new(
+                        &[rpp, l],
+                        self.targets.data()[r0 * l..r1 * l].to_vec(),
+                    ),
+                    position_indices: IntTensor::new(
+                        &[rpp, l],
+                        self.position_indices.data()[r0 * l..r1 * l].to_vec(),
+                    ),
+                    loss_mask: Tensor::new(&[rpp, l], self.loss_mask.data()[r0 * l..r1 * l].to_vec()),
+                    row_lengths: self.row_lengths[r0..r1].to_vec(),
+                    row_ids: self.row_ids[r0..r1].to_vec(),
+                    row_starts: self.row_starts[r0..r1].to_vec(),
+                    streams: self.streams / parts,
+                }
+            })
+            .collect())
     }
 }
 
@@ -407,6 +470,35 @@ mod tests {
         assert_eq!(st.real_tokens, 5);
         assert_eq!(st.sequences, 2);
         assert!((st.padding_rate() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_rows_slices_whole_streams() {
+        let rows: Vec<PackedRow> = (0..4)
+            .map(|r| PackedRow {
+                sequences: vec![seq(r, &[r as i32 + 1, r as i32 + 2])],
+            })
+            .collect();
+        let mut b = PackedBatch::from_rows(&rows, 4);
+        assert_eq!(b.streams, 1);
+        // one stream cannot be split without severing the carry
+        assert!(b.split_rows(2).is_err());
+        b.streams = 4;
+        let parts = b.split_rows(2).unwrap();
+        assert_eq!(parts.len(), 2);
+        for (k, p) in parts.iter().enumerate() {
+            assert_eq!(p.rows(), 2);
+            assert_eq!(p.streams, 2);
+            assert_eq!(p.rows_per_stream(), 1);
+            assert_eq!(p.tokens.data(), &b.tokens.data()[k * 8..(k + 1) * 8]);
+            assert_eq!(p.loss_mask.data(), &b.loss_mask.data()[k * 8..(k + 1) * 8]);
+            assert_eq!(p.row_ids, b.row_ids[k * 2..(k + 1) * 2].to_vec());
+        }
+        // token totals survive the split
+        let total: usize = parts.iter().map(PackedBatch::real_tokens).sum();
+        assert_eq!(total, b.real_tokens());
+        // uneven part counts are rejected
+        assert!(b.split_rows(3).is_err());
     }
 
     #[test]

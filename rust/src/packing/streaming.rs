@@ -15,99 +15,39 @@
 //! boundaries so the split sequence trains exactly (see
 //! `backend::model::forward_logits_chunked`).
 //!
+//! **Stream partitioning (§4 composition):** [`StreamingPacker::with_streams`]
+//! packs into `streams` independent *lanes*.  Lane `s` owns rows
+//! `[s·rows/streams, (s+1)·rows/streams)` of every emitted batch, and a
+//! sequence's fragments never leave their lane — so a data-parallel
+//! trainer can split each batch along lane boundaries and hand every
+//! worker a self-contained stream whose carry it alone threads across
+//! chunks *and* steps ([`PackedBatch::split_rows`]).  Each incoming
+//! sequence goes to the least-loaded lane (deterministic tie-break by
+//! lane index).  With one stream this is exactly the classic packer.
+//!
 //! **Batch contract:** `push`/`flush` return every batch that became
 //! ready (an over-length sequence can seal many rows at once); each
 //! batch has exactly `rows_per_batch` rows except the final `flush`
-//! batch, which may be smaller.
+//! batch, which may be smaller (its lanes are padded with empty rows to
+//! keep the stream ranges aligned, so `rows` stays a multiple of
+//! `streams`).
 
 use super::{Fragment, PackedBatch, Sequence};
 
-/// Incremental packer: push sequences, pop full batches.
-#[derive(Debug)]
-pub struct StreamingPacker {
-    pack_len: usize,
-    rows_per_batch: usize,
+/// One independent packing lane: the in-progress row plus the sealed
+/// rows not yet emitted.
+#[derive(Debug, Default)]
+struct Lane {
     current: Vec<Fragment>,
     current_used: usize,
     sealed: Vec<Vec<Fragment>>,
 }
 
-impl StreamingPacker {
-    pub fn new(pack_len: usize, rows_per_batch: usize) -> Self {
-        assert!(pack_len > 0 && rows_per_batch > 0);
-        Self {
-            pack_len,
-            rows_per_batch,
-            current: Vec::new(),
-            current_used: 0,
-            sealed: Vec::new(),
-        }
-    }
-
-    pub fn pack_len(&self) -> usize {
-        self.pack_len
-    }
-
-    /// Add a sequence; returns every batch that became ready (each with
-    /// exactly `rows_per_batch` rows).  Sequences longer than `pack_len`
-    /// are split across consecutive rows with continuation position
-    /// indices.
-    pub fn push(&mut self, seq: Sequence) -> Vec<PackedBatch> {
-        assert!(!seq.is_empty(), "empty sequence");
-        if seq.len() <= self.pack_len {
-            if self.current_used + seq.len() > self.pack_len {
-                self.seal();
-            }
-            self.current_used += seq.len();
-            self.current.push(Fragment::whole(seq));
-        } else {
-            // §5 chunk-aware split: cut at row ends; intermediate rows
-            // fill to exactly pack_len (zero padding along the cut)
-            let n = seq.len();
-            let mut off = 0usize;
-            while off < n {
-                if self.current_used == self.pack_len {
-                    self.seal();
-                }
-                let room = self.pack_len - self.current_used;
-                let take = room.min(n - off);
-                let next = if off + take < n {
-                    Some(seq.tokens[off + take])
-                } else {
-                    None
-                };
-                self.current.push(Fragment {
-                    seq: Sequence {
-                        tokens: seq.tokens[off..off + take].to_vec(),
-                        id: seq.id,
-                    },
-                    start: off,
-                    next,
-                });
-                self.current_used += take;
-                off += take;
-            }
-            if self.current_used == self.pack_len {
-                self.seal();
-            }
-        }
-        self.drain()
-    }
-
-    /// Seal the in-progress row and emit everything that remains: full
-    /// batches first, then one final batch with the leftover rows
-    /// (padding short batches with empty rows is the caller's choice;
-    /// here the final batch simply has fewer rows).
-    pub fn flush(&mut self) -> Vec<PackedBatch> {
-        if self.current_used > 0 {
-            self.seal();
-        }
-        let mut out = self.drain();
-        if !self.sealed.is_empty() {
-            let rows = std::mem::take(&mut self.sealed);
-            out.push(PackedBatch::from_fragment_rows(&rows, self.pack_len));
-        }
-        out
+impl Lane {
+    /// Buffered tokens (sealed rows count as full): the load metric the
+    /// lane assignment balances.
+    fn load(&self, pack_len: usize) -> usize {
+        self.sealed.len() * pack_len + self.current_used
     }
 
     fn seal(&mut self) {
@@ -119,18 +59,164 @@ impl StreamingPacker {
         self.sealed.push(row);
     }
 
-    fn drain(&mut self) -> Vec<PackedBatch> {
-        let mut out = Vec::new();
-        while self.sealed.len() >= self.rows_per_batch {
-            let rows: Vec<Vec<Fragment>> = self.sealed.drain(..self.rows_per_batch).collect();
-            out.push(PackedBatch::from_fragment_rows(&rows, self.pack_len));
+    /// Append a sequence, splitting at row ends when it exceeds
+    /// `pack_len` (§5 chunk-aware split: continuation position indices,
+    /// cross-fragment targets, zero padding along the cut).
+    fn push(&mut self, seq: Sequence, pack_len: usize) {
+        if seq.len() <= pack_len {
+            if self.current_used + seq.len() > pack_len {
+                self.seal();
+            }
+            self.current_used += seq.len();
+            self.current.push(Fragment::whole(seq));
+            return;
+        }
+        let n = seq.len();
+        let mut off = 0usize;
+        while off < n {
+            if self.current_used == pack_len {
+                self.seal();
+            }
+            let room = pack_len - self.current_used;
+            let take = room.min(n - off);
+            let next = if off + take < n {
+                Some(seq.tokens[off + take])
+            } else {
+                None
+            };
+            self.current.push(Fragment {
+                seq: Sequence {
+                    tokens: seq.tokens[off..off + take].to_vec(),
+                    id: seq.id,
+                },
+                start: off,
+                next,
+            });
+            self.current_used += take;
+            off += take;
+        }
+        if self.current_used == pack_len {
+            self.seal();
+        }
+    }
+}
+
+/// Incremental packer: push sequences, pop full batches.
+#[derive(Debug)]
+pub struct StreamingPacker {
+    pack_len: usize,
+    rows_per_batch: usize,
+    rows_per_stream: usize,
+    lanes: Vec<Lane>,
+}
+
+impl StreamingPacker {
+    /// Classic single-stream packer: the whole batch is one row-major
+    /// stream.
+    pub fn new(pack_len: usize, rows_per_batch: usize) -> Self {
+        Self::with_streams(pack_len, rows_per_batch, 1)
+    }
+
+    /// Stream-partitioned packer: `streams` independent lanes, each
+    /// owning `rows_per_batch / streams` contiguous rows of every batch
+    /// (`batch.streams` is stamped accordingly).
+    pub fn with_streams(pack_len: usize, rows_per_batch: usize, streams: usize) -> Self {
+        assert!(pack_len > 0 && rows_per_batch > 0 && streams > 0);
+        assert!(
+            rows_per_batch % streams == 0,
+            "rows_per_batch {rows_per_batch} must divide into {streams} streams"
+        );
+        Self {
+            pack_len,
+            rows_per_batch,
+            rows_per_stream: rows_per_batch / streams,
+            lanes: (0..streams).map(|_| Lane::default()).collect(),
+        }
+    }
+
+    pub fn pack_len(&self) -> usize {
+        self.pack_len
+    }
+
+    /// Stream-partition count (lanes).
+    pub fn streams(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Add a sequence; returns every batch that became ready (each with
+    /// exactly `rows_per_batch` rows).  Sequences longer than `pack_len`
+    /// are split across consecutive rows *of one lane* with continuation
+    /// position indices.
+    pub fn push(&mut self, seq: Sequence) -> Vec<PackedBatch> {
+        assert!(!seq.is_empty(), "empty sequence");
+        // least-loaded lane, deterministic tie-break on index
+        let lane = (0..self.lanes.len())
+            .min_by_key(|&s| (self.lanes[s].load(self.pack_len), s))
+            .expect("at least one lane");
+        self.lanes[lane].push(seq, self.pack_len);
+        self.drain()
+    }
+
+    /// Seal every in-progress row and emit everything that remains: full
+    /// batches first, then the leftovers.  When lanes are uneven, an
+    /// exhausted lane is padded with empty (all-padding) rows so every
+    /// batch's row count stays a multiple of the stream count — a lane
+    /// is only ever padded once it holds no more rows, so no fragment
+    /// chain gets padding injected into its carry stream.  Every emitted
+    /// batch has exactly `rows_per_batch` rows except the last, which
+    /// may have fewer.
+    pub fn flush(&mut self) -> Vec<PackedBatch> {
+        for lane in &mut self.lanes {
+            lane.seal();
+        }
+        let mut out = self.drain();
+        loop {
+            let k_max = self.lanes.iter().map(|l| l.sealed.len()).max().unwrap_or(0);
+            if k_max == 0 {
+                break;
+            }
+            let take = k_max.min(self.rows_per_stream);
+            let mut rows: Vec<Vec<Fragment>> = Vec::with_capacity(take * self.lanes.len());
+            for lane in &mut self.lanes {
+                let n = lane.sealed.len().min(take);
+                let mut taken: Vec<Vec<Fragment>> = lane.sealed.drain(..n).collect();
+                // n < take implies the lane just ran dry, so the padding
+                // rows can never sit between two rows of a fragment chain
+                taken.resize_with(take, Vec::new);
+                rows.extend(taken);
+            }
+            let mut b = PackedBatch::from_fragment_rows(&rows, self.pack_len);
+            b.streams = self.lanes.len();
+            out.push(b);
         }
         out
     }
 
-    /// Rows currently sealed but not yet emitted (for tests/metrics).
+    fn drain(&mut self) -> Vec<PackedBatch> {
+        let mut out = Vec::new();
+        while self
+            .lanes
+            .iter()
+            .all(|l| l.sealed.len() >= self.rows_per_stream)
+        {
+            let mut rows: Vec<Vec<Fragment>> = Vec::with_capacity(self.rows_per_batch);
+            for lane in &mut self.lanes {
+                rows.extend(lane.sealed.drain(..self.rows_per_stream));
+            }
+            let mut b = PackedBatch::from_fragment_rows(&rows, self.pack_len);
+            b.streams = self.lanes.len();
+            out.push(b);
+        }
+        out
+    }
+
+    /// Rows currently sealed or in progress but not yet emitted (for
+    /// tests/metrics).
     pub fn pending_rows(&self) -> usize {
-        self.sealed.len() + usize::from(self.current_used > 0)
+        self.lanes
+            .iter()
+            .map(|l| l.sealed.len() + usize::from(l.current_used > 0))
+            .sum()
     }
 }
 
@@ -158,6 +244,7 @@ mod tests {
         // 6 + 5 > 10 → row [6] sealed, batch emitted (1 row/batch)
         let b = one(p.push(seq(1, 5))).unwrap();
         assert_eq!(b.row_lengths, vec![vec![6]]);
+        assert_eq!(b.streams, 1);
         // current now holds [5]
         let b2 = one(p.flush()).unwrap();
         assert_eq!(b2.row_lengths, vec![vec![5]]);
@@ -280,5 +367,72 @@ mod tests {
         assert_eq!(b.row_lengths, vec![vec![5, 3], vec![7]]);
         assert_eq!(b.row_starts, vec![vec![0, 0], vec![3]]);
         assert_eq!(b.padding_rate(), 1.0 - 15.0 / 16.0);
+    }
+
+    #[test]
+    fn streams_keep_fragments_inside_their_lane() {
+        // 2 streams × 2 rows: over-length sequences fragment within one
+        // lane only, and every emitted batch carries the stream stamp.
+        let mut p = StreamingPacker::with_streams(8, 4, 2);
+        let mut batches = Vec::new();
+        // two over-length sequences: the balancer sends them to
+        // different lanes, each splitting across its own lane's rows
+        batches.extend(p.push(seq(0, 20))); // lane 0: rows 8|8|4
+        batches.extend(p.push(seq(1, 20))); // lane 1: rows 8|8|4
+        batches.extend(p.flush());
+        let mut pushed_rows = 0usize;
+        for b in &batches {
+            assert_eq!(b.streams, 2);
+            assert_eq!(b.rows() % 2, 0, "rows stay a multiple of streams");
+            pushed_rows += b.rows();
+            let rps = b.rows_per_stream();
+            for (r, starts) in b.row_starts.iter().enumerate() {
+                // a continuation fragment never opens a lane's first row
+                // of the first batch; more importantly, every
+                // continuation's predecessor ended in the same lane
+                for (i, &st) in starts.iter().enumerate() {
+                    if st > 0 && i == 0 {
+                        assert!(
+                            r % rps != 0 || pushed_rows > b.rows(),
+                            "continuation at a stream's first row of the first batch"
+                        );
+                    }
+                }
+            }
+        }
+        // all 40 tokens survive
+        let total: usize = batches.iter().map(PackedBatch::real_tokens).sum();
+        assert_eq!(total, 40);
+        // lane-major ids: rows [0, rps) hold id 0, rows [rps, 2·rps) id 1
+        let first = &batches[0];
+        let rps = first.rows_per_stream();
+        for r in 0..first.rows() {
+            for &id in &first.row_ids[r] {
+                assert_eq!(
+                    id,
+                    (r / rps) as u64,
+                    "row {r} crossed its lane (ids {:?})",
+                    first.row_ids
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streams_balance_and_flush_pads_lanes() {
+        let mut p = StreamingPacker::with_streams(4, 4, 2);
+        // three rows' worth in lane terms: lane 0 gets 2 sequences, lane
+        // 1 gets 1 → flush pads lane 1 with an empty row
+        assert!(p.push(seq(0, 4)).is_empty()); // lane 0 (tie → 0)
+        assert!(p.push(seq(1, 4)).is_empty()); // lane 1 (lane 0 loaded)
+        assert!(p.push(seq(2, 4)).is_empty()); // tie again → lane 0
+        let b = one(p.flush()).unwrap();
+        assert_eq!(b.streams, 2);
+        assert_eq!(b.rows(), 4, "lanes padded to the longest lane");
+        assert_eq!(b.row_lengths[0], vec![4]);
+        assert_eq!(b.row_lengths[1], vec![4]);
+        assert_eq!(b.row_lengths[2], vec![4]);
+        assert!(b.row_lengths[3].is_empty(), "padding row is empty");
+        assert_eq!(b.real_tokens(), 12);
     }
 }

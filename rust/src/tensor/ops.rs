@@ -120,6 +120,22 @@ pub fn allreduce_mean(workers: &mut [Vec<Tensor>]) {
     }
 }
 
+/// Sum a set of per-worker tensors in place into the first one — the
+/// all-reduce for chunk-aware dp training, where each worker's gradients
+/// are partial contributions already normalized by the whole batch's
+/// cross-entropy denominator (see `Backend::loss_and_grads_chunked`), so
+/// the reduction is a sum rather than an average.
+pub fn allreduce_sum(workers: &mut [Vec<Tensor>]) {
+    assert!(!workers.is_empty());
+    let (first, rest) = workers.split_at_mut(1);
+    let k = first[0].len();
+    for j in 0..k {
+        for w in rest.iter() {
+            first[0][j].add_assign(&w[j]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +176,21 @@ mod tests {
         allreduce_mean(&mut workers);
         assert_eq!(workers[0][0].data(), &[2.0; 4]);
         assert_eq!(workers[0][1].data(), &[20.0; 2]);
+    }
+
+    #[test]
+    fn allreduce_sum_sums() {
+        let mut workers = vec![
+            vec![Tensor::full(&[4], 1.0), Tensor::full(&[2], 10.0)],
+            vec![Tensor::full(&[4], 3.0), Tensor::full(&[2], 30.0)],
+        ];
+        allreduce_sum(&mut workers);
+        assert_eq!(workers[0][0].data(), &[4.0; 4]);
+        assert_eq!(workers[0][1].data(), &[40.0; 2]);
+        // single worker is the identity
+        let mut one = vec![vec![Tensor::full(&[3], 5.0)]];
+        allreduce_sum(&mut one);
+        assert_eq!(one[0][0].data(), &[5.0; 3]);
     }
 
     #[test]

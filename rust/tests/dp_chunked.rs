@@ -1,0 +1,363 @@
+//! Chunk-aware data-parallel training — the §4 + §5 composition suite.
+//!
+//! Invariants:
+//!   * splitting a stream-partitioned batch by rows and summing the
+//!     workers' chunked gradients (each normalized by the whole batch's
+//!     denominator) reproduces the single-worker chunked step within
+//!     1e-5 — including streams with over-length fragmented sequences
+//!     and carries persisting across consecutive batches,
+//!   * a full `DataParallelTrainer` dp-chunked run (2 and 4 workers)
+//!     matches the single-worker chunked `Trainer` run step for step,
+//!   * the packer's final undersized flush batch (fewer rows/streams
+//!     than the persisted carry was shaped for) resets the carry instead
+//!     of reusing stale lanes,
+//!   * a chunked config with a greedy packer and over-length sequences
+//!     routes to the streaming packer instead of erroring.
+
+use packmamba::backend::{ops, Backend, NativeBackend};
+use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::{DataParallelTrainer, Trainer};
+use packmamba::packing::{PackedBatch, PackedRow, Sequence, StreamingPacker};
+use packmamba::tensor::Tensor;
+
+fn nano() -> ModelConfig {
+    ModelConfig {
+        name: "nano-dp-chunk".to_string(),
+        vocab_size: 61,
+        d_model: 16,
+        n_layers: 2,
+        d_state: 4,
+        d_conv: 4,
+        expand: 2,
+    }
+}
+
+fn rand_seq(id: u64, len: usize, vocab: usize) -> Sequence {
+    let mut x = id.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    let tokens = (0..len)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            1 + (x % (vocab as u64 - 1)) as i32
+        })
+        .collect();
+    Sequence { tokens, id }
+}
+
+/// A deterministic stream-partitioned batch sequence (4 streams, 4 rows
+/// of 32) containing two over-length sequences, so fragment chains cross
+/// row *and* batch boundaries inside their lanes.
+fn stream_batches(cfg: &ModelConfig) -> Vec<PackedBatch> {
+    let mut p = StreamingPacker::with_streams(32, 4, 4);
+    let lens = [75usize, 20, 20, 20, 30, 12, 30, 12, 40, 26, 9, 31];
+    let mut out = Vec::new();
+    for (i, &n) in lens.iter().enumerate() {
+        out.extend(p.push(rand_seq(i as u64, n, cfg.vocab_size)));
+    }
+    out.extend(p.flush());
+    out
+}
+
+/// Sum `other` into `acc` element-wise.
+fn add_grads(acc: &mut [Tensor], other: &[Tensor]) {
+    for (a, o) in acc.iter_mut().zip(other) {
+        for (x, y) in a.data_mut().iter_mut().zip(o.data()) {
+            *x += y;
+        }
+    }
+}
+
+#[test]
+fn dp_chunked_gradients_match_single_worker() {
+    let cfg = nano();
+    let seed_be = NativeBackend::with_threads(1);
+    let state = seed_be.init_state(&cfg, 42).unwrap();
+    let batches = stream_batches(&cfg);
+    assert!(batches.len() >= 2, "want several batches, got {}", batches.len());
+    for b in &batches {
+        assert_eq!(b.streams, 4);
+        assert_eq!(b.rows() % 4, 0);
+    }
+    // over-length fragments must continue across batch boundaries — the
+    // case a naive per-worker pipeline would get wrong
+    assert!(
+        batches
+            .iter()
+            .skip(1)
+            .any(|b| b.row_starts.iter().flatten().any(|&s| s > 0)),
+        "expected cross-batch continuation fragments"
+    );
+
+    for chunk_len in [5usize, 16] {
+        // single worker: all 4 streams on one backend, carry persisting
+        // across the batch sequence
+        let be_full = NativeBackend::with_threads(1);
+        let full: Vec<(f32, Vec<Tensor>)> = batches
+            .iter()
+            .map(|b| {
+                let denom = ops::mask_denom(b.loss_mask.data());
+                be_full
+                    .loss_and_grads_chunked(&cfg, &state.params, b, chunk_len, denom)
+                    .unwrap()
+            })
+            .collect();
+
+        for workers in [2usize, 4] {
+            let w_bes: Vec<NativeBackend> =
+                (0..workers).map(|_| NativeBackend::with_threads(1)).collect();
+            for (bi, b) in batches.iter().enumerate() {
+                let denom = ops::mask_denom(b.loss_mask.data());
+                let parts = b.split_rows(workers).unwrap();
+                let mut loss_sum = 0.0f32;
+                let mut grad_sum: Option<Vec<Tensor>> = None;
+                for (w, part) in parts.iter().enumerate() {
+                    let (l, g) = w_bes[w]
+                        .loss_and_grads_chunked(&cfg, &state.params, part, chunk_len, denom)
+                        .unwrap();
+                    loss_sum += l;
+                    grad_sum = Some(match grad_sum.take() {
+                        None => g,
+                        Some(mut acc) => {
+                            add_grads(&mut acc, &g);
+                            acc
+                        }
+                    });
+                }
+                let (l_ref, g_ref) = &full[bi];
+                assert!(
+                    (loss_sum - l_ref).abs() < 1e-5,
+                    "batch {bi} chunk {chunk_len} workers {workers}: \
+                     loss {loss_sum} vs {l_ref}"
+                );
+                for (gi, (gs, gr)) in grad_sum.unwrap().iter().zip(g_ref).enumerate() {
+                    for (i, (a, r)) in gs.data().iter().zip(gr.data()).enumerate() {
+                        assert!(
+                            (a - r).abs() < 1e-5_f32.max(1e-4 * r.abs()),
+                            "batch {bi} chunk {chunk_len} workers {workers}: \
+                             grad[{gi}][{i}] {a} vs {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn chunked_train_config(streams: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::defaults(nano());
+    cfg.scheme = Scheme::Pack;
+    cfg.packing.pack_len = 32;
+    cfg.packing.rows = 4;
+    cfg.packing.streams = streams;
+    cfg.packing.greedy_buffer = 0;
+    cfg.chunk_len = 8;
+    cfg.steps = 4;
+    cfg.seed = 7;
+    cfg.min_len = 4;
+    cfg.max_len = 56; // > pack_len: the stream holds fragmented sequences
+    cfg.mean_len = 18.0;
+    cfg
+}
+
+#[test]
+fn dp_chunked_trainer_matches_single_worker_run() {
+    // reference: a single-worker chunked Trainer over the same
+    // stream-partitioned pipeline (same corpus seed → same batches)
+    let mut t = Trainer::from_config(chunked_train_config(4)).unwrap();
+    t.train().unwrap();
+    let ref_losses: Vec<f32> = t.metrics.records.iter().map(|r| r.loss).collect();
+    let ref_params = t.state().params.clone();
+
+    for workers in [2usize, 4] {
+        let mut cfg = chunked_train_config(4);
+        cfg.dp_workers = workers;
+        let dp = DataParallelTrainer::new(cfg).unwrap();
+        let r = dp.run().unwrap();
+        assert!(r.replicas_identical, "{workers} workers: replicas diverged");
+        assert_eq!(r.metrics.steps(), ref_losses.len());
+        for (i, rec) in r.metrics.records.iter().enumerate() {
+            assert!(
+                (rec.loss - ref_losses[i]).abs() < 1e-5,
+                "step {i} ({workers} workers): loss {} vs single-worker {}",
+                rec.loss,
+                ref_losses[i]
+            );
+            assert!(rec.real_tokens > 0);
+        }
+        for (a, b) in r.final_params.iter().zip(&ref_params) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!(
+                    (x - y).abs() < 1e-4,
+                    "{workers} workers: final param {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_row_streams_execute_fragments_exactly() {
+    // streams = 2 with rows_per_stream = 2: a lane's fragment chain
+    // crosses a row boundary *inside* the lane while the other lane runs
+    // alongside — the one configuration where the lane gather spans
+    // several batch rows.  The chunked executor must reproduce each
+    // original sequence's solo monolithic logits, and a row split into
+    // one-stream workers must reproduce the full-batch gradients.
+    let cfg = nano();
+    let be = NativeBackend::with_threads(1);
+    let state = be.init_state(&cfg, 21).unwrap();
+    let pack_len = 16;
+    let mut p = StreamingPacker::with_streams(pack_len, 4, 2);
+    let long = rand_seq(0, 27, cfg.vocab_size); // lane 0: 16 + 11 over two rows
+    let s1 = rand_seq(1, 10, cfg.vocab_size); // lane 1, row 1
+    let s2 = rand_seq(2, 12, cfg.vocab_size); // lane 1, row 2
+    let mut batches = p.push(long.clone());
+    batches.extend(p.push(s1.clone()));
+    batches.extend(p.push(s2.clone()));
+    batches.extend(p.flush());
+    assert_eq!(batches.len(), 1, "everything fits one batch");
+    let batch = batches.pop().unwrap();
+    assert_eq!((batch.rows(), batch.streams, batch.rows_per_stream()), (4, 2, 2));
+    assert_eq!(batch.row_starts[1], vec![16], "in-lane continuation row");
+
+    let solo = |seq: &Sequence| {
+        let b = PackedBatch::from_rows(
+            &[PackedRow {
+                sequences: vec![seq.clone()],
+            }],
+            seq.len(),
+        );
+        be.forward(&cfg, &state.params, &b).unwrap()
+    };
+    let v = cfg.vocab_size;
+    for chunk_len in [4usize, 16, 32] {
+        let got = be
+            .forward_chunked(&cfg, &state.params, &batch, chunk_len)
+            .unwrap();
+        let flat = got.data(); // (4, 16, V): rows 0-1 = lane 0, rows 2-3 = lane 1
+        let mut worst = 0.0f32;
+        for (i, r) in solo(&long).data().iter().enumerate() {
+            worst = worst.max((flat[i] - r).abs());
+        }
+        for (i, r) in solo(&s1).data().iter().enumerate() {
+            worst = worst.max((flat[2 * pack_len * v + i] - r).abs());
+        }
+        for (i, r) in solo(&s2).data().iter().enumerate() {
+            worst = worst.max((flat[3 * pack_len * v + i] - r).abs());
+        }
+        assert!(worst < 1e-5, "chunk_len {chunk_len}: max diff {worst}");
+    }
+
+    // gradients: two workers, each owning one 2-row stream
+    let denom = ops::mask_denom(batch.loss_mask.data());
+    let (l_full, g_full) = be
+        .loss_and_grads_chunked(&cfg, &state.params, &batch, 8, denom)
+        .unwrap();
+    let parts = batch.split_rows(2).unwrap();
+    let mut loss_sum = 0.0f32;
+    let mut grad_sum: Option<Vec<Tensor>> = None;
+    for part in &parts {
+        let w_be = NativeBackend::with_threads(1);
+        let (l, g) = w_be
+            .loss_and_grads_chunked(&cfg, &state.params, part, 8, denom)
+            .unwrap();
+        loss_sum += l;
+        grad_sum = Some(match grad_sum.take() {
+            None => g,
+            Some(mut acc) => {
+                add_grads(&mut acc, &g);
+                acc
+            }
+        });
+    }
+    assert!((loss_sum - l_full).abs() < 1e-5, "loss {loss_sum} vs {l_full}");
+    for (gs, gr) in grad_sum.unwrap().iter().zip(&g_full) {
+        for (a, r) in gs.data().iter().zip(gr.data()) {
+            assert!((a - r).abs() < 1e-5_f32.max(1e-4 * r.abs()), "{a} vs {r}");
+        }
+    }
+}
+
+#[test]
+fn undersized_flush_batch_resets_stale_stream_carry() {
+    // The packer's final flush batch may arrive with fewer rows/streams
+    // than the persisted stream-end carry was shaped for: the backend
+    // must zero-reset the carry rather than reinterpret stale lanes.
+    let cfg = nano();
+    let be = NativeBackend::with_threads(1);
+    let state = be.init_state(&cfg, 3).unwrap();
+    let row = |id: u64, lens: &[usize]| PackedRow {
+        sequences: lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| rand_seq(id * 10 + i as u64, n, cfg.vocab_size))
+            .collect(),
+    };
+    let mut big = PackedBatch::from_rows(
+        &[row(1, &[20, 9]), row(2, &[32]), row(3, &[15]), row(4, &[28, 4])],
+        32,
+    );
+    big.streams = 2;
+    let mut small = PackedBatch::from_rows(&[row(5, &[17, 6])], 32);
+    small.streams = 1;
+    let d_big = ops::mask_denom(big.loss_mask.data());
+    let d_small = ops::mask_denom(small.loss_mask.data());
+
+    let _ = be
+        .loss_and_grads_chunked(&cfg, &state.params, &big, 8, d_big)
+        .unwrap();
+    // stream-shape change: 2 carry lanes cannot serve a 1-stream batch
+    let (l_warm, g_warm) = be
+        .loss_and_grads_chunked(&cfg, &state.params, &small, 8, d_small)
+        .unwrap();
+    let fresh = NativeBackend::with_threads(1);
+    let (l_fresh, g_fresh) = fresh
+        .loss_and_grads_chunked(&cfg, &state.params, &small, 8, d_small)
+        .unwrap();
+    assert_eq!(l_warm, l_fresh, "reset carry must equal a zero stream start");
+    for (a, b) in g_warm.iter().zip(&g_fresh) {
+        assert_eq!(a.data(), b.data());
+    }
+
+    // the fused step handles the same shape sequence without error
+    let be2 = NativeBackend::with_threads(1);
+    let mut st = be2.init_state(&cfg, 3).unwrap();
+    be2.train_step_chunked(&cfg, &mut st, &big, 8).unwrap();
+    let loss = be2.train_step_chunked(&cfg, &mut st, &small, 8).unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn chunked_greedy_over_length_routes_to_streaming() {
+    // Same config, different packer choice must not error: the trainer
+    // routes a chunked over-length greedy config to the streaming packer
+    // (best-fit-decreasing reorders rows, so greedy cannot host splits).
+    let mut cfg = chunked_train_config(1);
+    cfg.packing.greedy_buffer = 16;
+    cfg.steps = 2;
+    assert!(cfg.validate().is_ok(), "config must validate for either packer");
+    let mut t = Trainer::from_config(cfg).unwrap();
+    t.train().unwrap();
+    assert_eq!(t.metrics.steps(), 2);
+}
+
+#[test]
+fn dp_chunked_composes_with_greedy_batches() {
+    // Within pack_len, the greedy packer stays; its batches are
+    // row-isolated (streams = rows), so any worker split is exact.
+    let mut cfg = chunked_train_config(1);
+    cfg.max_len = 20;
+    cfg.mean_len = 12.0;
+    cfg.packing.greedy_buffer = 8;
+    cfg.dp_workers = 2;
+    cfg.steps = 3;
+    let dp = DataParallelTrainer::new(cfg).unwrap();
+    let r = dp.run().unwrap();
+    assert!(r.replicas_identical);
+    assert_eq!(r.metrics.steps(), 3);
+    assert!(r
+        .final_params
+        .iter()
+        .all(|t| t.data().iter().all(|x| x.is_finite())));
+}

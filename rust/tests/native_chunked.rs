@@ -146,6 +146,7 @@ fn chunked_gradients_match_monolithic() {
             batch.loss_mask.data(),
             rows,
             len,
+            1,
             chunk_len,
             1,
         );

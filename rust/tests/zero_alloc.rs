@@ -136,6 +136,45 @@ fn steady_state_train_step_is_allocation_free() {
         "interleaved-length step deallocated {deallocs} times"
     );
 
+    // ---- chunked/stateful step (§5): same audit ----
+    // Per-chunk spines (head caches, layer-cache spines, carry states)
+    // are pooled in the workspace and the multi-stream gather scratch is
+    // sized in the ensure phase, so the steady-state chunked step is
+    // allocation-free too.  streams = 2 exercises the lane-gather path;
+    // the per-stream carry persists across the audited steps.
+    let be_c = NativeBackend::with_threads(1);
+    let mut state_c = be_c.init_state(&cfg, 9).unwrap();
+    let bc = {
+        let mut b = batch(&cfg, 64);
+        b.streams = 2;
+        b
+    };
+    let bc2 = {
+        let mut b = batch(&cfg, 96);
+        b.streams = 2;
+        b
+    };
+    // warmup both geometries (spine pools size to the larger chunk count)
+    losses.push(be_c.train_step_chunked(&cfg, &mut state_c, &bc, 24).unwrap());
+    losses.push(be_c.train_step_chunked(&cfg, &mut state_c, &bc2, 24).unwrap());
+    losses.push(be_c.train_step_chunked(&cfg, &mut state_c, &bc, 24).unwrap());
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    DEALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..2 {
+        losses.push(be_c.train_step_chunked(&cfg, &mut state_c, &bc, 24).unwrap());
+        losses.push(be_c.train_step_chunked(&cfg, &mut state_c, &bc2, 24).unwrap());
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    let deallocs = DEALLOCS.load(Ordering::SeqCst);
+    assert_eq!(allocs, 0, "steady-state chunked step allocated {allocs} times");
+    assert_eq!(
+        deallocs, 0,
+        "steady-state chunked step deallocated {deallocs} times"
+    );
+
     // the audited steps must still be doing real work (loss-decrease
     // itself is asserted over longer runs in tests/native_backend.rs)
     assert!(losses.iter().all(|l| l.is_finite()));
