@@ -21,25 +21,20 @@ pub fn apply_backend_env(cfg: &mut TrainConfig) {
     }
 }
 
-/// Apply `PACKMAMBA_GEMM` (`naive` forces the PR-1 scalar GEMMs, anything
-/// else keeps the blocked micro-kernel) and return the active mode name
-/// for the result JSON — so every figure bench records which GEMM path
-/// produced its numbers.
+/// Apply `PACKMAMBA_GEMM` (`naive` | `blocked` | `avx2`; unset = best
+/// tile the CPU supports) as the process-wide dispatch override and
+/// return the active tier name for the result JSON — so every figure
+/// bench records which GEMM path produced its numbers.  An `avx2`
+/// request without CPU support falls back to `blocked` (the resolver
+/// warns); the returned name is always the tier that actually ran.
 pub fn apply_gemm_env() -> &'static str {
-    match std::env::var("PACKMAMBA_GEMM").as_deref() {
-        Ok("naive") => {
-            packmamba::backend::gemm::set_force_naive(true);
-            "naive"
-        }
-        Ok("blocked") | Err(_) => {
-            packmamba::backend::gemm::set_force_naive(false);
-            "blocked"
-        }
-        Ok(other) => {
-            eprintln!("ignoring bad PACKMAMBA_GEMM `{other}` (want naive|blocked)");
-            "blocked"
-        }
-    }
+    // install the env-filtered logger first: the resolver's fallback
+    // warnings (bad value, avx2-without-CPU-support) go through the
+    // `log` facade, which drops records until a logger exists
+    packmamba::util::logging::init();
+    let mode = packmamba::backend::gemm::detected_mode();
+    packmamba::backend::gemm::set_mode_override(Some(mode));
+    mode.name()
 }
 
 /// Write a bench result JSON at the repo root (machine-readable perf

@@ -95,6 +95,7 @@ fn main() {
     let json = Json::from_pairs([
         ("figure", Json::from("fig2")),
         ("gemm_mode", Json::from(gemm_mode)),
+        ("threads", Json::from(threads)),
         ("rows", Json::Arr(rows)),
     ]);
     common::write_results("fig2_ssm_profile", &json);

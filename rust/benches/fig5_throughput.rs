@@ -103,6 +103,10 @@ fn main() {
     let json = Json::from_pairs([
         ("figure", Json::from("fig5")),
         ("gemm_mode", Json::from(gemm_mode)),
+        (
+            "threads",
+            Json::from(packmamba::backend::NativeBackend::env_threads()),
+        ),
         ("measured_tiny", Json::Arr(json_rows)),
         ("measured_pack_vs_single", Json::from(speedup)),
         ("modeled_a100", Json::Arr(model_rows)),

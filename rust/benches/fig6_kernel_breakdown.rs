@@ -162,6 +162,7 @@ fn main() {
     let json = Json::from_pairs([
         ("figure", Json::from("fig6")),
         ("gemm_mode", Json::from(gemm_mode)),
+        ("threads", Json::from(threads)),
         ("measured_ops", Json::Arr(rows_json)),
         ("modeled_a100", Json::Arr(model_rows)),
         ("modeled_total_speedup", Json::from(total)),

@@ -1,18 +1,25 @@
-//! GEMM micro-kernel bench: the blocked kernel vs the PR-1 scalar
-//! baseline, across the paper's projection shapes, plus the end-to-end
-//! native training step the speedup is supposed to buy.
+//! GEMM micro-kernel bench: every dispatch tier (PR-1 scalar baseline,
+//! safe blocked tile, AVX2+FMA tile where supported) across the paper's
+//! projection shapes, plus a thread-scaling sweep over the persistent
+//! worker pool and the end-to-end native training step the speedups are
+//! supposed to buy.
 //!
 //! * **micro** — in_proj-shaped `(T, d) @ (d, 4d)` GEMMs over
 //!   d_model ∈ {2048, 2560} (the paper's 1.4B/2.8B widths, expand = 2)
-//!   and packed T ∈ {512..4096}: GFLOP/s for naive and blocked, plus the
-//!   speedup, for all three layout variants at the base shape.
+//!   and packed T ∈ {512..4096}: GFLOP/s for naive, blocked, and (when
+//!   the CPU has it) avx2, plus the speedups.
+//! * **thread sweep** — the base shape at threads ∈ {1, 2, 4, 8}, with
+//!   explicit thread counts (constructor/call parameters — the env var
+//!   is never mutated mid-process), recording blocked and avx2 GFLOP/s
+//!   per width: the pool's scaling curve, machine-readable.
 //! * **e2e** — a real `fig5`-style native training step (forward +
 //!   backward + AdamW through the packed kernels) at d_model = 768,
-//!   packed T = 2048, 8 threads, with the GEMMs forced to the scalar
-//!   baseline and then the blocked kernel.
+//!   packed T = 2048, 8 threads: scalar baseline vs the best supported
+//!   tile (explicit overrides — `PACKMAMBA_GEMM` cannot skew either side).
 //!
 //! Results land in `BENCH_GEMM.json` at the repo root (and under
-//! `target/bench/`), so the perf trajectory is machine-readable.
+//! `target/bench/`), stamped with the `dispatch` tier, so the perf
+//! trajectory is machine-readable.
 //!
 //! `-- --smoke` runs a differential correctness sweep and a reduced perf
 //! set for CI; the e2e acceptance shape is measured in both modes.
@@ -21,7 +28,7 @@ mod common;
 
 use std::time::Instant;
 
-use packmamba::backend::gemm::{self, GemmScratch, Layout};
+use packmamba::backend::gemm::{self, GemmMode, GemmScratch, Layout};
 use packmamba::backend::{Backend, NativeBackend};
 use packmamba::config::ModelConfig;
 use packmamba::packing::{PackedBatch, PackedRow, Sequence};
@@ -44,27 +51,45 @@ fn time_reps(reps: usize, mut f: impl FnMut()) -> f64 {
     times[times.len() / 2]
 }
 
-/// One (m, k, n) NN shape: (naive s, blocked s).  Both sides get the
-/// same warmup and rep count (median).  The naive side keeps its
-/// per-call output allocation — that is the PR-1 baseline's real
-/// behavior — but runs after a warmup so the allocator is hot.
-fn bench_nn(m: usize, k: usize, n: usize, threads: usize, reps: usize) -> (f64, f64) {
+/// Median seconds for one NN gemm at an explicit dispatch tier.
+#[allow(clippy::too_many_arguments)]
+fn time_tier(
+    tier: GemmMode,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    reps: usize,
+    a: &[f32],
+    b: &[f32],
+) -> f64 {
+    let mut c = vec![0.0f32; m * n];
+    let mut scratch = GemmScratch::new();
+    // warmup (sizes the scratch, faults in the pages, grows the pool)
+    gemm::gemm_into_tier(tier, Layout::NN, m, k, n, a, b, 0.0, &mut c, threads, &mut scratch);
+    time_reps(reps, || {
+        gemm::gemm_into_tier(tier, Layout::NN, m, k, n, a, b, 0.0, &mut c, threads, &mut scratch);
+        std::hint::black_box(&c);
+    })
+}
+
+/// One (m, k, n) NN shape: (naive s, blocked s, avx2 s if supported).
+/// Every side gets the same warmup and rep count (median).  The naive
+/// side keeps its per-call output allocation — that is the PR-1
+/// baseline's real behavior — but runs after a warmup so the allocator
+/// is hot.
+fn bench_nn(m: usize, k: usize, n: usize, threads: usize, reps: usize) -> (f64, f64, Option<f64>) {
     let mut rng = Pcg64::new((m * 31 + k * 7 + n) as u64, 0);
     let a = randv(&mut rng, m * k, 0.05);
     let b = randv(&mut rng, k * n, 0.05);
-    let mut c = vec![0.0f32; m * n];
-    let mut scratch = GemmScratch::new();
-    // warmups (size the scratch, fault in the pages, prime the allocator)
-    gemm::gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c, threads, &mut scratch);
+    let blocked = time_tier(GemmMode::Blocked, m, k, n, threads, reps, &a, &b);
+    let avx2 = gemm::avx2_available()
+        .then(|| time_tier(GemmMode::Avx2, m, k, n, threads, reps, &a, &b));
     std::hint::black_box(gemm::naive::matmul(&a, m, k, &b, n, threads));
-    let blocked = time_reps(reps, || {
-        gemm::gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c, threads, &mut scratch);
-        std::hint::black_box(&c);
-    });
     let naive = time_reps(reps, || {
         std::hint::black_box(gemm::naive::matmul(&a, m, k, &b, n, threads));
     });
-    (naive, blocked)
+    (naive, blocked, avx2)
 }
 
 /// Differential check of all three layouts against the naive reference.
@@ -132,15 +157,22 @@ fn e2e_step_secs(cfg: &ModelConfig, batch: &PackedBatch, threads: usize, reps: u
 }
 
 fn main() {
+    packmamba::util::logging::init();
     let smoke = std::env::args().any(|a| a == "--smoke");
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    // PACKMAMBA_GEMM is deliberately ignored here: this bench's whole job
-    // is to measure BOTH paths (micro via direct calls, e2e by toggling
-    // set_force_naive explicitly below).
+    let threads = NativeBackend::env_threads();
+    let avx2 = gemm::avx2_available();
+    // PACKMAMBA_GEMM is deliberately IGNORED here: this bench's whole
+    // job is to measure every tier explicitly (micro via gemm_into_tier,
+    // e2e via explicit overrides below), so the env var must not be able
+    // to silently redirect either side of a comparison.  `dispatch` is
+    // the best tile this CPU supports — the tiled side of the e2e run.
+    let dispatch = gemm::resolve_mode(None, avx2);
     println!(
-        "=== GEMM micro-kernel bench ({}, {} threads available) ===",
+        "=== GEMM micro-kernel bench ({}, {} threads, best tile `{}`, avx2 {}) ===",
         if smoke { "smoke" } else { "full" },
-        threads
+        threads,
+        dispatch.name(),
+        if avx2 { "available" } else { "unavailable" }
     );
 
     differential_sweep();
@@ -154,11 +186,14 @@ fn main() {
             let (m, k, n) = (t, d, 4 * d); // expand=2 ⇒ in_proj is (d, 2·di) = (d, 4d)
             let flops = 2.0 * (m * k * n) as f64;
             let reps = if flops > 5e10 { 1 } else { 3 };
-            let (naive_s, blocked_s) = bench_nn(m, k, n, threads, reps);
+            let (naive_s, blocked_s, avx2_s) = bench_nn(m, k, n, threads, reps);
             let (gf_n, gf_b) = (flops / naive_s / 1e9, flops / blocked_s / 1e9);
+            let gf_a = avx2_s.map(|s| flops / s / 1e9);
             let speedup = naive_s / blocked_s;
             println!(
-                "d_model {d:>5} T {t:>5}  naive {gf_n:>7.2} GF/s  blocked {gf_b:>7.2} GF/s  speedup {speedup:.2}x"
+                "d_model {d:>5} T {t:>5}  naive {gf_n:>7.2} GF/s  blocked {gf_b:>7.2} GF/s  \
+                 avx2 {}  blocked-vs-naive {speedup:.2}x",
+                gf_a.map(|g| format!("{g:>7.2} GF/s")).unwrap_or_else(|| "    n/a".into()),
             );
             micro_rows.push(Json::from_pairs([
                 ("d_model", Json::from(d)),
@@ -168,9 +203,38 @@ fn main() {
                 ("n", Json::from(n)),
                 ("naive_gflops", Json::from(gf_n)),
                 ("blocked_gflops", Json::from(gf_b)),
+                ("avx2_gflops", gf_a.map(Json::from).unwrap_or(Json::Null)),
                 ("speedup", Json::from(speedup)),
             ]));
         }
+    }
+
+    // --- thread-scaling sweep over the persistent pool ---
+    // Explicit thread counts (never the env var): the pool serves
+    // whatever width each call asks for, so one process can sweep
+    // honestly.  Base shape is the in_proj GEMM at the sweep d_model.
+    let (sm, sk, sn) = if smoke { (512, 256, 1024) } else { (2048, 2048, 8192) };
+    let sweep_flops = 2.0 * (sm * sk * sn) as f64;
+    let mut sweep_rows = Vec::new();
+    println!("thread sweep ({sm}x{sk}x{sn}):");
+    for &tc in &[1usize, 2, 4, 8] {
+        let mut rng = Pcg64::new(0x51EE9 + tc as u64, 0);
+        let a = randv(&mut rng, sm * sk, 0.05);
+        let b = randv(&mut rng, sk * sn, 0.05);
+        let reps = if smoke { 2 } else { 3 };
+        let blocked_s = time_tier(GemmMode::Blocked, sm, sk, sn, tc, reps, &a, &b);
+        let avx2_s = avx2.then(|| time_tier(GemmMode::Avx2, sm, sk, sn, tc, reps, &a, &b));
+        let gf_b = sweep_flops / blocked_s / 1e9;
+        let gf_a = avx2_s.map(|s| sweep_flops / s / 1e9);
+        println!(
+            "  threads {tc}: blocked {gf_b:>7.2} GF/s  avx2 {}",
+            gf_a.map(|g| format!("{g:>7.2} GF/s")).unwrap_or_else(|| "n/a".into())
+        );
+        sweep_rows.push(Json::from_pairs([
+            ("threads", Json::from(tc)),
+            ("blocked_gflops", Json::from(gf_b)),
+            ("avx2_gflops", gf_a.map(Json::from).unwrap_or(Json::Null)),
+        ]));
     }
 
     // --- e2e: fig5-style native training step, d_model=768, T=2048 ---
@@ -187,21 +251,26 @@ fn main() {
     let pack_len = 2048;
     let batch = e2e_batch(&cfg, pack_len);
     let reps = if smoke { 1 } else { 2 };
-    gemm::set_force_naive(true);
+    gemm::set_mode_override(Some(GemmMode::Naive));
     let naive_step = e2e_step_secs(&cfg, &batch, e2e_threads, reps);
-    gemm::set_force_naive(false);
-    let blocked_step = e2e_step_secs(&cfg, &batch, e2e_threads, reps);
-    let e2e_speedup = naive_step / blocked_step;
+    gemm::set_mode_override(Some(dispatch)); // best tile, env-independent
+    let tiled_step = e2e_step_secs(&cfg, &batch, e2e_threads, reps);
+    gemm::set_mode_override(None);
+    let e2e_speedup = naive_step / tiled_step;
     println!(
         "e2e train step d_model=768 T=2048 ({e2e_threads} threads): naive {naive_step:.3}s, \
-         blocked {blocked_step:.3}s, speedup {e2e_speedup:.2}x"
+         {} {tiled_step:.3}s, speedup {e2e_speedup:.2}x",
+        dispatch.name()
     );
 
     let json = Json::from_pairs([
         ("bench", Json::from("gemm_micro")),
         ("mode", Json::from(if smoke { "smoke" } else { "full" })),
-        ("threads_available", Json::from(threads)),
+        ("threads", Json::from(threads)),
+        ("dispatch", Json::from(dispatch.name())),
+        ("avx2_available", Json::from(avx2)),
         ("micro", Json::Arr(micro_rows)),
+        ("thread_sweep", Json::Arr(sweep_rows)),
         (
             "e2e_fig5_step",
             Json::from_pairs([
@@ -210,8 +279,9 @@ fn main() {
                 ("rows", Json::from(1usize)),
                 ("n_layers", Json::from(cfg.n_layers)),
                 ("threads", Json::from(e2e_threads)),
+                ("gemm_mode", Json::from(dispatch.name())),
                 ("naive_secs_per_step", Json::from(naive_step)),
-                ("blocked_secs_per_step", Json::from(blocked_step)),
+                ("tiled_secs_per_step", Json::from(tiled_step)),
                 ("speedup", Json::from(e2e_speedup)),
             ]),
         ),

@@ -23,14 +23,27 @@
 //! temporary, and all three layout variants through effective strides —
 //! no transposed copies of the operands are ever materialized.
 //!
+//! **Runtime dispatch ([`GemmMode`])**: the inner register tile comes in
+//! two flavours — the portable safe tile above, and an `x86_64`
+//! AVX2+FMA tile (`unsafe` intrinsics, runtime-gated on
+//! `is_x86_feature_detected!`).  The tier is resolved **once** per
+//! process from `PACKMAMBA_GEMM={naive,blocked,avx2}` + CPUID
+//! ([`detected_mode`]; unset = best supported tile) and can be
+//! overridden by benches ([`set_mode_override`]).  An `avx2` request on
+//! a CPU without the features degrades to `blocked` with a warning —
+//! never a panic, never an illegal instruction.
+//!
 //! Determinism: each output element is accumulated by exactly one task in
 //! a fixed k-order (`KC` blocks ascending, sequential within a block), so
 //! results are bit-identical for any thread count — the same invariant
 //! the rest of the native backend upholds.  Note the *grouping* into `KC`
 //! blocks means results can differ from the naive single-sweep reference
-//! in the last ulps once `k > KC`; tests compare with a 1e-5 tolerance.
+//! in the last ulps once `k > KC` (and the FMA tile contracts the
+//! multiply-add rounding); same-tier results are exact across thread
+//! counts, cross-tier differential tests compare at 1e-5.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 use crate::util::threadpool::{parallel_chunks2_mut, parallel_chunks_mut};
 
@@ -81,21 +94,121 @@ impl GemmScratch {
     }
 }
 
-/// When set, `ops::matmul*` fall back to the [`naive`] scalar reference —
-/// the PR-1 baseline.  Benches flip this to measure the speedup honestly
-/// end-to-end; it is never set on the training path.
-static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
-
-pub fn set_force_naive(v: bool) {
-    FORCE_NAIVE.store(v, Ordering::SeqCst);
+/// GEMM execution tiers, coarsest to fastest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmMode {
+    /// The PR-1 scalar triple loops ([`naive`]) — differential reference
+    /// and bench baseline.
+    Naive,
+    /// Cache-blocked, autovectorized safe micro-kernel — the portable
+    /// default (and the universal fallback).
+    Blocked,
+    /// The blocked kernel with the AVX2+FMA `MR×NR` register tile
+    /// (`x86_64` only, runtime-detected).
+    Avx2,
 }
 
-pub fn naive_forced() -> bool {
-    FORCE_NAIVE.load(Ordering::SeqCst)
+impl GemmMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmMode::Naive => "naive",
+            GemmMode::Blocked => "blocked",
+            GemmMode::Avx2 => "avx2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GemmMode> {
+        match s {
+            "naive" => Some(GemmMode::Naive),
+            "blocked" => Some(GemmMode::Blocked),
+            "avx2" => Some(GemmMode::Avx2),
+            _ => None,
+        }
+    }
 }
 
-/// Threads actually worth using for `work` fused multiply-adds (scoped
-/// thread spawn costs ~tens of µs; small ops run serially).
+/// Does this CPU support the AVX2+FMA register tile?  (Cached by the
+/// feature-detection runtime; cheap to call on the hot path.)
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Pure dispatch-tier resolution: the `PACKMAMBA_GEMM` request (if any)
+/// against the CPU's actual capability.  Separated from the env/CPUID
+/// reads so the fallback rules are unit-testable on any machine: an
+/// `avx2` request without hardware support degrades to `blocked` with a
+/// warning — never a panic; an unrecognized request falls back to
+/// auto-detection.
+pub fn resolve_mode(request: Option<&str>, avx2: bool) -> GemmMode {
+    let auto = if avx2 { GemmMode::Avx2 } else { GemmMode::Blocked };
+    match request {
+        None => auto,
+        Some(s) => match GemmMode::parse(s) {
+            Some(GemmMode::Avx2) if !avx2 => {
+                log::warn!(
+                    "PACKMAMBA_GEMM=avx2 requested but this CPU lacks avx2+fma; using blocked"
+                );
+                GemmMode::Blocked
+            }
+            Some(m) => m,
+            None => {
+                log::warn!("ignoring bad PACKMAMBA_GEMM `{s}` (want naive|blocked|avx2)");
+                auto
+            }
+        },
+    }
+}
+
+/// The process-wide dispatch tier: resolved once (at first use — the
+/// native backend forces it at construction) from `PACKMAMBA_GEMM` and
+/// CPUID, then cached.
+pub fn detected_mode() -> GemmMode {
+    static MODE: OnceLock<GemmMode> = OnceLock::new();
+    *MODE.get_or_init(|| {
+        let env = std::env::var("PACKMAMBA_GEMM").ok();
+        resolve_mode(env.as_deref(), avx2_available())
+    })
+}
+
+/// Process-wide tier override (0 = none, else 1 + tier index).  Benches
+/// use it to measure specific tiers end-to-end; it is never set on the
+/// training path.
+static MODE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+pub fn set_mode_override(mode: Option<GemmMode>) {
+    let v = match mode {
+        None => 0,
+        Some(GemmMode::Naive) => 1,
+        Some(GemmMode::Blocked) => 2,
+        Some(GemmMode::Avx2) => 3,
+    };
+    MODE_OVERRIDE.store(v, Ordering::SeqCst);
+}
+
+/// The tier `ops::matmul*` route through right now (override, else
+/// [`detected_mode`]).
+pub fn current_mode() -> GemmMode {
+    match MODE_OVERRIDE.load(Ordering::SeqCst) {
+        1 => GemmMode::Naive,
+        2 => GemmMode::Blocked,
+        3 => GemmMode::Avx2,
+        _ => detected_mode(),
+    }
+}
+
+/// Threads actually worth using for `work` fused multiply-adds.  Small
+/// ops run serially: a pool dispatch is spawn-free but still pays a
+/// condvar wake + latch (~µs), and sub-2^20-FMA ops finish in that
+/// order of time anyway.  The threshold predates the pool (it was
+/// tuned against scoped-spawn overhead) — re-tuning it downward under
+/// pool dispatch is recorded ROADMAP headroom.
 pub(crate) fn effective_threads(work: usize, threads: usize) -> usize {
     if work < 1 << 20 {
         1
@@ -118,7 +231,8 @@ fn panel_height(m: usize, threads: usize) -> usize {
     (target.div_ceil(MR) * MR).min(MC)
 }
 
-/// `C = A·B + beta·C` over flat row-major `c` of shape `(m, n)`.
+/// `C = A·B + beta·C` over flat row-major `c` of shape `(m, n)`, on the
+/// process-wide dispatch tier ([`current_mode`]).
 ///
 /// `layout` fixes how `a`/`b` are interpreted (see [`Layout`]); `beta`
 /// must be 0.0 (overwrite) or 1.0 (accumulate).  `scratch` is reused
@@ -136,6 +250,34 @@ pub fn gemm_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
+    gemm_into_tier(current_mode(), layout, m, k, n, a, b, beta, c, threads, scratch);
+}
+
+/// [`gemm_into`] with an **explicit dispatch tier** (benches and
+/// differential tests measuring one specific micro-kernel).
+///
+/// Every tier honours the same `C = A·B + beta·C` contract: `Naive`
+/// runs the scalar reference in the [`naive`] module (with its
+/// per-call output allocation — the honest PR-1 baseline), the tiled
+/// tiers run the blocked kernel with the safe or AVX2 tile.  An `Avx2`
+/// request on a CPU without avx2+fma silently degrades to the safe
+/// tile, so no call path can ever execute illegal instructions
+/// regardless of what the env/caller asked for.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_tier(
+    tier: GemmMode,
+    layout: Layout,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    let use_avx2 = tier == GemmMode::Avx2 && avx2_available();
     assert!(beta == 0.0 || beta == 1.0, "beta must be 0 or 1, got {beta}");
     assert_eq!(a.len(), m * k, "gemm lhs size");
     assert_eq!(b.len(), k * n, "gemm rhs size");
@@ -146,6 +288,21 @@ pub fn gemm_into(
     if k == 0 {
         if beta == 0.0 {
             c.iter_mut().for_each(|v| *v = 0.0);
+        }
+        return;
+    }
+    if tier == GemmMode::Naive {
+        let prod = match layout {
+            Layout::NN => naive::matmul(a, m, k, b, n, threads),
+            Layout::NT => naive::matmul_nt(a, m, k, b, n, threads),
+            Layout::TN => naive::matmul_tn(a, k, m, b, n, threads),
+        };
+        if beta == 0.0 {
+            c.copy_from_slice(&prod);
+        } else {
+            for (o, p) in c.iter_mut().zip(prod) {
+                *o += p;
+            }
         }
         return;
     }
@@ -193,7 +350,7 @@ pub fn gemm_into(
         parallel_chunks2_mut(cslice, ph * n, aslice, ph * KC, threads, |pi, cpanel, apanel| {
             let i0 = row0 + pi * ph;
             let mc = ph.min(m - i0);
-            run_panel(a, ars, acs, i0, mc, k, n, b_pack, beta, cpanel, apanel);
+            run_panel(a, ars, acs, i0, mc, k, n, b_pack, beta, cpanel, apanel, use_avx2);
         });
         row0 += rows;
     }
@@ -213,6 +370,7 @@ fn run_panel(
     beta: f32,
     cpanel: &mut [f32],
     apanel: &mut [f32],
+    use_avx2: bool,
 ) {
     let n_strips = n.div_ceil(NR);
     let row_strips = mc.div_ceil(MR);
@@ -228,11 +386,39 @@ fn run_panel(
                 let mr = MR.min(mc - ir * MR);
                 let a_strip = &apanel[ir * KC * MR..][..kc * MR];
                 let mut acc = [[0.0f32; NR]; MR];
-                micro_kernel(kc, a_strip, b_strip, &mut acc);
+                micro_kernel_dispatch(use_avx2, kc, a_strip, b_strip, &mut acc);
                 store_tile(&acc, cpanel, ir * MR, j0, mr, nr, n, acc_beta);
             }
         }
     }
+}
+
+/// Route one register tile to the selected micro-kernel.  `use_avx2` is
+/// only ever true when [`avx2_available`] confirmed the CPU features
+/// (see [`gemm_into_tier`]), so the `unsafe` call below can never
+/// execute unsupported instructions.
+#[inline(always)]
+fn micro_kernel_dispatch(
+    use_avx2: bool,
+    kc: usize,
+    a_strip: &[f32],
+    b_strip: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_avx2 {
+            // SAFETY: `use_avx2` implies `is_x86_feature_detected!`
+            // confirmed avx2+fma at tier selection, and the strips hold
+            // at least `kc*MR` / `kc*NR` elements (sliced exactly so by
+            // `run_panel`).
+            unsafe { avx2::micro_kernel(kc, a_strip, b_strip, acc) };
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = use_avx2;
+    micro_kernel(kc, a_strip, b_strip, acc);
 }
 
 /// Pack the `mc×kc` block of A starting at (`i0`, `pc`) into MR-tall row
@@ -285,6 +471,60 @@ fn micro_kernel(kc: usize, a_strip: &[f32], b_strip: &[f32], acc: &mut [[f32; NR
     }
 }
 
+/// The AVX2+FMA register tile (`x86_64` only, runtime-dispatched).
+///
+/// Same contract as [`micro_kernel`]: `acc[i][j] += Σ_p a[p·MR+i]·b[p·NR+j]`
+/// in strict ascending-`p` order per element, so same-tier results stay
+/// bit-identical for any thread count.  The FMA contracts each
+/// multiply-add into one rounding, so this tier differs from the scalar
+/// tile in the last ulps — the cross-tier differential tests
+/// (`tests/gemm_properties.rs`) compare at 1e-5.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{MR, NR};
+    use std::arch::x86_64::{_mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_storeu_ps};
+
+    // The register allocation below (4 ymm accumulators × 8 f32 lanes)
+    // is the tile shape itself; refuse to compile under a resized tile.
+    const _: () = assert!(MR == 4 && NR == 8, "avx2 tile is hard-wired to 4x8");
+
+    /// # Safety
+    /// The caller must have verified `avx2` **and** `fma` support via
+    /// `is_x86_feature_detected!`, and pass strips of at least `kc*MR`
+    /// (`a_strip`) / `kc*NR` (`b_strip`) elements.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn micro_kernel(
+        kc: usize,
+        a_strip: &[f32],
+        b_strip: &[f32],
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        debug_assert!(a_strip.len() >= kc * MR && b_strip.len() >= kc * NR);
+        let ap = a_strip.as_ptr();
+        let bp = b_strip.as_ptr();
+        // Load the incoming accumulator so the contract really is
+        // `acc += ...`, interchangeable with the safe tile (run_panel
+        // currently passes zeroed tiles, but the tiles must not diverge
+        // if that ever changes).
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        for p in 0..kc {
+            let bv = _mm256_loadu_ps(bp.add(p * NR));
+            let a0 = ap.add(p * MR);
+            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a0), bv, c0);
+            c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(1)), bv, c1);
+            c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(2)), bv, c2);
+            c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(3)), bv, c3);
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+}
+
 /// Write one register tile back into the C panel, honouring the edge
 /// (`mr×nr` valid) and `beta`.
 #[allow(clippy::too_many_arguments)]
@@ -313,7 +553,8 @@ fn store_tile(
 
 /// The PR-1 scalar triple-loop GEMMs, kept verbatim as (a) the
 /// differential-test reference and (b) the honest baseline the benches
-/// measure speedups against (`set_force_naive`).  Note the skip-zero
+/// measure speedups against (`PACKMAMBA_GEMM=naive`, or
+/// `set_mode_override(Some(GemmMode::Naive))`).  Note the skip-zero
 /// branch in the dense loops — the pessimization the blocked kernel
 /// removes.
 pub mod naive {
@@ -480,6 +721,55 @@ mod tests {
         assert_eq!(c, vec![3.0; 6]);
         gemm_into(Layout::NN, 2, 0, 3, &[], &[], 0.0, &mut c, 1, &mut scratch);
         assert_eq!(c, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn avx2_tier_matches_safe_tile_when_supported() {
+        if !avx2_available() {
+            eprintln!("skipping avx2 tile test: CPU lacks avx2+fma");
+            return;
+        }
+        let mut rng = Pcg64::new(6, 0);
+        let mut s1 = GemmScratch::new();
+        let mut s2 = GemmScratch::new();
+        for &(m, k, n) in &[(1, 1, 1), (5, 7, 9), (33, 257, 40), (130, 300, 17)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut cv = vec![0.0f32; m * n];
+            let mut cs = vec![0.0f32; m * n];
+            gemm_into_tier(GemmMode::Avx2, Layout::NN, m, k, n, &a, &b, 0.0, &mut cv, 2, &mut s1);
+            let tier = GemmMode::Blocked;
+            gemm_into_tier(tier, Layout::NN, m, k, n, &a, &b, 0.0, &mut cs, 2, &mut s2);
+            assert_close(&cv, &cs, 1e-5, "avx2-vs-safe");
+        }
+    }
+
+    #[test]
+    fn avx2_request_degrades_instead_of_crashing() {
+        // gemm_into_tier(Avx2) must be callable on ANY cpu: with support
+        // it runs the tile, without it it silently uses the safe tile
+        let mut rng = Pcg64::new(7, 0);
+        let (m, k, n) = (9, 13, 11);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        let mut scratch = GemmScratch::new();
+        gemm_into_tier(GemmMode::Avx2, Layout::NN, m, k, n, &a, &b, 0.0, &mut c, 1, &mut scratch);
+        assert_close(&c, &naive::matmul(&a, m, k, &b, n, 1), 1e-5, "degrade");
+    }
+
+    #[test]
+    fn mode_resolution_rules() {
+        assert_eq!(resolve_mode(None, true), GemmMode::Avx2);
+        assert_eq!(resolve_mode(None, false), GemmMode::Blocked);
+        assert_eq!(resolve_mode(Some("naive"), true), GemmMode::Naive);
+        assert_eq!(resolve_mode(Some("blocked"), true), GemmMode::Blocked);
+        assert_eq!(resolve_mode(Some("avx2"), true), GemmMode::Avx2);
+        // the satellite guarantee: avx2 requested without CPU support
+        // falls back to blocked (warn), not a panic
+        assert_eq!(resolve_mode(Some("avx2"), false), GemmMode::Blocked);
+        assert_eq!(resolve_mode(Some("bogus"), false), GemmMode::Blocked);
+        assert_eq!(resolve_mode(Some("bogus"), true), GemmMode::Avx2);
     }
 
     #[test]

@@ -13,9 +13,13 @@
 //!   segmented formulation).
 //!
 //! Layout: activations are **channel-major** `(B, D, L)` here so each
-//! `(row, channel)` lane is a contiguous stretch the thread pool can own
+//! `(row, channel)` lane is a contiguous stretch one pool task can own
 //! (`util::threadpool::parallel_chunks_mut`); the model layer transposes
-//! at the GEMM boundaries.  Scan state history `(B, D, L, N)` and the
+//! at the GEMM boundaries.  Every parallel loop below — fwd, bwd, and
+//! the chunked carry variants — dispatches onto the **persistent parked
+//! `WorkerPool`** through that primitive, so the multi-threaded steady
+//! state spawns no threads and allocates nothing (`tests/zero_alloc.rs`
+//! audits it at threads = 4).  Scan state history `(B, D, L, N)` and the
 //! masked decay `Ā` are cached by the forward for the backward pass.
 //!
 //! Every kernel has an `_into` form writing caller-provided buffers (the

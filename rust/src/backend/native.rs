@@ -2,16 +2,24 @@
 //!
 //! No artifacts, no FFI — [`model`] implements the forward/backward and
 //! [`kernels`](super::kernels) the paper's packed operators, parallelized
-//! over rows and channels via `util::threadpool`; the GEMM-shaped ops run
-//! on the blocked micro-kernel in [`gemm`](super::gemm).  Thread count
-//! comes from `PACKMAMBA_THREADS` or the machine's available parallelism;
-//! the numerics are bit-identical for any thread count, which keeps
-//! data-parallel replicas exactly in sync.
+//! over rows and channels via the persistent `util::threadpool`
+//! [`WorkerPool`](crate::util::threadpool::WorkerPool); the GEMM-shaped
+//! ops run on the blocked micro-kernel in [`gemm`](super::gemm), whose
+//! register tile is runtime-dispatched (`PACKMAMBA_GEMM`, resolved once
+//! at backend construction).  Thread count is a **constructor
+//! parameter** ([`NativeBackend::with_threads`]); [`NativeBackend::new`]
+//! defaults it from `PACKMAMBA_THREADS` or the machine's available
+//! parallelism ([`NativeBackend::env_threads`]) — resolved at
+//! construction, so benches sweeping thread counts pass them explicitly
+//! instead of mutating the env mid-process.  The numerics are
+//! bit-identical for any thread count, which keeps data-parallel
+//! replicas exactly in sync.
 //!
 //! The backend owns a persistent [`model::ModelWorkspace`] (buffer arena
-//! + GEMM scratch) and spec-sized gradient buffers, so the fused
-//! [`Backend::train_step`] performs **zero heap allocations** after the
-//! first (warmup) step — see `tests/zero_alloc.rs`.
+//! + GEMM scratch), spec-sized gradient buffers, and pre-warmed pool
+//! workers, so the fused [`Backend::train_step`] performs **zero heap
+//! allocations and zero thread spawns** after the first (warmup) step —
+//! single- *and* multi-threaded; see `tests/zero_alloc.rs`.
 
 use std::cell::{Ref, RefCell};
 use std::collections::HashMap;
@@ -50,9 +58,18 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Backend with `PACKMAMBA_THREADS` (or all available) workers.
+    /// Backend with [`NativeBackend::env_threads`] workers.
     pub fn new() -> NativeBackend {
-        let threads = std::env::var("PACKMAMBA_THREADS")
+        Self::with_threads(Self::env_threads())
+    }
+
+    /// The environment's default thread count: `PACKMAMBA_THREADS`, else
+    /// the machine's available parallelism.  Read at **construction
+    /// only** — callers that sweep thread counts (benches, dp workers)
+    /// pass explicit values to [`NativeBackend::with_threads`] instead
+    /// of mutating the env mid-process.
+    pub fn env_threads() -> usize {
+        std::env::var("PACKMAMBA_THREADS")
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
             .filter(|&t| t >= 1)
@@ -60,13 +77,23 @@ impl NativeBackend {
                 std::thread::available_parallelism()
                     .map(|n| n.get())
                     .unwrap_or(1)
-            });
-        Self::with_threads(threads)
+            })
     }
 
+    /// Backend pinned to exactly `threads` participants.  Construction
+    /// is where the hot path's one-time setup happens: the persistent
+    /// worker pool is grown to `threads - 1` parked workers (so the
+    /// first train step spawns nothing) and the GEMM dispatch tier is
+    /// resolved from `PACKMAMBA_GEMM` + CPUID.
     pub fn with_threads(threads: usize) -> NativeBackend {
+        let threads = threads.max(1);
+        crate::util::threadpool::WorkerPool::global().ensure_workers(threads.saturating_sub(1));
+        // resolve the GEMM tier eagerly — not inside the log macro, whose
+        // arguments a level-gated logger may never evaluate
+        let tier = super::gemm::detected_mode();
+        log::debug!("native backend: {threads} threads, gemm dispatch tier `{}`", tier.name());
         NativeBackend {
-            threads: threads.max(1),
+            threads,
             opt: AdamWConfig::default(),
             stats: RefCell::new(HashMap::new()),
             ws: RefCell::new(model::ModelWorkspace::new()),

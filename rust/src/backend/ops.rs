@@ -1,8 +1,10 @@
 //! Dense host primitives for the native backend: GEMM layout adapters
-//! over the blocked micro-kernel in [`gemm`](super::gemm), RMSNorm,
-//! activations, blocked layout transposes, and the masked cross-entropy
-//! head.  All operate on flat row-major `f32` slices; shapes travel as
-//! explicit dimensions.
+//! over the runtime-dispatched micro-kernel in [`gemm`](super::gemm)
+//! (`PACKMAMBA_GEMM` tier: scalar reference / safe blocked / AVX2+FMA),
+//! RMSNorm, activations, blocked layout transposes, and the masked
+//! cross-entropy head.  All operate on flat row-major `f32` slices;
+//! shapes travel as explicit dimensions.  Parallel routines dispatch
+//! onto the persistent `WorkerPool` — no per-call thread spawns.
 //!
 //! Every routine has an `_into` form that writes caller-provided buffers
 //! — the allocation-free surface `model` drives through the `StepArena` —
@@ -30,11 +32,7 @@ pub fn matmul_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
-    if gemm::naive_forced() {
-        accumulate_naive(gemm::naive::matmul(a, m, k, b, n, threads), beta, out);
-    } else {
-        gemm::gemm_into(Layout::NN, m, k, n, a, b, beta, out, threads, scratch);
-    }
+    gemm::gemm_into(Layout::NN, m, k, n, a, b, beta, out, threads, scratch);
 }
 
 /// `(m, k) @ (n, k)^T + beta·out -> out` — right operand transposed
@@ -51,11 +49,7 @@ pub fn matmul_nt_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
-    if gemm::naive_forced() {
-        accumulate_naive(gemm::naive::matmul_nt(a, m, k, b, n, threads), beta, out);
-    } else {
-        gemm::gemm_into(Layout::NT, m, k, n, a, b, beta, out, threads, scratch);
-    }
+    gemm::gemm_into(Layout::NT, m, k, n, a, b, beta, out, threads, scratch);
 }
 
 /// `(t, m)^T @ (t, n) + beta·out -> out` — left operand transposed
@@ -72,22 +66,7 @@ pub fn matmul_tn_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
-    if gemm::naive_forced() {
-        accumulate_naive(gemm::naive::matmul_tn(a, t, m, b, n, threads), beta, out);
-    } else {
-        gemm::gemm_into(Layout::TN, m, t, n, a, b, beta, out, threads, scratch);
-    }
-}
-
-fn accumulate_naive(prod: Vec<f32>, beta: f32, out: &mut [f32]) {
-    assert_eq!(prod.len(), out.len());
-    if beta == 0.0 {
-        out.copy_from_slice(&prod);
-    } else {
-        for (o, p) in out.iter_mut().zip(prod) {
-            *o += p;
-        }
-    }
+    gemm::gemm_into(Layout::TN, m, t, n, a, b, beta, out, threads, scratch);
 }
 
 /// `(m, k) @ (k, n) -> (m, n)`.

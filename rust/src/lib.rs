@@ -24,18 +24,26 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`util`] | offline substrates: RNG, JSON, CLI parsing, stats, bench + property-test harnesses, thread pool, logging |
+//! | [`util`] | offline substrates: RNG, JSON, CLI parsing, stats, bench + property-test harnesses, logging, and the **persistent parked `WorkerPool`** behind `parallel_chunks_mut`/`parallel_chunks2_mut` — long-lived workers on per-worker condvars, zero spawns and zero allocations per dispatch (`spawn_count` audits it) |
 //! | [`tensor`] | host tensors (f32 / software bf16) used by backends, tests, checkpoints and host-side all-reduce |
 //! | [`config`] | model / training / packing / backend configuration, JSON-backed |
 //! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
 //! | [`packing`] | pack()/unpack(), position indices, the packers for all three batching schemes; over-length sequences split into continuation `Fragment`s; stream partitioning (`PackedBatch::streams`, `StreamingPacker::with_streams`, `PackedBatch::split_rows`) so chunked carries compose with dp row splits |
 //! | [`backend`] | the `Backend` trait + `NativeBackend` (packed conv1d + selective scan fwd/bwd, AdamW) + PJRT backend (feature `pjrt`) |
 //! | [`backend::model`] | the native packed Mamba LM fwd/bwd, incl. the §5 chunked/stateful API: `ChunkState` (one carry lane per stream), `forward_logits_chunked`, `loss_and_grads_chunked_into` (`--chunk-len` on the CLI); per-chunk spines pooled in `ModelWorkspace` so the chunked step is zero-alloc in steady state |
-//! | [`backend::gemm`] | the blocked, register-tiled GEMM micro-kernel (B-panel packing, MC/KC blocking, beta-accumulate) behind `ops::matmul*` |
+//! | [`backend::gemm`] | the blocked, register-tiled GEMM micro-kernel (B-panel packing, MC/KC blocking, beta-accumulate) behind `ops::matmul*`, with **runtime-dispatched tiers**: `PACKMAMBA_GEMM={naive,blocked,avx2}` (unset = best supported; avx2 = the `unsafe` AVX2+FMA 4×8 tile, runtime-gated, degrading to the safe tile off-ISA) |
 //! | [`backend::arena`] | `StepArena` — recycled step buffers + GEMM scratch; steady-state training steps (monolithic and chunked) allocate nothing |
 //! | [`runtime`] | artifact manifest + host values; PJRT client wrapper behind the `pjrt` feature |
 //! | [`coordinator`] | trainer, schemes, data-parallel leader (monolithic shard-per-worker mode and chunk-aware stream-split mode with gradient-sum all-reduce), metrics, checkpoints |
 //! | [`perfmodel`] | analytic A100 model reproducing the paper-scale figure shapes |
+//!
+//! ## Environment variables
+//!
+//! | var | effect |
+//! |---|---|
+//! | `PACKMAMBA_THREADS` | default thread count for `NativeBackend::new()` — resolved **at construction**; thread-sweeping callers pass explicit counts to `with_threads` instead of mutating it mid-process |
+//! | `PACKMAMBA_GEMM` | GEMM dispatch tier: `naive` \| `blocked` \| `avx2`; unset = best tile the CPU supports; an unsupported `avx2` request warns and degrades to `blocked` |
+//! | `PACKMAMBA_BACKEND` | bench-side backend selection (`native`, or `pjrt` with the feature + artifacts) |
 
 pub mod backend;
 pub mod config;

@@ -134,11 +134,13 @@ mod literal {
         }
     }
 
-    // `xla::Bf16` is a zero-sized marker type: `copy_raw_to::<Bf16>` reads
-    // the byte count from `ELEMENT_SIZE_IN_BYTES` and the destination
-    // pointer from the slice, so a slice view over our byte buffer (one
-    // marker per element) is the intended calling convention.
     fn bytemuck_cast_bf16_mut(bytes: &mut [u8]) -> &mut [xla::Bf16] {
+        // SAFETY: `xla::Bf16` is a zero-sized marker type: the reborrow
+        // cannot produce misaligned or out-of-bounds accesses, and
+        // `copy_raw_to::<Bf16>` reads the byte count from
+        // `ELEMENT_SIZE_IN_BYTES` and the destination pointer from the
+        // slice, so a slice view over our byte buffer (one marker per
+        // element) is the intended calling convention.
         unsafe {
             std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut xla::Bf16, bytes.len() / 2)
         }

@@ -1,14 +1,42 @@
-//! Bounded channel + fixed worker pool (offline replacement for the
-//! small slice of `tokio`/`crossbeam` this project needs).
+//! Bounded channel + worker pools (offline replacement for the small
+//! slice of `tokio`/`crossbeam`/`rayon` this project needs).
 //!
 //! `BoundedQueue` is an MPMC queue with capacity-based **backpressure** —
 //! the data-pipeline threads block in `push` when the trainer falls
 //! behind, which is exactly the flow control the coordinator wants.
 //! `ThreadPool` runs closures on N workers and joins them on drop.
+//!
+//! [`WorkerPool`] is the compute-side engine: a **persistent pool of
+//! parked workers** behind the chunk primitives
+//! ([`parallel_chunks_mut`] / [`parallel_chunks2_mut`]) that the native
+//! backend's operators dispatch through.  Workers are spawned once
+//! (grow-on-demand, warmup only), then sleep on **per-worker condvars**
+//! until a dispatch hands them a type-erased job; task claiming is one
+//! atomic cursor, completion is one latch.  A steady-state dispatch
+//! therefore performs **zero heap allocations and zero thread spawns**
+//! — the multi-threaded train step's last remaining per-call overheads
+//! (see `tests/zero_alloc.rs`, which audits both with a counting
+//! allocator and [`spawn_count`]).
 
+use std::cell::{Cell, UnsafeCell};
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
 use std::thread::JoinHandle;
+
+/// OS threads ever spawned through this module (pool workers, scoped
+/// `parallel_map` workers, [`ThreadPool`] members).  The zero-alloc
+/// audit snapshots this around steady-state training steps to prove the
+/// hot path is spawn-free.
+static SPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+pub fn spawn_count() -> usize {
+    SPAWNS.load(Ordering::SeqCst)
+}
+
+fn note_spawn() {
+    SPAWNS.fetch_add(1, Ordering::SeqCst);
+}
 
 /// MPMC bounded queue with blocking push/pop and explicit close.
 pub struct BoundedQueue<T> {
@@ -123,6 +151,7 @@ impl ThreadPool {
         let handles = (0..n)
             .map(|i| {
                 let f = make_worker(i);
+                note_spawn();
                 std::thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(f)
@@ -165,6 +194,7 @@ where
     let results: Mutex<Vec<(usize, U)>> = Mutex::new(Vec::with_capacity(n));
     std::thread::scope(|scope| {
         for _ in 0..n_threads.min(n.max(1)) {
+            note_spawn();
             scope.spawn(|| loop {
                 let job = work.lock().unwrap().pop_front();
                 match job {
@@ -183,15 +213,422 @@ where
     out.into_iter().map(|o| o.expect("missing result")).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Persistent parked worker pool
+// ---------------------------------------------------------------------------
+
+/// Hard ceiling on pool size — a sanity bound far above any honest
+/// `PACKMAMBA_THREADS` request, not a tuning knob.
+const MAX_POOL_WORKERS: usize = 256;
+
+/// Type-erased task entry point: `(ctx, task_index)`.
+type TaskFn = unsafe fn(*const (), usize);
+
+/// The current job, published to workers by value.
+#[derive(Clone, Copy)]
+struct Job {
+    run: TaskFn,
+    ctx: *const (),
+    tasks: usize,
+}
+
+/// Placeholder occupying the job slot before the first dispatch.
+unsafe fn noop_task(_ctx: *const (), _i: usize) {}
+
+#[derive(Clone, Copy, Default)]
+struct WorkerCmd {
+    /// Bumped by the dispatcher to hand this worker the current job.
+    epoch: u64,
+    shutdown: bool,
+}
+
+/// One parked worker's wake-up channel.
+struct WorkerSlot {
+    cmd: Mutex<WorkerCmd>,
+    cv: Condvar,
+}
+
+struct PoolInner {
+    /// The in-flight job.  Written by the dispatcher only while every
+    /// participating worker is parked (the previous dispatch drained the
+    /// `active` latch), read by workers only between their epoch wake-up
+    /// and their latch decrement.
+    job: UnsafeCell<Job>,
+    /// Next unclaimed task index of the current job.
+    cursor: AtomicUsize,
+    /// Workers still running the current job (completion latch).
+    active: Mutex<usize>,
+    done_cv: Condvar,
+    /// Set by a worker whose task panicked; re-raised on the dispatcher.
+    poisoned: AtomicBool,
+}
+
+// SAFETY: `job` is plain-old-data whose accesses are ordered by the
+// per-worker command mutexes (dispatcher writes the slot, then bumps
+// each chosen worker's epoch under that worker's mutex — the hand-off
+// makes the write visible) and by the `active` latch (every worker's
+// last read of the slot happens before its latch decrement, which the
+// dispatcher observes under the latch mutex before the slot is ever
+// rewritten).  The raw `ctx` pointer is only dereferenced while the
+// dispatching call frame is alive — dispatch blocks on the latch.
+unsafe impl Send for PoolInner {}
+// SAFETY: as above — all shared mutable state is mutex/atomic-ordered.
+unsafe impl Sync for PoolInner {}
+
+struct WorkerHandle {
+    slot: Arc<WorkerSlot>,
+    handle: Option<JoinHandle<()>>,
+}
+
+thread_local! {
+    /// True on pool worker threads: a nested dispatch from inside a task
+    /// runs inline instead of deadlocking on its own pool.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|w| w.get())
+}
+
+/// Parked workers worth waking for a job: the caller is always a
+/// participant, each task needs at most one owner, and the pool is
+/// hard-capped.  The single definition keeps [`WorkerPool::run_tasks`]
+/// and [`run_tasks_any`] agreeing on participant counts.
+fn clamp_helpers(threads: usize, tasks: usize) -> usize {
+    threads.saturating_sub(1).min(tasks.saturating_sub(1)).min(MAX_POOL_WORKERS)
+}
+
+/// Ignore mutex poisoning inside the pool: a panicked task is re-raised
+/// on the dispatcher explicitly (`poisoned` flag), and every guarded
+/// invariant is re-established by the next dispatch.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn worker_loop(inner: Arc<PoolInner>, slot: Arc<WorkerSlot>) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut cmd = relock(&slot.cmd);
+            loop {
+                if cmd.shutdown {
+                    return;
+                }
+                if cmd.epoch != seen {
+                    seen = cmd.epoch;
+                    break;
+                }
+                cmd = slot.cv.wait(cmd).unwrap_or_else(|p| p.into_inner());
+            }
+            // SAFETY: the dispatcher wrote the job slot before bumping
+            // this worker's epoch under `cmd`; the mutex hand-off makes
+            // that write visible here, and the slot is not rewritten
+            // until this worker decrements the `active` latch below.
+            unsafe { *inner.job.get() }
+        };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let i = inner.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= job.tasks {
+                break;
+            }
+            // SAFETY: `run`/`ctx` are the type-erased closure the
+            // dispatcher published; index `i` is claimed exactly once
+            // (one shared cursor), and the dispatcher keeps `ctx`'s
+            // referent alive until the latch opens.
+            unsafe { (job.run)(job.ctx, i) };
+        }));
+        if res.is_err() {
+            inner.poisoned.store(true, Ordering::SeqCst);
+        }
+        let mut active = relock(&inner.active);
+        *active -= 1;
+        if *active == 0 {
+            inner.done_cv.notify_one();
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads — the spawn-free engine
+/// behind [`parallel_chunks_mut`] / [`parallel_chunks2_mut`].
+///
+/// Workers are long-lived: spawned on demand up to the requested width
+/// (warmup), then parked on **per-worker condvars** between dispatches.
+/// A dispatch publishes one type-erased job, wakes exactly the workers
+/// it wants (no thundering herd), participates in the work itself, and
+/// blocks on a completion latch — no heap allocation, no thread spawn,
+/// no work stealing.  Determinism is inherited from the task layout:
+/// each task index owns a fixed slice computed in a fixed serial order,
+/// so *which* thread runs it can never change the bits produced.
+///
+/// Concurrent dispatchers (data-parallel worker threads all driving
+/// kernels at once) spread across independent **dispatch lanes** (one
+/// pool each, first free lane wins); nested dispatches from inside a
+/// pool task, and dispatches when every lane is busy, degrade to inline
+/// serial execution — correct, deadlock-free, and exactly the numbers
+/// the parallel path would produce.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    /// Grow-on-demand worker list (append-only until drop).
+    workers: Mutex<Vec<WorkerHandle>>,
+    /// Serializes dispatches; contenders fall back to inline execution.
+    dispatch: Mutex<()>,
+}
+
+impl WorkerPool {
+    pub fn new() -> WorkerPool {
+        WorkerPool {
+            inner: Arc::new(PoolInner {
+                job: UnsafeCell::new(Job {
+                    run: noop_task,
+                    ctx: std::ptr::null(),
+                    tasks: 0,
+                }),
+                cursor: AtomicUsize::new(0),
+                active: Mutex::new(0),
+                done_cv: Condvar::new(),
+                poisoned: AtomicBool::new(false),
+            }),
+            workers: Mutex::new(Vec::new()),
+            dispatch: Mutex::new(()),
+        }
+    }
+
+    /// The primary process-wide pool (lane 0 of the dispatch lanes the
+    /// chunk primitives use).  Never dropped; workers are spawned on
+    /// first use at each width (or eagerly via
+    /// [`WorkerPool::ensure_workers`] at backend init) and then parked
+    /// for the life of the process.
+    pub fn global() -> &'static WorkerPool {
+        &pool_lanes()[0]
+    }
+
+    /// Spawn workers until at least `n` exist (capped at
+    /// `MAX_POOL_WORKERS`).  Warmup-only on the steady-state path; the
+    /// native backend calls this at construction so the first train
+    /// step doesn't pay the spawns.
+    pub fn ensure_workers(&self, n: usize) {
+        drop(self.workers_guard(n));
+    }
+
+    /// Lock the worker list, growing it to at least `n` workers first —
+    /// one lock serves both the (warmup-only) growth check and the
+    /// wake-up iteration of a dispatch.
+    fn workers_guard(&self, n: usize) -> MutexGuard<'_, Vec<WorkerHandle>> {
+        let n = n.min(MAX_POOL_WORKERS);
+        let mut ws = relock(&self.workers);
+        while ws.len() < n {
+            let slot = Arc::new(WorkerSlot {
+                cmd: Mutex::new(WorkerCmd::default()),
+                cv: Condvar::new(),
+            });
+            let inner = Arc::clone(&self.inner);
+            let slot2 = Arc::clone(&slot);
+            note_spawn();
+            let handle = std::thread::Builder::new()
+                .name(format!("pm-pool-{}", ws.len()))
+                .spawn(move || worker_loop(inner, slot2))
+                .expect("spawn pool worker");
+            ws.push(WorkerHandle {
+                slot,
+                handle: Some(handle),
+            });
+        }
+        ws
+    }
+
+    /// Live worker count (for tests and stats).
+    pub fn workers(&self) -> usize {
+        relock(&self.workers).len()
+    }
+
+    /// Run `tasks` indexed tasks with up to `threads` participants (the
+    /// calling thread plus `threads - 1` parked workers); returns after
+    /// every task ran.  Falls back to inline serial execution when only
+    /// one participant is useful, when another dispatch is in flight on
+    /// this pool, or when called from inside a pool worker.
+    ///
+    /// # Safety
+    /// `run(ctx, i)` must be sound to call exactly once for every `i in
+    /// 0..tasks`, from any thread, in any interleaving (the typed
+    /// wrappers guarantee this by handing each index a disjoint slice),
+    /// and `ctx` must remain valid until this call returns.
+    pub unsafe fn run_tasks(&self, threads: usize, tasks: usize, run: TaskFn, ctx: *const ()) {
+        let helpers = clamp_helpers(threads, tasks);
+        if helpers == 0 || in_pool_worker() || !self.try_dispatch(helpers, tasks, run, ctx) {
+            for i in 0..tasks {
+                // run_tasks's own contract covers the serial fallback
+                run(ctx, i);
+            }
+        }
+    }
+
+    /// Attempt to own this pool for one job; returns `false` (and runs
+    /// nothing) when another dispatch is in flight here.
+    ///
+    /// # Safety
+    /// As [`WorkerPool::run_tasks`]; additionally `helpers >= 1`.
+    unsafe fn try_dispatch(
+        &self,
+        helpers: usize,
+        tasks: usize,
+        run: TaskFn,
+        ctx: *const (),
+    ) -> bool {
+        let _guard = match self.dispatch.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => return false,
+        };
+        {
+            let ws = self.workers_guard(helpers);
+            let helpers = helpers.min(ws.len());
+            // Publish the job: every participant is parked (the previous
+            // dispatch drained the latch before releasing `dispatch`),
+            // so the slot is exclusively ours.
+            // SAFETY: see the `PoolInner` field/impl comments — the
+            // epoch bump below orders this write before any worker read.
+            unsafe { *self.inner.job.get() = Job { run, ctx, tasks } };
+            self.inner.cursor.store(0, Ordering::Relaxed);
+            *relock(&self.inner.active) = helpers;
+            for w in ws.iter().take(helpers) {
+                let mut cmd = relock(&w.slot.cmd);
+                cmd.epoch += 1;
+                w.slot.cv.notify_one();
+            }
+        }
+        // The dispatcher is participant 0.  A panicking task must not
+        // unwind past the latch wait — workers may still be running
+        // tasks that read through `ctx`.
+        let caller_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let i = self.inner.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            // run_tasks's own contract covers the dispatcher's share
+            run(ctx, i);
+        }));
+        let mut active = relock(&self.inner.active);
+        while *active > 0 {
+            active = self.inner.done_cv.wait(active).unwrap_or_else(|p| p.into_inner());
+        }
+        drop(active);
+        // Always consume the worker-panic flag BEFORE re-raising the
+        // dispatcher's own panic — otherwise a dual panic (caller and
+        // worker both hit a failing task) would leak the flag into the
+        // next, unrelated dispatch on this (process-wide) pool.
+        let worker_panicked = self.inner.poisoned.swap(false, Ordering::SeqCst);
+        if let Err(p) = caller_res {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("worker pool task panicked");
+        }
+        true
+    }
+}
+
+/// Independent dispatch lanes: concurrent dispatchers (data-parallel
+/// worker threads all driving kernels at once) each claim their own
+/// pool instead of serializing on a single job slot — only when every
+/// lane is busy does a dispatcher run inline.  Lane 0 is
+/// [`WorkerPool::global`], the one the native backend pre-warms; the
+/// other lanes spawn their workers on first contention (warmup) and
+/// park thereafter.
+const POOL_LANES: usize = 4;
+
+fn pool_lanes() -> &'static [WorkerPool; POOL_LANES] {
+    static LANES: OnceLock<[WorkerPool; POOL_LANES]> = OnceLock::new();
+    LANES.get_or_init(|| {
+        [
+            WorkerPool::new(),
+            WorkerPool::new(),
+            WorkerPool::new(),
+            WorkerPool::new(),
+        ]
+    })
+}
+
+/// Lane-aware dispatch behind the chunk primitives: first free lane
+/// wins; all busy (or nested inside a pool worker) ⇒ inline serial.
+/// Whichever path runs, the task → data mapping is fixed, so the bits
+/// produced are identical.
+///
+/// # Safety
+/// As [`WorkerPool::run_tasks`].
+unsafe fn run_tasks_any(threads: usize, tasks: usize, run: TaskFn, ctx: *const ()) {
+    let helpers = clamp_helpers(threads, tasks);
+    if helpers > 0 && !in_pool_worker() {
+        for lane in pool_lanes() {
+            if lane.try_dispatch(helpers, tasks, run, ctx) {
+                return;
+            }
+        }
+    }
+    for i in 0..tasks {
+        // run_tasks_any's own contract covers the serial fallback
+        run(ctx, i);
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let mut ws = relock(&self.workers);
+        for w in ws.iter() {
+            let mut cmd = relock(&w.slot.cmd);
+            cmd.shutdown = true;
+            w.slot.cv.notify_one();
+        }
+        for w in ws.iter_mut() {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool-backed chunk primitives (the operators' parallel surface)
+// ---------------------------------------------------------------------------
+
+struct ChunkCtx<'a, T, F> {
+    base: *mut T,
+    len: usize,
+    chunk: usize,
+    f: &'a F,
+}
+
+/// Type-erased trampoline for [`parallel_chunks_mut`] tasks.
+///
+/// # Safety
+/// `ctx` must point at a live `ChunkCtx<T, F>` whose `base/len` buffer
+/// outlives the call, and each `i` must be claimed at most once (the
+/// slices of distinct `i` are disjoint by construction).
+unsafe fn run_chunk_task<T, F: Fn(usize, &mut [T]) + Sync>(ctx: *const (), i: usize) {
+    let ctx = &*(ctx as *const ChunkCtx<'_, T, F>);
+    let start = i * ctx.chunk;
+    let end = (start + ctx.chunk).min(ctx.len);
+    let s = std::slice::from_raw_parts_mut(ctx.base.add(start), end - start);
+    (ctx.f)(i, s);
+}
+
 /// Split `out` into contiguous chunks of `chunk` elements and run
-/// `f(chunk_index, chunk_slice)` over them on `n_threads` scoped workers.
+/// `f(chunk_index, chunk_slice)` over them on up to `n_threads`
+/// participants of the persistent [`WorkerPool`] (the calling thread is
+/// one of them) — **no thread spawns, no heap allocation** per call.
 ///
 /// This is the write-side companion of [`parallel_map`]: the native
 /// backend's operators use it to fill disjoint slices of one output
 /// buffer (rows of a GEMM, (row, channel) lanes of the packed conv and
-/// scan) in place, with no unsafe aliasing and deterministic results —
-/// every chunk is computed with a fixed intra-chunk order regardless of
-/// scheduling, so thread count never changes the bits produced.
+/// scan) in place, with deterministic results — every chunk is computed
+/// with a fixed intra-chunk order regardless of scheduling, so thread
+/// count never changes the bits produced.
 pub fn parallel_chunks_mut<T, F>(out: &mut [T], chunk: usize, n_threads: usize, f: F)
 where
     T: Send,
@@ -205,18 +642,53 @@ where
         return;
     }
     let tasks = out.len().div_ceil(chunk);
-    let work = Mutex::new(out.chunks_mut(chunk).enumerate());
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads.min(tasks) {
-            scope.spawn(|| loop {
-                let job = work.lock().unwrap().next();
-                match job {
-                    Some((i, c)) => f(i, c),
-                    None => break,
-                }
-            });
-        }
-    });
+    let ctx = ChunkCtx {
+        base: out.as_mut_ptr(),
+        len: out.len(),
+        chunk,
+        f: &f,
+    };
+    // SAFETY: task `i` touches only the disjoint slice
+    // `[i*chunk, min((i+1)*chunk, len))` of `out`; `run_tasks_any`
+    // returns only after every task ran, so the borrows of `out` and
+    // `f` in `ctx` outlive every access.  `T: Send` + `F: Sync` make
+    // the cross-thread hand-off sound.
+    unsafe {
+        run_tasks_any(
+            n_threads.min(tasks),
+            tasks,
+            run_chunk_task::<T, F>,
+            &ctx as *const ChunkCtx<'_, T, F> as *const (),
+        );
+    }
+}
+
+struct Chunk2Ctx<'a, T, U, F> {
+    xbase: *mut T,
+    xlen: usize,
+    cx: usize,
+    ybase: *mut U,
+    ylen: usize,
+    cy: usize,
+    f: &'a F,
+}
+
+/// Type-erased trampoline for [`parallel_chunks2_mut`] tasks.
+///
+/// # Safety
+/// As [`run_chunk_task`], for both buffers of a live `Chunk2Ctx`.
+unsafe fn run_chunk2_task<T, U, F: Fn(usize, &mut [T], &mut [U]) + Sync>(
+    ctx: *const (),
+    i: usize,
+) {
+    let ctx = &*(ctx as *const Chunk2Ctx<'_, T, U, F>);
+    let xs = i * ctx.cx;
+    let xe = (xs + ctx.cx).min(ctx.xlen);
+    let ys = i * ctx.cy;
+    let ye = (ys + ctx.cy).min(ctx.ylen);
+    let a = std::slice::from_raw_parts_mut(ctx.xbase.add(xs), xe - xs);
+    let b = std::slice::from_raw_parts_mut(ctx.ybase.add(ys), ye - ys);
+    (ctx.f)(i, a, b);
 }
 
 /// Like [`parallel_chunks_mut`], but hands each task a *pair* of chunks,
@@ -228,8 +700,9 @@ where
 /// fill its slice of a shared output *and* use (or fill) a disjoint slice
 /// of a second buffer — per-panel packing scratch in the blocked GEMM,
 /// per-chunk f64 loss partials in the cross-entropy head — without any
-/// per-task heap allocation.  The same fixed intra-chunk order keeps
-/// results independent of thread count.
+/// per-task heap allocation, and (via the pool) without any per-call
+/// thread spawn.  The same fixed intra-chunk order keeps results
+/// independent of thread count.
 pub fn parallel_chunks2_mut<T, U, F>(
     x: &mut [T],
     cx: usize,
@@ -255,18 +728,27 @@ pub fn parallel_chunks2_mut<T, U, F>(
         return;
     }
     let tasks = x.len().div_ceil(cx);
-    let work = Mutex::new(x.chunks_mut(cx).zip(y.chunks_mut(cy)).enumerate());
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads.min(tasks) {
-            scope.spawn(|| loop {
-                let job = work.lock().unwrap().next();
-                match job {
-                    Some((i, (a, b))) => f(i, a, b),
-                    None => break,
-                }
-            });
-        }
-    });
+    let ctx = Chunk2Ctx {
+        xbase: x.as_mut_ptr(),
+        xlen: x.len(),
+        cx,
+        ybase: y.as_mut_ptr(),
+        ylen: y.len(),
+        cy,
+        f: &f,
+    };
+    // SAFETY: task `i` touches only the disjoint chunk `i` of each
+    // buffer (same chunk count asserted above); `run_tasks_any` returns
+    // only after every task ran, so the borrows in `ctx` outlive every
+    // access.  `T, U: Send` + `F: Sync` make the hand-off sound.
+    unsafe {
+        run_tasks_any(
+            n_threads.min(tasks),
+            tasks,
+            run_chunk2_task::<T, U, F>,
+            &ctx as *const Chunk2Ctx<'_, T, U, F> as *const (),
+        );
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +883,124 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map((0..100).collect::<Vec<_>>(), 7, |_, x| x * 2);
         assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_pool_runs_all_tasks_and_is_reusable() {
+        let pool = WorkerPool::new();
+        let hits: Vec<AtomicUsize> = (0..50).map(|_| AtomicUsize::new(0)).collect();
+        struct Ctx<'a> {
+            hits: &'a [AtomicUsize],
+        }
+        /// # Safety
+        /// `ctx` must point at a live `Ctx` with at least `i + 1` slots.
+        unsafe fn bump(ctx: *const (), i: usize) {
+            let c = &*(ctx as *const Ctx<'_>);
+            c.hits[i].fetch_add(1, Ordering::SeqCst);
+        }
+        let ctx = Ctx { hits: &hits };
+        for _ in 0..4 {
+            // SAFETY: each task touches only its own atomic; `ctx`
+            // outlives the blocking call.
+            unsafe { pool.run_tasks(4, hits.len(), bump, &ctx as *const Ctx<'_> as *const ()) };
+        }
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 4));
+        // grow-on-demand stopped at threads - 1 workers, and redispatch
+        // reused them instead of spawning more
+        assert_eq!(pool.workers(), 3);
+    }
+
+    #[test]
+    fn pool_chunks_cover_everything_and_match_serial_bits() {
+        // through the public primitive (global pool): parallel must be
+        // bit-identical to serial, whatever the thread count
+        let run = |threads: usize| {
+            let mut out = vec![0.0f32; 1023];
+            parallel_chunks_mut(&mut out, 37, threads, |i, c| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = (i * 37 + j) as f32 * 1.5;
+                }
+            });
+            out
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(8));
+        assert_eq!(serial, (0..1023).map(|i| i as f32 * 1.5).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_without_deadlock() {
+        // a task that itself calls a parallel primitive must not
+        // deadlock: pool workers degrade to inline execution, the
+        // dispatcher thread's own nested call lands on a free lane (or
+        // inline once every lane is held)
+        let mut out = vec![0u32; 64];
+        parallel_chunks_mut(&mut out, 4, 4, |i, c| {
+            let mut inner = vec![0u32; 32];
+            parallel_chunks_mut(&mut inner, 4, 4, |j, cc| {
+                cc.iter_mut().for_each(|v| *v = j as u32)
+            });
+            let s: u32 = inner.iter().sum(); // 4·(0+1+..+7) = 112
+            c.iter_mut().for_each(|v| *v = s + i as u32);
+        });
+        for (i, c) in out.chunks(4).enumerate() {
+            assert!(c.iter().all(|&v| v == 112 + i as u32), "chunk {i}: {c:?}");
+        }
+    }
+
+    #[test]
+    fn concurrent_dispatches_from_many_threads_stay_correct() {
+        // data-parallel shape: several threads hammer the global pool at
+        // once; losers of the dispatch race run inline — every call must
+        // still produce exactly its own expected buffer
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        let mut out = vec![0usize; 301];
+                        parallel_chunks_mut(&mut out, 10, 4, |i, c| {
+                            for (j, v) in c.iter_mut().enumerate() {
+                                *v = t * 1000 + i * 10 + j;
+                            }
+                        });
+                        for (k, &v) in out.iter().enumerate() {
+                            assert_eq!(v, t * 1000 + k);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dropping_a_pool_joins_its_workers() {
+        let pool = WorkerPool::new();
+        pool.ensure_workers(2);
+        assert_eq!(pool.workers(), 2);
+        drop(pool); // must not hang (workers see shutdown and exit)
+    }
+
+    #[test]
+    fn pool_task_panic_propagates_to_dispatcher() {
+        let res = std::panic::catch_unwind(|| {
+            let mut out = vec![0u32; 100];
+            parallel_chunks_mut(&mut out, 5, 4, |i, _c| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(res.is_err(), "task panic must not be swallowed");
+        // and the global pool stays usable afterwards
+        let mut out = vec![0u32; 100];
+        parallel_chunks_mut(&mut out, 5, 4, |i, c| c.iter_mut().for_each(|v| *v = i as u32));
+        for (i, c) in out.chunks(5).enumerate() {
+            assert!(c.iter().all(|&v| v == i as u32));
+        }
     }
 
     #[test]

@@ -1,12 +1,15 @@
-//! Property tests for the blocked GEMM micro-kernel: the blocked path
-//! must agree with the naive scalar reference (≤ 1e-5 relative) over an
-//! exhaustive sweep of odd shapes straddling every tile edge — including
-//! the degenerate m=1 / k=1 / n=1 cases — for all three layout variants,
-//! at 1 and 8 threads, and regardless of input sparsity (the naive
-//! reference skips zero multiplicands, the blocked kernel is branch-free
-//! dense; both must land on the same numbers).
+//! Property tests for the blocked GEMM micro-kernel: the tiled paths
+//! (safe blocked tile AND, where the CPU supports it, the AVX2+FMA
+//! tile) must agree with the naive scalar reference (≤ 1e-5 relative)
+//! over an exhaustive sweep of odd shapes straddling every tile edge —
+//! including the degenerate m=1 / k=1 / n=1 cases — for all three
+//! layout variants, at 1 and 8 threads, and regardless of input
+//! sparsity (the naive reference skips zero multiplicands, the tiled
+//! kernels are branch-free dense; all must land on the same numbers).
+//! The dispatcher's fallback rules (`PACKMAMBA_GEMM=avx2` without CPU
+//! support → warn + blocked, never a panic) are pinned here too.
 
-use packmamba::backend::gemm::{self, GemmScratch, Layout};
+use packmamba::backend::gemm::{self, GemmMode, GemmScratch, Layout};
 use packmamba::backend::ops;
 use packmamba::util::rng::Pcg64;
 
@@ -38,6 +41,18 @@ fn assert_close(got: &[f32], want: &[f32], tag: &str) {
 }
 
 fn check_all_layouts(m: usize, k: usize, n: usize, threads: usize, sparse: bool, rng: &mut Pcg64) {
+    check_all_layouts_tier(GemmMode::Blocked, m, k, n, threads, sparse, rng);
+}
+
+fn check_all_layouts_tier(
+    tier: GemmMode,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    sparse: bool,
+    rng: &mut Pcg64,
+) {
     let mut scratch = GemmScratch::new();
     let mut a = randv(rng, m * k);
     let mut b = randv(rng, k * n);
@@ -48,18 +63,18 @@ fn check_all_layouts(m: usize, k: usize, n: usize, threads: usize, sparse: bool,
             sparsify(v, rng, 0.6);
         }
     }
-    let tag = |l: &str| format!("{l} ({m},{k},{n}) x{threads} sparse={sparse}");
+    let tag = |l: &str| format!("{l} [{}] ({m},{k},{n}) x{threads} sparse={sparse}", tier.name());
 
     let mut c = vec![0.0f32; m * n];
-    gemm::gemm_into(Layout::NN, m, k, n, &a, &b, 0.0, &mut c, threads, &mut scratch);
+    gemm::gemm_into_tier(tier, Layout::NN, m, k, n, &a, &b, 0.0, &mut c, threads, &mut scratch);
     assert_close(&c, &gemm::naive::matmul(&a, m, k, &b, n, threads), &tag("nn"));
 
     let mut c = vec![0.0f32; m * n];
-    gemm::gemm_into(Layout::NT, m, k, n, &a, &bt, 0.0, &mut c, threads, &mut scratch);
+    gemm::gemm_into_tier(tier, Layout::NT, m, k, n, &a, &bt, 0.0, &mut c, threads, &mut scratch);
     assert_close(&c, &gemm::naive::matmul_nt(&a, m, k, &bt, n, threads), &tag("nt"));
 
     let mut c = vec![0.0f32; m * n];
-    gemm::gemm_into(Layout::TN, m, k, n, &at, &b, 0.0, &mut c, threads, &mut scratch);
+    gemm::gemm_into_tier(tier, Layout::TN, m, k, n, &at, &b, 0.0, &mut c, threads, &mut scratch);
     assert_close(&c, &gemm::naive::matmul_tn(&at, k, m, &b, n, threads), &tag("tn"));
 }
 
@@ -125,6 +140,57 @@ fn ops_adapters_route_through_the_same_kernel() {
         &gemm::naive::matmul_tn(&at, k, m, &b, n, 1),
         "ops tn",
     );
+}
+
+#[test]
+fn avx2_equals_naive_over_odd_shapes() {
+    // runtime-gated: on machines with the features, the unsafe tile gets
+    // the full odd-shape grid at 1 and 8 threads; elsewhere the tier
+    // degrades to the safe tile, so the sweep still runs (and still must
+    // match) — there is no configuration in which this test is vacuous.
+    if !gemm::avx2_available() {
+        eprintln!("note: CPU lacks avx2+fma — sweep exercises the fallback tile");
+    }
+    let mut rng = Pcg64::new(0xA52, 0);
+    for &m in &SIZES {
+        for &k in &SIZES {
+            for &n in &SIZES {
+                check_all_layouts_tier(GemmMode::Avx2, m, k, n, 1, false, &mut rng);
+            }
+        }
+    }
+    // threaded + sparse spot checks on the larger edges
+    for &(m, k, n) in &[(129, 300, 17), (63, 129, 63), (1, 257, 40)] {
+        check_all_layouts_tier(GemmMode::Avx2, m, k, n, 8, false, &mut rng);
+        check_all_layouts_tier(GemmMode::Avx2, m, k, n, 8, true, &mut rng);
+    }
+}
+
+#[test]
+fn avx2_request_without_cpu_support_falls_back_cleanly() {
+    // the satellite guarantee: PACKMAMBA_GEMM=avx2 on a CPU without the
+    // features resolves to the blocked tier (with a warning) — no panic,
+    // no illegal instruction.  resolve_mode is the pure core of the env
+    // reader, so the "no support" branch is testable on any machine.
+    assert_eq!(gemm::resolve_mode(Some("avx2"), false), GemmMode::Blocked);
+    assert_eq!(gemm::resolve_mode(Some("avx2"), true), GemmMode::Avx2);
+    assert_eq!(gemm::resolve_mode(Some("naive"), false), GemmMode::Naive);
+    assert_eq!(gemm::resolve_mode(Some("blocked"), true), GemmMode::Blocked);
+    assert_eq!(gemm::resolve_mode(None, false), GemmMode::Blocked);
+    assert_eq!(gemm::resolve_mode(None, true), GemmMode::Avx2);
+    assert_eq!(gemm::resolve_mode(Some("junk"), false), GemmMode::Blocked);
+
+    // and whatever this machine is, the detected tier must be runnable:
+    // a full gemm through the detected mode agrees with the reference
+    let mode = gemm::detected_mode();
+    let mut rng = Pcg64::new(0xFA11, 0);
+    let (m, k, n) = (33, 129, 17);
+    let a = randv(&mut rng, m * k);
+    let b = randv(&mut rng, k * n);
+    let mut c = vec![0.0f32; m * n];
+    let mut scratch = GemmScratch::new();
+    gemm::gemm_into_tier(mode, Layout::NN, m, k, n, &a, &b, 0.0, &mut c, 2, &mut scratch);
+    assert_close(&c, &gemm::naive::matmul(&a, m, k, &b, n, 1), "detected-tier");
 }
 
 #[test]

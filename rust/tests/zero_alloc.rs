@@ -1,7 +1,10 @@
 //! Steady-state allocation audit: after the warmup step populates the
 //! `StepArena`, a fused native `train_step` must perform **zero** heap
-//! allocations *and* zero deallocations (single-threaded — with worker
-//! threads the scoped spawns themselves inevitably allocate).
+//! allocations *and* zero deallocations — single-threaded **and**
+//! multi-threaded: the persistent parked `WorkerPool` replaced the
+//! per-call scoped spawns (the multi-threaded path's last remaining
+//! allocations), so at threads = 4 the audited steps must additionally
+//! spawn **zero** OS threads (`threadpool::spawn_count`).
 //!
 //! A counting global allocator wraps `System`; counting is switched on
 //! only around the steady-state steps.  This file holds exactly one test
@@ -13,6 +16,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use packmamba::backend::{Backend, NativeBackend};
 use packmamba::config::ModelConfig;
 use packmamba::packing::{PackedBatch, PackedRow, Sequence};
+use packmamba::util::threadpool::spawn_count;
 
 struct CountingAlloc;
 
@@ -20,6 +24,8 @@ static COUNTING: AtomicBool = AtomicBool::new(false);
 static ALLOCS: AtomicUsize = AtomicUsize::new(0);
 static DEALLOCS: AtomicUsize = AtomicUsize::new(0);
 
+// SAFETY: defers every operation to `System` unchanged; the counters are
+// plain atomics with no effect on layout or aliasing.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
@@ -63,6 +69,42 @@ fn micro() -> ModelConfig {
         d_conv: 4,
         expand: 2,
     }
+}
+
+/// Wide enough that the GEMMs and the scan cross the operators' serial
+/// thresholds (≥ 2^20 fused multiply-adds), so the threads = 4 audit
+/// genuinely exercises pool dispatch rather than the serial fast path.
+fn wide() -> ModelConfig {
+    ModelConfig {
+        name: "zero-alloc-wide".to_string(),
+        vocab_size: 256,
+        d_model: 64,
+        n_layers: 2,
+        d_state: 16,
+        d_conv: 4,
+        expand: 2,
+    }
+}
+
+/// Two full 256-slot rows (row = one stream when `streams = 2`).
+fn wide_batch(cfg: &ModelConfig) -> PackedBatch {
+    let seq = |id: u64, n: usize| Sequence {
+        tokens: (0..n)
+            .map(|k| 1 + ((id as usize * 37 + k * 11) % (cfg.vocab_size - 1)) as i32)
+            .collect(),
+        id,
+    };
+    PackedBatch::from_rows(
+        &[
+            PackedRow {
+                sequences: vec![seq(0, 100), seq(1, 90), seq(2, 66)],
+            },
+            PackedRow {
+                sequences: vec![seq(3, 150), seq(4, 106)],
+            },
+        ],
+        256,
+    )
 }
 
 fn batch(cfg: &ModelConfig, pack_len: usize) -> PackedBatch {
@@ -182,4 +224,89 @@ fn steady_state_train_step_is_allocation_free() {
         losses.last().unwrap() < &(losses[0] + 0.5),
         "loss diverged across audited steps: {losses:?}"
     );
+
+    // ==== multi-threaded steady state (threads = 4) ====
+    // The persistent worker pool removed the scoped spawns, so the
+    // multi-threaded monolithic AND chunked steps must now pass the same
+    // audit — zero allocations, zero deallocations, and zero thread
+    // spawns.  (The threads = 1 audits above stay as the regression
+    // guard for the serial path.)
+    let wcfg = wide();
+    let wb = wide_batch(&wcfg);
+    let be_mt = NativeBackend::with_threads(4); // grows the pool (warmup)
+    let mut state_mt = be_mt.init_state(&wcfg, 13).unwrap();
+    let mut losses_mt: Vec<f32> = Vec::with_capacity(32);
+    losses_mt.push(be_mt.train_step(&wcfg, &mut state_mt, &wb).unwrap());
+    losses_mt.push(be_mt.train_step(&wcfg, &mut state_mt, &wb).unwrap());
+
+    let spawns_before = spawn_count();
+    ALLOCS.store(0, Ordering::SeqCst);
+    DEALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        losses_mt.push(be_mt.train_step(&wcfg, &mut state_mt, &wb).unwrap());
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    let deallocs = DEALLOCS.load(Ordering::SeqCst);
+    assert_eq!(allocs, 0, "multi-threaded step allocated {allocs} times");
+    assert_eq!(
+        deallocs, 0,
+        "multi-threaded step deallocated {deallocs} times"
+    );
+    assert_eq!(
+        spawn_count(),
+        spawns_before,
+        "multi-threaded steady-state step spawned threads"
+    );
+
+    // chunked multi-threaded: streams = 2 lanes, chunk_len = 64
+    let be_mtc = NativeBackend::with_threads(4);
+    let mut state_mtc = be_mtc.init_state(&wcfg, 17).unwrap();
+    let wbc = {
+        let mut b = wide_batch(&wcfg);
+        b.streams = 2;
+        b
+    };
+    losses_mt.push(be_mtc.train_step_chunked(&wcfg, &mut state_mtc, &wbc, 64).unwrap());
+    losses_mt.push(be_mtc.train_step_chunked(&wcfg, &mut state_mtc, &wbc, 64).unwrap());
+
+    let spawns_before = spawn_count();
+    ALLOCS.store(0, Ordering::SeqCst);
+    DEALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        losses_mt.push(be_mtc.train_step_chunked(&wcfg, &mut state_mtc, &wbc, 64).unwrap());
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    let deallocs = DEALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        allocs, 0,
+        "multi-threaded chunked step allocated {allocs} times"
+    );
+    assert_eq!(
+        deallocs, 0,
+        "multi-threaded chunked step deallocated {deallocs} times"
+    );
+    assert_eq!(
+        spawn_count(),
+        spawns_before,
+        "multi-threaded steady-state chunked step spawned threads"
+    );
+
+    // multi-threaded numerics must be the single-threaded numerics, bit
+    // for bit — the pool never changes the chunk → computation mapping
+    let be_st = NativeBackend::with_threads(1);
+    let mut state_st = be_st.init_state(&wcfg, 13).unwrap();
+    let mut losses_st = Vec::with_capacity(8);
+    for _ in 0..5 {
+        losses_st.push(be_st.train_step(&wcfg, &mut state_st, &wb).unwrap());
+    }
+    assert_eq!(
+        &losses_mt[..5],
+        &losses_st[..],
+        "threads=4 diverged from threads=1 under the pool"
+    );
+    assert!(losses_mt.iter().all(|l| l.is_finite()));
 }
