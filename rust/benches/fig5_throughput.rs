@@ -13,29 +13,40 @@
 mod common;
 
 use packmamba::config::{ModelConfig, Scheme, TrainConfig};
-use packmamba::coordinator::Trainer;
+use packmamba::coordinator::metrics::STABLE_WINDOW;
+use packmamba::coordinator::{TelemetrySnapshot, Trainer};
 use packmamba::data::LengthTrace;
 use packmamba::perfmodel::{fig5_table, GpuSpec};
 use packmamba::util::json::Json;
+use packmamba::util::trace;
 
-fn measured(scheme: Scheme, steps: usize) -> (f64, f64, f64) {
+/// One scheme's measured run: throughput, padding, step time, plus the
+/// operator-level telemetry snapshot of that run (tracing is reset per
+/// scheme so each snapshot covers exactly its own steps).
+fn measured(scheme: Scheme, steps: usize) -> (f64, f64, f64, TelemetrySnapshot) {
     let mut cfg = TrainConfig::defaults(ModelConfig::tiny());
     cfg.scheme = scheme;
     cfg.steps = steps;
     common::apply_backend_env(&mut cfg);
+    trace::reset();
     let mut trainer = Trainer::from_config(cfg).expect("trainer");
     trainer.train().expect("train");
+    let snap = TelemetrySnapshot::capture();
     let m = &trainer.metrics;
     (
-        m.stable_throughput(2, 100).unwrap_or(0.0),
+        m.stable_throughput(2, STABLE_WINDOW).unwrap_or(0.0),
         m.padding_rate(),
         m.mean_step_secs(),
+        snap,
     )
 }
 
 fn main() {
     // PACKMAMBA_GEMM=naive measures the PR-1 scalar-GEMM baseline
     let gemm_mode = common::apply_gemm_env();
+    // span-layer tracing stays on for the whole measured section: the
+    // per-op breakdown lands in the result JSON next to the throughput
+    trace::set_enabled(true);
     println!("=== Fig 5 (measured, tiny config, {gemm_mode} gemm) ===");
     println!(
         "{:<10} {:>14} {:>12} {:>12}",
@@ -45,7 +56,7 @@ fn main() {
     let mut tps = std::collections::BTreeMap::new();
     for scheme in [Scheme::SingleSequence, Scheme::Padding, Scheme::Pack] {
         let steps = if scheme == Scheme::SingleSequence { 24 } else { 12 };
-        let (thr, pad, step_s) = measured(scheme, steps);
+        let (thr, pad, step_s, snap) = measured(scheme, steps);
         println!(
             "{:<10} {:>14.0} {:>11.1}% {:>12.3}",
             scheme.name(),
@@ -59,8 +70,10 @@ fn main() {
             ("tokens_per_sec", Json::from(thr)),
             ("padding_rate", Json::from(pad)),
             ("secs_per_step", Json::from(step_s)),
+            ("telemetry", snap.to_json()),
         ]));
     }
+    trace::set_enabled(false);
     let speedup = tps["pack"] / tps["single"].max(1e-9);
     let vs_pad = tps["pack"] / tps["padding"].max(1e-9);
     println!("measured pack speedup vs single: {speedup:.2}x, vs padding: {vs_pad:.2}x");

@@ -5,6 +5,12 @@
 //! sequence per row, 33.7% useful) vs "pack" geometry (1×2048 dense,
 //! ~95% useful); speedups are per *useful token*.  No artifacts needed.
 //!
+//! Timings come from the span layer (`util::trace`): every cell runs
+//! under tracing and reads the operator's mean duration back from
+//! [`trace::aggregate`] — the same instrumentation the trainer's
+//! telemetry uses, so the figure and the runtime breakdown can never
+//! drift apart.
+//!
 //! MODELED — the calibrated A100 breakdown at the paper's true scale
 //! (Mamba-1.4B, seqlen 4096), where the 3.91× fwd-bwd figure lives.
 
@@ -14,9 +20,10 @@ use packmamba::backend::kernels::{self, Dims};
 use packmamba::backend::ops;
 use packmamba::data::LengthTrace;
 use packmamba::perfmodel::{fig6_breakdown, Dtype, GpuSpec};
-use packmamba::util::bench::{BenchConfig, Suite};
+use packmamba::util::bench::fmt_duration;
 use packmamba::util::json::Json;
 use packmamba::util::rng::Pcg64;
+use packmamba::util::trace::{self, Op};
 
 /// One op-benchmark geometry: (rows, len, useful fraction, positions).
 struct Geometry {
@@ -48,19 +55,36 @@ fn geometries() -> Vec<Geometry> {
     ]
 }
 
+/// Mean seconds per call of `op`, measured from the span layer: one
+/// warm-up call (allocators, pool growth, trace thread registration),
+/// then `iters` traced calls read back via [`trace::aggregate`].
+fn span_mean_secs(op: Op, iters: usize, mut f: impl FnMut()) -> (f64, u64) {
+    f();
+    trace::reset();
+    for _ in 0..iters {
+        f();
+    }
+    let agg = trace::aggregate()[op as usize];
+    assert!(
+        agg.calls >= iters as u64,
+        "operator {} recorded {} spans, expected at least {iters}",
+        op.name(),
+        agg.calls
+    );
+    (agg.total_ns as f64 * 1e-9 / agg.calls as f64, agg.calls)
+}
+
 fn main() {
     let gemm_mode = common::apply_gemm_env();
+    trace::set_enabled(true);
     let mut rng = Pcg64::new(3, 0);
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let d = 256usize; // 1.4B-scaled channel count for CPU measurement
     let n = 16usize;
     let wlen = 4usize;
+    let iters = 10usize;
 
-    let mut cfg = BenchConfig::default();
-    cfg.samples = 10;
-    cfg.budget = std::time::Duration::from_secs(30);
-    let mut suite = Suite::new("Fig 6 measured (native packed ops, 1.4B-scaled)", cfg);
-
+    println!("=== Fig 6 measured (native packed ops, 1.4B-scaled, span-sourced) ===");
     let ops_list = ["op_gemm", "op_conv1d", "op_ssm", "op_norm"];
     let mut rows_json = Vec::new();
     for op in ops_list {
@@ -75,20 +99,24 @@ fn main() {
             let t = g.rows * g.len;
             let tokens = t as f64;
             let name = format!("{op}_{}", g.scheme);
-            let med = match op {
+            let (secs, calls) = match op {
                 "op_gemm" => {
-                    // the block's in_proj GEMM: (T, d) @ (d, 2d)
+                    // the block's in_proj GEMM: (T, d) @ (d, 2d); the raw
+                    // `ops::matmul` has no span of its own (projections
+                    // are labeled at the model layer), so label it here
                     let a = common::small_random(&mut rng, t * d, 0.05);
                     let b = common::small_random(&mut rng, d * 2 * d, 0.05);
-                    suite.bench(&name, || {
-                        std::hint::black_box(ops::matmul(&a, t, d, &b, 2 * d, threads));
+                    span_mean_secs(Op::GemmInProj, iters, || {
+                        trace::with(Op::GemmInProj, || {
+                            std::hint::black_box(ops::matmul(&a, t, d, &b, 2 * d, threads));
+                        });
                     })
                 }
                 "op_conv1d" => {
                     let x = common::small_random(&mut rng, t * d, 0.05);
                     let w = common::small_random(&mut rng, wlen * d, 0.05);
                     let bias = common::small_random(&mut rng, d, 0.05);
-                    suite.bench(&name, || {
+                    span_mean_secs(Op::Conv1dFwd, iters, || {
                         std::hint::black_box(kernels::conv1d_packed_fwd(
                             &x, dims, &w, wlen, &bias, &g.pos, threads,
                         ));
@@ -107,7 +135,7 @@ fn main() {
                     let bm = common::small_random(&mut rng, t * n, 0.05);
                     let cm = common::small_random(&mut rng, t * n, 0.05);
                     let dv = common::small_random(&mut rng, d, 0.05);
-                    suite.bench(&name, || {
+                    span_mean_secs(Op::ScanFwd, iters, || {
                         std::hint::black_box(kernels::ssm_packed_fwd_nocache(
                             &x, &dt, &a, &bm, &cm, &dv, &g.pos, dims, threads,
                         ));
@@ -116,13 +144,23 @@ fn main() {
                 "op_norm" => {
                     let x = common::small_random(&mut rng, t * d, 0.05);
                     let w = common::small_random(&mut rng, d, 0.05);
-                    suite.bench(&name, || {
+                    span_mean_secs(Op::RmsNormFwd, iters, || {
                         std::hint::black_box(ops::rms_norm_fwd(&x, d, &w, 1e-5));
                     })
                 }
                 _ => unreachable!(),
             };
-            per_scheme.insert(g.scheme, med / (tokens * g.useful));
+            println!(
+                "{name:<24} {:>12}/call  (n={calls}, span {})",
+                fmt_duration(secs),
+                match op {
+                    "op_gemm" => Op::GemmInProj.name(),
+                    "op_conv1d" => Op::Conv1dFwd.name(),
+                    "op_ssm" => Op::ScanFwd.name(),
+                    _ => Op::RmsNormFwd.name(),
+                }
+            );
+            per_scheme.insert(g.scheme, secs / (tokens * g.useful));
         }
         let speedup = per_scheme["padding"] / per_scheme["pack"];
         println!("  -> {op}: pack speedup per useful token = {speedup:.2}x");
@@ -135,8 +173,8 @@ fn main() {
     }
 
     println!("\n=== Fig 6 modeled (A100, Mamba-1.4B, packed seqlen 4096, bf16) ===");
-    let trace = LengthTrace::paper_like(2000, 7);
-    let (mrows, total) = fig6_breakdown(&GpuSpec::a100(), &trace, Dtype::Bf16);
+    let trace_lens = LengthTrace::paper_like(2000, 7);
+    let (mrows, total) = fig6_breakdown(&GpuSpec::a100(), &trace_lens, Dtype::Bf16);
     println!(
         "{:<12} {:>14} {:>14} {:>9}",
         "op", "padding s", "pack s", "speedup"
@@ -163,10 +201,11 @@ fn main() {
         ("figure", Json::from("fig6")),
         ("gemm_mode", Json::from(gemm_mode)),
         ("threads", Json::from(threads)),
+        ("timing_source", Json::from("trace_spans")),
+        ("iters_per_cell", Json::from(iters)),
         ("measured_ops", Json::Arr(rows_json)),
         ("modeled_a100", Json::Arr(model_rows)),
         ("modeled_total_speedup", Json::from(total)),
-        ("suite", suite.to_json()),
     ]);
     common::write_results("fig6_kernel_breakdown", &json);
     common::write_root_json("BENCH_FIG6_KERNELS.json", &json);

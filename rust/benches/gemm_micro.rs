@@ -31,9 +31,11 @@ use std::time::Instant;
 use packmamba::backend::gemm::{self, GemmMode, GemmScratch, Layout};
 use packmamba::backend::{Backend, NativeBackend};
 use packmamba::config::ModelConfig;
+use packmamba::coordinator::TelemetrySnapshot;
 use packmamba::packing::{PackedBatch, PackedRow, Sequence};
 use packmamba::util::json::Json;
 use packmamba::util::rng::Pcg64;
+use packmamba::util::trace;
 
 fn randv(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| scale * (rng.next_f32() - 0.5)).collect()
@@ -251,10 +253,16 @@ fn main() {
     let pack_len = 2048;
     let batch = e2e_batch(&cfg, pack_len);
     let reps = if smoke { 1 } else { 2 };
+    // span tracing is on for BOTH sides (same <2% overhead, so the
+    // speedup stays fair); the telemetry snapshot covers the tiled run
+    trace::set_enabled(true);
     gemm::set_mode_override(Some(GemmMode::Naive));
     let naive_step = e2e_step_secs(&cfg, &batch, e2e_threads, reps);
     gemm::set_mode_override(Some(dispatch)); // best tile, env-independent
+    trace::reset();
     let tiled_step = e2e_step_secs(&cfg, &batch, e2e_threads, reps);
+    let telemetry = TelemetrySnapshot::capture();
+    trace::set_enabled(false);
     gemm::set_mode_override(None);
     let e2e_speedup = naive_step / tiled_step;
     println!(
@@ -283,6 +291,7 @@ fn main() {
                 ("naive_secs_per_step", Json::from(naive_step)),
                 ("tiled_secs_per_step", Json::from(tiled_step)),
                 ("speedup", Json::from(e2e_speedup)),
+                ("telemetry", telemetry.to_json()),
             ]),
         ),
     ]);

@@ -1,0 +1,145 @@
+//! Tracing overhead gate: the span layer must cost < 2% of a real
+//! training step when enabled, and nothing measurable when disabled.
+//!
+//! Runs the monolithic native training step (forward + backward + AdamW
+//! through the packed kernels) at the acceptance geometry — 4 threads,
+//! d_model 256, packed T = 1024 — alternating tracing-off and
+//! tracing-on rounds so thermal/scheduler drift hits both sides
+//! equally, then compares per-step medians.  Results (including the
+//! operator telemetry of the traced side) land in `BENCH_TRACE.json`
+//! at the repo root.
+//!
+//! `-- --smoke` runs a reduced step count for CI and never fails the
+//! process on the gate (the JSON still records `pass`); the full run
+//! exits non-zero when the overhead exceeds the budget.
+
+mod common;
+
+use std::time::Instant;
+
+use packmamba::backend::{Backend, NativeBackend};
+use packmamba::config::ModelConfig;
+use packmamba::coordinator::TelemetrySnapshot;
+use packmamba::packing::{PackedBatch, PackedRow, Sequence};
+use packmamba::util::bench::fmt_duration;
+use packmamba::util::json::Json;
+use packmamba::util::trace;
+
+/// Overhead budget: enabled-vs-disabled median step-time delta.
+const BUDGET_PCT: f64 = 2.0;
+
+/// One packed row of `pack_len` slots holding four equal sequences.
+fn overhead_batch(cfg: &ModelConfig, pack_len: usize) -> PackedBatch {
+    let quarter = pack_len / 4;
+    let seq = |id: u64| Sequence {
+        tokens: (0..quarter)
+            .map(|k| 1 + ((id as usize * 131 + k * 17) % (cfg.vocab_size - 1)) as i32)
+            .collect(),
+        id,
+    };
+    PackedBatch::from_rows(
+        &[PackedRow {
+            sequences: vec![seq(0), seq(1), seq(2), seq(3)],
+        }],
+        pack_len,
+    )
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite step times"));
+    v[v.len() / 2]
+}
+
+fn main() {
+    packmamba::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = 4usize; // the acceptance geometry
+    let cfg = ModelConfig {
+        name: "trace-overhead-256".to_string(),
+        vocab_size: 4096,
+        d_model: 256,
+        n_layers: 2,
+        d_state: 16,
+        d_conv: 4,
+        expand: 2,
+    };
+    let pack_len = 1024;
+    let batch = overhead_batch(&cfg, pack_len);
+    let be = NativeBackend::with_threads(threads);
+    let mut state = be.init_state(&cfg, 7).expect("init state");
+
+    // Warm up both paths: allocator pools, worker threads, and the trace
+    // layer's one-time thread registration all happen outside the clock.
+    trace::set_enabled(false);
+    be.train_step(&cfg, &mut state, &batch).expect("warmup (off)");
+    be.train_step(&cfg, &mut state, &batch).expect("warmup (off)");
+    trace::set_enabled(true);
+    be.train_step(&cfg, &mut state, &batch).expect("warmup (on)");
+    trace::reset();
+
+    let (rounds, per_round) = if smoke { (3usize, 2usize) } else { (6, 5) };
+    let mut off = Vec::with_capacity(rounds * per_round);
+    let mut on = Vec::with_capacity(rounds * per_round);
+    for _ in 0..rounds {
+        trace::set_enabled(false);
+        for _ in 0..per_round {
+            let t0 = Instant::now();
+            be.train_step(&cfg, &mut state, &batch).expect("step (off)");
+            off.push(t0.elapsed().as_secs_f64());
+        }
+        trace::set_enabled(true);
+        for _ in 0..per_round {
+            let t0 = Instant::now();
+            be.train_step(&cfg, &mut state, &batch).expect("step (on)");
+            on.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let telemetry = TelemetrySnapshot::capture();
+    trace::set_enabled(false);
+
+    let med_off = median(off);
+    let med_on = median(on);
+    let overhead_pct = (med_on / med_off - 1.0) * 100.0;
+    let pass = overhead_pct < BUDGET_PCT;
+    let spans_recorded: u64 = telemetry.ops.iter().map(|o| o.calls).sum();
+    assert!(
+        spans_recorded > 0,
+        "traced steps recorded no spans — the enabled side measured nothing"
+    );
+
+    println!(
+        "=== trace overhead ({}, {threads} threads, d_model {}, T {pack_len}) ===",
+        if smoke { "smoke" } else { "full" },
+        cfg.d_model,
+    );
+    println!("{}", telemetry.format_table());
+    println!(
+        "step median: disabled {} | enabled {} | overhead {overhead_pct:+.2}% \
+         (budget {BUDGET_PCT}%, {spans_recorded} spans) -> {}",
+        fmt_duration(med_off),
+        fmt_duration(med_on),
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    let json = Json::from_pairs([
+        ("bench", Json::from("trace_overhead")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        ("threads", Json::from(threads)),
+        ("d_model", Json::from(cfg.d_model)),
+        ("pack_len", Json::from(pack_len)),
+        ("steps_per_side", Json::from(rounds * per_round)),
+        ("median_disabled_s", Json::from(med_off)),
+        ("median_enabled_s", Json::from(med_on)),
+        ("overhead_pct", Json::from(overhead_pct)),
+        ("budget_pct", Json::from(BUDGET_PCT)),
+        ("pass", Json::from(pass)),
+        ("spans_recorded", Json::from(spans_recorded as i64)),
+        ("telemetry", telemetry.to_json()),
+    ]);
+    common::write_results("trace_overhead", &json);
+    common::write_root_json("BENCH_TRACE.json", &json);
+
+    if !pass && !smoke {
+        std::process::exit(1);
+    }
+}

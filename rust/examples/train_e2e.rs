@@ -11,6 +11,7 @@
 use std::path::Path;
 
 use packmamba::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::metrics::STABLE_WINDOW;
 use packmamba::coordinator::{checkpoint, Trainer};
 
 fn main() -> anyhow::Result<()> {
@@ -59,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "stable throughput:  {:.0} real tokens/s (100-step window after warmup)",
-        m.stable_throughput(5, 100).unwrap_or(0.0)
+        m.stable_throughput(5, STABLE_WINDOW).unwrap_or(0.0)
     );
     println!("padding rate:       {:.2}%", m.padding_rate() * 100.0);
     println!("sequences:          {}", m.total_sequences());

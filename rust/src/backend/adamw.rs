@@ -5,6 +5,7 @@
 
 use crate::runtime::ParamSpec;
 use crate::tensor::Tensor;
+use crate::util::trace::{self, Op};
 use crate::Result;
 
 use super::params;
@@ -69,6 +70,7 @@ pub fn apply(
     state: &mut TrainState,
     grads: &[Tensor],
 ) -> Result<()> {
+    let _sp = trace::span(Op::AdamW);
     anyhow::ensure!(
         specs.len() == state.params.len() && grads.len() == state.params.len(),
         "adamw arity: {} specs, {} params, {} grads",
@@ -108,6 +110,7 @@ pub fn apply_slices(
     state: &mut TrainState,
     grads: &[Vec<f32>],
 ) -> Result<()> {
+    let _sp = trace::span(Op::AdamW);
     anyhow::ensure!(
         specs.len() == state.params.len() && grads.len() == state.params.len(),
         "adamw arity: {} specs, {} params, {} grads",

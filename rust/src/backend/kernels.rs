@@ -32,6 +32,7 @@
 //! thread count.
 
 use crate::util::threadpool::parallel_chunks_mut;
+use crate::util::trace::{self, Op};
 
 /// Geometry of one packed operator call.
 #[derive(Clone, Copy, Debug)]
@@ -75,6 +76,7 @@ pub fn conv1d_packed_fwd_into(
     threads: usize,
     y: &mut [f32],
 ) {
+    let _sp = trace::span(Op::Conv1dFwd);
     let Dims { b, l, d, .. } = dims;
     assert_eq!(x.len(), b * d * l);
     assert_eq!(w.len(), wlen * d);
@@ -126,6 +128,7 @@ pub fn conv1d_packed_fwd_carry_into(
     y: &mut [f32],
     tail_out: &mut [f32],
 ) {
+    let _sp = trace::span(Op::Conv1dFwd);
     let Dims { b, l, d, .. } = dims;
     let tw = wlen - 1;
     assert_eq!(x.len(), b * d * l);
@@ -204,6 +207,7 @@ pub fn conv1d_packed_bwd_into(
     db_acc: &mut [f32],
     colbuf: &mut [f32],
 ) {
+    let _sp = trace::span(Op::Conv1dBwd);
     let Dims { b, l, d, .. } = dims;
     assert_eq!(x.len(), b * d * l);
     assert_eq!(dy.len(), b * d * l);
@@ -312,6 +316,7 @@ pub fn conv1d_packed_bwd_carry_into(
     dtail_out: &mut [f32],
     colbuf: &mut [f32],
 ) {
+    let _sp = trace::span(Op::Conv1dBwd);
     let Dims { b, l, d, .. } = dims;
     let tw = wlen - 1;
     assert_eq!(x.len(), b * d * l);
@@ -440,6 +445,7 @@ pub fn ssm_packed_fwd_into(
     hist: &mut [f32],
     am: &mut [f32],
 ) {
+    let _sp = trace::span(Op::ScanFwd);
     let Dims { b, l, d, n } = dims;
     assert_eq!(x.len(), b * d * l);
     assert_eq!(dt.len(), b * d * l);
@@ -570,6 +576,7 @@ pub fn ssm_packed_fwd_carry_into(
     am: &mut [f32],
     h_out: &mut [f32],
 ) {
+    let _sp = trace::span(Op::ScanFwd);
     let Dims { b, l, d, n } = dims;
     assert_eq!(x.len(), b * d * l);
     assert_eq!(dt.len(), b * d * l);
@@ -670,6 +677,7 @@ pub fn ssm_packed_fwd_nocache(
     dims: Dims,
     threads: usize,
 ) -> Vec<f32> {
+    let _sp = trace::span(Op::ScanFwd);
     let Dims { b, l, d, n } = dims;
     assert_eq!(x.len(), b * d * l);
     assert_eq!(dt.len(), b * d * l);
@@ -765,6 +773,7 @@ pub fn ssm_packed_bwd_into(
     g: &mut [f32],
     colbuf: &mut [f32],
 ) {
+    let _sp = trace::span(Op::ScanBwd);
     let Dims { b, l, d, n } = dims;
     assert_eq!(dy.len(), b * d * l);
     assert_eq!(hist.len(), b * d * l * n);
@@ -1003,6 +1012,7 @@ pub fn ssm_packed_bwd_carry_into(
     g: &mut [f32],
     colbuf: &mut [f32],
 ) {
+    let _sp = trace::span(Op::ScanBwd);
     let Dims { b, l, d, n } = dims;
     assert_eq!(dy.len(), b * d * l);
     assert_eq!(hist.len(), b * d * l * n);

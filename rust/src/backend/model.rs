@@ -24,6 +24,7 @@
 use crate::config::ModelConfig;
 use crate::runtime::ParamSpec;
 use crate::tensor::Tensor;
+use crate::util::trace::{self, Op};
 
 use super::arena::StepArena;
 use super::kernels::{self, Dims, SsmGradsMut};
@@ -320,17 +321,20 @@ fn forward_impl(
         let mut inv = ws.arena.take(t);
         ops::rms_norm_fwd_into(&h, d, lp(slot::NORM_W), NORM_EPS, &mut un, &mut inv);
         let mut xz = ws.arena.take(t * 2 * di);
-        ops::matmul_into(
-            &un,
-            t,
-            d,
-            lp(slot::IN_PROJ),
-            2 * di,
-            0.0,
-            &mut xz,
-            threads,
-            &mut ws.arena.gemm,
-        );
+        {
+            let _sp = trace::span(Op::GemmInProj);
+            ops::matmul_into(
+                &un,
+                t,
+                d,
+                lp(slot::IN_PROJ),
+                2 * di,
+                0.0,
+                &mut xz,
+                threads,
+                &mut ws.arena.gemm,
+            );
+        }
         let mut xlin = ws.arena.take(t * di);
         let mut z = ws.arena.take(t * di);
         for ti in 0..t {
@@ -379,17 +383,20 @@ fn forward_impl(
         // selective projections
         let stride = r + 2 * n;
         let mut dbc = ws.arena.take(t * stride);
-        ops::matmul_into(
-            &xs_tm,
-            t,
-            di,
-            lp(slot::X_PROJ),
-            stride,
-            0.0,
-            &mut dbc,
-            threads,
-            &mut ws.arena.gemm,
-        );
+        {
+            let _sp = trace::span(Op::GemmXProj);
+            ops::matmul_into(
+                &xs_tm,
+                t,
+                di,
+                lp(slot::X_PROJ),
+                stride,
+                0.0,
+                &mut dbc,
+                threads,
+                &mut ws.arena.gemm,
+            );
+        }
         let mut dt_low = ws.arena.take(t * r);
         let mut bm = ws.arena.take(t * n);
         let mut cm = ws.arena.take(t * n);
@@ -401,17 +408,20 @@ fn forward_impl(
         }
         ws.arena.put(dbc);
         let mut dt_pre = ws.arena.take(t * di);
-        ops::matmul_into(
-            &dt_low,
-            t,
-            r,
-            lp(slot::DT_PROJ),
-            di,
-            0.0,
-            &mut dt_pre,
-            threads,
-            &mut ws.arena.gemm,
-        );
+        {
+            let _sp = trace::span(Op::GemmDtProj);
+            ops::matmul_into(
+                &dt_low,
+                t,
+                r,
+                lp(slot::DT_PROJ),
+                di,
+                0.0,
+                &mut dt_pre,
+                threads,
+                &mut ws.arena.gemm,
+            );
+        }
         let dt_bias = lp(slot::DT_BIAS);
         for ti in 0..t {
             let row = &mut dt_pre[ti * di..(ti + 1) * di];
@@ -479,17 +489,20 @@ fn forward_impl(
             yz[i] = y_tm[i] * ops::silu(z[i]);
         }
         let mut out = ws.arena.take(t * d);
-        ops::matmul_into(
-            &yz,
-            t,
-            di,
-            lp(slot::OUT_PROJ),
-            d,
-            0.0,
-            &mut out,
-            threads,
-            &mut ws.arena.gemm,
-        );
+        {
+            let _sp = trace::span(Op::GemmOutProj);
+            ops::matmul_into(
+                &yz,
+                t,
+                di,
+                lp(slot::OUT_PROJ),
+                d,
+                0.0,
+                &mut out,
+                threads,
+                &mut ws.arena.gemm,
+            );
+        }
         add_into(&mut out, &h); // residual into the fresh projection buffer
         let u = std::mem::replace(&mut h, out);
 
@@ -518,7 +531,10 @@ fn forward_impl(
     let mut invf = ws.arena.take(t);
     ops::rms_norm_fwd_into(&h, d, p[params::norm_f(cfg)].data(), NORM_EPS, &mut hf, &mut invf);
     let mut logits = ws.arena.take(t * v);
-    ops::matmul_nt_into(&hf, t, d, emb, v, 0.0, &mut logits, threads, &mut ws.arena.gemm);
+    {
+        let _sp = trace::span(Op::GemmHead);
+        ops::matmul_nt_into(&hf, t, d, emb, v, 0.0, &mut logits, threads, &mut ws.arena.gemm);
+    }
     ForwardCache {
         logits,
         h_pre: h,
@@ -578,6 +594,7 @@ fn gather_plane<T: Copy>(
     clen: usize,
     dst: &mut Vec<T>,
 ) {
+    let _sp = trace::span(Op::ChunkGather);
     dst.clear();
     for s in 0..streams {
         let base = s * stream_tokens + off;
@@ -773,6 +790,7 @@ fn head_backward(
         &mut dlogits,
         &mut ws.arena.f64_scratch[..ce_chunks],
     );
+    let _sp_g = trace::span(Op::GemmBwd);
     ops::matmul_tn_into(
         &dlogits,
         t,
@@ -786,6 +804,7 @@ fn head_backward(
     );
     let mut dhf = ws.arena.take(t * d);
     ops::matmul_into(&dlogits, t, v, emb, d, 0.0, &mut dhf, threads, &mut ws.arena.gemm);
+    drop(_sp_g);
     ws.arena.put(dlogits);
     let mut dh = ws.arena.take(t * d);
     ops::rms_norm_bwd_into(
@@ -855,6 +874,7 @@ fn layers_backward(
 
         // out = u + yz @ out_proj
         let mut dyz = ws.arena.take(t * di);
+        let _sp_g = trace::span(Op::GemmBwd);
         ops::matmul_nt_into(
             &dout,
             t,
@@ -877,6 +897,7 @@ fn layers_backward(
             threads,
             &mut ws.arena.gemm,
         );
+        drop(_sp_g);
 
         // yz = y · silu(z)
         let mut dy_tm = ws.arena.take(t * di);
@@ -992,6 +1013,7 @@ fn layers_backward(
                 }
             }
         }
+        let _sp_g = trace::span(Op::GemmBwd);
         ops::matmul_tn_into(
             &c.dt_low,
             t,
@@ -1015,6 +1037,7 @@ fn layers_backward(
             threads,
             &mut ws.arena.gemm,
         );
+        drop(_sp_g);
         ws.arena.put(ddt_pre);
 
         // dbc = xs @ x_proj, split into (dt_low | B | C)
@@ -1030,6 +1053,7 @@ fn layers_backward(
         ws.arena.put(ddt_low);
         ws.arena.put(sdbm);
         ws.arena.put(sdcm);
+        let _sp_g = trace::span(Op::GemmBwd);
         ops::matmul_tn_into(
             &c.xs_tm,
             t,
@@ -1041,10 +1065,12 @@ fn layers_backward(
             threads,
             &mut ws.arena.gemm,
         );
+        drop(_sp_g);
         // dxs = transpose(scan dx) + ddbc @ x_projᵀ, fused via beta=1
         let mut dxs_tm = ws.arena.take(t * di);
         ops::to_token_major_into(&sdx, rows, di, len, &mut dxs_tm);
         ws.arena.put(sdx);
+        let _sp_g = trace::span(Op::GemmBwd);
         ops::matmul_nt_into(
             &ddbc,
             t,
@@ -1056,6 +1082,7 @@ fn layers_backward(
             threads,
             &mut ws.arena.gemm,
         );
+        drop(_sp_g);
         ws.arena.put(ddbc);
 
         // silu + packed conv backward
@@ -1122,6 +1149,7 @@ fn layers_backward(
         }
         ws.arena.put(dxlin_tm);
         ws.arena.put(dz);
+        let _sp_g = trace::span(Op::GemmBwd);
         ops::matmul_tn_into(
             &c.un,
             t,
@@ -1145,6 +1173,7 @@ fn layers_backward(
             threads,
             &mut ws.arena.gemm,
         );
+        drop(_sp_g);
         ws.arena.put(dxz);
 
         // RMSNorm backward + residual

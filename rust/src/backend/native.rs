@@ -29,6 +29,7 @@ use crate::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
 use crate::packing::PackedBatch;
 use crate::runtime::{ExecStats, ParamSpec};
 use crate::tensor::Tensor;
+use crate::util::trace::{self, Op};
 use crate::Result;
 
 use super::adamw::{self, AdamWConfig};
@@ -267,6 +268,13 @@ impl Backend for NativeBackend {
         state: &mut TrainState,
         batch: &PackedBatch,
     ) -> Result<f32> {
+        let _sp = trace::span(Op::TrainStep);
+        if trace::enabled() {
+            trace::count_tokens(
+                batch.real_tokens() as u64,
+                (batch.rows() * batch.pack_len()) as u64,
+            );
+        }
         self.check_batch(model, batch)?;
         let specs = self.cached_specs(model);
         self.ensure_grad_bufs(specs.as_slice());
@@ -358,6 +366,13 @@ impl Backend for NativeBackend {
         batch: &PackedBatch,
         chunk_len: usize,
     ) -> Result<f32> {
+        let _sp = trace::span(Op::TrainStep);
+        if trace::enabled() {
+            trace::count_tokens(
+                batch.real_tokens() as u64,
+                (batch.rows() * batch.pack_len()) as u64,
+            );
+        }
         self.check_batch(model, batch)?;
         let specs = self.cached_specs(model);
         self.ensure_grad_bufs(specs.as_slice());

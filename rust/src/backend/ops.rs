@@ -16,6 +16,7 @@
 
 use super::gemm::{self, GemmScratch, Layout};
 use crate::util::threadpool::parallel_chunks2_mut;
+use crate::util::trace::{self, Op};
 
 pub(crate) use super::gemm::effective_threads;
 
@@ -173,6 +174,7 @@ pub fn softplus(x: f32) -> f32 {
 /// RMSNorm forward over rows of length `d` into `(y, inv)` with
 /// `inv[t] = 1/sqrt(mean(x_t^2) + eps)`.
 pub fn rms_norm_fwd_into(x: &[f32], d: usize, w: &[f32], eps: f32, y: &mut [f32], inv: &mut [f32]) {
+    let _sp = trace::span(Op::RmsNormFwd);
     assert_eq!(x.len() % d, 0);
     assert_eq!(w.len(), d);
     let t = x.len() / d;
@@ -208,6 +210,7 @@ pub fn rms_norm_bwd_into(
     dx: &mut [f32],
     dw_acc: &mut [f32],
 ) {
+    let _sp = trace::span(Op::RmsNormBwd);
     let t = x.len() / d;
     assert_eq!(dx.len(), x.len());
     assert_eq!(dw_acc.len(), d);
@@ -298,6 +301,7 @@ pub fn cross_entropy_sum_into(
     dlogits: &mut [f32],
     loss_parts: &mut [f64],
 ) -> f64 {
+    let _sp = trace::span(Op::CrossEntropy);
     let t = targets.len();
     assert_eq!(logits.len(), t * v);
     assert_eq!(mask.len(), t);

@@ -40,6 +40,7 @@ use crate::backend::{self, ops};
 use crate::config::{Scheme, TrainConfig};
 use crate::packing::PackedBatch;
 use crate::tensor::{allreduce_mean, allreduce_sum, Tensor};
+use crate::util::trace;
 use crate::Result;
 
 use super::metrics::{StepRecord, TrainMetrics};
@@ -159,11 +160,12 @@ impl DataParallelTrainer {
             }
             msgs.sort_by_key(|m| m.worker);
             let loss = msgs.iter().map(|m| m.loss).sum::<f32>() / n as f32;
-            let (real, slots, seqs) = (
+            let (real, slots, seqs): (usize, usize, usize) = (
                 msgs.iter().map(|m| m.real_tokens).sum(),
                 msgs.iter().map(|m| m.slot_tokens).sum(),
                 msgs.iter().map(|m| m.sequences).sum(),
             );
+            trace::count_tokens(real as u64, slots as u64);
             // move the gradients out of the messages: no per-worker
             // full-model deep copy on the leader's critical path
             let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
@@ -274,6 +276,7 @@ impl DataParallelTrainer {
                 batch.rows() * batch.pack_len(),
                 batch.sequence_count(),
             );
+            trace::count_tokens(real as u64, slots as u64);
             let parts = batch.split_rows(n)?;
             for (tx, part) in batch_txs.iter().zip(parts) {
                 tx.send((part, denom))

@@ -9,6 +9,11 @@ use std::time::Instant;
 use crate::util::json::Json;
 use crate::util::stats::Streaming;
 
+/// The paper's stable-window length (§4: "the average throughput of a
+/// stable sequence of 100 consecutive steps").  Callers pass this to
+/// [`TrainMetrics::stable_throughput`] unless sweeping shorter runs.
+pub const STABLE_WINDOW: usize = 100;
+
 #[derive(Clone, Debug)]
 pub struct StepRecord {
     pub step: usize,
@@ -72,12 +77,18 @@ impl TrainMetrics {
 
     /// Real tokens per second over a stable window of `window` consecutive
     /// steps after skipping `warmup` steps (paper protocol: warm-up then a
-    /// 100-step stable window).
+    /// [`STABLE_WINDOW`]-step stable window).
+    ///
+    /// A run shorter than the requested warm-up still yields a number:
+    /// the warm-up is clamped so at least the final step stays in the
+    /// window (short smoke runs used to get `None` and report no
+    /// throughput at all).
     pub fn stable_throughput(&self, warmup: usize, window: usize) -> Option<f64> {
         let recs = &self.records;
-        if recs.len() <= warmup {
+        if recs.is_empty() {
             return None;
         }
+        let warmup = warmup.min(recs.len() - 1);
         let end = recs.len().min(warmup + window.max(1));
         let win = &recs[warmup..end];
         let secs: f64 = win.iter().map(|r| r.secs).sum();
@@ -135,7 +146,9 @@ impl TrainMetrics {
             ("steps", Json::from(self.steps())),
             (
                 "stable_tokens_per_sec",
-                self.stable_throughput(5, 100).map(Json::from).unwrap_or(Json::Null),
+                self.stable_throughput(5, STABLE_WINDOW)
+                    .map(Json::from)
+                    .unwrap_or(Json::Null),
             ),
             ("padding_rate", Json::from(self.padding_rate())),
             ("total_real_tokens", Json::from(self.total_real_tokens())),
@@ -184,6 +197,24 @@ mod tests {
         // including warm-up would be much slower
         let with_warm = m.stable_throughput(0, 100).unwrap();
         assert!(with_warm < 250.0, "with_warm={with_warm}");
+    }
+
+    #[test]
+    fn stable_throughput_short_run_clamps_warmup() {
+        // a 3-step smoke run with warmup=5 must still report throughput
+        // (from the final step) instead of None
+        let mut m = TrainMetrics::new();
+        for i in 0..3 {
+            m.record(rec(i, 2.0, 0.5, 500, 500));
+        }
+        let thr = m.stable_throughput(5, STABLE_WINDOW).unwrap();
+        assert!((thr - 1000.0).abs() < 1.0, "thr={thr}");
+        // empty run: still None
+        assert!(TrainMetrics::new().stable_throughput(5, STABLE_WINDOW).is_none());
+        // single record with warmup=0 works too
+        let mut one = TrainMetrics::new();
+        one.record(rec(0, 2.0, 1.0, 250, 250));
+        assert_eq!(one.stable_throughput(0, STABLE_WINDOW), Some(250.0));
     }
 
     #[test]

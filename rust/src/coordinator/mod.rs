@@ -11,14 +11,18 @@
 //!   threads, each owning its own backend instance).
 //! * [`metrics`] — step timing, token accounting, loss curves, padding
 //!   rates; JSON export for EXPERIMENTS.md.
+//! * [`telemetry`] — operator-level runtime telemetry snapshots over
+//!   the `util::trace` span layer (self-time shares, pool utilization).
 //! * [`checkpoint`] — binary save/load of params + optimizer state.
 
 pub mod checkpoint;
 pub mod dataparallel;
 pub mod metrics;
+pub mod telemetry;
 pub mod trainer;
 
 pub use crate::backend::TrainState;
 pub use dataparallel::DataParallelTrainer;
 pub use metrics::TrainMetrics;
+pub use telemetry::TelemetrySnapshot;
 pub use trainer::Trainer;

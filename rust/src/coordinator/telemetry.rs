@@ -1,0 +1,270 @@
+//! Runtime telemetry: aggregated views over `util::trace`.
+//!
+//! A [`TelemetrySnapshot`] folds the span layer's per-thread rings and
+//! counters into the operator-level summary the paper's §2 profiling
+//! methodology asks for: per-operator self-time shares and call counts,
+//! padding/real-token ratios, and worker-pool utilization (busy vs.
+//! parked fraction per worker plus the inline-fallback count).  It
+//! serializes via `util::json` — benches stamp it into their `BENCH_*`
+//! JSON, the trainer logs [`TelemetrySnapshot::format_table`]
+//! periodically, and the `--trace` CLI flag pairs it with the
+//! chrome-trace export.
+//!
+//! Capturing a snapshot allocates (it is a reporting path); the
+//! recording side in `util::trace` does not.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::trace::{self, Op};
+
+/// Steps between the trainer's periodic operator-breakdown log lines
+/// (only emitted while tracing is enabled).
+pub const LOG_EVERY: usize = 100;
+
+/// One operator's aggregated timing across all threads.
+#[derive(Clone, Debug)]
+pub struct OpStat {
+    pub name: &'static str,
+    pub calls: u64,
+    /// wall seconds inside this op's spans (children included)
+    pub total_s: f64,
+    /// seconds net of nested spans on the recording thread
+    pub self_s: f64,
+    /// share of the summed operator self-time (pool busy/park excluded
+    /// — worker-side time mirrors the issuing spans)
+    pub self_share: f64,
+    /// per-span duration percentiles over the retained ring window
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+/// One pool worker's busy/parked split.
+#[derive(Clone, Debug)]
+pub struct WorkerUtil {
+    pub name: String,
+    pub busy_s: f64,
+    pub park_s: f64,
+    /// busy / (busy + parked); 0 when the worker never woke
+    pub busy_frac: f64,
+}
+
+/// Worker-pool behavior summary.
+#[derive(Clone, Debug, Default)]
+pub struct PoolUtil {
+    pub dispatches: u64,
+    pub inline_fallbacks: u64,
+    pub tasks: u64,
+    pub workers: Vec<WorkerUtil>,
+    /// mean busy fraction across workers that recorded any time
+    pub mean_busy_frac: f64,
+}
+
+/// Point-in-time aggregation of the tracing subsystem.
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    pub enabled: bool,
+    /// ops with at least one call, sorted by self-time descending
+    pub ops: Vec<OpStat>,
+    pub real_tokens: u64,
+    pub slot_tokens: u64,
+    /// 1 − real/slots over the traced steps (0 when nothing recorded)
+    pub padding_rate: f64,
+    pub pool: PoolUtil,
+}
+
+impl TelemetrySnapshot {
+    pub fn capture() -> TelemetrySnapshot {
+        let agg = trace::aggregate();
+        // operator self-time denominator: exclude the pool's worker-side
+        // spans, which re-measure time already inside operator spans
+        let denom: u64 = agg
+            .iter()
+            .filter(|a| !matches!(a.op, Op::PoolBusy | Op::PoolPark))
+            .map(|a| a.self_ns)
+            .sum();
+        let mut ops: Vec<OpStat> = agg
+            .iter()
+            .filter(|a| a.calls > 0)
+            .map(|a| {
+                let durs = trace::durations_of(a.op);
+                let (p50, p99) = match Summary::try_of(&durs) {
+                    Some(s) => (s.p50, s.p99),
+                    None => (0.0, 0.0),
+                };
+                OpStat {
+                    name: a.op.name(),
+                    calls: a.calls,
+                    total_s: a.total_ns as f64 * 1e-9,
+                    self_s: a.self_ns as f64 * 1e-9,
+                    self_share: if denom > 0
+                        && !matches!(a.op, Op::PoolBusy | Op::PoolPark)
+                    {
+                        a.self_ns as f64 / denom as f64
+                    } else {
+                        0.0
+                    },
+                    p50_s: p50,
+                    p99_s: p99,
+                }
+            })
+            .collect();
+        ops.sort_by(|a, b| {
+            b.self_s
+                .partial_cmp(&a.self_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+
+        let (real, slots) = trace::token_counters();
+        let pc = trace::pool_counters();
+        let workers: Vec<WorkerUtil> = trace::threads()
+            .into_iter()
+            .filter(|t| t.name.starts_with("pm-pool-"))
+            .map(|t| {
+                let busy = t.busy_ns as f64 * 1e-9;
+                let park = t.park_ns as f64 * 1e-9;
+                let denom = busy + park;
+                WorkerUtil {
+                    name: t.name,
+                    busy_s: busy,
+                    park_s: park,
+                    busy_frac: if denom > 0.0 { busy / denom } else { 0.0 },
+                }
+            })
+            .collect();
+        let active: Vec<&WorkerUtil> = workers
+            .iter()
+            .filter(|w| w.busy_s + w.park_s > 0.0)
+            .collect();
+        let mean_busy_frac = if active.is_empty() {
+            0.0
+        } else {
+            active.iter().map(|w| w.busy_frac).sum::<f64>() / active.len() as f64
+        };
+
+        TelemetrySnapshot {
+            enabled: trace::enabled(),
+            ops,
+            real_tokens: real,
+            slot_tokens: slots,
+            padding_rate: if slots > 0 {
+                1.0 - real as f64 / slots as f64
+            } else {
+                0.0
+            },
+            pool: PoolUtil {
+                dispatches: pc.dispatches,
+                inline_fallbacks: pc.inline_fallbacks,
+                tasks: pc.tasks,
+                workers,
+                mean_busy_frac,
+            },
+        }
+    }
+
+    /// Compact JSON for `BENCH_*` stamping and the metrics dump.
+    pub fn to_json(&self) -> Json {
+        let ops: Vec<Json> = self
+            .ops
+            .iter()
+            .map(|o| {
+                Json::from_pairs([
+                    ("op", Json::from(o.name)),
+                    ("calls", Json::from(o.calls as i64)),
+                    ("total_s", Json::from(o.total_s)),
+                    ("self_s", Json::from(o.self_s)),
+                    ("self_share", Json::from(o.self_share)),
+                    ("p50_s", Json::from(o.p50_s)),
+                    ("p99_s", Json::from(o.p99_s)),
+                ])
+            })
+            .collect();
+        let workers: Vec<Json> = self
+            .pool
+            .workers
+            .iter()
+            .map(|w| {
+                Json::from_pairs([
+                    ("name", Json::from(w.name.clone())),
+                    ("busy_s", Json::from(w.busy_s)),
+                    ("park_s", Json::from(w.park_s)),
+                    ("busy_frac", Json::from(w.busy_frac)),
+                ])
+            })
+            .collect();
+        Json::from_pairs([
+            ("enabled", Json::from(self.enabled)),
+            ("ops", Json::Arr(ops)),
+            ("real_tokens", Json::from(self.real_tokens as i64)),
+            ("slot_tokens", Json::from(self.slot_tokens as i64)),
+            ("padding_rate", Json::from(self.padding_rate)),
+            (
+                "pool",
+                Json::from_pairs([
+                    ("dispatches", Json::from(self.pool.dispatches as i64)),
+                    (
+                        "inline_fallbacks",
+                        Json::from(self.pool.inline_fallbacks as i64),
+                    ),
+                    ("tasks", Json::from(self.pool.tasks as i64)),
+                    ("mean_busy_frac", Json::from(self.pool.mean_busy_frac)),
+                    ("workers", Json::Arr(workers)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Fixed-width operator breakdown for the `log` facade (the trainer
+    /// emits this every N steps when tracing is on).
+    pub fn format_table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "operator breakdown (self-time shares; padding {:.1}%, pool busy {:.0}%, \
+             {} dispatches / {} inline)",
+            self.padding_rate * 100.0,
+            self.pool.mean_busy_frac * 100.0,
+            self.pool.dispatches,
+            self.pool.inline_fallbacks,
+        );
+        let _ = writeln!(
+            s,
+            "  {:<16} {:>10} {:>11} {:>11} {:>7} {:>11} {:>11}",
+            "op", "calls", "total", "self", "share", "p50", "p99"
+        );
+        for o in &self.ops {
+            let _ = writeln!(
+                s,
+                "  {:<16} {:>10} {:>11} {:>11} {:>6.1}% {:>11} {:>11}",
+                o.name,
+                o.calls,
+                crate::util::bench::fmt_duration(o.total_s),
+                crate::util::bench::fmt_duration(o.self_s),
+                o.self_share * 100.0,
+                crate::util::bench::fmt_duration(o.p50_s),
+                crate::util::bench::fmt_duration(o.p99_s),
+            );
+        }
+        if s.ends_with('\n') {
+            s.pop();
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_well_formed() {
+        // no spans required: capture over a possibly-empty registry
+        let snap = TelemetrySnapshot::capture();
+        let j = snap.to_json();
+        let re = Json::parse(&j.dump()).expect("telemetry json parses");
+        assert!(re.get("ops").unwrap().as_arr().is_some());
+        assert!(re.get("pool").unwrap().get("dispatches").is_some());
+        let table = snap.format_table();
+        assert!(table.contains("operator breakdown"));
+    }
+}

@@ -27,9 +27,11 @@ use crate::packing::{
     pad_to_max, single_sequence_batch, GreedyPacker, PackedBatch, Sequence, StreamingPacker,
 };
 use crate::util::threadpool::BoundedQueue;
+use crate::util::trace::{self, Op};
 use crate::Result;
 
 use super::metrics::{StepRecord, TrainMetrics};
+use super::telemetry::{self, TelemetrySnapshot};
 
 /// Batch producer: runs the corpus + batching scheme on its own thread.
 pub struct Pipeline {
@@ -70,7 +72,9 @@ impl Pipeline {
                                 packing.greedy_buffer,
                             );
                             loop {
-                                for b in p.push(corpus.next_sequence()) {
+                                let s = corpus.next_sequence();
+                                let ready = trace::with(Op::Pack, || p.push(s));
+                                for b in ready {
                                     if q.push(b).is_err() {
                                         return;
                                     }
@@ -83,7 +87,9 @@ impl Pipeline {
                                 packing.streams.max(1),
                             );
                             loop {
-                                for b in p.push(corpus.next_sequence()) {
+                                let s = corpus.next_sequence();
+                                let ready = trace::with(Op::Pack, || p.push(s));
+                                for b in ready {
                                     if q.push(b).is_err() {
                                         return;
                                     }
@@ -101,14 +107,15 @@ impl Pipeline {
                                     s
                                 })
                                 .collect();
-                            if q.push(pad_to_max(&seqs, max_len)).is_err() {
+                            let b = trace::with(Op::Pack, || pad_to_max(&seqs, max_len));
+                            if q.push(b).is_err() {
                                 return;
                             }
                         }
                     }
                     Scheme::SingleSequence => loop {
                         let s = corpus.next_sequence();
-                        match single_sequence_batch(&s, &buckets) {
+                        match trace::with(Op::Pack, || single_sequence_batch(&s, &buckets)) {
                             Some(b) => {
                                 if q.push(b).is_err() {
                                     return;
@@ -264,6 +271,9 @@ impl Trainer {
                     self.metrics.records.last().map(|r| r.real_tokens).unwrap_or(0),
                     self.pipeline.queue_len(),
                 );
+            }
+            if trace::enabled() && (i + 1) % telemetry::LOG_EVERY == 0 {
+                log::info!("{}", TelemetrySnapshot::capture().format_table());
             }
         }
         Ok(())

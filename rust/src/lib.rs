@@ -25,6 +25,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`util`] | offline substrates: RNG, JSON, CLI parsing, stats, bench + property-test harnesses, logging, and the **persistent parked `WorkerPool`** behind `parallel_chunks_mut`/`parallel_chunks2_mut` — long-lived workers on per-worker condvars, zero spawns and zero allocations per dispatch (`spawn_count` audits it) |
+//! | [`util::trace`] | zero-alloc operator tracing: preallocated per-thread span rings over the fixed [`util::trace::Op`] set (span names follow `<subsystem>.<op>`, e.g. `scan.fwd`, `gemm.in_proj`, `pool.busy` — see the module docs), pool/token counters, chrome://tracing export; one relaxed atomic load when disabled, allocation-free recording when enabled |
 //! | [`tensor`] | host tensors (f32 / software bf16) used by backends, tests, checkpoints and host-side all-reduce |
 //! | [`config`] | model / training / packing / backend configuration, JSON-backed |
 //! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
@@ -35,6 +36,7 @@
 //! | [`backend::arena`] | `StepArena` — recycled step buffers + GEMM scratch; steady-state training steps (monolithic and chunked) allocate nothing |
 //! | [`runtime`] | artifact manifest + host values; PJRT client wrapper behind the `pjrt` feature |
 //! | [`coordinator`] | trainer, schemes, data-parallel leader (monolithic shard-per-worker mode and chunk-aware stream-split mode with gradient-sum all-reduce), metrics, checkpoints |
+//! | [`coordinator::telemetry`] | [`coordinator::TelemetrySnapshot`]: folds the span layer into per-operator self-time shares, padding ratios, and pool utilization; stamped into `BENCH_*` JSON, logged every `LOG_EVERY` steps, paired with `--trace`'s chrome export |
 //! | [`perfmodel`] | analytic A100 model reproducing the paper-scale figure shapes |
 //!
 //! ## Environment variables
@@ -44,6 +46,8 @@
 //! | `PACKMAMBA_THREADS` | default thread count for `NativeBackend::new()` — resolved **at construction**; thread-sweeping callers pass explicit counts to `with_threads` instead of mutating it mid-process |
 //! | `PACKMAMBA_GEMM` | GEMM dispatch tier: `naive` \| `blocked` \| `avx2`; unset = best tile the CPU supports; an unsupported `avx2` request warns and degrades to `blocked` |
 //! | `PACKMAMBA_BACKEND` | bench-side backend selection (`native`, or `pjrt` with the feature + artifacts) |
+//! | `PACKMAMBA_TRACE` | any non-empty value except `0` enables operator tracing at startup (the `--trace <path>` CLI flag enables it too, and additionally writes a chrome://tracing JSON at exit) |
+//! | `PACKMAMBA_LOG` | max log level for the stderr logger: `error` \| `warn` \| `info` (default) \| `debug` \| `trace` \| `off`; unknown values warn and fall back to `info` |
 
 pub mod backend;
 pub mod config;

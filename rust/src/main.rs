@@ -14,16 +14,18 @@
 use std::path::{Path, PathBuf};
 
 use packmamba::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
-use packmamba::coordinator::{checkpoint, DataParallelTrainer, Trainer};
+use packmamba::coordinator::metrics::STABLE_WINDOW;
+use packmamba::coordinator::{checkpoint, DataParallelTrainer, TelemetrySnapshot, Trainer};
 use packmamba::data::LengthTrace;
 use packmamba::packing::{pad_to_max, GreedyPacker, PackingStats, Sequence, StreamingPacker};
 use packmamba::perfmodel::{fig5_table, GpuSpec};
 use packmamba::runtime::Manifest;
 use packmamba::util::argparse::{App, Command, Matches};
-use packmamba::util::logging;
+use packmamba::util::{logging, trace};
 
 fn main() {
     logging::init();
+    trace::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let app = App::new("packmamba", "PackMamba training coordinator")
         .command(
@@ -43,7 +45,8 @@ fn main() {
                 )
                 .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts"))
                 .flag("save", "o", "checkpoint output path", None)
-                .flag("metrics-out", "", "write metrics json here", None),
+                .flag("metrics-out", "", "write metrics json here", None)
+                .flag("trace", "", "enable operator tracing; write chrome trace here", None),
         )
         .command(
             Command::new(
@@ -63,7 +66,8 @@ fn main() {
                      (0 = monolithic)",
                     Some("0"),
                 )
-                .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts")),
+                .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts"))
+                .flag("trace", "", "enable operator tracing; write chrome trace here", None),
         )
         .command(
             Command::new("pack-stats", "padding rates of the batching schemes")
@@ -141,7 +145,25 @@ fn build_train_config(m: &Matches) -> anyhow::Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// Enable tracing for a `--trace <path>` run; returns the export path.
+fn trace_setup(m: &Matches) -> Option<PathBuf> {
+    let path = m.get("trace").map(PathBuf::from)?;
+    trace::set_enabled(true);
+    Some(path)
+}
+
+/// End-of-run trace export: chrome JSON to `path` plus the operator
+/// breakdown table on the log facade.
+fn trace_finish(path: &Path) -> anyhow::Result<()> {
+    let snap = TelemetrySnapshot::capture();
+    log::info!("{}", snap.format_table());
+    trace::export_chrome(path)?;
+    log::info!("chrome trace written to {} (load in chrome://tracing)", path.display());
+    Ok(())
+}
+
 fn cmd_train(m: &Matches) -> anyhow::Result<()> {
+    let trace_path = trace_setup(m);
     let cfg = build_train_config(m)?;
     let mut trainer = Trainer::from_config(cfg.clone())?;
     log::info!(
@@ -164,7 +186,7 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
     );
     println!(
         "stable throughput: {:.0} tokens/s, padding rate {:.1}%",
-        met.stable_throughput(5, 100).unwrap_or(0.0),
+        met.stable_throughput(5, STABLE_WINDOW).unwrap_or(0.0),
         met.padding_rate() * 100.0
     );
     // per-op profile (for the PJRT backend this is the §Perf L3 target:
@@ -188,10 +210,14 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
         checkpoint::save(&PathBuf::from(path), &cfg.model.name, &specs, trainer.state())?;
         log::info!("checkpoint written to {path}");
     }
+    if let Some(path) = trace_path {
+        trace_finish(&path)?;
+    }
     Ok(())
 }
 
 fn cmd_dp_train(m: &Matches) -> anyhow::Result<()> {
+    let trace_path = trace_setup(m);
     let mut cfg = build_train_config(m)?;
     cfg.scheme = Scheme::Pack;
     if let Some(w) = m.get_usize("workers")? {
@@ -209,9 +235,12 @@ fn cmd_dp_train(m: &Matches) -> anyhow::Result<()> {
     );
     println!(
         "aggregate throughput: {:.0} tokens/s",
-        result.metrics.stable_throughput(2, 100).unwrap_or(0.0)
+        result.metrics.stable_throughput(2, STABLE_WINDOW).unwrap_or(0.0)
     );
     anyhow::ensure!(result.replicas_identical, "replica divergence detected");
+    if let Some(path) = trace_path {
+        trace_finish(&path)?;
+    }
     Ok(())
 }
 

@@ -5,6 +5,7 @@
 //! tolerance-based comparison for integration tests.
 
 use super::Tensor;
+use crate::util::trace::{self, Op};
 
 impl Tensor {
     /// self += other (shapes must match) — the all-reduce accumulator.
@@ -109,6 +110,7 @@ pub fn allreduce_mean(workers: &mut [Vec<Tensor>]) {
     if n == 1 {
         return;
     }
+    let _sp = trace::span(Op::Allreduce);
     let (first, rest) = workers.split_at_mut(1);
     let k = first[0].len();
     for j in 0..k {
@@ -127,6 +129,7 @@ pub fn allreduce_mean(workers: &mut [Vec<Tensor>]) {
 /// the reduction is a sum rather than an average.
 pub fn allreduce_sum(workers: &mut [Vec<Tensor>]) {
     assert!(!workers.is_empty());
+    let _sp = trace::span(Op::Allreduce);
     let (first, rest) = workers.split_at_mut(1);
     let k = first[0].len();
     for j in 0..k {

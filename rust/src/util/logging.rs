@@ -47,7 +47,7 @@ impl Log for Logger {
         let _ = writeln!(
             err,
             "{pre}[{h:02}:{m:02}:{s:02}.{ms:03} {lvl:<5} {}]{post} {}",
-            record.target(),
+            record.module_path().unwrap_or_else(|| record.target()),
             record.args()
         );
     }
@@ -60,10 +60,17 @@ impl Log for Logger {
 static LOGGER: OnceLock<Logger> = OnceLock::new();
 
 /// Install the logger (idempotent).  Returns the active level.
+///
+/// An unrecognized `PACKMAMBA_LOG` value falls back to `info` and emits
+/// a warning (rather than being silently swallowed).
 pub fn init() -> LevelFilter {
-    init_with(parse_level(
-        &std::env::var("PACKMAMBA_LOG").unwrap_or_default(),
-    ))
+    let raw = std::env::var("PACKMAMBA_LOG").unwrap_or_default();
+    let (level, unknown) = parse_level(&raw);
+    let active = init_with(level);
+    if unknown {
+        log::warn!("unknown PACKMAMBA_LOG value {raw:?}; defaulting to info");
+    }
+    active
 }
 
 pub fn init_with(level: LevelFilter) -> LevelFilter {
@@ -77,14 +84,17 @@ pub fn init_with(level: LevelFilter) -> LevelFilter {
     logger.level
 }
 
-fn parse_level(s: &str) -> LevelFilter {
+/// Parse a `PACKMAMBA_LOG` value.  The boolean is true when the value
+/// was not recognized (empty/unset is valid and means the default).
+fn parse_level(s: &str) -> (LevelFilter, bool) {
     match s.to_ascii_lowercase().as_str() {
-        "error" => LevelFilter::Error,
-        "warn" => LevelFilter::Warn,
-        "debug" => LevelFilter::Debug,
-        "trace" => LevelFilter::Trace,
-        "off" => LevelFilter::Off,
-        _ => LevelFilter::Info,
+        "" | "info" => (LevelFilter::Info, false),
+        "error" => (LevelFilter::Error, false),
+        "warn" => (LevelFilter::Warn, false),
+        "debug" => (LevelFilter::Debug, false),
+        "trace" => (LevelFilter::Trace, false),
+        "off" => (LevelFilter::Off, false),
+        _ => (LevelFilter::Info, true),
     }
 }
 
@@ -94,10 +104,15 @@ mod tests {
 
     #[test]
     fn parse_levels() {
-        assert_eq!(parse_level("error"), LevelFilter::Error);
-        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
-        assert_eq!(parse_level(""), LevelFilter::Info);
-        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+        assert_eq!(parse_level("error"), (LevelFilter::Error, false));
+        assert_eq!(parse_level("TRACE"), (LevelFilter::Trace, false));
+        assert_eq!(parse_level("off"), (LevelFilter::Off, false));
+        // empty/unset is the default, not an error
+        assert_eq!(parse_level(""), (LevelFilter::Info, false));
+        assert_eq!(parse_level("info"), (LevelFilter::Info, false));
+        // unknown values default to info but are flagged so init() warns
+        assert_eq!(parse_level("bogus"), (LevelFilter::Info, true));
+        assert_eq!(parse_level("verbose"), (LevelFilter::Info, true));
     }
 
     #[test]

@@ -20,6 +20,16 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Non-panicking [`Summary::of`]: `None` for an empty sample
+    /// (telemetry percentiles run over possibly-empty span windows).
+    pub fn try_of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            None
+        } else {
+            Some(Summary::of(xs))
+        }
+    }
+
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of(empty)");
         let n = xs.len();
@@ -247,5 +257,53 @@ mod tests {
         let s = Summary::of(&xs);
         assert_eq!(s.mad, 0.0);
         assert!(s.std > 1e6); // std blows up, MAD doesn't
+    }
+
+    #[test]
+    fn try_of_empty_is_none() {
+        assert!(Summary::try_of(&[]).is_none());
+        assert!(Summary::try_of(&[3.0]).is_some());
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.n, 1);
+        assert_eq!((s.min, s.max), (7.0, 7.0));
+        // every percentile of n=1 is the sample itself
+        assert_eq!((s.p50, s.p90, s.p99), (7.0, 7.0, 7.0));
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.std, 0.0); // n=1 must not divide by zero
+    }
+
+    #[test]
+    fn summary_all_equal_samples() {
+        let s = Summary::of(&[2.5; 8]);
+        assert_eq!(s.n, 8);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!((s.p50, s.p90, s.p99), (2.5, 2.5, 2.5));
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.mad, 0.0);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // [0, 10) over 10 buckets: bucket i covers [i, i+1)
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(0.0); // lower edge → bucket 0
+        h.push(1.0); // interior boundary → upper bucket (half-open)
+        h.push(0.999_999); // just below the boundary → bucket 0
+        h.push(9.999_999); // just below hi → last bucket
+        h.push(10.0); // hi itself clamps to the last bucket
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[1], 1);
+        assert_eq!(h.counts()[9], 2);
+        assert_eq!(h.total(), 5);
+    }
+
+    #[test]
+    fn histogram_quantile_empty_is_nan() {
+        let h = Histogram::new(0.0, 1.0, 4);
+        assert!(h.quantile(0.5).is_nan());
     }
 }

@@ -24,6 +24,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
 use std::thread::JoinHandle;
 
+use super::trace;
+
 /// OS threads ever spawned through this module (pool workers, scoped
 /// `parallel_map` workers, [`ThreadPool`] members).  The zero-alloc
 /// audit snapshots this around steady-state training steps to prove the
@@ -319,6 +321,9 @@ fn worker_loop(inner: Arc<PoolInner>, slot: Arc<WorkerSlot>) {
                     seen = cmd.epoch;
                     break;
                 }
+                // parked time is a span on this worker (`pool.park`); a
+                // spurious wake yields one short span per wait
+                let _park = trace::span(trace::Op::PoolPark);
                 cmd = slot.cv.wait(cmd).unwrap_or_else(|p| p.into_inner());
             }
             // SAFETY: the dispatcher wrote the job slot before bumping
@@ -327,16 +332,22 @@ fn worker_loop(inner: Arc<PoolInner>, slot: Arc<WorkerSlot>) {
             // until this worker decrements the `active` latch below.
             unsafe { *inner.job.get() }
         };
-        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
-            let i = inner.cursor.fetch_add(1, Ordering::Relaxed);
-            if i >= job.tasks {
-                break;
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _busy = trace::span(trace::Op::PoolBusy);
+            let mut claimed = 0u64;
+            loop {
+                let i = inner.cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= job.tasks {
+                    break;
+                }
+                // SAFETY: `run`/`ctx` are the type-erased closure the
+                // dispatcher published; index `i` is claimed exactly once
+                // (one shared cursor), and the dispatcher keeps `ctx`'s
+                // referent alive until the latch opens.
+                unsafe { (job.run)(job.ctx, i) };
+                claimed += 1;
             }
-            // SAFETY: `run`/`ctx` are the type-erased closure the
-            // dispatcher published; index `i` is claimed exactly once
-            // (one shared cursor), and the dispatcher keeps `ctx`'s
-            // referent alive until the latch opens.
-            unsafe { (job.run)(job.ctx, i) };
+            trace::count_pool_tasks(claimed);
         }));
         if res.is_err() {
             inner.poisoned.store(true, Ordering::SeqCst);
@@ -456,6 +467,10 @@ impl WorkerPool {
     pub unsafe fn run_tasks(&self, threads: usize, tasks: usize, run: TaskFn, ctx: *const ()) {
         let helpers = clamp_helpers(threads, tasks);
         if helpers == 0 || in_pool_worker() || !self.try_dispatch(helpers, tasks, run, ctx) {
+            if helpers > 0 {
+                // wanted parallelism but degraded (nested or pool busy)
+                trace::count_pool_inline();
+            }
             for i in 0..tasks {
                 // run_tasks's own contract covers the serial fallback
                 run(ctx, i);
@@ -481,6 +496,11 @@ impl WorkerPool {
             Err(TryLockError::WouldBlock) => return false,
         };
         {
+            // the dispatch span covers publish + wake only; the caller's
+            // own task participation stays in the issuing operator's
+            // self-time (see the span-naming notes in `util::trace`)
+            trace::count_pool_dispatch();
+            let _sp = trace::span(trace::Op::PoolDispatch);
             let ws = self.workers_guard(helpers);
             let helpers = helpers.min(ws.len());
             // Publish the job: every participant is parked (the previous
@@ -564,6 +584,8 @@ unsafe fn run_tasks_any(threads: usize, tasks: usize, run: TaskFn, ctx: *const (
                 return;
             }
         }
+        // every lane busy: wanted parallelism but ran serially
+        trace::count_pool_inline();
     }
     for i in 0..tasks {
         // run_tasks_any's own contract covers the serial fallback

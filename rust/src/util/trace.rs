@@ -1,0 +1,670 @@
+//! Zero-alloc operator tracing: spans, counters, chrome-trace export.
+//!
+//! An in-process tracing subsystem sized for the training hot path:
+//!
+//! * **Branch-cheap when disabled** — [`span`] costs one relaxed atomic
+//!   load and a branch; no clock read, no TLS touch.
+//! * **Allocation-free in steady state when enabled** — every thread
+//!   that records a span registers once (allocating its fixed-capacity
+//!   ring buffer and counter block during warmup); after that, span
+//!   begin/end writes land in preallocated thread-local storage and the
+//!   ring wraps by overwriting.  `tests/zero_alloc.rs` audits the
+//!   steady-state training step with tracing **enabled**.
+//!
+//! ## Span-naming convention
+//!
+//! Operators register under dotted lowercase names, `family.op[.phase]`:
+//!
+//! | family   | ops                                                      |
+//! |----------|----------------------------------------------------------|
+//! | `pack`   | `pack.batch` — packer batch assembly                     |
+//! | `gemm`   | `gemm.in_proj`, `gemm.x_proj`, `gemm.dt_proj`, `gemm.out_proj`, `gemm.head`, `gemm.bwd` |
+//! | `conv1d` | `conv1d.fwd`, `conv1d.bwd`                               |
+//! | `scan`   | `scan.fwd`, `scan.bwd`                                   |
+//! | `norm`   | `norm.rms_fwd`, `norm.rms_bwd`                           |
+//! | `loss`   | `loss.ce`                                                |
+//! | `opt`    | `opt.adamw`                                              |
+//! | `dp`     | `dp.allreduce`                                           |
+//! | `chunk`  | `chunk.gather`                                           |
+//! | `step`   | `step.train`                                             |
+//! | `pool`   | `pool.dispatch`, `pool.busy`, `pool.park`                |
+//!
+//! New kernels add a variant to [`Op`] following the same scheme; the
+//! name is a static string so spans never format or allocate.
+//!
+//! Self-time is tracked with a fixed-depth per-thread nesting stack:
+//! `self_ns = dur_ns − Σ child dur_ns` on the recording thread.  A
+//! parallel operator's span covers the *wall* time of its fork/join
+//! region on the issuing thread; worker-side busy/park time is recorded
+//! separately per worker under the `pool.*` ops (this repo's pool has no
+//! work stealing — the analogs are the dispatch/inline-fallback
+//! counters, see [`pool_counters`]).
+//!
+//! Snapshot readers ([`aggregate`], [`threads`], [`durations_of`],
+//! [`chrome_json`]) may run concurrently with writers: cells are
+//! atomics, so reads are race-free; a cell being overwritten mid-read
+//! can yield one mixed sample, which telemetry tolerates.  Exact
+//! exports should quiesce first (end of run), as the CLI does.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::json::Json;
+
+macro_rules! ops {
+    ($($variant:ident => $name:literal),+ $(,)?) => {
+        /// A traced operator (fixed set; names are static, never formatted).
+        #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+        #[repr(u32)]
+        pub enum Op { $($variant),+ }
+
+        /// Every operator, in declaration order (`Op as usize` indexes this).
+        pub const OPS: &[Op] = &[$(Op::$variant),+];
+
+        impl Op {
+            pub fn name(self) -> &'static str {
+                match self { $(Op::$variant => $name),+ }
+            }
+        }
+    };
+}
+
+ops! {
+    Pack => "pack.batch",
+    GemmInProj => "gemm.in_proj",
+    GemmXProj => "gemm.x_proj",
+    GemmDtProj => "gemm.dt_proj",
+    GemmOutProj => "gemm.out_proj",
+    GemmHead => "gemm.head",
+    GemmBwd => "gemm.bwd",
+    Conv1dFwd => "conv1d.fwd",
+    Conv1dBwd => "conv1d.bwd",
+    ScanFwd => "scan.fwd",
+    ScanBwd => "scan.bwd",
+    RmsNormFwd => "norm.rms_fwd",
+    RmsNormBwd => "norm.rms_bwd",
+    CrossEntropy => "loss.ce",
+    AdamW => "opt.adamw",
+    Allreduce => "dp.allreduce",
+    ChunkGather => "chunk.gather",
+    TrainStep => "step.train",
+    PoolDispatch => "pool.dispatch",
+    PoolBusy => "pool.busy",
+    PoolPark => "pool.park",
+}
+
+pub const N_OPS: usize = OPS.len();
+
+/// Spans retained per thread for the chrome export / percentile window
+/// (power of two; the ring overwrites, counters stay exact).
+pub const RING_CAP: usize = 4096;
+
+/// Maximum tracked span nesting depth; deeper spans still time and count
+/// but are excluded from parent self-time accounting.
+const MAX_DEPTH: usize = 64;
+
+// ---------------------------------------------------------------------------
+// global state
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: Mutex<Vec<Arc<ThreadTrace>>> = Mutex::new(Vec::new());
+
+// pool behavior counters (the pool has no steal queue: the inline
+// fallback — a dispatch that ran serially on the caller — is the analog)
+static POOL_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+static POOL_INLINE: AtomicU64 = AtomicU64::new(0);
+static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
+
+// padding accounting (real vs device-slot tokens seen by traced steps)
+static REAL_TOKENS: AtomicU64 = AtomicU64::new(0);
+static SLOT_TOKENS: AtomicU64 = AtomicU64::new(0);
+
+/// Whether tracing is on (one relaxed load — the disabled fast path).
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off.  Enabling also pins the process trace epoch so
+/// the first span doesn't pay the `OnceLock` init.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = now_ns();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Enable tracing when `PACKMAMBA_TRACE` is set to anything but `0`
+/// (the `--trace <path>` CLI flag additionally exports at exit).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("PACKMAMBA_TRACE") {
+        if !v.is_empty() && v != "0" {
+            set_enabled(true);
+        }
+    }
+}
+
+/// Nanoseconds since the process trace epoch.
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------------
+// per-thread storage
+// ---------------------------------------------------------------------------
+
+struct SpanCell {
+    op: AtomicU32,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+/// One thread's preallocated trace block, shared with snapshot readers
+/// through the registry.
+struct ThreadTrace {
+    tid: u32,
+    name: String,
+    /// monotone span count; `head % RING_CAP` is the next write slot
+    head: AtomicU64,
+    ring: Box<[SpanCell]>,
+    calls: [AtomicU64; N_OPS],
+    total_ns: [AtomicU64; N_OPS],
+    self_ns: [AtomicU64; N_OPS],
+}
+
+impl ThreadTrace {
+    fn record(&self, op: Op, start_ns: u64, dur_ns: u64, self_ns: u64) {
+        let h = self.head.load(Ordering::Relaxed);
+        let cell = &self.ring[h as usize & (RING_CAP - 1)];
+        cell.op.store(op as u32, Ordering::Relaxed);
+        cell.start_ns.store(start_ns, Ordering::Relaxed);
+        cell.dur_ns.store(dur_ns, Ordering::Relaxed);
+        self.head.store(h + 1, Ordering::Release);
+        let oi = op as usize;
+        self.calls[oi].fetch_add(1, Ordering::Relaxed);
+        self.total_ns[oi].fetch_add(dur_ns, Ordering::Relaxed);
+        self.self_ns[oi].fetch_add(self_ns, Ordering::Relaxed);
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Frame {
+    child_ns: u64,
+}
+
+struct LocalState {
+    shared: Arc<ThreadTrace>,
+    depth: usize,
+    stack: [Frame; MAX_DEPTH],
+}
+
+impl LocalState {
+    /// One-time per-thread registration: the only allocating path in the
+    /// subsystem (ring + counters + name), paid on a thread's first span
+    /// — i.e. during warmup for the audited steady state.
+    fn register() -> LocalState {
+        let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        let tid = reg.len() as u32;
+        let name = std::thread::current()
+            .name()
+            .unwrap_or("unnamed")
+            .to_string();
+        let ring: Box<[SpanCell]> = (0..RING_CAP)
+            .map(|_| SpanCell {
+                op: AtomicU32::new(0),
+                start_ns: AtomicU64::new(0),
+                dur_ns: AtomicU64::new(0),
+            })
+            .collect();
+        let shared = Arc::new(ThreadTrace {
+            tid,
+            name,
+            head: AtomicU64::new(0),
+            ring,
+            calls: std::array::from_fn(|_| AtomicU64::new(0)),
+            total_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            self_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+        });
+        reg.push(Arc::clone(&shared));
+        LocalState {
+            shared,
+            depth: 0,
+            stack: [Frame { child_ns: 0 }; MAX_DEPTH],
+        }
+    }
+
+    /// Returns whether a nesting frame was pushed (depth not exhausted).
+    fn push_frame(&mut self) -> bool {
+        if self.depth < MAX_DEPTH {
+            self.stack[self.depth] = Frame { child_ns: 0 };
+            self.depth += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Pop the top frame for a span of `dur_ns`; returns the span's
+    /// self-time and charges `dur_ns` to the parent's child total.
+    fn pop_frame(&mut self, dur_ns: u64) -> u64 {
+        debug_assert!(self.depth > 0);
+        self.depth -= 1;
+        let child = self.stack[self.depth].child_ns;
+        if self.depth > 0 {
+            self.stack[self.depth - 1].child_ns += dur_ns;
+        }
+        dur_ns.saturating_sub(child)
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalState>> = const { RefCell::new(None) };
+}
+
+fn with_local<R>(f: impl FnOnce(&mut LocalState) -> R) -> R {
+    LOCAL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let local = slot.get_or_insert_with(LocalState::register);
+        f(local)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+/// RAII span guard: created by [`span`], records on drop.
+pub struct Span {
+    op: Op,
+    start_ns: Option<u64>,
+    pushed: bool,
+}
+
+/// Open a span for `op`.  Disabled tracing returns an inert guard
+/// without reading the clock or touching TLS.
+#[inline]
+#[must_use = "a span records when dropped; binding it to `_` drops immediately"]
+pub fn span(op: Op) -> Span {
+    if !enabled() {
+        return Span {
+            op,
+            start_ns: None,
+            pushed: false,
+        };
+    }
+    let start = now_ns();
+    let pushed = with_local(|l| l.push_frame());
+    Span {
+        op,
+        start_ns: Some(start),
+        pushed,
+    }
+}
+
+/// Run `f` under a span for `op` (call-site sugar for [`span`]).
+#[inline]
+pub fn with<R>(op: Op, f: impl FnOnce() -> R) -> R {
+    let _s = span(op);
+    f()
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start_ns {
+            let dur = now_ns().saturating_sub(start);
+            let pushed = self.pushed;
+            let op = self.op;
+            with_local(|l| {
+                let self_ns = if pushed { l.pop_frame(dur) } else { dur };
+                l.shared.record(op, start, dur, self_ns);
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// counters (pool + token accounting)
+// ---------------------------------------------------------------------------
+
+/// Note one worker-pool parallel dispatch (tracing-gated).
+#[inline]
+pub fn count_pool_dispatch() {
+    if enabled() {
+        POOL_DISPATCHES.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Note a dispatch that fell back to inline-serial execution on the
+/// caller (nested parallelism or all lanes busy).
+#[inline]
+pub fn count_pool_inline() {
+    if enabled() {
+        POOL_INLINE.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Note `n` pool tasks claimed and run.
+#[inline]
+pub fn count_pool_tasks(n: u64) {
+    if enabled() {
+        POOL_TASKS.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Account one batch's real (non-padding) vs device-slot tokens.
+#[inline]
+pub fn count_tokens(real: u64, slots: u64) {
+    if enabled() {
+        REAL_TOKENS.fetch_add(real, Ordering::Relaxed);
+        SLOT_TOKENS.fetch_add(slots, Ordering::Relaxed);
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolCounters {
+    pub dispatches: u64,
+    pub inline_fallbacks: u64,
+    pub tasks: u64,
+}
+
+pub fn pool_counters() -> PoolCounters {
+    PoolCounters {
+        dispatches: POOL_DISPATCHES.load(Ordering::Relaxed),
+        inline_fallbacks: POOL_INLINE.load(Ordering::Relaxed),
+        tasks: POOL_TASKS.load(Ordering::Relaxed),
+    }
+}
+
+/// `(real_tokens, slot_tokens)` accounted since the last [`reset`].
+pub fn token_counters() -> (u64, u64) {
+    (
+        REAL_TOKENS.load(Ordering::Relaxed),
+        SLOT_TOKENS.load(Ordering::Relaxed),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// snapshots
+// ---------------------------------------------------------------------------
+
+/// Per-operator totals summed across threads.
+#[derive(Clone, Copy, Debug)]
+pub struct OpAgg {
+    pub op: Op,
+    pub calls: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+}
+
+/// Sum calls / total-time / self-time per operator across every
+/// registered thread (reporting path; allocates the result).
+pub fn aggregate() -> Vec<OpAgg> {
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    OPS.iter()
+        .map(|&op| {
+            let oi = op as usize;
+            let mut agg = OpAgg {
+                op,
+                calls: 0,
+                total_ns: 0,
+                self_ns: 0,
+            };
+            for t in reg.iter() {
+                agg.calls += t.calls[oi].load(Ordering::Relaxed);
+                agg.total_ns += t.total_ns[oi].load(Ordering::Relaxed);
+                agg.self_ns += t.self_ns[oi].load(Ordering::Relaxed);
+            }
+            agg
+        })
+        .collect()
+}
+
+/// One registered thread's identity and pool-relevant time split.
+#[derive(Clone, Debug)]
+pub struct ThreadAgg {
+    pub tid: u32,
+    pub name: String,
+    pub spans: u64,
+    pub busy_ns: u64,
+    pub park_ns: u64,
+}
+
+/// Per-thread busy/park totals (pool workers are named `pm-pool-*`).
+pub fn threads() -> Vec<ThreadAgg> {
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter()
+        .map(|t| ThreadAgg {
+            tid: t.tid,
+            name: t.name.clone(),
+            spans: t.head.load(Ordering::Acquire),
+            busy_ns: t.total_ns[Op::PoolBusy as usize].load(Ordering::Relaxed),
+            park_ns: t.total_ns[Op::PoolPark as usize].load(Ordering::Relaxed),
+        })
+        .collect()
+}
+
+/// Recent span durations (seconds) for `op` from every thread's ring —
+/// a bounded window (≤ [`RING_CAP`] per thread) for percentiles.
+pub fn durations_of(op: Op) -> Vec<f64> {
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = Vec::new();
+    for t in reg.iter() {
+        let valid = (t.head.load(Ordering::Acquire) as usize).min(RING_CAP);
+        for cell in &t.ring[..valid] {
+            if cell.op.load(Ordering::Relaxed) == op as u32 {
+                out.push(cell.dur_ns.load(Ordering::Relaxed) as f64 * 1e-9);
+            }
+        }
+    }
+    out
+}
+
+/// Zero every ring, counter, and global tally (threads stay registered,
+/// so no steady-state reallocation follows).  Callers should quiesce
+/// traced work first; benches use this between phases.
+pub fn reset() {
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    for t in reg.iter() {
+        t.head.store(0, Ordering::Release);
+        for i in 0..N_OPS {
+            t.calls[i].store(0, Ordering::Relaxed);
+            t.total_ns[i].store(0, Ordering::Relaxed);
+            t.self_ns[i].store(0, Ordering::Relaxed);
+        }
+    }
+    POOL_DISPATCHES.store(0, Ordering::Relaxed);
+    POOL_INLINE.store(0, Ordering::Relaxed);
+    POOL_TASKS.store(0, Ordering::Relaxed);
+    REAL_TOKENS.store(0, Ordering::Relaxed);
+    SLOT_TOKENS.store(0, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// chrome-trace export
+// ---------------------------------------------------------------------------
+
+/// The retained spans as a chrome://tracing-compatible JSON value:
+/// `{"traceEvents": [...]}` with one `M` (thread-name) event per thread
+/// and one `X` (complete) event per retained span, ts/dur in µs.
+pub fn chrome_json() -> Json {
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let mut events: Vec<(f64, Json)> = Vec::new();
+    for t in reg.iter() {
+        events.push((
+            -1.0,
+            Json::from_pairs([
+                ("name", Json::from("thread_name")),
+                ("ph", Json::from("M")),
+                ("pid", Json::from(0usize)),
+                ("tid", Json::from(t.tid as usize)),
+                (
+                    "args",
+                    Json::from_pairs([("name", Json::from(t.name.clone()))]),
+                ),
+            ]),
+        ));
+        let valid = (t.head.load(Ordering::Acquire) as usize).min(RING_CAP);
+        for cell in &t.ring[..valid] {
+            let oi = cell.op.load(Ordering::Relaxed) as usize;
+            let op = OPS[oi.min(N_OPS - 1)];
+            let ts = cell.start_ns.load(Ordering::Relaxed) as f64 / 1e3;
+            let dur = cell.dur_ns.load(Ordering::Relaxed) as f64 / 1e3;
+            events.push((
+                ts,
+                Json::from_pairs([
+                    ("name", Json::from(op.name())),
+                    ("ph", Json::from("X")),
+                    ("pid", Json::from(0usize)),
+                    ("tid", Json::from(t.tid as usize)),
+                    ("ts", Json::from(ts)),
+                    ("dur", Json::from(dur)),
+                ]),
+            ));
+        }
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    Json::from_pairs([
+        ("traceEvents", Json::Arr(events.into_iter().map(|(_, e)| e).collect())),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+/// Write [`chrome_json`] to `path` (open chrome://tracing or Perfetto
+/// and load the file).
+pub fn export_chrome(path: &std::path::Path) -> anyhow::Result<()> {
+    std::fs::write(path, chrome_json().dump())
+        .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // trace state is process-global; serialize the tests that toggle it
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn busy_wait_ns(ns: u64) {
+        let t0 = Instant::now();
+        while (t0.elapsed().as_nanos() as u64) < ns {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        let before: u64 = aggregate().iter().map(|a| a.calls).sum();
+        {
+            let _s = span(Op::ScanFwd);
+            busy_wait_ns(1_000);
+        }
+        let after: u64 = aggregate().iter().map(|a| a.calls).sum();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn spans_count_and_nest_self_time() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        {
+            let _outer = span(Op::TrainStep);
+            busy_wait_ns(200_000);
+            {
+                let _inner = span(Op::ScanFwd);
+                busy_wait_ns(200_000);
+            }
+        }
+        set_enabled(false);
+        let agg = aggregate();
+        let outer = agg[Op::TrainStep as usize];
+        let inner = agg[Op::ScanFwd as usize];
+        assert_eq!(outer.calls, 1);
+        assert_eq!(inner.calls, 1);
+        assert!(outer.total_ns >= inner.total_ns);
+        // the outer span's self-time excludes the nested span
+        assert!(
+            outer.self_ns <= outer.total_ns - inner.total_ns,
+            "self {} total {} child {}",
+            outer.self_ns,
+            outer.total_ns,
+            inner.total_ns
+        );
+        assert_eq!(inner.self_ns, inner.total_ns);
+        assert!(!durations_of(Op::ScanFwd).is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_without_losing_counters() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        for _ in 0..RING_CAP + 17 {
+            let _s = span(Op::Pack);
+        }
+        set_enabled(false);
+        let agg = aggregate();
+        assert_eq!(agg[Op::Pack as usize].calls, (RING_CAP + 17) as u64);
+        // ring retains at most RING_CAP samples
+        assert!(durations_of(Op::Pack).len() <= RING_CAP);
+    }
+
+    #[test]
+    fn chrome_json_round_trips() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        with(Op::Conv1dFwd, || busy_wait_ns(1_000));
+        set_enabled(false);
+        let j = chrome_json();
+        let text = j.dump();
+        let re = Json::parse(&text).expect("chrome trace parses");
+        let events = re.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("conv1d.fwd")));
+        // every X event carries the chrome-required fields
+        for e in events {
+            if e.get("ph").and_then(Json::as_str) == Some("X") {
+                assert!(e.get("ts").unwrap().as_f64().is_some());
+                assert!(e.get("dur").unwrap().as_f64().is_some());
+                assert!(e.get("tid").unwrap().as_usize().is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn op_names_follow_convention() {
+        for op in OPS {
+            let name = op.name();
+            assert!(name.contains('.') || *op == Op::Pack || name == "pack.batch");
+            assert_eq!(name, name.to_ascii_lowercase());
+        }
+    }
+
+    #[test]
+    fn counters_gated_on_enabled() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        let before = pool_counters().dispatches;
+        count_pool_dispatch();
+        assert_eq!(pool_counters().dispatches, before);
+        set_enabled(true);
+        reset();
+        count_pool_dispatch();
+        count_pool_inline();
+        count_pool_tasks(3);
+        count_tokens(10, 16);
+        set_enabled(false);
+        let pc = pool_counters();
+        assert_eq!((pc.dispatches, pc.inline_fallbacks, pc.tasks), (1, 1, 3));
+        assert_eq!(token_counters(), (10, 16));
+    }
+}

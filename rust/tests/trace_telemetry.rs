@@ -1,0 +1,146 @@
+//! End-to-end check of the tracing/telemetry surfaces: real native
+//! training steps run under tracing, the chrome-trace export parses and
+//! covers the expected operator set, and the telemetry snapshot
+//! round-trips through JSON.
+//!
+//! Trace state is process-global, so everything lives in ONE test
+//! function — test threads toggling `set_enabled` concurrently would
+//! race each other's measurements.
+
+use packmamba::backend::{Backend, NativeBackend};
+use packmamba::config::ModelConfig;
+use packmamba::coordinator::TelemetrySnapshot;
+use packmamba::packing::{PackedBatch, PackedRow, Sequence};
+use packmamba::util::json::Json;
+use packmamba::util::trace;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "trace-test-64".to_string(),
+        vocab_size: 512,
+        d_model: 64,
+        n_layers: 2,
+        d_state: 16,
+        d_conv: 4,
+        expand: 2,
+    }
+}
+
+fn tiny_batch(cfg: &ModelConfig, pack_len: usize) -> PackedBatch {
+    let half = pack_len / 2;
+    let seq = |id: u64| Sequence {
+        tokens: (0..half)
+            .map(|k| 1 + ((id as usize * 131 + k * 17) % (cfg.vocab_size - 1)) as i32)
+            .collect(),
+        id,
+    };
+    PackedBatch::from_rows(
+        &[PackedRow {
+            sequences: vec![seq(0), seq(1)],
+        }],
+        pack_len,
+    )
+}
+
+/// Spans the `--trace` chrome export must cover after a train step.
+const REQUIRED_OPS: &[&str] = &[
+    "step.train",
+    "gemm.in_proj",
+    "gemm.x_proj",
+    "gemm.dt_proj",
+    "gemm.out_proj",
+    "gemm.head",
+    "gemm.bwd",
+    "conv1d.fwd",
+    "conv1d.bwd",
+    "scan.fwd",
+    "scan.bwd",
+    "norm.rms_fwd",
+    "norm.rms_bwd",
+    "loss.ce",
+    "opt.adamw",
+];
+
+#[test]
+fn traced_train_steps_export_chrome_json_and_telemetry() {
+    trace::set_enabled(true);
+    trace::reset();
+
+    let cfg = tiny_cfg();
+    let batch = tiny_batch(&cfg, 256);
+    let be = NativeBackend::with_threads(2);
+    let mut state = be.init_state(&cfg, 11).expect("init state");
+    let mut last_loss = f32::NAN;
+    for _ in 0..2 {
+        last_loss = be.train_step(&cfg, &mut state, &batch).expect("train step");
+    }
+    assert!(last_loss.is_finite(), "loss diverged under tracing");
+
+    // --- telemetry snapshot: coverage + JSON round-trip ---
+    let snap = TelemetrySnapshot::capture();
+    let names: Vec<&str> = snap.ops.iter().map(|o| o.name).collect();
+    for want in REQUIRED_OPS {
+        assert!(names.contains(want), "telemetry missing operator {want}");
+    }
+    assert!(snap.real_tokens > 0, "token counters never accumulated");
+    assert!(
+        snap.real_tokens <= snap.slot_tokens,
+        "real tokens {} exceed device slots {}",
+        snap.real_tokens,
+        snap.slot_tokens
+    );
+    let step = snap
+        .ops
+        .iter()
+        .find(|o| o.name == "step.train")
+        .expect("step.train aggregated");
+    assert_eq!(step.calls, 2, "one span per train step");
+    let round = Json::parse(&snap.to_json().dump()).expect("telemetry JSON parses");
+    assert_eq!(
+        round.get("ops").unwrap().as_arr().unwrap().len(),
+        snap.ops.len()
+    );
+    assert!(round.get("pool").unwrap().get("dispatches").is_some());
+    let table = snap.format_table();
+    assert!(table.contains("step.train") && table.contains("loss.ce"));
+
+    // --- chrome export: what `--trace <path>` writes must parse and
+    // cover the operator set ---
+    let path =
+        std::env::temp_dir().join(format!("packmamba_trace_{}.json", std::process::id()));
+    trace::export_chrome(&path).expect("export chrome trace");
+    let doc = Json::parse_file(&path).expect("chrome trace parses");
+    std::fs::remove_file(&path).ok();
+
+    let events = doc
+        .get("traceEvents")
+        .expect("traceEvents key")
+        .as_arr()
+        .expect("traceEvents is an array");
+    assert!(!events.is_empty(), "trace exported no events");
+    let mut span_names = Vec::new();
+    let mut saw_thread_meta = false;
+    for ev in events {
+        match ev.get("ph").and_then(|p| p.as_str()) {
+            Some("X") => {
+                let name = ev.get("name").and_then(|n| n.as_str()).expect("X name");
+                let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("X ts");
+                let dur = ev.get("dur").and_then(|d| d.as_f64()).expect("X dur");
+                assert!(ts >= 0.0 && dur >= 0.0, "{name}: ts={ts} dur={dur}");
+                span_names.push(name);
+            }
+            Some("M") => saw_thread_meta = true,
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert!(saw_thread_meta, "no thread_name metadata events");
+    for want in REQUIRED_OPS {
+        assert!(
+            span_names.contains(want),
+            "chrome trace missing operator {want} (got {} spans)",
+            span_names.len()
+        );
+    }
+
+    trace::set_enabled(false);
+}

@@ -17,6 +17,7 @@ use packmamba::backend::{Backend, NativeBackend};
 use packmamba::config::ModelConfig;
 use packmamba::packing::{PackedBatch, PackedRow, Sequence};
 use packmamba::util::threadpool::spawn_count;
+use packmamba::util::trace;
 
 struct CountingAlloc;
 
@@ -129,6 +130,11 @@ fn batch(cfg: &ModelConfig, pack_len: usize) -> PackedBatch {
 
 #[test]
 fn steady_state_train_step_is_allocation_free() {
+    // Tracing stays ON for the entire audit: every thread's span ring and
+    // counter block registers on its first span — i.e. during warmup —
+    // after which span recording must itself be allocation-free.
+    trace::set_enabled(true);
+
     let cfg = micro();
     let be = NativeBackend::with_threads(1);
     let b = batch(&cfg, 64);
@@ -309,4 +315,10 @@ fn steady_state_train_step_is_allocation_free() {
         "threads=4 diverged from threads=1 under the pool"
     );
     assert!(losses_mt.iter().all(|l| l.is_finite()));
+
+    // the audit above only proves tracing didn't allocate if it actually
+    // recorded spans — make sure the instrumentation fired
+    let recorded: u64 = trace::aggregate().iter().map(|a| a.calls).sum();
+    assert!(recorded > 0, "audit ran without recording any trace spans");
+    trace::set_enabled(false);
 }

@@ -72,6 +72,7 @@ impl<'a> Metadata<'a> {
 /// One log message.
 pub struct Record<'a> {
     metadata: Metadata<'a>,
+    module_path: Option<&'a str>,
     args: fmt::Arguments<'a>,
 }
 
@@ -86,6 +87,12 @@ impl<'a> Record<'a> {
 
     pub fn target(&self) -> &'a str {
         self.metadata.target
+    }
+
+    /// Module that emitted the record (the macros always populate this
+    /// from `module_path!()`; hand-built records may leave it out).
+    pub fn module_path(&self) -> Option<&'a str> {
+        self.module_path
     }
 
     pub fn args(&self) -> &fmt::Arguments<'a> {
@@ -134,13 +141,19 @@ pub fn max_level() -> LevelFilter {
 
 /// Macro plumbing — not part of the public API.
 #[doc(hidden)]
-pub fn __private_log<'a>(level: Level, target: &'a str, args: fmt::Arguments<'a>) {
+pub fn __private_log<'a>(
+    level: Level,
+    target: &'a str,
+    module_path: Option<&'a str>,
+    args: fmt::Arguments<'a>,
+) {
     if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
         return;
     }
     if let Some(logger) = LOGGER.get() {
         let record = Record {
             metadata: Metadata { level, target },
+            module_path,
             args,
         };
         if logger.enabled(record.metadata()) {
@@ -152,7 +165,12 @@ pub fn __private_log<'a>(level: Level, target: &'a str, args: fmt::Arguments<'a>
 #[macro_export]
 macro_rules! log {
     ($lvl:expr, $($arg:tt)+) => {
-        $crate::__private_log($lvl, module_path!(), format_args!($($arg)+))
+        $crate::__private_log(
+            $lvl,
+            module_path!(),
+            Some(module_path!()),
+            format_args!($($arg)+),
+        )
     };
 }
 
@@ -196,6 +214,8 @@ mod tests {
         }
 
         fn log(&self, record: &Record) {
+            // the macros pass module_path!() for both target and module path
+            assert_eq!(record.module_path(), Some(record.target()));
             let _ = format!("{} {}", record.target(), record.args());
             HITS.fetch_add(1, Ordering::SeqCst);
         }
