@@ -67,6 +67,21 @@ impl TrainState {
     }
 }
 
+/// Owned copy of a backend's persisted per-stream chunk carry (§5):
+/// per-layer SSM state lanes `(lanes, d_inner, d_state)` and conv tails
+/// `(lanes, d_inner, d_conv - 1)`, lane-major.  Part of the full resume
+/// state — a chunked run restarted without it silently recomputes from
+/// zeroed carries and diverges from the uninterrupted run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CarryState {
+    /// carry lanes (= streams of the batches this backend has stepped)
+    pub lanes: usize,
+    /// per-layer SSM state, `lanes * d_inner * d_state` each
+    pub h: Vec<Vec<f32>>,
+    /// per-layer conv tails, `lanes * d_inner * (d_conv - 1)` each
+    pub tail: Vec<Vec<f32>>,
+}
+
 /// Batch geometry a backend can execute for a given config + scheme.
 ///
 /// The native backend echoes the packing config (any geometry runs); the
@@ -204,6 +219,24 @@ pub trait Backend {
 
     /// Cumulative per-op timing, sorted by name.
     fn stats(&self) -> Vec<(String, ExecStats)>;
+
+    /// Owned copy of the persisted chunk carry for checkpointing
+    /// (`None` when no chunked step has run or the carry was reset).
+    /// Backends without chunked support have nothing to export.
+    fn export_chunk_carry(&self, model: &ModelConfig) -> Option<CarryState> {
+        let _ = model;
+        None
+    }
+
+    /// Restore a carry exported by [`Backend::export_chunk_carry`]; the
+    /// next chunked step continues from it bit-exactly.
+    fn import_chunk_carry(&self, model: &ModelConfig, carry: &CarryState) -> Result<()> {
+        let _ = (model, carry);
+        anyhow::bail!(
+            "backend `{}` does not support chunk-carry restore",
+            self.kind().name()
+        )
+    }
 }
 
 /// Construct the backend selected by `cfg.backend`.
@@ -213,7 +246,11 @@ pub trait Backend {
 /// the one-process-per-device layout of the paper's 8-GPU setup.
 pub fn create(cfg: &TrainConfig) -> Result<Box<dyn Backend>> {
     match cfg.backend {
-        BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+        BackendKind::Native => {
+            let be = NativeBackend::new();
+            be.set_max_bad_steps(cfg.max_bad_steps);
+            Ok(Box::new(be))
+        }
         BackendKind::Pjrt => create_pjrt(cfg),
     }
 }

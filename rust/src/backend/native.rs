@@ -21,7 +21,7 @@
 //! allocations and zero thread spawns** after the first (warmup) step —
 //! single- *and* multi-threaded; see `tests/zero_alloc.rs`.
 
-use std::cell::{Ref, RefCell};
+use std::cell::{Cell, Ref, RefCell};
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -29,11 +29,19 @@ use crate::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
 use crate::packing::PackedBatch;
 use crate::runtime::{ExecStats, ParamSpec};
 use crate::tensor::Tensor;
+use crate::util::failpoint;
 use crate::util::trace::{self, Op};
 use crate::Result;
 
 use super::adamw::{self, AdamWConfig};
-use super::{model, native_buckets, ops, params, Backend, BatchGeometry, TrainState};
+use super::{
+    model, native_buckets, ops, params, Backend, BatchGeometry, CarryState, TrainState,
+};
+
+/// Default ceiling on consecutive non-finite steps before the guard
+/// aborts (overridden from `TrainConfig::max_bad_steps` by
+/// `backend::create`).
+pub const DEFAULT_MAX_BAD_STEPS: usize = 3;
 
 pub struct NativeBackend {
     threads: usize,
@@ -56,6 +64,11 @@ pub struct NativeBackend {
     /// streams) resets it to zeros instead of reusing stale lanes; reset
     /// explicitly with [`NativeBackend::reset_chunk_carry`].
     chunk_carry: RefCell<Option<model::ChunkState>>,
+    /// Consecutive steps whose update the non-finite guard skipped; a
+    /// clean step resets it, reaching `max_bad_steps` aborts the run.
+    bad_steps: Cell<usize>,
+    /// Abort threshold for `bad_steps` (config: `max_bad_steps`).
+    max_bad_steps: Cell<usize>,
 }
 
 impl NativeBackend {
@@ -101,11 +114,19 @@ impl NativeBackend {
             grad_bufs: RefCell::new(Vec::new()),
             specs_cache: RefCell::new(None),
             chunk_carry: RefCell::new(None),
+            bad_steps: Cell::new(0),
+            max_bad_steps: Cell::new(DEFAULT_MAX_BAD_STEPS),
         }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Set the consecutive non-finite-step abort threshold (see
+    /// `TrainConfig::max_bad_steps`; clamped to >= 1).
+    pub fn set_max_bad_steps(&self, k: usize) {
+        self.max_bad_steps.set(k.max(1));
     }
 
     /// Drop the persisted cross-batch chunk carry (e.g. between
@@ -218,6 +239,50 @@ impl NativeBackend {
         }
         Ok(streams)
     }
+
+    /// Deterministic `grads.inject` failpoint: poisons the first
+    /// gradient element with NaN when armed for `step`, exercising the
+    /// guard path end to end. One relaxed load when disarmed.
+    fn maybe_inject_nan(&self, step: usize) {
+        if failpoint::enabled()
+            && failpoint::check("grads.inject", step as u64, 0) == Some(failpoint::Action::Nan)
+        {
+            if let Some(g) = self.grad_bufs.borrow_mut().first_mut().and_then(|g| g.first_mut()) {
+                *g = f32::NAN;
+            }
+        }
+    }
+
+    /// Non-finite guard for the fused step paths, run **before** AdamW
+    /// touches params or moments.  Returns `Ok(true)` when the update
+    /// should apply; `Ok(false)` skips it (the step counter still
+    /// advances, keeping step accounting deterministic); errors after
+    /// `max_bad_steps` *consecutive* bad steps.  Scans existing slices
+    /// only — no allocation on either path.
+    fn guard_step(&self, loss: f32, grads: &[Vec<f32>], step: usize) -> Result<bool> {
+        let _sp = trace::span(Op::GuardScan);
+        let finite =
+            loss.is_finite() && grads.iter().all(|g| g.iter().all(|x| x.is_finite()));
+        if finite {
+            self.bad_steps.set(0);
+            return Ok(true);
+        }
+        trace::count_nonfinite_skip();
+        let bad = self.bad_steps.get() + 1;
+        self.bad_steps.set(bad);
+        let max = self.max_bad_steps.get();
+        anyhow::ensure!(
+            bad < max,
+            "aborting after {bad} consecutive non-finite steps \
+             (step {step}, loss {loss}); params are unmodified since the \
+             last finite step"
+        );
+        log::warn!(
+            "non-finite loss/grads at step {step} (loss {loss}): \
+             skipping optimizer update ({bad}/{max} consecutive)"
+        );
+        Ok(false)
+    }
 }
 
 impl Default for NativeBackend {
@@ -300,14 +365,17 @@ impl Backend for NativeBackend {
             )
         };
         let t1 = Instant::now();
-        let grads = self.grad_bufs.borrow();
-        adamw::apply_slices(&self.opt, specs.as_slice(), state, grads.as_slice())?;
-        drop(grads);
+        self.maybe_inject_nan(state.step);
+        {
+            let grads = self.grad_bufs.borrow();
+            if self.guard_step(loss, grads.as_slice(), state.step)? {
+                adamw::apply_slices(&self.opt, specs.as_slice(), state, grads.as_slice())?;
+            }
+        }
         state.step += 1;
         let t2 = Instant::now();
         self.note("train_step.fwd_bwd", (t1 - t0).as_secs_f64());
         self.note("train_step.adamw", (t2 - t1).as_secs_f64());
-        anyhow::ensure!(loss.is_finite(), "non-finite loss at step {}", state.step);
         Ok(loss)
     }
 
@@ -402,14 +470,17 @@ impl Backend for NativeBackend {
             )
         };
         let t1 = Instant::now();
-        let grads = self.grad_bufs.borrow();
-        adamw::apply_slices(&self.opt, specs.as_slice(), state, grads.as_slice())?;
-        drop(grads);
+        self.maybe_inject_nan(state.step);
+        {
+            let grads = self.grad_bufs.borrow();
+            if self.guard_step(loss, grads.as_slice(), state.step)? {
+                adamw::apply_slices(&self.opt, specs.as_slice(), state, grads.as_slice())?;
+            }
+        }
         state.step += 1;
         let t2 = Instant::now();
         self.note("train_step_chunked.fwd_bwd", (t1 - t0).as_secs_f64());
         self.note("train_step_chunked.adamw", (t2 - t1).as_secs_f64());
-        anyhow::ensure!(loss.is_finite(), "non-finite loss at step {}", state.step);
         Ok(loss)
     }
 
@@ -454,7 +525,8 @@ impl Backend for NativeBackend {
             )
         };
         self.note("grads_chunked", t0.elapsed().as_secs_f64());
-        anyhow::ensure!(loss.is_finite(), "non-finite loss in chunked grads pass");
+        // no finite check here: in data-parallel training the *leader*
+        // guards the reduced loss/grads and directs a coordinated skip
         let tensors = specs
             .iter()
             .zip(grads)
@@ -495,7 +567,8 @@ impl Backend for NativeBackend {
             &mut grads,
         );
         self.note("grads", t0.elapsed().as_secs_f64());
-        anyhow::ensure!(loss.is_finite(), "non-finite loss in grads pass");
+        // no finite check here: in data-parallel training the *leader*
+        // guards the reduced loss/grads and directs a coordinated skip
         let tensors = specs
             .iter()
             .zip(grads)
@@ -514,6 +587,53 @@ impl Backend for NativeBackend {
         adamw::apply(&self.opt, self.cached_specs(model).as_slice(), state, grads)?;
         state.step += 1;
         self.note("adam_apply", t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    fn export_chunk_carry(&self, model: &ModelConfig) -> Option<CarryState> {
+        let carry = self.chunk_carry.borrow();
+        let c = carry.as_ref()?;
+        let per_lane = model.d_inner() * model.d_state;
+        let h0 = c.h.first()?;
+        if per_lane == 0 || h0.len() % per_lane != 0 {
+            return None; // carry does not match this model's shape
+        }
+        let lanes = h0.len() / per_lane;
+        if !c.fits(model, lanes) {
+            return None;
+        }
+        Some(CarryState {
+            lanes,
+            h: c.h.clone(),
+            tail: c.tail.clone(),
+        })
+    }
+
+    fn import_chunk_carry(&self, model: &ModelConfig, carry: &CarryState) -> Result<()> {
+        let (di, n, wl) = (model.d_inner(), model.d_state, model.d_conv);
+        anyhow::ensure!(
+            carry.lanes > 0
+                && carry.h.len() == model.n_layers
+                && carry.tail.len() == model.n_layers
+                && carry.h.iter().all(|v| v.len() == carry.lanes * di * n)
+                && carry.tail.iter().all(|v| v.len() == carry.lanes * di * (wl - 1)),
+            "chunk carry shape does not match model `{}` ({} lanes)",
+            model.name,
+            carry.lanes
+        );
+        let mut ws = self.ws.borrow_mut();
+        let mut slot = self.chunk_carry.borrow_mut();
+        if let Some(old) = slot.take() {
+            old.release(&mut ws.arena);
+        }
+        let mut cs = ws.take_chunk_state(model, carry.lanes, false);
+        for (dst, src) in cs.h.iter_mut().zip(&carry.h) {
+            dst.copy_from_slice(src);
+        }
+        for (dst, src) in cs.tail.iter_mut().zip(&carry.tail) {
+            dst.copy_from_slice(src);
+        }
+        *slot = Some(cs);
         Ok(())
     }
 

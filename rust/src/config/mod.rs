@@ -258,6 +258,16 @@ pub struct TrainConfig {
     pub max_len: usize,
     pub mean_len: f64,
     pub artifacts_dir: String,
+    /// periodic checkpoint cadence in steps (0 = end-of-run save only);
+    /// requires a `--save` path on the CLI
+    pub save_every: usize,
+    /// abort after this many *consecutive* non-finite (NaN/Inf) steps;
+    /// each bad step skips the optimizer update (guards in the native
+    /// step path / dp leader)
+    pub max_bad_steps: usize,
+    /// bounded retry-current-batch budget per dp step before a worker
+    /// failure is surfaced to the caller
+    pub step_retries: usize,
 }
 
 impl TrainConfig {
@@ -281,6 +291,9 @@ impl TrainConfig {
             max_len: pack_len / 2,
             mean_len: (pack_len / 2) as f64 * 0.315, // ≈ paper's 646/2048
             artifacts_dir: "artifacts".to_string(),
+            save_every: 0,
+            max_bad_steps: 3,
+            step_retries: 1,
         }
     }
 
@@ -302,6 +315,9 @@ impl TrainConfig {
             ("max_len", Json::from(self.max_len)),
             ("mean_len", Json::from(self.mean_len)),
             ("artifacts_dir", Json::from(self.artifacts_dir.clone())),
+            ("save_every", Json::from(self.save_every)),
+            ("max_bad_steps", Json::from(self.max_bad_steps)),
+            ("step_retries", Json::from(self.step_retries)),
         ])
     }
 
@@ -356,6 +372,15 @@ impl TrainConfig {
         if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
             cfg.artifacts_dir = v.to_string();
         }
+        if let Some(v) = get_u("save_every") {
+            cfg.save_every = v;
+        }
+        if let Some(v) = get_u("max_bad_steps") {
+            cfg.max_bad_steps = v;
+        }
+        if let Some(v) = get_u("step_retries") {
+            cfg.step_retries = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -402,6 +427,10 @@ impl TrainConfig {
         );
         anyhow::ensure!(self.steps > 0, "steps must be positive");
         anyhow::ensure!(self.dp_workers >= 1, "dp_workers must be >= 1");
+        anyhow::ensure!(
+            self.max_bad_steps >= 1,
+            "max_bad_steps must be >= 1 (aborts after that many consecutive non-finite steps)"
+        );
         anyhow::ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
         anyhow::ensure!(
             self.min_len <= self.max_len,

@@ -1,29 +1,398 @@
-//! Checkpointing: binary params + optimizer state with a JSON header.
+//! Checkpointing: crash-safe binary params + optimizer state + full
+//! resume state, with a JSON header.
 //!
-//! Format (version 1):
-//!   8 bytes  magic  b"PKMAMBA1"
-//!   4 bytes  little-endian u32: header length H
-//!   H bytes  JSON header {config, step, tensors: [{name, shape, role}]}
-//!   raw      f32 little-endian payload, tensors in header order
+//! Format (version 2, the writer's format):
+//!   8 bytes  magic  b"PKMAMBA2"
+//!   4 bytes  little-endian u32: header length H (capped against the
+//!            file size on load — a corrupt length cannot OOM)
+//!   H bytes  JSON header {version, config, step, tensors: [{name,
+//!            shape, role}], sections: [{name, bytes}], payload_crc32}
+//!   payload  f32 little-endian tensors in header order, then each
+//!            section's raw bytes in header order
+//!
+//! The `payload_crc32` covers every byte after the header; loads verify
+//! it and reject both truncated (torn) files and trailing garbage.
+//! Version 1 files (magic `PKMAMBA1`, no CRC, no sections) are still
+//! loadable.
+//!
+//! Durability: the writer fsyncs the temp file **before** the atomic
+//! rename and then best-effort-fsyncs the parent directory, so a crash
+//! at any instant leaves either the complete old file or the complete
+//! new file — never a torn published checkpoint.  The
+//! `ckpt.write`/`ckpt.saved` failpoints (see [`crate::util::failpoint`])
+//! kill the process mid-write / right after publish to prove it.
+//!
+//! Beyond tensors, a v2 checkpoint carries the rest of the training
+//! state that bitwise resume needs (ISSUE: a resumed run must be
+//! indistinguishable from an uninterrupted one):
+//! * `pipeline` — per-worker data-pipeline positions ([`PipelineState`]:
+//!   corpus RNG raw state + packer fragment progress + a replay count),
+//! * `carry` — per-worker persisted chunk carries
+//!   ([`crate::backend::CarryState`], §5 stateful execution).
 
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::backend::CarryState;
+use crate::backend::TrainState;
+use crate::data::CorpusState;
+use crate::packing::{GreedyPacker, StreamingPacker};
 use crate::runtime::ParamSpec;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::trace::{self, Op};
+use crate::util::{bytes, failpoint};
 use crate::Result;
 
-use crate::backend::TrainState;
+const MAGIC_V1: &[u8; 8] = b"PKMAMBA1";
+const MAGIC_V2: &[u8; 8] = b"PKMAMBA2";
 
-const MAGIC: &[u8; 8] = b"PKMAMBA1";
+/// Hard ceiling on the header-length field, independent of file size
+/// (a real header is a few KB).
+const MAX_HEADER_BYTES: u64 = 16 << 20;
 
-pub fn save(
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected) — local table-driven implementation;
+// the vendored dep set has no checksum crate.
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// Streaming CRC32 so large tensor payloads never materialize twice.
+#[derive(Clone, Copy)]
+struct Crc32(u32);
+
+impl Crc32 {
+    fn new() -> Self {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        let mut c = self.0;
+        for &b in data {
+            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.0 = c;
+    }
+
+    fn finalize(self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
+}
+
+// ---------------------------------------------------------------------------
+// resume-state section types
+// ---------------------------------------------------------------------------
+
+/// The packer half of a pipeline snapshot: the concrete packer (cloned
+/// at the snapshot boundary) or `None` for the padding/single-sequence
+/// schemes, which draw straight from the corpus.
+#[derive(Clone, Debug)]
+pub enum PackerState {
+    None,
+    Streaming(StreamingPacker),
+    Greedy(GreedyPacker),
+}
+
+/// One data pipeline's position: the corpus + packer at the last batch
+/// production boundary (`pending` queue empty) plus how many batches
+/// were consumed past it.  Resume restores the boundary state and
+/// replays `consumed` productions — cheap (packing only, no compute)
+/// and bit-exact, without serializing whole `PackedBatch`es.
+#[derive(Clone, Debug)]
+pub struct PipelineState {
+    pub corpus: CorpusState,
+    pub packer: PackerState,
+    pub consumed: u64,
+}
+
+/// A fully loaded checkpoint: tensors plus the resume-state sections
+/// (both empty for v1 files or end-of-run saves from a threaded
+/// pipeline).
+pub struct Checkpoint {
+    /// model name as written (v1 compatibility: the `config` field)
+    pub config: String,
+    pub state: TrainState,
+    /// per-worker pipeline positions (single trainer: 1 entry)
+    pub pipelines: Vec<PipelineState>,
+    /// per-worker chunk carries (empty for monolithic runs)
+    pub carries: Vec<Option<CarryState>>,
+}
+
+fn encode_pipelines(pipelines: &[PipelineState]) -> Vec<u8> {
+    let mut out = Vec::new();
+    bytes::put_u32(&mut out, pipelines.len() as u32);
+    for p in pipelines {
+        bytes::put_u128(&mut out, p.corpus.rng_state);
+        bytes::put_u128(&mut out, p.corpus.rng_inc);
+        bytes::put_u64(&mut out, p.corpus.next_id);
+        bytes::put_u64(&mut out, p.consumed);
+        match &p.packer {
+            PackerState::None => bytes::put_u8(&mut out, 0),
+            PackerState::Streaming(s) => {
+                bytes::put_u8(&mut out, 1);
+                s.encode_state(&mut out);
+            }
+            PackerState::Greedy(g) => {
+                bytes::put_u8(&mut out, 2);
+                g.encode_state(&mut out);
+            }
+        }
+    }
+    out
+}
+
+fn decode_pipelines(buf: &[u8]) -> Result<Vec<PipelineState>> {
+    let mut r = bytes::Reader::new(buf);
+    let n = r.get_u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let corpus = CorpusState {
+            rng_state: r.get_u128()?,
+            rng_inc: r.get_u128()?,
+            next_id: r.get_u64()?,
+        };
+        let consumed = r.get_u64()?;
+        let packer = match r.get_u8()? {
+            0 => PackerState::None,
+            1 => PackerState::Streaming(StreamingPacker::decode_state(&mut r)?),
+            2 => PackerState::Greedy(GreedyPacker::decode_state(&mut r)?),
+            t => anyhow::bail!("unknown packer tag {t} in pipeline section"),
+        };
+        out.push(PipelineState { corpus, packer, consumed });
+    }
+    anyhow::ensure!(r.is_empty(), "trailing bytes in pipeline section");
+    Ok(out)
+}
+
+fn encode_carries(carries: &[Option<CarryState>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    bytes::put_u32(&mut out, carries.len() as u32);
+    for c in carries {
+        match c {
+            None => bytes::put_u8(&mut out, 0),
+            Some(c) => {
+                bytes::put_u8(&mut out, 1);
+                bytes::put_u64(&mut out, c.lanes as u64);
+                bytes::put_u32(&mut out, c.h.len() as u32);
+                for layer in &c.h {
+                    bytes::put_f32s(&mut out, layer);
+                }
+                bytes::put_u32(&mut out, c.tail.len() as u32);
+                for layer in &c.tail {
+                    bytes::put_f32s(&mut out, layer);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn decode_carries(buf: &[u8]) -> Result<Vec<Option<CarryState>>> {
+    let mut r = bytes::Reader::new(buf);
+    let n = r.get_u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        match r.get_u8()? {
+            0 => out.push(None),
+            1 => {
+                let lanes = r.get_u64()? as usize;
+                let nh = r.get_u32()? as usize;
+                let mut h = Vec::with_capacity(nh);
+                for _ in 0..nh {
+                    h.push(r.get_f32s()?);
+                }
+                let nt = r.get_u32()? as usize;
+                let mut tail = Vec::with_capacity(nt);
+                for _ in 0..nt {
+                    tail.push(r.get_f32s()?);
+                }
+                out.push(Some(CarryState { lanes, h, tail }));
+            }
+            t => anyhow::bail!("bad carry presence tag {t}"),
+        }
+    }
+    anyhow::ensure!(r.is_empty(), "trailing bytes in carry section");
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// save
+// ---------------------------------------------------------------------------
+
+/// `ckpt.write`-failpoint-aware writer: counts payload bytes and, when
+/// an armed byte limit is crossed, flushes the written prefix and kills
+/// the process — deterministically producing the torn file the
+/// durability tests load-reject.
+struct FailpointFile {
+    f: std::fs::File,
+    written: u64,
+    limit: Option<u64>,
+}
+
+impl Write for FailpointFile {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if let Some(limit) = self.limit {
+            if self.written + buf.len() as u64 > limit {
+                let keep = (limit - self.written.min(limit)) as usize;
+                let _ = self.f.write_all(&buf[..keep]);
+                let _ = self.f.sync_all();
+                failpoint::kill_now("ckpt.write");
+            }
+        }
+        let n = self.f.write(buf)?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.f.flush()
+    }
+}
+
+/// Tensor-only save (end-of-run `--save` without periodic resume
+/// state): a v2 file with empty sections.
+pub fn save(path: &Path, config: &str, specs: &[ParamSpec], state: &TrainState) -> Result<()> {
+    save_full(path, config, specs, state, &[], &[])
+}
+
+/// Write a complete v2 checkpoint: tensors + pipeline + carry sections,
+/// CRC-stamped, fsynced, atomically published.
+pub fn save_full(
     path: &Path,
     config: &str,
     specs: &[ParamSpec],
     state: &TrainState,
+    pipelines: &[PipelineState],
+    carries: &[Option<CarryState>],
 ) -> Result<()> {
+    let _sp = trace::span(Op::CkptSave);
+    anyhow::ensure!(
+        specs.len() == state.params.len(),
+        "spec/param count mismatch"
+    );
+    let mut tensors = Vec::new();
+    for role in ["param", "adam_m", "adam_v"] {
+        for spec in specs {
+            tensors.push(Json::from_pairs([
+                ("name", Json::from(spec.name.clone())),
+                (
+                    "shape",
+                    Json::Arr(spec.shape.iter().map(|&d| Json::from(d)).collect()),
+                ),
+                ("role", Json::from(role)),
+            ]));
+        }
+    }
+
+    let mut section_meta = Vec::new();
+    let mut section_bufs: Vec<Vec<u8>> = Vec::new();
+    if !pipelines.is_empty() {
+        let buf = encode_pipelines(pipelines);
+        section_meta.push(Json::from_pairs([
+            ("name", Json::from("pipeline")),
+            ("bytes", Json::from(buf.len())),
+        ]));
+        section_bufs.push(buf);
+    }
+    if carries.iter().any(Option::is_some) {
+        let buf = encode_carries(carries);
+        section_meta.push(Json::from_pairs([
+            ("name", Json::from("carry")),
+            ("bytes", Json::from(buf.len())),
+        ]));
+        section_bufs.push(buf);
+    }
+
+    // CRC over the payload exactly as it will be written: tensor groups
+    // then sections.  Streaming pass — tensors are never re-buffered.
+    let mut crc = Crc32::new();
+    for group in [&state.params, &state.m, &state.v] {
+        for t in group.iter() {
+            for &x in t.data() {
+                crc.update(&x.to_le_bytes());
+            }
+        }
+    }
+    for buf in &section_bufs {
+        crc.update(buf);
+    }
+
+    let header = Json::from_pairs([
+        ("version", Json::from(2usize)),
+        ("config", Json::from(config)),
+        ("step", Json::from(state.step)),
+        ("tensors", Json::Arr(tensors)),
+        ("sections", Json::Arr(section_meta)),
+        ("payload_crc32", Json::from(crc.finalize() as usize)),
+    ])
+    .dump();
+
+    let tmp = path.with_extension("tmp");
+    {
+        let file = FailpointFile {
+            f: std::fs::File::create(&tmp)?,
+            written: 0,
+            limit: if failpoint::enabled() {
+                failpoint::byte_limit("ckpt.write")
+            } else {
+                None
+            },
+        };
+        let mut f = std::io::BufWriter::new(file);
+        f.write_all(MAGIC_V2)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for group in [&state.params, &state.m, &state.v] {
+            for t in group.iter() {
+                for &x in t.data() {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        for buf in &section_bufs {
+            f.write_all(buf)?;
+        }
+        f.flush()?;
+        // durability: the temp file's bytes must be on disk before the
+        // rename publishes them — else a crash can publish a torn file
+        f.get_ref().f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?; // atomic publish
+    // best-effort parent-directory fsync so the rename itself is durable
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    if failpoint::enabled()
+        && failpoint::check("ckpt.saved", state.step as u64, 0) == Some(failpoint::Action::Kill)
+    {
+        failpoint::kill_now("ckpt.saved");
+    }
+    Ok(())
+}
+
+/// Legacy v1 writer — kept so compatibility tests can produce real v1
+/// files (no CRC, no fsync, no sections). New code writes v2 via
+/// [`save`]/[`save_full`].
+pub fn save_v1(path: &Path, config: &str, specs: &[ParamSpec], state: &TrainState) -> Result<()> {
     anyhow::ensure!(
         specs.len() == state.params.len(),
         "spec/param count mismatch"
@@ -47,11 +416,10 @@ pub fn save(
         ("tensors", Json::Arr(tensors)),
     ])
     .dump();
-
     let tmp = path.with_extension("tmp");
     {
         let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-        f.write_all(MAGIC)?;
+        f.write_all(MAGIC_V1)?;
         f.write_all(&(header.len() as u32).to_le_bytes())?;
         f.write_all(header.as_bytes())?;
         for group in [&state.params, &state.m, &state.v] {
@@ -63,18 +431,43 @@ pub fn save(
         }
         f.flush()?;
     }
-    std::fs::rename(&tmp, path)?; // atomic publish
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// load
+// ---------------------------------------------------------------------------
+
+/// Tensor-only load (old call sites/tests): drops the resume sections.
 pub fn load(path: &Path, specs: &[ParamSpec]) -> Result<(String, TrainState)> {
+    let ck = load_full(path, specs)?;
+    Ok((ck.config, ck.state))
+}
+
+/// Load a checkpoint of either version, verifying structure, size, and
+/// (v2) the payload CRC.  Truncated files, trailing garbage, and
+/// corrupt header-length fields are all rejected with clear errors.
+pub fn load_full(path: &Path, specs: &[ParamSpec]) -> Result<Checkpoint> {
+    let file_len = std::fs::metadata(path)?.len();
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
+    let version = match &magic {
+        m if m == MAGIC_V1 => 1,
+        m if m == MAGIC_V2 => 2,
+        _ => anyhow::bail!("bad checkpoint magic"),
+    };
     let mut len = [0u8; 4];
     f.read_exact(&mut len)?;
-    let mut header = vec![0u8; u32::from_le_bytes(len) as usize];
+    let header_len = u32::from_le_bytes(len) as u64;
+    // cap against both the file size and an absolute bound: a corrupt
+    // length field must not drive a huge allocation
+    anyhow::ensure!(
+        header_len <= MAX_HEADER_BYTES && 12 + header_len <= file_len,
+        "checkpoint header length {header_len} exceeds file size {file_len}"
+    );
+    let mut header = vec![0u8; header_len as usize];
     f.read_exact(&mut header)?;
     let header = Json::parse(std::str::from_utf8(&header)?)
         .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
@@ -94,13 +487,43 @@ pub fn load(path: &Path, specs: &[ParamSpec]) -> Result<(String, TrainState)> {
         3 * specs.len()
     );
 
-    let mut read_group = || -> Result<Vec<Tensor>> {
+    let tensor_bytes: u64 = 3 * 4 * specs.iter().map(|s| s.element_count() as u64).sum::<u64>();
+    let mut sections: Vec<(String, u64)> = Vec::new();
+    if version >= 2 {
+        if let Some(arr) = header.get("sections").and_then(Json::as_arr) {
+            for s in arr {
+                let name = s
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("section name must be a string"))?
+                    .to_string();
+                let nbytes = s
+                    .req("bytes")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("section bytes must be a number"))?
+                    as u64;
+                sections.push((name, nbytes));
+            }
+        }
+    }
+    let section_bytes: u64 = sections.iter().map(|(_, b)| b).sum();
+    // exact-size check: anything after the last section is garbage
+    anyhow::ensure!(
+        file_len == 12 + header_len + tensor_bytes + section_bytes,
+        "checkpoint size mismatch: file {file_len} bytes, expected {} \
+         (truncated or trailing garbage)",
+        12 + header_len + tensor_bytes + section_bytes
+    );
+
+    let mut crc = Crc32::new();
+    let mut read_group = |f: &mut dyn Read, crc: &mut Crc32| -> Result<Vec<Tensor>> {
         specs
             .iter()
             .map(|spec| {
                 let n = spec.element_count();
                 let mut bytes = vec![0u8; n * 4];
                 f.read_exact(&mut bytes)?;
+                crc.update(&bytes);
                 let data: Vec<f32> = bytes
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -109,10 +532,49 @@ pub fn load(path: &Path, specs: &[ParamSpec]) -> Result<(String, TrainState)> {
             })
             .collect()
     };
-    let params = read_group()?;
-    let m = read_group()?;
-    let v = read_group()?;
-    Ok((config, TrainState { params, m, v, step }))
+    let params = read_group(&mut f, &mut crc)?;
+    let m = read_group(&mut f, &mut crc)?;
+    let v = read_group(&mut f, &mut crc)?;
+
+    let mut pipelines = Vec::new();
+    let mut carries = Vec::new();
+    for (name, nbytes) in &sections {
+        let mut buf = vec![0u8; *nbytes as usize];
+        f.read_exact(&mut buf)?;
+        crc.update(&buf);
+        match name.as_str() {
+            "pipeline" => pipelines = decode_pipelines(&buf)?,
+            "carry" => carries = decode_carries(&buf)?,
+            other => log::warn!("ignoring unknown checkpoint section `{other}`"),
+        }
+    }
+
+    if version >= 2 {
+        let want = header
+            .req("payload_crc32")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("payload_crc32 must be a number"))?
+            as u32;
+        let got = crc.finalize();
+        anyhow::ensure!(
+            got == want,
+            "checkpoint payload CRC mismatch (file corrupt): got {got:#010x}, want {want:#010x}"
+        );
+    } else {
+        // v1 has no CRC and no sections, but EOF must still line up
+        let mut probe = [0u8; 1];
+        anyhow::ensure!(
+            f.read(&mut probe)? == 0,
+            "trailing garbage after v1 checkpoint payload"
+        );
+    }
+
+    Ok(Checkpoint {
+        config,
+        state: TrainState { params, m, v, step },
+        pipelines,
+        carries,
+    })
 }
 
 #[cfg(test)]
@@ -145,6 +607,14 @@ mod tests {
     }
 
     #[test]
+    fn crc32_reference_vector() {
+        // IEEE CRC32 of "123456789" is the classic check value
+        let mut c = Crc32::new();
+        c.update(b"123456789");
+        assert_eq!(c.finalize(), 0xCBF4_3926);
+    }
+
+    #[test]
     fn round_trip() {
         let dir = std::env::temp_dir().join("packmamba_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -157,6 +627,20 @@ mod tests {
         assert_eq!(loaded.params, st.params);
         assert_eq!(loaded.m, st.m);
         assert_eq!(loaded.v, st.v);
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        let st = state();
+        save_v1(&path, "tiny", &specs(), &st).unwrap();
+        let ck = load_full(&path, &specs()).unwrap();
+        assert_eq!(ck.config, "tiny");
+        assert_eq!(ck.state.params, st.params);
+        assert!(ck.pipelines.is_empty());
+        assert!(ck.carries.is_empty());
     }
 
     #[test]
@@ -176,5 +660,117 @@ mod tests {
         save(&path, "tiny", &specs(), &state()).unwrap();
         let wrong = vec![specs().remove(0)];
         assert!(load(&path, &wrong).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_anywhere() {
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        save(&path, "tiny", &specs(), &state()).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in [full.len() - 1, full.len() - 5, full.len() / 2, 13, 9] {
+            let torn = dir.join("torn.bin");
+            std::fs::write(&torn, &full[..cut]).unwrap();
+            assert!(
+                load(&torn, &specs()).is_err(),
+                "torn file of {cut}/{} bytes must be rejected",
+                full.len()
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test_trail");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, v1) in [("v2.bin", false), ("v1.bin", true)] {
+            let path = dir.join(name);
+            if v1 {
+                save_v1(&path, "tiny", &specs(), &state()).unwrap();
+            } else {
+                save(&path, "tiny", &specs(), &state()).unwrap();
+            }
+            let mut data = std::fs::read(&path).unwrap();
+            data.extend_from_slice(b"JUNK");
+            std::fs::write(&path, &data).unwrap();
+            assert!(load(&path, &specs()).is_err(), "{name}: trailing garbage accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_header_length_without_huge_alloc() {
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test_hdr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        save(&path, "tiny", &specs(), &state()).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        // poison the 4-byte header length with u32::MAX
+        data[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &data).unwrap();
+        let err = load(&path, &specs()).unwrap_err().to_string();
+        assert!(err.contains("header length"), "{err}");
+    }
+
+    #[test]
+    fn rejects_payload_bitflip_via_crc() {
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test_crc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        save(&path, "tiny", &specs(), &state()).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let n = data.len();
+        data[n - 3] ^= 0x40; // flip a payload bit, size unchanged
+        std::fs::write(&path, &data).unwrap();
+        let err = load(&path, &specs()).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn full_round_trip_with_sections() {
+        use crate::packing::Sequence;
+        let dir = std::env::temp_dir().join("packmamba_ckpt_test_full");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        let st = state();
+
+        let mut packer = StreamingPacker::with_streams(8, 4, 2);
+        let _ = packer.push(Sequence { tokens: vec![1, 2, 3], id: 0 });
+        let _ = packer.push(Sequence {
+            tokens: (0..19).collect(),
+            id: 1,
+        }); // over-length: split fragments in flight
+        let pipelines = vec![PipelineState {
+            corpus: CorpusState {
+                rng_state: 0x0123_4567_89AB_CDEF_0011_2233_4455_6677,
+                rng_inc: (1 << 127) | 1,
+                next_id: 42,
+            },
+            packer: PackerState::Streaming(packer.clone()),
+            consumed: 3,
+        }];
+        let carries = vec![
+            Some(CarryState {
+                lanes: 2,
+                h: vec![vec![1.5, -2.5, 0.0, f32::MIN_POSITIVE], vec![4.0; 4]],
+                tail: vec![vec![0.25; 6], vec![-1.0; 6]],
+            }),
+            None,
+        ];
+        save_full(&path, "tiny", &specs(), &st, &pipelines, &carries).unwrap();
+        let ck = load_full(&path, &specs()).unwrap();
+        assert_eq!(ck.state.params, st.params);
+        assert_eq!(ck.pipelines.len(), 1);
+        let p = &ck.pipelines[0];
+        assert_eq!(p.corpus.rng_state, 0x0123_4567_89AB_CDEF_0011_2233_4455_6677);
+        assert_eq!(p.corpus.next_id, 42);
+        assert_eq!(p.consumed, 3);
+        match &p.packer {
+            PackerState::Streaming(s) => assert_eq!(s.pending_rows(), packer.pending_rows()),
+            other => panic!("wrong packer state {other:?}"),
+        }
+        assert_eq!(ck.carries.len(), 2);
+        assert_eq!(ck.carries[0], carries[0]);
+        assert_eq!(ck.carries[1], None);
     }
 }

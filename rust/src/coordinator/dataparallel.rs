@@ -11,11 +11,12 @@
 //!   1. every worker computes (loss, grads) on its shard's batch,
 //!   2. grads cross to the leader thread, which averages them
 //!      (host all-reduce, [`crate::tensor::allreduce_mean`]),
-//!   3. averaged grads go back; each worker applies the *identical*
-//!      optimizer update, keeping replicas bit-identical — the
-//!      invariant `replicas_identical` tests assert.  (The native
-//!      backend's numerics are deterministic for any thread count,
-//!      which is what makes the bit-identity achievable on the host.)
+//!   3. the leader answers every worker with one [`Directive`]; on
+//!      `Apply` each replica performs the *identical* optimizer update,
+//!      keeping replicas bit-identical — the invariant
+//!      `replicas_identical` tests assert.  (The native backend's
+//!      numerics are deterministic for any thread count, which is what
+//!      makes the bit-identity achievable on the host.)
 //!
 //! **Chunk-aware** (`chunk_len > 0`, §5 composed with §4) — chunked
 //! execution threads per-stream carries across a batch's rows *and*
@@ -33,18 +34,77 @@
 //! ([`crate::tensor::allreduce_sum`]), which reproduces the
 //! single-worker chunked step's loss and gradients exactly (up to fp
 //! reassociation — `tests/dp_chunked.rs` pins 1e-5).
+//!
+//! # Fault tolerance
+//!
+//! The leader's rendezvous never hangs and never aborts the process on a
+//! worker failure:
+//!
+//! * every worker body runs under `catch_unwind`; a panic (or error) is
+//!   converted into a typed [`WorkerError`] naming the worker and
+//!   forwarded through the gradient channel, so the leader's step fails
+//!   with a downcastable error instead of a poisoned join,
+//! * transient worker errors are retried: the leader broadcasts
+//!   [`Directive::Retry`] up to `cfg.step_retries` times and every
+//!   worker recomputes the *same* batch (chunked workers first restore
+//!   the carry snapshot taken before the attempt), so a retried run
+//!   stays bit-identical to an undisturbed one,
+//! * the leader scans the reduced loss + gradients (non-finite guard,
+//!   mirroring the single-trainer step): a bad step is skipped on every
+//!   replica via [`Directive::Skip`] (optimizer untouched, step count
+//!   still advances), counted in telemetry, and aborts the run after
+//!   `cfg.max_bad_steps` consecutive occurrences,
+//! * on any leader abort the directive/batch channels are dropped and
+//!   all workers are joined — surviving workers see a closed channel and
+//!   exit.
+//!
+//! With `save_every > 0` (and on `--resume`) batch production runs
+//! inline — the leader checkpoints via a per-step rendezvous: workers
+//! ship their pipeline positions (monolithic) or chunk carries (chunked)
+//! plus worker 0's replica state, and the leader writes one v2
+//! checkpoint ([`super::checkpoint::save_full`]) that resumes
+//! bit-exactly.
 
-use std::sync::mpsc;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
 
-use crate::backend::{self, ops};
+use crate::backend::{self, ops, Backend, CarryState, TrainState};
 use crate::config::{Scheme, TrainConfig};
 use crate::packing::PackedBatch;
 use crate::tensor::{allreduce_mean, allreduce_sum, Tensor};
-use crate::util::trace;
+use crate::util::failpoint;
+use crate::util::trace::{self, Op};
 use crate::Result;
 
+use super::checkpoint::{self, Checkpoint, PipelineState};
 use super::metrics::{StepRecord, TrainMetrics};
-use super::trainer::Pipeline;
+use super::trainer::{BatchSource, Pipeline};
+
+/// Typed failure of one data-parallel worker: which worker, whether it
+/// panicked (thread dead — not retryable) or returned an error, and the
+/// message.  Carried through the gradient channel so the leader's
+/// rendezvous fails cleanly instead of hanging; downcastable from the
+/// `anyhow::Error` the run surfaces.
+#[derive(Clone, Debug)]
+pub struct WorkerError {
+    pub worker: usize,
+    pub panicked: bool,
+    pub msg: String,
+}
+
+impl std::fmt::Display for WorkerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dp worker {} {}: {}",
+            self.worker,
+            if self.panicked { "panicked" } else { "failed" },
+            self.msg
+        )
+    }
+}
+
+impl std::error::Error for WorkerError {}
 
 /// Per-step message from a worker to the leader.
 struct GradMsg {
@@ -54,6 +114,44 @@ struct GradMsg {
     real_tokens: usize,
     slot_tokens: usize,
     sequences: usize,
+}
+
+/// Leader's per-step answer to every worker.
+enum Directive {
+    /// reduced gradients: perform the identical optimizer update
+    Apply(Vec<Tensor>),
+    /// non-finite step: skip the update, advance the step count
+    Skip,
+    /// a worker hit a transient fault: recompute the same batch
+    Retry,
+}
+
+/// Checkpoint-rendezvous message: each worker's share of the resume
+/// state at a `save_every` boundary.
+struct CkptMsg {
+    worker: usize,
+    pipeline: Option<PipelineState>,
+    carry: Option<CarryState>,
+    /// worker 0 ships its replica (replicas are bit-identical)
+    state: Option<TrainState>,
+}
+
+/// Worker-side batch feed: a producer thread normally, the source
+/// inline when its position must be checkpointable.
+enum WorkerFeed {
+    Threaded(Pipeline),
+    Inline(BatchSource),
+}
+
+impl WorkerFeed {
+    fn next_batch(&mut self) -> Result<PackedBatch> {
+        match self {
+            WorkerFeed::Threaded(p) => p
+                .next_batch()
+                .ok_or_else(|| anyhow::anyhow!("pipeline closed")),
+            WorkerFeed::Inline(s) => Ok(s.next_batch()),
+        }
+    }
 }
 
 /// Aggregated result of a data-parallel run.
@@ -68,6 +166,8 @@ pub struct DpRunResult {
 
 pub struct DataParallelTrainer {
     cfg: TrainConfig,
+    save_path: Option<PathBuf>,
+    resume_path: Option<PathBuf>,
 }
 
 impl DataParallelTrainer {
@@ -99,29 +199,92 @@ impl DataParallelTrainer {
                 cfg.packing.streams
             );
         }
-        Ok(Self { cfg })
+        Ok(Self {
+            cfg,
+            save_path: None,
+            resume_path: None,
+        })
+    }
+
+    /// Where periodic checkpoints (cadence `cfg.save_every`) go.
+    pub fn set_save_path(&mut self, path: PathBuf) {
+        self.save_path = Some(path);
+    }
+
+    /// Resume from a checkpoint written by a run with the same
+    /// `dp_workers` and config.
+    pub fn set_resume_path(&mut self, path: PathBuf) {
+        self.resume_path = Some(path);
     }
 
     /// Run `cfg.steps` synchronous data-parallel steps on
     /// `cfg.dp_workers` worker threads.
     pub fn run(&self) -> Result<DpRunResult> {
         if self.cfg.chunk_len > 0 {
-            return self.run_chunked();
+            self.run_chunked()
+        } else {
+            self.run_monolithic()
         }
+    }
+
+    /// Load + validate the resume checkpoint, if any.
+    /// `want_pipelines`/`want_carries` are the per-mode section counts.
+    fn load_resume(
+        &self,
+        specs: &[crate::runtime::ParamSpec],
+        want_pipelines: usize,
+        want_carries: usize,
+    ) -> Result<Option<Arc<Checkpoint>>> {
+        let Some(path) = &self.resume_path else {
+            return Ok(None);
+        };
+        let ck = checkpoint::load_full(path, specs)?;
+        anyhow::ensure!(
+            ck.config == self.cfg.model.name,
+            "checkpoint is for model `{}` but the run is configured for `{}`",
+            ck.config,
+            self.cfg.model.name
+        );
+        anyhow::ensure!(
+            ck.pipelines.len() == want_pipelines,
+            "checkpoint holds {} pipeline states but this run needs {} \
+             (same mode and dp_workers as the saving run?)",
+            ck.pipelines.len(),
+            want_pipelines
+        );
+        anyhow::ensure!(
+            ck.carries.len() == want_carries,
+            "checkpoint holds {} carry states but this run needs {}",
+            ck.carries.len(),
+            want_carries
+        );
+        log::info!("resuming from {} at step {}", path.display(), ck.state.step);
+        Ok(Some(Arc::new(ck)))
+    }
+
+    fn run_monolithic(&self) -> Result<DpRunResult> {
         let n = self.cfg.dp_workers;
         let steps = self.cfg.steps;
-        // leader <- workers: gradients (Err = the worker's step failed;
-        // surfacing it here keeps the synchronous rendezvous from
-        // deadlocking on a silently-dead worker)
-        let (grad_tx, grad_rx) = mpsc::channel::<Result<GradMsg>>();
-        // workers <- leader: averaged gradients (one channel per worker)
-        let mut avg_txs = Vec::with_capacity(n);
-        let mut avg_rxs = Vec::with_capacity(n);
+        let specs = backend::create(&self.cfg)?.param_specs(&self.cfg.model)?;
+        let resume = self.load_resume(&specs, n, 0)?;
+        let start_step = resume.as_ref().map(|ck| ck.state.step).unwrap_or(0);
+        let ckpt_every = if self.save_path.is_some() {
+            self.cfg.save_every
+        } else {
+            0
+        };
+
+        // leader <- workers: gradients or a typed worker failure
+        let (grad_tx, grad_rx) = mpsc::channel::<Result<GradMsg, WorkerError>>();
+        // workers <- leader: per-step directive (one channel per worker)
+        let mut dir_txs = Vec::with_capacity(n);
+        let mut dir_rxs = Vec::with_capacity(n);
         for _ in 0..n {
-            let (tx, rx) = mpsc::channel::<Vec<Tensor>>();
-            avg_txs.push(tx);
-            avg_rxs.push(Some(rx));
+            let (tx, rx) = mpsc::channel::<Directive>();
+            dir_txs.push(tx);
+            dir_rxs.push(Some(rx));
         }
+        let (ckpt_tx, ckpt_rx) = mpsc::channel::<CkptMsg>();
         // workers -> leader: final params for the identity check
         let (done_tx, done_rx) = mpsc::channel::<(usize, Vec<Tensor>)>();
 
@@ -129,65 +292,78 @@ impl DataParallelTrainer {
         for w in 0..n {
             let cfg = self.cfg.clone();
             let grad_tx = grad_tx.clone();
-            let avg_rx = avg_rxs[w].take().unwrap();
+            let dir_rx = dir_rxs[w].take().expect("directive rx taken once");
+            let ckpt_tx = ckpt_tx.clone();
             let done_tx = done_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("dp-worker-{w}"))
-                    .spawn(move || -> Result<()> {
-                        let tx = grad_tx.clone();
-                        guard_worker(w, &tx, || {
-                            worker_loop(w, n, steps, &cfg, grad_tx, avg_rx, done_tx)
-                        })
-                    })
-                    .expect("spawn dp worker"),
-            );
+            let resume = resume.clone();
+            let ckpt_active = ckpt_every > 0;
+            handles.push(spawn_worker(w, grad_tx.clone(), move || {
+                worker_loop(
+                    w,
+                    n,
+                    &cfg,
+                    ckpt_active,
+                    resume,
+                    grad_tx,
+                    dir_rx,
+                    ckpt_tx,
+                    done_tx,
+                )
+            })?);
         }
         drop(grad_tx);
+        drop(ckpt_tx);
         drop(done_tx);
 
         // ----- leader: synchronous all-reduce per step -----
-        let mut metrics = TrainMetrics::new();
-        for step in 0..steps {
-            let t0 = std::time::Instant::now();
-            let mut msgs: Vec<GradMsg> = Vec::with_capacity(n);
-            for _ in 0..n {
-                let msg = grad_rx
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("worker died at step {step}"))?
-                    .map_err(|e| anyhow::anyhow!("worker failed at step {step}: {e:#}"))?;
-                msgs.push(msg);
+        let loop_result = (|| -> Result<TrainMetrics> {
+            let mut metrics = TrainMetrics::new();
+            let mut bad_steps = 0usize;
+            for step in start_step..steps {
+                let t0 = std::time::Instant::now();
+                let msgs = collect_grads(&grad_rx, &dir_txs, n, step, self.cfg.step_retries)?;
+                let loss = msgs.iter().map(|m| m.loss).sum::<f32>() / n as f32;
+                let (real, slots, seqs): (usize, usize, usize) = (
+                    msgs.iter().map(|m| m.real_tokens).sum(),
+                    msgs.iter().map(|m| m.slot_tokens).sum(),
+                    msgs.iter().map(|m| m.sequences).sum(),
+                );
+                trace::count_tokens(real as u64, slots as u64);
+                // move the gradients out of the messages: no per-worker
+                // full-model deep copy on the leader's critical path
+                let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
+                allreduce_mean(&mut grad_sets);
+                let avg = grad_sets.swap_remove(0);
+                guard_and_direct(&dir_txs, &grad_rx, loss, avg, &mut bad_steps, &self.cfg, step)?;
+                metrics.record(StepRecord {
+                    step,
+                    loss,
+                    secs: t0.elapsed().as_secs_f64(),
+                    real_tokens: real,
+                    slot_tokens: slots,
+                    sequences: seqs,
+                });
+                if step % 20 == 0 {
+                    log::info!("dp step {step}/{steps} mean-loss {loss:.4}");
+                }
+                if ckpt_every > 0 && (step + 1) % ckpt_every == 0 {
+                    let (state, pipelines, _carries) = collect_ckpt(&ckpt_rx, &grad_rx, n)?;
+                    let path = self.save_path.as_ref().expect("ckpt_every implies path");
+                    checkpoint::save_full(
+                        path,
+                        &self.cfg.model.name,
+                        &specs,
+                        &state,
+                        &pipelines,
+                        &[],
+                    )?;
+                    log::info!("dp checkpoint written to {} (step {})", path.display(), step + 1);
+                }
             }
-            msgs.sort_by_key(|m| m.worker);
-            let loss = msgs.iter().map(|m| m.loss).sum::<f32>() / n as f32;
-            let (real, slots, seqs): (usize, usize, usize) = (
-                msgs.iter().map(|m| m.real_tokens).sum(),
-                msgs.iter().map(|m| m.slot_tokens).sum(),
-                msgs.iter().map(|m| m.sequences).sum(),
-            );
-            trace::count_tokens(real as u64, slots as u64);
-            // move the gradients out of the messages: no per-worker
-            // full-model deep copy on the leader's critical path
-            let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
-            allreduce_mean(&mut grad_sets);
-            let avg = grad_sets.swap_remove(0);
-            for tx in &avg_txs {
-                tx.send(avg.clone())
-                    .map_err(|_| leader_send_error(&grad_rx, "avg"))?;
-            }
-            metrics.record(StepRecord {
-                step,
-                loss,
-                secs: t0.elapsed().as_secs_f64(),
-                real_tokens: real,
-                slot_tokens: slots,
-                sequences: seqs,
-            });
-            if step % 20 == 0 {
-                log::info!("dp step {step}/{steps} mean-loss {loss:.4}");
-            }
-        }
+            Ok(metrics)
+        })();
 
+        let metrics = teardown(loop_result, dir_txs, Vec::new(), &mut handles)?;
         let (final_params, identical) = collect_finals(done_rx, &grad_rx, handles, n)?;
         Ok(DpRunResult {
             metrics,
@@ -208,7 +384,16 @@ impl DataParallelTrainer {
         // The leader owns geometry + pipeline; workers receive their row
         // ranges, so every worker sees exactly the rows a single-worker
         // run would traverse as those streams.
-        let geom = backend::create(&self.cfg)?.geometry(&self.cfg)?;
+        let leader_be = backend::create(&self.cfg)?;
+        let specs = leader_be.param_specs(&self.cfg.model)?;
+        let geom = leader_be.geometry(&self.cfg)?;
+        let resume = self.load_resume(&specs, 1, n)?;
+        let start_step = resume.as_ref().map(|ck| ck.state.step).unwrap_or(0);
+        let ckpt_every = if self.save_path.is_some() {
+            self.cfg.save_every
+        } else {
+            0
+        };
         let mut pcfg = self.cfg.clone();
         pcfg.packing.rows = geom.rows;
         pcfg.packing.pack_len = geom.pack_len;
@@ -222,7 +407,21 @@ impl DataParallelTrainer {
         // splits over-length sequences); over-length + greedy buffer is
         // routed to the streaming packer, mirroring Trainer::new
         pcfg.route_chunked_packer(geom.pack_len);
-        let pipeline = Pipeline::spawn(&pcfg, geom.buckets.clone(), geom.pad_geom, 0, 1);
+        let mut feed = if ckpt_every > 0 || resume.is_some() {
+            let mut src = BatchSource::new(&pcfg, geom.buckets.clone(), geom.pad_geom, 0, 1);
+            if let Some(ck) = &resume {
+                src.restore(&ck.pipelines[0])?;
+            }
+            WorkerFeed::Inline(src)
+        } else {
+            WorkerFeed::Threaded(Pipeline::spawn(
+                &pcfg,
+                geom.buckets.clone(),
+                geom.pad_geom,
+                0,
+                1,
+            ))
+        };
 
         // workers <- leader: (row-range sub-batch, whole-batch denom)
         let mut batch_txs = Vec::with_capacity(n);
@@ -232,89 +431,106 @@ impl DataParallelTrainer {
             batch_txs.push(tx);
             batch_rxs.push(Some(rx));
         }
-        let (grad_tx, grad_rx) = mpsc::channel::<Result<GradMsg>>();
-        let mut sum_txs = Vec::with_capacity(n);
-        let mut sum_rxs = Vec::with_capacity(n);
+        let (grad_tx, grad_rx) = mpsc::channel::<Result<GradMsg, WorkerError>>();
+        let mut dir_txs = Vec::with_capacity(n);
+        let mut dir_rxs = Vec::with_capacity(n);
         for _ in 0..n {
-            let (tx, rx) = mpsc::channel::<Vec<Tensor>>();
-            sum_txs.push(tx);
-            sum_rxs.push(Some(rx));
+            let (tx, rx) = mpsc::channel::<Directive>();
+            dir_txs.push(tx);
+            dir_rxs.push(Some(rx));
         }
+        let (ckpt_tx, ckpt_rx) = mpsc::channel::<CkptMsg>();
         let (done_tx, done_rx) = mpsc::channel::<(usize, Vec<Tensor>)>();
 
         let mut handles = Vec::with_capacity(n);
         for w in 0..n {
             let cfg = pcfg.clone();
-            let batch_rx = batch_rxs[w].take().unwrap();
+            let batch_rx = batch_rxs[w].take().expect("batch rx taken once");
             let grad_tx = grad_tx.clone();
-            let sum_rx = sum_rxs[w].take().unwrap();
+            let dir_rx = dir_rxs[w].take().expect("directive rx taken once");
+            let ckpt_tx = ckpt_tx.clone();
             let done_tx = done_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("dp-chunk-worker-{w}"))
-                    .spawn(move || -> Result<()> {
-                        let tx = grad_tx.clone();
-                        guard_worker(w, &tx, || {
-                            worker_loop_chunked(w, steps, &cfg, batch_rx, grad_tx, sum_rx, done_tx)
-                        })
-                    })
-                    .expect("spawn dp worker"),
-            );
+            let resume = resume.clone();
+            let ckpt_active = ckpt_every > 0;
+            handles.push(spawn_worker(w, grad_tx.clone(), move || {
+                worker_loop_chunked(
+                    w,
+                    &cfg,
+                    ckpt_active,
+                    resume,
+                    batch_rx,
+                    grad_tx,
+                    dir_rx,
+                    ckpt_tx,
+                    done_tx,
+                )
+            })?);
         }
         drop(grad_tx);
+        drop(ckpt_tx);
         drop(done_tx);
 
-        let mut metrics = TrainMetrics::new();
-        for step in 0..steps {
-            let t0 = std::time::Instant::now();
-            let batch = pipeline
-                .next_batch()
-                .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
-            let denom = ops::mask_denom(batch.loss_mask.data());
-            let (real, slots, seqs) = (
-                batch.real_tokens(),
-                batch.rows() * batch.pack_len(),
-                batch.sequence_count(),
-            );
-            trace::count_tokens(real as u64, slots as u64);
-            let parts = batch.split_rows(n)?;
-            for (tx, part) in batch_txs.iter().zip(parts) {
-                tx.send((part, denom))
-                    .map_err(|_| leader_send_error(&grad_rx, "batch"))?;
+        let loop_result = (|| -> Result<TrainMetrics> {
+            let mut metrics = TrainMetrics::new();
+            let mut bad_steps = 0usize;
+            for step in start_step..steps {
+                let t0 = std::time::Instant::now();
+                let batch = feed.next_batch()?;
+                let denom = ops::mask_denom(batch.loss_mask.data());
+                let (real, slots, seqs) = (
+                    batch.real_tokens(),
+                    batch.rows() * batch.pack_len(),
+                    batch.sequence_count(),
+                );
+                trace::count_tokens(real as u64, slots as u64);
+                let parts = batch.split_rows(n)?;
+                for (tx, part) in batch_txs.iter().zip(parts) {
+                    tx.send((part, denom))
+                        .map_err(|_| leader_send_error(&grad_rx, "batch"))?;
+                }
+                let msgs = collect_grads(&grad_rx, &dir_txs, n, step, self.cfg.step_retries)?;
+                let loss = msgs.iter().map(|m| m.loss).sum::<f32>();
+                // move the gradients out of the messages (no deep copy),
+                // then sum, not mean: worker grads are partial
+                // contributions normalized by the whole batch's
+                // denominator
+                let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
+                allreduce_sum(&mut grad_sets);
+                let sum = grad_sets.swap_remove(0);
+                guard_and_direct(&dir_txs, &grad_rx, loss, sum, &mut bad_steps, &self.cfg, step)?;
+                metrics.record(StepRecord {
+                    step,
+                    loss,
+                    secs: t0.elapsed().as_secs_f64(),
+                    real_tokens: real,
+                    slot_tokens: slots,
+                    sequences: seqs,
+                });
+                if step % 20 == 0 {
+                    log::info!("dp-chunked step {step}/{steps} loss {loss:.4}");
+                }
+                if ckpt_every > 0 && (step + 1) % ckpt_every == 0 {
+                    let (state, _pipelines, carries) = collect_ckpt(&ckpt_rx, &grad_rx, n)?;
+                    let pipelines = match &feed {
+                        WorkerFeed::Inline(src) => vec![src.checkpoint_state()],
+                        WorkerFeed::Threaded(_) => unreachable!("ckpt_every forces inline feed"),
+                    };
+                    let path = self.save_path.as_ref().expect("ckpt_every implies path");
+                    checkpoint::save_full(
+                        path,
+                        &self.cfg.model.name,
+                        &specs,
+                        &state,
+                        &pipelines,
+                        &carries,
+                    )?;
+                    log::info!("dp checkpoint written to {} (step {})", path.display(), step + 1);
+                }
             }
-            let mut msgs: Vec<GradMsg> = Vec::with_capacity(n);
-            for _ in 0..n {
-                let msg = grad_rx
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("worker died at step {step}"))?
-                    .map_err(|e| anyhow::anyhow!("worker failed at step {step}: {e:#}"))?;
-                msgs.push(msg);
-            }
-            msgs.sort_by_key(|m| m.worker);
-            let loss = msgs.iter().map(|m| m.loss).sum::<f32>();
-            // move the gradients out of the messages (no deep copy), then
-            // sum, not mean: worker grads are partial contributions
-            // normalized by the whole batch's denominator
-            let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
-            allreduce_sum(&mut grad_sets);
-            let sum = grad_sets.swap_remove(0);
-            for tx in &sum_txs {
-                tx.send(sum.clone())
-                    .map_err(|_| leader_send_error(&grad_rx, "sum"))?;
-            }
-            metrics.record(StepRecord {
-                step,
-                loss,
-                secs: t0.elapsed().as_secs_f64(),
-                real_tokens: real,
-                slot_tokens: slots,
-                sequences: seqs,
-            });
-            if step % 20 == 0 {
-                log::info!("dp-chunked step {step}/{steps} loss {loss:.4}");
-            }
-        }
+            Ok(metrics)
+        })();
 
+        let metrics = teardown(loop_result, dir_txs, batch_txs, &mut handles)?;
         let (final_params, identical) = collect_finals(done_rx, &grad_rx, handles, n)?;
         Ok(DpRunResult {
             metrics,
@@ -325,17 +541,226 @@ impl DataParallelTrainer {
     }
 }
 
+/// Spawn one worker thread whose body runs under `catch_unwind`: a
+/// panic is converted into a typed [`WorkerError`] and forwarded through
+/// the gradient channel, so the leader's rendezvous fails with a
+/// downcastable error naming the worker instead of hanging or aborting.
+fn spawn_worker(
+    w: usize,
+    err_tx: mpsc::Sender<Result<GradMsg, WorkerError>>,
+    body: impl FnOnce() -> Result<()> + Send + 'static,
+) -> Result<std::thread::JoinHandle<Result<()>>> {
+    std::thread::Builder::new()
+        .name(format!("dp-worker-{w}"))
+        .spawn(move || -> Result<()> {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)) {
+                Ok(Ok(())) => Ok(()),
+                Ok(Err(e)) => {
+                    // non-step errors (init, channel breakdown) land here;
+                    // per-step errors were already forwarded by the loop
+                    let we = WorkerError {
+                        worker: w,
+                        panicked: false,
+                        msg: format!("{e:#}"),
+                    };
+                    let _ = err_tx.send(Err(we)); // leader may be gone
+                    Err(e)
+                }
+                Err(panic) => {
+                    let msg = panic_message(&panic);
+                    let we = WorkerError {
+                        worker: w,
+                        panicked: true,
+                        msg: msg.clone(),
+                    };
+                    let _ = err_tx.send(Err(we));
+                    anyhow::bail!("dp worker {w} panicked: {msg}")
+                }
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("spawn dp worker {w}: {e}"))
+}
+
+fn panic_message(panic: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Leader side of one step's gradient rendezvous with bounded retry.
+/// Collects one message per worker; on transient worker errors
+/// broadcasts [`Directive::Retry`] (up to `retries` times) and collects
+/// again; a panicked worker or exhausted retries surface the typed
+/// [`WorkerError`].
+fn collect_grads(
+    grad_rx: &mpsc::Receiver<Result<GradMsg, WorkerError>>,
+    dir_txs: &[mpsc::Sender<Directive>],
+    n: usize,
+    step: usize,
+    retries: usize,
+) -> Result<Vec<GradMsg>> {
+    let mut retries_left = retries;
+    loop {
+        let mut msgs: Vec<GradMsg> = Vec::with_capacity(n);
+        let mut failures: Vec<WorkerError> = Vec::new();
+        for _ in 0..n {
+            match grad_rx.recv() {
+                Ok(Ok(m)) => msgs.push(m),
+                Ok(Err(we)) => failures.push(we),
+                Err(_) => anyhow::bail!("all dp workers hung up at step {step}"),
+            }
+        }
+        if failures.is_empty() {
+            msgs.sort_by_key(|m| m.worker);
+            return Ok(msgs);
+        }
+        failures.sort_by_key(|f| f.worker);
+        if let Some(dead) = failures.iter().find(|f| f.panicked) {
+            // the thread is gone: not retryable
+            return Err(anyhow::Error::new(dead.clone())
+                .context(format!("dp step {step} failed")));
+        }
+        if retries_left == 0 {
+            let first = failures.remove(0);
+            return Err(anyhow::Error::new(first)
+                .context(format!("dp step {step} failed after {retries} retries")));
+        }
+        retries_left -= 1;
+        log::warn!(
+            "dp step {step}: {} worker(s) hit transient errors ({}); retrying the batch \
+             ({} retries left)",
+            failures.len(),
+            failures
+                .iter()
+                .map(|f| f.msg.as_str())
+                .collect::<Vec<_>>()
+                .join("; "),
+            retries_left
+        );
+        for tx in dir_txs {
+            tx.send(Directive::Retry)
+                .map_err(|_| anyhow::anyhow!("worker hung up during retry of step {step}"))?;
+        }
+    }
+}
+
+/// Leader-side non-finite guard + directive broadcast: scan the reduced
+/// loss and gradients; finite → `Apply`, non-finite → `Skip` on every
+/// replica (counted in telemetry, aborting after `cfg.max_bad_steps`
+/// consecutive bad steps).  Mirrors the single-trainer guard in the
+/// native backend's fused step.
+fn guard_and_direct(
+    dir_txs: &[mpsc::Sender<Directive>],
+    grad_rx: &mpsc::Receiver<Result<GradMsg, WorkerError>>,
+    loss: f32,
+    reduced: Vec<Tensor>,
+    bad_steps: &mut usize,
+    cfg: &TrainConfig,
+    step: usize,
+) -> Result<()> {
+    let finite = {
+        let _sp = trace::span(Op::GuardScan);
+        loss.is_finite()
+            && reduced
+                .iter()
+                .all(|t| t.data().iter().all(|x| x.is_finite()))
+    };
+    if finite {
+        *bad_steps = 0;
+        for tx in dir_txs {
+            tx.send(Directive::Apply(reduced.clone()))
+                .map_err(|_| leader_send_error(grad_rx, "apply"))?;
+        }
+        return Ok(());
+    }
+    trace::count_nonfinite_skip();
+    *bad_steps += 1;
+    anyhow::ensure!(
+        *bad_steps < cfg.max_bad_steps,
+        "aborting after {} consecutive non-finite dp steps (step {step}, loss {loss}); \
+         replicas are unmodified since the last finite step",
+        *bad_steps
+    );
+    log::warn!(
+        "non-finite dp loss/grads at step {step} (loss {loss}): skipping update on all \
+         replicas ({}/{} consecutive)",
+        *bad_steps,
+        cfg.max_bad_steps
+    );
+    for tx in dir_txs {
+        tx.send(Directive::Skip)
+            .map_err(|_| leader_send_error(grad_rx, "skip"))?;
+    }
+    Ok(())
+}
+
+/// Collect the per-worker checkpoint shares for one `save_every`
+/// boundary: worker 0's replica state plus every worker's pipeline
+/// and/or carry.
+fn collect_ckpt(
+    ckpt_rx: &mpsc::Receiver<CkptMsg>,
+    grad_rx: &mpsc::Receiver<Result<GradMsg, WorkerError>>,
+    n: usize,
+) -> Result<(TrainState, Vec<PipelineState>, Vec<Option<CarryState>>)> {
+    let mut msgs: Vec<CkptMsg> = Vec::with_capacity(n);
+    for _ in 0..n {
+        msgs.push(
+            ckpt_rx
+                .recv()
+                .map_err(|_| leader_send_error(grad_rx, "ckpt"))?,
+        );
+    }
+    msgs.sort_by_key(|m| m.worker);
+    let state = msgs
+        .iter_mut()
+        .find_map(|m| m.state.take())
+        .ok_or_else(|| anyhow::anyhow!("no worker shipped replica state for the checkpoint"))?;
+    let pipelines: Vec<PipelineState> = msgs.iter().filter_map(|m| m.pipeline.clone()).collect();
+    let carries: Vec<Option<CarryState>> = if msgs.iter().any(|m| m.carry.is_some()) {
+        msgs.into_iter().map(|m| m.carry).collect()
+    } else {
+        Vec::new()
+    };
+    Ok((state, pipelines, carries))
+}
+
+/// Leader teardown: on a failed run, close every leader→worker channel
+/// (so blocked workers exit) and join all threads before surfacing the
+/// error — the caller never hangs and never aborts on a worker panic.
+fn teardown(
+    loop_result: Result<TrainMetrics>,
+    dir_txs: Vec<mpsc::Sender<Directive>>,
+    batch_txs: Vec<mpsc::Sender<(PackedBatch, f32)>>,
+    handles: &mut Vec<std::thread::JoinHandle<Result<()>>>,
+) -> Result<TrainMetrics> {
+    match loop_result {
+        Ok(metrics) => Ok(metrics),
+        Err(e) => {
+            drop(dir_txs);
+            drop(batch_txs);
+            for h in handles.drain(..) {
+                let _ = h.join(); // worker errors already surfaced/typed
+            }
+            Err(e)
+        }
+    }
+}
+
 /// A failed leader→worker send usually means the worker died; if the
-/// worker forwarded its error through the gradient channel before
-/// exiting (see [`guard_worker`]), surface that instead of a generic
-/// "hung up" — draining pending messages is fine, the step is aborting.
+/// worker forwarded its typed error through the gradient channel before
+/// exiting, surface that instead of a generic "hung up" — draining
+/// pending messages is fine, the step is aborting.
 fn leader_send_error(
-    grad_rx: &mpsc::Receiver<Result<GradMsg>>,
+    grad_rx: &mpsc::Receiver<Result<GradMsg, WorkerError>>,
     what: &str,
 ) -> anyhow::Error {
     while let Ok(msg) = grad_rx.try_recv() {
-        if let Err(e) = msg {
-            return anyhow::anyhow!("worker failed ({what}): {e:#}");
+        if let Err(we) = msg {
+            return anyhow::Error::new(we).context(format!("worker failed ({what})"));
         }
     }
     anyhow::anyhow!("worker hung up ({what})")
@@ -348,7 +773,7 @@ fn leader_send_error(
 /// "died at end".
 fn collect_finals(
     done_rx: mpsc::Receiver<(usize, Vec<Tensor>)>,
-    grad_rx: &mpsc::Receiver<Result<GradMsg>>,
+    grad_rx: &mpsc::Receiver<Result<GradMsg, WorkerError>>,
     handles: Vec<std::thread::JoinHandle<Result<()>>>,
     n: usize,
 ) -> Result<(Vec<Tensor>, bool)> {
@@ -369,34 +794,115 @@ fn collect_finals(
             .all(|(a, b)| a.data() == b.data())
     });
     for h in handles {
-        h.join().expect("dp worker panicked")?;
+        match h.join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!(
+                "dp worker thread panicked (the typed error was surfaced through the \
+                 gradient channel)"
+            ),
+        }
     }
     Ok((finals.swap_remove(0).1, identical))
 }
 
-/// Run a worker body and forward any error into the gradient channel:
-/// the leader's synchronous rendezvous then aborts with the worker's
-/// error instead of deadlocking on a silently-dead worker.
-fn guard_worker(
-    w: usize,
-    grad_tx: &mpsc::Sender<Result<GradMsg>>,
-    body: impl FnOnce() -> Result<()>,
-) -> Result<()> {
-    if let Err(e) = body() {
-        // ignore send failures: the leader may already be gone
-        let _ = grad_tx.send(Err(e));
-        anyhow::bail!("dp worker {w} failed");
+/// Apply the failpoint hooks a dp worker honours at `step`:
+/// `dp.worker` (panic / one-shot transient error) before compute and
+/// `grads.inject` (NaN into the first gradient element) after.
+fn worker_failpoint_pre(w: usize, step: usize) -> Result<()> {
+    if !failpoint::enabled() {
+        return Ok(());
     }
-    Ok(())
+    match failpoint::check("dp.worker", step as u64, w as u64) {
+        Some(failpoint::Action::Panic) => {
+            panic!("failpoint: injected panic in dp worker {w} at step {step}")
+        }
+        Some(failpoint::Action::Error) => {
+            anyhow::bail!("failpoint: injected transient error in dp worker {w} at step {step}")
+        }
+        _ => Ok(()),
+    }
 }
 
+fn worker_failpoint_post(w: usize, step: usize, grads: &mut [Tensor]) {
+    if failpoint::enabled()
+        && failpoint::check("grads.inject", step as u64, w as u64)
+            == Some(failpoint::Action::Nan)
+    {
+        if let Some(x) = grads.first_mut().and_then(|g| g.data_mut().first_mut()) {
+            *x = f32::NAN;
+        }
+    }
+}
+
+/// One worker attempt→directive exchange.  Computes (or fails), sends
+/// the result, and obeys the leader's directive; loops on `Retry` with
+/// `restore` run before each recompute (chunked: carry rollback).
+/// Returns once the step advanced (`Apply`/`Skip`), errors if the
+/// leader is gone.
+fn exchange_step(
+    w: usize,
+    step: usize,
+    be: &dyn Backend,
+    cfg: &TrainConfig,
+    state: &mut TrainState,
+    grad_tx: &mpsc::Sender<Result<GradMsg, WorkerError>>,
+    dir_rx: &mpsc::Receiver<Directive>,
+    mut compute: impl FnMut(&TrainState) -> Result<(f32, Vec<Tensor>)>,
+    mut restore: impl FnMut(&dyn Backend) -> Result<()>,
+    stats: (usize, usize, usize),
+) -> Result<()> {
+    loop {
+        let attempt = worker_failpoint_pre(w, step).and_then(|()| compute(state));
+        let msg = match attempt {
+            Ok((loss, mut grads)) => {
+                worker_failpoint_post(w, step, &mut grads);
+                Ok(GradMsg {
+                    worker: w,
+                    loss,
+                    grads,
+                    real_tokens: stats.0,
+                    slot_tokens: stats.1,
+                    sequences: stats.2,
+                })
+            }
+            Err(e) => Err(WorkerError {
+                worker: w,
+                panicked: false,
+                msg: format!("{e:#}"),
+            }),
+        };
+        grad_tx
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("leader hung up"))?;
+        match dir_rx.recv() {
+            Ok(Directive::Apply(g)) => {
+                be.apply_update(&cfg.model, state, &g)?;
+                return Ok(());
+            }
+            Ok(Directive::Skip) => {
+                // non-finite step: optimizer untouched, accounting advances
+                state.step += 1;
+                return Ok(());
+            }
+            Ok(Directive::Retry) => {
+                restore(be)?;
+                continue;
+            }
+            Err(_) => anyhow::bail!("leader hung up (directive)"),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
     num_shards: usize,
-    steps: usize,
     cfg: &TrainConfig,
-    grad_tx: mpsc::Sender<Result<GradMsg>>,
-    avg_rx: mpsc::Receiver<Vec<Tensor>>,
+    ckpt_active: bool,
+    resume: Option<Arc<Checkpoint>>,
+    grad_tx: mpsc::Sender<Result<GradMsg, WorkerError>>,
+    dir_rx: mpsc::Receiver<Directive>,
+    ckpt_tx: mpsc::Sender<CkptMsg>,
     done_tx: mpsc::Sender<(usize, Vec<Tensor>)>,
 ) -> Result<()> {
     // each worker owns its backend (thread-local by design)
@@ -410,27 +916,66 @@ fn worker_loop(
     pcfg.packing.rows = geom.rows;
     pcfg.packing.pack_len = geom.pack_len;
     pcfg.max_len = pcfg.max_len.min(geom.pack_len);
-    let pipeline = Pipeline::spawn(&pcfg, geom.buckets.clone(), geom.pad_geom, w, num_shards);
+    let mut feed = if ckpt_active || resume.is_some() {
+        WorkerFeed::Inline(BatchSource::new(
+            &pcfg,
+            geom.buckets.clone(),
+            geom.pad_geom,
+            w,
+            num_shards,
+        ))
+    } else {
+        WorkerFeed::Threaded(Pipeline::spawn(
+            &pcfg,
+            geom.buckets.clone(),
+            geom.pad_geom,
+            w,
+            num_shards,
+        ))
+    };
+    let mut start_step = 0;
+    if let Some(ck) = &resume {
+        state = ck.state.clone();
+        start_step = ck.state.step;
+        match &mut feed {
+            WorkerFeed::Inline(src) => src.restore(&ck.pipelines[w])?,
+            WorkerFeed::Threaded(_) => unreachable!("resume forces inline feed"),
+        }
+    }
 
-    for _step in 0..steps {
-        let batch: PackedBatch = pipeline
-            .next_batch()
-            .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
-        let (loss, grads) = be.loss_and_grads(&cfg.model, &state.params, &batch)?;
-        grad_tx
-            .send(Ok(GradMsg {
-                worker: w,
-                loss,
-                grads,
-                real_tokens: batch.real_tokens(),
-                slot_tokens: batch.rows() * batch.pack_len(),
-                sequences: batch.sequence_count(),
-            }))
-            .map_err(|_| anyhow::anyhow!("leader hung up"))?;
-        let avg = avg_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("leader hung up (avg)"))?;
-        be.apply_update(&cfg.model, &mut state, &avg)?;
+    for step in start_step..cfg.steps {
+        let batch: PackedBatch = feed.next_batch()?;
+        let stats = (
+            batch.real_tokens(),
+            batch.rows() * batch.pack_len(),
+            batch.sequence_count(),
+        );
+        exchange_step(
+            w,
+            step,
+            be.as_ref(),
+            cfg,
+            &mut state,
+            &grad_tx,
+            &dir_rx,
+            |st| be.loss_and_grads(&cfg.model, &st.params, &batch),
+            |_| Ok(()), // monolithic compute is stateless: nothing to roll back
+            stats,
+        )?;
+        if ckpt_active && (step + 1) % cfg.save_every == 0 {
+            let pipeline = match &feed {
+                WorkerFeed::Inline(src) => Some(src.checkpoint_state()),
+                WorkerFeed::Threaded(_) => None,
+            };
+            ckpt_tx
+                .send(CkptMsg {
+                    worker: w,
+                    pipeline,
+                    carry: None,
+                    state: (w == 0).then(|| state.clone()),
+                })
+                .map_err(|_| anyhow::anyhow!("leader hung up (ckpt)"))?;
+        }
     }
     done_tx
         .send((w, state.params))
@@ -442,38 +987,72 @@ fn worker_loop(
 /// every batch from the leader, computes chunked loss + grads normalized
 /// by the whole batch's denominator (the backend threads this worker's
 /// per-stream carries across steps), and applies the identical summed
-/// update.
+/// update.  Before each attempt it snapshots the carry so a leader-
+/// directed retry recomputes from the exact pre-step state.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop_chunked(
     w: usize,
-    steps: usize,
     cfg: &TrainConfig,
+    ckpt_active: bool,
+    resume: Option<Arc<Checkpoint>>,
     batch_rx: mpsc::Receiver<(PackedBatch, f32)>,
-    grad_tx: mpsc::Sender<Result<GradMsg>>,
-    sum_rx: mpsc::Receiver<Vec<Tensor>>,
+    grad_tx: mpsc::Sender<Result<GradMsg, WorkerError>>,
+    dir_rx: mpsc::Receiver<Directive>,
+    ckpt_tx: mpsc::Sender<CkptMsg>,
     done_tx: mpsc::Sender<(usize, Vec<Tensor>)>,
 ) -> Result<()> {
     let be = backend::create(cfg)?;
     let mut state = be.init_state(&cfg.model, cfg.seed)?;
-    for _step in 0..steps {
+    let mut start_step = 0;
+    if let Some(ck) = &resume {
+        state = ck.state.clone();
+        start_step = ck.state.step;
+        if let Some(carry) = &ck.carries[w] {
+            be.import_chunk_carry(&cfg.model, carry)?;
+        }
+    }
+    for step in start_step..cfg.steps {
         let (batch, denom) = batch_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("leader hung up (batch)"))?;
-        let (loss, grads) =
-            be.loss_and_grads_chunked(&cfg.model, &state.params, &batch, cfg.chunk_len, denom)?;
-        grad_tx
-            .send(Ok(GradMsg {
-                worker: w,
-                loss,
-                grads,
-                real_tokens: batch.real_tokens(),
-                slot_tokens: batch.rows() * batch.pack_len(),
-                sequences: batch.sequence_count(),
-            }))
-            .map_err(|_| anyhow::anyhow!("leader hung up"))?;
-        let sum = sum_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("leader hung up (sum)"))?;
-        be.apply_update(&cfg.model, &mut state, &sum)?;
+        let stats = (
+            batch.real_tokens(),
+            batch.rows() * batch.pack_len(),
+            batch.sequence_count(),
+        );
+        // snapshot the carry: compute advances it, so a retry must roll
+        // back first to stay bit-identical (None before the first step —
+        // nothing is consulted on all-fresh rows, so nothing to restore)
+        let carry_before = be.export_chunk_carry(&cfg.model);
+        exchange_step(
+            w,
+            step,
+            be.as_ref(),
+            cfg,
+            &mut state,
+            &grad_tx,
+            &dir_rx,
+            |st| {
+                be.loss_and_grads_chunked(&cfg.model, &st.params, &batch, cfg.chunk_len, denom)
+            },
+            |be: &dyn Backend| {
+                if let Some(c) = &carry_before {
+                    be.import_chunk_carry(&cfg.model, c)?;
+                }
+                Ok(())
+            },
+            stats,
+        )?;
+        if ckpt_active && (step + 1) % cfg.save_every == 0 {
+            ckpt_tx
+                .send(CkptMsg {
+                    worker: w,
+                    pipeline: None,
+                    carry: be.export_chunk_carry(&cfg.model),
+                    state: (w == 0).then(|| state.clone()),
+                })
+                .map_err(|_| anyhow::anyhow!("leader hung up (ckpt)"))?;
+        }
     }
     done_tx
         .send((w, state.params))

@@ -13,7 +13,9 @@
 //!   rates; JSON export for EXPERIMENTS.md.
 //! * [`telemetry`] — operator-level runtime telemetry snapshots over
 //!   the `util::trace` span layer (self-time shares, pool utilization).
-//! * [`checkpoint`] — binary save/load of params + optimizer state.
+//! * [`checkpoint`] — crash-safe binary save/load (CRC-verified v2
+//!   format) of params + optimizer state + data-pipeline/carry resume
+//!   state.
 
 pub mod checkpoint;
 pub mod dataparallel;
@@ -22,7 +24,8 @@ pub mod telemetry;
 pub mod trainer;
 
 pub use crate::backend::TrainState;
-pub use dataparallel::DataParallelTrainer;
+pub use checkpoint::Checkpoint;
+pub use dataparallel::{DataParallelTrainer, WorkerError};
 pub use metrics::TrainMetrics;
 pub use telemetry::TelemetrySnapshot;
 pub use trainer::Trainer;

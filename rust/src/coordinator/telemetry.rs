@@ -69,6 +69,9 @@ pub struct TelemetrySnapshot {
     pub slot_tokens: u64,
     /// 1 − real/slots over the traced steps (0 when nothing recorded)
     pub padding_rate: f64,
+    /// optimizer updates skipped by the non-finite guard (counted even
+    /// with tracing off — an integrity event, not a profiling sample)
+    pub nonfinite_skips: u64,
     pub pool: PoolUtil,
 }
 
@@ -151,6 +154,7 @@ impl TelemetrySnapshot {
             } else {
                 0.0
             },
+            nonfinite_skips: trace::nonfinite_skips(),
             pool: PoolUtil {
                 dispatches: pc.dispatches,
                 inline_fallbacks: pc.inline_fallbacks,
@@ -197,6 +201,7 @@ impl TelemetrySnapshot {
             ("real_tokens", Json::from(self.real_tokens as i64)),
             ("slot_tokens", Json::from(self.slot_tokens as i64)),
             ("padding_rate", Json::from(self.padding_rate)),
+            ("nonfinite_skips", Json::from(self.nonfinite_skips as i64)),
             (
                 "pool",
                 Json::from_pairs([
@@ -221,11 +226,12 @@ impl TelemetrySnapshot {
         let _ = writeln!(
             s,
             "operator breakdown (self-time shares; padding {:.1}%, pool busy {:.0}%, \
-             {} dispatches / {} inline)",
+             {} dispatches / {} inline, {} non-finite skips)",
             self.padding_rate * 100.0,
             self.pool.mean_busy_frac * 100.0,
             self.pool.dispatches,
             self.pool.inline_fallbacks,
+            self.nonfinite_skips,
         );
         let _ = writeln!(
             s,

@@ -1,5 +1,4 @@
-//! Single-process trainer: data pipeline thread → bounded queue → fused
-//! backend train step.
+//! Single-process trainer: data pipeline → fused backend train step.
 //!
 //! One [`Trainer`] drives one model replica on one [`Backend`] — the
 //! native CPU implementation by default, or the PJRT artifact runtime
@@ -17,7 +16,18 @@
 //!                 max length,
 //! * `SingleSequence` — one sequence per step, bucketed to the smallest
 //!                 supported length that fits (the paper's baseline).
+//!
+//! Batch production lives in [`BatchSource`], a synchronous
+//! corpus + packer state machine that is **checkpointable**: it tracks a
+//! mark (corpus RNG + packer clone at the last drained boundary) plus a
+//! consumed-batch count, so a resumed run replays to the exact batch the
+//! killed run would have produced next.  The source runs either inline
+//! on the training thread (when periodic checkpointing needs its state)
+//! or behind the classic [`Pipeline`] producer thread + bounded queue —
+//! production order is identical either way.
 
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::backend::{Backend, TrainState};
@@ -30,19 +40,175 @@ use crate::util::threadpool::BoundedQueue;
 use crate::util::trace::{self, Op};
 use crate::Result;
 
+use super::checkpoint::{self, PackerState, PipelineState};
 use super::metrics::{StepRecord, TrainMetrics};
 use super::telemetry::{self, TelemetrySnapshot};
 
-/// Batch producer: runs the corpus + batching scheme on its own thread.
+/// Synchronous batch producer with checkpoint/restore.
+///
+/// Production is deterministic given (config, shard): the corpus RNG
+/// and packer evolve in lockstep with the batches handed out, FIFO.
+/// Checkpointing uses **mark + replay**: whenever the pending queue
+/// drains, the source re-marks (snapshots corpus state + packer) before
+/// producing; [`BatchSource::checkpoint_state`] returns the mark plus
+/// how many batches were consumed past it.  Restore rewinds to the mark
+/// and replays that many productions — cheap (packing only) and
+/// bit-exact, without ever serializing a `PackedBatch`.
+pub struct BatchSource {
+    scheme: Scheme,
+    corpus: SyntheticCorpus,
+    packer: PackerState,
+    pending: VecDeque<PackedBatch>,
+    buckets: Vec<usize>,
+    pad_geom: (usize, usize),
+    mark_corpus: crate::data::CorpusState,
+    mark_packer: PackerState,
+    consumed: u64,
+}
+
+impl BatchSource {
+    /// Build shard `shard` of `num_shards` for `cfg`'s scheme.
+    /// `buckets` / `pad_geom` come from the backend's geometry.
+    pub fn new(
+        cfg: &TrainConfig,
+        buckets: Vec<usize>,
+        pad_geom: (usize, usize),
+        shard: usize,
+        num_shards: usize,
+    ) -> BatchSource {
+        let sampler = LengthSampler::calibrated(cfg.min_len, cfg.max_len, cfg.mean_len);
+        let corpus =
+            SyntheticCorpus::new(cfg.model.vocab_size, sampler, cfg.seed, shard, num_shards);
+        let packer = match cfg.scheme {
+            Scheme::Pack => {
+                if cfg.packing.greedy_buffer > 0 {
+                    PackerState::Greedy(GreedyPacker::new(
+                        cfg.packing.pack_len,
+                        cfg.packing.rows,
+                        cfg.packing.greedy_buffer,
+                    ))
+                } else {
+                    PackerState::Streaming(StreamingPacker::with_streams(
+                        cfg.packing.pack_len,
+                        cfg.packing.rows,
+                        cfg.packing.streams.max(1),
+                    ))
+                }
+            }
+            Scheme::Padding | Scheme::SingleSequence => PackerState::None,
+        };
+        let mark_corpus = corpus.state();
+        let mark_packer = packer.clone();
+        BatchSource {
+            scheme: cfg.scheme,
+            corpus,
+            packer,
+            pending: VecDeque::new(),
+            buckets,
+            pad_geom,
+            mark_corpus,
+            mark_packer,
+            consumed: 0,
+        }
+    }
+
+    /// One production iteration: may append zero or more batches to
+    /// `pending` (packers buffer; single-sequence can skip a document).
+    fn produce(&mut self) {
+        match self.scheme {
+            Scheme::Pack => {
+                let s = self.corpus.next_sequence();
+                let ready = match &mut self.packer {
+                    PackerState::Streaming(p) => trace::with(Op::Pack, || p.push(s)),
+                    PackerState::Greedy(p) => trace::with(Op::Pack, || p.push(s)),
+                    PackerState::None => unreachable!("pack scheme always has a packer"),
+                };
+                self.pending.extend(ready);
+            }
+            Scheme::Padding => {
+                let (rows, max_len) = self.pad_geom;
+                let seqs: Vec<Sequence> = (0..rows)
+                    .map(|_| {
+                        let mut s = self.corpus.next_sequence();
+                        s.tokens.truncate(max_len);
+                        s
+                    })
+                    .collect();
+                let b = trace::with(Op::Pack, || pad_to_max(&seqs, max_len));
+                self.pending.push_back(b);
+            }
+            Scheme::SingleSequence => {
+                let s = self.corpus.next_sequence();
+                if let Some(b) = trace::with(Op::Pack, || single_sequence_batch(&s, &self.buckets))
+                {
+                    self.pending.push_back(b);
+                }
+            }
+        }
+    }
+
+    /// Produce the next batch (never fails: the synthetic corpus is
+    /// infinite).  Re-marks at every drained-queue boundary.
+    pub fn next_batch(&mut self) -> PackedBatch {
+        if self.pending.is_empty() {
+            self.mark_corpus = self.corpus.state();
+            self.mark_packer = self.packer.clone();
+            self.consumed = 0;
+            while self.pending.is_empty() {
+                self.produce();
+            }
+        }
+        self.consumed += 1;
+        self.pending.pop_front().expect("pending non-empty")
+    }
+
+    /// Snapshot for a checkpoint: the last mark + batches consumed past
+    /// it.  Valid at any point between batches.
+    pub fn checkpoint_state(&self) -> PipelineState {
+        PipelineState {
+            corpus: self.mark_corpus,
+            packer: self.mark_packer.clone(),
+            consumed: self.consumed,
+        }
+    }
+
+    /// Rewind to a checkpointed position: restore the mark, then replay
+    /// (produce and discard) the consumed batches.  After this the next
+    /// [`BatchSource::next_batch`] returns exactly what the saving run
+    /// would have produced next.
+    pub fn restore(&mut self, st: &PipelineState) -> Result<()> {
+        match (&st.packer, &self.packer) {
+            (PackerState::None, PackerState::None)
+            | (PackerState::Streaming(_), PackerState::Streaming(_))
+            | (PackerState::Greedy(_), PackerState::Greedy(_)) => {}
+            _ => anyhow::bail!(
+                "checkpointed packer kind does not match the config's batching scheme \
+                 (was the run configuration changed between save and resume?)"
+            ),
+        }
+        self.corpus.restore(st.corpus);
+        self.packer = st.packer.clone();
+        self.pending.clear();
+        self.mark_corpus = st.corpus;
+        self.mark_packer = st.packer.clone();
+        self.consumed = 0;
+        for _ in 0..st.consumed {
+            let _ = self.next_batch();
+        }
+        Ok(())
+    }
+}
+
+/// Batch producer thread: a [`BatchSource`] behind a bounded queue.
 pub struct Pipeline {
     queue: BoundedQueue<PackedBatch>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Pipeline {
-    /// Spawn a producer for `scheme`.  `buckets` is the single-sequence
-    /// bucket list from the backend's geometry; `pad_geom` = (rows,
-    /// max_len) for the padding scheme.
+    /// Spawn a producer for `cfg`'s scheme.  `buckets` is the
+    /// single-sequence bucket list from the backend's geometry;
+    /// `pad_geom` = (rows, max_len) for the padding scheme.
     pub fn spawn(
         cfg: &TrainConfig,
         buckets: Vec<usize>,
@@ -52,78 +218,12 @@ impl Pipeline {
     ) -> Pipeline {
         let queue = BoundedQueue::new(cfg.queue_depth);
         let q = queue.clone();
-        let scheme = cfg.scheme;
-        let packing = cfg.packing.clone();
-        let sampler = LengthSampler::calibrated(cfg.min_len, cfg.max_len, cfg.mean_len);
-        let vocab = cfg.model.vocab_size;
-        let seed = cfg.seed;
+        let mut src = BatchSource::new(cfg, buckets, pad_geom, shard, num_shards);
         let handle = std::thread::Builder::new()
             .name(format!("pipeline-{shard}"))
-            .spawn(move || {
-                let mut corpus = SyntheticCorpus::new(vocab, sampler, seed, shard, num_shards);
-                match scheme {
-                    Scheme::Pack => {
-                        // both packers may emit several ready batches per
-                        // push (each exactly rows_per_batch rows)
-                        if packing.greedy_buffer > 0 {
-                            let mut p = GreedyPacker::new(
-                                packing.pack_len,
-                                packing.rows,
-                                packing.greedy_buffer,
-                            );
-                            loop {
-                                let s = corpus.next_sequence();
-                                let ready = trace::with(Op::Pack, || p.push(s));
-                                for b in ready {
-                                    if q.push(b).is_err() {
-                                        return;
-                                    }
-                                }
-                            }
-                        } else {
-                            let mut p = StreamingPacker::with_streams(
-                                packing.pack_len,
-                                packing.rows,
-                                packing.streams.max(1),
-                            );
-                            loop {
-                                let s = corpus.next_sequence();
-                                let ready = trace::with(Op::Pack, || p.push(s));
-                                for b in ready {
-                                    if q.push(b).is_err() {
-                                        return;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    Scheme::Padding => {
-                        let (rows, max_len) = pad_geom;
-                        loop {
-                            let seqs: Vec<Sequence> = (0..rows)
-                                .map(|_| {
-                                    let mut s = corpus.next_sequence();
-                                    s.tokens.truncate(max_len);
-                                    s
-                                })
-                                .collect();
-                            let b = trace::with(Op::Pack, || pad_to_max(&seqs, max_len));
-                            if q.push(b).is_err() {
-                                return;
-                            }
-                        }
-                    }
-                    Scheme::SingleSequence => loop {
-                        let s = corpus.next_sequence();
-                        match trace::with(Op::Pack, || single_sequence_batch(&s, &buckets)) {
-                            Some(b) => {
-                                if q.push(b).is_err() {
-                                    return;
-                                }
-                            }
-                            None => continue, // longer than every bucket: skip
-                        }
-                    },
+            .spawn(move || loop {
+                if q.push(src.next_batch()).is_err() {
+                    return;
                 }
             })
             .expect("spawn pipeline");
@@ -151,12 +251,40 @@ impl Drop for Pipeline {
     }
 }
 
+/// How the trainer gets batches: a producer thread (throughput) or the
+/// source inline on the training thread (checkpointable — its state is
+/// inspectable between steps).  Production order is identical.
+enum Feeder {
+    Threaded(Pipeline),
+    Inline(BatchSource),
+}
+
+impl Feeder {
+    fn next_batch(&mut self) -> PackedBatch {
+        match self {
+            Feeder::Threaded(p) => p.next_batch().expect("pipeline closed"),
+            Feeder::Inline(s) => s.next_batch(),
+        }
+    }
+
+    fn queue_len(&self) -> usize {
+        match self {
+            Feeder::Threaded(p) => p.queue_len(),
+            Feeder::Inline(_) => 0,
+        }
+    }
+}
+
 /// Single-replica trainer over an arbitrary backend.
 pub struct Trainer {
     backend: Box<dyn Backend>,
     cfg: TrainConfig,
     state: TrainState,
-    pipeline: Pipeline,
+    feeder: Feeder,
+    buckets: Vec<usize>,
+    pad_geom: (usize, usize),
+    save_path: Option<PathBuf>,
+    start_step: usize,
     pub metrics: TrainMetrics,
 }
 
@@ -201,12 +329,35 @@ impl Trainer {
             }
         }
         let state = backend.init_state(&cfg.model, cfg.seed)?;
-        let pipeline = Pipeline::spawn(&cfg, geom.buckets.clone(), geom.pad_geom, 0, 1);
+        // periodic checkpointing needs the source's state between steps,
+        // so it runs inline; otherwise keep the overlap of the producer
+        // thread
+        let feeder = if cfg.save_every > 0 {
+            Feeder::Inline(BatchSource::new(
+                &cfg,
+                geom.buckets.clone(),
+                geom.pad_geom,
+                0,
+                1,
+            ))
+        } else {
+            Feeder::Threaded(Pipeline::spawn(
+                &cfg,
+                geom.buckets.clone(),
+                geom.pad_geom,
+                0,
+                1,
+            ))
+        };
         Ok(Trainer {
             backend,
             cfg,
             state,
-            pipeline,
+            feeder,
+            buckets: geom.buckets,
+            pad_geom: geom.pad_geom,
+            save_path: None,
+            start_step: 0,
             metrics: TrainMetrics::new(),
         })
     }
@@ -223,13 +374,82 @@ impl Trainer {
         self.backend.as_ref()
     }
 
+    /// Where periodic checkpoints (cadence `cfg.save_every`) and the
+    /// end-of-run save go.
+    pub fn set_save_path(&mut self, path: PathBuf) {
+        self.save_path = Some(path);
+    }
+
+    /// Resume from a checkpoint written by [`Trainer::save_checkpoint`]:
+    /// restores params/optimizer/step, the data pipeline position, and
+    /// (chunked runs) the backend's carry state.  The continued run is
+    /// bit-identical to one that was never interrupted.
+    pub fn resume_from(&mut self, path: &Path) -> Result<()> {
+        let specs = self.backend.param_specs(&self.cfg.model)?;
+        let ck = checkpoint::load_full(path, &specs)?;
+        anyhow::ensure!(
+            ck.config == self.cfg.model.name,
+            "checkpoint is for model `{}` but the run is configured for `{}`",
+            ck.config,
+            self.cfg.model.name
+        );
+        anyhow::ensure!(
+            ck.pipelines.len() <= 1 && ck.carries.len() <= 1,
+            "checkpoint holds {} pipeline / {} carry states — it was written by a \
+             data-parallel run; resume it with dp-train",
+            ck.pipelines.len(),
+            ck.carries.len()
+        );
+        anyhow::ensure!(
+            !ck.pipelines.is_empty(),
+            "checkpoint has no pipeline state (end-of-run tensor-only save?); \
+             it cannot seed a bitwise resume"
+        );
+        self.state = ck.state;
+        if let Some(Some(carry)) = ck.carries.first() {
+            self.backend.import_chunk_carry(&self.cfg.model, carry)?;
+        }
+        let mut src = BatchSource::new(&self.cfg, self.buckets.clone(), self.pad_geom, 0, 1);
+        src.restore(&ck.pipelines[0])?;
+        self.feeder = Feeder::Inline(src);
+        self.start_step = self.state.step;
+        log::info!(
+            "resumed from {} at step {}",
+            path.display(),
+            self.start_step
+        );
+        Ok(())
+    }
+
+    /// Write a full checkpoint (tensors + pipeline + carry).  Requires
+    /// the inline feeder (`cfg.save_every > 0` or a resumed run); a
+    /// threaded pipeline's position is unknowable, so only the tensors
+    /// are saved and a resume from the file is refused.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let specs = self.backend.param_specs(&self.cfg.model)?;
+        let pipelines = match &self.feeder {
+            Feeder::Inline(src) => vec![src.checkpoint_state()],
+            Feeder::Threaded(_) => Vec::new(),
+        };
+        let carries = if self.cfg.chunk_len > 0 {
+            vec![self.backend.export_chunk_carry(&self.cfg.model)]
+        } else {
+            Vec::new()
+        };
+        checkpoint::save_full(
+            path,
+            &self.cfg.model.name,
+            &specs,
+            &self.state,
+            &pipelines,
+            &carries,
+        )
+    }
+
     /// Run one training step; returns the loss.
     pub fn step(&mut self) -> Result<f32> {
         let t0 = Instant::now();
-        let batch = self
-            .pipeline
-            .next_batch()
-            .ok_or_else(|| anyhow::anyhow!("pipeline closed"))?;
+        let batch = self.feeder.next_batch();
         let loss = if self.cfg.chunk_len > 0 {
             // §5 chunked/stateful step: fixed L = chunk_len operator
             // shapes, state carried across chunk and row boundaries.
@@ -258,9 +478,11 @@ impl Trainer {
         Ok(loss)
     }
 
-    /// Train for the configured number of steps.
+    /// Train for the configured number of steps (continuing from the
+    /// resume point, if any), saving every `cfg.save_every` steps when a
+    /// save path is set.
     pub fn train(&mut self) -> Result<()> {
-        for i in 0..self.cfg.steps {
+        for i in self.start_step..self.cfg.steps {
             let loss = self.step()?;
             if i % 20 == 0 || i + 1 == self.cfg.steps {
                 log::info!(
@@ -269,8 +491,14 @@ impl Trainer {
                     self.cfg.steps,
                     loss,
                     self.metrics.records.last().map(|r| r.real_tokens).unwrap_or(0),
-                    self.pipeline.queue_len(),
+                    self.feeder.queue_len(),
                 );
+            }
+            if self.cfg.save_every > 0 && (i + 1) % self.cfg.save_every == 0 {
+                if let Some(path) = self.save_path.clone() {
+                    self.save_checkpoint(&path)?;
+                    log::info!("checkpoint written to {} (step {})", path.display(), i + 1);
+                }
             }
             if trace::enabled() && (i + 1) % telemetry::LOG_EVERY == 0 {
                 log::info!("{}", TelemetrySnapshot::capture().format_table());

@@ -25,6 +25,17 @@ pub const PAPER_MIN_LEN: usize = 57;
 pub const PAPER_MAX_LEN: usize = 2048;
 pub const PAPER_MEAN_LEN: f64 = 646.0;
 
+/// The mutable position of a [`SyntheticCorpus`] — everything needed
+/// to continue the stream bit-exactly after a restart. The samplers
+/// themselves are stateless (rebuilt from config); only the raw RNG
+/// state and the monotone id counter advance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CorpusState {
+    pub rng_state: u128,
+    pub rng_inc: u128,
+    pub next_id: u64,
+}
+
 /// Infinite synthetic document stream.
 pub struct SyntheticCorpus {
     lengths: LengthSampler,
@@ -73,6 +84,20 @@ impl SyntheticCorpus {
 
     /// Draw the next document.  Token ids are in [1, vocab); 0 is reserved
     /// for padding.  A lightweight bigram structure (token depends on the
+    /// Snapshot the stream position for checkpointing.
+    pub fn state(&self) -> CorpusState {
+        let (rng_state, rng_inc) = self.rng.to_raw();
+        CorpusState { rng_state, rng_inc, next_id: self.next_id }
+    }
+
+    /// Rewind/forward the stream to a snapshotted position; subsequent
+    /// [`SyntheticCorpus::next_sequence`] calls replay the original run
+    /// bit-exactly.
+    pub fn restore(&mut self, s: CorpusState) {
+        self.rng = Pcg64::from_raw(s.rng_state, s.rng_inc);
+        self.next_id = s.next_id;
+    }
+
     /// previous token's bucket) gives the model something learnable so the
     /// e2e example's loss curve is meaningful.
     pub fn next_sequence(&mut self) -> Sequence {

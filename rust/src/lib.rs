@@ -26,6 +26,8 @@
 //! |---|---|
 //! | [`util`] | offline substrates: RNG, JSON, CLI parsing, stats, bench + property-test harnesses, logging, and the **persistent parked `WorkerPool`** behind `parallel_chunks_mut`/`parallel_chunks2_mut` — long-lived workers on per-worker condvars, zero spawns and zero allocations per dispatch (`spawn_count` audits it) |
 //! | [`util::trace`] | zero-alloc operator tracing: preallocated per-thread span rings over the fixed [`util::trace::Op`] set (span names follow `<subsystem>.<op>`, e.g. `scan.fwd`, `gemm.in_proj`, `pool.busy` — see the module docs), pool/token counters, chrome://tracing export; one relaxed atomic load when disabled, allocation-free recording when enabled |
+//! | [`util::failpoint`] | deterministic fault injection (`PACKMAMBA_FAILPOINT` grammar: `site=action[:arg][@step[+]][#worker]`) driving the fault-tolerance suite: kill mid-checkpoint-write / after publish, NaN gradient poisoning, dp worker panic / one-shot transient error; the same one-relaxed-load discipline as `trace` when disarmed |
+//! | [`util::bytes`] | little-endian encode/decode helpers (bounds-checked `Reader`) for the checkpoint resume-state sections and packer snapshots |
 //! | [`tensor`] | host tensors (f32 / software bf16) used by backends, tests, checkpoints and host-side all-reduce |
 //! | [`config`] | model / training / packing / backend configuration, JSON-backed |
 //! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
@@ -35,7 +37,7 @@
 //! | [`backend::gemm`] | the blocked, register-tiled GEMM micro-kernel (B-panel packing, MC/KC blocking, beta-accumulate) behind `ops::matmul*`, with **runtime-dispatched tiers**: `PACKMAMBA_GEMM={naive,blocked,avx2}` (unset = best supported; avx2 = the `unsafe` AVX2+FMA 4×8 tile, runtime-gated, degrading to the safe tile off-ISA) |
 //! | [`backend::arena`] | `StepArena` — recycled step buffers + GEMM scratch; steady-state training steps (monolithic and chunked) allocate nothing |
 //! | [`runtime`] | artifact manifest + host values; PJRT client wrapper behind the `pjrt` feature |
-//! | [`coordinator`] | trainer, schemes, data-parallel leader (monolithic shard-per-worker mode and chunk-aware stream-split mode with gradient-sum all-reduce), metrics, checkpoints |
+//! | [`coordinator`] | trainer, schemes, data-parallel leader (monolithic shard-per-worker mode and chunk-aware stream-split mode with gradient-sum all-reduce), metrics, checkpoints — fault-tolerant: CRC-verified crash-safe v2 checkpoints with bitwise resume (`--save-every` / `--resume`), a non-finite loss/grad guard that skips bad updates (aborting after `max_bad_steps` consecutive), and typed dp worker-failure containment with bounded step retries |
 //! | [`coordinator::telemetry`] | [`coordinator::TelemetrySnapshot`]: folds the span layer into per-operator self-time shares, padding ratios, and pool utilization; stamped into `BENCH_*` JSON, logged every `LOG_EVERY` steps, paired with `--trace`'s chrome export |
 //! | [`perfmodel`] | analytic A100 model reproducing the paper-scale figure shapes |
 //!
@@ -48,6 +50,7 @@
 //! | `PACKMAMBA_BACKEND` | bench-side backend selection (`native`, or `pjrt` with the feature + artifacts) |
 //! | `PACKMAMBA_TRACE` | any non-empty value except `0` enables operator tracing at startup (the `--trace <path>` CLI flag enables it too, and additionally writes a chrome://tracing JSON at exit) |
 //! | `PACKMAMBA_LOG` | max log level for the stderr logger: `error` \| `warn` \| `info` (default) \| `debug` \| `trace` \| `off`; unknown values warn and fall back to `info` |
+//! | `PACKMAMBA_FAILPOINT` | arm deterministic failpoints at startup (`;`-separated `site=action[:arg][@step[+]][#worker]` rules — see [`util::failpoint`]); injected kills exit with code 113 so tests tell them apart from real failures; a malformed spec exits 2 |
 
 pub mod backend;
 pub mod config;

@@ -15,17 +15,18 @@ use std::path::{Path, PathBuf};
 
 use packmamba::config::{BackendKind, ModelConfig, Scheme, TrainConfig};
 use packmamba::coordinator::metrics::STABLE_WINDOW;
-use packmamba::coordinator::{checkpoint, DataParallelTrainer, TelemetrySnapshot, Trainer};
+use packmamba::coordinator::{DataParallelTrainer, TelemetrySnapshot, Trainer};
 use packmamba::data::LengthTrace;
 use packmamba::packing::{pad_to_max, GreedyPacker, PackingStats, Sequence, StreamingPacker};
 use packmamba::perfmodel::{fig5_table, GpuSpec};
 use packmamba::runtime::Manifest;
 use packmamba::util::argparse::{App, Command, Matches};
-use packmamba::util::{logging, trace};
+use packmamba::util::{failpoint, logging, trace};
 
 fn main() {
     logging::init();
     trace::init_from_env();
+    failpoint::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let app = App::new("packmamba", "PackMamba training coordinator")
         .command(
@@ -45,6 +46,13 @@ fn main() {
                 )
                 .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts"))
                 .flag("save", "o", "checkpoint output path", None)
+                .flag(
+                    "save-every",
+                    "",
+                    "periodic checkpoint cadence in steps (0 = end-of-run only; needs --save)",
+                    Some("0"),
+                )
+                .flag("resume", "r", "resume from a checkpoint (bitwise continuation)", None)
                 .flag("metrics-out", "", "write metrics json here", None)
                 .flag("trace", "", "enable operator tracing; write chrome trace here", None),
         )
@@ -67,6 +75,14 @@ fn main() {
                     Some("0"),
                 )
                 .flag("artifacts", "a", "artifacts directory (pjrt backend)", Some("artifacts"))
+                .flag("save", "o", "checkpoint output path", None)
+                .flag(
+                    "save-every",
+                    "",
+                    "periodic checkpoint cadence in steps (0 = off; needs --save)",
+                    Some("0"),
+                )
+                .flag("resume", "r", "resume from a checkpoint (bitwise continuation)", None)
                 .flag("trace", "", "enable operator tracing; write chrome trace here", None),
         )
         .command(
@@ -142,6 +158,13 @@ fn build_train_config(m: &Matches) -> anyhow::Result<TrainConfig> {
     if let Some(w) = m.get_usize("workers").unwrap_or(None) {
         cfg.dp_workers = w;
     }
+    if let Some(e) = m.get_usize("save-every").unwrap_or(None) {
+        cfg.save_every = e;
+    }
+    anyhow::ensure!(
+        cfg.save_every == 0 || m.get("save").is_some(),
+        "--save-every needs a --save path for the checkpoints"
+    );
     Ok(cfg)
 }
 
@@ -166,6 +189,12 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
     let trace_path = trace_setup(m);
     let cfg = build_train_config(m)?;
     let mut trainer = Trainer::from_config(cfg.clone())?;
+    if let Some(path) = m.get("save") {
+        trainer.set_save_path(PathBuf::from(path));
+    }
+    if let Some(path) = m.get("resume") {
+        trainer.resume_from(Path::new(path))?;
+    }
     log::info!(
         "training {} ({} params) scheme={} backend={} steps={}",
         cfg.model.name,
@@ -206,8 +235,7 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
         log::info!("metrics written to {out}");
     }
     if let Some(path) = m.get("save") {
-        let specs = trainer.backend().param_specs(&cfg.model)?;
-        checkpoint::save(&PathBuf::from(path), &cfg.model.name, &specs, trainer.state())?;
+        trainer.save_checkpoint(Path::new(path))?;
         log::info!("checkpoint written to {path}");
     }
     if let Some(path) = trace_path {
@@ -223,7 +251,13 @@ fn cmd_dp_train(m: &Matches) -> anyhow::Result<()> {
     if let Some(w) = m.get_usize("workers")? {
         cfg.dp_workers = w;
     }
-    let dp = DataParallelTrainer::new(cfg.clone())?;
+    let mut dp = DataParallelTrainer::new(cfg.clone())?;
+    if let Some(path) = m.get("save") {
+        dp.set_save_path(PathBuf::from(path));
+    }
+    if let Some(path) = m.get("resume") {
+        dp.set_resume_path(PathBuf::from(path));
+    }
     let result = dp.run()?;
     println!(
         "dp-train: {} workers, {} steps, mean-loss {:.4} -> {:.4}, replicas identical: {}",

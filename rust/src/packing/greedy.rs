@@ -19,8 +19,9 @@
 //! the fixed row count.)
 
 use super::{PackedBatch, PackedRow, Sequence};
+use crate::util::bytes;
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct GreedyPacker {
     pack_len: usize,
     rows_per_batch: usize,
@@ -110,6 +111,53 @@ impl GreedyPacker {
         self.ready.extend(open);
     }
 
+    /// Serialize the complete packer state (geometry + buffered
+    /// sequences + packed-but-unemitted rows) for checkpointing.
+    pub fn encode_state(&self, out: &mut Vec<u8>) {
+        bytes::put_u64(out, self.pack_len as u64);
+        bytes::put_u64(out, self.rows_per_batch as u64);
+        bytes::put_u64(out, self.buffer_cap as u64);
+        bytes::put_u32(out, self.buffer.len() as u32);
+        for s in &self.buffer {
+            encode_sequence(out, s);
+        }
+        bytes::put_u32(out, self.ready.len() as u32);
+        for row in &self.ready {
+            bytes::put_u32(out, row.sequences.len() as u32);
+            for s in &row.sequences {
+                encode_sequence(out, s);
+            }
+        }
+    }
+
+    /// Rebuild a packer from [`GreedyPacker::encode_state`] output; the
+    /// restored packer continues the original emission order bit-exactly.
+    pub fn decode_state(r: &mut bytes::Reader) -> crate::Result<Self> {
+        let pack_len = r.get_u64()? as usize;
+        let rows_per_batch = r.get_u64()? as usize;
+        let buffer_cap = r.get_u64()? as usize;
+        anyhow::ensure!(
+            pack_len > 0 && rows_per_batch > 0 && buffer_cap > 0,
+            "corrupt greedy packer geometry ({pack_len}, {rows_per_batch}, {buffer_cap})"
+        );
+        let n_buf = r.get_u32()? as usize;
+        let mut buffer = Vec::with_capacity(n_buf.max(buffer_cap));
+        for _ in 0..n_buf {
+            buffer.push(decode_sequence(r)?);
+        }
+        let n_ready = r.get_u32()? as usize;
+        let mut ready = Vec::with_capacity(n_ready);
+        for _ in 0..n_ready {
+            let n = r.get_u32()? as usize;
+            let mut sequences = Vec::with_capacity(n);
+            for _ in 0..n {
+                sequences.push(decode_sequence(r)?);
+            }
+            ready.push(PackedRow { sequences });
+        }
+        Ok(Self { pack_len, rows_per_batch, buffer_cap, buffer, ready })
+    }
+
     /// Emit every full batch the ready queue holds (in ready order).
     ///
     /// Every greedy row holds only whole sequences (each starting at
@@ -126,6 +174,17 @@ impl GreedyPacker {
         }
         out
     }
+}
+
+fn encode_sequence(out: &mut Vec<u8>, s: &Sequence) {
+    bytes::put_u64(out, s.id);
+    bytes::put_i32s(out, &s.tokens);
+}
+
+fn decode_sequence(r: &mut bytes::Reader) -> crate::Result<Sequence> {
+    let id = r.get_u64()?;
+    let tokens = r.get_i32s()?;
+    Ok(Sequence { tokens, id })
 }
 
 #[cfg(test)]
@@ -267,6 +326,37 @@ mod tests {
             "greedy {pad_greedy} should beat streaming {pad_stream}"
         );
         assert!(pad_greedy < 0.05, "greedy should be near zero: {pad_greedy}");
+    }
+
+    #[test]
+    fn state_round_trip_continues_bit_exactly() {
+        // snapshot with a half-full buffer and packed-but-unemitted rows
+        let mut p = GreedyPacker::new(32, 2, 8);
+        for i in 0..11u64 {
+            let n = 1 + ((i * 13) % 31) as usize;
+            let _ = p.push(seq(i, n)); // one buffer pack + partial refill
+        }
+        let mut buf = Vec::new();
+        p.encode_state(&mut buf);
+        let mut r = bytes::Reader::new(&buf);
+        let mut q = GreedyPacker::decode_state(&mut r).unwrap();
+        assert!(r.is_empty());
+        for i in 11..40u64 {
+            let n = 1 + ((i * 13) % 31) as usize;
+            let a = p.push(seq(i, n));
+            let b = q.push(seq(i, n));
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.tokens.data(), y.tokens.data());
+                assert_eq!(x.row_ids, y.row_ids);
+            }
+        }
+        let fa = p.flush();
+        let fb = q.flush();
+        assert_eq!(fa.len(), fb.len());
+        for (x, y) in fa.iter().zip(&fb) {
+            assert_eq!(x.row_ids, y.row_ids);
+        }
     }
 
     #[test]

@@ -33,10 +33,11 @@
 //! `streams`).
 
 use super::{Fragment, PackedBatch, Sequence};
+use crate::util::bytes;
 
 /// One independent packing lane: the in-progress row plus the sealed
 /// rows not yet emitted.
-#[derive(Debug, Default)]
+#[derive(Clone, Debug, Default)]
 struct Lane {
     current: Vec<Fragment>,
     current_used: usize,
@@ -102,7 +103,7 @@ impl Lane {
 }
 
 /// Incremental packer: push sequences, pop full batches.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct StreamingPacker {
     pack_len: usize,
     rows_per_batch: usize,
@@ -218,6 +219,88 @@ impl StreamingPacker {
             .map(|l| l.sealed.len() + usize::from(l.current_used > 0))
             .sum()
     }
+
+    /// Serialize the complete packer state (geometry + every buffered
+    /// fragment and lane offset) for checkpointing.
+    pub fn encode_state(&self, out: &mut Vec<u8>) {
+        bytes::put_u64(out, self.pack_len as u64);
+        bytes::put_u64(out, self.rows_per_batch as u64);
+        bytes::put_u32(out, self.lanes.len() as u32);
+        for lane in &self.lanes {
+            bytes::put_u64(out, lane.current_used as u64);
+            bytes::put_u32(out, lane.current.len() as u32);
+            for f in &lane.current {
+                encode_fragment(out, f);
+            }
+            bytes::put_u32(out, lane.sealed.len() as u32);
+            for row in &lane.sealed {
+                bytes::put_u32(out, row.len() as u32);
+                for f in row {
+                    encode_fragment(out, f);
+                }
+            }
+        }
+    }
+
+    /// Rebuild a packer from [`StreamingPacker::encode_state`] output;
+    /// the restored packer continues the original emission order
+    /// bit-exactly.
+    pub fn decode_state(r: &mut bytes::Reader) -> crate::Result<Self> {
+        let pack_len = r.get_u64()? as usize;
+        let rows_per_batch = r.get_u64()? as usize;
+        let streams = r.get_u32()? as usize;
+        anyhow::ensure!(
+            pack_len > 0 && rows_per_batch > 0 && streams > 0 && rows_per_batch % streams == 0,
+            "corrupt streaming packer geometry ({pack_len}, {rows_per_batch}, {streams})"
+        );
+        let mut lanes = Vec::with_capacity(streams);
+        for _ in 0..streams {
+            let current_used = r.get_u64()? as usize;
+            let n_current = r.get_u32()? as usize;
+            let mut current = Vec::with_capacity(n_current);
+            for _ in 0..n_current {
+                current.push(decode_fragment(r)?);
+            }
+            let n_sealed = r.get_u32()? as usize;
+            let mut sealed = Vec::with_capacity(n_sealed);
+            for _ in 0..n_sealed {
+                let n = r.get_u32()? as usize;
+                let mut row = Vec::with_capacity(n);
+                for _ in 0..n {
+                    row.push(decode_fragment(r)?);
+                }
+                sealed.push(row);
+            }
+            lanes.push(Lane { current, current_used, sealed });
+        }
+        Ok(Self {
+            pack_len,
+            rows_per_batch,
+            rows_per_stream: rows_per_batch / streams,
+            lanes,
+        })
+    }
+}
+
+fn encode_fragment(out: &mut Vec<u8>, f: &Fragment) {
+    bytes::put_u64(out, f.seq.id);
+    bytes::put_i32s(out, &f.seq.tokens);
+    bytes::put_u64(out, f.start as u64);
+    match f.next {
+        Some(t) => bytes::put_i64(out, t as i64),
+        None => bytes::put_i64(out, i64::MIN),
+    }
+}
+
+fn decode_fragment(r: &mut bytes::Reader) -> crate::Result<Fragment> {
+    let id = r.get_u64()?;
+    let tokens = r.get_i32s()?;
+    let start = r.get_u64()? as usize;
+    let next = match r.get_i64()? {
+        i64::MIN => None,
+        t => Some(i32::try_from(t).map_err(|_| anyhow::anyhow!("corrupt fragment target {t}"))?),
+    };
+    Ok(Fragment { seq: Sequence { tokens, id }, start, next })
 }
 
 #[cfg(test)]
@@ -278,6 +361,45 @@ mod tests {
     fn flush_on_empty_is_none() {
         let mut p = StreamingPacker::new(8, 2);
         assert!(p.flush().is_empty());
+    }
+
+    #[test]
+    fn state_round_trip_continues_bit_exactly() {
+        // mid-stream snapshot with partial lanes, sealed rows, and an
+        // over-length split in flight; the restored packer must emit
+        // the same batches as the original for the same future pushes.
+        let mut p = StreamingPacker::with_streams(8, 4, 2);
+        for i in 0..5u64 {
+            let n = 1 + (i as usize * 5) % 11; // includes over-length (>8)
+            let _ = p.push(seq(i, n));
+        }
+        let mut buf = Vec::new();
+        p.encode_state(&mut buf);
+        let mut r = crate::util::bytes::Reader::new(&buf);
+        let mut q = StreamingPacker::decode_state(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(p.pending_rows(), q.pending_rows());
+        for i in 5..20u64 {
+            let n = 1 + (i as usize * 5) % 11;
+            let a = p.push(seq(i, n));
+            let b = q.push(seq(i, n));
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.tokens.data(), y.tokens.data());
+                assert_eq!(x.row_ids, y.row_ids);
+                assert_eq!(x.streams, y.streams);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncated_state() {
+        let mut p = StreamingPacker::new(8, 2);
+        let _ = p.push(seq(0, 5));
+        let mut buf = Vec::new();
+        p.encode_state(&mut buf);
+        let mut r = crate::util::bytes::Reader::new(&buf[..buf.len() - 3]);
+        assert!(StreamingPacker::decode_state(&mut r).is_err());
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Little-endian binary encoding helpers for checkpoint sections.
+//!
+//! Checkpoint payloads must round-trip *bit-exactly* (RNG raw state,
+//! f32 carries), so resume state is serialized as raw little-endian
+//! bytes rather than JSON. `put_*` append to a `Vec<u8>`; [`Reader`]
+//! consumes a slice with bounds-checked `get_*` that error (never
+//! panic) on truncated input, so corrupt checkpoints surface as
+//! `Err` from `checkpoint::load`.
+
+use crate::Result;
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u128(out: &mut Vec<u8>, v: u128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed i32 slice (token buffers).
+pub fn put_i32s(out: &mut Vec<u8>, v: &[i32]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Length-prefixed f32 slice (carry lanes). Raw bit pattern, exact.
+pub fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.remaining() >= n,
+            "truncated section: wanted {n} bytes, {} left",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn get_i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed count, sanity-capped against the bytes actually
+    /// left in the buffer so a corrupt length cannot trigger a huge
+    /// allocation.
+    fn get_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.get_u64()? as usize;
+        anyhow::ensure!(
+            n.checked_mul(elem_bytes).is_some_and(|b| b <= self.remaining()),
+            "corrupt length {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn get_i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.get_len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(i32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_scalars_and_slices() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 7);
+        put_u32(&mut out, 0xDEAD_BEEF);
+        put_u64(&mut out, u64::MAX - 1);
+        put_u128(&mut out, (1u128 << 100) | 3);
+        put_i64(&mut out, -42);
+        put_i32s(&mut out, &[1, -2, 3]);
+        put_f32s(&mut out, &[1.5, f32::MIN_POSITIVE, -0.0]);
+
+        let mut r = Reader::new(&out);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_u128().unwrap(), (1u128 << 100) | 3);
+        assert_eq!(r.get_i64().unwrap(), -42);
+        assert_eq!(r.get_i32s().unwrap(), vec![1, -2, 3]);
+        let f = r.get_f32s().unwrap();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(f[2].to_bits(), (-0.0f32).to_bits());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncated_reads_error() {
+        let mut out = Vec::new();
+        put_u64(&mut out, 5);
+        let mut r = Reader::new(&out[..4]);
+        assert!(r.get_u64().is_err());
+    }
+
+    #[test]
+    fn corrupt_length_is_rejected_not_allocated() {
+        // a length field claiming u64::MAX elements must error, not OOM
+        let mut out = Vec::new();
+        put_u64(&mut out, u64::MAX);
+        let mut r = Reader::new(&out);
+        assert!(r.get_f32s().is_err());
+    }
+}

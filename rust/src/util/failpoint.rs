@@ -1,0 +1,268 @@
+//! Deterministic fault injection for the fault-tolerance test suite.
+//!
+//! Mirrors the zero-cost gating discipline of [`crate::util::trace`]:
+//! when no failpoints are armed, every site check is **one relaxed
+//! atomic load** and nothing else — no lock, no string compare, no
+//! allocation. Arming happens once at startup from the
+//! `PACKMAMBA_FAILPOINT` environment variable (or programmatically in
+//! tests via [`set_spec`]/[`clear`]).
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! PACKMAMBA_FAILPOINT="site=action[:arg][@step[+]][#worker][;...]"
+//! ```
+//!
+//! * `site` — a named site compiled into the runtime (see below).
+//! * `action` — `kill` (exit the process with code [`KILL_EXIT_CODE`]),
+//!   `panic`, `nan` (poison gradients), `error` (inject a *one-shot*
+//!   recoverable step error, modelling a transient fault).
+//! * `:arg` — action argument (e.g. byte threshold for `ckpt.write`).
+//! * `@step` — fire only at that 0-based global step; `@step+` fires at
+//!   that step and every later one. Omitted = fire at every step.
+//! * `#worker` — fire only on that dp worker index. Omitted = any.
+//!
+//! ## Sites
+//!
+//! | site | where | actions |
+//! |---|---|---|
+//! | `ckpt.write` | checkpoint writer, after `arg` written bytes | `kill` |
+//! | `ckpt.saved` | right after a checkpoint is published (renamed) | `kill` |
+//! | `grads.inject` | native step path, before the non-finite guard | `nan` |
+//! | `dp.worker` | top of a dp worker's step | `panic`, `error` |
+//!
+//! Example: `PACKMAMBA_FAILPOINT="ckpt.saved=kill@4"` kills the
+//! process immediately after the checkpoint at step 4 is durable —
+//! the crash-recovery tests resume from exactly that file.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Exit code used by the `kill` action so tests can tell an injected
+/// kill apart from a genuine failure (which exits 1) or success.
+pub const KILL_EXIT_CODE: i32 = 113;
+
+/// What an armed failpoint wants the site to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Exit the process immediately with [`KILL_EXIT_CODE`].
+    Kill,
+    /// Panic on the current thread.
+    Panic,
+    /// Poison the gradient buffer with `NaN`.
+    Nan,
+    /// Return a recoverable step error (one-shot: disarms after firing).
+    Error,
+}
+
+#[derive(Clone, Debug)]
+struct Rule {
+    site: String,
+    action: Action,
+    arg: Option<u64>,
+    step: Option<u64>,
+    /// `@step+`: fire at `step` and every later step.
+    step_ge: bool,
+    worker: Option<u64>,
+    /// `Error` rules model transient faults and fire exactly once.
+    spent: bool,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RULES: Mutex<Vec<Rule>> = Mutex::new(Vec::new());
+
+/// One relaxed atomic load; `false` whenever no failpoints are armed.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Parse `PACKMAMBA_FAILPOINT` and arm the listed failpoints. Call
+/// once at startup; a missing/empty variable leaves everything
+/// disabled.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("PACKMAMBA_FAILPOINT") {
+        if !v.trim().is_empty() {
+            if let Err(e) = set_spec(&v) {
+                eprintln!("packmamba: bad PACKMAMBA_FAILPOINT: {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Arm failpoints from a spec string (replaces any previous set).
+pub fn set_spec(spec: &str) -> crate::Result<()> {
+    let mut rules = Vec::new();
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        rules.push(parse_rule(part)?);
+    }
+    let armed = !rules.is_empty();
+    *RULES.lock().unwrap() = rules;
+    ENABLED.store(armed, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm all failpoints (tests).
+pub fn clear() {
+    RULES.lock().unwrap().clear();
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+fn parse_rule(s: &str) -> crate::Result<Rule> {
+    let (site, rest) = s
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("failpoint rule `{s}` missing `=`"))?;
+    // rest = action[:arg][@step[+]][#worker], in that order
+    let (rest, worker) = match rest.split_once('#') {
+        Some((r, w)) => (r, Some(w.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("failpoint rule `{s}`: bad worker `{w}`")
+        })?)),
+        None => (rest, None),
+    };
+    let (rest, step, step_ge) = match rest.split_once('@') {
+        Some((r, st)) => {
+            let (st, ge) = match st.strip_suffix('+') {
+                Some(st) => (st, true),
+                None => (st, false),
+            };
+            let st = st.parse::<u64>().map_err(|_| {
+                anyhow::anyhow!("failpoint rule `{s}`: bad step `{st}`")
+            })?;
+            (r, Some(st), ge)
+        }
+        None => (rest, None, false),
+    };
+    let (action, arg) = match rest.split_once(':') {
+        Some((a, arg)) => (a, Some(arg.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("failpoint rule `{s}`: bad arg `{arg}`")
+        })?)),
+        None => (rest, None),
+    };
+    let action = match action {
+        "kill" => Action::Kill,
+        "panic" => Action::Panic,
+        "nan" => Action::Nan,
+        "error" => Action::Error,
+        other => anyhow::bail!("failpoint rule `{s}`: unknown action `{other}`"),
+    };
+    Ok(Rule {
+        site: site.trim().to_string(),
+        action,
+        arg,
+        step,
+        step_ge,
+        worker,
+        spent: false,
+    })
+}
+
+/// Check whether `site` should fire at (`step`, `worker`). Returns the
+/// armed action, or `None`. Callers must pre-gate on [`enabled`] (the
+/// function re-checks, but the whole point is to keep the disabled
+/// path to the single atomic load at the call site).
+pub fn check(site: &str, step: u64, worker: u64) -> Option<Action> {
+    if !enabled() {
+        return None;
+    }
+    let mut rules = RULES.lock().unwrap();
+    for r in rules.iter_mut() {
+        if r.spent || r.site != site {
+            continue;
+        }
+        if let Some(st) = r.step {
+            let hit = if r.step_ge { step >= st } else { step == st };
+            if !hit {
+                continue;
+            }
+        }
+        if let Some(w) = r.worker {
+            if w != worker {
+                continue;
+            }
+        }
+        if r.action == Action::Error {
+            r.spent = true; // transient fault: fires once
+        }
+        return Some(r.action);
+    }
+    None
+}
+
+/// Byte threshold of an armed `kill`-after-bytes rule for `site`
+/// (e.g. `ckpt.write=kill:512`), if any. The writer truncates at the
+/// threshold and kills the process, leaving a torn file on disk.
+pub fn byte_limit(site: &str) -> Option<u64> {
+    if !enabled() {
+        return None;
+    }
+    let rules = RULES.lock().unwrap();
+    rules
+        .iter()
+        .find(|r| !r.spent && r.site == site && r.action == Action::Kill)
+        .and_then(|r| r.arg)
+}
+
+/// Perform the process-kill action. Separate fn so call sites read as
+/// `failpoint::kill_now(site)` next to the event they just completed.
+pub fn kill_now(site: &str) -> ! {
+    eprintln!("packmamba: failpoint `{site}` killing process");
+    std::process::exit(KILL_EXIT_CODE);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    // failpoint state is process-global; serialize the tests
+    static LOCK: StdMutex<()> = StdMutex::new(());
+
+    #[test]
+    fn disabled_by_default_and_after_clear() {
+        let _g = LOCK.lock().unwrap();
+        clear();
+        assert!(!enabled());
+        assert_eq!(check("dp.worker", 0, 0), None);
+        assert_eq!(byte_limit("ckpt.write"), None);
+    }
+
+    #[test]
+    fn parses_full_grammar() {
+        let _g = LOCK.lock().unwrap();
+        set_spec("dp.worker=panic@3#1; grads.inject=nan@2+ ;ckpt.write=kill:512").unwrap();
+        assert!(enabled());
+        assert_eq!(check("dp.worker", 3, 1), Some(Action::Panic));
+        assert_eq!(check("dp.worker", 3, 0), None);
+        assert_eq!(check("dp.worker", 2, 1), None);
+        assert_eq!(check("grads.inject", 1, 0), None);
+        assert_eq!(check("grads.inject", 2, 0), Some(Action::Nan));
+        assert_eq!(check("grads.inject", 9, 0), Some(Action::Nan));
+        assert_eq!(byte_limit("ckpt.write"), Some(512));
+        clear();
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn error_rules_are_one_shot() {
+        let _g = LOCK.lock().unwrap();
+        set_spec("dp.worker=error@2#0").unwrap();
+        assert_eq!(check("dp.worker", 2, 0), Some(Action::Error));
+        assert_eq!(check("dp.worker", 2, 0), None, "transient fault fires once");
+        clear();
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        let _g = LOCK.lock().unwrap();
+        assert!(set_spec("no-equals").is_err());
+        assert!(set_spec("site=explode").is_err());
+        assert!(set_spec("site=kill:notanum").is_err());
+        assert!(set_spec("site=kill@notanum").is_err());
+        clear();
+    }
+}

@@ -8,6 +8,8 @@
 
 pub mod argparse;
 pub mod bench;
+pub mod bytes;
+pub mod failpoint;
 pub mod json;
 pub mod logging;
 pub mod proptest;

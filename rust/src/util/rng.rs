@@ -41,6 +41,17 @@ impl Pcg64 {
         rng
     }
 
+    /// Raw generator state `(state, inc)` for bit-exact checkpointing.
+    pub fn to_raw(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg64::to_raw`] output. The restored
+    /// generator continues the original sequence exactly.
+    pub fn from_raw(state: u128, inc: u128) -> Self {
+        Self { state, inc }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         self.state = self
             .state

@@ -90,6 +90,8 @@ ops! {
     Allreduce => "dp.allreduce",
     ChunkGather => "chunk.gather",
     TrainStep => "step.train",
+    GuardScan => "guard.scan",
+    CkptSave => "ckpt.save",
     PoolDispatch => "pool.dispatch",
     PoolBusy => "pool.busy",
     PoolPark => "pool.park",
@@ -122,6 +124,13 @@ static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
 // padding accounting (real vs device-slot tokens seen by traced steps)
 static REAL_TOKENS: AtomicU64 = AtomicU64::new(0);
 static SLOT_TOKENS: AtomicU64 = AtomicU64::new(0);
+
+// non-finite guard events (steps whose update was skipped).  Counted
+// UNCONDITIONALLY — a skipped update is a training-integrity event, not
+// a profiling sample, and the acceptance path asserts on it with
+// tracing off.  The cost is one atomic RMW on the (rare) bad step and
+// nothing on the good path.
+static NONFINITE_SKIPS: AtomicU64 = AtomicU64::new(0);
 
 /// Whether tracing is on (one relaxed load — the disabled fast path).
 #[inline(always)]
@@ -388,6 +397,18 @@ pub fn token_counters() -> (u64, u64) {
     )
 }
 
+/// Record a step whose optimizer update was skipped by the non-finite
+/// guard. Unlike the profiling counters this is **not** gated on
+/// [`enabled`]: integrity events must be observable in untraced runs.
+pub fn count_nonfinite_skip() {
+    NONFINITE_SKIPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total steps skipped by the non-finite guard since start/[`reset`].
+pub fn nonfinite_skips() -> u64 {
+    NONFINITE_SKIPS.load(Ordering::Relaxed)
+}
+
 // ---------------------------------------------------------------------------
 // snapshots
 // ---------------------------------------------------------------------------
@@ -482,6 +503,7 @@ pub fn reset() {
     POOL_TASKS.store(0, Ordering::Relaxed);
     REAL_TOKENS.store(0, Ordering::Relaxed);
     SLOT_TOKENS.store(0, Ordering::Relaxed);
+    NONFINITE_SKIPS.store(0, Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------------

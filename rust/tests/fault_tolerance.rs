@@ -1,0 +1,451 @@
+//! Fault-tolerance suite: crash-safe checkpoint/resume, non-finite
+//! guards, dp worker failure containment, and the deterministic
+//! failpoints that drive all of it.
+//!
+//! Invariants (ISSUE 7):
+//!   * a killed-and-resumed run is **bit-identical** to an uninterrupted
+//!     one — monolithic and chunked, single-trainer and data-parallel,
+//!   * an injected NaN gradient skips the optimizer update (params
+//!     untouched, step count advances, telemetry counter bumps) and only
+//!     `max_bad_steps` *consecutive* bad steps abort the run,
+//!   * a dp worker panic at step K fails that step with a typed
+//!     [`WorkerError`] naming the worker — the leader neither hangs nor
+//!     aborts the process,
+//!   * a transient dp worker error is retried (bounded by
+//!     `step_retries`) and the retried run stays bit-identical,
+//!   * a torn checkpoint write (kill mid-write) leaves only a temp file
+//!     that the loader rejects; the published path is never torn.
+//!
+//! Failpoint state and the non-finite skip counter are process-global,
+//! so every test takes `FP_LOCK` and asserts counters as deltas.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Mutex;
+
+use packmamba::backend::{Backend, NativeBackend};
+use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::{checkpoint, DataParallelTrainer, Trainer, WorkerError};
+use packmamba::tensor::Tensor;
+use packmamba::util::{failpoint, trace};
+
+/// Serializes tests that touch the process-global failpoint registry,
+/// the non-finite counter, or `PACKMAMBA_THREADS`.
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    FP_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn nano() -> ModelConfig {
+    ModelConfig {
+        name: "nano-ft".to_string(),
+        vocab_size: 61,
+        d_model: 16,
+        n_layers: 2,
+        d_state: 4,
+        d_conv: 4,
+        expand: 2,
+    }
+}
+
+/// Monolithic pack-scheme config at test scale.
+fn cfg(steps: usize) -> TrainConfig {
+    let mut c = TrainConfig::defaults(nano());
+    c.scheme = Scheme::Pack;
+    c.packing.pack_len = 64;
+    c.packing.rows = 2;
+    c.min_len = 4;
+    c.max_len = 32;
+    c.mean_len = 12.0;
+    c.steps = steps;
+    c
+}
+
+/// Chunked/stateful config with over-length sequences, so carries and
+/// split fragments are live across every checkpoint boundary.
+fn cfg_chunked(steps: usize) -> TrainConfig {
+    let mut c = cfg(steps);
+    c.chunk_len = 16;
+    c.max_len = 96; // > pack_len: the streaming packer splits fragments
+    c.mean_len = 24.0;
+    c
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("packmamba_ft_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn params_of(t: &Trainer) -> Vec<Tensor> {
+    t.state().params.clone()
+}
+
+/// Train `total` steps checkpointing every `every`, stop ("crash") after
+/// `stop` steps, then resume a fresh trainer from the checkpoint and run
+/// it to completion. Returns (resumed trainer, uninterrupted trainer).
+fn interrupt_and_resume(
+    mk: impl Fn(usize) -> TrainConfig,
+    total: usize,
+    stop: usize,
+    every: usize,
+    dir: &std::path::Path,
+) -> (Trainer, Trainer) {
+    let ck = dir.join("ck.bin");
+
+    let mut interrupted = Trainer::from_config({
+        let mut c = mk(stop);
+        c.save_every = every;
+        c
+    })
+    .unwrap();
+    interrupted.set_save_path(ck.clone());
+    interrupted.train().unwrap();
+
+    let mut resumed = Trainer::from_config(mk(total)).unwrap();
+    resumed.resume_from(&ck).unwrap();
+    resumed.train().unwrap();
+
+    let mut full = Trainer::from_config(mk(total)).unwrap();
+    full.train().unwrap();
+
+    (resumed, full)
+}
+
+#[test]
+fn single_monolithic_resume_is_bit_identical() {
+    let _g = lock();
+    failpoint::clear();
+    let dir = tmp("mono");
+    let (resumed, full) = interrupt_and_resume(cfg, 10, 6, 3, &dir);
+    assert_eq!(resumed.state().step, 10);
+    assert_eq!(
+        params_of(&resumed),
+        params_of(&full),
+        "resumed monolithic run must be bit-identical to an uninterrupted one"
+    );
+}
+
+#[test]
+fn single_chunked_resume_is_bit_identical_across_thread_counts() {
+    let _g = lock();
+    failpoint::clear();
+    for threads in ["1", "4"] {
+        std::env::set_var("PACKMAMBA_THREADS", threads);
+        let dir = tmp("chunked");
+        let (resumed, full) = interrupt_and_resume(cfg_chunked, 10, 6, 3, &dir);
+        assert_eq!(
+            params_of(&resumed),
+            params_of(&full),
+            "resumed chunked run (threads={threads}) must be bit-identical"
+        );
+    }
+    std::env::remove_var("PACKMAMBA_THREADS");
+}
+
+#[test]
+fn tensor_only_save_refuses_bitwise_resume() {
+    let _g = lock();
+    failpoint::clear();
+    let dir = tmp("tensor_only");
+    let path = dir.join("end.bin");
+    // save_every = 0: threaded pipeline, position unknowable
+    let mut t = Trainer::from_config(cfg(3)).unwrap();
+    t.train().unwrap();
+    t.save_checkpoint(&path).unwrap();
+
+    let specs = NativeBackend::new().param_specs(&nano()).unwrap();
+    let ck = checkpoint::load_full(&path, &specs).unwrap();
+    assert!(ck.pipelines.is_empty(), "threaded feeder has no position");
+
+    let mut t2 = Trainer::from_config(cfg(6)).unwrap();
+    let err = t2.resume_from(&path).unwrap_err().to_string();
+    assert!(err.contains("pipeline state"), "{err}");
+}
+
+#[test]
+fn dp_monolithic_resume_is_bit_identical() {
+    let _g = lock();
+    failpoint::clear();
+    let dir = tmp("dp_mono");
+    let ck = dir.join("ck.bin");
+    let mk = |steps: usize| {
+        let mut c = cfg(steps);
+        c.dp_workers = 2;
+        c
+    };
+
+    let mut interrupted_cfg = mk(6);
+    interrupted_cfg.save_every = 3;
+    let mut dp = DataParallelTrainer::new(interrupted_cfg).unwrap();
+    dp.set_save_path(ck.clone());
+    dp.run().unwrap();
+
+    let mut dp = DataParallelTrainer::new(mk(10)).unwrap();
+    dp.set_resume_path(ck);
+    let resumed = dp.run().unwrap();
+    assert!(resumed.replicas_identical);
+
+    let full = DataParallelTrainer::new(mk(10)).unwrap().run().unwrap();
+    assert_eq!(
+        resumed.final_params, full.final_params,
+        "resumed dp-monolithic run must be bit-identical to an uninterrupted one"
+    );
+}
+
+#[test]
+fn dp_chunked_resume_is_bit_identical() {
+    let _g = lock();
+    failpoint::clear();
+    let dir = tmp("dp_chunk");
+    let ck = dir.join("ck.bin");
+    let mk = |steps: usize| {
+        let mut c = cfg_chunked(steps);
+        c.dp_workers = 2;
+        c.packing.streams = 2;
+        c
+    };
+
+    let mut interrupted_cfg = mk(6);
+    interrupted_cfg.save_every = 3;
+    let mut dp = DataParallelTrainer::new(interrupted_cfg).unwrap();
+    dp.set_save_path(ck.clone());
+    dp.run().unwrap();
+
+    let mut dp = DataParallelTrainer::new(mk(10)).unwrap();
+    dp.set_resume_path(ck);
+    let resumed = dp.run().unwrap();
+    assert!(resumed.replicas_identical);
+
+    let full = DataParallelTrainer::new(mk(10)).unwrap().run().unwrap();
+    assert_eq!(
+        resumed.final_params, full.final_params,
+        "resumed dp-chunked run must be bit-identical to an uninterrupted one"
+    );
+}
+
+#[test]
+fn injected_nan_skips_update_and_counts() {
+    let _g = lock();
+    failpoint::clear();
+    let mut t = Trainer::from_config(cfg(5)).unwrap();
+    t.step().unwrap();
+    t.step().unwrap();
+    let before_params = params_of(&t);
+    let before_skips = trace::nonfinite_skips();
+
+    failpoint::set_spec("grads.inject=nan@2").unwrap();
+    t.step().unwrap(); // state.step == 2: poisoned, guarded, skipped
+    failpoint::clear();
+
+    assert_eq!(
+        params_of(&t),
+        before_params,
+        "a guarded non-finite step must not touch the parameters"
+    );
+    assert_eq!(t.state().step, 3, "a skipped step still advances the count");
+    assert_eq!(trace::nonfinite_skips() - before_skips, 1);
+
+    // a clean step right after resumes learning
+    t.step().unwrap();
+    assert_ne!(params_of(&t), before_params);
+}
+
+#[test]
+fn consecutive_nonfinite_steps_abort() {
+    let _g = lock();
+    failpoint::clear();
+    failpoint::set_spec("grads.inject=nan@0+").unwrap();
+    let mut c = cfg(10);
+    c.max_bad_steps = 2;
+    let mut t = Trainer::from_config(c).unwrap();
+    t.step().unwrap(); // bad step 1/2: skipped
+    let err = t.step().unwrap_err();
+    failpoint::clear();
+    assert!(
+        format!("{err:#}").contains("consecutive non-finite"),
+        "{err:#}"
+    );
+}
+
+#[test]
+fn dp_worker_panic_is_contained_and_typed() {
+    let _g = lock();
+    failpoint::clear();
+    failpoint::set_spec("dp.worker=panic@2#1").unwrap();
+    let mut c = cfg(6);
+    c.dp_workers = 2;
+    let err = DataParallelTrainer::new(c).unwrap().run().unwrap_err();
+    failpoint::clear();
+    let we = err
+        .downcast_ref::<WorkerError>()
+        .unwrap_or_else(|| panic!("expected a typed WorkerError, got: {err:#}"));
+    assert_eq!(we.worker, 1, "the error names the failing worker");
+    assert!(we.panicked);
+    assert!(we.msg.contains("injected panic"), "{}", we.msg);
+}
+
+#[test]
+fn dp_transient_error_is_retried_bit_exactly() {
+    let _g = lock();
+    failpoint::clear();
+    let mk = || {
+        let mut c = cfg(6);
+        c.dp_workers = 2;
+        c.step_retries = 1;
+        c
+    };
+    let clean = DataParallelTrainer::new(mk()).unwrap().run().unwrap();
+
+    failpoint::set_spec("dp.worker=error@2#0").unwrap();
+    let retried = DataParallelTrainer::new(mk()).unwrap().run().unwrap();
+    failpoint::clear();
+
+    assert!(retried.replicas_identical);
+    assert_eq!(
+        retried.final_params, clean.final_params,
+        "a retried step must reproduce the undisturbed run bit-exactly"
+    );
+}
+
+#[test]
+fn dp_transient_error_without_retries_is_typed_failure() {
+    let _g = lock();
+    failpoint::clear();
+    failpoint::set_spec("dp.worker=error@2#0").unwrap();
+    let mut c = cfg(6);
+    c.dp_workers = 2;
+    c.step_retries = 0;
+    let err = DataParallelTrainer::new(c).unwrap().run().unwrap_err();
+    failpoint::clear();
+    let we = err
+        .downcast_ref::<WorkerError>()
+        .unwrap_or_else(|| panic!("expected a typed WorkerError, got: {err:#}"));
+    assert_eq!(we.worker, 0);
+    assert!(!we.panicked, "a transient error is not a panic");
+    assert!(we.msg.contains("transient"), "{}", we.msg);
+}
+
+#[test]
+fn dp_injected_nan_skips_on_all_replicas() {
+    let _g = lock();
+    failpoint::clear();
+    let before_skips = trace::nonfinite_skips();
+    failpoint::set_spec("grads.inject=nan@2#0").unwrap();
+    let mut c = cfg(5);
+    c.dp_workers = 2;
+    let res = DataParallelTrainer::new(c).unwrap().run().unwrap();
+    failpoint::clear();
+    assert!(
+        res.replicas_identical,
+        "a skipped step must skip on every replica"
+    );
+    assert!(trace::nonfinite_skips() > before_skips);
+}
+
+// ---------------------------------------------------------------------------
+// subprocess tests: real kills through the CLI binary
+// ---------------------------------------------------------------------------
+
+fn write_config(dir: &std::path::Path, c: &TrainConfig) -> PathBuf {
+    let path = dir.join("config.json");
+    std::fs::write(&path, c.to_json().pretty()).unwrap();
+    path
+}
+
+fn run_cli(args: &[&str], failpoint_spec: Option<&str>) -> std::process::ExitStatus {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_packmamba"));
+    cmd.args(args).env_remove("PACKMAMBA_FAILPOINT");
+    if let Some(spec) = failpoint_spec {
+        cmd.env("PACKMAMBA_FAILPOINT", spec);
+    }
+    let out = cmd.output().unwrap();
+    if failpoint_spec.is_none() {
+        assert!(
+            out.status.success(),
+            "cli run failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    out.status
+}
+
+#[test]
+fn killed_after_checkpoint_publish_resumes_bit_identically() {
+    let dir = tmp("cli_kill");
+    let mut c = cfg(10);
+    c.save_every = 5;
+    let config = write_config(&dir, &c);
+    let config = config.to_str().unwrap();
+    let full = dir.join("full.bin");
+    let killed = dir.join("killed.bin");
+
+    run_cli(&["train", "--config", config, "--save", full.to_str().unwrap()], None);
+
+    // die right after the step-5 checkpoint becomes durable
+    let status = run_cli(
+        &["train", "--config", config, "--save", killed.to_str().unwrap()],
+        Some("ckpt.saved=kill@5"),
+    );
+    assert_eq!(
+        status.code(),
+        Some(failpoint::KILL_EXIT_CODE),
+        "the failpoint kill must use its reserved exit code"
+    );
+    assert!(killed.exists(), "the published checkpoint survives the kill");
+
+    run_cli(
+        &[
+            "train",
+            "--config",
+            config,
+            "--save",
+            killed.to_str().unwrap(),
+            "--resume",
+            killed.to_str().unwrap(),
+        ],
+        None,
+    );
+
+    assert_eq!(
+        std::fs::read(&full).unwrap(),
+        std::fs::read(&killed).unwrap(),
+        "resumed final checkpoint must be byte-identical to the uninterrupted run's"
+    );
+}
+
+#[test]
+fn torn_checkpoint_write_leaves_only_a_rejected_temp_file() {
+    let dir = tmp("cli_torn");
+    let mut c = cfg(6);
+    c.save_every = 5;
+    let config = write_config(&dir, &c);
+    let target = dir.join("torn.bin");
+
+    // kill after 50 KB of the ~280 KB file: mid-tensor-payload
+    let status = run_cli(
+        &[
+            "train",
+            "--config",
+            config.to_str().unwrap(),
+            "--save",
+            target.to_str().unwrap(),
+        ],
+        Some("ckpt.write=kill:50000"),
+    );
+    assert_eq!(status.code(), Some(failpoint::KILL_EXIT_CODE));
+
+    assert!(
+        !target.exists(),
+        "a kill mid-write must never publish the final path"
+    );
+    let tmp_file = target.with_extension("tmp");
+    assert!(tmp_file.exists(), "the torn temp file remains for inspection");
+    let specs = NativeBackend::new().param_specs(&nano()).unwrap();
+    let err = checkpoint::load_full(&tmp_file, &specs).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("size mismatch"),
+        "torn file must be rejected by the exact-size check: {err:#}"
+    );
+}

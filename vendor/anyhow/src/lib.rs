@@ -2,44 +2,104 @@
 //!
 //! The build environment has no crates.io access, so this tiny crate
 //! provides source-compatible `anyhow::{Result, Error, anyhow!, ensure!,
-//! bail!}`.  Errors are a message string; `?` works on any
+//! bail!}`.  An [`Error`] is either a message string or a boxed typed
+//! root error plus a stack of context strings: `?` works on any
 //! `std::error::Error` via the blanket `From` impl (which is coherent
 //! because `Error` itself deliberately does not implement
-//! `std::error::Error`, mirroring the real crate's design).
+//! `std::error::Error`, mirroring the real crate's design), and a typed
+//! root stays downcastable through any number of [`Error::context`]
+//! frames — the fault-tolerance suite pulls `WorkerError` back out of a
+//! contextualized dp failure this way.
 
 use std::fmt;
 
-/// String-backed error value.
+enum Root {
+    Msg(String),
+    Boxed(Box<dyn std::error::Error + Send + Sync + 'static>),
+}
+
+/// Message- or typed-root-backed error value with context frames.
 pub struct Error {
-    msg: String,
+    /// Context frames, outermost first; `{e}` shows the outermost
+    /// frame (or the root), `{e:#}` joins the whole chain with `: `
+    /// like the real crate's alternate mode.
+    ctx: Vec<String>,
+    root: Root,
 }
 
 impl Error {
     /// Construct from anything displayable (what `anyhow!` expands to).
     pub fn msg<M: fmt::Display>(message: M) -> Error {
         Error {
-            msg: message.to_string(),
+            ctx: Vec::new(),
+            root: Root::Msg(message.to_string()),
         }
+    }
+
+    /// Construct from a typed error, preserving it for
+    /// [`downcast_ref`](Error::downcast_ref).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error {
+            ctx: Vec::new(),
+            root: Root::Boxed(Box::new(e)),
+        }
+    }
+
+    /// Wrap with an outer context frame (the real crate's
+    /// `Context::context` on an already-built `Error`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.ctx.insert(0, context.to_string());
+        self
+    }
+
+    /// Downcast the *root* error; context frames are transparent, as in
+    /// the real crate.
+    pub fn downcast_ref<T: std::error::Error + 'static>(&self) -> Option<&T> {
+        match &self.root {
+            Root::Boxed(e) => e.as_ref().downcast_ref::<T>(),
+            Root::Msg(_) => None,
+        }
+    }
+
+    fn fmt_root(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.root {
+            Root::Msg(m) => f.write_str(m),
+            Root::Boxed(e) => write!(f, "{e}"),
+        }
+    }
+
+    fn fmt_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in &self.ctx {
+            write!(f, "{c}: ")?;
+        }
+        self.fmt_root(f)
     }
 }
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        // `{e}` and `{e:#}` both print the message; the shim keeps no
-        // cause chain to elaborate in alternate mode.
-        f.write_str(&self.msg)
+        if f.alternate() {
+            // `{e:#}`: the full chain, outermost context first.
+            self.fmt_chain(f)
+        } else {
+            match self.ctx.first() {
+                Some(c) => f.write_str(c),
+                None => self.fmt_root(f),
+            }
+        }
     }
 }
 
 impl fmt::Debug for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.msg)
+        // `unwrap()`-style output: show the whole chain.
+        self.fmt_chain(f)
     }
 }
 
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        Error { msg: e.to_string() }
+        Error::new(e)
     }
 }
 
@@ -128,5 +188,37 @@ mod tests {
             Ok(())
         }
         assert!(f().unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn typed_root_survives_context_frames() {
+        let e = Error::new(io_err())
+            .context("reading checkpoint")
+            .context("step 7 failed");
+        assert_eq!(format!("{e}"), "step 7 failed");
+        assert_eq!(
+            format!("{e:#}"),
+            "step 7 failed: reading checkpoint: disk on fire"
+        );
+        let io = e.downcast_ref::<std::io::Error>().expect("typed root");
+        assert_eq!(io.to_string(), "disk on fire");
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+    }
+
+    #[test]
+    fn message_roots_do_not_downcast() {
+        let e = anyhow!("plain").context("outer");
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        assert_eq!(format!("{e:#}"), "outer: plain");
+    }
+
+    #[test]
+    fn question_mark_keeps_the_typed_root() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
     }
 }
