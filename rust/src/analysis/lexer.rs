@@ -1,0 +1,271 @@
+//! A lightweight line lexer for Rust source: strips comments, blanks
+//! string/char-literal interiors, and keeps three **byte-aligned** views
+//! of every line so the rule passes can mix token scanning (on code with
+//! literals blanked) with literal extraction (on code with literals
+//! intact) without ever disagreeing about positions.
+//!
+//! The lexer understands exactly the constructs that would otherwise
+//! derail a token scan: line comments (`//`, `///`, `//!`), **nested**
+//! block comments (`/* /* */ */`), plain and byte strings (including
+//! multi-line ones), raw strings with any hash depth (`r#"..."#`,
+//! `br##"..."##`), char literals (escaped and plain) and the lifetime
+//! tick that looks just like them.  It does **not** parse Rust — macro
+//! bodies and attribute arguments pass through as ordinary code, which
+//! is what the scope walker wants.
+//!
+//! Both code views are forced to ASCII (non-ASCII bytes become `?`), so
+//! byte offsets are char offsets and slicing can never split a UTF-8
+//! sequence; comment text is preserved as-is (lossily decoded) because
+//! the rule passes only substring-match ASCII needles in it.
+
+/// One source line in three aligned views.
+#[derive(Debug, Clone)]
+pub struct LexLine {
+    /// Comments stripped, string/char interiors blanked with spaces.
+    /// Token scans (`.lock(`, `Ordering::`, `vec!`) run on this view so
+    /// occurrences inside literals or comments never count.
+    pub code: String,
+    /// Comments stripped, string literals intact — the view literal
+    /// extraction reads, at the byte positions `code` matched.
+    pub strings: String,
+    /// Concatenated comment text on the line (without alignment).
+    pub comment: String,
+}
+
+/// Cross-line lexer state.
+enum Mode {
+    Normal,
+    /// Inside a block comment at the given nesting depth.
+    BlockComment(u32),
+    /// Inside a `"..."` string (may span lines).
+    Str,
+    /// Inside a raw string terminated by `"` + this many `#`s.
+    RawStr(usize),
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn push_ascii(buf: &mut Vec<u8>, b: u8) {
+    buf.push(if b.is_ascii() { b } else { b'?' });
+}
+
+/// Does a raw-string literal (`r"`, `r#"`, `br##"`, ...) start at `i`?
+/// Returns (prefix length through the opening quote, hash count).
+fn raw_string_start(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && is_ident(b[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if j < b.len() && b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Lex a whole file into per-line views. Never fails: malformed input
+/// degrades to blanked bytes, it cannot panic or escape a state.
+pub fn lex(text: &str) -> Vec<LexLine> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Normal;
+    for raw in text.split('\n') {
+        let b = raw.as_bytes();
+        let n = b.len();
+        let mut code: Vec<u8> = Vec::with_capacity(n);
+        let mut strings: Vec<u8> = Vec::with_capacity(n);
+        let mut comment: Vec<u8> = Vec::new();
+        let mut i = 0usize;
+        while i < n {
+            match mode {
+                Mode::BlockComment(depth) => {
+                    if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        mode = Mode::BlockComment(depth + 1);
+                        comment.extend_from_slice(b"/*");
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        comment.extend_from_slice(b"*/");
+                        mode = if depth <= 1 {
+                            Mode::Normal
+                        } else {
+                            Mode::BlockComment(depth - 1)
+                        };
+                        i += 2;
+                    } else {
+                        comment.push(b[i]);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    let c = b[i];
+                    push_ascii(&mut strings, c);
+                    if c == b'\\' && i + 1 < n {
+                        code.push(b' ');
+                        push_ascii(&mut strings, b[i + 1]);
+                        code.push(b' ');
+                        i += 2;
+                    } else if c == b'"' {
+                        code.push(b'"');
+                        mode = Mode::Normal;
+                        i += 1;
+                    } else {
+                        code.push(b' ');
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    let terminated = b[i] == b'"'
+                        && i + hashes < n
+                        && b[i + 1..=i + hashes].iter().all(|&c| c == b'#');
+                    if terminated {
+                        code.push(b'"');
+                        strings.push(b'"');
+                        for _ in 0..hashes {
+                            code.push(b'#');
+                            strings.push(b'#');
+                        }
+                        mode = Mode::Normal;
+                        i += 1 + hashes;
+                    } else {
+                        push_ascii(&mut strings, b[i]);
+                        code.push(b' ');
+                        i += 1;
+                    }
+                }
+                Mode::Normal => {
+                    let c = b[i];
+                    if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+                        comment.extend_from_slice(&b[i..]);
+                        i = n;
+                    } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        mode = Mode::BlockComment(1);
+                        comment.extend_from_slice(b"/*");
+                        i += 2;
+                    } else if let Some((pre, hashes)) = raw_string_start(b, i) {
+                        code.extend_from_slice(&b[i..i + pre]);
+                        strings.extend_from_slice(&b[i..i + pre]);
+                        mode = Mode::RawStr(hashes);
+                        i += pre;
+                    } else if c == b'"' {
+                        code.push(b'"');
+                        strings.push(b'"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == b'\'' {
+                        if i + 1 < n && b[i + 1] == b'\\' {
+                            // Escaped char literal: scan to the closing tick.
+                            let mut j = i + 2;
+                            if j < n {
+                                j += 1; // the escaped byte itself
+                            }
+                            while j < n && b[j] != b'\'' {
+                                j += 1;
+                            }
+                            let end = (j + 1).min(n);
+                            for &x in &b[i..end] {
+                                push_ascii(&mut strings, x);
+                            }
+                            code.push(b'\'');
+                            for _ in (i + 1)..j.min(n) {
+                                code.push(b' ');
+                            }
+                            if j < n {
+                                code.push(b'\'');
+                            }
+                            i = end;
+                        } else if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                            // Plain one-byte char literal like 'x' or '{'.
+                            for &x in &b[i..i + 3] {
+                                push_ascii(&mut strings, x);
+                            }
+                            code.extend_from_slice(b"' '");
+                            i += 3;
+                        } else {
+                            // A lifetime tick ('a, 'static).
+                            code.push(b'\'');
+                            strings.push(b'\'');
+                            i += 1;
+                        }
+                    } else {
+                        push_ascii(&mut code, c);
+                        push_ascii(&mut strings, c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(LexLine {
+            code: String::from_utf8_lossy(&code).into_owned(),
+            strings: String::from_utf8_lossy(&strings).into_owned(),
+            comment: String::from_utf8_lossy(&comment).into_owned(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_and_doc_comments() {
+        let l = lex("let x = 1; // tail comment\n/// doc\ncode();");
+        assert_eq!(l[0].code, "let x = 1; ");
+        assert_eq!(l[0].comment, "// tail comment");
+        assert_eq!(l[1].code, "");
+        assert_eq!(l[1].comment, "/// doc");
+        assert_eq!(l[2].code, "code();");
+    }
+
+    #[test]
+    fn blanks_string_interiors_but_keeps_alignment() {
+        let l = lex(r#"call("unsafe { x }");"#);
+        assert!(!l[0].code.contains("unsafe"));
+        assert!(l[0].strings.contains("unsafe { x }"));
+        assert_eq!(l[0].code.len(), l[0].strings.len());
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("a /* one /* two */ still */ b\nc");
+        assert_eq!(l[0].code.trim(), "a  b".trim());
+        assert!(!l[0].code.contains("still"));
+        assert_eq!(l[1].code, "c");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let l = lex("let s = r#\"vec![] // not a comment\"#; after();");
+        assert!(!l[0].code.contains("vec!"));
+        assert!(l[0].comment.is_empty());
+        assert!(l[0].code.contains("after();"));
+    }
+
+    #[test]
+    fn multiline_string_state_carries_over() {
+        let l = lex("let s = \"line one\nOrdering::SeqCst\";\nreal(Ordering::SeqCst);");
+        assert!(!l[1].code.contains("Ordering::"));
+        assert!(l[2].code.contains("Ordering::"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let l = lex("if c == '{' { f::<'a>(b'\\n'); }");
+        // the brace char literal must not look like a real brace
+        assert_eq!(l[0].code.matches('{').count(), 1);
+        assert!(l[0].strings.contains("'{'"));
+    }
+}

@@ -1,0 +1,145 @@
+//! The declared rule sets: which functions must stay allocation-free,
+//! which must open trace spans, which may never take a blocking lock,
+//! and which tokens count as allocations.
+//!
+//! Membership is the union of this manifest (exact `rust/src`-relative
+//! path + fn name) and the in-source region markers the scope walker
+//! reads (`packlint: zero-alloc`, `packlint: no-blocking-lock`,
+//! `packlint: trace-hot`).  The manifest is the reviewed source of
+//! truth for the core hot set; markers are for new code that wants the
+//! discipline without a manifest edit — prefer graduating long-lived
+//! fns into the manifest so the set stays visible in one place.
+//!
+//! Adding a fn here is a one-line change; `tests/packlint.rs` fails if
+//! a manifest entry stops matching a real fn, so renames can't silently
+//! drop coverage.
+
+/// Fns that must not allocate in steady state (R1): the §3 packed
+/// kernels, the GEMM tile path, the model `_into` paths, trace
+/// recording, and threadpool dispatch.
+pub const ZERO_ALLOC_FNS: &[(&str, &[&str])] = &[
+    (
+        "backend/kernels.rs",
+        &[
+            "conv1d_packed_fwd_into",
+            "conv1d_packed_fwd_carry_into",
+            "conv1d_packed_bwd_into",
+            "conv1d_packed_bwd_carry_into",
+            "ssm_packed_fwd_into",
+            "ssm_packed_fwd_carry_into",
+            "ssm_packed_bwd_into",
+            "ssm_packed_bwd_carry_into",
+        ],
+    ),
+    (
+        "backend/gemm.rs",
+        &[
+            "gemm_into",
+            "gemm_into_tier",
+            "run_panel",
+            "pack_a",
+            "micro_kernel",
+            "store_tile",
+            "micro_kernel_dispatch",
+        ],
+    ),
+    ("backend/ops.rs", &["rms_norm_fwd_into", "rms_norm_bwd_into"]),
+    ("backend/adamw.rs", &["apply", "apply_slices"]),
+    ("util/trace.rs", &["record", "span", "with"]),
+    (
+        "util/threadpool.rs",
+        &[
+            "run_tasks",
+            "try_dispatch",
+            "run_tasks_any",
+            "parallel_chunks_mut",
+            "parallel_chunks2_mut",
+        ],
+    ),
+    (
+        "backend/model.rs",
+        &[
+            "loss_and_grads_into",
+            "loss_and_grads_chunked_into",
+            "forward_logits_chunked",
+        ],
+    ),
+];
+
+/// Fns that must open an `Op::` span (R4). GEMM tiles are deliberately
+/// absent: their spans live at the call sites (`gemm.in_proj`,
+/// `gemm.bwd`, ...) so per-projection self-time stays attributable.
+pub const TRACE_HOT_FNS: &[(&str, &[&str])] = &[
+    (
+        "backend/kernels.rs",
+        &[
+            "conv1d_packed_fwd_into",
+            "conv1d_packed_fwd_carry_into",
+            "conv1d_packed_bwd_into",
+            "conv1d_packed_bwd_carry_into",
+            "ssm_packed_fwd_into",
+            "ssm_packed_fwd_carry_into",
+            "ssm_packed_fwd_nocache",
+            "ssm_packed_bwd_into",
+            "ssm_packed_bwd_carry_into",
+        ],
+    ),
+    ("backend/ops.rs", &["rms_norm_fwd_into", "rms_norm_bwd_into"]),
+    ("backend/adamw.rs", &["apply", "apply_slices"]),
+    ("tensor/ops.rs", &["allreduce_mean", "allreduce_sum"]),
+    ("backend/native.rs", &["train_step", "train_step_chunked"]),
+];
+
+/// Fns where deadlock freedom requires `try_lock` (R3): the pool
+/// dispatch lanes. Blocking `.lock()` anywhere in these is a finding.
+pub const NO_BLOCKING_LOCK_FNS: &[(&str, &[&str])] =
+    &[("util/threadpool.rs", &["run_tasks", "try_dispatch", "run_tasks_any"])];
+
+/// Files under the R3 concurrency rules (matched by file name).
+pub const CONCURRENCY_FILES: &[&str] = &["threadpool.rs", "dataparallel.rs"];
+
+/// Tokens that allocate (or may grow a buffer) on the code view.
+/// Scanned as plain substrings of comment-/string-stripped code.
+pub const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new(",
+    "vec!",
+    "Box::new(",
+    "String::new(",
+    ".to_vec()",
+    ".to_string()",
+    ".to_owned()",
+    ".collect()",
+    ".collect::<",
+    "format!(",
+    ".clone()",
+    ".push(",
+    ".push_back(",
+    ".resize(",
+    ".reserve(",
+    "with_capacity(",
+    ".extend(",
+    ".extend_from_slice(",
+    ".insert(",
+];
+
+/// Look up `fn_name` under `src_rel` in a manifest table.
+pub fn contains(table: &[(&str, &[&str])], src_rel: Option<&str>, fn_name: &str) -> bool {
+    let Some(rel) = src_rel else {
+        return false;
+    };
+    table
+        .iter()
+        .any(|(path, fns)| *path == rel && fns.contains(&fn_name))
+}
+
+/// All manifest fn names declared for `src_rel` in a table.
+pub fn names_for<'a>(table: &[(&'a str, &'a [&'a str])], src_rel: Option<&str>) -> &'a [&'a str] {
+    let Some(rel) = src_rel else {
+        return &[];
+    };
+    table
+        .iter()
+        .find(|(path, _)| *path == rel)
+        .map(|(_, fns)| *fns)
+        .unwrap_or(&[])
+}

@@ -1,0 +1,86 @@
+//! packlint: repo-native static analysis enforcing the invariants the
+//! rest of the crate promises — zero-alloc hot paths, audited `unsafe`,
+//! threadpool concurrency hygiene, trace coverage, and registry sync
+//! (see the "Static analysis" section of the crate docs for the rule
+//! table and suppression syntax).
+//!
+//! The pipeline is three stages, each its own module:
+//!
+//! 1. [`lexer`] — per-line views of the source with comments stripped
+//!    and string interiors blanked, byte-aligned so token scans and
+//!    literal extraction agree on positions.
+//! 2. [`scope`] — a brace-depth walk that resolves `fn`/`mod`/`impl`
+//!    scopes, collects `unsafe` sites, and attaches region markers.
+//! 3. [`rules`] — the R1–R5 passes plus cross-file registry checks,
+//!    with every emission routed through the suppression table.
+//!
+//! The `packlint` binary wires [`collect_tree`] → [`analyze`] →
+//! [`render`]/[`to_json`]; `tests/packlint.rs` runs the same pipeline
+//! over the real tree (gating CI) and over pinned fixtures.
+
+pub mod lexer;
+pub mod manifest;
+pub mod report;
+pub mod rules;
+pub mod scope;
+
+pub use report::{render, to_json};
+pub use rules::{analyze, Analysis, Finding, Rule, SourceFile, Suppression, UnsafeEntry};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Collect the scan set for the crate rooted at `crate_dir` (the
+/// `rust/` directory): everything under `src/**` gets the full rule
+/// set, everything under `benches/**` the R2/R5 subset.
+pub fn collect_tree(crate_dir: &Path) -> crate::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    for (sub, bench_only) in [("src", false), ("benches", true)] {
+        let base = crate_dir.join(sub);
+        if !base.is_dir() {
+            continue;
+        }
+        let mut paths = Vec::new();
+        walk_dir(&base, &mut paths)?;
+        for path in paths {
+            let text = fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            let rel = path.strip_prefix(crate_dir).unwrap_or(&path);
+            let display = format!("rust/{}", rel.display());
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or_default()
+                .to_string();
+            let src_rel = if bench_only {
+                None
+            } else {
+                path.strip_prefix(&base).ok().map(|p| p.display().to_string())
+            };
+            files.push(SourceFile {
+                display,
+                name,
+                src_rel,
+                bench_only,
+                text,
+            });
+        }
+    }
+    Ok(files)
+}
+
+fn walk_dir(dir: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_dir(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

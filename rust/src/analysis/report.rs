@@ -1,0 +1,120 @@
+//! Finding rendering and the `ANALYSIS.json` artifact.
+//!
+//! Findings print as `file:line: RULE — message` (clickable in most
+//! terminals); the JSON artifact carries per-rule counts, the full
+//! unsafe inventory, and the suppression ledger so CI can archive the
+//! audit state next to the bench artifacts.
+
+use super::rules::{Analysis, Finding, Rule};
+use crate::util::json::Json;
+
+/// One human-readable finding line.
+pub fn render(f: &Finding) -> String {
+    format!("{}:{}: {} — {}", f.file, f.line, f.rule.id(), f.message)
+}
+
+/// The full `ANALYSIS.json` document.
+pub fn to_json(a: &Analysis) -> Json {
+    let mut rules = Json::obj();
+    for r in Rule::ALL {
+        let nf = a.findings.iter().filter(|f| f.rule == r).count();
+        let ns = a.suppressed.iter().filter(|f| f.rule == r).count();
+        rules.set(
+            r.id(),
+            Json::from_pairs([
+                ("findings", Json::Num(nf as f64)),
+                ("suppressed", Json::Num(ns as f64)),
+            ]),
+        );
+    }
+    let findings = Json::Arr(
+        a.findings
+            .iter()
+            .map(|f| {
+                Json::from_pairs([
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("rule", Json::Str(f.rule.id().to_string())),
+                    ("message", Json::Str(f.message.clone())),
+                ])
+            })
+            .collect(),
+    );
+    let inventory = Json::Arr(
+        a.unsafe_inventory
+            .iter()
+            .map(|s| {
+                Json::from_pairs([
+                    ("file", Json::Str(s.file.clone())),
+                    ("line", Json::Num(s.line as f64)),
+                    ("kind", Json::Str(s.kind.to_string())),
+                    (
+                        "fn",
+                        match &s.fn_name {
+                            Some(n) => Json::Str(n.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("documented", Json::Bool(s.documented)),
+                    ("in_test", Json::Bool(s.in_test)),
+                ])
+            })
+            .collect(),
+    );
+    let suppressions = Json::Arr(
+        a.suppressions
+            .iter()
+            .map(|s| {
+                Json::from_pairs([
+                    ("file", Json::Str(s.file.clone())),
+                    ("line", Json::Num(s.line as f64)),
+                    ("rule", Json::Str(s.rule.clone())),
+                    ("reason", Json::Str(s.reason.clone())),
+                    ("used", Json::Bool(s.used)),
+                ])
+            })
+            .collect(),
+    );
+    Json::from_pairs([
+        ("tool", Json::Str("packlint".to_string())),
+        ("files_scanned", Json::Num(a.files_scanned as f64)),
+        ("rules", rules),
+        ("findings", findings),
+        ("unsafe_inventory", inventory),
+        ("suppressions", suppressions),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::rules::{analyze, SourceFile};
+    use super::*;
+
+    #[test]
+    fn json_counts_match_analysis() {
+        let src = "// packlint: zero-alloc\nfn hot(v: &mut Vec<u32>) {\n    v.push(1);\n}\n";
+        let a = analyze(&[SourceFile {
+            display: "x.rs".to_string(),
+            name: "x.rs".to_string(),
+            src_rel: None,
+            bench_only: false,
+            text: src.to_string(),
+        }]);
+        let j = to_json(&a);
+        assert_eq!(j.get("tool").and_then(Json::as_str), Some("packlint"));
+        let r1 = j.get("rules").and_then(|r| r.get("R1")).expect("R1 bucket");
+        assert_eq!(r1.get("findings").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("findings").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+    }
+
+    #[test]
+    fn render_is_file_line_rule_message() {
+        let f = Finding {
+            file: "rust/src/x.rs".to_string(),
+            line: 7,
+            rule: Rule::R2,
+            message: "msg".to_string(),
+        };
+        assert_eq!(render(&f), "rust/src/x.rs:7: R2 — msg");
+    }
+}

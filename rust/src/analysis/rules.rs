@@ -1,0 +1,1023 @@
+//! The packlint rule engine: five rule families over lexed + scoped
+//! source files.
+//!
+//! * **R1** hot-path allocation: no allocating/growing calls inside the
+//!   declared zero-alloc set ([`super::manifest::ZERO_ALLOC_FNS`] plus
+//!   marker-opted fns).
+//! * **R2** unsafe audit: every `unsafe` block/fn/impl carries a
+//!   `// SAFETY:` (or `# Safety` doc section for fns) justification;
+//!   every site lands in a machine-readable inventory.
+//! * **R3** concurrency hygiene in `threadpool.rs`/`dataparallel.rs`:
+//!   no blocking `.lock()` in try_lock-only fns, every `Ordering::`
+//!   choice annotated with `// ordering:`, no `.unwrap()`/`.expect()`
+//!   on channel endpoints in worker code.
+//! * **R4** trace coverage: hot-set fns open `Op::` spans; the `ops!`
+//!   name registry and its use sites stay in sync both directions.
+//! * **R5** registry sync: `PACKMAMBA_*` env reads match the `lib.rs`
+//!   env matrix and failpoint site strings match the `failpoint.rs`
+//!   site table, both directions.
+//!
+//! All emissions route through the suppression table collected from
+//! `allow` comments, so every rule is suppressable with a reason that
+//! lands in the ledger.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, LexLine};
+use super::manifest;
+use super::scope::{walk, FileScopes, ScopeKind, UnsafeKind};
+
+/// One file handed to [`analyze`].
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Path shown in findings, e.g. `rust/src/backend/gemm.rs`.
+    pub display: String,
+    /// Basename, e.g. `gemm.rs` — keys the registry roles and the R3
+    /// concurrency file set.
+    pub name: String,
+    /// Path relative to `rust/src` for manifest lookups; `None` for
+    /// bench files and fixture inputs (markers still apply).
+    pub src_rel: Option<String>,
+    /// Bench files only get R2 + R5 (and feed no R4 refs).
+    pub bench_only: bool,
+    pub text: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [Rule::R1, Rule::R2, Rule::R3, Rule::R4, Rule::R5];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+        }
+    }
+}
+
+/// One reported (or suppressed) defect.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// One `unsafe` site, documented or not — the audit inventory.
+#[derive(Clone, Debug)]
+pub struct UnsafeEntry {
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub kind: &'static str,
+    pub fn_name: Option<String>,
+    pub documented: bool,
+    pub in_test: bool,
+}
+
+/// One `allow` declaration and whether anything actually hit it.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub file: String,
+    /// 1-based line of the declaration comment.
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    pub used: bool,
+}
+
+/// Everything [`analyze`] learned, sorted for determinism.
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Finding>,
+    pub unsafe_inventory: Vec<UnsafeEntry>,
+    pub suppressions: Vec<Suppression>,
+    pub files_scanned: usize,
+}
+
+struct Allow {
+    rule: String,
+    reason: String,
+    decl_line: usize,
+    used: bool,
+}
+
+type AllowMap = BTreeMap<usize, Vec<Allow>>;
+
+#[derive(Default)]
+struct Outputs {
+    findings: Vec<Finding>,
+    suppressed: Vec<Finding>,
+}
+
+/// Cross-file accumulators: registry rows and use sites, resolved after
+/// every file has been scanned.
+#[derive(Default)]
+struct Cross {
+    /// (file idx, line idx, var name) for `env::var("PACKMAMBA_*")`.
+    env_uses: Vec<(usize, usize, String)>,
+    env_registry: Vec<(String, usize)>,
+    env_reg_file: Option<usize>,
+    fp_uses: Vec<(usize, usize, String)>,
+    fp_registry: Vec<(String, usize)>,
+    fp_reg_file: Option<usize>,
+    /// (variant, op name, line idx) from the `ops!` block.
+    op_variants: Vec<(String, String, usize)>,
+    trace_file: Option<usize>,
+    /// variant -> every `Op::Variant` reference outside trace.rs.
+    op_refs: BTreeMap<String, Vec<(usize, usize)>>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && (b[i] == b' ' || b[i] == b'\t') {
+        i += 1;
+    }
+    i
+}
+
+/// Parse every `allow(<rule>) -- reason` declaration; a declaration on
+/// a comment-only line targets the next line that has code.
+fn collect_allows(lines: &[LexLine]) -> AllowMap {
+    let mut map = AllowMap::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some((rule, reason)) = parse_allow(&line.comment) else {
+            continue;
+        };
+        let mut target = idx;
+        if line.code.trim().is_empty() {
+            let mut j = idx + 1;
+            while j < lines.len() && lines[j].code.trim().is_empty() {
+                j += 1;
+            }
+            if j < lines.len() {
+                target = j;
+            }
+        }
+        map.entry(target).or_default().push(Allow {
+            rule,
+            reason,
+            decl_line: idx,
+            used: false,
+        });
+    }
+    map
+}
+
+fn parse_allow(comment: &str) -> Option<(String, String)> {
+    let mut from = 0;
+    while let Some(rel) = comment[from..].find("packlint:") {
+        let at = from + rel;
+        from = at + "packlint:".len();
+        let rest = comment[from..].trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(end) = rest.find(')') else {
+            continue;
+        };
+        let rule = &rest[..end];
+        if rule.is_empty()
+            || !rule.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+        {
+            continue;
+        }
+        let after = rest[end + 1..].trim_start();
+        let reason = after
+            .strip_prefix("--")
+            .map(|r| r.trim().to_string())
+            .unwrap_or_default();
+        return Some((rule.to_string(), reason));
+    }
+    None
+}
+
+/// Is the comment on `line` (or on the run of comment/attribute-only
+/// lines directly above it) carrying one of `needles`?
+fn preceding_comment_has(lines: &[LexLine], line: usize, needles: &[&str]) -> bool {
+    let has = |c: &str| needles.iter().any(|n| c.contains(n));
+    if has(&lines[line].comment) {
+        return true;
+    }
+    let mut i = line;
+    while i > 0 {
+        i -= 1;
+        let l = &lines[i];
+        let code = l.code.trim();
+        if !code.is_empty() && !is_attr_only(code) {
+            return false;
+        }
+        if has(&l.comment) {
+            return true;
+        }
+        if code.is_empty() && l.comment.trim().is_empty() {
+            return false;
+        }
+    }
+    false
+}
+
+/// `#[...]` / `#![...]` (with any interior spacing) — lines the doc walk
+/// may step over.
+fn is_attr_only(trimmed: &str) -> bool {
+    let Some(rest) = trimmed.strip_prefix('#') else {
+        return false;
+    };
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix('!').unwrap_or(rest);
+    rest.trim_start().starts_with('[')
+}
+
+/// `.unwrap()`/`.expect(` on the same line as a channel `recv`/`send`
+/// call (word-boundary match, so `sender(` or `recv_count` don't hit).
+fn channel_unwrap(code: &str) -> bool {
+    if !code.contains(".unwrap()") && !code.contains(".expect(") {
+        return false;
+    }
+    let b = code.as_bytes();
+    for needle in ["recv_timeout", "recv", "send"] {
+        let mut from = 0;
+        while let Some(rel) = code[from..].find(needle) {
+            let p = from + rel;
+            from = p + 1;
+            if p > 0 && is_ident_byte(b[p - 1]) {
+                continue;
+            }
+            let j = skip_ws(b, p + needle.len());
+            if j < b.len() && b[j] == b'(' {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// First `env::var("...")` / `env::var_os("...")` literal on the line,
+/// if it names a `PACKMAMBA_*` var.
+fn env_use(code: &str, strings: &str) -> Option<String> {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find("env::var") {
+        let p = from + rel;
+        from = p + 1;
+        let mut j = p + "env::var".len();
+        if code[j..].starts_with("_os") {
+            j += 3;
+        }
+        j = skip_ws(b, j);
+        if j >= b.len() || b[j] != b'(' {
+            continue;
+        }
+        j = skip_ws(b, j + 1);
+        if j >= b.len() || b[j] != b'"' {
+            continue;
+        }
+        let q = j;
+        let e = code[q + 1..].find('"').map(|r| q + 1 + r)?;
+        let lit = &strings[q + 1..e];
+        if lit.starts_with("PACKMAMBA_") {
+            return Some(lit.to_string());
+        }
+        return None;
+    }
+    None
+}
+
+/// Every `failpoint::{check,byte_limit,kill_now}("...")` site literal.
+fn fp_uses(code: &str, strings: &str, out: &mut Vec<String>) {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find("failpoint::") {
+        let p = from + rel;
+        from = p + 1;
+        let rest = &code[p + "failpoint::".len()..];
+        let Some(wl) = ["check", "byte_limit", "kill_now"]
+            .iter()
+            .find(|w| rest.starts_with(*w))
+            .map(|w| w.len())
+        else {
+            continue;
+        };
+        let mut j = skip_ws(b, p + "failpoint::".len() + wl);
+        if j >= b.len() || b[j] != b'(' {
+            continue;
+        }
+        j = skip_ws(b, j + 1);
+        if j >= b.len() || b[j] != b'"' {
+            continue;
+        }
+        let q = j;
+        let Some(e) = code[q + 1..].find('"').map(|r| q + 1 + r) else {
+            continue;
+        };
+        out.push(strings[q + 1..e].to_string());
+        from = q + 1;
+    }
+}
+
+/// Every `Op::Variant` reference on the line (code view, so strings and
+/// comments never count).
+fn op_refs_on_line(code: &str, out: &mut Vec<String>) {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find("Op::") {
+        let p = from + rel;
+        if p > 0 && is_ident_byte(b[p - 1]) {
+            from = p + 4;
+            continue;
+        }
+        let s = p + 4;
+        let mut j = s;
+        while j < b.len() && is_ident_byte(b[j]) {
+            j += 1;
+        }
+        if j > s {
+            out.push(code[s..j].to_string());
+        }
+        from = (p + 4).max(j);
+    }
+}
+
+/// Does the line open the `ops! {` registry block?
+fn ops_block_starts(code: &str) -> bool {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find("ops!") {
+        let p = from + rel;
+        from = p + 4;
+        if p > 0 && is_ident_byte(b[p - 1]) {
+            continue;
+        }
+        let j = skip_ws(b, p + 4);
+        if j < b.len() && b[j] == b'{' {
+            return true;
+        }
+    }
+    false
+}
+
+/// `Variant => "name"` row inside the `ops!` block.
+fn ops_row(code: &str, strings: &str) -> Option<(String, String)> {
+    let b = code.as_bytes();
+    let mut j = skip_ws(b, 0);
+    let s = j;
+    while j < b.len() && is_ident_byte(b[j]) {
+        j += 1;
+    }
+    if j == s {
+        return None;
+    }
+    let variant = &code[s..j];
+    j = skip_ws(b, j);
+    if !code[j..].starts_with("=>") {
+        return None;
+    }
+    j = skip_ws(b, j + 2);
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    let q = j;
+    let e = code[q + 1..].find('"').map(|r| q + 1 + r)?;
+    Some((variant.to_string(), strings[q + 1..e].to_string()))
+}
+
+/// ``| `PACKMAMBA_X` |`` row in the lib.rs env-matrix comment.
+fn env_registry_row(comment: &str) -> Option<String> {
+    let b = comment.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = comment[from..].find("`PACKMAMBA_") {
+        let p = from + rel;
+        from = p + 1;
+        if !pipe_before(b, p) {
+            continue;
+        }
+        let s = p + 1;
+        let mut j = s + "PACKMAMBA_".len();
+        let body = j;
+        while j < b.len() && (b[j].is_ascii_uppercase() || b[j].is_ascii_digit() || b[j] == b'_') {
+            j += 1;
+        }
+        if j == body || j >= b.len() || b[j] != b'`' {
+            continue;
+        }
+        if pipe_after(b, j + 1) {
+            return Some(comment[s..j].to_string());
+        }
+    }
+    None
+}
+
+/// ``| `subsystem.site` |`` row in the failpoint.rs site table.
+fn fp_registry_row(comment: &str) -> Option<String> {
+    let b = comment.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = comment[from..].find('`') {
+        let p = from + rel;
+        from = p + 1;
+        if !pipe_before(b, p) {
+            continue;
+        }
+        let s = p + 1;
+        let mut j = s;
+        while j < b.len()
+            && (b[j].is_ascii_lowercase() || b[j].is_ascii_digit() || b[j] == b'_' || b[j] == b'.')
+        {
+            j += 1;
+        }
+        if j == s || j >= b.len() || b[j] != b'`' {
+            continue;
+        }
+        let tok = &comment[s..j];
+        let Some(dot) = tok.find('.') else {
+            continue;
+        };
+        if dot == 0 || dot + 1 >= tok.len() {
+            continue;
+        }
+        if pipe_after(b, j + 1) {
+            return Some(tok.to_string());
+        }
+    }
+    None
+}
+
+fn pipe_before(b: &[u8], p: usize) -> bool {
+    let mut i = p;
+    while i > 0 && (b[i - 1] == b' ' || b[i - 1] == b'\t') {
+        i -= 1;
+    }
+    i > 0 && b[i - 1] == b'|'
+}
+
+fn pipe_after(b: &[u8], p: usize) -> bool {
+    let j = skip_ws(b, p);
+    j < b.len() && b[j] == b'|'
+}
+
+fn valid_op_name(name: &str) -> bool {
+    let parts: Vec<&str> = name.split('.').collect();
+    parts.len() >= 2
+        && parts.iter().all(|p| {
+            !p.is_empty()
+                && p.bytes()
+                    .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_')
+        })
+}
+
+fn emit(
+    map: &mut AllowMap,
+    out: &mut Outputs,
+    display: &str,
+    line0: usize,
+    rule: Rule,
+    message: String,
+) {
+    if let Some(list) = map.get_mut(&line0) {
+        for a in list {
+            if a.rule == rule.id() {
+                a.used = true;
+                out.suppressed.push(Finding {
+                    file: display.to_string(),
+                    line: line0 + 1,
+                    rule,
+                    message,
+                });
+                return;
+            }
+        }
+    }
+    out.findings.push(Finding {
+        file: display.to_string(),
+        line: line0 + 1,
+        rule,
+        message,
+    });
+}
+
+/// Run every rule over `files` (one logical tree: cross-file checks see
+/// all of them together).
+pub fn analyze(files: &[SourceFile]) -> Analysis {
+    let lexed: Vec<Vec<LexLine>> = files.iter().map(|f| lex(&f.text)).collect();
+    let mut allow_maps: Vec<AllowMap> = lexed.iter().map(|l| collect_allows(l)).collect();
+    let mut out = Outputs::default();
+    let mut inventory: Vec<UnsafeEntry> = Vec::new();
+    let mut cross = Cross::default();
+
+    for (fi, file) in files.iter().enumerate() {
+        scan_file(
+            fi,
+            file,
+            &lexed[fi],
+            &mut allow_maps[fi],
+            &mut out,
+            &mut inventory,
+            &mut cross,
+        );
+    }
+    cross_checks(files, &mut allow_maps, &mut out, &cross);
+
+    let mut suppressions = Vec::new();
+    for (fi, file) in files.iter().enumerate() {
+        for list in allow_maps[fi].values() {
+            for a in list {
+                suppressions.push(Suppression {
+                    file: file.display.clone(),
+                    line: a.decl_line + 1,
+                    rule: a.rule.clone(),
+                    reason: a.reason.clone(),
+                    used: a.used,
+                });
+            }
+        }
+    }
+
+    let key = |f: &Finding| (f.file.clone(), f.line, f.rule.id(), f.message.clone());
+    out.findings.sort_by_key(key);
+    out.suppressed.sort_by_key(key);
+
+    Analysis {
+        findings: out.findings,
+        suppressed: out.suppressed,
+        unsafe_inventory: inventory,
+        suppressions,
+        files_scanned: files.len(),
+    }
+}
+
+fn scan_file(
+    fi: usize,
+    file: &SourceFile,
+    lines: &[LexLine],
+    allow_map: &mut AllowMap,
+    out: &mut Outputs,
+    inventory: &mut Vec<UnsafeEntry>,
+    cross: &mut Cross,
+) {
+    let fs: FileScopes = walk(lines);
+    let display = file.display.as_str();
+    let src_rel = file.src_rel.as_deref();
+    let conc = !file.bench_only && manifest::CONCURRENCY_FILES.contains(&file.name.as_str());
+
+    // ---- R2: unsafe sites ----
+    for site in &fs.unsafe_sites {
+        let needles: &[&str] = if site.kind == UnsafeKind::Fn {
+            &["SAFETY", "# Safety"]
+        } else {
+            &["SAFETY"]
+        };
+        let documented = preceding_comment_has(lines, site.line, needles);
+        inventory.push(UnsafeEntry {
+            file: display.to_string(),
+            line: site.line + 1,
+            kind: site.kind.as_str(),
+            fn_name: site.fn_name.clone(),
+            documented,
+            in_test: site.in_test,
+        });
+        if !documented {
+            emit(
+                allow_map,
+                out,
+                display,
+                site.line,
+                Rule::R2,
+                format!(
+                    "`unsafe` {} without a `// SAFETY:` justification",
+                    site.kind.as_str()
+                ),
+            );
+        }
+    }
+
+    // ---- per-line rules ----
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let strings = line.strings.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+        let test = fs.in_test(idx);
+        let encl = fs.enclosing_fn(idx);
+
+        // R1: allocation in a zero-alloc fn.
+        if !file.bench_only && !test {
+            if let Some(f) = encl {
+                let name = f.name.as_deref().unwrap_or("");
+                if f.zero_alloc || manifest::contains(manifest::ZERO_ALLOC_FNS, src_rel, name) {
+                    for tok in manifest::ALLOC_TOKENS {
+                        if code.contains(tok) {
+                            emit(
+                                allow_map,
+                                out,
+                                display,
+                                idx,
+                                Rule::R1,
+                                format!(
+                                    "allocation `{}` in zero-alloc fn `{}`",
+                                    tok.trim_end_matches('('),
+                                    name
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // R3: concurrency hygiene.
+        if conc && !test {
+            if let Some(f) = encl {
+                let name = f.name.as_deref().unwrap_or("");
+                let listed = f.no_block_lock
+                    || manifest::contains(manifest::NO_BLOCKING_LOCK_FNS, src_rel, name);
+                if listed && code.contains(".lock(") {
+                    emit(
+                        allow_map,
+                        out,
+                        display,
+                        idx,
+                        Rule::R3,
+                        format!("blocking `.lock()` in try_lock-only fn `{name}`"),
+                    );
+                }
+            }
+            if code.contains("Ordering::") && !preceding_comment_has(lines, idx, &["ordering:"]) {
+                emit(
+                    allow_map,
+                    out,
+                    display,
+                    idx,
+                    Rule::R3,
+                    "`Ordering::` choice without an `// ordering:` justification".to_string(),
+                );
+            }
+            if channel_unwrap(code) {
+                emit(
+                    allow_map,
+                    out,
+                    display,
+                    idx,
+                    Rule::R3,
+                    "`.unwrap()`/`.expect()` on channel send/recv in worker code".to_string(),
+                );
+            }
+        }
+
+        // R5 use sites (src + benches).
+        if !test {
+            if let Some(var) = env_use(code, strings) {
+                cross.env_uses.push((fi, idx, var));
+            }
+            if file.name != "failpoint.rs" {
+                let mut sites = Vec::new();
+                fp_uses(code, strings, &mut sites);
+                for s in sites {
+                    cross.fp_uses.push((fi, idx, s));
+                }
+            }
+        }
+
+        // R4 references.
+        if !file.bench_only && file.name != "trace.rs" {
+            let mut refs = Vec::new();
+            op_refs_on_line(code, &mut refs);
+            for v in refs {
+                cross.op_refs.entry(v).or_default().push((fi, idx));
+            }
+        }
+    }
+
+    // ---- R4: hot-set fns must open a span ----
+    if !file.bench_only {
+        let mut scope_lines: Vec<Vec<usize>> = vec![Vec::new(); fs.scopes.len()];
+        for (i, live) in fs.line_scopes.iter().enumerate() {
+            for &si in live {
+                if fs.scopes[si].kind == ScopeKind::Fn {
+                    scope_lines[si].push(i);
+                }
+            }
+        }
+        let mut want: BTreeSet<&str> =
+            manifest::names_for(manifest::TRACE_HOT_FNS, src_rel).iter().copied().collect();
+        for (si, s) in fs.scopes.iter().enumerate() {
+            if s.kind != ScopeKind::Fn || s.is_test {
+                continue;
+            }
+            let name = s.name.as_deref().unwrap_or("");
+            if !s.trace_hot && !want.contains(name) {
+                continue;
+            }
+            want.remove(name);
+            let spans = scope_lines[si].iter().any(|&i| {
+                lines[i].code.contains("trace::span(") || lines[i].code.contains("trace::with(")
+            });
+            if !spans {
+                emit(
+                    allow_map,
+                    out,
+                    display,
+                    s.line,
+                    Rule::R4,
+                    format!("hot-set fn `{name}` opens no `Op::` span"),
+                );
+            }
+        }
+        for missing in want {
+            emit(
+                allow_map,
+                out,
+                display,
+                0,
+                Rule::R4,
+                format!("hot-set fn `{missing}` not found in {}", src_rel.unwrap_or("?")),
+            );
+        }
+    }
+
+    // ---- R1/R3 manifest entries must still name real fns ----
+    if !file.bench_only && src_rel.is_some() {
+        let defined: BTreeSet<&str> = fs
+            .scopes
+            .iter()
+            .filter(|s| s.kind == ScopeKind::Fn && !s.is_test)
+            .filter_map(|s| s.name.as_deref())
+            .collect();
+        let rel = src_rel.unwrap_or("?");
+        for (rule, table) in [
+            (Rule::R1, manifest::ZERO_ALLOC_FNS),
+            (Rule::R3, manifest::NO_BLOCKING_LOCK_FNS),
+        ] {
+            let mut missing: Vec<&str> = manifest::names_for(table, src_rel)
+                .iter()
+                .copied()
+                .filter(|n| !defined.contains(n))
+                .collect();
+            missing.sort_unstable();
+            for name in missing {
+                let what = if rule == Rule::R1 { "zero-alloc" } else { "try_lock-only" };
+                emit(
+                    allow_map,
+                    out,
+                    display,
+                    0,
+                    rule,
+                    format!("{what} fn `{name}` not found in {rel}"),
+                );
+            }
+        }
+    }
+
+    // ---- registry roles, keyed by basename ----
+    if !file.bench_only && file.name == "trace.rs" {
+        cross.trace_file = Some(fi);
+        let mut in_ops = false;
+        for (idx, line) in lines.iter().enumerate() {
+            if ops_block_starts(&line.code) {
+                in_ops = true;
+                continue;
+            }
+            if in_ops {
+                if line.code.trim_start().starts_with('}') {
+                    in_ops = false;
+                    continue;
+                }
+                if let Some((variant, name)) = ops_row(&line.code, &line.strings) {
+                    cross.op_variants.push((variant, name, idx));
+                }
+            }
+        }
+    }
+    if !file.bench_only && file.name == "lib.rs" {
+        cross.env_reg_file = Some(fi);
+        for (idx, line) in lines.iter().enumerate() {
+            if let Some(var) = env_registry_row(&line.comment) {
+                cross.env_registry.push((var, idx));
+            }
+        }
+    }
+    if !file.bench_only && file.name == "failpoint.rs" {
+        cross.fp_reg_file = Some(fi);
+        for (idx, line) in lines.iter().enumerate() {
+            if let Some(site) = fp_registry_row(&line.comment) {
+                cross.fp_registry.push((site, idx));
+            }
+        }
+    }
+}
+
+fn cross_checks(
+    files: &[SourceFile],
+    allow_maps: &mut [AllowMap],
+    out: &mut Outputs,
+    cross: &Cross,
+) {
+    // R4: ops! registry sync (skipped when no ops! block was seen, so
+    // fixture trees without a trace.rs get no spurious findings).
+    if !cross.op_variants.is_empty() {
+        let tf = cross.trace_file.expect("op variants imply a trace.rs");
+        let tdisp = files[tf].display.as_str();
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        for (_, name, idx) in &cross.op_variants {
+            if !valid_op_name(name) {
+                emit(
+                    &mut allow_maps[tf],
+                    out,
+                    tdisp,
+                    *idx,
+                    Rule::R4,
+                    format!("op name `{name}` violates `<subsystem>.<op>`"),
+                );
+            }
+            if seen.contains(name.as_str()) {
+                emit(
+                    &mut allow_maps[tf],
+                    out,
+                    tdisp,
+                    *idx,
+                    Rule::R4,
+                    format!("duplicate op name `{name}`"),
+                );
+            }
+            seen.insert(name.as_str());
+        }
+        let declared: BTreeSet<&str> =
+            cross.op_variants.iter().map(|(v, _, _)| v.as_str()).collect();
+        for (variant, name, idx) in &cross.op_variants {
+            if !cross.op_refs.contains_key(variant) {
+                emit(
+                    &mut allow_maps[tf],
+                    out,
+                    tdisp,
+                    *idx,
+                    Rule::R4,
+                    format!("Op::{variant} (`{name}`) is declared but never recorded"),
+                );
+            }
+        }
+        for (variant, sites) in &cross.op_refs {
+            if !declared.contains(variant.as_str()) {
+                let (fi, line) = sites[0];
+                emit(
+                    &mut allow_maps[fi],
+                    out,
+                    &files[fi].display,
+                    line,
+                    Rule::R4,
+                    format!("Op::{variant} is not declared in trace.rs ops!"),
+                );
+            }
+        }
+    }
+
+    // R5: env matrix, both directions.
+    let reg_env: BTreeSet<&str> = cross.env_registry.iter().map(|(v, _)| v.as_str()).collect();
+    for (fi, line, var) in &cross.env_uses {
+        if !reg_env.contains(var.as_str()) {
+            emit(
+                &mut allow_maps[*fi],
+                out,
+                &files[*fi].display,
+                *line,
+                Rule::R5,
+                format!("env var `{var}` read here but missing from the lib.rs env matrix"),
+            );
+        }
+    }
+    let used_env: BTreeSet<&str> = cross.env_uses.iter().map(|(_, _, v)| v.as_str()).collect();
+    for (var, idx) in &cross.env_registry {
+        if !used_env.contains(var.as_str()) {
+            let fi = cross.env_reg_file.expect("registry rows imply a lib.rs");
+            emit(
+                &mut allow_maps[fi],
+                out,
+                &files[fi].display,
+                *idx,
+                Rule::R5,
+                format!("env var `{var}` documented but never read"),
+            );
+        }
+    }
+
+    // R5: failpoint site table, both directions.
+    let reg_fp: BTreeSet<&str> = cross.fp_registry.iter().map(|(s, _)| s.as_str()).collect();
+    for (fi, line, site) in &cross.fp_uses {
+        if !reg_fp.contains(site.as_str()) {
+            emit(
+                &mut allow_maps[*fi],
+                out,
+                &files[*fi].display,
+                *line,
+                Rule::R5,
+                format!("failpoint site `{site}` not in the failpoint.rs site table"),
+            );
+        }
+    }
+    let used_fp: BTreeSet<&str> = cross.fp_uses.iter().map(|(_, _, s)| s.as_str()).collect();
+    for (site, idx) in &cross.fp_registry {
+        if !used_fp.contains(site.as_str()) {
+            let fi = cross.fp_reg_file.expect("site rows imply a failpoint.rs");
+            emit(
+                &mut allow_maps[fi],
+                out,
+                &files[fi].display,
+                *idx,
+                Rule::R5,
+                format!("failpoint site `{site}` documented but has no call site"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(name: &str, text: &str) -> SourceFile {
+        SourceFile {
+            display: name.to_string(),
+            name: name.to_string(),
+            src_rel: None,
+            bench_only: false,
+            text: text.to_string(),
+        }
+    }
+
+    #[test]
+    fn parse_allow_extracts_rule_and_reason() {
+        let got = parse_allow("// packlint: allow(R1) -- pooled spine, audited");
+        assert_eq!(
+            got,
+            Some(("R1".to_string(), "pooled spine, audited".to_string()))
+        );
+        assert_eq!(parse_allow("// packlint: zero-alloc"), None);
+    }
+
+    #[test]
+    fn channel_unwrap_needs_word_boundary() {
+        assert!(channel_unwrap("rx.recv().unwrap();"));
+        assert!(channel_unwrap("tx.send (x).expect(\"send\");"));
+        assert!(!channel_unwrap("recv_count.unwrap();"));
+        assert!(!channel_unwrap("rx.recv()?;"));
+    }
+
+    #[test]
+    fn env_use_extracts_only_packmamba_vars() {
+        assert_eq!(
+            env_use(
+                "    let v = std::env::var(\"            \").ok();",
+                "    let v = std::env::var(\"PACKMAMBA_X1\").ok();"
+            ),
+            Some("PACKMAMBA_X1".to_string())
+        );
+        assert_eq!(
+            env_use("std::env::var(\"    \")", "std::env::var(\"HOME\")"),
+            None
+        );
+    }
+
+    #[test]
+    fn marker_opted_fn_is_checked_without_a_manifest_entry() {
+        let src = "// packlint: zero-alloc\nfn hot(v: &mut Vec<u32>) {\n    v.push(1);\n}\n";
+        let a = analyze(&[file("x.rs", src)]);
+        assert_eq!(a.findings.len(), 1);
+        assert_eq!(a.findings[0].rule.id(), "R1");
+        assert_eq!(a.findings[0].line, 3);
+    }
+
+    #[test]
+    fn suppression_moves_finding_to_ledger() {
+        let src = "// packlint: zero-alloc\nfn hot(v: &mut Vec<u32>) {\n    \
+                   // packlint: allow(R1) -- warm-up only\n    v.push(1);\n}\n";
+        let a = analyze(&[file("x.rs", src)]);
+        assert!(a.findings.is_empty());
+        assert_eq!(a.suppressed.len(), 1);
+        assert_eq!(a.suppressions.len(), 1);
+        assert!(a.suppressions[0].used);
+        assert_eq!(a.suppressions[0].reason, "warm-up only");
+    }
+
+    #[test]
+    fn valid_op_names() {
+        assert!(valid_op_name("gemm.in_proj"));
+        assert!(valid_op_name("pool.busy.retry"));
+        assert!(!valid_op_name("Gemm.in_proj"));
+        assert!(!valid_op_name("gemm"));
+        assert!(!valid_op_name("gemm."));
+    }
+}

@@ -1,0 +1,403 @@
+//! Brace-depth scope resolution over lexed lines.
+//!
+//! A single pass walks the blanked `code` view of every line, keeping a
+//! header buffer of the tokens seen since the last `{`, `}` or `;`.
+//! When a `{` opens, the header classifies the new scope: `fn name`,
+//! `mod name`, `impl`, a bare `unsafe` block, or an anonymous block
+//! (struct/match/closure bodies — anything without its own rule
+//! semantics). The walk records, per line, every scope that was live at
+//! any point on that line, so single-line bodies (`fn f() { .. }`)
+//! attribute their tokens to the right function.
+//!
+//! `unsafe` sites (blocks, fns, impls) are collected as they classify;
+//! `unsafe fn(..)` in *type* position never reaches a `{` through a
+//! header and is therefore never mis-reported.
+//!
+//! Region markers read from comments attach to the **next** `fn` scope
+//! and are dropped at the next `;` (so a marker above a `use` or type
+//! alias cannot leak onto an unrelated function):
+//!
+//! * `packlint: zero-alloc` — the fn joins the R1 hot-path-alloc set
+//! * `packlint: no-blocking-lock` — the fn joins the R3 try_lock-only set
+//! * `packlint: trace-hot` — the fn joins the R4 trace-coverage set
+
+use super::lexer::LexLine;
+
+/// What kind of scope a `{` opened.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ScopeKind {
+    Fn,
+    Mod,
+    Impl,
+    UnsafeBlock,
+    Block,
+}
+
+/// One resolved scope (arena-allocated; `FileScopes::line_scopes` holds
+/// indices into the arena).
+#[derive(Clone, Debug)]
+pub struct Scope {
+    pub kind: ScopeKind,
+    /// Fn or mod name, when the header carried one.
+    pub name: Option<String>,
+    /// 0-based line where the scope's header starts.
+    pub line: usize,
+    /// Inside `#[cfg(test)]` / `#[test]` code.
+    pub is_test: bool,
+    pub zero_alloc: bool,
+    pub no_block_lock: bool,
+    pub trace_hot: bool,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum UnsafeKind {
+    Block,
+    Fn,
+    Impl,
+}
+
+impl UnsafeKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            UnsafeKind::Block => "block",
+            UnsafeKind::Fn => "fn",
+            UnsafeKind::Impl => "impl",
+        }
+    }
+}
+
+/// One `unsafe` occurrence that opened a block, fn body, or impl.
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    pub kind: UnsafeKind,
+    /// 0-based line of the `unsafe` keyword.
+    pub line: usize,
+    /// Enclosing/declared fn name for fn sites.
+    pub fn_name: Option<String>,
+    pub in_test: bool,
+}
+
+/// Everything the walk learned about one file.
+pub struct FileScopes {
+    pub scopes: Vec<Scope>,
+    /// Per line: arena indices of every scope live on that line,
+    /// outermost first (including scopes opened on the line itself).
+    pub line_scopes: Vec<Vec<usize>>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+impl FileScopes {
+    /// Innermost `fn` scope live on `line`, if any.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&Scope> {
+        self.line_scopes[line]
+            .iter()
+            .rev()
+            .map(|&i| &self.scopes[i])
+            .find(|s| s.kind == ScopeKind::Fn)
+    }
+
+    /// Is `line` inside test-only code?
+    pub fn in_test(&self, line: usize) -> bool {
+        self.line_scopes[line].iter().any(|&i| self.scopes[i].is_test)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte position of keyword `kw` as a whole word in `h`, if present.
+fn find_word(h: &str, kw: &str) -> Option<usize> {
+    let hb = h.as_bytes();
+    let kb = kw.as_bytes();
+    let mut i = 0;
+    while i + kb.len() <= hb.len() {
+        if &hb[i..i + kb.len()] == kb
+            && (i == 0 || !is_ident(hb[i - 1]))
+            && (i + kb.len() == hb.len() || !is_ident(hb[i + kb.len()]))
+        {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// `kw` followed by whitespace and an identifier — the `fn name` /
+/// `mod name` declaration shape (`fn` in type position has no
+/// whitespace+identifier after it and is skipped).
+fn decl_name(h: &str, kw: &str) -> Option<(usize, String)> {
+    let hb = h.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = find_word(&h[from..], kw) {
+        let at = from + rel;
+        let mut j = at + kw.len();
+        let mut saw_ws = false;
+        while j < hb.len() && (hb[j] == b' ' || hb[j] == b'\t') {
+            j += 1;
+            saw_ws = true;
+        }
+        if saw_ws && j < hb.len() && (hb[j].is_ascii_alphabetic() || hb[j] == b'_') {
+            let start = j;
+            while j < hb.len() && is_ident(hb[j]) {
+                j += 1;
+            }
+            return Some((at, h[start..j].to_string()));
+        }
+        from = at + kw.len();
+    }
+    None
+}
+
+/// Whitespace-squashed copy, for attribute matching (`#[cfg(test)]`).
+fn squash(h: &str) -> String {
+    h.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+/// Walk one lexed file.
+pub fn walk(lines: &[LexLine]) -> FileScopes {
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut stack: Vec<usize> = Vec::new();
+    let mut line_scopes: Vec<Vec<usize>> = Vec::with_capacity(lines.len());
+    let mut unsafe_sites: Vec<UnsafeSite> = Vec::new();
+
+    let mut header = String::new();
+    let mut header_lines: Vec<(usize, String)> = Vec::new();
+    // `(`/`[` nesting depth: a `;` inside an array type or argument list
+    // (`[[f32; NR]; MR]`) is not a statement boundary.
+    let mut depth = 0usize;
+    let mut pending_zero_alloc = false;
+    let mut pending_no_block_lock = false;
+    let mut pending_trace_hot = false;
+
+    for (idx, line) in lines.iter().enumerate() {
+        if line.comment.contains("packlint: zero-alloc") {
+            pending_zero_alloc = true;
+        }
+        if line.comment.contains("packlint: no-blocking-lock") {
+            pending_no_block_lock = true;
+        }
+        if line.comment.contains("packlint: trace-hot") {
+            pending_trace_hot = true;
+        }
+
+        let mut view: Vec<usize> = stack.clone();
+        let code = line.code.as_bytes();
+        let mut frag_start = 0usize;
+        for (j, &ch) in code.iter().enumerate() {
+            match ch {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+            if ch != b'{' && ch != b'}' && ch != b';' {
+                continue;
+            }
+            if ch == b';' && depth > 0 {
+                continue;
+            }
+            let frag = &line.code[frag_start..j];
+            if !frag.trim().is_empty() {
+                header.push(' ');
+                header.push_str(frag);
+                header_lines.push((idx, frag.to_string()));
+            }
+            frag_start = j + 1;
+            match ch {
+                b'{' => {
+                    let parent_test = stack.iter().any(|&i| scopes[i].is_test);
+                    let unsafe_line = header_lines
+                        .iter()
+                        .find(|(_, t)| find_word(t, "unsafe").is_some())
+                        .map(|&(l, _)| l)
+                        .unwrap_or(idx);
+                    let sq = squash(&header);
+                    let sc = if let Some((fn_at, name)) = decl_name(&header, "fn") {
+                        let is_unsafe = matches!(find_word(&header, "unsafe"),
+                            Some(u) if u < fn_at);
+                        if is_unsafe {
+                            unsafe_sites.push(UnsafeSite {
+                                kind: UnsafeKind::Fn,
+                                line: unsafe_line,
+                                fn_name: Some(name.clone()),
+                                in_test: parent_test,
+                            });
+                        }
+                        let sc = Scope {
+                            kind: ScopeKind::Fn,
+                            name: Some(name),
+                            line: header_lines.first().map(|&(l, _)| l).unwrap_or(idx),
+                            is_test: parent_test || sq.contains("#[test]"),
+                            zero_alloc: pending_zero_alloc,
+                            no_block_lock: pending_no_block_lock,
+                            trace_hot: pending_trace_hot,
+                        };
+                        pending_zero_alloc = false;
+                        pending_no_block_lock = false;
+                        pending_trace_hot = false;
+                        sc
+                    } else if let Some((_, name)) = decl_name(&header, "mod") {
+                        Scope {
+                            kind: ScopeKind::Mod,
+                            name: Some(name),
+                            line: idx,
+                            is_test: parent_test || sq.contains("cfg(test)"),
+                            zero_alloc: false,
+                            no_block_lock: false,
+                            trace_hot: false,
+                        }
+                    } else if find_word(&header, "impl").is_some() {
+                        if find_word(&header, "unsafe").is_some() {
+                            unsafe_sites.push(UnsafeSite {
+                                kind: UnsafeKind::Impl,
+                                line: unsafe_line,
+                                fn_name: None,
+                                in_test: parent_test,
+                            });
+                        }
+                        Scope {
+                            kind: ScopeKind::Impl,
+                            name: None,
+                            line: idx,
+                            is_test: parent_test,
+                            zero_alloc: false,
+                            no_block_lock: false,
+                            trace_hot: false,
+                        }
+                    } else {
+                        let trimmed = header.trim_end();
+                        let bare_unsafe = trimmed.ends_with("unsafe")
+                            && find_word(trimmed, "unsafe")
+                                .map(|u| u + "unsafe".len() == trimmed.len())
+                                .unwrap_or(false);
+                        let kind = if bare_unsafe {
+                            unsafe_sites.push(UnsafeSite {
+                                kind: UnsafeKind::Block,
+                                line: unsafe_line,
+                                fn_name: None,
+                                in_test: parent_test,
+                            });
+                            ScopeKind::UnsafeBlock
+                        } else {
+                            ScopeKind::Block
+                        };
+                        Scope {
+                            kind,
+                            name: None,
+                            line: idx,
+                            is_test: parent_test,
+                            zero_alloc: false,
+                            no_block_lock: false,
+                            trace_hot: false,
+                        }
+                    };
+                    let id = scopes.len();
+                    scopes.push(sc);
+                    stack.push(id);
+                    view.push(id);
+                    header.clear();
+                    header_lines.clear();
+                    depth = 0;
+                }
+                b'}' => {
+                    stack.pop();
+                    header.clear();
+                    header_lines.clear();
+                    depth = 0;
+                }
+                _ => {
+                    // `;` — statement boundary: headers and pending
+                    // markers must not leak past it.
+                    header.clear();
+                    header_lines.clear();
+                    depth = 0;
+                    pending_zero_alloc = false;
+                    pending_no_block_lock = false;
+                    pending_trace_hot = false;
+                }
+            }
+        }
+        let tail = &line.code[frag_start..];
+        if !tail.trim().is_empty() {
+            header.push(' ');
+            header.push_str(tail);
+            header_lines.push((idx, tail.to_string()));
+        }
+        line_scopes.push(view);
+    }
+
+    FileScopes {
+        scopes,
+        line_scopes,
+        unsafe_sites,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn walk_src(src: &str) -> FileScopes {
+        walk(&lex(src))
+    }
+
+    #[test]
+    fn resolves_fn_and_mod_scopes() {
+        let fs = walk_src("pub fn outer(x: usize) -> usize {\n    let y = x;\n    y\n}\n");
+        let f = fs.enclosing_fn(1).expect("line 1 is inside outer");
+        assert_eq!(f.name.as_deref(), Some("outer"));
+        assert!(fs.enclosing_fn(0).is_some(), "header line counts too");
+    }
+
+    #[test]
+    fn single_line_fn_bodies_attribute_correctly() {
+        let fs = walk_src("fn tiny() -> usize { 42 }\n");
+        assert_eq!(
+            fs.enclosing_fn(0).and_then(|s| s.name.as_deref().map(String::from)),
+            Some("tiny".to_string())
+        );
+    }
+
+    #[test]
+    fn cfg_test_mods_mark_lines_as_test() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n";
+        let fs = walk_src(src);
+        assert!(!fs.in_test(0));
+        assert!(fs.in_test(3));
+    }
+
+    #[test]
+    fn unsafe_sites_classify_block_fn_impl() {
+        let src = "unsafe fn f() {}\nunsafe impl Send for X {}\nfn g() {\n    let x = unsafe { d() };\n}\ntype T = unsafe fn(usize);\n";
+        let fs = walk_src(src);
+        let kinds: Vec<UnsafeKind> = fs.unsafe_sites.iter().map(|s| s.kind).collect();
+        assert_eq!(kinds, vec![UnsafeKind::Fn, UnsafeKind::Impl, UnsafeKind::Block]);
+        assert_eq!(fs.unsafe_sites[0].fn_name.as_deref(), Some("f"));
+        assert_eq!(fs.unsafe_sites[2].line, 3);
+    }
+
+    #[test]
+    fn markers_attach_to_next_fn_only() {
+        let src = "// packlint: zero-alloc\nfn hot() {}\nfn cold() {}\n";
+        let fs = walk_src(src);
+        let hot = fs.enclosing_fn(1).unwrap();
+        let cold = fs.enclosing_fn(2).unwrap();
+        assert!(hot.zero_alloc);
+        assert!(!cold.zero_alloc);
+    }
+
+    #[test]
+    fn array_type_semicolons_do_not_split_headers() {
+        let src = "fn tile(acc: &mut [[f32; 4]; 6]) {\n    acc[0][0] = 1.0;\n}\n";
+        let fs = walk_src(src);
+        assert_eq!(fs.enclosing_fn(1).unwrap().name.as_deref(), Some("tile"));
+    }
+
+    #[test]
+    fn marker_dropped_at_statement_boundary() {
+        let src = "// packlint: zero-alloc\nuse std::fmt;\nfn f() {}\n";
+        let fs = walk_src(src);
+        assert!(!fs.enclosing_fn(2).unwrap().zero_alloc);
+    }
+}

@@ -321,6 +321,8 @@ pub fn gemm_into_tier(
     // waves over the same slabs instead of retaining ~m·KC scratch.
     let slabs = panels.min((threads * 4).max(4));
     let n_strips = n.div_ceil(NR);
+    // packlint: allow(R1) -- amortized arena growth: reserve() is a no-op
+    // once the scratch capacity is warm (tests/zero_alloc.rs audits it).
     scratch.reserve(slabs * ph * KC, n_strips * NR * k);
 
     // Pack all of B once, strip-major; shared read-only by every panel.

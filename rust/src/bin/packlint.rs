@@ -1,0 +1,76 @@
+//! packlint — scan `rust/src/**` (full rules) and `rust/benches/**`
+//! (R2/R5) for invariant violations, print findings, and write the
+//! `ANALYSIS.json` audit artifact.
+//!
+//! Exit status: 0 when every finding is suppressed or absent, 1 when
+//! unsuppressed findings remain, 2 on usage or I/O errors.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use packmamba::analysis;
+
+fn main() -> ExitCode {
+    let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo_root = crate_dir.parent().unwrap_or(crate_dir);
+    let mut json_path: PathBuf = repo_root.join("ANALYSIS.json");
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_path = PathBuf::from(p),
+                None => {
+                    eprintln!("packlint: --json requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: packlint [--json PATH]");
+                println!("  --json PATH   where to write ANALYSIS.json (default: repo root)");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("packlint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let files = match analysis::collect_tree(crate_dir) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("packlint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    let a = analysis::analyze(&files);
+
+    for f in &a.findings {
+        println!("{}", analysis::render(f));
+    }
+    if let Err(e) = std::fs::write(&json_path, analysis::to_json(&a).pretty() + "\n") {
+        eprintln!("packlint: writing {}: {e}", json_path.display());
+        return ExitCode::from(2);
+    }
+
+    let undocumented = a.unsafe_inventory.iter().filter(|s| !s.documented).count();
+    let used = a.suppressions.iter().filter(|s| s.used).count();
+    eprintln!(
+        "packlint: {} files, {} findings, {} suppressed ({} allows, {} used), \
+         {} unsafe sites ({} undocumented) -> {}",
+        a.files_scanned,
+        a.findings.len(),
+        a.suppressed.len(),
+        a.suppressions.len(),
+        used,
+        a.unsafe_inventory.len(),
+        undocumented,
+        json_path.display()
+    );
+    if a.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

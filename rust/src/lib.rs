@@ -40,6 +40,7 @@
 //! | [`coordinator`] | trainer, schemes, data-parallel leader (monolithic shard-per-worker mode and chunk-aware stream-split mode with gradient-sum all-reduce), metrics, checkpoints — fault-tolerant: CRC-verified crash-safe v2 checkpoints with bitwise resume (`--save-every` / `--resume`), a non-finite loss/grad guard that skips bad updates (aborting after `max_bad_steps` consecutive), and typed dp worker-failure containment with bounded step retries |
 //! | [`coordinator::telemetry`] | [`coordinator::TelemetrySnapshot`]: folds the span layer into per-operator self-time shares, padding ratios, and pool utilization; stamped into `BENCH_*` JSON, logged every `LOG_EVERY` steps, paired with `--trace`'s chrome export |
 //! | [`perfmodel`] | analytic A100 model reproducing the paper-scale figure shapes |
+//! | [`analysis`] | packlint — the repo-native static analyzer (line lexer → scope walk → R1–R5 rule passes → `ANALYSIS.json`) behind the `packlint` bin and the `tests/packlint.rs` gate; see *Static analysis* below |
 //!
 //! ## Environment variables
 //!
@@ -51,7 +52,39 @@
 //! | `PACKMAMBA_TRACE` | any non-empty value except `0` enables operator tracing at startup (the `--trace <path>` CLI flag enables it too, and additionally writes a chrome://tracing JSON at exit) |
 //! | `PACKMAMBA_LOG` | max log level for the stderr logger: `error` \| `warn` \| `info` (default) \| `debug` \| `trace` \| `off`; unknown values warn and fall back to `info` |
 //! | `PACKMAMBA_FAILPOINT` | arm deterministic failpoints at startup (`;`-separated `site=action[:arg][@step[+]][#worker]` rules — see [`util::failpoint`]); injected kills exit with code 113 so tests tell them apart from real failures; a malformed spec exits 2 |
+//! | `PACKMAMBA_PROPTEST_CASES` | cases per property for the vendored property-test harness (`util::proptest`); default 64 — CI soaks crank it up |
+//! | `PACKMAMBA_PROPTEST_SEED` | base RNG seed for property-test case generation (default `0xC0FFEE`); set it to replay a failing case from a soak log |
+//!
+//! ## Static analysis
+//!
+//! The invariants above are enforced, not just documented: the
+//! [`analysis`] module and the `packlint` binary
+//! (`cargo run --release --bin packlint`) scan `rust/src/**` (all
+//! rules) and `rust/benches/**` (R2/R5) on every CI run, and
+//! `tests/packlint.rs` gates the tier-1 suite on a clean scan.
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | R1 | no allocating or buffer-growing calls inside the declared zero-alloc set ([`analysis::manifest::ZERO_ALLOC_FNS`]: packed kernels, GEMM tiles, model `_into` paths, trace recording, threadpool dispatch) |
+//! | R2 | every `unsafe` block/fn/impl carries a `// SAFETY:` (or `# Safety` doc) justification, and lands in the machine-readable inventory in `ANALYSIS.json` |
+//! | R3 | in `threadpool.rs`/`dataparallel.rs`: no blocking `.lock()` in the try_lock-only dispatch fns, every `Ordering::` choice annotated with `// ordering:`, no `.unwrap()`/`.expect()` on channel send/recv in worker code |
+//! | R4 | hot-set fns open `Op::` spans; the `ops!` registry and its use sites stay in sync both directions, and op names follow `<subsystem>.<op>` |
+//! | R5 | `PACKMAMBA_*` env reads match the env matrix above and failpoint site strings match the `failpoint.rs` site table, both directions |
+//!
+//! A finding is suppressed in place with a justified comment on (or
+//! directly above) the offending line — the syntax is
+//! `// packlint: allow(<rule>) -- <why>` — and every suppression lands
+//! in the `ANALYSIS.json` ledger; stale ones (that no longer match a
+//! finding) fail `tests/packlint.rs`.  New code opts into a discipline
+//! without a manifest edit via the region markers described in
+//! [`analysis::scope`].
+//!
+//! Adding a rule: add the pass in [`analysis::rules`] (emit through the
+//! suppression-aware `emit` so `allow` comments keep working), extend
+//! [`analysis::rules::Rule`], and pin the behavior with a fixture under
+//! `tests/packlint_fixtures/`.
 
+pub mod analysis;
 pub mod backend;
 pub mod config;
 pub mod coordinator;

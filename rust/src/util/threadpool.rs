@@ -33,10 +33,14 @@ use super::trace;
 static SPAWNS: AtomicUsize = AtomicUsize::new(0);
 
 pub fn spawn_count() -> usize {
+    // ordering: SeqCst — audit counter read by the zero-alloc tests;
+    // spawns are rare (pool construction), so strength costs nothing.
     SPAWNS.load(Ordering::SeqCst)
 }
 
 fn note_spawn() {
+    // ordering: SeqCst — keeps the spawn audit exactly ordered against
+    // the test's before/after snapshots; never on the dispatch path.
     SPAWNS.fetch_add(1, Ordering::SeqCst);
 }
 
@@ -235,6 +239,11 @@ struct Job {
 }
 
 /// Placeholder occupying the job slot before the first dispatch.
+///
+/// # Safety
+///
+/// Trivially safe for any arguments (the body is empty); `unsafe` only
+/// to match the [`TaskFn`] signature the job slot stores.
 unsafe fn noop_task(_ctx: *const (), _i: usize) {}
 
 #[derive(Clone, Copy, Default)]
@@ -336,6 +345,10 @@ fn worker_loop(inner: Arc<PoolInner>, slot: Arc<WorkerSlot>) {
             let _busy = trace::span(trace::Op::PoolBusy);
             let mut claimed = 0u64;
             loop {
+                // ordering: Relaxed — the cursor only claims task
+                // indices (each fetch_add yields a distinct `i`); job
+                // visibility is ordered by the cmd-mutex epoch hand-off,
+                // not by this counter.
                 let i = inner.cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= job.tasks {
                     break;
@@ -350,6 +363,9 @@ fn worker_loop(inner: Arc<PoolInner>, slot: Arc<WorkerSlot>) {
             trace::count_pool_tasks(claimed);
         }));
         if res.is_err() {
+            // ordering: SeqCst — published before this worker's
+            // active-latch decrement below; the dispatcher's swap after
+            // the latch drains must never miss a worker panic.
             inner.poisoned.store(true, Ordering::SeqCst);
         }
         let mut active = relock(&inner.active);
@@ -464,6 +480,7 @@ impl WorkerPool {
     /// 0..tasks`, from any thread, in any interleaving (the typed
     /// wrappers guarantee this by handing each index a disjoint slice),
     /// and `ctx` must remain valid until this call returns.
+    // packlint: no-blocking-lock
     pub unsafe fn run_tasks(&self, threads: usize, tasks: usize, run: TaskFn, ctx: *const ()) {
         let helpers = clamp_helpers(threads, tasks);
         if helpers == 0 || in_pool_worker() || !self.try_dispatch(helpers, tasks, run, ctx) {
@@ -483,6 +500,7 @@ impl WorkerPool {
     ///
     /// # Safety
     /// As [`WorkerPool::run_tasks`]; additionally `helpers >= 1`.
+    // packlint: no-blocking-lock
     unsafe fn try_dispatch(
         &self,
         helpers: usize,
@@ -509,6 +527,9 @@ impl WorkerPool {
             // SAFETY: see the `PoolInner` field/impl comments — the
             // epoch bump below orders this write before any worker read.
             unsafe { *self.inner.job.get() = Job { run, ctx, tasks } };
+            // ordering: Relaxed — every participant is parked here; the
+            // epoch bump under each worker's cmd mutex publishes the
+            // reset before any worker can touch the cursor.
             self.inner.cursor.store(0, Ordering::Relaxed);
             *relock(&self.inner.active) = helpers;
             for w in ws.iter().take(helpers) {
@@ -521,6 +542,8 @@ impl WorkerPool {
         // unwind past the latch wait — workers may still be running
         // tasks that read through `ctx`.
         let caller_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            // ordering: Relaxed — index claims need atomicity only; see
+            // the worker-side cursor comment in `worker_loop`.
             let i = self.inner.cursor.fetch_add(1, Ordering::Relaxed);
             if i >= tasks {
                 break;
@@ -537,6 +560,8 @@ impl WorkerPool {
         // dispatcher's own panic — otherwise a dual panic (caller and
         // worker both hit a failing task) would leak the flag into the
         // next, unrelated dispatch on this (process-wide) pool.
+        // ordering: SeqCst — pairs with the worker-side store; the swap
+        // consumes the flag exactly once per dispatch.
         let worker_panicked = self.inner.poisoned.swap(false, Ordering::SeqCst);
         if let Err(p) = caller_res {
             std::panic::resume_unwind(p);
@@ -576,6 +601,7 @@ fn pool_lanes() -> &'static [WorkerPool; POOL_LANES] {
 ///
 /// # Safety
 /// As [`WorkerPool::run_tasks`].
+// packlint: no-blocking-lock
 unsafe fn run_tasks_any(threads: usize, tasks: usize, run: TaskFn, ctx: *const ()) {
     let helpers = clamp_helpers(threads, tasks);
     if helpers > 0 && !in_pool_worker() {

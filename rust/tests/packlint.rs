@@ -1,0 +1,136 @@
+//! packlint gate: the real tree must scan clean, and each rule's
+//! behavior is pinned by golden fixtures under
+//! `tests/packlint_fixtures/` (fixture sources are never compiled —
+//! they exist only as analyzer input).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use packmamba::analysis::{self, Analysis, SourceFile};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/packlint_fixtures")
+}
+
+fn fixture(rel: &str) -> SourceFile {
+    let path = fixture_dir().join(rel);
+    let text =
+        fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let base = Path::new(rel)
+        .file_name()
+        .and_then(|n| n.to_str())
+        .expect("fixture basename")
+        .to_string();
+    SourceFile {
+        display: base.clone(),
+        name: base,
+        src_rel: None,
+        bench_only: false,
+        text,
+    }
+}
+
+fn scan(sources: &[&str]) -> Analysis {
+    let files: Vec<SourceFile> = sources.iter().map(|s| fixture(s)).collect();
+    analysis::analyze(&files)
+}
+
+/// Analyze the fixture set and compare rendered findings line-by-line
+/// against the committed golden file.
+fn check_golden(sources: &[&str], expect: &str) -> Analysis {
+    let a = scan(sources);
+    let got: Vec<String> = a.findings.iter().map(analysis::render).collect();
+    let path = fixture_dir().join(expect);
+    let want: Vec<String> = fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(str::to_string)
+        .collect();
+    assert_eq!(got, want, "{expect}: findings diverged from the golden file");
+    a
+}
+
+#[test]
+fn real_tree_scans_clean() {
+    let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = analysis::collect_tree(crate_dir).expect("collect scan set");
+    assert!(files.len() >= 40, "scan set suspiciously small: {}", files.len());
+    let a = analysis::analyze(&files);
+
+    let rendered: Vec<String> = a.findings.iter().map(analysis::render).collect();
+    assert!(
+        rendered.is_empty(),
+        "packlint found unsuppressed violations:\n{}",
+        rendered.join("\n")
+    );
+
+    // Every unsafe site in the tree must be justified, and the walk
+    // must actually see the known unsafe-heavy modules.
+    let undocumented: Vec<String> = a
+        .unsafe_inventory
+        .iter()
+        .filter(|s| !s.documented)
+        .map(|s| format!("{}:{}", s.file, s.line))
+        .collect();
+    assert!(undocumented.is_empty(), "undocumented unsafe: {undocumented:?}");
+    assert!(
+        a.unsafe_inventory.len() >= 10,
+        "unsafe inventory too small ({}) — scope walk regressed?",
+        a.unsafe_inventory.len()
+    );
+
+    // Suppressions that no longer match a finding are stale and must
+    // be pruned, not carried forever.
+    let stale: Vec<String> = a
+        .suppressions
+        .iter()
+        .filter(|s| !s.used)
+        .map(|s| format!("{}:{} allow({})", s.file, s.line, s.rule))
+        .collect();
+    assert!(stale.is_empty(), "stale packlint suppressions: {stale:?}");
+}
+
+#[test]
+fn r1_zero_alloc_fixture() {
+    let a = check_golden(&["r1_zero_alloc.rs"], "r1_zero_alloc.expect");
+    assert_eq!(a.suppressed.len(), 1, "one allow(R1) must absorb Vec::new");
+    assert!(a.suppressions.iter().all(|s| s.used));
+}
+
+#[test]
+fn r2_unsafe_fixture() {
+    let a = check_golden(&["r2_unsafe.rs"], "r2_unsafe.expect");
+    assert_eq!(a.unsafe_inventory.len(), 5, "block + fn sites incl. the macro body");
+    let documented = a.unsafe_inventory.iter().filter(|s| s.documented).count();
+    assert_eq!(documented, 2);
+}
+
+#[test]
+fn r3_concurrency_fixture() {
+    let a = check_golden(&["threadpool.rs"], "threadpool.expect");
+    assert_eq!(a.suppressed.len(), 1, "one allow(R3) on the second recv");
+    assert!(a.suppressions.iter().all(|s| s.used));
+}
+
+#[test]
+fn r4_trace_fixture() {
+    check_golden(&["r4_trace.rs"], "r4_trace.expect");
+}
+
+#[test]
+fn r4_ops_sync_fixture() {
+    check_golden(&["ops_sync/trace.rs", "ops_sync/user.rs"], "ops_sync.expect");
+}
+
+#[test]
+fn r5_registry_fixture() {
+    let a = check_golden(&["r5_env.rs"], "r5_env.expect");
+    assert_eq!(a.suppressed.len(), 1, "one allow(R5) on the hidden site");
+}
+
+#[test]
+fn lexer_edge_cases_fixture() {
+    let a = check_golden(&["lexer_edges.rs"], "lexer_edges.expect");
+    assert!(a.unsafe_inventory.is_empty(), "raw-string `unsafe` must not count");
+}

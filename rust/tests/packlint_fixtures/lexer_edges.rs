@@ -1,0 +1,31 @@
+//! Lexer edge cases: raw strings, nested block comments, multi-line
+//! attributes, char-literal braces, raw identifiers.  One real finding
+//! at the end pins that scanning still works after all of them.
+
+/* outer /* nested */ still a comment: fn fake() { Vec::new() } */
+
+const RAW: &str = r#"not code: unsafe { Vec::new() } // not a comment"#;
+const RAW2: &str = r##"quote "# inside"##;
+const BYTES: &[u8] = br"raw bytes with \ backslash";
+
+#[derive(
+    Clone,
+    Debug
+)]
+struct Edge {
+    open: char,
+    close: char,
+}
+
+fn braces() -> Edge {
+    Edge { open: '{', close: '}' }
+}
+
+const ESCAPED: char = '\'';
+const IDENT_R: u32 = crate::r#match();
+
+// packlint: zero-alloc
+fn still_scanned() -> Vec<u32> {
+    let v = vec![1, 2, 3];
+    v
+}

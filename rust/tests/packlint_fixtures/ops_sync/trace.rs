@@ -1,0 +1,15 @@
+//! R4 ops-registry fixture (basename makes this the `ops!` owner): the
+//! table and its use sites must agree in both directions, names must
+//! follow `<subsystem>.<op>`, and duplicates are rejected.
+
+macro_rules! ops {
+    ($($v:ident => $name:expr,)*) => {};
+}
+
+ops! {
+    ScanFwd => "scan.fwd",
+    GemmIn => "gemm.in_proj",
+    BadName => "ScanBwd",
+    DupName => "scan.fwd",
+    NeverUsed => "pool.idle",
+}

@@ -1,0 +1,5 @@
+//! Use sites for the ops-registry fixture.
+
+fn record_all() -> [Op; 5] {
+    [Op::ScanFwd, Op::GemmIn, Op::BadName, Op::DupName, Op::Phantom]
+}

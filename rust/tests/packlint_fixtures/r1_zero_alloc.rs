@@ -1,0 +1,24 @@
+//! R1 fixture: a marker-opted zero-alloc fn with allocations (one
+//! suppressed), an unmarked fn that may allocate freely, and a test
+//! helper that is exempt.
+
+// packlint: zero-alloc
+fn hot(buf: &mut Vec<f32>, n: usize) {
+    buf.push(1.0);
+    let tmp = vec![0u8; n];
+    // packlint: allow(R1) -- scratch is reused across calls in the real code
+    let mut scratch = Vec::new();
+    scratch.extend_from_slice(&tmp);
+}
+
+fn cold(n: usize) -> Vec<u32> {
+    (0..n as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // packlint: zero-alloc
+    fn helper() -> String {
+        String::new()
+    }
+}

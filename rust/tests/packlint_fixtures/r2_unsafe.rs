@@ -1,0 +1,42 @@
+//! R2 fixture: documented and undocumented unsafe sites, `unsafe`
+//! inside a macro body, and a bare fn-pointer type (not a site).
+
+static mut COUNTER: u32 = 0;
+
+fn undocumented_block() {
+    unsafe {
+        COUNTER += 1;
+    }
+}
+
+fn documented_block() {
+    // SAFETY: single-threaded fixture; no aliasing.
+    unsafe {
+        COUNTER += 1;
+    }
+}
+
+/// # Safety
+/// `p` must be valid for reads.
+unsafe fn documented_fn(p: *const u32) -> u32 {
+    *p
+}
+
+unsafe fn undocumented_fn(p: *const u32) -> u32 {
+    *p
+}
+
+type RawHook = unsafe fn(*const u32) -> u32;
+
+macro_rules! bump {
+    () => {
+        unsafe {
+            COUNTER += 1;
+        }
+    };
+}
+
+fn uses_macro() -> RawHook {
+    bump!();
+    documented_fn
+}

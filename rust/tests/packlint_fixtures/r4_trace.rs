@@ -1,0 +1,18 @@
+//! R4 fixture: trace-hot fns must open an `Op::` span.
+
+use crate::util::trace;
+
+// packlint: trace-hot
+fn covered(x: &mut [f32]) {
+    let _sp = trace::span(trace::Op::ScanFwd);
+    for v in x.iter_mut() {
+        *v += 1.0;
+    }
+}
+
+// packlint: trace-hot
+fn uncovered(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= 2.0;
+    }
+}

@@ -1,0 +1,19 @@
+//! R5 fixture: env reads and failpoint sites must match their
+//! registries (absent here, so every use is a finding unless allowed).
+
+use std::env;
+
+fn read_knob() -> Option<String> {
+    env::var("PACKMAMBA_FIXTURE_KNOB").ok()
+}
+
+fn read_home() -> Option<String> {
+    // non-PACKMAMBA vars are out of scope
+    env::var("HOME").ok()
+}
+
+fn poke_failpoints(step: usize) {
+    crate::util::failpoint::check("fixture.site", step);
+    // packlint: allow(R5) -- fixture: site registered somewhere packlint cannot see
+    crate::util::failpoint::check("fixture.hidden", step);
+}

@@ -1,0 +1,43 @@
+//! R3 fixture (basename opts into the concurrency checks): dispatch
+//! locking, ordering annotations, and channel unwraps in worker code.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+static PENDING: AtomicUsize = AtomicUsize::new(0);
+
+// packlint: no-blocking-lock
+fn dispatch(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+fn blocking_is_fine_here(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+fn publish() {
+    // ordering: Release pairs with the worker's Acquire load.
+    PENDING.store(1, Ordering::Release);
+    PENDING.store(2, Ordering::Relaxed);
+}
+
+fn worker_loop(rx: &Receiver<u32>) -> u32 {
+    let first = rx.recv().unwrap();
+    // packlint: allow(R3) -- fixture: demonstrates a justified unwrap
+    let second = rx.recv().unwrap();
+    first + second
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_paths_are_exempt() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        tx.send(1u32).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+        let _ = PENDING.load(Ordering::Relaxed);
+    }
+}
