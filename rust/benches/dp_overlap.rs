@@ -1,0 +1,130 @@
+//! Pipelined step engine bench: synchronous (`prefetch_depth = 0`) vs
+//! overlapped (`prefetch_depth = 2`) data-parallel step time, across
+//! workers {2, 4, 8} × grad_accum {1, 4} on the chunk-aware dp path
+//! (the leader-owned feed is where prefetch overlaps compute).
+//!
+//! The pipeline-stall share comes from the span layer: `dp.prefetch`
+//! wraps only consume-path packing/waiting — batches served from a warm
+//! queue record nothing — so the op's aggregate duration over the run's
+//! wall time *is* the fraction of the run stalled on batch production.
+//! Each cell also re-asserts the overlap neutrality invariant: both
+//! runs must end with bit-identical parameters.
+//!
+//! Results land in `BENCH_DP.json` at the repo root (and under
+//! `target/bench/`).  `-- --smoke` runs a reduced step count for CI and
+//! never exits non-zero.
+
+mod common;
+
+use std::time::Instant;
+
+use packmamba::config::{ModelConfig, Scheme, TrainConfig};
+use packmamba::coordinator::DataParallelTrainer;
+use packmamba::util::bench::fmt_duration;
+use packmamba::util::json::Json;
+use packmamba::util::trace::{self, Op};
+
+const WORKERS: [usize; 3] = [2, 4, 8];
+const ACCUMS: [usize; 2] = [1, 4];
+
+/// Chunk-aware dp config: 8 streams (divisible by every worker count),
+/// over-length sequences so the streaming packer splits fragments —
+/// packing does real work per batch, which is what prefetch hides.
+fn base_cfg(steps: usize, workers: usize, accum: usize, depth: usize) -> TrainConfig {
+    let mut c = TrainConfig::defaults(ModelConfig::tiny());
+    c.scheme = Scheme::Pack;
+    c.packing.rows = 8;
+    c.packing.streams = 8;
+    c.chunk_len = 64;
+    c.min_len = 16;
+    c.max_len = 384; // > pack_len: continuation fragments are live
+    c.mean_len = 96.0;
+    c.steps = steps;
+    c.dp_workers = workers;
+    c.grad_accum = accum;
+    c.prefetch_depth = depth;
+    c
+}
+
+/// One measured run: (wall seconds, dp.prefetch stall seconds, params).
+fn run_once(cfg: TrainConfig) -> (f64, f64, Vec<packmamba::tensor::Tensor>) {
+    trace::reset();
+    trace::set_enabled(true);
+    let t0 = Instant::now();
+    let res = DataParallelTrainer::new(cfg)
+        .expect("dp config")
+        .run()
+        .expect("dp run");
+    let wall = t0.elapsed().as_secs_f64();
+    trace::set_enabled(false);
+    assert!(res.replicas_identical, "replica divergence in bench run");
+    let stall_ns: u64 = trace::aggregate()
+        .iter()
+        .find(|a| a.op == Op::DpPrefetch)
+        .map(|a| a.total_ns)
+        .unwrap_or(0);
+    (wall, stall_ns as f64 * 1e-9, res.final_params)
+}
+
+fn main() {
+    packmamba::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let steps = if smoke { 3usize } else { 10 };
+
+    println!(
+        "=== dp overlap: sync (depth 0) vs overlapped (depth 2), {} optimizer steps/cell ===",
+        steps
+    );
+    let mut cells: Vec<Json> = Vec::new();
+    for &workers in &WORKERS {
+        for &accum in &ACCUMS {
+            // warm-up outside the clock: thread pools, allocator, trace
+            // registration
+            let _ = run_once(base_cfg(1, workers, accum, 0));
+
+            let (sync_wall, sync_stall, sync_params) =
+                run_once(base_cfg(steps, workers, accum, 0));
+            let (ov_wall, ov_stall, ov_params) = run_once(base_cfg(steps, workers, accum, 2));
+            let identical = sync_params == ov_params;
+            assert!(
+                identical,
+                "overlap must be bitwise-neutral (workers {workers}, grad_accum {accum})"
+            );
+
+            let sync_step = sync_wall / steps as f64;
+            let ov_step = ov_wall / steps as f64;
+            let sync_share = sync_stall / sync_wall;
+            let ov_share = ov_stall / ov_wall;
+            println!(
+                "workers {workers} accum {accum}: step {} -> {} ({:+.1}%), \
+                 stall share {:.1}% -> {:.1}%",
+                fmt_duration(sync_step),
+                fmt_duration(ov_step),
+                (ov_step / sync_step - 1.0) * 100.0,
+                sync_share * 100.0,
+                ov_share * 100.0
+            );
+            cells.push(Json::from_pairs([
+                ("workers", Json::from(workers)),
+                ("grad_accum", Json::from(accum)),
+                ("sync_step_s", Json::from(sync_step)),
+                ("overlapped_step_s", Json::from(ov_step)),
+                ("speedup", Json::from(sync_step / ov_step)),
+                ("sync_stall_share", Json::from(sync_share)),
+                ("overlapped_stall_share", Json::from(ov_share)),
+                ("bitwise_neutral", Json::from(identical)),
+            ]));
+        }
+    }
+
+    let json = Json::from_pairs([
+        ("bench", Json::from("dp_overlap")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        ("steps_per_cell", Json::from(steps)),
+        ("chunk_len", Json::from(64usize)),
+        ("rows", Json::from(8usize)),
+        ("cells", Json::from(cells)),
+    ]);
+    common::write_results("dp_overlap", &json);
+    common::write_root_json("BENCH_DP.json", &json);
+}

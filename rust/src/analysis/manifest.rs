@@ -86,7 +86,10 @@ pub const TRACE_HOT_FNS: &[(&str, &[&str])] = &[
     ),
     ("backend/ops.rs", &["rms_norm_fwd_into", "rms_norm_bwd_into"]),
     ("backend/adamw.rs", &["apply", "apply_slices"]),
-    ("tensor/ops.rs", &["allreduce_mean", "allreduce_sum"]),
+    (
+        "tensor/ops.rs",
+        &["allreduce_mean", "allreduce_sum", "reduce_scatter_sum", "allgather"],
+    ),
     ("backend/native.rs", &["train_step", "train_step_chunked"]),
 ];
 

@@ -268,6 +268,13 @@ pub struct TrainConfig {
     /// bounded retry-current-batch budget per dp step before a worker
     /// failure is surfaced to the caller
     pub step_retries: usize,
+    /// micro-batches accumulated per optimizer step (1 = every batch
+    /// updates); `steps` counts optimizer steps, so a run consumes
+    /// `steps * grad_accum` batches
+    pub grad_accum: usize,
+    /// batches the leader/worker feeds keep packed ahead of compute
+    /// (0 = fully synchronous: every batch packs on the critical path)
+    pub prefetch_depth: usize,
 }
 
 impl TrainConfig {
@@ -294,6 +301,8 @@ impl TrainConfig {
             save_every: 0,
             max_bad_steps: 3,
             step_retries: 1,
+            grad_accum: 1,
+            prefetch_depth: 2,
         }
     }
 
@@ -318,6 +327,8 @@ impl TrainConfig {
             ("save_every", Json::from(self.save_every)),
             ("max_bad_steps", Json::from(self.max_bad_steps)),
             ("step_retries", Json::from(self.step_retries)),
+            ("grad_accum", Json::from(self.grad_accum)),
+            ("prefetch_depth", Json::from(self.prefetch_depth)),
         ])
     }
 
@@ -381,6 +392,12 @@ impl TrainConfig {
         if let Some(v) = get_u("step_retries") {
             cfg.step_retries = v;
         }
+        if let Some(v) = get_u("grad_accum") {
+            cfg.grad_accum = v;
+        }
+        if let Some(v) = get_u("prefetch_depth") {
+            cfg.prefetch_depth = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -432,6 +449,10 @@ impl TrainConfig {
             "max_bad_steps must be >= 1 (aborts after that many consecutive non-finite steps)"
         );
         anyhow::ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
+        anyhow::ensure!(
+            self.grad_accum >= 1,
+            "grad_accum must be >= 1 (micro-batches per optimizer step)"
+        );
         anyhow::ensure!(
             self.min_len <= self.max_len,
             "min_len {} > max_len {}",

@@ -133,6 +133,10 @@ pub struct Checkpoint {
     pub pipelines: Vec<PipelineState>,
     /// per-worker chunk carries (empty for monolithic runs)
     pub carries: Vec<Option<CarryState>>,
+    /// micro-batches per optimizer step at save time (old files: 1) —
+    /// resume validates it, since the pipeline replay cursor counts
+    /// micro-batches and a different accumulation would desync it
+    pub grad_accum: usize,
 }
 
 fn encode_pipelines(pipelines: &[PipelineState]) -> Vec<u8> {
@@ -269,7 +273,7 @@ impl Write for FailpointFile {
 /// Tensor-only save (end-of-run `--save` without periodic resume
 /// state): a v2 file with empty sections.
 pub fn save(path: &Path, config: &str, specs: &[ParamSpec], state: &TrainState) -> Result<()> {
-    save_full(path, config, specs, state, &[], &[])
+    save_full(path, config, specs, state, &[], &[], 1)
 }
 
 /// Write a complete v2 checkpoint: tensors + pipeline + carry sections,
@@ -281,6 +285,7 @@ pub fn save_full(
     state: &TrainState,
     pipelines: &[PipelineState],
     carries: &[Option<CarryState>],
+    grad_accum: usize,
 ) -> Result<()> {
     let _sp = trace::span(Op::CkptSave);
     anyhow::ensure!(
@@ -338,6 +343,7 @@ pub fn save_full(
         ("version", Json::from(2usize)),
         ("config", Json::from(config)),
         ("step", Json::from(state.step)),
+        ("grad_accum", Json::from(grad_accum.max(1))),
         ("tensors", Json::Arr(tensors)),
         ("sections", Json::Arr(section_meta)),
         ("payload_crc32", Json::from(crc.finalize() as usize)),
@@ -480,6 +486,8 @@ pub fn load_full(path: &Path, specs: &[ParamSpec]) -> Result<Checkpoint> {
         .req("step")?
         .as_usize()
         .ok_or_else(|| anyhow::anyhow!("step must be a number"))?;
+    // files written before gradient accumulation existed are A=1 runs
+    let grad_accum = header.get("grad_accum").and_then(Json::as_usize).unwrap_or(1);
     let n_tensors = header.req("tensors")?.as_arr().map(|a| a.len()).unwrap_or(0);
     anyhow::ensure!(
         n_tensors == 3 * specs.len(),
@@ -574,6 +582,7 @@ pub fn load_full(path: &Path, specs: &[ParamSpec]) -> Result<Checkpoint> {
         state: TrainState { params, m, v, step },
         pipelines,
         carries,
+        grad_accum,
     })
 }
 
@@ -641,6 +650,7 @@ mod tests {
         assert_eq!(ck.state.params, st.params);
         assert!(ck.pipelines.is_empty());
         assert!(ck.carries.is_empty());
+        assert_eq!(ck.grad_accum, 1, "pre-accumulation files default to 1");
     }
 
     #[test]
@@ -757,9 +767,10 @@ mod tests {
             }),
             None,
         ];
-        save_full(&path, "tiny", &specs(), &st, &pipelines, &carries).unwrap();
+        save_full(&path, "tiny", &specs(), &st, &pipelines, &carries, 4).unwrap();
         let ck = load_full(&path, &specs()).unwrap();
         assert_eq!(ck.state.params, st.params);
+        assert_eq!(ck.grad_accum, 4);
         assert_eq!(ck.pipelines.len(), 1);
         let p = &ck.pipelines[0];
         assert_eq!(p.corpus.rng_state, 0x0123_4567_89AB_CDEF_0011_2233_4455_6677);

@@ -1,16 +1,27 @@
 //! Data-parallel training (the paper trains on 8 GPUs with data
-//! parallelism; §4).
+//! parallelism; §4) as a **pipelined step engine**: batch packing
+//! overlaps compute (double-buffered prefetch, [`PrefetchFeed`]),
+//! gradients reduce through the sharded
+//! [`crate::tensor::reduce_scatter_sum`] + [`crate::tensor::allgather`]
+//! pair, and `grad_accum > 1` accumulates micro-batches between
+//! optimizer steps.  All three are bitwise-neutral: an overlapped run
+//! (`prefetch_depth >= 1`) is bit-identical to the synchronous one
+//! (`prefetch_depth == 0`), and the sharded reduction accumulates each
+//! element in worker index order — exactly the leader-sum it replaced.
 //!
-//! Two wirings share the synchronous per-step all-reduce:
+//! Two wirings share the per-step reduce rendezvous:
 //!
 //! **Monolithic** (`chunk_len == 0`) — worker = one thread owning its
 //! own backend instance (backends are thread-local by design, mirroring
-//! one-process-per-device), its own corpus shard and pipeline, and a
-//! full replica of model + optimizer state.  Per step:
+//! one-process-per-device), its own corpus shard and prefetching feed,
+//! and a full replica of model + optimizer state.  Per optimizer step:
 //!
-//!   1. every worker computes (loss, grads) on its shard's batch,
-//!   2. grads cross to the leader thread, which averages them
-//!      (host all-reduce, [`crate::tensor::allreduce_mean`]),
+//!   1. every worker pulls its group of `grad_accum` batches, computes
+//!      each micro-batch's (loss, grads) and locally averages them
+//!      (`opt.accum`), topping its prefetch queue back up in the
+//!      overlap window between gradient send and directive receive,
+//!   2. grads cross to the leader thread, which reduces them sharded
+//!      (`reduce_scatter_sum` + `allgather`, then the 1/n mean scale),
 //!   3. the leader answers every worker with one [`Directive`]; on
 //!      `Apply` each replica performs the *identical* optimizer update,
 //!      keeping replicas bit-identical — the invariant
@@ -22,18 +33,24 @@
 //! execution threads per-stream carries across a batch's rows *and*
 //! across steps, so independent per-worker pipelines would give every
 //! worker a different stream history than a single-worker run.  Instead,
-//! the **leader owns one pipeline** whose stream-partitioned packer
-//! ([`crate::packing::StreamingPacker::with_streams`]) guarantees no
-//! fragment chain crosses a stream boundary.  Per step the leader pops
-//! one batch, computes the whole batch's cross-entropy denominator, and
-//! splits the rows along stream boundaries
+//! the **leader owns one prefetching feed** whose stream-partitioned
+//! packer ([`crate::packing::StreamingPacker::with_streams`]) guarantees
+//! no fragment chain crosses a stream boundary.  Per optimizer step the
+//! leader pulls the whole accumulation group up front, computes the
+//! **whole-group** cross-entropy denominator, and dispatches one
+//! micro-batch at a time: rows split along stream boundaries
 //! ([`crate::packing::PackedBatch::split_rows`]) — worker `w` always
 //! receives the same row range, so it alone threads those streams'
-//! carries across chunks and steps.  Workers return gradients already
-//! normalized by the *whole-batch* denominator; the leader **sums** them
-//! ([`crate::tensor::allreduce_sum`]), which reproduces the
-//! single-worker chunked step's loss and gradients exactly (up to fp
-//! reassociation — `tests/dp_chunked.rs` pins 1e-5).
+//! carries across chunks, micro-batches, and steps.  While workers
+//! compute, the leader packs ahead ([`PrefetchFeed::fill`]).  Workers
+//! return gradients already normalized by the whole-group denominator;
+//! the leader reduces each micro's gradients sharded (a **sum** — the
+//! partials' normalizer spans the group) and accumulates them
+//! (`opt.accum`); [`Directive::Continue`] advances workers through the
+//! group's micro-batches (carries advance per micro-batch) and the
+//! guard directive lands once per optimizer step.  The result
+//! reproduces the single-worker step exactly (up to fp reassociation —
+//! `tests/dp_chunked.rs` pins 1e-5).
 //!
 //! # Fault tolerance
 //!
@@ -59,19 +76,25 @@
 //!   exit.
 //!
 //! With `save_every > 0` (and on `--resume`) batch production runs
-//! inline — the leader checkpoints via a per-step rendezvous: workers
+//! inline with lookahead — the feed stays fully prefetching, and every
+//! queued batch remembers the pipeline cursor from before its
+//! production, so a checkpoint taken with batches still in the queue
+//! resumes bit-exactly (the cursor's micro-granular `consumed` count
+//! also encodes the position inside an interrupted accumulation group).
+//! The leader checkpoints via an optimizer-step rendezvous: workers
 //! ship their pipeline positions (monolithic) or chunk carries (chunked)
 //! plus worker 0's replica state, and the leader writes one v2
-//! checkpoint ([`super::checkpoint::save_full`]) that resumes
-//! bit-exactly.
+//! checkpoint ([`super::checkpoint::save_full`], stamped with the run's
+//! `grad_accum` — resume refuses a mismatch) that resumes bit-exactly.
 
-use std::path::{Path, PathBuf};
+use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 
 use crate::backend::{self, ops, Backend, CarryState, TrainState};
 use crate::config::{Scheme, TrainConfig};
 use crate::packing::PackedBatch;
-use crate::tensor::{allreduce_mean, allreduce_sum, Tensor};
+use crate::tensor::{allgather, reduce_scatter_sum, Tensor};
 use crate::util::failpoint;
 use crate::util::trace::{self, Op};
 use crate::Result;
@@ -116,7 +139,7 @@ struct GradMsg {
     sequences: usize,
 }
 
-/// Leader's per-step answer to every worker.
+/// Leader's per-micro-batch answer to every worker.
 enum Directive {
     /// reduced gradients: perform the identical optimizer update
     Apply(Vec<Tensor>),
@@ -124,6 +147,10 @@ enum Directive {
     Skip,
     /// a worker hit a transient fault: recompute the same batch
     Retry,
+    /// mid-accumulation: the micro-batch is banked, advance to the next
+    /// one without touching the optimizer (chunked mode only — the
+    /// carries it advanced stay advanced)
+    Continue,
 }
 
 /// Checkpoint-rendezvous message: each worker's share of the resume
@@ -136,20 +163,128 @@ struct CkptMsg {
     state: Option<TrainState>,
 }
 
-/// Worker-side batch feed: a producer thread normally, the source
-/// inline when its position must be checkpointable.
-enum WorkerFeed {
+/// Batch feed with double-buffered prefetch: packing overlaps compute,
+/// bounded by `depth` with natural backpressure (a full queue packs
+/// nothing).  Three wirings, chosen from `(prefetch_depth, needs_ckpt)`:
+///
+/// * **depth 0** — fully synchronous: every batch packs on the consume
+///   path.  The sync baseline the overlap bench compares against, and
+///   the proof that prefetch is bitwise-neutral.
+/// * **depth ≥ 1, checkpointable** — inline lookahead: the source runs
+///   on this thread, [`PrefetchFeed::fill`] packs up to `depth` batches
+///   ahead inside the overlap window, and every queued batch carries the
+///   pipeline-cursor snapshot taken *before* it was produced, so the
+///   feed checkpoints mid-queue (a resumed run replays exactly the
+///   batches compute has not yet consumed).
+/// * **depth ≥ 1, otherwise** — the producer thread behind a bounded
+///   queue of `depth` (the producer parks when full); `fill` is a no-op.
+///
+/// `Op::DpPrefetch` spans wrap only consume-path packing/waiting —
+/// batches served from a warm queue record nothing — so the op's
+/// aggregate duration *is* the pipeline-stall time the overlap bench
+/// reports.
+enum FeedInner {
     Threaded(Pipeline),
     Inline(BatchSource),
 }
 
-impl WorkerFeed {
+struct PrefetchFeed {
+    inner: FeedInner,
+    depth: usize,
+    /// packed-ahead batches, each with the source cursor from just
+    /// before its production (inline wiring only)
+    queue: VecDeque<(PackedBatch, PipelineState)>,
+}
+
+impl PrefetchFeed {
+    /// Build the feed for one corpus shard.  `needs_ckpt` forces the
+    /// inline wiring so the cursor stays snapshotable.
+    fn new(
+        pcfg: &TrainConfig,
+        buckets: Vec<usize>,
+        pad_geom: (usize, usize),
+        shard: usize,
+        num_shards: usize,
+        needs_ckpt: bool,
+    ) -> Self {
+        let depth = pcfg.prefetch_depth;
+        let inner = if depth == 0 || needs_ckpt {
+            FeedInner::Inline(BatchSource::new(pcfg, buckets, pad_geom, shard, num_shards))
+        } else {
+            // bound the producer by the prefetch depth, not the trainer's
+            // queue_depth: that is the engine's pipelining knob
+            let mut qcfg = pcfg.clone();
+            qcfg.queue_depth = depth;
+            FeedInner::Threaded(Pipeline::spawn(&qcfg, buckets, pad_geom, shard, num_shards))
+        };
+        PrefetchFeed {
+            inner,
+            depth,
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Restore the source position from a checkpoint (inline wiring
+    /// only; the constructors guarantee that when resuming).
+    fn restore(&mut self, ps: &PipelineState) -> Result<()> {
+        match &mut self.inner {
+            FeedInner::Inline(src) => src.restore(ps),
+            FeedInner::Threaded(_) => {
+                anyhow::bail!("cannot restore a threaded batch feed (resume forces inline)")
+            }
+        }
+    }
+
+    /// Next batch for compute.  Served from the prefetch queue when the
+    /// overlap window kept it warm; otherwise production lands on the
+    /// critical path under the `dp.prefetch` stall span.
     fn next_batch(&mut self) -> Result<PackedBatch> {
-        match self {
-            WorkerFeed::Threaded(p) => p
-                .next_batch()
-                .ok_or_else(|| anyhow::anyhow!("pipeline closed")),
-            WorkerFeed::Inline(s) => Ok(s.next_batch()),
+        match &mut self.inner {
+            FeedInner::Inline(src) => {
+                if let Some((batch, _)) = self.queue.pop_front() {
+                    return Ok(batch);
+                }
+                let _sp = trace::span(Op::DpPrefetch);
+                Ok(src.next_batch())
+            }
+            FeedInner::Threaded(p) => {
+                let popped = if p.queue_len() == 0 {
+                    // producer is behind: the wait is a pipeline stall
+                    let _sp = trace::span(Op::DpPrefetch);
+                    p.next_batch()
+                } else {
+                    p.next_batch()
+                };
+                popped.ok_or_else(|| anyhow::anyhow!("pipeline closed"))
+            }
+        }
+    }
+
+    /// Overlap hook: called while workers compute.  Tops the queue up to
+    /// `depth`, snapshotting the cursor before each production.  No
+    /// stall span — this packing is off the critical path by design
+    /// (per-op packing cost still lands under `Op::Pack`).
+    fn fill(&mut self) {
+        if let FeedInner::Inline(src) = &mut self.inner {
+            while self.queue.len() < self.depth {
+                let cursor = src.checkpoint_state();
+                let batch = src.next_batch();
+                self.queue.push_back((batch, cursor));
+            }
+        }
+    }
+
+    /// Cursor for a checkpoint: the position *before* the oldest queued
+    /// batch was produced (or the live position when the queue is
+    /// empty), so a resumed run replays every batch compute has not yet
+    /// consumed.  `None` for the threaded wiring (never checkpointed).
+    fn checkpoint_state(&self) -> Option<PipelineState> {
+        match &self.inner {
+            FeedInner::Inline(src) => Some(match self.queue.front() {
+                Some((_, cursor)) => cursor.clone(),
+                None => src.checkpoint_state(),
+            }),
+            FeedInner::Threaded(_) => None,
         }
     }
 }
@@ -258,6 +393,14 @@ impl DataParallelTrainer {
             ck.carries.len(),
             want_carries
         );
+        anyhow::ensure!(
+            ck.grad_accum == self.cfg.grad_accum.max(1),
+            "checkpoint was written with grad_accum {} but the run is configured with {} — \
+             the pipeline replay cursor counts micro-batches, so a different accumulation \
+             would desync batch replay",
+            ck.grad_accum,
+            self.cfg.grad_accum.max(1)
+        );
         log::info!("resuming from {} at step {}", path.display(), ck.state.step);
         Ok(Some(Arc::new(ck)))
     }
@@ -315,7 +458,7 @@ impl DataParallelTrainer {
         drop(ckpt_tx);
         drop(done_tx);
 
-        // ----- leader: synchronous all-reduce per step -----
+        // ----- leader: sharded reduce rendezvous per optimizer step -----
         let loop_result = (|| -> Result<TrainMetrics> {
             let mut metrics = TrainMetrics::new();
             let mut bad_steps = 0usize;
@@ -330,10 +473,17 @@ impl DataParallelTrainer {
                 );
                 trace::count_tokens(real as u64, slots as u64);
                 // move the gradients out of the messages: no per-worker
-                // full-model deep copy on the leader's critical path
+                // full-model deep copy on the leader's critical path.
+                // Sharded sum then the 1/n scale: elementwise the exact
+                // operation sequence of the mean all-reduce it replaced.
                 let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
-                allreduce_mean(&mut grad_sets);
-                let avg = grad_sets.swap_remove(0);
+                let bounds = reduce_scatter_sum(&mut grad_sets);
+                allgather(&mut grad_sets, &bounds);
+                let mut avg = grad_sets.swap_remove(0);
+                let inv = 1.0 / n as f32;
+                for t in &mut avg {
+                    t.scale(inv);
+                }
                 guard_and_direct(&dir_txs, &grad_rx, loss, avg, &mut bad_steps, &self.cfg, step)?;
                 metrics.record(StepRecord {
                     step,
@@ -356,6 +506,7 @@ impl DataParallelTrainer {
                         &state,
                         &pipelines,
                         &[],
+                        self.cfg.grad_accum,
                     )?;
                     log::info!("dp checkpoint written to {} (step {})", path.display(), step + 1);
                 }
@@ -374,9 +525,12 @@ impl DataParallelTrainer {
     }
 
     /// Chunk-aware data-parallel run (§5 composed with §4): one leader
-    /// pipeline, per-step row split along stream boundaries, gradient
-    /// **sum** all-reduce with whole-batch loss normalization, and
-    /// per-worker stream-carry ownership across steps.
+    /// prefetching feed, per-micro-batch row split along stream
+    /// boundaries, sharded gradient **sum** reduction
+    /// (`reduce_scatter_sum` + `allgather`) with whole-group loss
+    /// normalization, gradient accumulation across `grad_accum`
+    /// micro-batches, and per-worker stream-carry ownership across
+    /// chunks, micro-batches, and steps.
     fn run_chunked(&self) -> Result<DpRunResult> {
         let n = self.cfg.dp_workers;
         let steps = self.cfg.steps;
@@ -407,21 +561,12 @@ impl DataParallelTrainer {
         // splits over-length sequences); over-length + greedy buffer is
         // routed to the streaming packer, mirroring Trainer::new
         pcfg.route_chunked_packer(geom.pack_len);
-        let mut feed = if ckpt_every > 0 || resume.is_some() {
-            let mut src = BatchSource::new(&pcfg, geom.buckets.clone(), geom.pad_geom, 0, 1);
-            if let Some(ck) = &resume {
-                src.restore(&ck.pipelines[0])?;
-            }
-            WorkerFeed::Inline(src)
-        } else {
-            WorkerFeed::Threaded(Pipeline::spawn(
-                &pcfg,
-                geom.buckets.clone(),
-                geom.pad_geom,
-                0,
-                1,
-            ))
-        };
+        let needs_ckpt = ckpt_every > 0 || resume.is_some();
+        let mut feed =
+            PrefetchFeed::new(&pcfg, geom.buckets.clone(), geom.pad_geom, 0, 1, needs_ckpt);
+        if let Some(ck) = &resume {
+            feed.restore(&ck.pipelines[0])?;
+        }
 
         // workers <- leader: (row-range sub-batch, whole-batch denom)
         let mut batch_txs = Vec::with_capacity(n);
@@ -470,33 +615,70 @@ impl DataParallelTrainer {
         drop(ckpt_tx);
         drop(done_tx);
 
+        let accum = self.cfg.grad_accum.max(1);
         let loop_result = (|| -> Result<TrainMetrics> {
             let mut metrics = TrainMetrics::new();
             let mut bad_steps = 0usize;
             for step in start_step..steps {
                 let t0 = std::time::Instant::now();
-                let batch = feed.next_batch()?;
-                let denom = ops::mask_denom(batch.loss_mask.data());
-                let (real, slots, seqs) = (
-                    batch.real_tokens(),
-                    batch.rows() * batch.pack_len(),
-                    batch.sequence_count(),
-                );
-                trace::count_tokens(real as u64, slots as u64);
-                let parts = batch.split_rows(n)?;
-                for (tx, part) in batch_txs.iter().zip(parts) {
-                    tx.send((part, denom))
-                        .map_err(|_| leader_send_error(&grad_rx, "batch"))?;
+                // pull the whole accumulation group up front: every
+                // micro-batch's partial gradients are normalized by the
+                // group-wide cross-entropy denominator
+                let mut group: Vec<PackedBatch> = Vec::with_capacity(accum);
+                for _ in 0..accum {
+                    group.push(feed.next_batch()?);
                 }
-                let msgs = collect_grads(&grad_rx, &dir_txs, n, step, self.cfg.step_retries)?;
-                let loss = msgs.iter().map(|m| m.loss).sum::<f32>();
-                // move the gradients out of the messages (no deep copy),
-                // then sum, not mean: worker grads are partial
-                // contributions normalized by the whole batch's
-                // denominator
-                let mut grad_sets: Vec<Vec<Tensor>> = msgs.into_iter().map(|m| m.grads).collect();
-                allreduce_sum(&mut grad_sets);
-                let sum = grad_sets.swap_remove(0);
+                let group_denom: f32 = group
+                    .iter()
+                    .map(|b| ops::mask_denom(b.loss_mask.data()))
+                    .sum();
+                let (mut real, mut slots, mut seqs) = (0usize, 0usize, 0usize);
+                let mut loss_sum = 0.0f32;
+                let mut acc: Option<Vec<Tensor>> = None;
+                for (a, batch) in group.iter().enumerate() {
+                    real += batch.real_tokens();
+                    slots += batch.rows() * batch.pack_len();
+                    seqs += batch.sequence_count();
+                    trace::count_tokens(
+                        batch.real_tokens() as u64,
+                        (batch.rows() * batch.pack_len()) as u64,
+                    );
+                    let parts = batch.split_rows(n)?;
+                    for (tx, part) in batch_txs.iter().zip(parts) {
+                        tx.send((part, group_denom))
+                            .map_err(|_| leader_send_error(&grad_rx, "batch"))?;
+                    }
+                    // overlap window: workers compute — pack ahead
+                    feed.fill();
+                    let msgs = collect_grads(&grad_rx, &dir_txs, n, step, self.cfg.step_retries)?;
+                    loss_sum += msgs.iter().map(|m| m.loss).sum::<f32>();
+                    // move the gradients out of the messages (no deep
+                    // copy), then a sharded **sum**: worker grads are
+                    // partial contributions normalized by the whole
+                    // group's denominator
+                    let mut grad_sets: Vec<Vec<Tensor>> =
+                        msgs.into_iter().map(|m| m.grads).collect();
+                    let bounds = reduce_scatter_sum(&mut grad_sets);
+                    allgather(&mut grad_sets, &bounds);
+                    let reduced = grad_sets.swap_remove(0);
+                    match &mut acc {
+                        None => acc = Some(reduced),
+                        Some(sum) => trace::with(Op::OptAccum, || {
+                            for (s, g) in sum.iter_mut().zip(&reduced) {
+                                s.add_assign(g);
+                            }
+                        }),
+                    }
+                    if a + 1 < accum {
+                        // mid-accumulation: bank the micro, keep going
+                        for tx in &dir_txs {
+                            tx.send(Directive::Continue)
+                                .map_err(|_| leader_send_error(&grad_rx, "continue"))?;
+                        }
+                    }
+                }
+                let sum = acc.ok_or_else(|| anyhow::anyhow!("empty accumulation group"))?;
+                let loss = loss_sum;
                 guard_and_direct(&dir_txs, &grad_rx, loss, sum, &mut bad_steps, &self.cfg, step)?;
                 metrics.record(StepRecord {
                     step,
@@ -511,9 +693,9 @@ impl DataParallelTrainer {
                 }
                 if ckpt_every > 0 && (step + 1) % ckpt_every == 0 {
                     let (state, _pipelines, carries) = collect_ckpt(&ckpt_rx, &grad_rx, n)?;
-                    let pipelines = match &feed {
-                        WorkerFeed::Inline(src) => vec![src.checkpoint_state()],
-                        WorkerFeed::Threaded(_) => unreachable!("ckpt_every forces inline feed"),
+                    let pipelines = match feed.checkpoint_state() {
+                        Some(cursor) => vec![cursor],
+                        None => unreachable!("ckpt_every forces a checkpointable feed"),
                     };
                     let path = self.save_path.as_ref().expect("ckpt_every implies path");
                     checkpoint::save_full(
@@ -523,6 +705,7 @@ impl DataParallelTrainer {
                         &state,
                         &pipelines,
                         &carries,
+                        self.cfg.grad_accum,
                     )?;
                     log::info!("dp checkpoint written to {} (step {})", path.display(), step + 1);
                 }
@@ -805,20 +988,25 @@ fn collect_finals(
     Ok((finals.swap_remove(0).1, identical))
 }
 
-/// Apply the failpoint hooks a dp worker honours at `step`:
-/// `dp.worker` (panic / one-shot transient error) before compute and
-/// `grads.inject` (NaN into the first gradient element) after.
-fn worker_failpoint_pre(w: usize, step: usize) -> Result<()> {
+/// Apply the `dp.worker` failpoint (panic / one-shot transient error /
+/// kill) before a micro-batch compute.  `micro` is the global
+/// micro-batch index `step * grad_accum + a` — with `grad_accum == 1`
+/// it equals the optimizer step, and at higher accumulation it lets
+/// tests fault (or kill) a worker *mid-accumulation*.
+fn worker_failpoint_pre(w: usize, micro: usize) -> Result<()> {
     if !failpoint::enabled() {
         return Ok(());
     }
-    match failpoint::check("dp.worker", step as u64, w as u64) {
+    match failpoint::check("dp.worker", micro as u64, w as u64) {
         Some(failpoint::Action::Panic) => {
-            panic!("failpoint: injected panic in dp worker {w} at step {step}")
+            panic!("failpoint: injected panic in dp worker {w} at micro-batch {micro}")
         }
         Some(failpoint::Action::Error) => {
-            anyhow::bail!("failpoint: injected transient error in dp worker {w} at step {step}")
+            anyhow::bail!(
+                "failpoint: injected transient error in dp worker {w} at micro-batch {micro}"
+            )
         }
+        Some(failpoint::Action::Kill) => failpoint::kill_now("dp.worker"),
         _ => Ok(()),
     }
 }
@@ -834,12 +1022,23 @@ fn worker_failpoint_post(w: usize, step: usize, grads: &mut [Tensor]) {
     }
 }
 
-/// One worker attempt→directive exchange.  Computes (or fails), sends
-/// the result, and obeys the leader's directive; loops on `Retry` with
-/// `restore` run before each recompute (chunked: carry rollback).
-/// Returns once the step advanced (`Apply`/`Skip`), errors if the
-/// leader is gone.
-fn exchange_step(
+/// How one micro-batch exchange left the worker: mid-accumulation
+/// (`Continue` — compute the next micro-batch) or at an optimizer-step
+/// boundary (`StepDone` — the update was applied or skipped).
+enum MicroOutcome {
+    Continue,
+    StepDone,
+}
+
+/// One worker attempt→directive exchange for one micro-batch.  Computes
+/// (or fails), sends the result, runs `overlap` (prefetch top-up) in the
+/// window before the directive lands, and obeys it; loops on `Retry`
+/// with `restore` run before each recompute (chunked: carry rollback).
+/// Returns [`MicroOutcome::Continue`] mid-accumulation, otherwise
+/// [`MicroOutcome::StepDone`] once the step advanced (`Apply`/`Skip`);
+/// errors if the leader is gone.
+#[allow(clippy::too_many_arguments)]
+fn exchange_micro(
     w: usize,
     step: usize,
     be: &dyn Backend,
@@ -849,10 +1048,11 @@ fn exchange_step(
     dir_rx: &mpsc::Receiver<Directive>,
     mut compute: impl FnMut(&TrainState) -> Result<(f32, Vec<Tensor>)>,
     mut restore: impl FnMut(&dyn Backend) -> Result<()>,
+    mut overlap: impl FnMut(),
     stats: (usize, usize, usize),
-) -> Result<()> {
+) -> Result<MicroOutcome> {
     loop {
-        let attempt = worker_failpoint_pre(w, step).and_then(|()| compute(state));
+        let attempt = compute(state);
         let msg = match attempt {
             Ok((loss, mut grads)) => {
                 worker_failpoint_post(w, step, &mut grads);
@@ -874,16 +1074,19 @@ fn exchange_step(
         grad_tx
             .send(msg)
             .map_err(|_| anyhow::anyhow!("leader hung up"))?;
+        // overlap window: the leader is reducing/deciding — pack ahead
+        overlap();
         match dir_rx.recv() {
             Ok(Directive::Apply(g)) => {
                 be.apply_update(&cfg.model, state, &g)?;
-                return Ok(());
+                return Ok(MicroOutcome::StepDone);
             }
             Ok(Directive::Skip) => {
                 // non-finite step: optimizer untouched, accounting advances
                 state.step += 1;
-                return Ok(());
+                return Ok(MicroOutcome::StepDone);
             }
+            Ok(Directive::Continue) => return Ok(MicroOutcome::Continue),
             Ok(Directive::Retry) => {
                 restore(be)?;
                 continue;
@@ -916,41 +1119,38 @@ fn worker_loop(
     pcfg.packing.rows = geom.rows;
     pcfg.packing.pack_len = geom.pack_len;
     pcfg.max_len = pcfg.max_len.min(geom.pack_len);
-    let mut feed = if ckpt_active || resume.is_some() {
-        WorkerFeed::Inline(BatchSource::new(
-            &pcfg,
-            geom.buckets.clone(),
-            geom.pad_geom,
-            w,
-            num_shards,
-        ))
-    } else {
-        WorkerFeed::Threaded(Pipeline::spawn(
-            &pcfg,
-            geom.buckets.clone(),
-            geom.pad_geom,
-            w,
-            num_shards,
-        ))
-    };
+    let mut feed = PrefetchFeed::new(
+        &pcfg,
+        geom.buckets.clone(),
+        geom.pad_geom,
+        w,
+        num_shards,
+        ckpt_active || resume.is_some(),
+    );
     let mut start_step = 0;
     if let Some(ck) = &resume {
         state = ck.state.clone();
         start_step = ck.state.step;
-        match &mut feed {
-            WorkerFeed::Inline(src) => src.restore(&ck.pipelines[w])?,
-            WorkerFeed::Threaded(_) => unreachable!("resume forces inline feed"),
-        }
+        feed.restore(&ck.pipelines[w])?;
     }
 
+    let accum = cfg.grad_accum.max(1);
     for step in start_step..cfg.steps {
-        let batch: PackedBatch = feed.next_batch()?;
-        let stats = (
-            batch.real_tokens(),
-            batch.rows() * batch.pack_len(),
-            batch.sequence_count(),
-        );
-        exchange_step(
+        // pull the whole accumulation group and hold it: a leader-
+        // directed retry recomputes the *same* held batches, so the
+        // feed is never consumed twice for one optimizer step
+        let mut group: Vec<PackedBatch> = Vec::with_capacity(accum);
+        for _ in 0..accum {
+            group.push(feed.next_batch()?);
+        }
+        let stats = group.iter().fold((0, 0, 0), |(r, s, q), b| {
+            (
+                r + b.real_tokens(),
+                s + b.rows() * b.pack_len(),
+                q + b.sequence_count(),
+            )
+        });
+        let outcome = exchange_micro(
             w,
             step,
             be.as_ref(),
@@ -958,19 +1158,53 @@ fn worker_loop(
             &mut state,
             &grad_tx,
             &dir_rx,
-            |st| be.loss_and_grads(&cfg.model, &st.params, &batch),
+            |st| {
+                // local accumulation: mean of the group's micro-batch
+                // gradients (each worker averages its own shard's group;
+                // the leader then means across workers)
+                let mut loss_sum = 0.0f32;
+                let mut acc: Option<Vec<Tensor>> = None;
+                for (a, batch) in group.iter().enumerate() {
+                    worker_failpoint_pre(w, step * accum + a)?;
+                    let (loss, grads) = be.loss_and_grads(&cfg.model, &st.params, batch)?;
+                    loss_sum += loss;
+                    match &mut acc {
+                        None => acc = Some(grads),
+                        Some(sum) => trace::with(Op::OptAccum, || {
+                            for (s, g) in sum.iter_mut().zip(&grads) {
+                                s.add_assign(g);
+                            }
+                        }),
+                    }
+                }
+                let mut grads =
+                    acc.ok_or_else(|| anyhow::anyhow!("empty accumulation group"))?;
+                if accum > 1 {
+                    let inv = 1.0 / accum as f32;
+                    trace::with(Op::OptAccum, || {
+                        for g in &mut grads {
+                            g.scale(inv);
+                        }
+                    });
+                    loss_sum *= inv;
+                }
+                Ok((loss_sum, grads))
+            },
             |_| Ok(()), // monolithic compute is stateless: nothing to roll back
+            || feed.fill(), // overlap: top the prefetch queue back up
             stats,
         )?;
+        match outcome {
+            MicroOutcome::StepDone => {}
+            MicroOutcome::Continue => anyhow::bail!(
+                "protocol error: Continue directive reached a monolithic dp worker"
+            ),
+        }
         if ckpt_active && (step + 1) % cfg.save_every == 0 {
-            let pipeline = match &feed {
-                WorkerFeed::Inline(src) => Some(src.checkpoint_state()),
-                WorkerFeed::Threaded(_) => None,
-            };
             ckpt_tx
                 .send(CkptMsg {
                     worker: w,
-                    pipeline,
+                    pipeline: feed.checkpoint_state(),
                     carry: None,
                     state: (w == 0).then(|| state.clone()),
                 })
@@ -984,11 +1218,14 @@ fn worker_loop(
 }
 
 /// Chunk-aware worker: receives its stable row range (whole streams) of
-/// every batch from the leader, computes chunked loss + grads normalized
-/// by the whole batch's denominator (the backend threads this worker's
-/// per-stream carries across steps), and applies the identical summed
-/// update.  Before each attempt it snapshots the carry so a leader-
-/// directed retry recomputes from the exact pre-step state.
+/// every micro-batch from the leader, computes chunked loss + grads
+/// normalized by the whole group's denominator (the backend threads this
+/// worker's per-stream carries across chunks, micro-batches, and steps),
+/// and applies the identical accumulated update.  Before each attempt it
+/// snapshots the carry so a leader-directed retry recomputes that
+/// micro-batch from the exact pre-attempt state.  The worker does not
+/// know `grad_accum`: the leader's [`Directive::Continue`] walks it
+/// through the group and `Apply`/`Skip` closes the optimizer step.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop_chunked(
     w: usize,
@@ -1011,38 +1248,49 @@ fn worker_loop_chunked(
             be.import_chunk_carry(&cfg.model, carry)?;
         }
     }
+    let accum = cfg.grad_accum.max(1);
     for step in start_step..cfg.steps {
-        let (batch, denom) = batch_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("leader hung up (batch)"))?;
-        let stats = (
-            batch.real_tokens(),
-            batch.rows() * batch.pack_len(),
-            batch.sequence_count(),
-        );
-        // snapshot the carry: compute advances it, so a retry must roll
-        // back first to stay bit-identical (None before the first step —
-        // nothing is consulted on all-fresh rows, so nothing to restore)
-        let carry_before = be.export_chunk_carry(&cfg.model);
-        exchange_step(
-            w,
-            step,
-            be.as_ref(),
-            cfg,
-            &mut state,
-            &grad_tx,
-            &dir_rx,
-            |st| {
-                be.loss_and_grads_chunked(&cfg.model, &st.params, &batch, cfg.chunk_len, denom)
-            },
-            |be: &dyn Backend| {
-                if let Some(c) = &carry_before {
-                    be.import_chunk_carry(&cfg.model, c)?;
-                }
-                Ok(())
-            },
-            stats,
-        )?;
+        let mut micro = 0usize;
+        loop {
+            let (batch, denom) = batch_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("leader hung up (batch)"))?;
+            let stats = (
+                batch.real_tokens(),
+                batch.rows() * batch.pack_len(),
+                batch.sequence_count(),
+            );
+            // snapshot the carry: compute advances it, so a retry must
+            // roll back first to stay bit-identical (None before the
+            // first micro-batch — nothing is consulted on all-fresh
+            // rows, so nothing to restore)
+            let carry_before = be.export_chunk_carry(&cfg.model);
+            let outcome = exchange_micro(
+                w,
+                step,
+                be.as_ref(),
+                cfg,
+                &mut state,
+                &grad_tx,
+                &dir_rx,
+                |st| {
+                    worker_failpoint_pre(w, step * accum + micro)?;
+                    be.loss_and_grads_chunked(&cfg.model, &st.params, &batch, cfg.chunk_len, denom)
+                },
+                |be: &dyn Backend| {
+                    if let Some(c) = &carry_before {
+                        be.import_chunk_carry(&cfg.model, c)?;
+                    }
+                    Ok(())
+                },
+                || {}, // the leader owns the feed in chunked mode
+                stats,
+            )?;
+            match outcome {
+                MicroOutcome::Continue => micro += 1,
+                MicroOutcome::StepDone => break,
+            }
+        }
         if ckpt_active && (step + 1) % cfg.save_every == 0 {
             ckpt_tx
                 .send(CkptMsg {

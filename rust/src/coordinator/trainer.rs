@@ -30,8 +30,9 @@ use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use crate::backend::{Backend, TrainState};
+use crate::backend::{ops, Backend, TrainState};
 use crate::config::{Scheme, TrainConfig};
+use crate::tensor::Tensor;
 use crate::data::{LengthSampler, SyntheticCorpus};
 use crate::packing::{
     pad_to_max, single_sequence_batch, GreedyPacker, PackedBatch, Sequence, StreamingPacker,
@@ -285,6 +286,10 @@ pub struct Trainer {
     pad_geom: (usize, usize),
     save_path: Option<PathBuf>,
     start_step: usize,
+    /// consecutive non-finite optimizer steps on the accumulation path
+    /// (the fused `train_step` guards internally; this mirrors it for
+    /// `grad_accum > 1`, aborting at `cfg.max_bad_steps`)
+    bad_steps: usize,
     pub metrics: TrainMetrics,
 }
 
@@ -358,6 +363,7 @@ impl Trainer {
             pad_geom: geom.pad_geom,
             save_path: None,
             start_step: 0,
+            bad_steps: 0,
             metrics: TrainMetrics::new(),
         })
     }
@@ -405,6 +411,14 @@ impl Trainer {
             "checkpoint has no pipeline state (end-of-run tensor-only save?); \
              it cannot seed a bitwise resume"
         );
+        anyhow::ensure!(
+            ck.grad_accum == self.cfg.grad_accum,
+            "checkpoint was written with grad_accum {} but the run is configured \
+             with {} — the pipeline replay cursor counts micro-batches, so a \
+             different accumulation would desync batch replay",
+            ck.grad_accum,
+            self.cfg.grad_accum
+        );
         self.state = ck.state;
         if let Some(Some(carry)) = ck.carries.first() {
             self.backend.import_chunk_carry(&self.cfg.model, carry)?;
@@ -443,11 +457,15 @@ impl Trainer {
             &self.state,
             &pipelines,
             &carries,
+            self.cfg.grad_accum,
         )
     }
 
     /// Run one training step; returns the loss.
     pub fn step(&mut self) -> Result<f32> {
+        if self.cfg.grad_accum > 1 {
+            return self.step_accum();
+        }
         let t0 = Instant::now();
         let batch = self.feeder.next_batch();
         let loss = if self.cfg.chunk_len > 0 {
@@ -474,6 +492,105 @@ impl Trainer {
             real_tokens: batch.real_tokens(),
             slot_tokens: batch.rows() * batch.pack_len(),
             sequences: batch.sequence_count(),
+        });
+        Ok(loss)
+    }
+
+    /// One optimizer step over `cfg.grad_accum` accumulated micro-batches.
+    ///
+    /// The whole group is pulled up front so the chunked path can
+    /// normalize every micro-batch by the **whole-accumulation** CE
+    /// denominator (carries still advance per micro-batch); the
+    /// monolithic path averages the per-batch-normalized gradients.
+    /// Either way the summed loss/gradients pass a single non-finite
+    /// guard, and one AdamW update applies — so `steps` counts optimizer
+    /// steps and the run consumes `steps * grad_accum` batches.
+    fn step_accum(&mut self) -> Result<f32> {
+        let t0 = Instant::now();
+        let accum = self.cfg.grad_accum;
+        let chunked = self.cfg.chunk_len > 0;
+        let batches: Vec<PackedBatch> = (0..accum).map(|_| self.feeder.next_batch()).collect();
+        let group_denom: f32 = if chunked {
+            batches.iter().map(|b| ops::mask_denom(b.loss_mask.data())).sum()
+        } else {
+            0.0
+        };
+        let mut loss_sum = 0.0f32;
+        let mut acc: Option<Vec<Tensor>> = None;
+        for batch in &batches {
+            trace::count_tokens(
+                batch.real_tokens() as u64,
+                (batch.rows() * batch.pack_len()) as u64,
+            );
+            let (loss, grads) = if chunked {
+                self.backend.loss_and_grads_chunked(
+                    &self.cfg.model,
+                    &self.state.params,
+                    batch,
+                    self.cfg.chunk_len,
+                    group_denom,
+                )?
+            } else {
+                self.backend
+                    .loss_and_grads(&self.cfg.model, &self.state.params, batch)?
+            };
+            loss_sum += loss;
+            match &mut acc {
+                None => acc = Some(grads),
+                Some(sum) => trace::with(Op::OptAccum, || {
+                    for (s, g) in sum.iter_mut().zip(&grads) {
+                        s.add_assign(g);
+                    }
+                }),
+            }
+        }
+        let mut grads = acc.expect("grad_accum >= 1 produced no gradients");
+        let loss = if chunked {
+            // partials already share the group denominator — the sum IS
+            // the whole-group mean loss
+            loss_sum
+        } else {
+            let inv = 1.0 / accum as f32;
+            trace::with(Op::OptAccum, || {
+                for g in &mut grads {
+                    g.scale(inv);
+                }
+            });
+            loss_sum * inv
+        };
+        // mirror the fused step's non-finite guard (and the dp leader's
+        // Apply/Skip semantics) for the accumulated update
+        let finite = trace::with(Op::GuardScan, || {
+            loss.is_finite()
+                && grads.iter().all(|g| g.data().iter().all(|x| x.is_finite()))
+        });
+        if finite {
+            self.backend.apply_update(&self.cfg.model, &mut self.state, &grads)?;
+            self.bad_steps = 0;
+        } else {
+            trace::count_nonfinite_skip();
+            self.bad_steps += 1;
+            log::warn!(
+                "non-finite loss/grads at step {} (accumulated over {accum}); skipping update \
+                 ({}/{} consecutive)",
+                self.state.step,
+                self.bad_steps,
+                self.cfg.max_bad_steps
+            );
+            anyhow::ensure!(
+                self.bad_steps < self.cfg.max_bad_steps,
+                "aborting after {} consecutive non-finite steps",
+                self.bad_steps
+            );
+            self.state.step += 1; // the skipped step still advances
+        }
+        self.metrics.record(StepRecord {
+            step: self.state.step,
+            loss,
+            secs: t0.elapsed().as_secs_f64(),
+            real_tokens: batches.iter().map(PackedBatch::real_tokens).sum(),
+            slot_tokens: batches.iter().map(|b| b.rows() * b.pack_len()).sum(),
+            sequences: batches.iter().map(PackedBatch::sequence_count).sum(),
         });
         Ok(loss)
     }

@@ -28,7 +28,7 @@
 //! | [`util::trace`] | zero-alloc operator tracing: preallocated per-thread span rings over the fixed [`util::trace::Op`] set (span names follow `<subsystem>.<op>`, e.g. `scan.fwd`, `gemm.in_proj`, `pool.busy` — see the module docs), pool/token counters, chrome://tracing export; one relaxed atomic load when disabled, allocation-free recording when enabled |
 //! | [`util::failpoint`] | deterministic fault injection (`PACKMAMBA_FAILPOINT` grammar: `site=action[:arg][@step[+]][#worker]`) driving the fault-tolerance suite: kill mid-checkpoint-write / after publish, NaN gradient poisoning, dp worker panic / one-shot transient error; the same one-relaxed-load discipline as `trace` when disarmed |
 //! | [`util::bytes`] | little-endian encode/decode helpers (bounds-checked `Reader`) for the checkpoint resume-state sections and packer snapshots |
-//! | [`tensor`] | host tensors (f32 / software bf16) used by backends, tests, checkpoints and host-side all-reduce |
+//! | [`tensor`] | host tensors (f32 / software bf16) used by backends, tests, checkpoints and the host-side collectives: `allreduce_mean`/`allreduce_sum` plus the sharded `reduce_scatter_sum` + `allgather` pair (deterministic `shard_bounds`, bit-identical to the leader-sum they replace) |
 //! | [`config`] | model / training / packing / backend configuration, JSON-backed |
 //! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
 //! | [`packing`] | pack()/unpack(), position indices, the packers for all three batching schemes; over-length sequences split into continuation `Fragment`s; stream partitioning (`PackedBatch::streams`, `StreamingPacker::with_streams`, `PackedBatch::split_rows`) so chunked carries compose with dp row splits |
@@ -37,7 +37,7 @@
 //! | [`backend::gemm`] | the blocked, register-tiled GEMM micro-kernel (B-panel packing, MC/KC blocking, beta-accumulate) behind `ops::matmul*`, with **runtime-dispatched tiers**: `PACKMAMBA_GEMM={naive,blocked,avx2}` (unset = best supported; avx2 = the `unsafe` AVX2+FMA 4×8 tile, runtime-gated, degrading to the safe tile off-ISA) |
 //! | [`backend::arena`] | `StepArena` — recycled step buffers + GEMM scratch; steady-state training steps (monolithic and chunked) allocate nothing |
 //! | [`runtime`] | artifact manifest + host values; PJRT client wrapper behind the `pjrt` feature |
-//! | [`coordinator`] | trainer, schemes, data-parallel leader (monolithic shard-per-worker mode and chunk-aware stream-split mode with gradient-sum all-reduce), metrics, checkpoints — fault-tolerant: CRC-verified crash-safe v2 checkpoints with bitwise resume (`--save-every` / `--resume`), a non-finite loss/grad guard that skips bad updates (aborting after `max_bad_steps` consecutive), and typed dp worker-failure containment with bounded step retries |
+//! | [`coordinator`] | trainer, schemes, the pipelined data-parallel step engine (monolithic shard-per-worker mode and chunk-aware stream-split mode; double-buffered batch prefetch `--prefetch-depth`, sharded `reduce_scatter_sum`+`allgather` reduction, gradient accumulation `--grad-accum`), metrics, checkpoints — fault-tolerant: CRC-verified crash-safe v2 checkpoints with bitwise resume (`--save-every` / `--resume`, incl. mid-accumulation and with batches in the prefetch queue), a non-finite loss/grad guard that skips bad updates (aborting after `max_bad_steps` consecutive), and typed dp worker-failure containment with bounded step retries |
 //! | [`coordinator::telemetry`] | [`coordinator::TelemetrySnapshot`]: folds the span layer into per-operator self-time shares, padding ratios, and pool utilization; stamped into `BENCH_*` JSON, logged every `LOG_EVERY` steps, paired with `--trace`'s chrome export |
 //! | [`perfmodel`] | analytic A100 model reproducing the paper-scale figure shapes |
 //! | [`analysis`] | packlint — the repo-native static analyzer (line lexer → scope walk → R1–R5 rule passes → `ANALYSIS.json`) behind the `packlint` bin and the `tests/packlint.rs` gate; see *Static analysis* below |
@@ -51,6 +51,8 @@
 //! | `PACKMAMBA_BACKEND` | bench-side backend selection (`native`, or `pjrt` with the feature + artifacts) |
 //! | `PACKMAMBA_TRACE` | any non-empty value except `0` enables operator tracing at startup (the `--trace <path>` CLI flag enables it too, and additionally writes a chrome://tracing JSON at exit) |
 //! | `PACKMAMBA_LOG` | max log level for the stderr logger: `error` \| `warn` \| `info` (default) \| `debug` \| `trace` \| `off`; unknown values warn and fall back to `info` |
+//! | `PACKMAMBA_GRAD_ACCUM` | default micro-batches accumulated per optimizer step for the `train`/`dp-train` CLIs (the `--grad-accum` flag wins when given; config-file runs ignore both) |
+//! | `PACKMAMBA_PREFETCH_DEPTH` | default batch-prefetch depth for the `train`/`dp-train` CLIs (`0` = fully synchronous packing on the critical path; the `--prefetch-depth` flag wins when given; config-file runs ignore both) |
 //! | `PACKMAMBA_FAILPOINT` | arm deterministic failpoints at startup (`;`-separated `site=action[:arg][@step[+]][#worker]` rules — see [`util::failpoint`]); injected kills exit with code 113 so tests tell them apart from real failures; a malformed spec exits 2 |
 //! | `PACKMAMBA_PROPTEST_CASES` | cases per property for the vendored property-test harness (`util::proptest`); default 64 — CI soaks crank it up |
 //! | `PACKMAMBA_PROPTEST_SEED` | base RNG seed for property-test case generation (default `0xC0FFEE`); set it to replay a failing case from a soak log |

@@ -54,6 +54,18 @@ fn main() {
                 )
                 .flag("resume", "r", "resume from a checkpoint (bitwise continuation)", None)
                 .flag("metrics-out", "", "write metrics json here", None)
+                .flag(
+                    "grad-accum",
+                    "",
+                    "micro-batches accumulated per optimizer step",
+                    None,
+                )
+                .flag(
+                    "prefetch-depth",
+                    "",
+                    "batches packed ahead of compute (0 = synchronous)",
+                    None,
+                )
                 .flag("trace", "", "enable operator tracing; write chrome trace here", None),
         )
         .command(
@@ -61,6 +73,7 @@ fn main() {
                 "dp-train",
                 "data-parallel training (pack scheme; --chunk-len composes §5)",
             )
+                .flag("config", "c", "training config json (overrides flags)", None)
                 .flag("model", "m", "model preset (tiny|small)", Some("tiny"))
                 .flag("backend", "b", "native|pjrt", Some("native"))
                 .flag("steps", "n", "training steps", Some("50"))
@@ -83,6 +96,18 @@ fn main() {
                     Some("0"),
                 )
                 .flag("resume", "r", "resume from a checkpoint (bitwise continuation)", None)
+                .flag(
+                    "grad-accum",
+                    "",
+                    "micro-batches accumulated per optimizer step",
+                    None,
+                )
+                .flag(
+                    "prefetch-depth",
+                    "",
+                    "batches packed ahead of compute (0 = synchronous)",
+                    None,
+                )
                 .flag("trace", "", "enable operator tracing; write chrome trace here", None),
         )
         .command(
@@ -161,10 +186,25 @@ fn build_train_config(m: &Matches) -> anyhow::Result<TrainConfig> {
     if let Some(e) = m.get_usize("save-every").unwrap_or(None) {
         cfg.save_every = e;
     }
+    // pipelining knobs: CLI flag beats the PACKMAMBA_* env var beats the
+    // config default (both flags have no argparse default, so an unset
+    // flag falls through to the env)
+    let env_usize = |v: String| v.parse::<usize>().ok();
+    if let Some(a) = m.get_usize("grad-accum").unwrap_or(None) {
+        cfg.grad_accum = a;
+    } else if let Some(a) = std::env::var("PACKMAMBA_GRAD_ACCUM").ok().and_then(env_usize) {
+        cfg.grad_accum = a;
+    }
+    if let Some(d) = m.get_usize("prefetch-depth").unwrap_or(None) {
+        cfg.prefetch_depth = d;
+    } else if let Some(d) = std::env::var("PACKMAMBA_PREFETCH_DEPTH").ok().and_then(env_usize) {
+        cfg.prefetch_depth = d;
+    }
     anyhow::ensure!(
         cfg.save_every == 0 || m.get("save").is_some(),
         "--save-every needs a --save path for the checkpoints"
     );
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -248,9 +288,6 @@ fn cmd_dp_train(m: &Matches) -> anyhow::Result<()> {
     let trace_path = trace_setup(m);
     let mut cfg = build_train_config(m)?;
     cfg.scheme = Scheme::Pack;
-    if let Some(w) = m.get_usize("workers")? {
-        cfg.dp_workers = w;
-    }
     let mut dp = DataParallelTrainer::new(cfg.clone())?;
     if let Some(path) = m.get("save") {
         dp.set_save_path(PathBuf::from(path));

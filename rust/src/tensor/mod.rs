@@ -10,7 +10,7 @@ mod bf16;
 mod ops;
 
 pub use bf16::{bf16_bytes_to_f32_vec, f32_slice_to_bf16_bytes, Bf16};
-pub use ops::{allreduce_mean, allreduce_sum};
+pub use ops::{allgather, allreduce_mean, allreduce_sum, reduce_scatter_sum, shard_bounds};
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

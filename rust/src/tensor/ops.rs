@@ -5,6 +5,7 @@
 //! tolerance-based comparison for integration tests.
 
 use super::Tensor;
+use crate::util::threadpool::parallel_chunks_mut;
 use crate::util::trace::{self, Op};
 
 impl Tensor {
@@ -139,6 +140,114 @@ pub fn allreduce_sum(workers: &mut [Vec<Tensor>]) {
     }
 }
 
+/// Elements each reduction chunk covers; large enough that dispatch
+/// overhead amortizes, small enough that nano-model tests still split.
+const REDUCE_CHUNK: usize = 4096;
+
+/// Deterministic contiguous `[start, end)` element ranges over the
+/// flattened parameter space, ceil-divided across `n` shards: every
+/// shard but the last has the same size, the last absorbs the remainder
+/// (possibly empty when `n` does not divide `total`).  A pure function
+/// of `(total, n)`, so shard ownership is reproducible across runs and
+/// identical on every worker.
+pub fn shard_bounds(total: usize, n: usize) -> Vec<(usize, usize)> {
+    assert!(n > 0, "shard_bounds needs at least one shard");
+    let per = total.div_ceil(n).max(1);
+    (0..n)
+        .map(|s| ((s * per).min(total), ((s + 1) * per).min(total)))
+        .collect()
+}
+
+/// Copy the flat element range `[start, end)` (over the concatenation of
+/// the tensors in declaration order) from `src`'s buffers into `dst`'s.
+/// Pure copies — no floating-point, so bitwise-neutral by construction.
+fn copy_flat_range(src: &[Tensor], dst: &mut [Tensor], start: usize, end: usize) {
+    let mut base = 0;
+    for (j, t) in src.iter().enumerate() {
+        let len = t.len();
+        let lo = start.max(base);
+        let hi = end.min(base + len);
+        if lo < hi {
+            let local = lo - base..hi - base;
+            dst[j].data_mut()[local.clone()].copy_from_slice(&t.data()[local]);
+        }
+        base += len;
+    }
+}
+
+/// Reduce-scatter for the data-parallel leader: sums every worker's
+/// gradients and leaves each worker owning its contiguous parameter
+/// shard (per [`shard_bounds`] over the flattened space); returns the
+/// shard bounds so the paired [`allgather`] can redistribute.
+///
+/// Bitwise contract: each element accumulates contributions in worker
+/// index order — exactly [`allreduce_sum`]'s loop — so the reduced
+/// values are bit-identical to the leader-sum this replaces, for any
+/// worker count and any chunk-parallel schedule (per-element order never
+/// changes).  After the call, worker 0 holds the full sum (it is the
+/// phase-A accumulator) and every worker `w` holds the reduced values
+/// within `bounds[w]`; bytes outside a worker's shard are unspecified
+/// until [`allgather`].
+pub fn reduce_scatter_sum(workers: &mut [Vec<Tensor>]) -> Vec<(usize, usize)> {
+    assert!(!workers.is_empty());
+    let _sp = trace::span(Op::DpReduceScatter);
+    let n = workers.len();
+    let total: usize = workers[0].iter().map(Tensor::len).sum();
+    let bounds = shard_bounds(total, n);
+    if n == 1 {
+        return bounds;
+    }
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let (first, rest) = workers.split_at_mut(1);
+    let rest: &[Vec<Tensor>] = rest;
+    for (j, t) in first[0].iter_mut().enumerate() {
+        parallel_chunks_mut(t.data_mut(), REDUCE_CHUNK, threads, |i, c| {
+            let off = i * REDUCE_CHUNK;
+            for w in rest.iter() {
+                for (a, b) in c.iter_mut().zip(&w[j].data()[off..off + c.len()]) {
+                    *a += *b;
+                }
+            }
+        });
+    }
+    // scatter: hand each worker its reduced shard (worker 0 already has
+    // everything; shard 0 stays in place)
+    for (w, &(start, end)) in bounds.iter().enumerate().skip(1) {
+        let (lo, hi) = workers.split_at_mut(w);
+        copy_flat_range(&lo[0], &mut hi[0], start, end);
+    }
+    bounds
+}
+
+/// All-gather paired with [`reduce_scatter_sum`]: copy each shard
+/// owner's reduced range into every other worker's buffers, so all
+/// replicas end holding the identical full gradient sum.  Pure copies —
+/// the composed `reduce_scatter_sum` + `allgather` is bit-identical to
+/// [`allreduce_sum`] broadcast to all workers.
+pub fn allgather(workers: &mut [Vec<Tensor>], bounds: &[(usize, usize)]) {
+    assert_eq!(workers.len(), bounds.len(), "one shard per worker");
+    let _sp = trace::span(Op::DpAllgather);
+    let n = workers.len();
+    for (s, &(start, end)) in bounds.iter().enumerate() {
+        if start == end {
+            continue;
+        }
+        for d in 0..n {
+            if d == s {
+                continue;
+            }
+            let (src, dst) = if s < d {
+                let (lo, hi) = workers.split_at_mut(d);
+                (&lo[s], &mut hi[0])
+            } else {
+                let (lo, hi) = workers.split_at_mut(s);
+                (&hi[0], &mut lo[d])
+            };
+            copy_flat_range(src, dst, start, end);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,6 +303,66 @@ mod tests {
         let mut one = vec![vec![Tensor::full(&[3], 5.0)]];
         allreduce_sum(&mut one);
         assert_eq!(one[0][0].data(), &[5.0; 3]);
+    }
+
+    #[test]
+    fn shard_bounds_cover_and_are_contiguous() {
+        for (total, n) in [(10, 3), (8, 4), (7, 8), (0, 2), (1, 1), (4097, 2)] {
+            let b = shard_bounds(total, n);
+            assert_eq!(b.len(), n);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[n - 1].1, total);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "shards must tile contiguously");
+            }
+        }
+    }
+
+    fn grad_sets(n: usize, shapes: &[&[usize]]) -> Vec<Vec<Tensor>> {
+        (0..n)
+            .map(|w| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        Tensor::from_fn(s, |i| {
+                            // irregular values so reassociation would show
+                            ((w * 31 + i * 7) % 13) as f32 * 0.37 - 1.5
+                        })
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reduce_scatter_allgather_matches_allreduce_sum_bitwise() {
+        let shapes: &[&[usize]] = &[&[5, 3], &[7], &[2, 2, 2]];
+        for n in [1usize, 2, 3, 4, 8] {
+            let mut reference = grad_sets(n, shapes);
+            allreduce_sum(&mut reference);
+            let mut sharded = grad_sets(n, shapes);
+            let bounds = reduce_scatter_sum(&mut sharded);
+            allgather(&mut sharded, &bounds);
+            for w in 0..n {
+                for (a, b) in sharded[w].iter().zip(&reference[0]) {
+                    assert_eq!(a.data(), b.data(), "worker {w} of {n} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_owns_shards_before_gather() {
+        let shapes: &[&[usize]] = &[&[6], &[4]];
+        let mut reference = grad_sets(2, shapes);
+        allreduce_sum(&mut reference);
+        let mut sharded = grad_sets(2, shapes);
+        let bounds = reduce_scatter_sum(&mut sharded);
+        assert_eq!(bounds, vec![(0, 5), (5, 10)]);
+        // worker 1's shard (flat elements 5..10) is already reduced
+        let flat_ref: Vec<f32> = reference[0].iter().flat_map(|t| t.data().to_vec()).collect();
+        let flat_w1: Vec<f32> = sharded[1].iter().flat_map(|t| t.data().to_vec()).collect();
+        assert_eq!(&flat_w1[5..10], &flat_ref[5..10]);
     }
 
     #[test]

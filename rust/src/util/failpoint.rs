@@ -29,7 +29,7 @@
 //! | `ckpt.write` | checkpoint writer, after `arg` written bytes | `kill` |
 //! | `ckpt.saved` | right after a checkpoint is published (renamed) | `kill` |
 //! | `grads.inject` | native step path, before the non-finite guard | `nan` |
-//! | `dp.worker` | top of a dp worker's step | `panic`, `error` |
+//! | `dp.worker` | top of a dp worker's micro-batch compute (`@k` counts global micro-batches, `step * grad_accum + a`; equals the optimizer step when `grad_accum` is 1) | `panic`, `error`, `kill` |
 //!
 //! Example: `PACKMAMBA_FAILPOINT="ckpt.saved=kill@4"` kills the
 //! process immediately after the checkpoint at step 4 is durable —

@@ -23,8 +23,8 @@
 //! | `scan`   | `scan.fwd`, `scan.bwd`                                   |
 //! | `norm`   | `norm.rms_fwd`, `norm.rms_bwd`                           |
 //! | `loss`   | `loss.ce`                                                |
-//! | `opt`    | `opt.adamw`                                              |
-//! | `dp`     | `dp.allreduce`                                           |
+//! | `opt`    | `opt.adamw`, `opt.accum`                                 |
+//! | `dp`     | `dp.allreduce`, `dp.reduce_scatter`, `dp.allgather`, `dp.prefetch` |
 //! | `chunk`  | `chunk.gather`                                           |
 //! | `step`   | `step.train`                                             |
 //! | `pool`   | `pool.dispatch`, `pool.busy`, `pool.park`                |
@@ -88,6 +88,10 @@ ops! {
     CrossEntropy => "loss.ce",
     AdamW => "opt.adamw",
     Allreduce => "dp.allreduce",
+    DpReduceScatter => "dp.reduce_scatter",
+    DpAllgather => "dp.allgather",
+    DpPrefetch => "dp.prefetch",
+    OptAccum => "opt.accum",
     ChunkGather => "chunk.gather",
     TrainStep => "step.train",
     GuardScan => "guard.scan",

@@ -7,7 +7,11 @@
 //!     1e-5 — including streams with over-length fragmented sequences
 //!     and carries persisting across consecutive batches,
 //!   * a full `DataParallelTrainer` dp-chunked run (2 and 4 workers)
-//!     matches the single-worker chunked `Trainer` run step for step,
+//!     matches the single-worker chunked `Trainer` run step for step —
+//!     with and without gradient accumulation (`grad_accum` 4),
+//!   * batch prefetch is bitwise-neutral: an overlapped run
+//!     (`prefetch_depth` 2) equals the synchronous one (depth 0) bit for
+//!     bit,
 //!   * the packer's final undersized flush batch (fewer rows/streams
 //!     than the persisted carry was shaped for) resets the carry instead
 //!     of reusing stale lanes,
@@ -193,6 +197,81 @@ fn dp_chunked_trainer_matches_single_worker_run() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn dp_chunked_accumulation_matches_single_worker_run() {
+    // gradient accumulation: 2 optimizer steps x 4 micro-batches must
+    // reproduce the single-worker accumulating Trainer (whole-group CE
+    // denominator, carries advancing per micro-batch) within 1e-5
+    let mk = || {
+        let mut c = chunked_train_config(4);
+        c.grad_accum = 4;
+        c.steps = 2;
+        c
+    };
+    let mut t = Trainer::from_config(mk()).unwrap();
+    t.train().unwrap();
+    let ref_losses: Vec<f32> = t.metrics.records.iter().map(|r| r.loss).collect();
+    let ref_params = t.state().params.clone();
+    assert_eq!(ref_losses.len(), 2, "one record per optimizer step");
+
+    for workers in [2usize, 4] {
+        let mut cfg = mk();
+        cfg.dp_workers = workers;
+        let dp = DataParallelTrainer::new(cfg).unwrap();
+        let r = dp.run().unwrap();
+        assert!(r.replicas_identical, "{workers} workers: replicas diverged");
+        assert_eq!(r.metrics.steps(), ref_losses.len());
+        for (i, rec) in r.metrics.records.iter().enumerate() {
+            assert!(
+                (rec.loss - ref_losses[i]).abs() < 1e-5,
+                "step {i} ({workers} workers, grad_accum 4): loss {} vs single-worker {}",
+                rec.loss,
+                ref_losses[i]
+            );
+        }
+        for (a, b) in r.final_params.iter().zip(&ref_params) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!(
+                    (x - y).abs() < 1e-4,
+                    "{workers} workers, grad_accum 4: final param {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dp_chunked_prefetch_overlap_is_bitwise_neutral() {
+    // prefetch is a latency optimization, not a numerics change: a fully
+    // synchronous run (depth 0, every batch packed on the critical path)
+    // and an overlapped run (depth 2, producer ahead of compute) must
+    // produce bit-identical losses and parameters — with and without
+    // gradient accumulation
+    for grad_accum in [1usize, 4] {
+        let mk = |depth: usize| {
+            let mut c = chunked_train_config(4);
+            c.dp_workers = 2;
+            c.grad_accum = grad_accum;
+            c.steps = if grad_accum > 1 { 2 } else { 4 };
+            c.prefetch_depth = depth;
+            c
+        };
+        let sync = DataParallelTrainer::new(mk(0)).unwrap().run().unwrap();
+        let overlapped = DataParallelTrainer::new(mk(2)).unwrap().run().unwrap();
+        assert!(sync.replicas_identical && overlapped.replicas_identical);
+        let sync_losses: Vec<f32> = sync.metrics.records.iter().map(|r| r.loss).collect();
+        let ov_losses: Vec<f32> = overlapped.metrics.records.iter().map(|r| r.loss).collect();
+        assert_eq!(
+            sync_losses, ov_losses,
+            "grad_accum {grad_accum}: overlapped losses must be bit-identical to sync"
+        );
+        assert_eq!(
+            sync.final_params, overlapped.final_params,
+            "grad_accum {grad_accum}: overlapped params must be bit-identical to sync"
+        );
     }
 }
 

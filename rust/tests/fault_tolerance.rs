@@ -13,6 +13,13 @@
 //!     aborts the process,
 //!   * a transient dp worker error is retried (bounded by
 //!     `step_retries`) and the retried run stays bit-identical,
+//!   * resume bit-identity also holds with `grad_accum > 1` (the replay
+//!     cursor counts micro-batches; a mismatched accumulation is
+//!     refused) and with batches still in the prefetch queue at the
+//!     checkpoint (the saved cursor rewinds past them),
+//!   * a fault mid-accumulation — transient error or a real kill —
+//!     retries/resumes without double-consuming held or prefetched
+//!     batches, staying bit-identical to the undisturbed run,
 //!   * a torn checkpoint write (kill mid-write) leaves only a temp file
 //!     that the loader rejects; the published path is never torn.
 //!
@@ -226,6 +233,107 @@ fn dp_chunked_resume_is_bit_identical() {
 }
 
 #[test]
+fn dp_resume_with_grad_accum_is_bit_identical() {
+    let _g = lock();
+    failpoint::clear();
+    for chunked in [false, true] {
+        let dir = tmp(if chunked { "dp_accum_chunk" } else { "dp_accum_mono" });
+        let ck = dir.join("ck.bin");
+        let mk = move |steps: usize| {
+            let mut c = if chunked { cfg_chunked(steps) } else { cfg(steps) };
+            c.dp_workers = 2;
+            if chunked {
+                c.packing.streams = 2;
+            }
+            c.grad_accum = 2;
+            c
+        };
+
+        let mut interrupted_cfg = mk(6);
+        interrupted_cfg.save_every = 3;
+        let mut dp = DataParallelTrainer::new(interrupted_cfg).unwrap();
+        dp.set_save_path(ck.clone());
+        dp.run().unwrap();
+
+        let mut dp = DataParallelTrainer::new(mk(10)).unwrap();
+        dp.set_resume_path(ck);
+        let resumed = dp.run().unwrap();
+        assert!(resumed.replicas_identical);
+
+        let full = DataParallelTrainer::new(mk(10)).unwrap().run().unwrap();
+        assert_eq!(
+            resumed.final_params, full.final_params,
+            "resumed grad_accum=2 run (chunked={chunked}) must be bit-identical"
+        );
+    }
+}
+
+#[test]
+fn dp_resume_refuses_grad_accum_mismatch() {
+    let _g = lock();
+    failpoint::clear();
+    let dir = tmp("dp_accum_mismatch");
+    let ck = dir.join("ck.bin");
+    let mk = |steps: usize, accum: usize| {
+        let mut c = cfg(steps);
+        c.dp_workers = 2;
+        c.grad_accum = accum;
+        c
+    };
+
+    let mut saving = mk(3, 2);
+    saving.save_every = 3;
+    let mut dp = DataParallelTrainer::new(saving).unwrap();
+    dp.set_save_path(ck.clone());
+    dp.run().unwrap();
+
+    // the replay cursor counts micro-batches: resuming with a different
+    // accumulation would desync batch replay, so it must be refused
+    let mut dp = DataParallelTrainer::new(mk(6, 1)).unwrap();
+    dp.set_resume_path(ck);
+    let err = format!("{:#}", dp.run().unwrap_err());
+    assert!(err.contains("grad_accum"), "{err}");
+}
+
+#[test]
+fn dp_resume_with_warm_prefetch_queue_is_bit_identical() {
+    let _g = lock();
+    failpoint::clear();
+    for chunked in [false, true] {
+        let dir = tmp(if chunked { "dp_queue_chunk" } else { "dp_queue_mono" });
+        let ck = dir.join("ck.bin");
+        let mk = move |steps: usize| {
+            let mut c = if chunked { cfg_chunked(steps) } else { cfg(steps) };
+            c.dp_workers = 2;
+            if chunked {
+                c.packing.streams = 2;
+            }
+            // deep lookahead: every checkpoint lands with batches still
+            // queued, so the saved cursor must rewind past them
+            c.prefetch_depth = 3;
+            c
+        };
+
+        let mut interrupted_cfg = mk(6);
+        interrupted_cfg.save_every = 3;
+        let mut dp = DataParallelTrainer::new(interrupted_cfg).unwrap();
+        dp.set_save_path(ck.clone());
+        dp.run().unwrap();
+
+        let mut dp = DataParallelTrainer::new(mk(10)).unwrap();
+        dp.set_resume_path(ck);
+        let resumed = dp.run().unwrap();
+        assert!(resumed.replicas_identical);
+
+        let full = DataParallelTrainer::new(mk(10)).unwrap().run().unwrap();
+        assert_eq!(
+            resumed.final_params, full.final_params,
+            "resume over a warm prefetch queue (chunked={chunked}) must be bit-identical"
+        );
+    }
+}
+
+#[test]
 fn injected_nan_skips_update_and_counts() {
     let _g = lock();
     failpoint::clear();
@@ -307,6 +415,61 @@ fn dp_transient_error_is_retried_bit_exactly() {
         retried.final_params, clean.final_params,
         "a retried step must reproduce the undisturbed run bit-exactly"
     );
+}
+
+#[test]
+fn dp_transient_error_mid_accumulation_is_retried_bit_exactly() {
+    let _g = lock();
+    for chunked in [false, true] {
+        failpoint::clear();
+        let mk = move || {
+            let mut c = if chunked { cfg_chunked(4) } else { cfg(4) };
+            c.dp_workers = 2;
+            if chunked {
+                c.packing.streams = 2;
+            }
+            c.grad_accum = 2;
+            c.prefetch_depth = 2;
+            c.step_retries = 1;
+            c
+        };
+        let clean = DataParallelTrainer::new(mk()).unwrap().run().unwrap();
+
+        // micro-batch 3 = optimizer step 1, second micro: the fault
+        // lands mid-accumulation with the next batches already packed
+        // ahead — the retry must recompute the same held batches, not
+        // consume fresh ones from the feed
+        failpoint::set_spec("dp.worker=error@3#0").unwrap();
+        let retried = DataParallelTrainer::new(mk()).unwrap().run().unwrap();
+        failpoint::clear();
+
+        assert!(retried.replicas_identical);
+        assert_eq!(
+            retried.final_params, clean.final_params,
+            "mid-accumulation retry (chunked={chunked}) must reproduce the clean run bit-exactly"
+        );
+    }
+}
+
+#[test]
+fn dp_worker_panic_with_prefetched_batches_is_contained() {
+    let _g = lock();
+    failpoint::clear();
+    // micro-batch 2 = optimizer step 1, first micro: worker 1 dies while
+    // every feed holds prefetched batches — the leader must still fail
+    // the step with a typed error instead of hanging on the rendezvous
+    failpoint::set_spec("dp.worker=panic@2#1").unwrap();
+    let mut c = cfg(6);
+    c.dp_workers = 2;
+    c.grad_accum = 2;
+    c.prefetch_depth = 2;
+    let err = DataParallelTrainer::new(c).unwrap().run().unwrap_err();
+    failpoint::clear();
+    let we = err
+        .downcast_ref::<WorkerError>()
+        .unwrap_or_else(|| panic!("expected a typed WorkerError, got: {err:#}"));
+    assert_eq!(we.worker, 1, "the error names the failing worker");
+    assert!(we.panicked);
 }
 
 #[test]
@@ -412,6 +575,100 @@ fn killed_after_checkpoint_publish_resumes_bit_identically() {
         std::fs::read(&full).unwrap(),
         std::fs::read(&killed).unwrap(),
         "resumed final checkpoint must be byte-identical to the uninterrupted run's"
+    );
+}
+
+#[test]
+fn dp_chunked_killed_mid_accumulation_resumes_bit_identically() {
+    let dir = tmp("cli_dp_kill_accum");
+    let mut c = cfg_chunked(10);
+    c.dp_workers = 2;
+    c.packing.streams = 2;
+    c.grad_accum = 2;
+    c.prefetch_depth = 2;
+    c.save_every = 5;
+    let config = write_config(&dir, &c);
+    let config = config.to_str().unwrap();
+    let full = dir.join("full.bin");
+    let killed = dir.join("killed.bin");
+
+    run_cli(&["dp-train", "--config", config, "--save", full.to_str().unwrap()], None);
+
+    // micro-batch 13 = optimizer step 6, second micro: the kill lands
+    // mid-accumulation, after the step-5 checkpoint became durable
+    let status = run_cli(
+        &["dp-train", "--config", config, "--save", killed.to_str().unwrap()],
+        Some("dp.worker=kill@13#0"),
+    );
+    assert_eq!(
+        status.code(),
+        Some(failpoint::KILL_EXIT_CODE),
+        "the failpoint kill must use its reserved exit code"
+    );
+    assert!(killed.exists(), "the step-5 checkpoint survives the kill");
+
+    run_cli(
+        &[
+            "dp-train",
+            "--config",
+            config,
+            "--save",
+            killed.to_str().unwrap(),
+            "--resume",
+            killed.to_str().unwrap(),
+        ],
+        None,
+    );
+
+    assert_eq!(
+        std::fs::read(&full).unwrap(),
+        std::fs::read(&killed).unwrap(),
+        "a run killed mid-accumulation must resume to a byte-identical final checkpoint"
+    );
+}
+
+#[test]
+fn dp_killed_with_warm_prefetch_queue_resumes_bit_identically() {
+    let dir = tmp("cli_dp_kill_queue");
+    let mut c = cfg(10);
+    c.dp_workers = 2;
+    c.grad_accum = 2;
+    c.prefetch_depth = 2;
+    c.save_every = 5;
+    let config = write_config(&dir, &c);
+    let config = config.to_str().unwrap();
+    let full = dir.join("full.bin");
+    let killed = dir.join("killed.bin");
+
+    run_cli(&["dp-train", "--config", config, "--save", full.to_str().unwrap()], None);
+
+    // micro-batch 15 = optimizer step 7, second micro: safely past the
+    // step-5 checkpoint write (worker 1 only reaches step 7 after the
+    // leader finished it), with the inline feeds' queues packed ahead
+    let status = run_cli(
+        &["dp-train", "--config", config, "--save", killed.to_str().unwrap()],
+        Some("dp.worker=kill@15#1"),
+    );
+    assert_eq!(status.code(), Some(failpoint::KILL_EXIT_CODE));
+    assert!(killed.exists(), "the step-5 checkpoint survives the kill");
+
+    run_cli(
+        &[
+            "dp-train",
+            "--config",
+            config,
+            "--save",
+            killed.to_str().unwrap(),
+            "--resume",
+            killed.to_str().unwrap(),
+        ],
+        None,
+    );
+
+    assert_eq!(
+        std::fs::read(&full).unwrap(),
+        std::fs::read(&killed).unwrap(),
+        "a kill over a warm prefetch queue must resume to a byte-identical final checkpoint"
     );
 }
 

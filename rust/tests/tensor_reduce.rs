@@ -1,0 +1,155 @@
+//! Property suite for the sharded reduction collectives
+//! (`reduce_scatter_sum` + `allgather`) that the data-parallel step
+//! engine reduces gradients through.
+//!
+//! Invariants:
+//!   * `shard_bounds` is a deterministic partition: contiguous,
+//!     non-overlapping, covering `[0, total)`, one (possibly empty)
+//!     shard per worker, the final shard absorbing the remainder,
+//!   * reduce-scatter followed by allgather equals `allreduce_sum`
+//!     within 1e-5 for any worker count — and **bitwise** for
+//!     power-of-two counts (the pinned dp configurations), because
+//!     both sum elements in worker index order,
+//!   * after `reduce_scatter_sum` alone, worker `w` already owns the
+//!     fully reduced values of its shard (the scatter half),
+//!   * after `allgather` every worker's set is bit-identical to
+//!     worker 0's (full replication),
+//!   * the 1-worker degenerate case is an exact no-op.
+
+use packmamba::tensor::{allgather, allreduce_sum, reduce_scatter_sum, shard_bounds, Tensor};
+use packmamba::util::proptest::{check, lengths_vec, Gen};
+
+/// Deterministic per-worker gradient sets over the given tensor lengths
+/// (values vary by worker, tensor, and element so reductions cannot
+/// cancel by accident).
+fn grad_sets(n: usize, lens: &[usize]) -> Vec<Vec<Tensor>> {
+    (0..n)
+        .map(|w| {
+            lens.iter()
+                .enumerate()
+                .map(|(j, &len)| {
+                    Tensor::from_fn(&[len], |i| {
+                        ((w * 31 + j * 19 + i * 7) % 23) as f32 * 0.37 - 2.1
+                    })
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn flat(set: &[Tensor]) -> Vec<f32> {
+    set.iter().flat_map(|t| t.data().iter().copied()).collect()
+}
+
+/// Tensor-length vectors with tiny totals included, so the final shard
+/// is uneven (or empty) for most worker counts.
+fn lens_gen() -> Gen<Vec<usize>> {
+    lengths_vec(1, 64, 1..5)
+}
+
+#[test]
+fn shard_bounds_partition_the_flat_range() {
+    check("shard_bounds partitions [0, total)", lens_gen(), |lens| {
+        let total: usize = lens.iter().sum();
+        (1..=9).all(|n| {
+            let bounds = shard_bounds(total, n);
+            bounds.len() == n
+                && bounds.first().map(|b| b.0) == Some(0)
+                && bounds.last().map(|b| b.1) == Some(total)
+                && bounds.windows(2).all(|p| p[0].1 == p[1].0)
+                && bounds.iter().all(|&(s, e)| s <= e)
+        })
+    });
+}
+
+#[test]
+fn shard_bounds_uneven_and_empty_tails() {
+    // 10 elements over 4 shards: ceil sizing loads the front, the tail
+    // takes the remainder
+    assert_eq!(shard_bounds(10, 4), vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+    // fewer elements than shards: trailing shards are empty
+    assert_eq!(shard_bounds(2, 4), vec![(0, 1), (1, 2), (2, 2), (2, 2)]);
+    assert_eq!(shard_bounds(0, 2), vec![(0, 0), (0, 0)]);
+    assert_eq!(shard_bounds(7, 1), vec![(0, 7)]);
+}
+
+#[test]
+fn reduce_scatter_allgather_matches_allreduce_sum() {
+    check(
+        "reduce_scatter + allgather == allreduce_sum (1e-5 any n)",
+        lens_gen(),
+        |lens| {
+            (1..=7).all(|n| {
+                let mut reference = grad_sets(n, lens);
+                allreduce_sum(&mut reference);
+                let mut sharded = grad_sets(n, lens);
+                let bounds = allgather_roundtrip(&mut sharded);
+                let total: usize = lens.iter().sum();
+                bounds.last().map(|b| b.1) == Some(total)
+                    && flat(&sharded[0])
+                        .iter()
+                        .zip(flat(&reference[0]))
+                        .all(|(a, r)| (a - r).abs() < 1e-5)
+            })
+        },
+    );
+}
+
+fn allgather_roundtrip(workers: &mut [Vec<Tensor>]) -> Vec<(usize, usize)> {
+    let bounds = reduce_scatter_sum(workers);
+    allgather(workers, &bounds);
+    bounds
+}
+
+#[test]
+fn power_of_two_counts_are_bitwise_identical_to_allreduce() {
+    check(
+        "reduce_scatter + allgather bitwise == allreduce_sum (n in {1,2,4,8})",
+        lens_gen(),
+        |lens| {
+            [1usize, 2, 4, 8].iter().all(|&n| {
+                let mut reference = grad_sets(n, lens);
+                allreduce_sum(&mut reference);
+                let mut sharded = grad_sets(n, lens);
+                allgather_roundtrip(&mut sharded);
+                // every replica, not just worker 0: allgather must fully
+                // replicate the reduced set
+                sharded
+                    .iter()
+                    .all(|set| flat(set) == flat(&reference[0]))
+            })
+        },
+    );
+}
+
+#[test]
+fn scatter_phase_owns_fully_reduced_shards() {
+    check(
+        "worker w owns its reduced shard before the gather",
+        lens_gen(),
+        |lens| {
+            (2..=5).all(|n| {
+                let mut reference = grad_sets(n, lens);
+                allreduce_sum(&mut reference);
+                let want = flat(&reference[0]);
+                let mut sharded = grad_sets(n, lens);
+                let bounds = reduce_scatter_sum(&mut sharded);
+                bounds.iter().enumerate().all(|(w, &(start, end))| {
+                    let have = flat(&sharded[w]);
+                    (start..end).all(|i| have[i] == want[i])
+                })
+            })
+        },
+    );
+}
+
+#[test]
+fn single_worker_is_an_exact_noop() {
+    let lens = [5usize, 1, 17];
+    let original = grad_sets(1, &lens);
+    let mut workers = grad_sets(1, &lens);
+    let bounds = reduce_scatter_sum(&mut workers);
+    assert_eq!(bounds, vec![(0, lens.iter().sum::<usize>())]);
+    allgather(&mut workers, &bounds);
+    assert_eq!(flat(&workers[0]), flat(&original[0]), "degenerate case must not touch data");
+}
