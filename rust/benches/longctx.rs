@@ -1,0 +1,174 @@
+//! Long-context memory bench: cached vs recomputed chunked training
+//! across stream lengths ×{1, 4, 16} (pack_len 128 → 2048 at
+//! chunk_len 32, i.e. 4 → 64 chunks per stream).
+//!
+//! Each cell runs the same packed batch through `train_step_chunked`
+//! in both execution modes and records the per-step arena peak
+//! (`NativeBackend::arena_peak_bytes`, the byte-accurate high-water
+//! mark of one optimizer step) plus wall time per step.  The cached
+//! path keeps every chunk's activation caches live across the forward,
+//! so its peak grows linearly with stream length; the recomputed path
+//! checkpoints only the constant-size per-chunk carry states and must
+//! stay essentially flat.  Every cell also re-asserts the determinism
+//! invariant: recomputed losses are bit-identical to cached losses.
+//!
+//! Results land in `BENCH_LONGCTX.json` at the repo root (and under
+//! `target/bench/`).  `-- --smoke` runs a reduced step count for CI
+//! and never exits non-zero.
+
+mod common;
+
+use std::time::Instant;
+
+use packmamba::backend::{model, Backend, NativeBackend};
+use packmamba::config::ModelConfig;
+use packmamba::packing::{PackedBatch, PackedRow, Sequence};
+use packmamba::util::bench::fmt_duration;
+use packmamba::util::json::Json;
+
+const BASE_PACK_LEN: usize = 128;
+const CHUNK_LEN: usize = 32;
+const STREAMS: usize = 2;
+const LENGTH_MULTS: [usize; 3] = [1, 4, 16];
+
+/// Two full rows (row = one stream when `streams = 2`), each a single
+/// over-length sequence spanning the whole row — the long-context
+/// shape where activation memory, not packing, is the bottleneck.
+fn long_batch(cfg: &ModelConfig, pack_len: usize) -> PackedBatch {
+    let seq = |id: u64| Sequence {
+        tokens: (0..pack_len)
+            .map(|k| 1 + ((id as usize * 37 + k * 11) % (cfg.vocab_size - 1)) as i32)
+            .collect(),
+        id,
+    };
+    let mut b = PackedBatch::from_rows(
+        &[
+            PackedRow {
+                sequences: vec![seq(0)],
+            },
+            PackedRow {
+                sequences: vec![seq(1)],
+            },
+        ],
+        pack_len,
+    );
+    b.streams = STREAMS;
+    b
+}
+
+/// One measured run: (losses, seconds per step, arena peak bytes).
+/// Warm-up steps run outside the clock so thread pools, the arena free
+/// lists, and the workspace pools are all sized before timing starts;
+/// the reported peak is the steady-state final step's high-water mark.
+fn run_once(
+    cfg: &ModelConfig,
+    pack_len: usize,
+    recompute: bool,
+    steps: usize,
+) -> (Vec<f32>, f64, usize) {
+    let be = NativeBackend::with_threads(1);
+    be.set_recompute(recompute);
+    let mut state = be.init_state(cfg, 42).unwrap();
+    let b = long_batch(cfg, pack_len);
+    let mut losses = Vec::with_capacity(steps + 2);
+    losses.push(be.train_step_chunked(cfg, &mut state, &b, CHUNK_LEN).unwrap());
+    losses.push(be.train_step_chunked(cfg, &mut state, &b, CHUNK_LEN).unwrap());
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        losses.push(be.train_step_chunked(cfg, &mut state, &b, CHUNK_LEN).unwrap());
+    }
+    let step_s = t0.elapsed().as_secs_f64() / steps as f64;
+    (losses, step_s, be.arena_peak_bytes())
+}
+
+fn main() {
+    packmamba::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let steps = if smoke { 2usize } else { 8 };
+    let cfg = ModelConfig::tiny();
+
+    println!(
+        "=== long-context memory: cached vs recomputed chunked steps, \
+         chunk_len {CHUNK_LEN}, {steps} timed steps/cell ==="
+    );
+    let mut cells: Vec<Json> = Vec::new();
+    for &mult in &LENGTH_MULTS {
+        let pack_len = BASE_PACK_LEN * mult;
+        let n_chunks = pack_len / CHUNK_LEN;
+
+        let (cached_losses, cached_step, cached_peak) = run_once(&cfg, pack_len, false, steps);
+        let (rec_losses, rec_step, rec_peak) = run_once(&cfg, pack_len, true, steps);
+        let identical = cached_losses == rec_losses;
+        assert!(
+            identical,
+            "recomputation must be bitwise-neutral (pack_len {pack_len})"
+        );
+
+        let peak_ratio = cached_peak as f64 / rec_peak.max(1) as f64;
+        println!(
+            "len x{mult} (pack {pack_len}, {n_chunks} chunks): peak {} B -> {} B \
+             ({peak_ratio:.2}x), step {} -> {} ({:+.1}%)",
+            cached_peak,
+            rec_peak,
+            fmt_duration(cached_step),
+            fmt_duration(rec_step),
+            (rec_step / cached_step - 1.0) * 100.0
+        );
+        cells.push(Json::from_pairs([
+            ("length_mult", Json::from(mult)),
+            ("pack_len", Json::from(pack_len)),
+            ("n_chunks", Json::from(n_chunks)),
+            ("streams", Json::from(STREAMS)),
+            ("cached_peak_bytes", Json::from(cached_peak)),
+            ("recomputed_peak_bytes", Json::from(rec_peak)),
+            ("peak_ratio", Json::from(peak_ratio)),
+            ("cached_step_s", Json::from(cached_step)),
+            ("recomputed_step_s", Json::from(rec_step)),
+            ("recompute_overhead", Json::from(rec_step / cached_step - 1.0)),
+            (
+                "chunk_cache_bytes_est",
+                Json::from(model::chunk_cache_bytes(&cfg, STREAMS, CHUNK_LEN)),
+            ),
+            (
+                "chunk_state_bytes_est",
+                Json::from(model::chunk_state_bytes(&cfg, STREAMS)),
+            ),
+            ("bitwise_neutral", Json::from(identical)),
+        ]));
+    }
+
+    // The headline invariant the bench exists to demonstrate: as streams
+    // lengthen 16x, the recomputed peak must stay essentially flat while
+    // the cached peak scales with the chunk count.
+    let peak = |c: &Json, key: &str| c.get(key).and_then(Json::as_i64).unwrap() as f64;
+    let rec_growth =
+        peak(&cells[2], "recomputed_peak_bytes") / peak(&cells[0], "recomputed_peak_bytes");
+    let cached_growth =
+        peak(&cells[2], "cached_peak_bytes") / peak(&cells[0], "cached_peak_bytes");
+    println!(
+        "16x longer streams: cached peak grew {cached_growth:.2}x, \
+         recomputed peak grew {rec_growth:.2}x"
+    );
+    assert!(
+        rec_growth < 1.5,
+        "recomputed peak must stay flat across stream lengths (grew {rec_growth:.2}x)"
+    );
+    assert!(
+        cached_growth > 2.0 * rec_growth,
+        "cached peak should outgrow the recomputed peak (cached {cached_growth:.2}x, \
+         recomputed {rec_growth:.2}x)"
+    );
+
+    let json = Json::from_pairs([
+        ("bench", Json::from("longctx")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        ("steps_per_cell", Json::from(steps)),
+        ("chunk_len", Json::from(CHUNK_LEN)),
+        ("base_pack_len", Json::from(BASE_PACK_LEN)),
+        ("recomputed_peak_growth_16x", Json::from(rec_growth)),
+        ("cached_peak_growth_16x", Json::from(cached_growth)),
+        ("cells", Json::from(cells)),
+    ]);
+    common::write_results("longctx", &json);
+    common::write_root_json("BENCH_LONGCTX.json", &json);
+}

@@ -62,6 +62,7 @@ pub const ZERO_ALLOC_FNS: &[(&str, &[&str])] = &[
             "loss_and_grads_into",
             "loss_and_grads_chunked_into",
             "forward_logits_chunked",
+            "recompute_chunk_caches",
         ],
     ),
 ];

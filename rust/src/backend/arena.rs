@@ -29,6 +29,10 @@ pub struct StepArena {
     pub f64_scratch: Vec<f64>,
     taken: usize,
     recycled: usize,
+    /// Bytes of arena buffers currently checked out (taken, not put back).
+    live_bytes: usize,
+    /// High-water mark of `live_bytes` since construction/[`reset_peak`](Self::reset_peak).
+    peak_bytes: usize,
 }
 
 impl StepArena {
@@ -41,6 +45,10 @@ impl StepArena {
     /// element; use [`take_zeroed`](Self::take_zeroed) to accumulate.
     pub fn take(&mut self, len: usize) -> Vec<f32> {
         self.taken += 1;
+        self.live_bytes += len * std::mem::size_of::<f32>();
+        if self.live_bytes > self.peak_bytes {
+            self.peak_bytes = self.live_bytes;
+        }
         if let Some(list) = self.free.get_mut(&len) {
             if let Some(v) = list.pop() {
                 self.recycled += 1;
@@ -60,6 +68,11 @@ impl StepArena {
 
     /// Return a buffer to the arena for reuse.
     pub fn put(&mut self, v: Vec<f32>) {
+        // saturating: a buffer built outside the arena (capacity > 0 but
+        // never `take`n) must not underflow the live-byte gauge
+        self.live_bytes = self
+            .live_bytes
+            .saturating_sub(v.len() * std::mem::size_of::<f32>());
         if v.capacity() == 0 {
             return;
         }
@@ -82,6 +95,27 @@ impl StepArena {
     /// Total f32 elements currently parked in free lists.
     pub fn retained_elements(&self) -> usize {
         self.free.values().flatten().map(Vec::len).sum()
+    }
+
+    /// Bytes of arena buffers currently checked out.  Mid-backward this
+    /// *is* the live activation set: layer caches and carry states are
+    /// all arena-backed, so cached chunked execution shows `O(stream
+    /// length)` here while recomputed execution stays `O(chunk_len)`.
+    pub fn live_bytes(&self) -> usize {
+        self.live_bytes
+    }
+
+    /// High-water mark of [`live_bytes`](Self::live_bytes) since
+    /// construction or the last [`reset_peak`](Self::reset_peak).
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Restart the peak gauge from the current live level (per-step
+    /// attribution: backends call this at the top of a step so the peak
+    /// reflects *this* step's working set).
+    pub fn reset_peak(&mut self) {
+        self.peak_bytes = self.live_bytes;
     }
 }
 
@@ -119,5 +153,36 @@ mod tests {
         let w = a.take(9);
         assert_eq!(w.len(), 9);
         assert_eq!(a.retained_elements(), 8);
+    }
+
+    #[test]
+    fn live_and_peak_bytes_track_checkouts() {
+        let mut a = StepArena::new();
+        let sz = std::mem::size_of::<f32>();
+        let v = a.take(8);
+        let w = a.take(4);
+        assert_eq!(a.live_bytes(), 12 * sz);
+        assert_eq!(a.peak_bytes(), 12 * sz);
+        a.put(w);
+        assert_eq!(a.live_bytes(), 8 * sz, "put must release live bytes");
+        assert_eq!(a.peak_bytes(), 12 * sz, "peak is a high-water mark");
+        a.reset_peak();
+        assert_eq!(a.peak_bytes(), 8 * sz, "reset restarts from live");
+        let x = a.take(4); // recycled buffer still counts as live
+        assert_eq!(a.live_bytes(), 12 * sz);
+        assert_eq!(a.peak_bytes(), 12 * sz);
+        a.put(x);
+        a.put(v);
+        assert_eq!(a.live_bytes(), 0);
+    }
+
+    #[test]
+    fn foreign_put_saturates_instead_of_underflowing() {
+        let mut a = StepArena::new();
+        a.put(vec![0.0; 16]); // never taken from this arena
+        assert_eq!(a.live_bytes(), 0);
+        let v = a.take(16);
+        a.put(v);
+        assert_eq!(a.live_bytes(), 0);
     }
 }

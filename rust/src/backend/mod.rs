@@ -43,7 +43,7 @@ pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use native::NativeBackend;
+pub use native::{MemBudgetExceeded, NativeBackend};
 
 use crate::config::{BackendKind, ModelConfig, TrainConfig};
 use crate::packing::PackedBatch;
@@ -249,6 +249,8 @@ pub fn create(cfg: &TrainConfig) -> Result<Box<dyn Backend>> {
         BackendKind::Native => {
             let be = NativeBackend::new();
             be.set_max_bad_steps(cfg.max_bad_steps);
+            be.set_recompute(cfg.recompute);
+            be.set_mem_budget(cfg.mem_budget);
             Ok(Box::new(be))
         }
         BackendKind::Pjrt => create_pjrt(cfg),

@@ -250,6 +250,40 @@ impl ChunkState {
     }
 }
 
+/// Bytes of one chunk's forward caches — the 17 per-layer [`LayerCache`]
+/// buffers plus the head [`ForwardCache`] — for a `(streams, clen)`
+/// chunk.  This is the unit the cached chunked step keeps **live per
+/// chunk** across the whole backward sweep, and the recomputed step
+/// keeps live exactly once; transient backward scratch (common to both
+/// modes and O(one layer)) is excluded.  The budget sizing in
+/// `backend::native` compares `n_chunks ×` this against the configured
+/// `--mem-budget`.
+pub fn chunk_cache_bytes(cfg: &ModelConfig, streams: usize, clen: usize) -> usize {
+    let (d, di, n, r, v) = (
+        cfg.d_model,
+        cfg.d_inner(),
+        cfg.d_state,
+        cfg.dt_rank(),
+        cfg.vocab_size,
+    );
+    let t = streams * clen;
+    // LayerCache: u + un (t·d each), inv (t), nine (t·di) planes
+    // (xlin_cm, z, xc_cm, xs_cm, xs_tm, dt_pre, dt_cm, y_tm, yz),
+    // dt_low (t·r), bm + cm (t·n each), hist + am (t·di·n each)
+    let per_layer = t * (2 * d + 1 + 9 * di + r + 2 * n + 2 * di * n);
+    // ForwardCache: logits (t·v), h_pre + hf (t·d each), invf (t)
+    let head = t * (v + 2 * d + 1);
+    (cfg.n_layers * per_layer + head) * std::mem::size_of::<f32>()
+}
+
+/// Bytes of one per-stream carry [`ChunkState`] (scan state `h` + conv
+/// `tail` per layer) — the constant-size checkpoint that recompute mode
+/// keeps per chunk instead of the full caches.
+pub fn chunk_state_bytes(cfg: &ModelConfig, streams: usize) -> usize {
+    let (di, n, wl) = (cfg.d_inner(), cfg.d_state, cfg.d_conv);
+    cfg.n_layers * streams * di * (n + wl - 1) * std::mem::size_of::<f32>()
+}
+
 /// Head-side activations of one forward pass (layer caches live in the
 /// workspace until consumed by the backward or released).
 pub struct ForwardCache {
@@ -1215,6 +1249,33 @@ fn layers_backward(
     debug_assert_eq!(tokens.len(), t);
 }
 
+/// Rebuild one chunk's forward caches just-in-time for the reverse
+/// sweep (recompute mode): re-runs the deterministic chunk forward from
+/// the checkpointed carry-in, leaving the chunk's layer caches in
+/// `ws.layers` exactly as the caching forward left them.  The carry-out
+/// goes to pooled scratch and is recycled immediately — the backward
+/// already holds the downstream chunk's carry-in.
+// packlint: zero-alloc
+#[allow(clippy::too_many_arguments)]
+fn recompute_chunk_caches(
+    cfg: &ModelConfig,
+    p: &[Tensor],
+    tokens: &[i32],
+    pos: &[i32],
+    streams: usize,
+    clen: usize,
+    threads: usize,
+    ws: &mut ModelWorkspace,
+    state_in: &ChunkState,
+) -> ForwardCache {
+    let mut scratch = ws.take_chunk_state(cfg, streams, false);
+    let fc = forward_chunk_cached(
+        cfg, p, tokens, pos, streams, clen, threads, ws, state_in, &mut scratch,
+    );
+    ws.recycle_chunk_state(scratch);
+    fc
+}
+
 /// Chunked/stateful loss + gradients (paper §5), the training-side twin
 /// of [`forward_logits_chunked`]: the `(rows, len)` batch is traversed
 /// as `streams` independent row-major streams (one carry lane each,
@@ -1240,6 +1301,15 @@ fn layers_backward(
 /// the multi-stream gather scratch is recycled through `ws`, so the
 /// steady-state chunked step performs zero heap allocations
 /// (`tests/zero_alloc.rs`).
+///
+/// With `recompute`, the forward keeps only each chunk's constant-size
+/// carry-in [`ChunkState`] (the `(D,N)` scan state + `(D,W-1)` conv
+/// tail) and releases the activations immediately; the reverse sweep
+/// rebuilds each chunk's caches just-in-time via
+/// [`recompute_chunk_caches`].  Live activation memory is then
+/// O(chunk_len) regardless of stream length, and because the kernels
+/// are deterministic the recomputed gradients (and the loss) are
+/// bitwise identical to the cache-everything path.
 #[allow(clippy::too_many_arguments)]
 pub fn loss_and_grads_chunked_into(
     cfg: &ModelConfig,
@@ -1257,6 +1327,7 @@ pub fn loss_and_grads_chunked_into(
     grads: &mut [Vec<f32>],
     denom: f32,
     mut carry: Option<&mut ChunkState>,
+    recompute: bool,
 ) -> f32 {
     assert!(chunk_len > 0, "chunk_len must be positive");
     assert!(
@@ -1320,14 +1391,21 @@ pub fn loss_and_grads_chunked_into(
             &cur,
             &mut nxt,
         );
-        // packlint: allow(R1) -- push into the pooled chunk-head spine;
-        // capacity survives in ModelWorkspace across steps.
-        heads.push(fc);
-        // packlint: allow(R1) -- pooled layer-cache spine, same discipline.
-        filled.push(std::mem::replace(
-            &mut ws.layers,
-            spare.pop().unwrap_or_default(),
-        ));
+        if recompute {
+            // bounded-memory mode: drop this chunk's activations now —
+            // the reverse sweep rebuilds them from the checkpointed
+            // carry-in state (constant live activation set).
+            release_forward(fc, ws);
+        } else {
+            // packlint: allow(R1) -- push into the pooled chunk-head spine;
+            // capacity survives in ModelWorkspace across steps.
+            heads.push(fc);
+            // packlint: allow(R1) -- pooled layer-cache spine, same discipline.
+            filled.push(std::mem::replace(
+                &mut ws.layers,
+                spare.pop().unwrap_or_default(),
+            ));
+        }
         // packlint: allow(R1) -- pooled carry-state spine, same discipline.
         states.push(cur);
         cur = nxt;
@@ -1345,13 +1423,25 @@ pub fn loss_and_grads_chunked_into(
     for k in (0..n_chunks).rev() {
         let off = k * chunk_len;
         let clen = chunk_len.min(stream_tokens - off);
-        let fc = heads.pop().expect("head cache per chunk");
-        let mut layers = filled.pop().expect("layer caches per chunk");
         let sin = states.pop().expect("carry-in per chunk");
         gather_plane(tokens, streams, stream_tokens, off, clen, &mut g_tokens);
         gather_plane(targets, streams, stream_tokens, off, clen, &mut g_targets);
         gather_plane(pos, streams, stream_tokens, off, clen, &mut g_pos);
         gather_plane(mask, streams, stream_tokens, off, clen, &mut g_mask);
+        let (fc, mut layers) = if recompute {
+            // just-in-time rebuild from the chunk's carry-in: the
+            // deterministic kernels make the recomputed caches (and
+            // hence the gradients) bitwise equal to the cached path
+            let fc =
+                recompute_chunk_caches(cfg, p, &g_tokens, &g_pos, streams, clen, threads, ws, &sin);
+            let layers = std::mem::replace(&mut ws.layers, spare.pop().unwrap_or_default());
+            (fc, layers)
+        } else {
+            (
+                heads.pop().expect("head cache per chunk"),
+                filled.pop().expect("layer caches per chunk"),
+            )
+        };
         let (ls, dh) = head_backward(cfg, p, fc, &g_targets, &g_mask, denom, threads, ws, grads);
         loss_sum += ls;
         layers_backward(
@@ -1403,6 +1493,7 @@ pub fn loss_and_grads_chunked(
     streams: usize,
     chunk_len: usize,
     threads: usize,
+    recompute: bool,
 ) -> (f32, Vec<Tensor>) {
     let mut ws = ModelWorkspace::new();
     let specs = params::specs(cfg);
@@ -1410,7 +1501,7 @@ pub fn loss_and_grads_chunked(
     let denom = ops::mask_denom(mask);
     let loss = loss_and_grads_chunked_into(
         cfg, p, tokens, targets, pos, mask, rows, len, streams, chunk_len, threads, &mut ws,
-        &mut grads, denom, None,
+        &mut grads, denom, None, recompute,
     );
     let tensors = specs
         .iter()
@@ -1622,7 +1713,7 @@ mod tests {
             ],
             16,
         );
-        let run = |streams: usize, chunk_len: usize| {
+        let run = |streams: usize, chunk_len: usize, recompute: bool| {
             loss_and_grads_chunked(
                 &cfg,
                 &p,
@@ -1635,16 +1726,25 @@ mod tests {
                 streams,
                 chunk_len,
                 1,
+                recompute,
             )
         };
-        let (l1, g1) = run(1, 7);
+        let (l1, g1) = run(1, 7, false);
         for chunk_len in [4usize, 16] {
-            let (l2, g2) = run(2, chunk_len);
+            let (l2, g2) = run(2, chunk_len, false);
             assert!((l1 - l2).abs() < 1e-5, "loss {l1} vs {l2}");
             for (a, b) in g1.iter().zip(&g2) {
                 for (x, y) in a.data().iter().zip(b.data()) {
                     assert!((x - y).abs() < 1e-5_f32.max(1e-4 * y.abs()), "{x} vs {y}");
                 }
+            }
+            // recomputation re-runs the same deterministic kernels on
+            // the same carry-ins: it must be *bitwise* equal, not merely
+            // within tolerance
+            let (l3, g3) = run(2, chunk_len, true);
+            assert_eq!(l2, l3, "recompute changed the loss");
+            for (a, b) in g2.iter().zip(&g3) {
+                assert_eq!(a.data(), b.data(), "recompute changed a gradient");
             }
         }
     }

@@ -43,6 +43,35 @@ use super::{
 /// `backend::create`).
 pub const DEFAULT_MAX_BAD_STEPS: usize = 3;
 
+/// Typed fail-fast error: even the cheapest (recomputed) chunked
+/// execution mode cannot fit the configured activation memory budget.
+/// Raised at the **ensure phase** — before any chunk executes — so an
+/// over-budget run never dies mid-step; callers can
+/// `downcast_ref::<MemBudgetExceeded>()` through any context frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemBudgetExceeded {
+    /// Bytes the recomputed chunked step needs live.
+    pub needed_bytes: usize,
+    /// The configured `--mem-budget` / `PACKMAMBA_MEM_BUDGET` ceiling.
+    pub budget_bytes: usize,
+}
+
+impl std::fmt::Display for MemBudgetExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "activation memory budget exceeded: recomputed chunked execution \
+             needs {} bytes but the budget is {} bytes ({} bytes short) — \
+             raise --mem-budget / PACKMAMBA_MEM_BUDGET or shrink --chunk-len",
+            self.needed_bytes,
+            self.budget_bytes,
+            self.needed_bytes - self.budget_bytes
+        )
+    }
+}
+
+impl std::error::Error for MemBudgetExceeded {}
+
 pub struct NativeBackend {
     threads: usize,
     opt: AdamWConfig,
@@ -69,6 +98,16 @@ pub struct NativeBackend {
     bad_steps: Cell<usize>,
     /// Abort threshold for `bad_steps` (config: `max_bad_steps`).
     max_bad_steps: Cell<usize>,
+    /// Chunked activation mode: recompute (checkpoint only carry states,
+    /// rebuild caches in the backward) vs cache-everything.  Set from
+    /// `TrainConfig::recompute` by `backend::create`; the budget sizing
+    /// in [`NativeBackend::ensure_chunked`] may raise it (degradation).
+    recompute: Cell<bool>,
+    /// Activation memory budget in bytes (0 = unlimited; config:
+    /// `mem_budget`), enforced at the chunked ensure phase.
+    mem_budget: Cell<usize>,
+    /// Whether the budget degradation warning has been logged (once).
+    degraded_logged: Cell<bool>,
 }
 
 impl NativeBackend {
@@ -116,6 +155,9 @@ impl NativeBackend {
             chunk_carry: RefCell::new(None),
             bad_steps: Cell::new(0),
             max_bad_steps: Cell::new(DEFAULT_MAX_BAD_STEPS),
+            recompute: Cell::new(false),
+            mem_budget: Cell::new(0),
+            degraded_logged: Cell::new(false),
         }
     }
 
@@ -127,6 +169,34 @@ impl NativeBackend {
     /// `TrainConfig::max_bad_steps`; clamped to >= 1).
     pub fn set_max_bad_steps(&self, k: usize) {
         self.max_bad_steps.set(k.max(1));
+    }
+
+    /// Select the chunked step's activation mode (see
+    /// `TrainConfig::recompute`).  May also be raised at the ensure
+    /// phase by budget degradation.
+    pub fn set_recompute(&self, on: bool) {
+        self.recompute.set(on);
+    }
+
+    /// Whether chunked steps currently recompute activations (either
+    /// configured or budget-degraded).
+    pub fn recompute_active(&self) -> bool {
+        self.recompute.get()
+    }
+
+    /// Set the activation memory budget in bytes (0 = unlimited; see
+    /// `TrainConfig::mem_budget`).
+    pub fn set_mem_budget(&self, bytes: usize) {
+        self.mem_budget.set(bytes);
+    }
+
+    /// The arena's activation high-water mark (bytes) of the most recent
+    /// step — each fused step restarts the gauge, so this is per-step
+    /// attribution: the peak-bytes audit (`tests/zero_alloc.rs`) and
+    /// `benches/longctx.rs` read it to prove recomputed execution is
+    /// flat in stream length while cached execution grows.
+    pub fn arena_peak_bytes(&self) -> usize {
+        self.ws.borrow().arena.peak_bytes()
     }
 
     /// Drop the persisted cross-batch chunk carry (e.g. between
@@ -209,22 +279,29 @@ impl NativeBackend {
 
     /// Ensure phase shared by the chunked training entry points:
     /// validates the batch's stream partition, sizes the workspace
-    /// scratch, and keeps the persisted per-stream carry consistent —
-    /// when the model or the stream count changed (e.g. the packer's
-    /// final undersized flush batch collapsing to fewer streams), the
-    /// carry is reset to zeros rather than reinterpreting stale lanes as
-    /// another stream's state.  Returns the batch's stream count.
+    /// scratch, sizes the activation working set against the memory
+    /// budget (degrading to recomputation or failing fast **before any
+    /// chunk executes** — never mid-step), and keeps the persisted
+    /// per-stream carry consistent — when the model or the stream count
+    /// changed (e.g. the packer's final undersized flush batch
+    /// collapsing to fewer streams), the carry is reset to zeros rather
+    /// than reinterpreting stale lanes as another stream's state.
+    /// `step` drives the `mem.pressure` failpoint (the fused train paths
+    /// pass the optimizer step; the dp grads path passes 0).  Returns
+    /// the batch's stream count.
     fn ensure_chunked(
         &self,
         model_cfg: &ModelConfig,
         batch: &PackedBatch,
         chunk_len: usize,
+        step: u64,
     ) -> Result<usize> {
         let streams = Self::batch_streams(batch, chunk_len)?;
         let mut ws = self.ws.borrow_mut();
         ws.ensure_scratch(batch.rows() * batch.pack_len());
         let stream_tokens = batch.rows() / streams * batch.pack_len();
         ws.ensure_chunk_gather(streams, chunk_len.min(stream_tokens));
+        self.size_mem_budget(model_cfg, streams, stream_tokens, chunk_len, step)?;
         let mut carry = self.chunk_carry.borrow_mut();
         let fits = carry.as_ref().is_some_and(|c| c.fits(model_cfg, streams));
         if !fits {
@@ -238,6 +315,77 @@ impl NativeBackend {
             *carry = Some(ws.take_chunk_state(model_cfg, streams, true));
         }
         Ok(streams)
+    }
+
+    /// Activation-budget sizing for the chunked step (ensure phase).
+    /// Estimates the live activation working set of both execution
+    /// modes from the model dims and the chunk geometry:
+    ///
+    /// * cached — every chunk's forward caches plus its carry-in stay
+    ///   live across the whole backward sweep: `n_chunks × (caches +
+    ///   state)`;
+    /// * recomputed — one chunk's caches live at a time, plus every
+    ///   chunk's constant-size carry-in: `caches + n_chunks × state`.
+    ///
+    /// Over budget in cached mode degrades to recomputation (logged
+    /// once, counted via [`trace::count_recompute_switch`]); over
+    /// budget even recomputed fails fast with the typed
+    /// [`MemBudgetExceeded`] naming the shortfall.  The `mem.pressure`
+    /// failpoint (`error` action) injects an over-budget report here,
+    /// making both paths deterministically testable.
+    fn size_mem_budget(
+        &self,
+        model_cfg: &ModelConfig,
+        streams: usize,
+        stream_tokens: usize,
+        chunk_len: usize,
+        step: u64,
+    ) -> Result<()> {
+        let budget = self.mem_budget.get();
+        let pressured = failpoint::enabled()
+            && failpoint::check("mem.pressure", step, 0) == Some(failpoint::Action::Error);
+        if budget == 0 && !pressured {
+            return Ok(());
+        }
+        let clen = chunk_len.min(stream_tokens);
+        let n_chunks = stream_tokens.div_ceil(chunk_len);
+        let caches = model::chunk_cache_bytes(model_cfg, streams, clen);
+        let state = model::chunk_state_bytes(model_cfg, streams);
+        // both modes also hold the persisted cross-batch carry and the
+        // backward's adjoint state: two extra states
+        let cached_need = n_chunks * (caches + state) + 2 * state;
+        let recompute_need = caches + n_chunks * state + 2 * state;
+        let over_cached = pressured || cached_need > budget;
+        let over_recompute = (budget > 0 && recompute_need > budget)
+            || (pressured && self.recompute.get());
+        if over_recompute {
+            // fail fast at warmup with the typed shortfall — never
+            // mid-step.  A purely injected report (no real budget, or a
+            // budget the estimate actually fits) models a budget one
+            // byte below the recompute need.
+            let named_budget = if budget > 0 && recompute_need > budget {
+                budget
+            } else {
+                recompute_need.saturating_sub(1)
+            };
+            return Err(anyhow::Error::new(MemBudgetExceeded {
+                needed_bytes: recompute_need,
+                budget_bytes: named_budget,
+            }));
+        }
+        if over_cached && !self.recompute.get() {
+            // graceful degradation: switch this backend to recomputation
+            self.recompute.set(true);
+            trace::count_recompute_switch();
+            if !self.degraded_logged.replace(true) {
+                log::warn!(
+                    "activation budget: cached chunked execution needs \
+                     ~{cached_need} bytes (> budget {budget}); degrading to \
+                     recomputation (~{recompute_need} bytes)"
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Deterministic `grads.inject` failpoint: poisons the first
@@ -350,7 +498,8 @@ impl Backend for NativeBackend {
         let loss = {
             let mut ws = self.ws.borrow_mut();
             let mut grads = self.grad_bufs.borrow_mut();
-            model::loss_and_grads_into(
+            ws.arena.reset_peak();
+            let loss = model::loss_and_grads_into(
                 model,
                 &state.params,
                 batch.tokens.data(),
@@ -362,7 +511,9 @@ impl Backend for NativeBackend {
                 self.threads,
                 &mut ws,
                 &mut grads,
-            )
+            );
+            trace::note_mem_peak(ws.arena.peak_bytes() as u64);
+            loss
         };
         let t1 = Instant::now();
         self.maybe_inject_nan(state.step);
@@ -444,14 +595,15 @@ impl Backend for NativeBackend {
         self.check_batch(model, batch)?;
         let specs = self.cached_specs(model);
         self.ensure_grad_bufs(specs.as_slice());
-        let streams = self.ensure_chunked(model, batch, chunk_len)?;
+        let streams = self.ensure_chunked(model, batch, chunk_len, state.step as u64)?;
         let denom = ops::mask_denom(batch.loss_mask.data());
         let t0 = Instant::now();
         let loss = {
             let mut ws = self.ws.borrow_mut();
             let mut grads = self.grad_bufs.borrow_mut();
             let mut carry = self.chunk_carry.borrow_mut();
-            model::loss_and_grads_chunked_into(
+            ws.arena.reset_peak();
+            let loss = model::loss_and_grads_chunked_into(
                 model,
                 &state.params,
                 batch.tokens.data(),
@@ -467,7 +619,10 @@ impl Backend for NativeBackend {
                 &mut grads,
                 denom,
                 carry.as_mut(),
-            )
+                self.recompute.get(),
+            );
+            trace::note_mem_peak(ws.arena.peak_bytes() as u64);
+            loss
         };
         let t1 = Instant::now();
         self.maybe_inject_nan(state.step);
@@ -495,7 +650,9 @@ impl Backend for NativeBackend {
         self.check_batch(model, batch)?;
         anyhow::ensure!(denom > 0.0, "cross-entropy denom must be positive");
         let specs = self.cached_specs(model);
-        let streams = self.ensure_chunked(model, batch, chunk_len)?;
+        // the dp grads path has no optimizer-step context; the
+        // mem.pressure failpoint matches it at step 0 (or stepless rules)
+        let streams = self.ensure_chunked(model, batch, chunk_len, 0)?;
         let t0 = Instant::now();
         // fresh grad buffers (they are moved into the returned tensors);
         // activations and chunk spines still reuse the persistent arena
@@ -506,7 +663,8 @@ impl Backend for NativeBackend {
         let loss = {
             let mut ws = self.ws.borrow_mut();
             let mut carry = self.chunk_carry.borrow_mut();
-            model::loss_and_grads_chunked_into(
+            ws.arena.reset_peak();
+            let loss = model::loss_and_grads_chunked_into(
                 model,
                 state_params,
                 batch.tokens.data(),
@@ -522,7 +680,10 @@ impl Backend for NativeBackend {
                 &mut grads,
                 denom,
                 carry.as_mut(),
-            )
+                self.recompute.get(),
+            );
+            trace::note_mem_peak(ws.arena.peak_bytes() as u64);
+            loss
         };
         self.note("grads_chunked", t0.elapsed().as_secs_f64());
         // no finite check here: in data-parallel training the *leader*

@@ -275,6 +275,16 @@ pub struct TrainConfig {
     /// batches the leader/worker feeds keep packed ahead of compute
     /// (0 = fully synchronous: every batch packs on the critical path)
     pub prefetch_depth: usize,
+    /// activation recomputation for the chunked step: checkpoint only
+    /// each chunk's constant-size carry state and rebuild its caches
+    /// just-in-time in the backward — O(chunk_len) live activation
+    /// memory for any stream length, bitwise-identical gradients
+    pub recompute: bool,
+    /// activation memory budget in bytes (0 = unlimited): a chunked run
+    /// whose cached-execution estimate exceeds it degrades to
+    /// recomputation; one that cannot fit even recomputed execution
+    /// fails fast at warmup instead of mid-step
+    pub mem_budget: usize,
 }
 
 impl TrainConfig {
@@ -303,6 +313,8 @@ impl TrainConfig {
             step_retries: 1,
             grad_accum: 1,
             prefetch_depth: 2,
+            recompute: false,
+            mem_budget: 0,
         }
     }
 
@@ -329,6 +341,8 @@ impl TrainConfig {
             ("step_retries", Json::from(self.step_retries)),
             ("grad_accum", Json::from(self.grad_accum)),
             ("prefetch_depth", Json::from(self.prefetch_depth)),
+            ("recompute", Json::from(self.recompute)),
+            ("mem_budget", Json::from(self.mem_budget)),
         ])
     }
 
@@ -397,6 +411,12 @@ impl TrainConfig {
         }
         if let Some(v) = get_u("prefetch_depth") {
             cfg.prefetch_depth = v;
+        }
+        if let Some(v) = j.get("recompute").and_then(Json::as_bool) {
+            cfg.recompute = v;
+        }
+        if let Some(v) = get_u("mem_budget") {
+            cfg.mem_budget = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -469,6 +489,26 @@ impl TrainConfig {
             "chunk_len > 0 requires the pack scheme (chunked/stateful \
              execution assumes packed row/fragment semantics; set \
              chunk_len = 0 for scheme `{}`)",
+            self.scheme.name()
+        );
+        // Recomputation and budget enforcement are chunked-pack-scheme
+        // mechanisms (they checkpoint/size per-chunk carry states);
+        // silently ignoring the flags elsewhere would let a user believe
+        // a monolithic run is memory-bounded when it isn't.
+        anyhow::ensure!(
+            !self.recompute || (self.chunk_len > 0 && self.scheme == Scheme::Pack),
+            "--recompute requires chunked pack-scheme execution \
+             (set --chunk-len > 0 with the pack scheme; got chunk_len {} \
+             on scheme `{}`)",
+            self.chunk_len,
+            self.scheme.name()
+        );
+        anyhow::ensure!(
+            self.mem_budget == 0 || (self.chunk_len > 0 && self.scheme == Scheme::Pack),
+            "--mem-budget requires chunked pack-scheme execution \
+             (budget sizing and degradation operate on the chunked step; \
+             got chunk_len {} on scheme `{}`)",
+            self.chunk_len,
             self.scheme.name()
         );
         // Monolithic execution cannot run a sequence longer than a pack
@@ -587,6 +627,33 @@ mod tests {
             c.chunk_len = 0;
             assert!(c.validate().is_ok(), "{} monolithic stays fine", scheme.name());
         }
+    }
+
+    #[test]
+    fn recompute_and_budget_require_chunked_pack() {
+        // monolithic pack: both knobs must be rejected, not ignored
+        let mut c = TrainConfig::defaults(ModelConfig::tiny());
+        c.recompute = true;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--recompute") && err.contains("chunk"), "{err}");
+        c.recompute = false;
+        c.mem_budget = 1 << 20;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--mem-budget") && err.contains("chunk"), "{err}");
+
+        // chunked pack: both validate, and both survive a json round trip
+        c.recompute = true;
+        c.chunk_len = 64;
+        assert!(c.validate().is_ok());
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert!(c2.recompute);
+        assert_eq!(c2.mem_budget, 1 << 20);
+
+        // non-pack schemes reject them even with chunk_len unset
+        let mut c = TrainConfig::defaults(ModelConfig::tiny());
+        c.scheme = Scheme::Padding;
+        c.recompute = true;
+        assert!(c.validate().is_err(), "padding scheme must reject recompute");
     }
 
     #[test]

@@ -137,6 +137,11 @@ pub struct Checkpoint {
     /// resume validates it, since the pipeline replay cursor counts
     /// micro-batches and a different accumulation would desync it
     pub grad_accum: usize,
+    /// whether the run was executing with activation recomputation at
+    /// save time (old files: false) — resume validates it so a resumed
+    /// run keeps the exact execution mode of the original (bitwise
+    /// resume guarantees include the memory story, not just the math)
+    pub recompute: bool,
 }
 
 fn encode_pipelines(pipelines: &[PipelineState]) -> Vec<u8> {
@@ -273,11 +278,12 @@ impl Write for FailpointFile {
 /// Tensor-only save (end-of-run `--save` without periodic resume
 /// state): a v2 file with empty sections.
 pub fn save(path: &Path, config: &str, specs: &[ParamSpec], state: &TrainState) -> Result<()> {
-    save_full(path, config, specs, state, &[], &[], 1)
+    save_full(path, config, specs, state, &[], &[], 1, false)
 }
 
 /// Write a complete v2 checkpoint: tensors + pipeline + carry sections,
 /// CRC-stamped, fsynced, atomically published.
+#[allow(clippy::too_many_arguments)]
 pub fn save_full(
     path: &Path,
     config: &str,
@@ -286,6 +292,7 @@ pub fn save_full(
     pipelines: &[PipelineState],
     carries: &[Option<CarryState>],
     grad_accum: usize,
+    recompute: bool,
 ) -> Result<()> {
     let _sp = trace::span(Op::CkptSave);
     anyhow::ensure!(
@@ -344,6 +351,7 @@ pub fn save_full(
         ("config", Json::from(config)),
         ("step", Json::from(state.step)),
         ("grad_accum", Json::from(grad_accum.max(1))),
+        ("recompute", Json::from(recompute)),
         ("tensors", Json::Arr(tensors)),
         ("sections", Json::Arr(section_meta)),
         ("payload_crc32", Json::from(crc.finalize() as usize)),
@@ -488,6 +496,8 @@ pub fn load_full(path: &Path, specs: &[ParamSpec]) -> Result<Checkpoint> {
         .ok_or_else(|| anyhow::anyhow!("step must be a number"))?;
     // files written before gradient accumulation existed are A=1 runs
     let grad_accum = header.get("grad_accum").and_then(Json::as_usize).unwrap_or(1);
+    // files written before activation recomputation existed cached everything
+    let recompute = header.get("recompute").and_then(Json::as_bool).unwrap_or(false);
     let n_tensors = header.req("tensors")?.as_arr().map(|a| a.len()).unwrap_or(0);
     anyhow::ensure!(
         n_tensors == 3 * specs.len(),
@@ -583,6 +593,7 @@ pub fn load_full(path: &Path, specs: &[ParamSpec]) -> Result<Checkpoint> {
         pipelines,
         carries,
         grad_accum,
+        recompute,
     })
 }
 
@@ -651,6 +662,7 @@ mod tests {
         assert!(ck.pipelines.is_empty());
         assert!(ck.carries.is_empty());
         assert_eq!(ck.grad_accum, 1, "pre-accumulation files default to 1");
+        assert!(!ck.recompute, "pre-recompute files default to cached execution");
     }
 
     #[test]
@@ -767,10 +779,11 @@ mod tests {
             }),
             None,
         ];
-        save_full(&path, "tiny", &specs(), &st, &pipelines, &carries, 4).unwrap();
+        save_full(&path, "tiny", &specs(), &st, &pipelines, &carries, 4, true).unwrap();
         let ck = load_full(&path, &specs()).unwrap();
         assert_eq!(ck.state.params, st.params);
         assert_eq!(ck.grad_accum, 4);
+        assert!(ck.recompute, "recompute stamp must round-trip");
         assert_eq!(ck.pipelines.len(), 1);
         let p = &ck.pipelines[0];
         assert_eq!(p.corpus.rng_state, 0x0123_4567_89AB_CDEF_0011_2233_4455_6677);

@@ -85,7 +85,8 @@
 //! ship their pipeline positions (monolithic) or chunk carries (chunked)
 //! plus worker 0's replica state, and the leader writes one v2
 //! checkpoint ([`super::checkpoint::save_full`], stamped with the run's
-//! `grad_accum` — resume refuses a mismatch) that resumes bit-exactly.
+//! `grad_accum` and `recompute` mode — resume refuses a mismatch on
+//! either) that resumes bit-exactly.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -401,6 +402,14 @@ impl DataParallelTrainer {
             ck.grad_accum,
             self.cfg.grad_accum.max(1)
         );
+        anyhow::ensure!(
+            ck.recompute == self.cfg.recompute,
+            "checkpoint was written with recompute={} but the run is configured with \
+             recompute={} — pass the same --recompute setting so the resumed run keeps \
+             the original execution mode",
+            ck.recompute,
+            self.cfg.recompute
+        );
         log::info!("resuming from {} at step {}", path.display(), ck.state.step);
         Ok(Some(Arc::new(ck)))
     }
@@ -507,6 +516,7 @@ impl DataParallelTrainer {
                         &pipelines,
                         &[],
                         self.cfg.grad_accum,
+                        self.cfg.recompute,
                     )?;
                     log::info!("dp checkpoint written to {} (step {})", path.display(), step + 1);
                 }
@@ -706,6 +716,7 @@ impl DataParallelTrainer {
                         &pipelines,
                         &carries,
                         self.cfg.grad_accum,
+                        self.cfg.recompute,
                     )?;
                     log::info!("dp checkpoint written to {} (step {})", path.display(), step + 1);
                 }

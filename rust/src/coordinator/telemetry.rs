@@ -72,6 +72,13 @@ pub struct TelemetrySnapshot {
     /// optimizer updates skipped by the non-finite guard (counted even
     /// with tracing off — an integrity event, not a profiling sample)
     pub nonfinite_skips: u64,
+    /// high-water mark of live step-arena bytes across traced steps
+    /// (counted even with tracing off — memory accounting, like the
+    /// non-finite guard)
+    pub mem_peak_bytes: u64,
+    /// cached→recompute degradations forced by the activation budget
+    /// (counted even with tracing off)
+    pub recompute_switches: u64,
     pub pool: PoolUtil,
 }
 
@@ -155,6 +162,8 @@ impl TelemetrySnapshot {
                 0.0
             },
             nonfinite_skips: trace::nonfinite_skips(),
+            mem_peak_bytes: trace::mem_peak_bytes(),
+            recompute_switches: trace::recompute_switches(),
             pool: PoolUtil {
                 dispatches: pc.dispatches,
                 inline_fallbacks: pc.inline_fallbacks,
@@ -202,6 +211,11 @@ impl TelemetrySnapshot {
             ("slot_tokens", Json::from(self.slot_tokens as i64)),
             ("padding_rate", Json::from(self.padding_rate)),
             ("nonfinite_skips", Json::from(self.nonfinite_skips as i64)),
+            ("mem_peak_bytes", Json::from(self.mem_peak_bytes as i64)),
+            (
+                "recompute_switches",
+                Json::from(self.recompute_switches as i64),
+            ),
             (
                 "pool",
                 Json::from_pairs([
@@ -226,12 +240,15 @@ impl TelemetrySnapshot {
         let _ = writeln!(
             s,
             "operator breakdown (self-time shares; padding {:.1}%, pool busy {:.0}%, \
-             {} dispatches / {} inline, {} non-finite skips)",
+             {} dispatches / {} inline, {} non-finite skips, peak arena {} B, \
+             {} recompute switches)",
             self.padding_rate * 100.0,
             self.pool.mean_busy_frac * 100.0,
             self.pool.dispatches,
             self.pool.inline_fallbacks,
             self.nonfinite_skips,
+            self.mem_peak_bytes,
+            self.recompute_switches,
         );
         let _ = writeln!(
             s,
@@ -270,6 +287,8 @@ mod tests {
         let re = Json::parse(&j.dump()).expect("telemetry json parses");
         assert!(re.get("ops").unwrap().as_arr().is_some());
         assert!(re.get("pool").unwrap().get("dispatches").is_some());
+        assert!(re.get("mem_peak_bytes").is_some());
+        assert!(re.get("recompute_switches").is_some());
         let table = snap.format_table();
         assert!(table.contains("operator breakdown"));
     }

@@ -419,6 +419,14 @@ impl Trainer {
             ck.grad_accum,
             self.cfg.grad_accum
         );
+        anyhow::ensure!(
+            ck.recompute == self.cfg.recompute,
+            "checkpoint was written with recompute={} but the run is configured \
+             with recompute={} — pass the same --recompute setting so the \
+             resumed run keeps the original execution mode",
+            ck.recompute,
+            self.cfg.recompute
+        );
         self.state = ck.state;
         if let Some(Some(carry)) = ck.carries.first() {
             self.backend.import_chunk_carry(&self.cfg.model, carry)?;
@@ -458,6 +466,7 @@ impl Trainer {
             &pipelines,
             &carries,
             self.cfg.grad_accum,
+            self.cfg.recompute,
         )
     }
 

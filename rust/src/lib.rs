@@ -33,9 +33,9 @@
 //! | [`data`] | synthetic corpus + length distributions calibrated to the paper |
 //! | [`packing`] | pack()/unpack(), position indices, the packers for all three batching schemes; over-length sequences split into continuation `Fragment`s; stream partitioning (`PackedBatch::streams`, `StreamingPacker::with_streams`, `PackedBatch::split_rows`) so chunked carries compose with dp row splits |
 //! | [`backend`] | the `Backend` trait + `NativeBackend` (packed conv1d + selective scan fwd/bwd, AdamW) + PJRT backend (feature `pjrt`) |
-//! | [`backend::model`] | the native packed Mamba LM fwd/bwd, incl. the §5 chunked/stateful API: `ChunkState` (one carry lane per stream), `forward_logits_chunked`, `loss_and_grads_chunked_into` (`--chunk-len` on the CLI); per-chunk spines pooled in `ModelWorkspace` so the chunked step is zero-alloc in steady state |
+//! | [`backend::model`] | the native packed Mamba LM fwd/bwd, incl. the §5 chunked/stateful API: `ChunkState` (one carry lane per stream), `forward_logits_chunked`, `loss_and_grads_chunked_into` (`--chunk-len` on the CLI); per-chunk spines pooled in `ModelWorkspace` so the chunked step is zero-alloc in steady state; `--recompute` switches the chunked backward to bounded-memory activation recomputation — only each chunk's constant-size carry-in `ChunkState` is checkpointed and the reverse sweep rebuilds the chunk's caches just-in-time, bitwise identical to the cache-everything path |
 //! | [`backend::gemm`] | the blocked, register-tiled GEMM micro-kernel (B-panel packing, MC/KC blocking, beta-accumulate) behind `ops::matmul*`, with **runtime-dispatched tiers**: `PACKMAMBA_GEMM={naive,blocked,avx2}` (unset = best supported; avx2 = the `unsafe` AVX2+FMA 4×8 tile, runtime-gated, degrading to the safe tile off-ISA) |
-//! | [`backend::arena`] | `StepArena` — recycled step buffers + GEMM scratch; steady-state training steps (monolithic and chunked) allocate nothing |
+//! | [`backend::arena`] | `StepArena` — recycled step buffers + GEMM scratch; steady-state training steps (monolithic and chunked) allocate nothing; byte-accurate `live_bytes`/`peak_bytes` counters feed the activation-memory telemetry, the `--mem-budget` enforcement, and the flat-memory audits |
 //! | [`runtime`] | artifact manifest + host values; PJRT client wrapper behind the `pjrt` feature |
 //! | [`coordinator`] | trainer, schemes, the pipelined data-parallel step engine (monolithic shard-per-worker mode and chunk-aware stream-split mode; double-buffered batch prefetch `--prefetch-depth`, sharded `reduce_scatter_sum`+`allgather` reduction, gradient accumulation `--grad-accum`), metrics, checkpoints — fault-tolerant: CRC-verified crash-safe v2 checkpoints with bitwise resume (`--save-every` / `--resume`, incl. mid-accumulation and with batches in the prefetch queue), a non-finite loss/grad guard that skips bad updates (aborting after `max_bad_steps` consecutive), and typed dp worker-failure containment with bounded step retries |
 //! | [`coordinator::telemetry`] | [`coordinator::TelemetrySnapshot`]: folds the span layer into per-operator self-time shares, padding ratios, and pool utilization; stamped into `BENCH_*` JSON, logged every `LOG_EVERY` steps, paired with `--trace`'s chrome export |
@@ -53,6 +53,7 @@
 //! | `PACKMAMBA_LOG` | max log level for the stderr logger: `error` \| `warn` \| `info` (default) \| `debug` \| `trace` \| `off`; unknown values warn and fall back to `info` |
 //! | `PACKMAMBA_GRAD_ACCUM` | default micro-batches accumulated per optimizer step for the `train`/`dp-train` CLIs (the `--grad-accum` flag wins when given; config-file runs ignore both) |
 //! | `PACKMAMBA_PREFETCH_DEPTH` | default batch-prefetch depth for the `train`/`dp-train` CLIs (`0` = fully synchronous packing on the critical path; the `--prefetch-depth` flag wins when given; config-file runs ignore both) |
+//! | `PACKMAMBA_MEM_BUDGET` | default activation memory budget in bytes for the `train`/`dp-train` CLIs (`0` = unlimited; the `--mem-budget` flag wins when given; config-file runs ignore both); a cached chunked run that would exceed it degrades to `--recompute`, and a run that cannot fit even recomputed execution fails fast at warmup with a typed error |
 //! | `PACKMAMBA_FAILPOINT` | arm deterministic failpoints at startup (`;`-separated `site=action[:arg][@step[+]][#worker]` rules — see [`util::failpoint`]); injected kills exit with code 113 so tests tell them apart from real failures; a malformed spec exits 2 |
 //! | `PACKMAMBA_PROPTEST_CASES` | cases per property for the vendored property-test harness (`util::proptest`); default 64 — CI soaks crank it up |
 //! | `PACKMAMBA_PROPTEST_SEED` | base RNG seed for property-test case generation (default `0xC0FFEE`); set it to replay a failing case from a soak log |

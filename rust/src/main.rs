@@ -66,6 +66,18 @@ fn main() {
                     "batches packed ahead of compute (0 = synchronous)",
                     None,
                 )
+                .switch(
+                    "recompute",
+                    "",
+                    "bounded-memory chunked backward: checkpoint chunk states, \
+                     recompute activations (needs --chunk-len)",
+                )
+                .flag(
+                    "mem-budget",
+                    "",
+                    "activation memory budget in bytes (0 = unlimited; needs --chunk-len)",
+                    None,
+                )
                 .flag("trace", "", "enable operator tracing; write chrome trace here", None),
         )
         .command(
@@ -106,6 +118,18 @@ fn main() {
                     "prefetch-depth",
                     "",
                     "batches packed ahead of compute (0 = synchronous)",
+                    None,
+                )
+                .switch(
+                    "recompute",
+                    "",
+                    "bounded-memory chunked backward: checkpoint chunk states, \
+                     recompute activations (needs --chunk-len)",
+                )
+                .flag(
+                    "mem-budget",
+                    "",
+                    "activation memory budget in bytes (0 = unlimited; needs --chunk-len)",
                     None,
                 )
                 .flag("trace", "", "enable operator tracing; write chrome trace here", None),
@@ -199,6 +223,16 @@ fn build_train_config(m: &Matches) -> anyhow::Result<TrainConfig> {
         cfg.prefetch_depth = d;
     } else if let Some(d) = std::env::var("PACKMAMBA_PREFETCH_DEPTH").ok().and_then(env_usize) {
         cfg.prefetch_depth = d;
+    }
+    // bounded-memory knobs: --recompute is a switch (on or config
+    // default); --mem-budget follows the flag > env > default precedence
+    if m.get_switch("recompute") {
+        cfg.recompute = true;
+    }
+    if let Some(b) = m.get_usize("mem-budget").unwrap_or(None) {
+        cfg.mem_budget = b;
+    } else if let Some(b) = std::env::var("PACKMAMBA_MEM_BUDGET").ok().and_then(env_usize) {
+        cfg.mem_budget = b;
     }
     anyhow::ensure!(
         cfg.save_every == 0 || m.get("save").is_some(),

@@ -30,6 +30,7 @@
 //! | `ckpt.saved` | right after a checkpoint is published (renamed) | `kill` |
 //! | `grads.inject` | native step path, before the non-finite guard | `nan` |
 //! | `dp.worker` | top of a dp worker's micro-batch compute (`@k` counts global micro-batches, `step * grad_accum + a`; equals the optimizer step when `grad_accum` is 1) | `panic`, `error`, `kill` |
+//! | `mem.pressure` | chunked ensure phase, before any chunk executes: injects an over-budget report (cached mode degrades to recomputation; an already-recomputing run fails fast with the typed budget error). `@step` matches the backend's step on the fused train paths and `0` on the dp grads path | `error` |
 //!
 //! Example: `PACKMAMBA_FAILPOINT="ckpt.saved=kill@4"` kills the
 //! process immediately after the checkpoint at step 4 is durable —

@@ -136,6 +136,14 @@ static SLOT_TOKENS: AtomicU64 = AtomicU64::new(0);
 // nothing on the good path.
 static NONFINITE_SKIPS: AtomicU64 = AtomicU64::new(0);
 
+// memory-pressure accounting, counted UNCONDITIONALLY like the
+// non-finite guard: the arena's per-step activation high-water mark
+// (a max-gauge over every backend/worker that reports) and the number
+// of cached→recompute degradations forced by a memory budget — both
+// are robustness events the telemetry snapshot must see untraced.
+static MEM_PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+static RECOMPUTE_SWITCHES: AtomicU64 = AtomicU64::new(0);
+
 /// Whether tracing is on (one relaxed load — the disabled fast path).
 #[inline(always)]
 pub fn enabled() -> bool {
@@ -413,6 +421,30 @@ pub fn nonfinite_skips() -> u64 {
     NONFINITE_SKIPS.load(Ordering::Relaxed)
 }
 
+/// Raise the global activation high-water gauge to `bytes` (max-gauge:
+/// lower reports leave it unchanged).  Backends publish their arena's
+/// per-step peak here after each step; like [`count_nonfinite_skip`]
+/// this is **not** gated on [`enabled`] — memory accounting must be
+/// observable in untraced runs.
+pub fn note_mem_peak(bytes: u64) {
+    MEM_PEAK_BYTES.fetch_max(bytes, Ordering::Relaxed);
+}
+
+/// Highest arena activation peak reported since start/[`reset`].
+pub fn mem_peak_bytes() -> u64 {
+    MEM_PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+/// Record one budget-forced cached→recompute degradation.
+pub fn count_recompute_switch() {
+    RECOMPUTE_SWITCHES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Budget-forced degradations to recomputation since start/[`reset`].
+pub fn recompute_switches() -> u64 {
+    RECOMPUTE_SWITCHES.load(Ordering::Relaxed)
+}
+
 // ---------------------------------------------------------------------------
 // snapshots
 // ---------------------------------------------------------------------------
@@ -508,6 +540,8 @@ pub fn reset() {
     REAL_TOKENS.store(0, Ordering::Relaxed);
     SLOT_TOKENS.store(0, Ordering::Relaxed);
     NONFINITE_SKIPS.store(0, Ordering::Relaxed);
+    MEM_PEAK_BYTES.store(0, Ordering::Relaxed);
+    RECOMPUTE_SWITCHES.store(0, Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------------

@@ -244,6 +244,59 @@ fn dp_chunked_accumulation_matches_single_worker_run() {
 }
 
 #[test]
+fn dp_chunked_recompute_matches_cached_run_with_accumulation() {
+    // Activation recomputation composes with the dp step engine and
+    // gradient accumulation: a recomputing dp run (grad_accum 2) must be
+    // bit-identical to the cache-everything dp run — recomputation
+    // re-executes the same deterministic kernels, so it changes memory,
+    // never numerics — and both must match the single-worker
+    // recomputing Trainer within 1e-5.
+    let mk = |recompute: bool, workers: usize| {
+        let mut c = chunked_train_config(4);
+        c.grad_accum = 2;
+        c.steps = 2;
+        c.recompute = recompute;
+        c.dp_workers = workers;
+        c
+    };
+    let mut t = Trainer::from_config(mk(true, 1)).unwrap();
+    t.train().unwrap();
+    let ref_losses: Vec<f32> = t.metrics.records.iter().map(|r| r.loss).collect();
+    let ref_params = t.state().params.clone();
+
+    for workers in [2usize, 4] {
+        let cached = DataParallelTrainer::new(mk(false, workers)).unwrap().run().unwrap();
+        let rec = DataParallelTrainer::new(mk(true, workers)).unwrap().run().unwrap();
+        assert!(cached.replicas_identical && rec.replicas_identical);
+        let cached_losses: Vec<f32> = cached.metrics.records.iter().map(|r| r.loss).collect();
+        let rec_losses: Vec<f32> = rec.metrics.records.iter().map(|r| r.loss).collect();
+        assert_eq!(
+            rec_losses, cached_losses,
+            "{workers} workers: recompute must be bit-identical to cached"
+        );
+        assert_eq!(
+            rec.final_params, cached.final_params,
+            "{workers} workers: recompute changed the trained params"
+        );
+        assert_eq!(rec_losses.len(), ref_losses.len());
+        for (i, (l, r)) in rec_losses.iter().zip(&ref_losses).enumerate() {
+            assert!(
+                (l - r).abs() < 1e-5,
+                "step {i} ({workers} workers, recompute): loss {l} vs single-worker {r}"
+            );
+        }
+        for (a, b) in rec.final_params.iter().zip(&ref_params) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!(
+                    (x - y).abs() < 1e-4,
+                    "{workers} workers, recompute: final param {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn dp_chunked_prefetch_overlap_is_bitwise_neutral() {
     // prefetch is a latency optimization, not a numerics change: a fully
     // synchronous run (depth 0, every batch packed on the critical path)

@@ -21,7 +21,15 @@
 //!     retries/resumes without double-consuming held or prefetched
 //!     batches, staying bit-identical to the undisturbed run,
 //!   * a torn checkpoint write (kill mid-write) leaves only a temp file
-//!     that the loader rejects; the published path is never torn.
+//!     that the loader rejects; the published path is never torn,
+//!   * checkpoints stamp the run's recompute mode; resuming with a
+//!     different `--recompute` setting is refused (single and dp),
+//!   * memory pressure degrades deterministically and never mid-step: an
+//!     over-budget cached run switches to recomputation at the ensure
+//!     phase with numerics intact, and a run that cannot fit even
+//!     recomputed execution fails fast with a typed
+//!     [`MemBudgetExceeded`] before any chunk executes (driven both by a
+//!     real `--mem-budget` and by the `mem.pressure` failpoint).
 //!
 //! Failpoint state and the non-finite skip counter are process-global,
 //! so every test takes `FP_LOCK` and asserts counters as deltas.
@@ -30,9 +38,10 @@ use std::path::PathBuf;
 use std::process::Command;
 use std::sync::Mutex;
 
-use packmamba::backend::{Backend, NativeBackend};
+use packmamba::backend::{model, Backend, MemBudgetExceeded, NativeBackend};
 use packmamba::config::{ModelConfig, Scheme, TrainConfig};
 use packmamba::coordinator::{checkpoint, DataParallelTrainer, Trainer, WorkerError};
+use packmamba::packing::{PackedBatch, PackedRow, Sequence};
 use packmamba::tensor::Tensor;
 use packmamba::util::{failpoint, trace};
 
@@ -293,6 +302,164 @@ fn dp_resume_refuses_grad_accum_mismatch() {
     dp.set_resume_path(ck);
     let err = format!("{:#}", dp.run().unwrap_err());
     assert!(err.contains("grad_accum"), "{err}");
+}
+
+#[test]
+fn resume_refuses_recompute_mismatch() {
+    let _g = lock();
+    failpoint::clear();
+
+    // single trainer: save recomputing, resume cached → refused
+    let dir = tmp("recompute_mismatch");
+    let ck = dir.join("ck.bin");
+    let mk = |steps: usize, recompute: bool| {
+        let mut c = cfg_chunked(steps);
+        c.recompute = recompute;
+        c
+    };
+    let mut saving = Trainer::from_config({
+        let mut c = mk(3, true);
+        c.save_every = 3;
+        c
+    })
+    .unwrap();
+    saving.set_save_path(ck.clone());
+    saving.train().unwrap();
+    let mut resumer = Trainer::from_config(mk(6, false)).unwrap();
+    let err = format!("{:#}", resumer.resume_from(&ck).unwrap_err());
+    assert!(err.contains("recompute"), "{err}");
+
+    // dp: same stamp, same refusal
+    let dp_ck = dir.join("dp_ck.bin");
+    let mk_dp = |steps: usize, recompute: bool| {
+        let mut c = mk(steps, recompute);
+        c.dp_workers = 2;
+        c.packing.streams = 2;
+        c
+    };
+    let mut saving_cfg = mk_dp(3, true);
+    saving_cfg.save_every = 3;
+    let mut dp = DataParallelTrainer::new(saving_cfg).unwrap();
+    dp.set_save_path(dp_ck.clone());
+    dp.run().unwrap();
+    let mut dp = DataParallelTrainer::new(mk_dp(6, false)).unwrap();
+    dp.set_resume_path(dp_ck);
+    let err = format!("{:#}", dp.run().unwrap_err());
+    assert!(err.contains("recompute"), "{err}");
+}
+
+#[test]
+fn mem_budget_degrades_to_recompute_or_fails_fast() {
+    let _g = lock();
+    failpoint::clear();
+    let mcfg = nano();
+    let seq = |id: u64, n: usize| Sequence {
+        tokens: (0..n)
+            .map(|k| 1 + ((id as usize * 13 + k * 5) % (mcfg.vocab_size - 1)) as i32)
+            .collect(),
+        id,
+    };
+    let mut batch = PackedBatch::from_rows(
+        &[
+            PackedRow {
+                sequences: vec![seq(0, 40), seq(1, 20)],
+            },
+            PackedRow {
+                sequences: vec![seq(2, 50), seq(3, 10)],
+            },
+        ],
+        64,
+    );
+    batch.streams = 2;
+    // the backend's ensure-phase cost model, computed independently here:
+    // 2 streams × 64 slots at chunk_len 16 → 4 chunks of 32 gathered slots
+    let chunk_len = 16usize;
+    let n_chunks = 4usize;
+    let caches = model::chunk_cache_bytes(&mcfg, 2, chunk_len);
+    let state_bytes = model::chunk_state_bytes(&mcfg, 2);
+    let cached_need = n_chunks * (caches + state_bytes) + 2 * state_bytes;
+    let recompute_need = caches + n_chunks * state_bytes + 2 * state_bytes;
+    assert!(recompute_need < cached_need);
+
+    // reference: unlimited cached run
+    let be_ref = NativeBackend::with_threads(1);
+    let mut s_ref = be_ref.init_state(&mcfg, 5).unwrap();
+    let mut ref_losses = Vec::new();
+    for _ in 0..3 {
+        ref_losses.push(be_ref.train_step_chunked(&mcfg, &mut s_ref, &batch, chunk_len).unwrap());
+    }
+
+    // budget between the recomputed and cached footprints: the cached
+    // run degrades to recomputation (counted once) with numerics intact
+    let switches_before = trace::recompute_switches();
+    let be_mid = NativeBackend::with_threads(1);
+    be_mid.set_mem_budget((cached_need + recompute_need) / 2);
+    assert!(!be_mid.recompute_active());
+    let mut s_mid = be_mid.init_state(&mcfg, 5).unwrap();
+    for (i, r) in ref_losses.iter().enumerate() {
+        let l = be_mid.train_step_chunked(&mcfg, &mut s_mid, &batch, chunk_len).unwrap();
+        assert_eq!(l, *r, "step {i}: degraded run changed the loss");
+    }
+    assert!(be_mid.recompute_active(), "an over-budget cached run must degrade");
+    assert_eq!(trace::recompute_switches() - switches_before, 1);
+    assert_eq!(s_mid.params, s_ref.params, "degradation must not change numerics");
+
+    // budget below even recomputed execution: typed fail-fast at the
+    // ensure phase, before any chunk executes or state advances
+    let be_low = NativeBackend::with_threads(1);
+    be_low.set_mem_budget(recompute_need - 1);
+    let mut s_low = be_low.init_state(&mcfg, 5).unwrap();
+    let params_before = s_low.params.clone();
+    let err = be_low
+        .train_step_chunked(&mcfg, &mut s_low, &batch, chunk_len)
+        .unwrap_err();
+    let mb = err
+        .downcast_ref::<MemBudgetExceeded>()
+        .unwrap_or_else(|| panic!("expected a typed MemBudgetExceeded, got: {err:#}"));
+    assert_eq!(mb.needed_bytes, recompute_need);
+    assert_eq!(mb.budget_bytes, recompute_need - 1);
+    assert!(format!("{err:#}").contains("short"), "{err:#}");
+    assert_eq!(s_low.params, params_before, "fail-fast must not touch the state");
+    assert_eq!(s_low.step, 0, "fail-fast happens before the step commits");
+}
+
+#[test]
+fn mem_pressure_failpoint_degrades_cached_and_fails_recomputing_runs() {
+    let _g = lock();
+    failpoint::clear();
+    let mk = |recompute: bool| {
+        let mut c = cfg_chunked(4);
+        c.recompute = recompute;
+        c
+    };
+    let mut clean = Trainer::from_config(mk(false)).unwrap();
+    clean.train().unwrap();
+
+    // injected pressure mid-run on a cached trainer: degrade to
+    // recomputation at the step-1 ensure phase and finish bit-identical
+    let switches_before = trace::recompute_switches();
+    failpoint::set_spec("mem.pressure=error@1").unwrap();
+    let mut degraded = Trainer::from_config(mk(false)).unwrap();
+    degraded.train().unwrap();
+    failpoint::clear();
+    assert_eq!(trace::recompute_switches() - switches_before, 1);
+    assert_eq!(
+        params_of(&degraded),
+        params_of(&clean),
+        "pressure degradation must not change numerics"
+    );
+
+    // injected pressure on an already-recomputing run: nothing left to
+    // shed — the typed budget error fires at warmup, never mid-step
+    failpoint::set_spec("mem.pressure=error@0").unwrap();
+    let mut t = Trainer::from_config(mk(true)).unwrap();
+    let err = t.train().unwrap_err();
+    failpoint::clear();
+    assert!(
+        err.downcast_ref::<MemBudgetExceeded>().is_some(),
+        "expected the typed budget error, got: {err:#}"
+    );
+    assert_eq!(t.state().step, 0, "fail-fast happens before any step commits");
 }
 
 #[test]

@@ -149,6 +149,7 @@ fn chunked_gradients_match_monolithic() {
             1,
             chunk_len,
             1,
+            false,
         );
         assert!(
             (loss_c - loss_full).abs() < 1e-5,
@@ -162,6 +163,118 @@ fn chunked_gradients_match_monolithic() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn recomputed_gradients_match_cached_across_chunk_lengths() {
+    // Activation recomputation re-runs each chunk's deterministic
+    // forward from its checkpointed carry-in, so the rebuilt caches —
+    // and hence the loss and every gradient — must be bitwise equal to
+    // the cache-everything path, at every chunk length (1, odd,
+    // chunk-aligned, exact-fit covering the whole stream in one chunk).
+    let cfg = nano();
+    let p = params::init(&cfg, 5);
+    let batch = mixed_batch(&cfg);
+    let (rows, len) = (batch.rows(), batch.pack_len());
+    let run = |chunk_len: usize, recompute: bool| {
+        model::loss_and_grads_chunked(
+            &cfg,
+            &p,
+            batch.tokens.data(),
+            batch.targets.data(),
+            batch.position_indices.data(),
+            batch.loss_mask.data(),
+            rows,
+            len,
+            1,
+            chunk_len,
+            1,
+            recompute,
+        )
+    };
+    for chunk_len in [1usize, 7, 64, 128] {
+        let (loss_c, grads_c) = run(chunk_len, false);
+        let (loss_r, grads_r) = run(chunk_len, true);
+        assert_eq!(loss_r, loss_c, "chunk_len {chunk_len}: recompute changed the loss");
+        for (gi, (gr, gc)) in grads_r.iter().zip(&grads_c).enumerate() {
+            assert_eq!(
+                gr.data(),
+                gc.data(),
+                "chunk_len {chunk_len}: recompute changed grad[{gi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn recomputed_gradients_match_cached_on_fragmented_streams() {
+    // Over-length sequence split by the streaming packer into
+    // continuation fragments across rows: the recompute path must
+    // carry the rebuilt chunk states across the fragment boundary
+    // exactly like the cached path does.
+    let cfg = nano();
+    let p = params::init(&cfg, 13);
+    let pack_len = 32;
+    let mut packer = StreamingPacker::new(pack_len, 8);
+    let mut batches = packer.push(rand_seq(0, 75, cfg.vocab_size));
+    batches.extend(packer.push(rand_seq(1, 12, cfg.vocab_size)));
+    batches.extend(packer.flush());
+    assert_eq!(batches.len(), 1);
+    let batch = batches.pop().unwrap();
+    assert_eq!(batch.rows(), 3);
+    assert_eq!(batch.row_starts[1], vec![32], "continuation fragment");
+    let (rows, len) = (batch.rows(), batch.pack_len());
+    for chunk_len in [7usize, pack_len] {
+        let run = |recompute: bool| {
+            model::loss_and_grads_chunked(
+                &cfg,
+                &p,
+                batch.tokens.data(),
+                batch.targets.data(),
+                batch.position_indices.data(),
+                batch.loss_mask.data(),
+                rows,
+                len,
+                1,
+                chunk_len,
+                1,
+                recompute,
+            )
+        };
+        let (loss_c, grads_c) = run(false);
+        let (loss_r, grads_r) = run(true);
+        assert_eq!(loss_r, loss_c, "chunk_len {chunk_len}: recompute changed the loss");
+        for (gi, (gr, gc)) in grads_r.iter().zip(&grads_c).enumerate() {
+            assert_eq!(
+                gr.data(),
+                gc.data(),
+                "chunk_len {chunk_len}: recompute changed grad[{gi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn recomputed_train_steps_match_cached_bitwise() {
+    // Whole-step equivalence through the backend: a NativeBackend in
+    // recompute mode must produce the exact same losses and parameters
+    // as a cache-everything backend, step for step.
+    let cfg = nano();
+    let batch = mixed_batch(&cfg);
+    let be_cached = NativeBackend::with_threads(2);
+    let be_rec = NativeBackend::with_threads(2);
+    be_rec.set_recompute(true);
+    assert!(be_rec.recompute_active());
+    let mut s1 = be_cached.init_state(&cfg, 9).unwrap();
+    let mut s2 = s1.clone();
+    for step in 0..3 {
+        let l1 = be_cached.train_step_chunked(&cfg, &mut s1, &batch, 16).unwrap();
+        let l2 = be_rec.train_step_chunked(&cfg, &mut s2, &batch, 16).unwrap();
+        assert_eq!(l1, l2, "step {step}: recompute changed the loss");
+    }
+    for (a, b) in s1.params.iter().zip(&s2.params) {
+        assert_eq!(a.data(), b.data(), "recompute changed the trained params");
     }
 }
 

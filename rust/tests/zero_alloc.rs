@@ -223,6 +223,70 @@ fn steady_state_train_step_is_allocation_free() {
         "steady-state chunked step deallocated {deallocs} times"
     );
 
+    // ---- recomputed chunked step: same audit ----
+    // Bounded-memory mode rebuilds each chunk's caches inside the
+    // backward sweep; the rebuild draws from the same arena free lists
+    // and workspace pools, so once warm it must be allocation-free too.
+    let be_r = NativeBackend::with_threads(1);
+    be_r.set_recompute(true);
+    let mut state_r = be_r.init_state(&cfg, 9).unwrap();
+    losses.push(be_r.train_step_chunked(&cfg, &mut state_r, &bc, 24).unwrap());
+    losses.push(be_r.train_step_chunked(&cfg, &mut state_r, &bc, 24).unwrap());
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    DEALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        losses.push(be_r.train_step_chunked(&cfg, &mut state_r, &bc, 24).unwrap());
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    let deallocs = DEALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        allocs, 0,
+        "steady-state recomputed chunked step allocated {allocs} times"
+    );
+    assert_eq!(
+        deallocs, 0,
+        "steady-state recomputed chunked step deallocated {deallocs} times"
+    );
+
+    // ---- peak-bytes audit: recomputation bounds activation memory ----
+    // Quadruple the stream length (pack_len 64 -> 256 at chunk_len 16:
+    // 4 chunks -> 16 chunks).  The cached path's per-step arena peak
+    // must grow with the chunk count; the recomputed path keeps one
+    // chunk's activations live and must stay essentially flat (only the
+    // constant-size per-chunk carry checkpoints grow).
+    let peak_of = |recompute: bool, pack_len: usize| -> usize {
+        let be = NativeBackend::with_threads(1);
+        be.set_recompute(recompute);
+        let mut st = be.init_state(&cfg, 21).unwrap();
+        let mut b = batch(&cfg, pack_len);
+        b.streams = 2;
+        // second step so the arena is warm and the peak is steady-state
+        be.train_step_chunked(&cfg, &mut st, &b, 16).unwrap();
+        be.train_step_chunked(&cfg, &mut st, &b, 16).unwrap();
+        be.arena_peak_bytes()
+    };
+    let cached_short = peak_of(false, 64);
+    let cached_long = peak_of(false, 256);
+    let rec_short = peak_of(true, 64);
+    let rec_long = peak_of(true, 256);
+    assert!(
+        cached_long >= 2 * cached_short,
+        "cached peak should scale with stream length: {cached_short} -> {cached_long}"
+    );
+    assert!(
+        rec_long < rec_short + rec_short / 2,
+        "recomputed peak should stay flat as streams lengthen: {rec_short} -> {rec_long}"
+    );
+    assert!(
+        2 * rec_long < cached_long,
+        "recomputation should bound the long-stream peak: {rec_long} vs cached {cached_long}"
+    );
+    // the unconditional telemetry gauge saw the high-water mark
+    assert!(trace::mem_peak_bytes() as usize >= cached_long);
+
     // the audited steps must still be doing real work (loss-decrease
     // itself is asserted over longer runs in tests/native_backend.rs)
     assert!(losses.iter().all(|l| l.is_finite()));
